@@ -1,0 +1,63 @@
+//! Quickstart: load the AOT artifacts, schedule one minute of edge
+//! traffic with LAD-TS, and print the delay breakdown vs the oracle.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::path::Path;
+use std::rc::Rc;
+
+use dedgeai::agents::{make_scheduler, Method};
+use dedgeai::config::{AgentConfig, EnvConfig};
+use dedgeai::env::EdgeEnv;
+use dedgeai::runtime::XlaRuntime;
+use dedgeai::sim::runner::run_episode;
+use dedgeai::util::table::{fnum, Table};
+
+fn main() -> anyhow::Result<()> {
+    dedgeai::util::logger::init();
+
+    // 1. The AOT runtime: HLO text -> PJRT CPU executables. Built once
+    //    by `make artifacts`; no Python from here on.
+    let rt = Rc::new(XlaRuntime::new(Path::new("artifacts"))?);
+    println!(
+        "loaded {} AOT graphs (hidden={}, act_batch={})",
+        rt.manifest.graphs.len(),
+        rt.manifest.hidden,
+        rt.manifest.act_batch
+    );
+
+    // 2. A default Table-III edge network: 20 BSs, 60 one-second slots.
+    let env_cfg = EnvConfig::default();
+    println!(
+        "edge network: B={} slots={} offered-load/capacity={:.2}",
+        env_cfg.num_bs,
+        env_cfg.slots,
+        env_cfg.utilization()
+    );
+
+    // 3. Schedule one episode with each method and compare.
+    let mut table = Table::new(&[
+        "method", "mean delay (s)", "wait (s)", "compute (s)", "p95 (s)",
+    ])
+    .left_first()
+    .title("One minute of AIGC traffic (untrained agents)");
+    for method in [Method::LadTs, Method::OptTs, Method::Random] {
+        let runtime = method.is_learner().then(|| rt.clone());
+        let mut agent =
+            make_scheduler(method, env_cfg.num_bs, &AgentConfig::default(), runtime, 7)?;
+        let mut env = EdgeEnv::new(&env_cfg, 7);
+        let stats = run_episode(&mut env, agent.as_mut(), true)?;
+        table.row(vec![
+            method.name().into(),
+            fnum(stats.mean_delay, 2),
+            fnum(stats.mean_wait, 2),
+            fnum(stats.mean_compute, 3),
+            fnum(stats.p95_delay, 2),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("(train LAD-TS properly with: dedgeai train --method lad-ts)");
+    Ok(())
+}

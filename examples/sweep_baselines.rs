@@ -1,0 +1,54 @@
+//! All scheduling methods side-by-side on the same workload seeds —
+//! the quickest way to see the paper's method ordering emerge.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example sweep_baselines
+//! ```
+
+use std::path::Path;
+use std::rc::Rc;
+
+use dedgeai::agents::{make_scheduler, Method};
+use dedgeai::config::{AgentConfig, EnvConfig};
+use dedgeai::runtime::XlaRuntime;
+use dedgeai::sim::runner::run_training;
+use dedgeai::util::stats::mean;
+use dedgeai::util::table::{fnum, Table};
+
+fn main() -> anyhow::Result<()> {
+    dedgeai::util::logger::init();
+    let rt = Rc::new(XlaRuntime::new(Path::new("artifacts"))?);
+    let env_cfg = EnvConfig::default();
+    let episodes = 10;
+
+    let methods = [
+        Method::Local,
+        Method::Random,
+        Method::RoundRobin,
+        Method::DqnTs,
+        Method::SacTs,
+        Method::D2SacTs,
+        Method::LadTs,
+        Method::LeastLoaded,
+        Method::OptTs,
+    ];
+    let mut table = Table::new(&[
+        "method", "mean delay (s)", "last-2-episode delay (s)",
+    ])
+    .left_first()
+    .title(format!("{episodes} episodes, common seeds, default Table-III env"));
+    for method in methods {
+        let runtime = method.is_learner().then(|| rt.clone());
+        let mut agent =
+            make_scheduler(method, env_cfg.num_bs, &AgentConfig::default(), runtime, 5)?;
+        let run = run_training(&env_cfg, agent.as_mut(), episodes, 5)?;
+        table.row(vec![
+            method.name().into(),
+            fnum(mean(&run.episode_delays), 2),
+            fnum(mean(&run.episode_delays[episodes - 2..]), 2),
+        ]);
+        println!("done: {}", method.name());
+    }
+    println!("{}", table.render());
+    Ok(())
+}

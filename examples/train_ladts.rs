@@ -1,0 +1,58 @@
+//! Train LAD-TS online (Algorithm 1) and watch the learning curve: the
+//! scheduler starts near-random and converges toward the Opt-TS oracle
+//! within a few episodes — the paper's Fig. 5 story in miniature.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example train_ladts
+//! ```
+
+use std::path::Path;
+use std::rc::Rc;
+
+use dedgeai::agents::{make_scheduler, Method};
+use dedgeai::config::{AgentConfig, EnvConfig};
+use dedgeai::env::{EdgeEnv, Topology};
+use dedgeai::runtime::XlaRuntime;
+use dedgeai::sim::output::sparkline;
+use dedgeai::sim::runner::run_episode;
+use dedgeai::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    dedgeai::util::logger::init();
+    let rt = Rc::new(XlaRuntime::new(Path::new("artifacts"))?);
+    let env_cfg = EnvConfig::default();
+    let episodes = 15;
+
+    // One fixed deployment (topology) for the whole run; the oracle
+    // runs the same episodes for reference.
+    let mut topo_rng = Rng::new(42);
+    let topo = Topology::sample(&env_cfg, &mut topo_rng);
+    let mut lad =
+        make_scheduler(Method::LadTs, env_cfg.num_bs, &AgentConfig::default(), Some(rt), 42)?;
+    let mut opt =
+        make_scheduler(Method::OptTs, env_cfg.num_bs, &AgentConfig::default(), None, 42)?;
+
+    let mut lad_curve = Vec::new();
+    println!("ep | LAD-TS delay | Opt-TS delay | gap");
+    for ep in 0..episodes {
+        let seed = 42 + ep as u64;
+        let mut env = EdgeEnv::with_topology(&env_cfg, topo.clone(), seed);
+        let lad_stats = run_episode(&mut env, lad.as_mut(), true)?;
+        let mut env = EdgeEnv::with_topology(&env_cfg, topo.clone(), seed);
+        let opt_stats = run_episode(&mut env, opt.as_mut(), false)?;
+        lad_curve.push(lad_stats.mean_delay);
+        println!(
+            "{ep:2} | {:10.2} s | {:10.2} s | {:+.1}%",
+            lad_stats.mean_delay,
+            opt_stats.mean_delay,
+            (lad_stats.mean_delay / opt_stats.mean_delay - 1.0) * 100.0
+        );
+    }
+    println!("\nlearning curve: {}", sparkline(&lad_curve, 60));
+    println!(
+        "first episode {:.2}s -> last episode {:.2}s",
+        lad_curve[0],
+        lad_curve[episodes - 1]
+    );
+    Ok(())
+}

@@ -1,0 +1,3 @@
+"""Build-time compile package: Layer-1 Pallas kernels, Layer-2 JAX graphs,
+and the AOT pipeline that lowers them to HLO text for the rust runtime.
+Never imported at run time."""

@@ -1,0 +1,344 @@
+"""AOT lowering: JAX graphs -> HLO *text* + manifest.json (build time).
+
+Interchange is HLO text, NOT ``HloModuleProto.serialize()``: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Emitted graph families (one HLO file per entry, all f32 unless noted):
+
+  ladn_actor_fwd_b{B}_i{I}   inference actor (Pallas kernel inside)
+  ladn_train_b{B}_i{I}[_*]   LAD/D2SAC SAC train step (jnp eps; autodiff)
+  sac_actor_fwd_b{B}         categorical actor
+  sac_train_b{B}             discrete SAC train step
+  dqn_fwd_b{B}               Q network
+  dqn_train_b{B}             DQN train step
+  genmodel_encode            toy text encoder (prompt -> cond vector)
+  genmodel_step              one conditioned latent denoise (Pallas)
+
+``manifest.json`` records, per graph: file name, ordered input/output
+specs (name/shape/dtype) and meta (family/kind/b/i/state_len), plus the
+global hyper-parameters, so the rust runtime can initialize parameters,
+feed inputs, and round-trip train state without any Python at run time.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--quick]``
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+B_LIST = [5, 10, 20, 30, 40]   # 5 = the DEdgeAI five-Jetson prototype; rest = fig7b
+I_LIST = [1, 2, 3, 5, 7, 10]   # fig8a sweep (b=20 only)
+I_DEFAULT = 5                  # Table IV
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def spec_entry(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def state_input_specs(spec):
+    return [spec_entry(n, s) for n, s in spec]
+
+
+def lad_batch_avals(b_dim, i_steps, k=model.TRAIN_K):
+    s_dim = model.state_dim(b_dim)
+    return {
+        "s": f32((k, s_dim)), "x": f32((k, b_dim)), "a": i32((k,)),
+        "r": f32((k,)), "s2": f32((k, s_dim)), "x2": f32((k, b_dim)),
+        "noise": f32((i_steps, k, b_dim)), "noise2": f32((i_steps, k, b_dim)),
+    }
+
+
+def lad_batch_specs(b_dim, i_steps, k=model.TRAIN_K):
+    s_dim = model.state_dim(b_dim)
+    return [
+        spec_entry("batch.s", (k, s_dim)),
+        spec_entry("batch.x", (k, b_dim)),
+        spec_entry("batch.a", (k,), "i32"),
+        spec_entry("batch.r", (k,)),
+        spec_entry("batch.s2", (k, s_dim)),
+        spec_entry("batch.x2", (k, b_dim)),
+        spec_entry("batch.noise", (i_steps, k, b_dim)),
+        spec_entry("batch.noise2", (i_steps, k, b_dim)),
+    ]
+
+
+def sac_batch_avals(b_dim, k=model.TRAIN_K):
+    s_dim = model.state_dim(b_dim)
+    return {
+        "s": f32((k, s_dim)), "a": i32((k,)), "r": f32((k,)),
+        "s2": f32((k, s_dim)),
+    }
+
+
+def sac_batch_specs(b_dim, k=model.TRAIN_K):
+    s_dim = model.state_dim(b_dim)
+    return [
+        spec_entry("batch.s", (k, s_dim)),
+        spec_entry("batch.a", (k,), "i32"),
+        spec_entry("batch.r", (k,)),
+        spec_entry("batch.s2", (k, s_dim)),
+    ]
+
+
+METRICS = ["critic_loss", "actor_loss", "alpha", "entropy", "q_mean"]
+
+
+class Emitter:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.graphs = {}
+
+    def emit(self, name, fn, avals, inputs, outputs, meta):
+        """Lower ``fn(*avals)`` and record the manifest entry."""
+        lowered = jax.jit(fn).lower(*avals)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        self.graphs[name] = {
+            "file": fname,
+            "inputs": inputs,
+            "outputs": outputs,
+            "meta": meta,
+        }
+        print(f"  {name}: {len(text)} chars, {len(inputs)} inputs")
+
+
+def emit_ladn(em, b_dim, i_steps, variants=False):
+    s_dim = model.state_dim(b_dim)
+    spec = model.lad_state_spec(b_dim)
+    eps_shapes = model.mlp_shapes(b_dim + model.TEMB_DIM + s_dim, b_dim)
+    n = model.ACT_BATCH
+
+    # ---- inference forward (Pallas kernel on the request path) ----------
+    def fwd(params_flat, x, s, noise):
+        params = dict(zip(model.MLP_KEYS, params_flat))
+        return model.actor_fwd(params, x, s, noise, i_steps, use_kernel=True)
+
+    actor_param_specs = [
+        spec_entry(f"actor.{k}", eps_shapes[k]) for k in model.MLP_KEYS
+    ]
+    em.emit(
+        f"ladn_actor_fwd_b{b_dim}_i{i_steps}",
+        fwd,
+        (
+            tuple(f32(eps_shapes[k]) for k in model.MLP_KEYS),
+            f32((n, b_dim)), f32((n, s_dim)), f32((i_steps, n, b_dim)),
+        ),
+        actor_param_specs + [
+            spec_entry("x_i", (n, b_dim)),
+            spec_entry("s", (n, s_dim)),
+            spec_entry("noise", (i_steps, n, b_dim)),
+        ],
+        [spec_entry("x_0", (n, b_dim)), spec_entry("pi", (n, b_dim))],
+        {"family": "ladn", "kind": "actor_fwd", "b": b_dim, "i": i_steps,
+         "state_len": len(model.MLP_KEYS)},
+    )
+
+    # ---- train step(s) ---------------------------------------------------
+    def make_train(form, autotune):
+        def train(state_flat, *batch_flat):
+            keys = ["s", "x", "a", "r", "s2", "x2", "noise", "noise2"]
+            batch = dict(zip(keys, batch_flat))
+            return model.lad_train_step(
+                list(state_flat), batch, b_dim, i_steps,
+                actor_loss_form=form, alpha_autotune=autotune,
+            )
+        return train
+
+    state_avals = tuple(f32(s) for _n, s in spec)
+    batch = lad_batch_avals(b_dim, i_steps)
+    batch_avals = tuple(batch[k] for k in
+                        ["s", "x", "a", "r", "s2", "x2", "noise", "noise2"])
+    out_specs = state_input_specs(spec) + [spec_entry("metrics", (5,))]
+    in_specs = state_input_specs(spec) + lad_batch_specs(b_dim, i_steps)
+
+    configs = [("", "standard", True)]
+    if variants:
+        configs += [("_noauto", "standard", False),
+                    ("_paperloss", "paper", True)]
+    for suffix, form, autotune in configs:
+        em.emit(
+            f"ladn_train_b{b_dim}_i{i_steps}{suffix}",
+            make_train(form, autotune),
+            (state_avals,) + batch_avals,
+            in_specs,
+            out_specs,
+            {"family": "ladn", "kind": "train", "b": b_dim, "i": i_steps,
+             "state_len": len(spec), "metrics": METRICS,
+             "actor_loss": form, "alpha_autotune": autotune},
+        )
+
+
+def emit_sac(em, b_dim):
+    s_dim = model.state_dim(b_dim)
+    spec = model.sac_state_spec(b_dim)
+    a_shapes = model.mlp_shapes(s_dim, b_dim)
+    n = model.ACT_BATCH
+
+    def fwd(params_flat, s):
+        params = dict(zip(model.MLP_KEYS, params_flat))
+        return model.sac_actor_fwd(params, s)
+
+    em.emit(
+        f"sac_actor_fwd_b{b_dim}",
+        fwd,
+        (tuple(f32(a_shapes[k]) for k in model.MLP_KEYS), f32((n, s_dim))),
+        [spec_entry(f"actor.{k}", a_shapes[k]) for k in model.MLP_KEYS]
+        + [spec_entry("s", (n, s_dim))],
+        [spec_entry("logits", (n, b_dim)), spec_entry("pi", (n, b_dim))],
+        {"family": "sac", "kind": "actor_fwd", "b": b_dim,
+         "state_len": len(model.MLP_KEYS)},
+    )
+
+    def train(state_flat, *batch_flat):
+        batch = dict(zip(["s", "a", "r", "s2"], batch_flat))
+        return model.sac_train_step(list(state_flat), batch, b_dim)
+
+    b = sac_batch_avals(b_dim)
+    em.emit(
+        f"sac_train_b{b_dim}",
+        train,
+        (tuple(f32(s) for _n, s in spec),
+         b["s"], b["a"], b["r"], b["s2"]),
+        state_input_specs(spec) + sac_batch_specs(b_dim),
+        state_input_specs(spec) + [spec_entry("metrics", (5,))],
+        {"family": "sac", "kind": "train", "b": b_dim,
+         "state_len": len(spec), "metrics": METRICS},
+    )
+
+
+def emit_dqn(em, b_dim):
+    s_dim = model.state_dim(b_dim)
+    spec = model.dqn_state_spec(b_dim)
+    q_shapes = model.mlp_shapes(s_dim, b_dim)
+    n = model.ACT_BATCH
+
+    def fwd(params_flat, s):
+        params = dict(zip(model.MLP_KEYS, params_flat))
+        return (model.mlp_apply(params, s),)
+
+    em.emit(
+        f"dqn_fwd_b{b_dim}",
+        fwd,
+        (tuple(f32(q_shapes[k]) for k in model.MLP_KEYS), f32((n, s_dim))),
+        [spec_entry(f"q.{k}", q_shapes[k]) for k in model.MLP_KEYS]
+        + [spec_entry("s", (n, s_dim))],
+        [spec_entry("q_values", (n, b_dim))],
+        {"family": "dqn", "kind": "fwd", "b": b_dim,
+         "state_len": len(model.MLP_KEYS)},
+    )
+
+    def train(state_flat, *batch_flat):
+        batch = dict(zip(["s", "a", "r", "s2"], batch_flat))
+        return model.dqn_train_step(list(state_flat), batch, b_dim)
+
+    b = sac_batch_avals(b_dim)
+    em.emit(
+        f"dqn_train_b{b_dim}",
+        train,
+        (tuple(f32(s) for _n, s in spec),
+         b["s"], b["a"], b["r"], b["s2"]),
+        state_input_specs(spec) + sac_batch_specs(b_dim),
+        state_input_specs(spec) + [spec_entry("metrics", (5,))],
+        {"family": "dqn", "kind": "train", "b": b_dim,
+         "state_len": len(spec), "metrics": METRICS},
+    )
+
+
+def emit_genmodel(em):
+    em.emit(
+        "genmodel_encode",
+        lambda tokens: (model.genmodel_encode(tokens),),
+        (i32((model.GEN_TOKENS,)),),
+        [spec_entry("tokens", (model.GEN_TOKENS,), "i32")],
+        [spec_entry("cond", (model.GEN_COND,))],
+        {"family": "genmodel", "kind": "encode", "state_len": 0},
+    )
+    em.emit(
+        "genmodel_step",
+        lambda latent, cond, idx: (model.genmodel_step(latent, cond, idx),),
+        (f32((model.GEN_LATENT, model.GEN_LATENT)), f32((model.GEN_COND,)),
+         f32(())),
+        [
+            spec_entry("latent", (model.GEN_LATENT, model.GEN_LATENT)),
+            spec_entry("cond", (model.GEN_COND,)),
+            spec_entry("step_idx", ()),
+        ],
+        [spec_entry("latent_out", (model.GEN_LATENT, model.GEN_LATENT))],
+        {"family": "genmodel", "kind": "step", "state_len": 0},
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="only b=20/i=5 graphs (fast dev iteration)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    em = Emitter(args.out_dir)
+
+    b_list = [20] if args.quick else B_LIST
+    for b_dim in b_list:
+        i_list = [I_DEFAULT] if (args.quick or b_dim != 20) else I_LIST
+        for i_steps in i_list:
+            emit_ladn(em, b_dim, i_steps,
+                      variants=(b_dim == 20 and i_steps == I_DEFAULT
+                                and not args.quick))
+        emit_sac(em, b_dim)
+        emit_dqn(em, b_dim)
+    emit_genmodel(em)
+
+    manifest = {
+        "version": 1,
+        "hidden": model.HIDDEN,
+        "temb_dim": model.TEMB_DIM,
+        "beta_min": model.BETA_MIN,
+        "beta_max": model.BETA_MAX,
+        "act_batch": model.ACT_BATCH,
+        "train_k": model.TRAIN_K,
+        "gamma": model.GAMMA,
+        "tau": model.TAU,
+        "lr_actor": model.LR_ACTOR,
+        "lr_critic": model.LR_CRITIC,
+        "lr_alpha": model.LR_ALPHA,
+        "target_entropy": model.TARGET_ENTROPY,
+        "gen_latent": model.GEN_LATENT,
+        "gen_cond": model.GEN_COND,
+        "gen_vocab": model.GEN_VOCAB,
+        "gen_tokens": model.GEN_TOKENS,
+        "graphs": em.graphs,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(em.graphs)} graphs + manifest to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+Two kernels implement the hot compute of the system:
+
+- ``ladn_denoise.eps_mlp`` — the fused epsilon-network of the LADN actor
+  (one reverse-diffusion denoising step of the scheduling policy).
+- ``sd_step.latent_step`` — one conditioned denoising step of the toy
+  latent-diffusion generation model served by DEdgeAI workers.
+
+Both are lowered with ``interpret=True`` so the resulting HLO runs on any
+PJRT backend (the rust CPU client in particular). ``ref.py`` holds the
+pure-jnp oracles used by pytest/hypothesis.
+"""
+
+from . import ladn_denoise, ref, sd_step  # noqa: F401

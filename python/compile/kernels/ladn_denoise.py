@@ -1,0 +1,95 @@
+"""Fused epsilon-network kernel of the LADN actor (Layer 1).
+
+One reverse-diffusion denoising step of the scheduling policy evaluates
+``eps = MLP(concat(x_i, temb(i), s))`` for a batch of tasks. This kernel
+fuses the concat + 3 matmuls + 2 ReLUs into a single Pallas call so the
+whole step stays resident in VMEM on a real TPU.
+
+TPU mapping (the paper's testbed is CUDA; see DESIGN.md
+§Hardware-Adaptation): instead of a threadblock-per-row GPU layout, we
+tile the batch dimension into row blocks via ``BlockSpec`` — each grid
+step streams one ``[RB, B]`` x-block plus its ``[RB, S]`` state block
+from HBM to VMEM while all weight matrices (≤ (B+E+S)·H + H·H + H·B
+floats ≈ 6 KB at B=20, H=20) stay VMEM-resident across the grid. The
+concat is algebraically split: ``concat(x,t,s) @ W1`` is computed as
+``x @ W1x + t @ W1t + s @ W1s`` (row slices of W1), which avoids
+materializing the concatenated block and feeds the MXU three small
+back-to-back matmuls.
+
+Run with ``interpret=True`` everywhere: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step. 32 rows × (B+S+E) cols ≈ 8 KB at B=20 — far below
+# VMEM; chosen so the padded act batch (128) divides evenly.
+ROW_BLOCK = 32
+
+
+def _eps_mlp_kernel(x_ref, temb_ref, s_ref, w1x_ref, w1t_ref, w1s_ref,
+                    b1_ref, w2_ref, b2_ref, w3_ref, b3_ref, o_ref):
+    """Kernel body: one row-block of the fused epsilon MLP."""
+    x = x_ref[...]            # [RB, B]
+    s = s_ref[...]            # [RB, S]
+    temb = temb_ref[...]      # [1, E]
+    # concat(x, temb, s) @ W1 == x@W1x + temb@W1t + s@W1s (W1 row slices).
+    h = (
+        jnp.dot(x, w1x_ref[...])
+        + jnp.dot(temb, w1t_ref[...])  # [1,H] broadcasts over rows
+        + jnp.dot(s, w1s_ref[...])
+        + b1_ref[...]
+    )
+    h = jnp.maximum(h, 0.0)
+    h = jnp.maximum(jnp.dot(h, w2_ref[...]) + b2_ref[...], 0.0)
+    o_ref[...] = jnp.dot(h, w3_ref[...]) + b3_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("row_block",))
+def eps_mlp(x, temb, s, w1, b1, w2, b2, w3, b3, row_block=ROW_BLOCK):
+    """Fused epsilon network over a task batch.
+
+    Args match ``ref.eps_mlp_ref``; ``w1`` is the full ``[B+E+S, H]``
+    first-layer weight — sliced here into the x/temb/s row bands.
+
+    The batch dimension N must be divisible by ``row_block`` (callers pad
+    to the fixed act batch); weights are broadcast to every grid step.
+    """
+    n, b_dim = x.shape
+    e_dim = temb.shape[0]
+    s_dim = s.shape[1]
+    h_dim = w1.shape[1]
+    if n % row_block != 0:
+        raise ValueError(f"batch {n} not divisible by row block {row_block}")
+    w1x = w1[:b_dim]
+    w1t = w1[b_dim:b_dim + e_dim]
+    w1s = w1[b_dim + e_dim:]
+    temb2 = temb[None, :]
+
+    grid = (n // row_block,)
+    full = lambda shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+    rows = lambda cols: pl.BlockSpec((row_block, cols), lambda i: (i, 0))
+    return pl.pallas_call(
+        _eps_mlp_kernel,
+        grid=grid,
+        in_specs=[
+            rows(b_dim),                 # x
+            full((1, e_dim)),            # temb
+            rows(s_dim),                 # s
+            full((b_dim, h_dim)),        # w1x
+            full((e_dim, h_dim)),        # w1t
+            full((s_dim, h_dim)),        # w1s
+            full((h_dim,)),              # b1
+            full((h_dim, h_dim)),        # w2
+            full((h_dim,)),              # b2
+            full((h_dim, b_dim)),        # w3
+            full((b_dim,)),              # b3
+        ],
+        out_specs=rows(b_dim),
+        out_shape=jax.ShapeDtypeStruct((n, b_dim), jnp.float32),
+        interpret=True,
+    )(x, temb2, s, w1x, w1t, w1s, b1, w2, b2, w3, b3)

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest
+checks kernel-vs-ref numerics (see python/tests/) and the rust native
+backend mirrors exactly this math, so the chain
+
+    rust nn (native)  ==  jnp ref  ==  pallas kernel  ==  AOT HLO
+
+is closed by tests at every link.
+"""
+
+import jax.numpy as jnp
+
+
+def eps_mlp_ref(x, temb, s, w1, b1, w2, b2, w3, b3):
+    """Epsilon-network of the LADN actor: a 2-hidden-layer ReLU MLP over
+    the concatenation ``[x, temb, s]``.
+
+    Args:
+      x:    [N, B]  current diffused action-probability iterate.
+      temb: [E]     sinusoidal timestep embedding (shared by all rows).
+      s:    [N, S]  system state (Eqn 6 of the paper).
+      w1:   [B+E+S, H], b1: [H]
+      w2:   [H, H],     b2: [H]
+      w3:   [H, B],     b3: [B]
+
+    Returns:
+      eps: [N, B] predicted noise.
+    """
+    n = x.shape[0]
+    temb_rows = jnp.broadcast_to(temb[None, :], (n, temb.shape[0]))
+    h = jnp.concatenate([x, temb_rows, s], axis=1)
+    h = jnp.maximum(h @ w1 + b1, 0.0)
+    h = jnp.maximum(h @ w2 + b2, 0.0)
+    return h @ w3 + b3
+
+
+def latent_step_ref(latent, cond, w, u, a, b):
+    """One conditioned denoising step of the toy generation model.
+
+    ``latent' = a * latent + b * tanh(latent @ w + (cond @ u))``
+
+    Args:
+      latent: [H, W] latent image.
+      cond:   [D]    text-conditioning vector.
+      w:      [W, W] mixing weights.
+      u:      [D, W] conditioning projection.
+      a, b:   scalars (retention / update rates).
+    """
+    proj = cond @ u
+    return a * latent + b * jnp.tanh(latent @ w + proj[None, :])

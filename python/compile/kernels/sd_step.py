@@ -1,0 +1,61 @@
+"""Conditioned latent-denoise kernel for the toy generation model (L1).
+
+DEdgeAI workers serve a scaled-down stand-in for reSD3-m: a latent
+``[H, W]`` image refined by ``z_n`` conditioned denoising steps (the
+paper's workload model — cost ∝ number of denoising steps). Each step is
+
+    latent' = a * latent + b * tanh(latent @ W + cond @ U)
+
+fused into one Pallas kernel.
+
+TPU mapping: the latent is tiled into ``[ROW_BLOCK, W]`` row bands
+(BlockSpec over the grid's single axis); the ``[W, W]`` mixing matrix and
+the pre-projected conditioning row stay VMEM-resident for the whole
+grid. ``interpret=True`` for CPU-PJRT execution (see ladn_denoise.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 16
+
+
+def _latent_step_kernel(lat_ref, proj_ref, w_ref, ab_ref, o_ref):
+    lat = lat_ref[...]                       # [RB, W]
+    a = ab_ref[0, 0]
+    b = ab_ref[0, 1]
+    mix = jnp.dot(lat, w_ref[...]) + proj_ref[...]   # [RB,W] + [1,W]
+    o_ref[...] = a * lat + b * jnp.tanh(mix)
+
+
+@functools.partial(jax.jit, static_argnames=("row_block",))
+def latent_step(latent, cond, w, u, a, b, row_block=ROW_BLOCK):
+    """One conditioned denoise step over the latent image.
+
+    Args match ``ref.latent_step_ref``. ``cond @ u`` is computed once
+    outside the kernel (it is row-invariant) and broadcast in VMEM.
+    """
+    h, wdim = latent.shape
+    if h % row_block != 0:
+        raise ValueError(f"latent rows {h} not divisible by {row_block}")
+    proj = (cond @ u)[None, :]                      # [1, W]
+    ab = jnp.stack([a, b]).reshape(1, 2).astype(jnp.float32)
+
+    grid = (h // row_block,)
+    full = lambda shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+    return pl.pallas_call(
+        _latent_step_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_block, wdim), lambda i: (i, 0)),  # latent
+            full((1, wdim)),                                    # proj
+            full((wdim, wdim)),                                 # w
+            full((1, 2)),                                       # a,b
+        ],
+        out_specs=pl.BlockSpec((row_block, wdim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, wdim), jnp.float32),
+        interpret=True,
+    )(latent, proj, w, ab)

@@ -1,0 +1,581 @@
+"""Layer-2 JAX compute graphs (build-time only).
+
+Everything the rust coordinator executes at run time is defined here and
+AOT-lowered by ``aot.py`` to HLO text:
+
+- the LADN actor forward pass (Theorem 2 reverse diffusion, calling the
+  Layer-1 Pallas kernel for the fused epsilon network),
+- the LAD-TS / SAC-TS / DQN-TS train steps (losses of Eqns 14-17, full
+  Adam state threaded through the graph so rust round-trips the train
+  state as a flat list of tensors),
+- the toy generation model (text encode + conditioned latent denoise)
+  served by DEdgeAI workers.
+
+Conventions shared with the rust side (see rust/src/runtime/):
+- all floats are f32, action indices are i32;
+- train state is a *flat ordered list* of tensors described by
+  ``lad_state_spec`` / ``sac_state_spec`` / ``dqn_state_spec``; the same
+  order is written to artifacts/manifest.json;
+- stochasticity enters only through explicit ``noise`` inputs sampled by
+  the rust PRNG, keeping graphs deterministic and replayable.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ladn_denoise, ref
+
+# ---------------------------------------------------------------------------
+# Model hyper-parameters (Table IV of the paper + DESIGN.md calibration).
+# ---------------------------------------------------------------------------
+HIDDEN = 20          # two hidden layers of 20 neurons (Table IV)
+TEMB_DIM = 16        # sinusoidal timestep-embedding width
+BETA_MIN = 0.1       # VP-SDE schedule bounds (DDPM / D2SAC convention)
+BETA_MAX = 10.0
+ACT_BATCH = 128      # padded decision batch (N_b,t <= 70 in all sweeps)
+TRAIN_K = 64         # SGD batch size K (Table IV)
+GAMMA = 0.95         # reward decay (Table IV)
+TAU = 0.005          # soft-update weight (Table IV)
+LR_ACTOR = 1e-4      # eta_a
+LR_CRITIC = 1e-3     # eta_c
+LR_ALPHA = 3e-4      # eta_alpha
+TARGET_ENTROPY = -1.0  # H~ (Table IV); Eqn 16 makes -H~ the effective target
+LOG_ALPHA_MIN = math.log(1e-3)
+LOG_ALPHA_MAX = math.log(5.0)
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+# Per-step clamp on the diffusion iterate (the standard DDPM x-clip, cf.
+# D2SAC's implementation). Without it the LAD feedback loop X_b[n] <- x_0
+# -> next x_I diverges: the reverse chain amplifies by 1/sqrt(lam_bar) ~=
+# 12x per pass. +-5 keeps softmax logits expressive (ratio e^10) while
+# bounding the latent memory.
+X_CLIP = 5.0
+
+# Toy generation model (the reSD3-m stand-in; see DESIGN.md substitutions).
+GEN_LATENT = 64      # latent image is [64, 64]
+GEN_COND = 64        # text-conditioning width
+GEN_VOCAB = 256      # byte-level toy tokenizer
+GEN_TOKENS = 16      # fixed prompt length (pad/truncate)
+
+
+def state_dim(b_dim: int) -> int:
+    """State s = [d_n, rho_n*z_n, q_{t-1,1..B}] (Eqn 6)."""
+    return 2 + b_dim
+
+
+# ---------------------------------------------------------------------------
+# Diffusion schedule (Theorem 2).
+# ---------------------------------------------------------------------------
+
+def beta_schedule(i_steps: int):
+    """VP-SDE discrete betas: beta_i = 1 - exp(-bmin/I - (2i-1)/(2I^2)(bmax-bmin)).
+
+    Returns (beta[I], lam[I], lam_bar[I], beta_tilde[I]) indexed by
+    i-1 for i in 1..I. ``beta_tilde_1 = 0`` (lam_bar_0 == 1), making the
+    final denoising step deterministic — matching DDPM and the paper.
+    """
+    i = jnp.arange(1, i_steps + 1, dtype=jnp.float32)
+    beta = 1.0 - jnp.exp(
+        -BETA_MIN / i_steps
+        - (2.0 * i - 1.0) / (2.0 * i_steps**2) * (BETA_MAX - BETA_MIN)
+    )
+    lam = 1.0 - beta
+    lam_bar = jnp.cumprod(lam)
+    lam_bar_prev = jnp.concatenate([jnp.ones((1,), jnp.float32), lam_bar[:-1]])
+    beta_tilde = (1.0 - lam_bar_prev) / (1.0 - lam_bar) * beta
+    return beta, lam, lam_bar, beta_tilde
+
+
+def timestep_embedding(i: int, dim: int = TEMB_DIM):
+    """Sinusoidal embedding of denoise-step index i (static python int)."""
+    half = dim // 2
+    freqs = jnp.exp(
+        -math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half
+    )
+    ang = i * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
+
+
+# ---------------------------------------------------------------------------
+# MLP primitives. The epsilon net runs through the Pallas kernel on the
+# inference graph; train graphs use the jnp reference (identical math,
+# autodiff-friendly).
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, din: int, dout: int, hidden: int = HIDDEN):
+    """Uniform Kaiming-style init, mirrored bit-for-bit by rust nn::init
+    (rust re-derives init natively; only the *forward* math must match)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+
+    def layer(k, i, o):
+        bound = 1.0 / math.sqrt(i)
+        return jax.random.uniform(k, (i, o), jnp.float32, -bound, bound)
+
+    return {
+        "w1": layer(k1, din, hidden), "b1": jnp.zeros((hidden,)),
+        "w2": layer(k2, hidden, hidden), "b2": jnp.zeros((hidden,)),
+        "w3": layer(k3, hidden, dout), "b3": jnp.zeros((dout,)),
+    }
+
+
+def mlp_apply(p, x):
+    h = jnp.maximum(x @ p["w1"] + p["b1"], 0.0)
+    h = jnp.maximum(h @ p["w2"] + p["b2"], 0.0)
+    return h @ p["w3"] + p["b3"]
+
+
+def eps_apply(p, x, temb, s, use_kernel: bool):
+    """Epsilon network eps_theta(x_i, i, s): Pallas kernel or jnp ref."""
+    if use_kernel:
+        return ladn_denoise.eps_mlp(
+            x, temb, s, p["w1"], p["b1"], p["w2"], p["b2"], p["w3"], p["b3"]
+        )
+    return ref.eps_mlp_ref(
+        x, temb, s, p["w1"], p["b1"], p["w2"], p["b2"], p["w3"], p["b3"]
+    )
+
+
+# ---------------------------------------------------------------------------
+# LADN actor forward (reverse diffusion, Theorem 2).
+# ---------------------------------------------------------------------------
+
+def actor_fwd(params, x_i, s, noise, i_steps: int, use_kernel: bool):
+    """Reverse-diffuse the latent action probability.
+
+    Args:
+      params: epsilon-MLP params (din = B + TEMB_DIM + S).
+      x_i:   [N, B] starting iterate — the stored latent action
+             probability X_b[n] for LAD-TS, fresh N(0,I) for D2SAC-TS.
+      s:     [N, S] system state.
+      noise: [I, N, B] pre-sampled N(0,I) injected per step (Eqn 10's
+             eps term); pass zeros for deterministic evaluation.
+      i_steps: number of denoising steps I (static).
+      use_kernel: route eps through the Pallas kernel (inference graph)
+             or the jnp ref (train graph; autodiff-safe).
+
+    Returns:
+      (x_0 [N,B], pi [N,B]) — final iterate and softmax action probs.
+    """
+    beta, lam, lam_bar, beta_tilde = beta_schedule(i_steps)
+    x = x_i
+    for i in range(i_steps, 0, -1):
+        idx = i - 1
+        temb = timestep_embedding(i)
+        eps = eps_apply(params, x, temb, s, use_kernel)
+        mean = (x - beta[idx] / jnp.sqrt(1.0 - lam_bar[idx]) * eps) / jnp.sqrt(
+            lam[idx]
+        )
+        # Paper's Eqn 10 injects (beta_tilde_i / 2) * eps_noise; the
+        # iterate is clamped per step (see X_CLIP above).
+        x = mean + (beta_tilde[idx] / 2.0) * noise[i_steps - i]
+        # Smooth clamp: X_CLIP * tanh(x / X_CLIP). A hard clip zeroes
+        # actor gradients once the 1/sqrt(lam_bar) amplification
+        # saturates coordinates (which it does for most), freezing the
+        # policy; tanh keeps the iterate bounded with live gradients.
+        x = X_CLIP * jnp.tanh(x / X_CLIP)
+    pi = jax.nn.softmax(x, axis=-1)
+    return x, pi
+
+
+def sac_actor_fwd(params, s):
+    """Categorical MLP actor of the SAC-TS baseline."""
+    logits = mlp_apply(params, s)
+    return logits, jax.nn.softmax(logits, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Adam (explicitly threaded; rust owns the flat state between calls).
+# ---------------------------------------------------------------------------
+
+def adam_update(params, grads, m, v, step, lr):
+    """One Adam step over a dict of tensors. ``step`` is the *new* count."""
+    b1t = 1.0 - ADAM_B1**step
+    b2t = 1.0 - ADAM_B2**step
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        new_m[k] = ADAM_B1 * m[k] + (1.0 - ADAM_B1) * g
+        new_v[k] = ADAM_B2 * v[k] + (1.0 - ADAM_B2) * g * g
+        mhat = new_m[k] / b1t
+        vhat = new_v[k] / b2t
+        new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return new_p, new_m, new_v
+
+
+def zeros_like_tree(p):
+    return {k: jnp.zeros_like(v) for k, v in p.items()}
+
+
+# ---------------------------------------------------------------------------
+# Train-state layout. Rust reconstructs these dicts from a flat tensor
+# list; the spec below *is* the contract (also emitted to manifest.json).
+# ---------------------------------------------------------------------------
+
+MLP_KEYS = ["w1", "b1", "w2", "b2", "w3", "b3"]
+
+
+def mlp_shapes(din, dout, hidden=HIDDEN):
+    return {
+        "w1": (din, hidden), "b1": (hidden,),
+        "w2": (hidden, hidden), "b2": (hidden,),
+        "w3": (hidden, dout), "b3": (dout,),
+    }
+
+
+def _spec_block(prefix, shapes):
+    return [(f"{prefix}.{k}", shapes[k]) for k in MLP_KEYS]
+
+
+def lad_state_spec(b_dim: int):
+    """Flat train-state layout for LAD-TS / D2SAC-TS (shared graphs)."""
+    s_dim = state_dim(b_dim)
+    eps_shapes = mlp_shapes(b_dim + TEMB_DIM + s_dim, b_dim)
+    q_shapes = mlp_shapes(s_dim, b_dim)
+    spec = []
+    spec += _spec_block("actor", eps_shapes)
+    for net in ["c1", "c2", "t1", "t2"]:
+        spec += _spec_block(net, q_shapes)
+    for opt, shapes in [("actor", eps_shapes), ("c1", q_shapes), ("c2", q_shapes)]:
+        spec += _spec_block(f"m_{opt}", shapes)
+        spec += _spec_block(f"v_{opt}", shapes)
+    spec += [("log_alpha", ()), ("m_alpha", ()), ("v_alpha", ()), ("step", ())]
+    return spec
+
+
+def sac_state_spec(b_dim: int):
+    """Flat train-state layout for SAC-TS (actor is a plain MLP on s)."""
+    s_dim = state_dim(b_dim)
+    a_shapes = mlp_shapes(s_dim, b_dim)
+    q_shapes = mlp_shapes(s_dim, b_dim)
+    spec = []
+    spec += _spec_block("actor", a_shapes)
+    for net in ["c1", "c2", "t1", "t2"]:
+        spec += _spec_block(net, q_shapes)
+    for opt, shapes in [("actor", a_shapes), ("c1", q_shapes), ("c2", q_shapes)]:
+        spec += _spec_block(f"m_{opt}", shapes)
+        spec += _spec_block(f"v_{opt}", shapes)
+    spec += [("log_alpha", ()), ("m_alpha", ()), ("v_alpha", ()), ("step", ())]
+    return spec
+
+
+def dqn_state_spec(b_dim: int):
+    s_dim = state_dim(b_dim)
+    q_shapes = mlp_shapes(s_dim, b_dim)
+    spec = []
+    spec += _spec_block("q", q_shapes)
+    spec += _spec_block("t", q_shapes)
+    spec += _spec_block("m_q", q_shapes)
+    spec += _spec_block("v_q", q_shapes)
+    spec += [("step", ())]
+    return spec
+
+
+def pack_state(spec, tree):
+    """dict-of-dicts -> flat tensor list in spec order."""
+    flat = []
+    for name, _shape in spec:
+        parts = name.split(".")
+        node = tree
+        for p in parts:
+            node = node[p]
+        flat.append(node)
+    return flat
+
+
+def unpack_state(spec, flat):
+    """flat tensor list -> nested dict per spec."""
+    tree = {}
+    for (name, _shape), t in zip(spec, flat):
+        parts = name.split(".")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = t
+    return tree
+
+
+def lad_state_init(key, b_dim: int):
+    """Reference initializer (used by python tests; rust has its own)."""
+    s_dim = state_dim(b_dim)
+    ks = jax.random.split(key, 5)
+    actor = mlp_init(ks[0], b_dim + TEMB_DIM + s_dim, b_dim)
+    c1 = mlp_init(ks[1], s_dim, b_dim)
+    c2 = mlp_init(ks[2], s_dim, b_dim)
+    tree = {
+        "actor": actor, "c1": c1, "c2": c2,
+        "t1": {k: v for k, v in c1.items()},
+        "t2": {k: v for k, v in c2.items()},
+        "m_actor": zeros_like_tree(actor), "v_actor": zeros_like_tree(actor),
+        "m_c1": zeros_like_tree(c1), "v_c1": zeros_like_tree(c1),
+        "m_c2": zeros_like_tree(c2), "v_c2": zeros_like_tree(c2),
+        "log_alpha": jnp.asarray(math.log(0.05), jnp.float32),
+        "m_alpha": jnp.asarray(0.0), "v_alpha": jnp.asarray(0.0),
+        "step": jnp.asarray(0.0),
+    }
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# LAD-TS / D2SAC-TS train step (SAC with a diffusion actor; Eqns 14-17).
+# ---------------------------------------------------------------------------
+
+def lad_train_step(state_flat, batch, b_dim: int, i_steps: int,
+                   actor_loss_form: str = "standard",
+                   alpha_autotune: bool = True):
+    """One SAC update with the LADN diffusion actor.
+
+    Args:
+      state_flat: flat tensors per ``lad_state_spec(b_dim)``.
+      batch: dict with
+        s  [K,S], x  [K,B], a [K] i32, r [K], s2 [K,S], x2 [K,B],
+        noise [I,K,B], noise2 [I,K,B].
+      actor_loss_form: "standard" (discrete diffusion-SAC objective) or
+        "paper" (the squared form of Eqn 15) — see DESIGN.md §5.
+      alpha_autotune: apply the Eqn-16 dual update to alpha (fig8b runs
+        with this off so the swept temperature stays fixed).
+
+    Returns:
+      (new_state_flat, metrics [critic_loss, actor_loss, alpha, entropy,
+       q_mean]).
+    """
+    spec = lad_state_spec(b_dim)
+    st = unpack_state(spec, state_flat)
+    s, x, a, r = batch["s"], batch["x"], batch["a"], batch["r"]
+    s2, x2 = batch["s2"], batch["x2"]
+    noise, noise2 = batch["noise"], batch["noise2"]
+    alpha = jnp.exp(st["log_alpha"])
+    step = st["step"] + 1.0
+    k = s.shape[0]
+    rows = jnp.arange(k)
+
+    # --- target value (soft state value under the current actor) --------
+    _, pi2 = actor_fwd(st["actor"], x2, s2, noise2, i_steps, use_kernel=False)
+    logpi2 = jnp.log(pi2 + 1e-8)
+    qt = jnp.minimum(mlp_apply(st["t1"], s2), mlp_apply(st["t2"], s2))
+    v_next = jnp.sum(pi2 * (qt - alpha * logpi2), axis=1)
+    q_target = jax.lax.stop_gradient(r + GAMMA * v_next)
+
+    # --- critic update (Eqn 14) -----------------------------------------
+    def critic_loss_fn(cp):
+        qa = mlp_apply(cp, s)[rows, a]
+        return jnp.mean((qa - q_target) ** 2)
+
+    cl1, g1 = jax.value_and_grad(critic_loss_fn)(st["c1"])
+    cl2, g2 = jax.value_and_grad(critic_loss_fn)(st["c2"])
+    c1, m_c1, v_c1 = adam_update(st["c1"], g1, st["m_c1"], st["v_c1"], step, LR_CRITIC)
+    c2, m_c2, v_c2 = adam_update(st["c2"], g2, st["m_c2"], st["v_c2"], step, LR_CRITIC)
+
+    # --- actor update (Eqn 15 / standard form) ---------------------------
+    q_eval_all = jax.lax.stop_gradient(
+        jnp.minimum(mlp_apply(c1, s), mlp_apply(c2, s))
+    )
+
+    def actor_loss_fn(ap):
+        _, pi = actor_fwd(ap, x, s, noise, i_steps, use_kernel=False)
+        logpi = jnp.log(pi + 1e-8)
+        ent = -jnp.sum(pi * logpi, axis=1)
+        if actor_loss_form == "paper":
+            # Eqn 15 verbatim: mean((-alpha*H - pi(a)*Q_eval(s,a))^2).
+            pia = pi[rows, a]
+            qa = q_eval_all[rows, a]
+            loss = jnp.mean((-alpha * ent - pia * qa) ** 2)
+        else:
+            # Standard discrete SAC objective with the diffusion actor.
+            loss = jnp.mean(
+                jnp.sum(pi * (alpha * logpi - q_eval_all), axis=1)
+            )
+        return loss, ent
+
+    (al, ent), ga = jax.value_and_grad(actor_loss_fn, has_aux=True)(st["actor"])
+    actor, m_a, v_a = adam_update(
+        st["actor"], ga, st["m_actor"], st["v_actor"], step, LR_ACTOR
+    )
+
+    # --- temperature update (Eqn 16 dual form on log-alpha) -------------
+    mean_ent = jnp.mean(ent)
+    if alpha_autotune:
+        # d/dalpha [(-H - H~) * alpha] = -H - H~ ; chain through exp().
+        # Dual temperature update targeting H = -H~ (= 1 nat): raise
+        # alpha when entropy is below target, lower it above. This is
+        # Eqn 16 with the sign that actually performs entropy targeting
+        # (the verbatim form anti-targets and collapses the policy; see
+        # DESIGN.md '5).
+        g_log_alpha = (mean_ent + TARGET_ENTROPY) * alpha
+        m_al = ADAM_B1 * st["m_alpha"] + (1 - ADAM_B1) * g_log_alpha
+        v_al = ADAM_B2 * st["v_alpha"] + (1 - ADAM_B2) * g_log_alpha**2
+        mhat = m_al / (1.0 - ADAM_B1**step)
+        vhat = v_al / (1.0 - ADAM_B2**step)
+        log_alpha = jnp.clip(
+            st["log_alpha"] - LR_ALPHA * mhat / (jnp.sqrt(vhat) + ADAM_EPS),
+            LOG_ALPHA_MIN, LOG_ALPHA_MAX,
+        )
+    else:
+        log_alpha, m_al, v_al = st["log_alpha"], st["m_alpha"], st["v_alpha"]
+
+    # --- soft target update (Eqn 17) -------------------------------------
+    t1 = {k2: TAU * c1[k2] + (1 - TAU) * st["t1"][k2] for k2 in c1}
+    t2 = {k2: TAU * c2[k2] + (1 - TAU) * st["t2"][k2] for k2 in c2}
+
+    new_tree = {
+        "actor": actor, "c1": c1, "c2": c2, "t1": t1, "t2": t2,
+        "m_actor": m_a, "v_actor": v_a,
+        "m_c1": m_c1, "v_c1": v_c1, "m_c2": m_c2, "v_c2": v_c2,
+        "log_alpha": log_alpha, "m_alpha": m_al, "v_alpha": v_al,
+        "step": step,
+    }
+    metrics = jnp.stack(
+        [cl1 + cl2, al, jnp.exp(log_alpha), mean_ent, jnp.mean(q_eval_all)]
+    )
+    return pack_state(spec, new_tree), metrics
+
+
+# ---------------------------------------------------------------------------
+# SAC-TS train step (categorical MLP actor; same losses minus diffusion).
+# ---------------------------------------------------------------------------
+
+def sac_train_step(state_flat, batch, b_dim: int,
+                   alpha_autotune: bool = True):
+    spec = sac_state_spec(b_dim)
+    st = unpack_state(spec, state_flat)
+    s, a, r, s2 = batch["s"], batch["a"], batch["r"], batch["s2"]
+    alpha = jnp.exp(st["log_alpha"])
+    step = st["step"] + 1.0
+    k = s.shape[0]
+    rows = jnp.arange(k)
+
+    _, pi2 = sac_actor_fwd(st["actor"], s2)
+    logpi2 = jnp.log(pi2 + 1e-8)
+    qt = jnp.minimum(mlp_apply(st["t1"], s2), mlp_apply(st["t2"], s2))
+    v_next = jnp.sum(pi2 * (qt - alpha * logpi2), axis=1)
+    q_target = jax.lax.stop_gradient(r + GAMMA * v_next)
+
+    def critic_loss_fn(cp):
+        qa = mlp_apply(cp, s)[rows, a]
+        return jnp.mean((qa - q_target) ** 2)
+
+    cl1, g1 = jax.value_and_grad(critic_loss_fn)(st["c1"])
+    cl2, g2 = jax.value_and_grad(critic_loss_fn)(st["c2"])
+    c1, m_c1, v_c1 = adam_update(st["c1"], g1, st["m_c1"], st["v_c1"], step, LR_CRITIC)
+    c2, m_c2, v_c2 = adam_update(st["c2"], g2, st["m_c2"], st["v_c2"], step, LR_CRITIC)
+
+    q_eval_all = jax.lax.stop_gradient(
+        jnp.minimum(mlp_apply(c1, s), mlp_apply(c2, s))
+    )
+
+    def actor_loss_fn(ap):
+        _, pi = sac_actor_fwd(ap, s)
+        logpi = jnp.log(pi + 1e-8)
+        ent = -jnp.sum(pi * logpi, axis=1)
+        loss = jnp.mean(jnp.sum(pi * (alpha * logpi - q_eval_all), axis=1))
+        return loss, ent
+
+    (al, ent), ga = jax.value_and_grad(actor_loss_fn, has_aux=True)(st["actor"])
+    actor, m_a, v_a = adam_update(
+        st["actor"], ga, st["m_actor"], st["v_actor"], step, LR_ACTOR
+    )
+
+    mean_ent = jnp.mean(ent)
+    if alpha_autotune:
+        # Dual temperature update targeting H = -H~ (= 1 nat): raise
+        # alpha when entropy is below target, lower it above. This is
+        # Eqn 16 with the sign that actually performs entropy targeting
+        # (the verbatim form anti-targets and collapses the policy; see
+        # DESIGN.md '5).
+        g_log_alpha = (mean_ent + TARGET_ENTROPY) * alpha
+        m_al = ADAM_B1 * st["m_alpha"] + (1 - ADAM_B1) * g_log_alpha
+        v_al = ADAM_B2 * st["v_alpha"] + (1 - ADAM_B2) * g_log_alpha**2
+        mhat = m_al / (1.0 - ADAM_B1**step)
+        vhat = v_al / (1.0 - ADAM_B2**step)
+        log_alpha = jnp.clip(
+            st["log_alpha"] - LR_ALPHA * mhat / (jnp.sqrt(vhat) + ADAM_EPS),
+            LOG_ALPHA_MIN, LOG_ALPHA_MAX,
+        )
+    else:
+        log_alpha, m_al, v_al = st["log_alpha"], st["m_alpha"], st["v_alpha"]
+
+    t1 = {k2: TAU * c1[k2] + (1 - TAU) * st["t1"][k2] for k2 in c1}
+    t2 = {k2: TAU * c2[k2] + (1 - TAU) * st["t2"][k2] for k2 in c2}
+
+    new_tree = {
+        "actor": actor, "c1": c1, "c2": c2, "t1": t1, "t2": t2,
+        "m_actor": m_a, "v_actor": v_a,
+        "m_c1": m_c1, "v_c1": v_c1, "m_c2": m_c2, "v_c2": v_c2,
+        "log_alpha": log_alpha, "m_alpha": m_al, "v_alpha": v_al,
+        "step": step,
+    }
+    metrics = jnp.stack(
+        [cl1 + cl2, al, jnp.exp(log_alpha), mean_ent, jnp.mean(q_eval_all)]
+    )
+    return pack_state(spec, new_tree), metrics
+
+
+# ---------------------------------------------------------------------------
+# DQN-TS train step.
+# ---------------------------------------------------------------------------
+
+def dqn_train_step(state_flat, batch, b_dim: int):
+    """Standard DQN with a soft-updated target network (tau as elsewhere,
+    keeping one update convention across methods; epsilon-greedy lives on
+    the rust side)."""
+    spec = dqn_state_spec(b_dim)
+    st = unpack_state(spec, state_flat)
+    s, a, r, s2 = batch["s"], batch["a"], batch["r"], batch["s2"]
+    step = st["step"] + 1.0
+    rows = jnp.arange(s.shape[0])
+
+    q_next = jnp.max(mlp_apply(st["t"], s2), axis=1)
+    target = jax.lax.stop_gradient(r + GAMMA * q_next)
+
+    def loss_fn(qp):
+        qa = mlp_apply(qp, s)[rows, a]
+        return jnp.mean((qa - target) ** 2)
+
+    loss, g = jax.value_and_grad(loss_fn)(st["q"])
+    q, m_q, v_q = adam_update(st["q"], g, st["m_q"], st["v_q"], step, LR_CRITIC)
+    t = {k2: TAU * q[k2] + (1 - TAU) * st["t"][k2] for k2 in q}
+
+    new_tree = {"q": q, "t": t, "m_q": m_q, "v_q": v_q, "step": step}
+    qmean = jnp.mean(mlp_apply(q, s))
+    metrics = jnp.stack([loss, jnp.asarray(0.0), jnp.asarray(0.0),
+                         jnp.asarray(0.0), qmean])
+    return pack_state(spec, new_tree), metrics
+
+
+# ---------------------------------------------------------------------------
+# Toy generation model (the reSD3-m stand-in served by DEdgeAI workers).
+# Weights are trace-time constants (fixed seed) — the model is a compute
+# stand-in, not a trained generator (paper §VI.C: quality out of scope).
+# ---------------------------------------------------------------------------
+
+def _gen_weights():
+    key = jax.random.PRNGKey(20240717)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    emb = jax.random.normal(k1, (GEN_VOCAB, GEN_COND)) * 0.3
+    proj = jax.random.normal(k2, (GEN_COND, GEN_COND)) / math.sqrt(GEN_COND)
+    w = jax.random.normal(k3, (GEN_LATENT, GEN_LATENT)) / math.sqrt(GEN_LATENT)
+    u = jax.random.normal(k4, (GEN_COND, GEN_LATENT)) / math.sqrt(GEN_COND)
+    return emb, proj, w, u
+
+
+def genmodel_encode(tokens):
+    """Toy CLIP: embed byte tokens [L] i32, mean-pool, project, tanh."""
+    emb, proj, _, _ = _gen_weights()
+    e = jnp.mean(emb[tokens], axis=0)
+    return jnp.tanh(e @ proj)
+
+
+def genmodel_step(latent, cond, step_idx):
+    """One conditioned denoise step via the Layer-1 Pallas kernel.
+
+    ``step_idx`` (f32 scalar, counts down z_n..1) sets the retention /
+    update blend, mimicking a diffusion noise schedule.
+    """
+    from .kernels import sd_step
+
+    _, _, w, u = _gen_weights()
+    a = 1.0 - 0.08 / (1.0 + 0.1 * step_idx)
+    b = 0.35 / (1.0 + 0.1 * step_idx)
+    return sd_step.latent_step(latent, cond, w, u, a, b)

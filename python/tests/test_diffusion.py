@@ -1,0 +1,96 @@
+"""Properties of the reverse-diffusion machinery (Theorem 2 schedule,
+timestep embedding, actor forward)."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+
+@pytest.mark.parametrize("i_steps", [1, 2, 3, 5, 7, 10])
+def test_beta_schedule_shapes_and_ranges(i_steps):
+    beta, lam, lam_bar, beta_tilde = model.beta_schedule(i_steps)
+    beta, lam, lam_bar, beta_tilde = map(np.array, (beta, lam, lam_bar, beta_tilde))
+    assert beta.shape == (i_steps,)
+    assert ((beta > 0) & (beta < 1)).all()
+    # beta_i increases with i (more noise earlier in the forward chain).
+    assert (np.diff(beta) > 0).all() or i_steps == 1
+    np.testing.assert_allclose(lam, 1.0 - beta, rtol=1e-6)
+    # cumulative product decreases monotonically.
+    assert (np.diff(lam_bar) < 0).all() or i_steps == 1
+    # first posterior variance is exactly 0 (deterministic final step).
+    assert beta_tilde[0] == 0.0
+    assert (beta_tilde >= 0).all()
+
+
+def test_beta_schedule_matches_closed_form():
+    i_steps = 5
+    beta = np.array(model.beta_schedule(i_steps)[0])
+    for i in range(1, i_steps + 1):
+        want = 1.0 - math.exp(
+            -model.BETA_MIN / i_steps
+            - (2 * i - 1) / (2 * i_steps**2) * (model.BETA_MAX - model.BETA_MIN)
+        )
+        np.testing.assert_allclose(beta[i - 1], want, rtol=1e-5)
+
+
+def test_timestep_embedding_distinct_and_bounded():
+    embs = [np.array(model.timestep_embedding(i)) for i in range(1, 11)]
+    for e in embs:
+        assert e.shape == (model.TEMB_DIM,)
+        assert (np.abs(e) <= 1.0 + 1e-6).all()
+    for i in range(len(embs) - 1):
+        assert not np.allclose(embs[i], embs[i + 1])
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), i_steps=st.sampled_from([1, 3, 5, 10]))
+def test_actor_fwd_is_simplex(seed, i_steps):
+    b_dim, n = 20, 64
+    s_dim = model.state_dim(b_dim)
+    key = jax.random.PRNGKey(seed)
+    p = model.mlp_init(key, b_dim + model.TEMB_DIM + s_dim, b_dim)
+    x = jax.random.normal(key, (n, b_dim))
+    s = jax.random.normal(key, (n, s_dim))
+    noise = jax.random.normal(key, (i_steps, n, b_dim))
+    x0, pi = model.actor_fwd(p, x, s, noise, i_steps, use_kernel=False)
+    pi = np.array(pi)
+    assert np.isfinite(np.array(x0)).all()
+    np.testing.assert_allclose(pi.sum(axis=1), 1.0, atol=1e-5)
+    assert (pi >= 0).all()
+
+
+def test_actor_fwd_kernel_matches_jnp_path():
+    """The request-path (Pallas) and train-path (jnp) actors must agree."""
+    b_dim, n, i_steps = 20, 128, 5
+    s_dim = model.state_dim(b_dim)
+    key = jax.random.PRNGKey(11)
+    p = model.mlp_init(key, b_dim + model.TEMB_DIM + s_dim, b_dim)
+    x = jax.random.normal(key, (n, b_dim))
+    s = jax.random.normal(key, (n, s_dim))
+    noise = jax.random.normal(key, (i_steps, n, b_dim))
+    xk, pk = model.actor_fwd(p, x, s, noise, i_steps, use_kernel=True)
+    xj, pj = model.actor_fwd(p, x, s, noise, i_steps, use_kernel=False)
+    np.testing.assert_allclose(np.array(xk), np.array(xj), atol=1e-4)
+    np.testing.assert_allclose(np.array(pk), np.array(pj), atol=1e-5)
+
+
+def test_actor_fwd_latent_conditioning_matters():
+    """Different starting latents must yield different x_0 — the latent
+    action memory is the paper's core mechanism."""
+    b_dim, n, i_steps = 20, 32, 5
+    s_dim = model.state_dim(b_dim)
+    key = jax.random.PRNGKey(5)
+    p = model.mlp_init(key, b_dim + model.TEMB_DIM + s_dim, b_dim)
+    s = jax.random.normal(key, (n, s_dim))
+    noise = jnp.zeros((i_steps, n, b_dim))
+    x_a = jax.random.normal(jax.random.PRNGKey(1), (n, b_dim))
+    x_b = jax.random.normal(jax.random.PRNGKey(2), (n, b_dim))
+    x0a, _ = model.actor_fwd(p, x_a, s, noise, i_steps, use_kernel=False)
+    x0b, _ = model.actor_fwd(p, x_b, s, noise, i_steps, use_kernel=False)
+    assert not np.allclose(np.array(x0a), np.array(x0b), atol=1e-3)

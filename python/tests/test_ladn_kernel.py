@@ -1,0 +1,78 @@
+"""Layer-1 correctness: the fused epsilon-MLP Pallas kernel vs jnp oracle.
+
+Hypothesis sweeps action dims, batch sizes (multiples of the row block),
+and value scales; assert_allclose against ref.eps_mlp_ref is THE core
+correctness signal for the kernel on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ladn_denoise, ref
+
+
+def make_params(key, b_dim, s_dim):
+    return model.mlp_init(key, b_dim + model.TEMB_DIM + s_dim, b_dim)
+
+
+def run_both(key, n, b_dim, scale=1.0, step=3):
+    s_dim = model.state_dim(b_dim)
+    p = make_params(key, b_dim, s_dim)
+    kx, ks = jax.random.split(key)
+    x = jax.random.normal(kx, (n, b_dim)) * scale
+    s = jax.random.normal(ks, (n, s_dim)) * scale
+    temb = model.timestep_embedding(step)
+    args = (x, temb, s, p["w1"], p["b1"], p["w2"], p["b2"], p["w3"], p["b3"])
+    return ladn_denoise.eps_mlp(*args), ref.eps_mlp_ref(*args)
+
+
+@pytest.mark.parametrize("b_dim", [10, 20, 30, 40])
+def test_kernel_matches_ref_across_bdims(b_dim):
+    got, want = run_both(jax.random.PRNGKey(b_dim), 128, b_dim)
+    np.testing.assert_allclose(np.array(got), np.array(want), atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [32, 64, 96, 128])
+def test_kernel_matches_ref_across_batches(n):
+    got, want = run_both(jax.random.PRNGKey(n), n, 20)
+    np.testing.assert_allclose(np.array(got), np.array(want), atol=1e-5)
+
+
+def test_kernel_rejects_unaligned_batch():
+    with pytest.raises(ValueError, match="row block"):
+        run_both(jax.random.PRNGKey(0), 33, 20)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b_dim=st.sampled_from([4, 10, 20, 40]),
+    blocks=st.integers(1, 4),
+    scale=st.floats(0.01, 50.0),
+    step=st.integers(1, 10),
+)
+def test_kernel_matches_ref_hypothesis(seed, b_dim, blocks, scale, step):
+    n = blocks * ladn_denoise.ROW_BLOCK
+    got, want = run_both(jax.random.PRNGKey(seed), n, b_dim, scale, step)
+    np.testing.assert_allclose(
+        np.array(got), np.array(want), atol=1e-4 * max(scale, 1.0)
+    )
+
+
+def test_kernel_zero_input_gives_bias_path():
+    """x=s=0, temb path only: output must equal the pure-bias forward."""
+    b_dim, s_dim = 20, 22
+    p = make_params(jax.random.PRNGKey(7), b_dim, s_dim)
+    n = 32
+    x = jnp.zeros((n, b_dim))
+    s = jnp.zeros((n, s_dim))
+    temb = model.timestep_embedding(1)
+    got = ladn_denoise.eps_mlp(
+        x, temb, s, p["w1"], p["b1"], p["w2"], p["b2"], p["w3"], p["b3"]
+    )
+    # every row identical
+    assert np.allclose(np.array(got - got[0]), 0.0, atol=1e-6)

@@ -1,0 +1,86 @@
+"""Manifest/artifact consistency: what aot.py wrote must describe the
+HLO files on disk and agree with the model's state specs. Runs against
+the real artifacts/ directory when present (skips otherwise)."""
+
+import json
+import os
+
+import pytest
+
+from compile import model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="artifacts not built"
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_manifest_globals_match_model(manifest):
+    assert manifest["hidden"] == model.HIDDEN
+    assert manifest["temb_dim"] == model.TEMB_DIM
+    assert manifest["beta_min"] == model.BETA_MIN
+    assert manifest["beta_max"] == model.BETA_MAX
+    assert manifest["act_batch"] == model.ACT_BATCH
+    assert manifest["train_k"] == model.TRAIN_K
+
+
+def test_all_files_exist(manifest):
+    for name, g in manifest["graphs"].items():
+        path = os.path.join(ART, g["file"])
+        assert os.path.exists(path), name
+        assert os.path.getsize(path) > 100, name
+
+
+def test_expected_graph_coverage(manifest):
+    names = set(manifest["graphs"])
+    for b in [10, 20, 30, 40]:
+        assert f"ladn_actor_fwd_b{b}_i5" in names
+        assert f"ladn_train_b{b}_i5" in names
+        assert f"sac_actor_fwd_b{b}" in names
+        assert f"sac_train_b{b}" in names
+        assert f"dqn_fwd_b{b}" in names
+        assert f"dqn_train_b{b}" in names
+    for i in [1, 2, 3, 7, 10]:
+        assert f"ladn_actor_fwd_b20_i{i}" in names
+        assert f"ladn_train_b20_i{i}" in names
+    assert "ladn_train_b20_i5_noauto" in names
+    assert "ladn_train_b20_i5_paperloss" in names
+    assert "genmodel_encode" in names
+    assert "genmodel_step" in names
+
+
+def test_train_state_specs_match_model(manifest):
+    for b in [10, 20, 30, 40]:
+        g = manifest["graphs"][f"ladn_train_b{b}_i5"]
+        spec = model.lad_state_spec(b)
+        assert g["meta"]["state_len"] == len(spec)
+        for (name, shape), ispec in zip(spec, g["inputs"]):
+            assert ispec["name"] == name
+            assert tuple(ispec["shape"]) == tuple(shape)
+        # outputs = new state + metrics
+        assert len(g["outputs"]) == len(spec) + 1
+        assert g["outputs"][-1]["name"] == "metrics"
+
+
+def test_fwd_graph_param_prefix(manifest):
+    g = manifest["graphs"]["ladn_actor_fwd_b20_i5"]
+    state_len = g["meta"]["state_len"]
+    assert state_len == 6
+    for ispec in g["inputs"][:state_len]:
+        assert ispec["name"].startswith("actor.")
+    assert [i["name"] for i in g["inputs"][state_len:]] == ["x_i", "s", "noise"]
+
+
+def test_hlo_files_are_text_modules(manifest):
+    for name, g in list(manifest["graphs"].items())[:6]:
+        with open(os.path.join(ART, g["file"])) as f:
+            head = f.read(200)
+        assert "HloModule" in head, name

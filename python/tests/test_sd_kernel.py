@@ -1,0 +1,69 @@
+"""Layer-1 correctness: the conditioned latent-denoise kernel vs oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref, sd_step
+
+
+def run_both(key, h, w, d, a=0.9, b=0.3):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    latent = jax.random.normal(k1, (h, w))
+    cond = jax.random.normal(k2, (d,))
+    wm = jax.random.normal(k3, (w, w)) / np.sqrt(w)
+    um = jax.random.normal(k4, (d, w)) / np.sqrt(d)
+    got = sd_step.latent_step(latent, cond, wm, um, jnp.float32(a), jnp.float32(b))
+    want = ref.latent_step_ref(latent, cond, wm, um, a, b)
+    return got, want
+
+
+@pytest.mark.parametrize("h", [16, 32, 64, 128])
+def test_latent_step_matches_ref_sizes(h):
+    got, want = run_both(jax.random.PRNGKey(h), h, 64, 64)
+    np.testing.assert_allclose(np.array(got), np.array(want), atol=1e-5)
+
+
+def test_latent_step_rejects_unaligned_rows():
+    with pytest.raises(ValueError, match="divisible"):
+        run_both(jax.random.PRNGKey(0), 17, 64, 64)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    blocks=st.integers(1, 4),
+    w=st.sampled_from([32, 64]),
+    a=st.floats(0.0, 1.0),
+    b=st.floats(0.0, 1.0),
+)
+def test_latent_step_hypothesis(seed, blocks, w, a, b):
+    h = blocks * sd_step.ROW_BLOCK
+    got, want = run_both(jax.random.PRNGKey(seed), h, w, 64, a, b)
+    np.testing.assert_allclose(np.array(got), np.array(want), atol=1e-5)
+
+
+def test_latent_step_identity_when_b_zero():
+    """b=0 must return a*latent exactly (tanh path disabled)."""
+    key = jax.random.PRNGKey(3)
+    latent = jax.random.normal(key, (32, 64))
+    cond = jnp.ones((64,))
+    wm = jnp.eye(64)
+    um = jnp.zeros((64, 64))
+    got = sd_step.latent_step(latent, cond, wm, um, jnp.float32(0.5),
+                              jnp.float32(0.0))
+    np.testing.assert_allclose(np.array(got), 0.5 * np.array(latent), atol=1e-6)
+
+
+def test_genmodel_step_contracts_latent():
+    """Repeated genmodel steps must keep the latent bounded (stability of
+    the serving loop: a*latent + b*tanh(...) with a<1, |tanh|<=1)."""
+    latent = jax.random.normal(jax.random.PRNGKey(1), (64, 64)) * 3.0
+    cond = model.genmodel_encode(jnp.arange(16, dtype=jnp.int32))
+    for z in range(15, 0, -1):
+        latent = model.genmodel_step(latent, cond, jnp.float32(z))
+    assert np.isfinite(np.array(latent)).all()
+    assert np.abs(np.array(latent)).max() < 10.0

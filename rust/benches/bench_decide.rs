@@ -1,0 +1,55 @@
+//! Per-decision latency of the LADN actor: native mirror vs the AOT
+//! HLO path (PJRT), across batch sizes. This is THE hot path of the
+//! paper's system — one batched call per (BS, slot).
+
+mod common;
+
+use std::path::PathBuf;
+
+use dedgeai::nn::diffusion::{actor_forward, ActorScratch, BetaSchedule};
+use dedgeai::nn::{Mat, Mlp};
+use dedgeai::runtime::{ActorFwdExec, Manifest, XlaRuntime};
+use dedgeai::util::rng::Rng;
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = XlaRuntime::new(&dir).expect("run `make artifacts` first");
+    let (b_dim, i_steps) = (20usize, 5usize);
+    let s_dim = b_dim + 2;
+    let mut rng = Rng::new(1);
+    let mlp = Mlp::init(&mut rng, b_dim + rt.manifest.temb_dim + s_dim, 20, b_dim);
+    let params: Vec<Vec<f32>> =
+        mlp.flat_tensors().iter().map(|t| t.to_vec()).collect();
+    let sched = BetaSchedule::new(i_steps, rt.manifest.beta_min, rt.manifest.beta_max);
+    let exec = ActorFwdExec::new(&rt, &Manifest::ladn_fwd(b_dim, i_steps)).unwrap();
+
+    println!("== decision latency: LADN actor forward (B=20, I=5) ==");
+    for n in [1usize, 16, 64, 128] {
+        let x0 = Mat::from_vec(
+            n,
+            b_dim,
+            (0..n * b_dim).map(|_| rng.normal_f32()).collect(),
+        );
+        let s = Mat::from_vec(n, s_dim, (0..n * s_dim).map(|_| rng.f32()).collect());
+
+        let mut scratch = ActorScratch::default();
+        common::bench(&format!("native actor_forward  n={n}"), 20, 200, || {
+            let mut x = x0.clone();
+            let pi = actor_forward(
+                &mlp,
+                &sched,
+                rt.manifest.temb_dim,
+                &mut x,
+                &s,
+                None,
+                &mut scratch,
+            );
+            std::hint::black_box(pi);
+        });
+
+        common::bench(&format!("xla    actor_fwd HLO  n={n}"), 10, 100, || {
+            let out = exec.run(&params, Some(&x0), &s, None).unwrap();
+            std::hint::black_box(out);
+        });
+    }
+}

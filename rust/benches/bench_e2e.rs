@@ -1,0 +1,55 @@
+//! End-to-end benches: one training episode per method (the unit of
+//! every figure) and the Table-V serving protocol.
+
+mod common;
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use dedgeai::agents::{make_scheduler, Method};
+use dedgeai::config::{AgentConfig, EnvConfig};
+use dedgeai::coordinator::service::{DEdgeAi, ServeOptions};
+use dedgeai::env::EdgeEnv;
+use dedgeai::runtime::XlaRuntime;
+use dedgeai::sim::runner::run_episode;
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = Rc::new(XlaRuntime::new(&dir).expect("run `make artifacts` first"));
+    let env_cfg = EnvConfig::default();
+    let agent_cfg = AgentConfig::default();
+
+    println!("== end-to-end: one default-config episode per method ==");
+    for method in [
+        Method::OptTs,
+        Method::DqnTs,
+        Method::SacTs,
+        Method::D2SacTs,
+        Method::LadTs,
+    ] {
+        let runtime = method.is_learner().then(|| rt.clone());
+        let mut agent =
+            make_scheduler(method, env_cfg.num_bs, &agent_cfg, runtime, 1).unwrap();
+        let mut seed = 0u64;
+        common::bench(&format!("episode: {}", method.name()), 1, 5, || {
+            seed += 1;
+            let mut env = EdgeEnv::new(&env_cfg, seed);
+            let stats = run_episode(&mut env, agent.as_mut(), true).unwrap();
+            std::hint::black_box(stats);
+        });
+    }
+
+    println!("\n== Table V serving protocol (virtual clock) ==");
+    for n in [100usize, 1000] {
+        common::bench(&format!("table5 dispatch N={n}"), 1, 10, || {
+            let opts = ServeOptions {
+                requests: n,
+                artifacts_dir: dir.to_str().unwrap().into(),
+                scheduler: "least-loaded".into(),
+                ..ServeOptions::default()
+            };
+            let m = DEdgeAi::new(opts).run_virtual().unwrap();
+            std::hint::black_box(m);
+        });
+    }
+}

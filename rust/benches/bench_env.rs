@@ -1,0 +1,57 @@
+//! Environment-substrate throughput: task generation + assignment +
+//! queue updates (the L3 inner loop minus policy).
+
+mod common;
+
+use dedgeai::agents::{make_scheduler, Method};
+use dedgeai::config::{AgentConfig, EnvConfig};
+use dedgeai::env::{AigcTask, EdgeEnv};
+use dedgeai::sim::runner::run_episode;
+
+fn main() {
+    println!("== edge-network substrate throughput ==");
+    let cfg = EnvConfig::default();
+
+    let mut seed = 0u64;
+    common::bench_throughput("env: full episode, random assignment", 1, 10, || {
+        seed += 1;
+        let mut env = EdgeEnv::new(&cfg, seed);
+        let mut n = 0usize;
+        while !env.done() {
+            let tasks: Vec<AigcTask> =
+                env.tasks().iter().flatten().cloned().collect();
+            for task in &tasks {
+                env.assign(task, (n % cfg.num_bs) as usize);
+                n += 1;
+            }
+            env.advance_slot();
+        }
+        n
+    });
+
+    for method in [Method::OptTs, Method::LeastLoaded, Method::Random] {
+        let mut agent =
+            make_scheduler(method, cfg.num_bs, &AgentConfig::default(), None, 1)
+                .unwrap();
+        let mut seed = 100u64;
+        common::bench_throughput(
+            &format!("episode incl. policy: {}", method.name()),
+            1,
+            5,
+            || {
+                seed += 1;
+                let mut env = EdgeEnv::new(&cfg, seed);
+                let stats = run_episode(&mut env, agent.as_mut(), false).unwrap();
+                stats.tasks as usize
+            },
+        );
+    }
+
+    let env = EdgeEnv::new(&cfg, 1);
+    let task = env.tasks()[0][0].clone();
+    let mut s = Vec::new();
+    common::bench("state_for (single task)", 100, 10_000, || {
+        env.state_for(&task, &mut s);
+        std::hint::black_box(&s);
+    });
+}

@@ -1,0 +1,75 @@
+//! Train-step latency per method family — the dominant cost of the
+//! experiment harness (one PJRT call per (BS, slot) once warm).
+
+mod common;
+
+use std::path::PathBuf;
+
+use dedgeai::runtime::exec::BatchTensor;
+use dedgeai::runtime::{Manifest, TrainExec, TrainState, XlaRuntime};
+use dedgeai::util::rng::Rng;
+
+fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32()).collect()
+}
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = XlaRuntime::new(&dir).expect("run `make artifacts` first");
+    let b_dim = 20usize;
+    let s_dim = b_dim + 2;
+    let k = rt.manifest.train_k;
+    let mut rng = Rng::new(1);
+
+    println!("== train-step latency (B=20, K={k}) ==");
+
+    // ---- LADN (diffusion SAC) -------------------------------------------
+    for i_steps in [1usize, 5, 10] {
+        let name = Manifest::ladn_train(b_dim, i_steps, true, false);
+        let exec = TrainExec::new(&rt, &name).unwrap();
+        let mut state = TrainState::init(&exec.spec, 0.05, &mut rng).unwrap();
+        let s = randv(&mut rng, k * s_dim);
+        let x = randv(&mut rng, k * b_dim);
+        let a: Vec<i32> = (0..k).map(|_| rng.range_u32(0, 19) as i32).collect();
+        let r = randv(&mut rng, k);
+        common::bench(&format!("ladn_train I={i_steps}"), 5, 50, || {
+            let batch = [
+                BatchTensor::F32(vec![k, s_dim], s.clone()),
+                BatchTensor::F32(vec![k, b_dim], x.clone()),
+                BatchTensor::I32(vec![k], a.clone()),
+                BatchTensor::F32(vec![k], r.clone()),
+                BatchTensor::F32(vec![k, s_dim], s.clone()),
+                BatchTensor::F32(vec![k, b_dim], x.clone()),
+                BatchTensor::F32(
+                    vec![i_steps, k, b_dim],
+                    randv(&mut rng, i_steps * k * b_dim),
+                ),
+                BatchTensor::F32(
+                    vec![i_steps, k, b_dim],
+                    randv(&mut rng, i_steps * k * b_dim),
+                ),
+            ];
+            let m = exec.run(&mut state, &batch).unwrap();
+            std::hint::black_box(m);
+        });
+    }
+
+    // ---- SAC / DQN -------------------------------------------------------
+    for name in [Manifest::sac_train(b_dim), Manifest::dqn_train(b_dim)] {
+        let exec = TrainExec::new(&rt, &name).unwrap();
+        let mut state = TrainState::init(&exec.spec, 0.05, &mut rng).unwrap();
+        let s = randv(&mut rng, k * s_dim);
+        let a: Vec<i32> = (0..k).map(|_| rng.range_u32(0, 19) as i32).collect();
+        let r = randv(&mut rng, k);
+        common::bench(&name, 5, 50, || {
+            let batch = [
+                BatchTensor::F32(vec![k, s_dim], s.clone()),
+                BatchTensor::I32(vec![k], a.clone()),
+                BatchTensor::F32(vec![k], r.clone()),
+                BatchTensor::F32(vec![k, s_dim], s.clone()),
+            ];
+            let m = exec.run(&mut state, &batch).unwrap();
+            std::hint::black_box(m);
+        });
+    }
+}

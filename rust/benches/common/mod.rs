@@ -1,0 +1,67 @@
+//! Minimal bench harness (criterion is not in the offline crate set):
+//! warmup + timed iterations, reporting mean/p50/p95 per iteration.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+}
+
+/// Run `f` repeatedly: `warmup` untimed, then `iters` timed.
+#[allow(dead_code)]
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let p = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_us: mean,
+        p50_us: p(0.5),
+        p95_us: p(0.95),
+    };
+    println!(
+        "{:45} {:>10.1} us/iter  (p50 {:>9.1}, p95 {:>9.1}, n={})",
+        r.name, r.mean_us, r.p50_us, r.p95_us, r.iters
+    );
+    r
+}
+
+/// Throughput variant: item count per iteration for items/s reporting.
+#[allow(dead_code)]
+pub fn bench_throughput<F: FnMut() -> usize>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: F,
+) {
+    for _ in 0..warmup {
+        f();
+    }
+    let t0 = Instant::now();
+    let mut items = 0usize;
+    for _ in 0..iters {
+        items += f();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{:45} {:>10.0} items/s  ({} items in {:.2}s)",
+        name,
+        items as f64 / dt,
+        items,
+        dt
+    );
+}

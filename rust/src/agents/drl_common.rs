@@ -1,0 +1,185 @@
+//! Shared plumbing for the learning agents: transition linking across
+//! the s -> s_next chain of Eqn 7 (next task in the slot, else first
+//! task of the next slot) and the periodic-training cadence of
+//! Algorithm 1.
+
+use super::Transition;
+
+/// One decision awaiting its reward / successor state.
+#[derive(Clone, Debug)]
+pub struct Rec {
+    pub s: Vec<f32>,
+    pub x: Vec<f32>,
+    pub a: usize,
+    pub r: Option<f32>,
+}
+
+/// Links consecutive decisions of one BS into transitions per Eqn 7.
+#[derive(Clone, Debug)]
+pub struct TransitionLinker {
+    /// Last rewarded decision of the previous slot, per BS.
+    prev: Vec<Option<Rec>>,
+    /// Current slot's decisions (rewards pending), per BS.
+    current: Vec<Vec<Rec>>,
+}
+
+impl TransitionLinker {
+    pub fn new(num_bs: usize) -> Self {
+        Self { prev: vec![None; num_bs], current: vec![Vec::new(); num_bs] }
+    }
+
+    /// Register this slot's decisions for BS `b`. If the previous
+    /// slot's tail decision has its reward, it links to the first new
+    /// record and the completed transition is returned.
+    pub fn begin(&mut self, b: usize, recs: Vec<Rec>) -> Option<Transition> {
+        debug_assert!(self.current[b].is_empty(), "rewards not reported");
+        let out = match (self.prev[b].take(), recs.first()) {
+            (Some(p), Some(first)) if p.r.is_some() => Some(Transition {
+                s: p.s,
+                x: p.x,
+                a: p.a,
+                r: p.r.unwrap(),
+                s2: first.s.clone(),
+                x2: first.x.clone(),
+            }),
+            (p, _) => {
+                self.prev[b] = p;
+                None
+            }
+        };
+        self.current[b] = recs;
+        out
+    }
+
+    /// Report realized rewards for the records of the last `begin(b)`,
+    /// in order. Returns all intra-slot transitions; the slot's tail
+    /// record is held back until the next `begin`.
+    pub fn rewards(&mut self, b: usize, rewards: &[f32]) -> Vec<Transition> {
+        let mut recs = std::mem::take(&mut self.current[b]);
+        assert_eq!(recs.len(), rewards.len(), "reward arity mismatch");
+        for (rec, &r) in recs.iter_mut().zip(rewards) {
+            rec.r = Some(r);
+        }
+        let mut out = Vec::with_capacity(recs.len().saturating_sub(1));
+        for i in 0..recs.len().saturating_sub(1) {
+            out.push(Transition {
+                s: recs[i].s.clone(),
+                x: recs[i].x.clone(),
+                a: recs[i].a,
+                r: recs[i].r.unwrap(),
+                s2: recs[i + 1].s.clone(),
+                x2: recs[i + 1].x.clone(),
+            });
+        }
+        self.prev[b] = recs.pop();
+        out
+    }
+
+    /// Drop any dangling state (episode boundary).
+    pub fn reset(&mut self) {
+        for p in &mut self.prev {
+            *p = None;
+        }
+        for c in &mut self.current {
+            c.clear();
+        }
+    }
+}
+
+/// Counts decisions and converts them into due train steps
+/// (`train_every` decisions per step, capped per tick to bound
+/// latency).
+#[derive(Clone, Debug)]
+pub struct Cadence {
+    counters: Vec<usize>,
+    train_every: usize,
+    max_steps_per_tick: usize,
+}
+
+impl Cadence {
+    pub fn new(num_bs: usize, train_every: usize) -> Self {
+        Self {
+            counters: vec![0; num_bs],
+            train_every,
+            max_steps_per_tick: 4,
+        }
+    }
+
+    pub fn add(&mut self, b: usize, decisions: usize) {
+        self.counters[b] += decisions;
+    }
+
+    /// Due train steps for BS `b` (consumes the counter).
+    pub fn take(&mut self, b: usize) -> usize {
+        if self.train_every == 0 {
+            self.counters[b] = 0;
+            return 0;
+        }
+        let steps = (self.counters[b] / self.train_every).min(self.max_steps_per_tick);
+        self.counters[b] -= steps * self.train_every;
+        // avoid unbounded carry-over when capped
+        self.counters[b] = self.counters[b].min(self.train_every * self.max_steps_per_tick);
+        steps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(tag: f32) -> Rec {
+        Rec { s: vec![tag], x: vec![tag * 10.0], a: tag as usize, r: None }
+    }
+
+    #[test]
+    fn links_within_slot_and_across_slots() {
+        let mut l = TransitionLinker::new(1);
+        assert!(l.begin(0, vec![rec(1.0), rec(2.0), rec(3.0)]).is_none());
+        let ts = l.rewards(0, &[-1.0, -2.0, -3.0]);
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].s, vec![1.0]);
+        assert_eq!(ts[0].s2, vec![2.0]);
+        assert_eq!(ts[0].r, -1.0);
+        assert_eq!(ts[1].x2, vec![30.0]);
+        // next slot: the held-back tail links to the new head
+        let cross = l.begin(0, vec![rec(4.0)]).expect("cross-slot link");
+        assert_eq!(cross.s, vec![3.0]);
+        assert_eq!(cross.s2, vec![4.0]);
+        assert_eq!(cross.r, -3.0);
+    }
+
+    #[test]
+    fn single_task_slots_only_cross_link() {
+        let mut l = TransitionLinker::new(1);
+        assert!(l.begin(0, vec![rec(1.0)]).is_none());
+        assert!(l.rewards(0, &[-5.0]).is_empty());
+        let t = l.begin(0, vec![rec(2.0)]).unwrap();
+        assert_eq!((t.r, &t.s[..], &t.s2[..]), (-5.0, &[1.0][..], &[2.0][..]));
+    }
+
+    #[test]
+    fn reset_drops_pending() {
+        let mut l = TransitionLinker::new(1);
+        l.begin(0, vec![rec(1.0)]);
+        l.rewards(0, &[-1.0]);
+        l.reset();
+        assert!(l.begin(0, vec![rec(2.0)]).is_none());
+    }
+
+    #[test]
+    fn cadence_counts_and_caps() {
+        let mut c = Cadence::new(1, 10);
+        c.add(0, 25);
+        assert_eq!(c.take(0), 2);
+        assert_eq!(c.take(0), 0);
+        c.add(0, 5);
+        assert_eq!(c.take(0), 1); // 5 leftover + 5 = 10
+        // cap at 4 steps per tick
+        c.add(0, 1000);
+        assert_eq!(c.take(0), 4);
+        // disabled training
+        let mut c0 = Cadence::new(1, 0);
+        c0.add(0, 100);
+        assert_eq!(c0.take(0), 0);
+    }
+}

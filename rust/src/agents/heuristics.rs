@@ -1,0 +1,176 @@
+//! Non-learning sanity baselines beyond the paper's set: Random,
+//! RoundRobin, Local (no offloading), and LeastLoaded (live
+//! backlog-seconds greedy). Used by the ablation bench and tests to
+//! bracket the learning methods.
+
+use crate::env::{AigcTask, EdgeEnv};
+use crate::util::rng::Rng;
+
+use super::{Method, Scheduler};
+
+/// Uniform-random ES choice.
+pub struct RandomTs {
+    num_bs: usize,
+    rng: Rng,
+}
+
+impl RandomTs {
+    pub fn new(num_bs: usize, rng: Rng) -> Self {
+        Self { num_bs, rng }
+    }
+}
+
+impl Scheduler for RandomTs {
+    fn method(&self) -> Method {
+        Method::Random
+    }
+
+    fn decide(&mut self, _b: usize, tasks: &[AigcTask], _env: &EdgeEnv) -> Vec<usize> {
+        tasks
+            .iter()
+            .map(|_| self.rng.range_usize(0, self.num_bs - 1))
+            .collect()
+    }
+}
+
+/// Global round-robin across ESs.
+pub struct RoundRobinTs {
+    num_bs: usize,
+    next: usize,
+}
+
+impl RoundRobinTs {
+    pub fn new(num_bs: usize) -> Self {
+        Self { num_bs, next: 0 }
+    }
+}
+
+impl Scheduler for RoundRobinTs {
+    fn method(&self) -> Method {
+        Method::RoundRobin
+    }
+
+    fn decide(&mut self, _b: usize, tasks: &[AigcTask], _env: &EdgeEnv) -> Vec<usize> {
+        tasks
+            .iter()
+            .map(|_| {
+                let es = self.next;
+                self.next = (self.next + 1) % self.num_bs;
+                es
+            })
+            .collect()
+    }
+}
+
+/// Everything processed at the originating ES (the no-collaboration
+/// baseline — what a cloudless, non-cooperative edge would do).
+#[derive(Default)]
+pub struct LocalTs;
+
+impl LocalTs {
+    pub fn new() -> Self {
+        LocalTs
+    }
+}
+
+impl Scheduler for LocalTs {
+    fn method(&self) -> Method {
+        Method::Local
+    }
+
+    fn decide(&mut self, b: usize, tasks: &[AigcTask], _env: &EdgeEnv) -> Vec<usize> {
+        tasks.iter().map(|_| b).collect()
+    }
+}
+
+/// Greedy least-loaded: the ES with the fewest pending backlog-seconds
+/// (live intra-slot view, like Opt-TS but ignoring transmission and
+/// compute heterogeneity of the task itself).
+#[derive(Default)]
+pub struct LeastLoadedTs;
+
+impl LeastLoadedTs {
+    pub fn new() -> Self {
+        LeastLoadedTs
+    }
+}
+
+impl Scheduler for LeastLoadedTs {
+    fn method(&self) -> Method {
+        Method::LeastLoaded
+    }
+
+    fn sequential(&self) -> bool {
+        true
+    }
+
+    fn decide_one(&mut self, _task: &AigcTask, env: &EdgeEnv) -> usize {
+        let mut best = 0;
+        let mut best_load = f64::INFINITY;
+        for es in 0..env.cfg.num_bs {
+            let load = env.pending(es) / env.topo.f[es];
+            if load < best_load {
+                best_load = load;
+                best = es;
+            }
+        }
+        best
+    }
+
+    fn decide(&mut self, _b: usize, tasks: &[AigcTask], env: &EdgeEnv) -> Vec<usize> {
+        tasks.iter().map(|t| self.decide_one(t, env)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EnvConfig;
+
+    fn env4() -> EdgeEnv {
+        let mut cfg = EnvConfig::default();
+        cfg.num_bs = 4;
+        EdgeEnv::new(&cfg, 1)
+    }
+
+    #[test]
+    fn random_in_range() {
+        let env = env4();
+        let tasks = env.tasks()[0].clone();
+        let mut r = RandomTs::new(4, Rng::new(1));
+        for es in r.decide(0, &tasks, &env) {
+            assert!(es < 4);
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let env = env4();
+        let tasks: Vec<_> = env.tasks().iter().flatten().cloned().collect();
+        let mut rr = RoundRobinTs::new(4);
+        let picks = rr.decide(0, &tasks[..4.min(tasks.len())], &env);
+        for (i, es) in picks.iter().enumerate() {
+            assert_eq!(*es, i % 4);
+        }
+    }
+
+    #[test]
+    fn local_stays_home() {
+        let env = env4();
+        let tasks = env.tasks()[2].clone();
+        let mut l = LocalTs::new();
+        assert!(l.decide(2, &tasks, &env).iter().all(|&es| es == 2));
+    }
+
+    #[test]
+    fn least_loaded_avoids_busy_es() {
+        let mut env = env4();
+        let task = env.tasks()[0][0].clone();
+        let mut ll = LeastLoadedTs::new();
+        let first = ll.decide_one(&task, &env);
+        for _ in 0..500 {
+            env.assign(&task, first);
+        }
+        assert_ne!(ll.decide_one(&task, &env), first);
+    }
+}

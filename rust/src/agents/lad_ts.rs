@@ -1,0 +1,349 @@
+//! LAD-TS — the paper's method — and D2SAC-TS, its Gaussian-noise
+//! ablation (Du et al.), which shares the same LADN graphs.
+//!
+//! The agent is a per-BS soft actor-critic whose actor reverse-diffuses
+//! an action-probability vector (Theorem 2). LAD-TS seeds the diffusion
+//! from the stored latent X_b[n] and feeds the extended transition
+//! (s, x_I, a, r, s', x'_I); D2SAC-TS seeds from fresh N(0, I) each
+//! decision — that *is* the algorithmic difference the paper evaluates.
+//!
+//! Inference runs either natively (`nn::diffusion`, bit-compatible) or
+//! through the AOT `ladn_actor_fwd_*` graph (the deployed path);
+//! training always runs the `ladn_train_*` HLO via PJRT.
+
+use std::rc::Rc;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::config::{ActorLoss, AgentConfig, Backend};
+use crate::env::{AigcTask, EdgeEnv};
+use crate::nn::diffusion::{actor_forward, ActorScratch, BetaSchedule};
+use crate::nn::{Mat, Mlp};
+use crate::runtime::exec::BatchTensor;
+use crate::runtime::{ActorFwdExec, Manifest, Metrics, TrainExec, TrainState, XlaRuntime};
+use crate::util::rng::Rng;
+
+use super::drl_common::{Cadence, Rec, TransitionLinker};
+use super::latent::LatentMemory;
+use super::replay::ReplayBuffer;
+use super::{Method, Scheduler};
+
+pub struct LadTsAgent {
+    rt: Rc<XlaRuntime>,
+    cfg: AgentConfig,
+    b_dim: usize,
+    s_dim: usize,
+    latent_memory: bool,
+    /// Per-BS train states (single entry when share_params).
+    states: Vec<TrainState>,
+    /// Native actor mirrors, rebuilt after training.
+    mirrors: Vec<Mlp>,
+    sched: BetaSchedule,
+    temb_dim: usize,
+    fwd: Option<ActorFwdExec>,
+    train: TrainExec,
+    mem: LatentMemory,
+    replay: Vec<ReplayBuffer>,
+    linker: TransitionLinker,
+    cadence: Cadence,
+    rng: Rng,
+    scratch: ActorScratch,
+    last_metrics: Option<Metrics>,
+}
+
+impl LadTsAgent {
+    pub fn new(
+        rt: Rc<XlaRuntime>,
+        num_bs: usize,
+        cfg: &AgentConfig,
+        mut rng: Rng,
+        latent_memory: bool,
+    ) -> Result<Self> {
+        let b_dim = num_bs;
+        let s_dim = b_dim + 2;
+        ensure!(
+            cfg.hidden == rt.manifest.hidden,
+            "hidden={} but artifacts built with {}",
+            cfg.hidden,
+            rt.manifest.hidden
+        );
+        ensure!(
+            cfg.batch_k == rt.manifest.train_k,
+            "batch_k={} but artifacts built with {}",
+            cfg.batch_k,
+            rt.manifest.train_k
+        );
+        let train_name = Manifest::ladn_train(
+            b_dim,
+            cfg.denoise_steps,
+            cfg.alpha_autotune,
+            cfg.actor_loss == ActorLoss::Paper,
+        );
+        let train = TrainExec::new(&rt, &train_name).with_context(|| {
+            format!(
+                "LADN train graph '{train_name}' not in artifacts \
+                 (B={b_dim}, I={}; rebuild with aot.py)",
+                cfg.denoise_steps
+            )
+        })?;
+        let fwd_name = Manifest::ladn_fwd(b_dim, cfg.denoise_steps);
+        let fwd = match cfg.backend {
+            Backend::Xla => Some(ActorFwdExec::new(&rt, &fwd_name)?),
+            Backend::Native => None,
+        };
+
+        let n_states = if cfg.share_params { 1 } else { num_bs };
+        let mut states = Vec::with_capacity(n_states);
+        let mut mirrors = Vec::with_capacity(n_states);
+        for _ in 0..n_states {
+            let st = TrainState::init(&train.spec, cfg.alpha0, &mut rng)?;
+            let mirror = Mlp::from_flat(
+                b_dim + rt.manifest.temb_dim + s_dim,
+                cfg.hidden,
+                b_dim,
+                &st.mlp_tensors("actor")?,
+            )?;
+            states.push(st);
+            mirrors.push(mirror);
+        }
+        let sched = BetaSchedule::new(
+            cfg.denoise_steps,
+            rt.manifest.beta_min,
+            rt.manifest.beta_max,
+        );
+        let temb_dim = rt.manifest.temb_dim;
+        Ok(Self {
+            rt,
+            cfg: cfg.clone(),
+
+            b_dim,
+            s_dim,
+            latent_memory,
+            states,
+            mirrors,
+            sched,
+            temb_dim,
+            fwd,
+            train,
+            mem: LatentMemory::new(num_bs, b_dim),
+            replay: (0..num_bs).map(|_| ReplayBuffer::new(cfg.pool_size)).collect(),
+            linker: TransitionLinker::new(num_bs),
+            cadence: Cadence::new(num_bs, cfg.train_every),
+            rng,
+            scratch: ActorScratch::default(),
+            last_metrics: None,
+        })
+    }
+
+    fn state_idx(&self, b: usize) -> usize {
+        if self.cfg.share_params {
+            0
+        } else {
+            b
+        }
+    }
+
+    /// Draw the diffusion start: stored latent (LAD) or N(0,I) (D2SAC).
+    fn draw_x(&mut self, b: usize, n: usize) -> Vec<f32> {
+        if self.latent_memory {
+            self.mem.get(b, n, &mut self.rng).to_vec()
+        } else {
+            let mut v = vec![0.0f32; self.b_dim];
+            self.rng.fill_normal(&mut v);
+            v
+        }
+    }
+
+    /// Batched actor forward, native or XLA. Returns (x0, pi).
+    fn forward(&mut self, b: usize, x: Mat, s: &Mat) -> Result<(Mat, Mat)> {
+        let idx = self.state_idx(b);
+        match &self.fwd {
+            Some(exec) => {
+                let params = self.states[idx].mlp_tensors("actor")?;
+                exec.run(&params, Some(&x), s, Some(&mut self.rng))
+            }
+            None => {
+                let n = x.rows;
+                let mut x = x;
+                let noise: Vec<Mat> = (0..self.sched.steps())
+                    .map(|_| {
+                        let mut m = Mat::zeros(n, self.b_dim);
+                        self.rng.fill_normal(&mut m.data);
+                        m
+                    })
+                    .collect();
+                let pi = actor_forward(
+                    &self.mirrors[idx],
+                    &self.sched,
+                    self.temb_dim,
+                    &mut x,
+                    s,
+                    Some(&noise),
+                    &mut self.scratch,
+                );
+                Ok((x, pi))
+            }
+        }
+    }
+
+    fn rebuild_mirror(&mut self, idx: usize) -> Result<()> {
+        self.mirrors[idx] = Mlp::from_flat(
+            self.b_dim + self.temb_dim + self.s_dim,
+            self.cfg.hidden,
+            self.b_dim,
+            &self.states[idx].mlp_tensors("actor")?,
+        )?;
+        Ok(())
+    }
+
+    fn train_batch(&mut self, b: usize) -> Result<Metrics> {
+        let idx = self.state_idx(b);
+        let k = self.cfg.batch_k;
+        let i_steps = self.sched.steps();
+        let (s_dim, b_dim) = (self.s_dim, self.b_dim);
+        let samples = self.replay[b].sample(k, &mut self.rng);
+        let mut s = Vec::with_capacity(k * s_dim);
+        let mut x = Vec::with_capacity(k * b_dim);
+        let mut a = Vec::with_capacity(k);
+        let mut r = Vec::with_capacity(k);
+        let mut s2 = Vec::with_capacity(k * s_dim);
+        let mut x2 = Vec::with_capacity(k * b_dim);
+        for t in &samples {
+            s.extend_from_slice(&t.s);
+            x.extend_from_slice(&t.x);
+            a.push(t.a as i32);
+            r.push(t.r);
+            s2.extend_from_slice(&t.s2);
+            x2.extend_from_slice(&t.x2);
+        }
+        drop(samples);
+        let mut noise = vec![0.0f32; i_steps * k * b_dim];
+        let mut noise2 = vec![0.0f32; i_steps * k * b_dim];
+        self.rng.fill_normal(&mut noise);
+        self.rng.fill_normal(&mut noise2);
+        let batch = [
+            BatchTensor::F32(vec![k, s_dim], s),
+            BatchTensor::F32(vec![k, b_dim], x),
+            BatchTensor::I32(vec![k], a),
+            BatchTensor::F32(vec![k], r),
+            BatchTensor::F32(vec![k, s_dim], s2),
+            BatchTensor::F32(vec![k, b_dim], x2),
+            BatchTensor::F32(vec![i_steps, k, b_dim], noise),
+            BatchTensor::F32(vec![i_steps, k, b_dim], noise2),
+        ];
+        self.train.run(&mut self.states[idx], &batch)
+    }
+}
+
+impl Scheduler for LadTsAgent {
+    fn method(&self) -> Method {
+        if self.latent_memory {
+            Method::LadTs
+        } else {
+            Method::D2SacTs
+        }
+    }
+
+    fn decide(&mut self, b: usize, tasks: &[AigcTask], env: &EdgeEnv) -> Vec<usize> {
+        let n = tasks.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut s = Mat::zeros(n, self.s_dim);
+        let mut buf = Vec::with_capacity(self.s_dim);
+        for (i, task) in tasks.iter().enumerate() {
+            env.state_for(task, &mut buf);
+            s.row_mut(i).copy_from_slice(&buf);
+        }
+        let mut x = Mat::zeros(n, self.b_dim);
+        for i in 0..n {
+            let xi = self.draw_x(b, tasks[i].slot_index);
+            x.row_mut(i).copy_from_slice(&xi);
+        }
+        let x_start = x.clone();
+        let (x0, pi) = match self.forward(b, x, &s) {
+            Ok(v) => v,
+            Err(e) => {
+                log::error!("actor forward failed: {e:#}");
+                return tasks.iter().map(|t| t.origin).collect();
+            }
+        };
+        let mut actions = Vec::with_capacity(n);
+        let mut recs = Vec::with_capacity(n);
+        for i in 0..n {
+            let action = self.rng.categorical(pi.row(i));
+            actions.push(action);
+            if self.latent_memory {
+                self.mem.update(b, tasks[i].slot_index, x0.row(i));
+            }
+            recs.push(Rec {
+                s: s.row(i).to_vec(),
+                x: x_start.row(i).to_vec(),
+                a: action,
+                r: None,
+            });
+        }
+        if let Some(cross) = self.linker.begin(b, recs) {
+            self.replay[b].push(cross);
+        }
+        self.cadence.add(b, n);
+        actions
+    }
+
+    fn rewards(&mut self, b: usize, rewards: &[f64]) {
+        let scaled: Vec<f32> = rewards
+            .iter()
+            .map(|&r| (r * self.cfg.reward_scale) as f32)
+            .collect();
+        for t in self.linker.rewards(b, &scaled) {
+            self.replay[b].push(t);
+        }
+    }
+
+    fn train_tick(&mut self, b: usize) -> Result<Option<Metrics>> {
+        let steps = self.cadence.take(b);
+        if steps == 0 || self.replay[b].len() < self.cfg.warmup.max(self.cfg.batch_k)
+        {
+            return Ok(None);
+        }
+        let mut last = None;
+        for _ in 0..steps {
+            last = Some(self.train_batch(b)?);
+        }
+        if last.is_some() {
+            self.rebuild_mirror(self.state_idx(b))?;
+            self.last_metrics = last;
+        }
+        Ok(last)
+    }
+
+    fn end_episode(&mut self) {
+        // X_b persists across episodes (Algorithm 1 initialises it once,
+        // line 1); only dangling transition chains are dropped.
+        self.linker.reset();
+    }
+}
+
+impl LadTsAgent {
+    /// Current entropy temperature (diagnostics).
+    pub fn alpha(&self, b: usize) -> f32 {
+        self.states[self.state_idx(b)]
+            .scalar("log_alpha")
+            .map(|v| v.exp())
+            .unwrap_or(f32::NAN)
+    }
+
+    pub fn last_metrics(&self) -> Option<Metrics> {
+        self.last_metrics
+    }
+
+    /// Replay-pool fill level (diagnostics / tests).
+    pub fn pool_len(&self, b: usize) -> usize {
+        self.replay[b].len()
+    }
+
+    /// Expose the runtime for tests.
+    pub fn runtime(&self) -> &XlaRuntime {
+        &self.rt
+    }
+}

@@ -1,0 +1,91 @@
+//! The latent action memory X_b (§IV.A "Latent Action Diffusion
+//! Strategy"): per (BS, slot-index) storage of the last action
+//! probability iterate x_{b,n,t,0}, used to seed the next reverse
+//! diffusion instead of fresh Gaussian noise. Entries are lazily
+//! initialised from N(0, I) (Algorithm 1 line 1).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct LatentMemory {
+    b_dim: usize,
+    /// x[b][n] — grown on demand up to the largest observed N_{b,t}.
+    x: Vec<Vec<Vec<f32>>>,
+}
+
+impl LatentMemory {
+    pub fn new(num_bs: usize, b_dim: usize) -> Self {
+        Self { b_dim, x: vec![Vec::new(); num_bs] }
+    }
+
+    /// Fetch X_b[n], initialising from N(0,I) on first touch.
+    pub fn get(&mut self, b: usize, n: usize, rng: &mut Rng) -> &[f32] {
+        let slots = &mut self.x[b];
+        while slots.len() <= n {
+            let mut v = vec![0.0f32; self.b_dim];
+            rng.fill_normal(&mut v);
+            slots.push(v);
+        }
+        &slots[n][..]
+    }
+
+    /// Store X_b[n] <- x0 (Algorithm 1 line 12).
+    pub fn update(&mut self, b: usize, n: usize, x0: &[f32]) {
+        debug_assert_eq!(x0.len(), self.b_dim);
+        if n < self.x[b].len() {
+            self.x[b][n].copy_from_slice(x0);
+        }
+    }
+
+    /// Reset all entries (fresh episode with re-randomisation).
+    pub fn reset(&mut self) {
+        for slots in &mut self.x {
+            slots.clear();
+        }
+    }
+
+    pub fn stored(&self, b: usize) -> usize {
+        self.x[b].len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lazy_gaussian_init_then_persistent() {
+        let mut mem = LatentMemory::new(2, 4);
+        let mut rng = Rng::new(1);
+        let first = mem.get(0, 3, &mut rng).to_vec();
+        assert_eq!(mem.stored(0), 4);
+        assert!(first.iter().any(|&v| v != 0.0));
+        // second read returns the same values (no re-init)
+        assert_eq!(mem.get(0, 3, &mut rng), &first[..]);
+    }
+
+    #[test]
+    fn update_overwrites() {
+        let mut mem = LatentMemory::new(1, 3);
+        let mut rng = Rng::new(2);
+        let _ = mem.get(0, 0, &mut rng);
+        mem.update(0, 0, &[1.0, 2.0, 3.0]);
+        assert_eq!(mem.get(0, 0, &mut rng), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn update_beyond_stored_is_noop() {
+        let mut mem = LatentMemory::new(1, 2);
+        mem.update(0, 5, &[1.0, 1.0]); // nothing stored yet
+        assert_eq!(mem.stored(0), 0);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut mem = LatentMemory::new(1, 2);
+        let mut rng = Rng::new(3);
+        let _ = mem.get(0, 0, &mut rng);
+        mem.reset();
+        assert_eq!(mem.stored(0), 0);
+    }
+}

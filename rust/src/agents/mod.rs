@@ -1,0 +1,240 @@
+//! Scheduling agents: the paper's LAD-TS plus every baseline of §V.B
+//! (DQN-TS, SAC-TS, D2SAC-TS, Opt-TS) and additional sanity heuristics.
+//!
+//! Protocol per slot t (driven by `sim::runner`):
+//! 1. `decide(b, tasks, env)` — batched decisions for BS b's arrivals
+//!    (state = Eqn 6 with q_{t-1}, so batching is exact);
+//! 2. assignments execute in arrival order; the runner reports realized
+//!    rewards via `rewards(b, ...)`;
+//! 3. `train_tick(b)` — the periodic offline training of Algorithm 1
+//!    (runs the AOT HLO train-step graphs through PJRT);
+//! 4. sequential agents (Opt-TS, least-loaded) instead opt into
+//!    `decide_one` at assignment time with live queue knowledge.
+
+pub mod dqn_ts;
+pub mod drl_common;
+pub mod heuristics;
+pub mod lad_ts;
+pub mod latent;
+pub mod opt_ts;
+pub mod replay;
+pub mod sac_ts;
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::config::AgentConfig;
+use crate::env::{AigcTask, EdgeEnv};
+use crate::runtime::{Metrics, XlaRuntime};
+use crate::util::rng::Rng;
+
+/// All scheduling methods of the evaluation section.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// The paper's contribution (latent action diffusion SAC).
+    LadTs,
+    /// Diffusion SAC from Gaussian noise (Du et al.).
+    D2SacTs,
+    /// Discrete soft actor-critic.
+    SacTs,
+    /// Deep Q-network with epsilon-greedy.
+    DqnTs,
+    /// Greedy oracle enumerating all ESs with live queue knowledge.
+    OptTs,
+    Random,
+    RoundRobin,
+    /// Always process at the originating ES.
+    Local,
+    /// Send to the ES with the least pending work (in seconds).
+    LeastLoaded,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s.to_ascii_lowercase().replace('_', "-").as_str() {
+            "lad" | "lad-ts" | "ladts" => Method::LadTs,
+            "d2sac" | "d2sac-ts" => Method::D2SacTs,
+            "sac" | "sac-ts" => Method::SacTs,
+            "dqn" | "dqn-ts" => Method::DqnTs,
+            "opt" | "opt-ts" | "oracle" => Method::OptTs,
+            "random" => Method::Random,
+            "rr" | "round-robin" | "roundrobin" => Method::RoundRobin,
+            "local" => Method::Local,
+            "least-loaded" | "leastloaded" | "ll" => Method::LeastLoaded,
+            other => bail!("unknown method '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::LadTs => "LAD-TS",
+            Method::D2SacTs => "D2SAC-TS",
+            Method::SacTs => "SAC-TS",
+            Method::DqnTs => "DQN-TS",
+            Method::OptTs => "Opt-TS",
+            Method::Random => "Random",
+            Method::RoundRobin => "RoundRobin",
+            Method::Local => "Local",
+            Method::LeastLoaded => "LeastLoaded",
+        }
+    }
+
+    /// The four learning methods compared in Figs 5-7.
+    pub fn learners() -> [Method; 4] {
+        [Method::DqnTs, Method::SacTs, Method::D2SacTs, Method::LadTs]
+    }
+
+    /// Everything plotted in Fig 5 (learners + oracle).
+    pub fn fig5_set() -> [Method; 5] {
+        [
+            Method::DqnTs,
+            Method::SacTs,
+            Method::D2SacTs,
+            Method::LadTs,
+            Method::OptTs,
+        ]
+    }
+
+    pub fn is_learner(&self) -> bool {
+        matches!(
+            self,
+            Method::LadTs | Method::D2SacTs | Method::SacTs | Method::DqnTs
+        )
+    }
+}
+
+/// One stored experience tuple. For the diffusion agents the tuple is
+/// the paper's extended form (s, x_I, a, r, s', x'_I); `x`/`x2` are
+/// empty for SAC/DQN.
+#[derive(Clone, Debug)]
+pub struct Transition {
+    pub s: Vec<f32>,
+    pub x: Vec<f32>,
+    pub a: usize,
+    pub r: f32,
+    pub s2: Vec<f32>,
+    pub x2: Vec<f32>,
+}
+
+/// A task scheduler (one per method; internally per-BS agents).
+pub trait Scheduler {
+    fn method(&self) -> Method;
+
+    /// Batched decision for BS `b`'s slot arrivals. Returns one ES
+    /// index per task.
+    fn decide(&mut self, b: usize, tasks: &[AigcTask], env: &EdgeEnv) -> Vec<usize>;
+
+    /// True if the agent decides per task at assignment time with live
+    /// queue state (Opt-TS, LeastLoaded).
+    fn sequential(&self) -> bool {
+        false
+    }
+
+    /// Sequential decision (only called when `sequential()`).
+    fn decide_one(&mut self, _task: &AigcTask, _env: &EdgeEnv) -> usize {
+        unreachable!("not a sequential scheduler")
+    }
+
+    /// Realized rewards (Eqn 9, unscaled: -T_serv) for the tasks of the
+    /// latest `decide(b, ...)`, in the same order.
+    fn rewards(&mut self, _b: usize, _rewards: &[f64]) {}
+
+    /// Periodic offline training (Algorithm 1 lines 15-18); called once
+    /// per (BS, slot). Returns metrics when train steps ran.
+    fn train_tick(&mut self, _b: usize) -> Result<Option<Metrics>> {
+        Ok(None)
+    }
+
+    /// Episode boundary (env reset follows).
+    fn end_episode(&mut self) {}
+}
+
+/// Instantiate a scheduler. Learning methods require the AOT runtime;
+/// heuristics and the oracle do not.
+pub fn make_scheduler(
+    method: Method,
+    num_bs: usize,
+    cfg: &AgentConfig,
+    runtime: Option<Rc<XlaRuntime>>,
+    seed: u64,
+) -> Result<Box<dyn Scheduler>> {
+    let rng = Rng::new(seed);
+    Ok(match method {
+        Method::LadTs => Box::new(lad_ts::LadTsAgent::new(
+            runtime_required(runtime, method)?,
+            num_bs,
+            cfg,
+            rng,
+            /*latent_memory=*/ true,
+        )?),
+        Method::D2SacTs => Box::new(lad_ts::LadTsAgent::new(
+            runtime_required(runtime, method)?,
+            num_bs,
+            cfg,
+            rng,
+            /*latent_memory=*/ false,
+        )?),
+        Method::SacTs => Box::new(sac_ts::SacTsAgent::new(
+            runtime_required(runtime, method)?,
+            num_bs,
+            cfg,
+            rng,
+        )?),
+        Method::DqnTs => Box::new(dqn_ts::DqnTsAgent::new(
+            runtime_required(runtime, method)?,
+            num_bs,
+            cfg,
+            rng,
+        )?),
+        Method::OptTs => Box::new(opt_ts::OptTs::new()),
+        Method::Random => Box::new(heuristics::RandomTs::new(num_bs, rng)),
+        Method::RoundRobin => Box::new(heuristics::RoundRobinTs::new(num_bs)),
+        Method::Local => Box::new(heuristics::LocalTs::new()),
+        Method::LeastLoaded => Box::new(heuristics::LeastLoadedTs::new()),
+    })
+}
+
+fn runtime_required(
+    runtime: Option<Rc<XlaRuntime>>,
+    method: Method,
+) -> Result<Rc<XlaRuntime>> {
+    match runtime {
+        Some(rt) => Ok(rt),
+        None => bail!(
+            "{} needs the AOT artifacts (run `make artifacts`)",
+            method.name()
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parsing_aliases() {
+        assert_eq!(Method::parse("lad-ts").unwrap(), Method::LadTs);
+        assert_eq!(Method::parse("LAD_TS").unwrap(), Method::LadTs);
+        assert_eq!(Method::parse("d2sac").unwrap(), Method::D2SacTs);
+        assert_eq!(Method::parse("oracle").unwrap(), Method::OptTs);
+        assert_eq!(Method::parse("ll").unwrap(), Method::LeastLoaded);
+        assert!(Method::parse("nope").is_err());
+    }
+
+    #[test]
+    fn learner_partition() {
+        assert!(Method::LadTs.is_learner());
+        assert!(!Method::OptTs.is_learner());
+        assert_eq!(Method::learners().len(), 4);
+        assert!(Method::fig5_set().contains(&Method::OptTs));
+    }
+
+    #[test]
+    fn learners_without_runtime_fail_cleanly() {
+        let cfg = AgentConfig::default();
+        let err = make_scheduler(Method::LadTs, 4, &cfg, None, 1);
+        assert!(err.is_err());
+        assert!(make_scheduler(Method::OptTs, 4, &cfg, None, 1).is_ok());
+    }
+}

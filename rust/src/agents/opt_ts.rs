@@ -1,0 +1,87 @@
+//! Opt-TS: the heuristic-optimal baseline (§V.B). Selects the ES
+//! minimising the task's Eqn-2 service delay by enumerating the whole
+//! action space with *live* knowledge of every ES's compute capacity,
+//! link rates, and intra-slot queue build-up — information a real
+//! distributed scheduler cannot have, which is why the paper treats it
+//! as the performance upper bound.
+
+use crate::env::{AigcTask, EdgeEnv};
+
+use super::{Method, Scheduler};
+
+#[derive(Default)]
+pub struct OptTs;
+
+impl OptTs {
+    pub fn new() -> Self {
+        OptTs
+    }
+
+    fn best_es(task: &AigcTask, env: &EdgeEnv) -> usize {
+        let mut best = 0usize;
+        let mut best_delay = f64::INFINITY;
+        for es in 0..env.cfg.num_bs {
+            let d = env.peek_delay(task, es).total();
+            if d < best_delay {
+                best_delay = d;
+                best = es;
+            }
+        }
+        best
+    }
+}
+
+impl Scheduler for OptTs {
+    fn method(&self) -> Method {
+        Method::OptTs
+    }
+
+    fn sequential(&self) -> bool {
+        true
+    }
+
+    fn decide_one(&mut self, task: &AigcTask, env: &EdgeEnv) -> usize {
+        Self::best_es(task, env)
+    }
+
+    /// Batched fallback (used only if a caller ignores `sequential`).
+    fn decide(&mut self, _b: usize, tasks: &[AigcTask], env: &EdgeEnv) -> Vec<usize> {
+        tasks.iter().map(|t| Self::best_es(t, env)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EnvConfig;
+
+    #[test]
+    fn picks_min_peek_delay() {
+        let mut cfg = EnvConfig::default();
+        cfg.num_bs = 5;
+        let env = EdgeEnv::new(&cfg, 7);
+        let task = env.tasks()[0][0].clone();
+        let mut opt = OptTs::new();
+        let es = opt.decide_one(&task, &env);
+        let d_best = env.peek_delay(&task, es).total();
+        for other in 0..cfg.num_bs {
+            assert!(d_best <= env.peek_delay(&task, other).total() + 1e-12);
+        }
+    }
+
+    #[test]
+    fn adapts_to_queue_buildup() {
+        let mut cfg = EnvConfig::default();
+        cfg.num_bs = 3;
+        let mut env = EdgeEnv::new(&cfg, 8);
+        let task = env.tasks()[0][0].clone();
+        let mut opt = OptTs::new();
+        let first = opt.decide_one(&task, &env);
+        // pile work onto the chosen ES until it is no longer optimal
+        for _ in 0..500 {
+            env.assign(&task, first);
+        }
+        let second = opt.decide_one(&task, &env);
+        assert_ne!(first, second, "oracle must react to live backlog");
+    }
+}

@@ -1,0 +1,110 @@
+//! Experience pool R_b (Algorithm 1): a ring buffer of transitions with
+//! uniform sampling.
+
+use crate::util::rng::Rng;
+
+use super::Transition;
+
+/// Fixed-capacity ring buffer.
+#[derive(Clone, Debug)]
+pub struct ReplayBuffer {
+    capacity: usize,
+    items: Vec<Transition>,
+    next: usize,
+}
+
+impl ReplayBuffer {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self { capacity, items: Vec::with_capacity(capacity), next: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn push(&mut self, t: Transition) {
+        if self.items.len() < self.capacity {
+            self.items.push(t);
+        } else {
+            self.items[self.next] = t;
+        }
+        self.next = (self.next + 1) % self.capacity;
+    }
+
+    /// Sample `k` transitions uniformly with replacement-free indices
+    /// when k <= len, otherwise with replacement (warm-up edge case).
+    pub fn sample<'a>(&'a self, k: usize, rng: &mut Rng) -> Vec<&'a Transition> {
+        if self.items.is_empty() {
+            return Vec::new();
+        }
+        if k <= self.items.len() {
+            rng.sample_indices(self.items.len(), k)
+                .into_iter()
+                .map(|i| &self.items[i])
+                .collect()
+        } else {
+            (0..k)
+                .map(|_| &self.items[rng.range_usize(0, self.items.len() - 1)])
+                .collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(r: f32) -> Transition {
+        Transition {
+            s: vec![r],
+            x: vec![],
+            a: 0,
+            r,
+            s2: vec![r],
+            x2: vec![],
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let mut rb = ReplayBuffer::new(3);
+        for i in 0..5 {
+            rb.push(t(i as f32));
+        }
+        assert_eq!(rb.len(), 3);
+        let rewards: Vec<f32> = rb.items.iter().map(|x| x.r).collect();
+        // 0 and 1 evicted; 3,4 wrapped over them
+        assert!(rewards.contains(&2.0));
+        assert!(rewards.contains(&3.0));
+        assert!(rewards.contains(&4.0));
+    }
+
+    #[test]
+    fn sample_distinct_when_possible() {
+        let mut rb = ReplayBuffer::new(100);
+        for i in 0..50 {
+            rb.push(t(i as f32));
+        }
+        let mut rng = Rng::new(1);
+        let s = rb.sample(20, &mut rng);
+        assert_eq!(s.len(), 20);
+        let mut rs: Vec<f32> = s.iter().map(|x| x.r).collect();
+        rs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        rs.dedup();
+        assert_eq!(rs.len(), 20, "sampling without replacement");
+    }
+
+    #[test]
+    fn sample_small_pool_with_replacement() {
+        let mut rb = ReplayBuffer::new(10);
+        rb.push(t(1.0));
+        let mut rng = Rng::new(2);
+        assert_eq!(rb.sample(4, &mut rng).len(), 4);
+        assert!(ReplayBuffer::new(5).sample(3, &mut rng).is_empty());
+    }
+}

@@ -1,0 +1,202 @@
+//! SAC-TS baseline: discrete soft actor-critic with a categorical MLP
+//! actor (Haarnoja et al., as instantiated in the paper's §V.B).
+
+use std::rc::Rc;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::config::{AgentConfig, Backend};
+use crate::env::{AigcTask, EdgeEnv};
+use crate::nn::{Mat, Mlp, MlpScratch};
+use crate::runtime::exec::BatchTensor;
+use crate::runtime::{ActorFwdExec, Manifest, Metrics, TrainExec, TrainState, XlaRuntime};
+use crate::util::rng::Rng;
+
+use super::drl_common::{Cadence, Rec, TransitionLinker};
+use super::replay::ReplayBuffer;
+use super::{Method, Scheduler};
+
+pub struct SacTsAgent {
+    cfg: AgentConfig,
+    b_dim: usize,
+    s_dim: usize,
+    states: Vec<TrainState>,
+    mirrors: Vec<Mlp>,
+    fwd: Option<ActorFwdExec>,
+    train: TrainExec,
+    replay: Vec<ReplayBuffer>,
+    linker: TransitionLinker,
+    cadence: Cadence,
+    rng: Rng,
+    scratch: MlpScratch,
+}
+
+impl SacTsAgent {
+    pub fn new(
+        rt: Rc<XlaRuntime>,
+        num_bs: usize,
+        cfg: &AgentConfig,
+        mut rng: Rng,
+    ) -> Result<Self> {
+        let b_dim = num_bs;
+        let s_dim = b_dim + 2;
+        ensure!(cfg.hidden == rt.manifest.hidden, "hidden mismatch");
+        let train = TrainExec::new(&rt, &Manifest::sac_train(b_dim))
+            .with_context(|| format!("SAC train graph for B={b_dim}"))?;
+        let fwd = match cfg.backend {
+            Backend::Xla => Some(ActorFwdExec::new(&rt, &Manifest::sac_fwd(b_dim))?),
+            Backend::Native => None,
+        };
+        let n_states = if cfg.share_params { 1 } else { num_bs };
+        let mut states = Vec::with_capacity(n_states);
+        let mut mirrors = Vec::with_capacity(n_states);
+        for _ in 0..n_states {
+            let st = TrainState::init(&train.spec, cfg.alpha0, &mut rng)?;
+            mirrors.push(Mlp::from_flat(
+                s_dim,
+                cfg.hidden,
+                b_dim,
+                &st.mlp_tensors("actor")?,
+            )?);
+            states.push(st);
+        }
+        Ok(Self {
+            cfg: cfg.clone(),
+            b_dim,
+            s_dim,
+            states,
+            mirrors,
+            fwd,
+            train,
+            replay: (0..num_bs)
+                .map(|_| ReplayBuffer::new(cfg.pool_size))
+                .collect(),
+            linker: TransitionLinker::new(num_bs),
+            cadence: Cadence::new(num_bs, cfg.train_every),
+            rng,
+            scratch: MlpScratch::default(),
+        })
+    }
+
+    fn state_idx(&self, b: usize) -> usize {
+        if self.cfg.share_params {
+            0
+        } else {
+            b
+        }
+    }
+
+    fn policy(&mut self, b: usize, s: &Mat) -> Result<Mat> {
+        let idx = self.state_idx(b);
+        match &self.fwd {
+            Some(exec) => {
+                let params = self.states[idx].mlp_tensors("actor")?;
+                let (_logits, pi) = exec.run(&params, None, s, None)?;
+                Ok(pi)
+            }
+            None => {
+                let mut logits = Mat::default();
+                self.mirrors[idx].forward_into(s, &mut self.scratch, &mut logits);
+                logits.softmax_rows_inplace();
+                Ok(logits)
+            }
+        }
+    }
+}
+
+impl Scheduler for SacTsAgent {
+    fn method(&self) -> Method {
+        Method::SacTs
+    }
+
+    fn decide(&mut self, b: usize, tasks: &[AigcTask], env: &EdgeEnv) -> Vec<usize> {
+        let n = tasks.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut s = Mat::zeros(n, self.s_dim);
+        let mut buf = Vec::with_capacity(self.s_dim);
+        for (i, task) in tasks.iter().enumerate() {
+            env.state_for(task, &mut buf);
+            s.row_mut(i).copy_from_slice(&buf);
+        }
+        let pi = match self.policy(b, &s) {
+            Ok(pi) => pi,
+            Err(e) => {
+                log::error!("SAC policy failed: {e:#}");
+                return tasks.iter().map(|t| t.origin).collect();
+            }
+        };
+        let mut actions = Vec::with_capacity(n);
+        let mut recs = Vec::with_capacity(n);
+        for i in 0..n {
+            let action = self.rng.categorical(pi.row(i));
+            actions.push(action);
+            recs.push(Rec {
+                s: s.row(i).to_vec(),
+                x: Vec::new(),
+                a: action,
+                r: None,
+            });
+        }
+        if let Some(cross) = self.linker.begin(b, recs) {
+            self.replay[b].push(cross);
+        }
+        self.cadence.add(b, n);
+        actions
+    }
+
+    fn rewards(&mut self, b: usize, rewards: &[f64]) {
+        let scaled: Vec<f32> = rewards
+            .iter()
+            .map(|&r| (r * self.cfg.reward_scale) as f32)
+            .collect();
+        for t in self.linker.rewards(b, &scaled) {
+            self.replay[b].push(t);
+        }
+    }
+
+    fn train_tick(&mut self, b: usize) -> Result<Option<Metrics>> {
+        let steps = self.cadence.take(b);
+        if steps == 0
+            || self.replay[b].len() < self.cfg.warmup.max(self.cfg.batch_k)
+        {
+            return Ok(None);
+        }
+        let idx = self.state_idx(b);
+        let k = self.cfg.batch_k;
+        let mut last = None;
+        for _ in 0..steps {
+            let samples = self.replay[b].sample(k, &mut self.rng);
+            let mut s = Vec::with_capacity(k * self.s_dim);
+            let mut a = Vec::with_capacity(k);
+            let mut r = Vec::with_capacity(k);
+            let mut s2 = Vec::with_capacity(k * self.s_dim);
+            for t in &samples {
+                s.extend_from_slice(&t.s);
+                a.push(t.a as i32);
+                r.push(t.r);
+                s2.extend_from_slice(&t.s2);
+            }
+            drop(samples);
+            let batch = [
+                BatchTensor::F32(vec![k, self.s_dim], s),
+                BatchTensor::I32(vec![k], a),
+                BatchTensor::F32(vec![k], r),
+                BatchTensor::F32(vec![k, self.s_dim], s2),
+            ];
+            last = Some(self.train.run(&mut self.states[idx], &batch)?);
+        }
+        self.mirrors[idx] = Mlp::from_flat(
+            self.s_dim,
+            self.cfg.hidden,
+            self.b_dim,
+            &self.states[idx].mlp_tensors("actor")?,
+        )?;
+        Ok(last)
+    }
+
+    fn end_episode(&mut self) {
+        self.linker.reset();
+    }
+}

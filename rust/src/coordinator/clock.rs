@@ -1,0 +1,45 @@
+//! Serving clocks: real wallclock, or the calibrated virtual Jetson
+//! clock used to reproduce Table V at full scale (1000 images on 5
+//! virtual Jetsons would take ~65 wall-minutes of real compute; the
+//! virtual clock reproduces the *timing model* — per-step cost × z_n —
+//! while the real clock drives actual PJRT compute in `serve`).
+
+/// Jetson AGX Orin latency calibration (from the paper's own
+/// measurement: DEdgeAI single-image median 18.3 s at the default
+/// quality): t_image(z) = ENCODE_S + z * STEP_S.
+pub const JETSON_ENCODE_S: f64 = 1.0;
+pub const JETSON_STEP_S: f64 = 1.153;
+/// Default quality demand in the test-bed runs.
+pub const DEFAULT_Z: usize = 15;
+
+/// LAN transfer model (Gigabit wired, §VI.A): prompt up + image down.
+pub const LAN_RTT_S: f64 = 0.002;
+pub const LAN_RATE_BPS: f64 = 1.0e9;
+
+/// Per-image generation time on a virtual Jetson.
+pub fn jetson_image_seconds(z: usize) -> f64 {
+    JETSON_ENCODE_S + z as f64 * JETSON_STEP_S
+}
+
+/// LAN transfer seconds for `bits` of payload.
+pub fn lan_seconds(bits: f64) -> f64 {
+    LAN_RTT_S + bits / LAN_RATE_BPS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_hits_paper_single_image_median() {
+        // Table V: DEdgeAI |N|=1 median = 18.3 s.
+        let t = jetson_image_seconds(DEFAULT_Z);
+        assert!((t - 18.3).abs() < 0.05, "t={t}");
+    }
+
+    #[test]
+    fn lan_transfer_fast_but_nonzero() {
+        let t = lan_seconds(8e5); // a generated image (~0.8 Mbit)
+        assert!(t > 0.0 && t < 0.01);
+    }
+}

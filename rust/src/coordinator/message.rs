@@ -1,0 +1,54 @@
+//! Wire types between router and workers.
+
+/// One text-to-image request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: String,
+    /// Generation-quality demand z_n (denoising steps).
+    pub z: usize,
+    /// Submission time (seconds on the serving clock).
+    pub submitted_at: f64,
+}
+
+/// Completed generation.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub worker: usize,
+    /// End-to-end latency (submission -> result), seconds.
+    pub latency: f64,
+    /// Time spent in the worker queue, seconds.
+    pub queue_wait: f64,
+    /// Pure generation time, seconds.
+    pub gen_time: f64,
+    /// Checksum of the produced latent (integrity check; proves the
+    /// compute actually ran through PJRT).
+    pub checksum: f32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip_fields() {
+        let r = Request {
+            id: 7,
+            prompt: "a dog".into(),
+            z: 15,
+            submitted_at: 1.5,
+        };
+        assert_eq!(r.id, 7);
+        assert_eq!(r.z, 15);
+        let resp = Response {
+            id: r.id,
+            worker: 2,
+            latency: 18.3,
+            queue_wait: 0.0,
+            gen_time: 18.3,
+            checksum: 0.5,
+        };
+        assert_eq!(resp.id, r.id);
+    }
+}

@@ -1,0 +1,136 @@
+//! Serving metrics: latency distribution, throughput, per-worker load.
+
+use crate::util::stats::{percentile, Welford};
+
+use super::message::Response;
+
+#[derive(Clone, Debug)]
+pub struct ServeMetrics {
+    latencies: Vec<f64>,
+    queue_waits: Welford,
+    gen_times: Welford,
+    per_worker: Vec<u64>,
+    first_submit: f64,
+    last_complete: f64,
+}
+
+impl ServeMetrics {
+    pub fn new(workers: usize) -> Self {
+        Self {
+            latencies: Vec::new(),
+            queue_waits: Welford::new(),
+            gen_times: Welford::new(),
+            per_worker: vec![0; workers],
+            first_submit: f64::INFINITY,
+            last_complete: 0.0,
+        }
+    }
+
+    pub fn record(&mut self, resp: &Response, completed_at: f64) {
+        self.latencies.push(resp.latency);
+        self.queue_waits.push(resp.queue_wait);
+        self.gen_times.push(resp.gen_time);
+        if resp.worker < self.per_worker.len() {
+            self.per_worker[resp.worker] += 1;
+        }
+        self.first_submit = self
+            .first_submit
+            .min(completed_at - resp.latency);
+        self.last_complete = self.last_complete.max(completed_at);
+    }
+
+    pub fn count(&self) -> usize {
+        self.latencies.len()
+    }
+
+    pub fn median_latency(&self) -> f64 {
+        percentile(&self.latencies, 50.0)
+    }
+
+    pub fn p95_latency(&self) -> f64 {
+        percentile(&self.latencies, 95.0)
+    }
+
+    pub fn mean_queue_wait(&self) -> f64 {
+        self.queue_waits.mean()
+    }
+
+    pub fn mean_gen_time(&self) -> f64 {
+        self.gen_times.mean()
+    }
+
+    /// Total makespan: first submission to last completion (the "total
+    /// generation delay" of Table V).
+    pub fn makespan(&self) -> f64 {
+        if self.latencies.is_empty() {
+            0.0
+        } else {
+            self.last_complete - self.first_submit
+        }
+    }
+
+    /// Images per second over the makespan.
+    pub fn throughput(&self) -> f64 {
+        let m = self.makespan();
+        if m > 0.0 {
+            self.count() as f64 / m
+        } else {
+            0.0
+        }
+    }
+
+    /// Load-balance factor: max/mean per-worker completions (1.0 =
+    /// perfectly balanced).
+    pub fn imbalance(&self) -> f64 {
+        let max = *self.per_worker.iter().max().unwrap_or(&0) as f64;
+        let mean =
+            self.per_worker.iter().sum::<u64>() as f64 / self.per_worker.len() as f64;
+        if mean > 0.0 {
+            max / mean
+        } else {
+            0.0
+        }
+    }
+
+    pub fn per_worker(&self) -> &[u64] {
+        &self.per_worker
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resp(id: u64, worker: usize, latency: f64) -> Response {
+        Response {
+            id,
+            worker,
+            latency,
+            queue_wait: latency * 0.3,
+            gen_time: latency * 0.7,
+            checksum: 0.0,
+        }
+    }
+
+    #[test]
+    fn aggregates_latency_and_makespan() {
+        let mut m = ServeMetrics::new(2);
+        m.record(&resp(0, 0, 10.0), 10.0); // submitted at 0
+        m.record(&resp(1, 1, 10.0), 15.0); // submitted at 5
+        assert_eq!(m.count(), 2);
+        assert!((m.median_latency() - 10.0).abs() < 1e-9);
+        assert!((m.makespan() - 15.0).abs() < 1e-9);
+        assert!((m.throughput() - 2.0 / 15.0).abs() < 1e-9);
+        assert_eq!(m.per_worker(), &[1, 1]);
+        assert!((m.imbalance() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn imbalance_detects_skew() {
+        let mut m = ServeMetrics::new(2);
+        for i in 0..4 {
+            m.record(&resp(i, 0, 1.0), i as f64);
+        }
+        assert_eq!(m.imbalance(), 2.0);
+    }
+}

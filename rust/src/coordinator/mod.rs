@@ -1,0 +1,31 @@
+//! DEdgeAI — the serving prototype (§VI).
+//!
+//! The paper's testbed is five Jetson AGX Orin devices on a Gigabit LAN
+//! serving reSD3-m. Here (DESIGN.md §2 substitutions) the same
+//! architecture runs as threads in one process:
+//!
+//! - [`worker`]: one thread per "Jetson", owning its own PJRT client
+//!   and executing the AOT generation model (`genmodel_*` HLO, Pallas
+//!   kernel inside) for `z_n` denoising steps per request;
+//! - [`router`]: the dispatcher implementing the scheduling policy
+//!   (least-loaded, round-robin, or the LADN diffusion actor via the
+//!   B=5 artifacts — the paper's scheduler-per-device);
+//! - [`clock`]: real wallclock or the calibrated virtual Jetson clock
+//!   used by Table V;
+//! - [`platforms`]: the five commercial-platform latency/price models
+//!   of Table V; [`models`]: the SD3-m vs reSD3-m memory registry;
+//! - [`corpus`]: the synthetic caption corpus standing in for Flickr8k.
+
+pub mod clock;
+pub mod corpus;
+pub mod message;
+pub mod metrics;
+pub mod models;
+pub mod platforms;
+pub mod router;
+pub mod service;
+pub mod worker;
+
+pub use message::{Request, Response};
+pub use metrics::ServeMetrics;
+pub use service::{serve_and_report, DEdgeAi, ServeOptions};

@@ -1,0 +1,216 @@
+//! Request router: the per-device scheduler of the DEdgeAI prototype.
+//!
+//! Policies:
+//! - `RoundRobin` — naive spreading;
+//! - `LeastLoaded` — dispatch to the worker with the fewest pending
+//!   denoise-steps (what a converged LAD-TS policy approximates);
+//! - `LadTs` — the paper's scheduler: the LADN diffusion actor runs on
+//!   the request path through the AOT `ladn_actor_fwd_b{W}` graph
+//!   (PJRT), seeded from the latent action memory; parameters come
+//!   from a training checkpoint when provided, otherwise fresh init
+//!   (the online system would keep training them).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::agents::latent::LatentMemory;
+use crate::nn::Mat;
+use crate::runtime::{ActorFwdExec, Manifest, TrainState, XlaRuntime};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::message::Request;
+
+/// Routing policy selector.
+pub enum Policy {
+    RoundRobin,
+    LeastLoaded,
+    LadTs(Box<LadPolicy>),
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::RoundRobin => "round-robin",
+            Policy::LeastLoaded => "least-loaded",
+            Policy::LadTs(_) => "LAD-TS (LADN via PJRT)",
+        }
+    }
+}
+
+/// The LADN actor wired to the routing state space.
+pub struct LadPolicy {
+    exec: ActorFwdExec,
+    state: TrainState,
+    mem: LatentMemory,
+    rng: Rng,
+    workers: usize,
+    /// Max prompt bits / steps used for state normalisation.
+    norm_steps: f64,
+}
+
+impl LadPolicy {
+    /// Build from artifacts; requires the `ladn_actor_fwd_b{workers}`
+    /// graph (aot.py emits B=5 for the five-Jetson prototype).
+    pub fn new(
+        rt: &XlaRuntime,
+        workers: usize,
+        checkpoint: Option<&Path>,
+        seed: u64,
+    ) -> Result<Self> {
+        let fwd_name = Manifest::ladn_fwd(workers, 5);
+        let exec = ActorFwdExec::new(rt, &fwd_name).with_context(|| {
+            format!("LADN graph for {workers} workers not in artifacts")
+        })?;
+        let train_spec = rt
+            .manifest
+            .graph(&Manifest::ladn_train(workers, 5, true, false))?
+            .clone();
+        let mut rng = Rng::new(seed);
+        let mut state = TrainState::init(&train_spec, 0.05, &mut rng)?;
+        if let Some(path) = checkpoint {
+            state.load_json(&Json::read_file(path)?)?;
+            log::info!("router: loaded LADN checkpoint {}", path.display());
+        }
+        Ok(Self {
+            exec,
+            state,
+            mem: LatentMemory::new(1, workers),
+            rng,
+            workers,
+            norm_steps: 15.0,
+        })
+    }
+
+    /// One routing decision via reverse diffusion on the PJRT path.
+    fn pick(&mut self, req: &Request, pending_steps: &[f64]) -> Result<usize> {
+        let s_dim = self.workers + 2;
+        let mut s = Mat::zeros(1, s_dim);
+        s.set(0, 0, (req.prompt.len() as f32 / 64.0).min(1.0));
+        s.set(0, 1, req.z as f32 / self.norm_steps as f32);
+        for (w, &p) in pending_steps.iter().enumerate() {
+            s.set(0, 2 + w, (p / (self.norm_steps * 10.0)) as f32);
+        }
+        let slot = (req.id % 64) as usize;
+        let mut x = Mat::zeros(1, self.workers);
+        x.row_mut(0)
+            .copy_from_slice(self.mem.get(0, slot, &mut self.rng));
+        let params = self.state.mlp_tensors("actor")?;
+        let (x0, pi) =
+            self.exec
+                .run(&params, Some(&x), &s, Some(&mut self.rng))?;
+        self.mem.update(0, slot, x0.row(0));
+        Ok(self.rng.categorical(pi.row(0)))
+    }
+}
+
+/// Tracks per-worker outstanding work and applies the policy.
+pub struct Router {
+    policy: Policy,
+    /// Estimated pending denoise-steps per worker.
+    pending_steps: Vec<f64>,
+    dispatched: Vec<u64>,
+    rr_next: usize,
+}
+
+impl Router {
+    pub fn new(policy: Policy, workers: usize) -> Self {
+        Self {
+            policy,
+            pending_steps: vec![0.0; workers],
+            dispatched: vec![0; workers],
+            rr_next: 0,
+        }
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Choose a worker for `req` and account its load.
+    pub fn dispatch(&mut self, req: &Request) -> Result<usize> {
+        let w = match &mut self.policy {
+            Policy::RoundRobin => {
+                let w = self.rr_next;
+                self.rr_next = (self.rr_next + 1) % self.pending_steps.len();
+                w
+            }
+            Policy::LeastLoaded => {
+                let mut best = 0;
+                let mut best_p = f64::INFINITY;
+                for (w, &p) in self.pending_steps.iter().enumerate() {
+                    if p < best_p {
+                        best_p = p;
+                        best = w;
+                    }
+                }
+                best
+            }
+            Policy::LadTs(lad) => lad.pick(req, &self.pending_steps)?,
+        };
+        if w >= self.pending_steps.len() {
+            bail!("policy picked invalid worker {w}");
+        }
+        self.pending_steps[w] += req.z as f64;
+        self.dispatched[w] += 1;
+        Ok(w)
+    }
+
+    /// Worker completed a job of `z` steps.
+    pub fn complete(&mut self, worker: usize, z: usize) {
+        self.pending_steps[worker] =
+            (self.pending_steps[worker] - z as f64).max(0.0);
+    }
+
+    pub fn pending(&self) -> &[f64] {
+        &self.pending_steps
+    }
+
+    pub fn dispatched(&self) -> &[u64] {
+        &self.dispatched
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, z: usize) -> Request {
+        Request {
+            id,
+            prompt: "p".into(),
+            z,
+            submitted_at: 0.0,
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(Policy::RoundRobin, 3);
+        let picks: Vec<usize> =
+            (0..6).map(|i| r.dispatch(&req(i, 5)).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        assert_eq!(r.dispatched(), &[2, 2, 2]);
+    }
+
+    #[test]
+    fn least_loaded_balances_by_steps() {
+        let mut r = Router::new(Policy::LeastLoaded, 2);
+        assert_eq!(r.dispatch(&req(0, 10)).unwrap(), 0);
+        // worker 0 now has 10 steps pending -> next goes to 1
+        assert_eq!(r.dispatch(&req(1, 2)).unwrap(), 1);
+        // worker 1 only has 2 -> next again to 1
+        assert_eq!(r.dispatch(&req(2, 2)).unwrap(), 1);
+        r.complete(0, 10);
+        assert_eq!(r.dispatch(&req(3, 1)).unwrap(), 0);
+        assert_eq!(r.pending(), &[1.0, 4.0]);
+    }
+
+    #[test]
+    fn completion_never_goes_negative() {
+        let mut r = Router::new(Policy::RoundRobin, 1);
+        r.complete(0, 99);
+        assert_eq!(r.pending(), &[0.0]);
+    }
+}

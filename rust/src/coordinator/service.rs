@@ -1,0 +1,257 @@
+//! DEdgeAI service assembly: spawn the worker fleet, drive the router,
+//! collect responses — in real time (actual PJRT compute per request)
+//! or on the calibrated virtual Jetson clock (Table V scale).
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::channel;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::XlaRuntime;
+use crate::util::rng::Rng;
+use crate::util::table::{fnum, Table};
+
+use super::clock;
+use super::corpus::Corpus;
+use super::message::{Request, Response};
+use super::metrics::ServeMetrics;
+use super::router::{LadPolicy, Policy, Router};
+use super::worker::spawn_worker;
+
+/// Options for a serving run.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    pub workers: usize,
+    pub requests: usize,
+    /// true: threads + real PJRT compute; false: virtual Jetson clock.
+    pub real_time: bool,
+    pub seed: u64,
+    pub artifacts_dir: String,
+    /// "lad-ts" | "least-loaded" | "round-robin".
+    pub scheduler: String,
+    /// Generation-quality demand z per request.
+    pub z_steps: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            workers: 5,
+            requests: 100,
+            real_time: false,
+            seed: 42,
+            artifacts_dir: "artifacts".into(),
+            scheduler: "least-loaded".into(),
+            z_steps: clock::DEFAULT_Z,
+        }
+    }
+}
+
+/// The assembled DEdgeAI system.
+pub struct DEdgeAi {
+    opts: ServeOptions,
+}
+
+impl DEdgeAi {
+    pub fn new(opts: ServeOptions) -> Self {
+        Self { opts }
+    }
+
+    fn make_policy(&self, rt: Option<&XlaRuntime>) -> Result<Policy> {
+        Ok(match self.opts.scheduler.as_str() {
+            "round-robin" | "rr" => Policy::RoundRobin,
+            "least-loaded" | "ll" => Policy::LeastLoaded,
+            "lad-ts" | "lad" => match rt {
+                Some(rt) => Policy::LadTs(Box::new(LadPolicy::new(
+                    rt,
+                    self.opts.workers,
+                    None,
+                    self.opts.seed,
+                )?)),
+                None => anyhow::bail!("lad-ts policy needs artifacts"),
+            },
+            other => anyhow::bail!("unknown scheduler '{other}'"),
+        })
+    }
+
+    fn make_requests(&self) -> Vec<Request> {
+        let mut corpus = Corpus::new(self.opts.seed);
+        (0..self.opts.requests as u64)
+            .map(|id| Request {
+                id,
+                prompt: corpus.caption(),
+                z: self.opts.z_steps,
+                submitted_at: 0.0,
+            })
+            .collect()
+    }
+
+    /// Virtual-time batch run (the Table V protocol: all requests
+    /// submitted at t=0, makespan measured on the Jetson-calibrated
+    /// clock). Deterministic, no threads.
+    pub fn run_virtual(&self) -> Result<ServeMetrics> {
+        let rt = if self.opts.scheduler.starts_with("lad") {
+            Some(
+                XlaRuntime::new(Path::new(&self.opts.artifacts_dir))
+                    .context("lad-ts policy needs artifacts")?,
+            )
+        } else {
+            None
+        };
+        let mut router = Router::new(self.make_policy(rt.as_ref())?, self.opts.workers);
+        let mut metrics = ServeMetrics::new(self.opts.workers);
+        // event clock per worker: time the worker becomes free
+        let mut free_at = vec![0.0f64; self.opts.workers];
+        let mut rng = Rng::new(self.opts.seed ^ 0xC0FFEE);
+        for req in self.make_requests() {
+            let w = router.dispatch(&req)?;
+            let up = clock::lan_seconds(req.prompt.len() as f64 * 8.0);
+            // small per-image variation around the Jetson calibration
+            let gen = clock::jetson_image_seconds(req.z)
+                * (1.0 + 0.03 * rng.normal());
+            let down = clock::lan_seconds(0.8e6);
+            let start = free_at[w].max(req.submitted_at + up);
+            let done = start + gen + down;
+            free_at[w] = done;
+            // No router.complete() here: all requests are submitted at
+            // t=0 (the Table V batch protocol), so none completes
+            // before dispatch finishes — pending loads must accumulate.
+            let resp = Response {
+                id: req.id,
+                worker: w,
+                latency: done - req.submitted_at,
+                queue_wait: start - req.submitted_at - up,
+                gen_time: gen,
+                checksum: 0.0,
+            };
+            metrics.record(&resp, done);
+        }
+        Ok(metrics)
+    }
+
+    /// Real-time run: worker threads with their own PJRT clients doing
+    /// actual generation compute; wallclock latencies.
+    pub fn run_real(&self) -> Result<ServeMetrics> {
+        let artifacts = PathBuf::from(&self.opts.artifacts_dir);
+        let rt = XlaRuntime::new(&artifacts)?;
+        let mut router = Router::new(self.make_policy(Some(&rt))?, self.opts.workers);
+        drop(rt);
+
+        let epoch = Instant::now();
+        let (resp_tx, resp_rx) = channel();
+        let workers: Vec<_> = (0..self.opts.workers)
+            .map(|id| spawn_worker(id, artifacts.clone(), resp_tx.clone(), epoch))
+            .collect();
+        drop(resp_tx);
+
+        let mut metrics = ServeMetrics::new(self.opts.workers);
+        let mut requests = self.make_requests();
+        for req in requests.iter_mut() {
+            req.submitted_at = epoch.elapsed().as_secs_f64();
+            let w = router.dispatch(req)?;
+            workers[w].submit(req.clone())?;
+        }
+        for _ in 0..self.opts.requests {
+            let resp: Response = resp_rx
+                .recv()
+                .context("worker fleet died before completing requests")?;
+            router.complete(resp.worker, self.opts.z_steps);
+            let now = epoch.elapsed().as_secs_f64();
+            metrics.record(&resp, now);
+        }
+        let mut served = 0;
+        for w in workers {
+            served += w.shutdown()?;
+        }
+        debug_assert_eq!(served as usize, self.opts.requests);
+        Ok(metrics)
+    }
+
+    pub fn run(&self) -> Result<ServeMetrics> {
+        if self.opts.real_time {
+            self.run_real()
+        } else {
+            self.run_virtual()
+        }
+    }
+}
+
+/// CLI entry: run and print the serving report.
+pub fn serve_and_report(opts: &ServeOptions) -> Result<()> {
+    let sys = DEdgeAi::new(opts.clone());
+    let t0 = Instant::now();
+    let metrics = sys.run()?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mode = if opts.real_time { "real-time (PJRT compute)" } else { "virtual Jetson clock" };
+    println!(
+        "DEdgeAI: {} requests, {} workers, z={}, scheduler={}, mode={}",
+        opts.requests, opts.workers, opts.z_steps, opts.scheduler, mode
+    );
+    let mut t = Table::new(&["metric", "value"]).left_first();
+    t.row(vec!["served".into(), metrics.count().to_string()]);
+    t.row(vec!["makespan (s)".into(), fnum(metrics.makespan(), 2)]);
+    t.row(vec!["median latency (s)".into(), fnum(metrics.median_latency(), 2)]);
+    t.row(vec!["p95 latency (s)".into(), fnum(metrics.p95_latency(), 2)]);
+    t.row(vec!["mean queue wait (s)".into(), fnum(metrics.mean_queue_wait(), 2)]);
+    t.row(vec!["mean gen time (s)".into(), fnum(metrics.mean_gen_time(), 3)]);
+    t.row(vec![
+        "throughput (img/s)".into(),
+        fnum(metrics.throughput(), 3),
+    ]);
+    t.row(vec!["worker imbalance".into(), fnum(metrics.imbalance(), 3)]);
+    t.row(vec!["wallclock (s)".into(), fnum(wall, 2)]);
+    println!("{}", t.render());
+    println!(
+        "per-worker completions: {:?}",
+        metrics.per_worker()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_batch_matches_makespan_model() {
+        // 100 requests on 5 workers at ~18.3 s each ≈ 20 rounds ≈ 366 s
+        // (+ jitter) — the Table V DEdgeAI row's scale.
+        let opts = ServeOptions {
+            requests: 100,
+            ..ServeOptions::default()
+        };
+        let m = DEdgeAi::new(opts).run_virtual().unwrap();
+        assert_eq!(m.count(), 100);
+        let makespan = m.makespan();
+        assert!(
+            (330.0..430.0).contains(&makespan),
+            "makespan={makespan}"
+        );
+        // perfectly balanced under least-loaded with equal z
+        assert!(m.imbalance() < 1.05);
+    }
+
+    #[test]
+    fn virtual_single_request_is_single_image_latency() {
+        let opts = ServeOptions {
+            requests: 1,
+            ..ServeOptions::default()
+        };
+        let m = DEdgeAi::new(opts).run_virtual().unwrap();
+        let lat = m.median_latency();
+        assert!((16.0..21.0).contains(&lat), "latency={lat}");
+    }
+
+    #[test]
+    fn round_robin_virtual_also_works() {
+        let opts = ServeOptions {
+            requests: 20,
+            scheduler: "round-robin".into(),
+            ..ServeOptions::default()
+        };
+        let m = DEdgeAi::new(opts).run_virtual().unwrap();
+        assert_eq!(m.count(), 20);
+    }
+}

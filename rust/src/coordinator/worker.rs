@@ -1,0 +1,133 @@
+//! Worker thread = one virtual Jetson: owns its own PJRT client (PJRT
+//! wrappers are !Send) and serves generation jobs end-to-end through
+//! the AOT genmodel graphs. Python never appears here — this is the
+//! request path.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{GenModelExec, XlaRuntime};
+
+use super::message::{Request, Response};
+
+/// Commands accepted by a worker.
+pub enum WorkerCmd {
+    Job(Request),
+    Shutdown,
+}
+
+/// Handle to a spawned worker thread.
+pub struct WorkerHandle {
+    pub id: usize,
+    tx: Sender<WorkerCmd>,
+    join: JoinHandle<Result<u64>>,
+}
+
+impl WorkerHandle {
+    pub fn submit(&self, req: Request) -> Result<()> {
+        self.tx
+            .send(WorkerCmd::Job(req))
+            .context("worker channel closed")
+    }
+
+    /// Graceful shutdown; returns the number of jobs served.
+    pub fn shutdown(self) -> Result<u64> {
+        let _ = self.tx.send(WorkerCmd::Shutdown);
+        self.join
+            .join()
+            .map_err(|_| anyhow::anyhow!("worker {} panicked", self.id))?
+    }
+}
+
+/// Spawn one worker. `epoch` anchors the serving clock (shared across
+/// workers so latencies are comparable).
+pub fn spawn_worker(
+    id: usize,
+    artifacts_dir: PathBuf,
+    resp_tx: Sender<Response>,
+    epoch: Instant,
+) -> WorkerHandle {
+    let (tx, rx): (Sender<WorkerCmd>, Receiver<WorkerCmd>) = channel();
+    let join = std::thread::Builder::new()
+        .name(format!("dedgeai-worker-{id}"))
+        .spawn(move || -> Result<u64> {
+            // Each worker owns its PJRT client + compiled genmodel.
+            let rt = XlaRuntime::new(&artifacts_dir)?;
+            let gen = GenModelExec::new(&rt)?;
+            let mut served = 0u64;
+            while let Ok(cmd) = rx.recv() {
+                let req = match cmd {
+                    WorkerCmd::Job(r) => r,
+                    WorkerCmd::Shutdown => break,
+                };
+                let start = epoch.elapsed().as_secs_f64();
+                let latent =
+                    gen.generate(&req.prompt, req.z, req.id ^ (id as u64) << 32)?;
+                let done = epoch.elapsed().as_secs_f64();
+                let checksum = latent.iter().sum::<f32>() / latent.len() as f32;
+                served += 1;
+                let resp = Response {
+                    id: req.id,
+                    worker: id,
+                    latency: done - req.submitted_at,
+                    queue_wait: start - req.submitted_at,
+                    gen_time: done - start,
+                    checksum,
+                };
+                if resp_tx.send(resp).is_err() {
+                    break; // collector gone
+                }
+            }
+            Ok(served)
+        })
+        .expect("spawn worker thread");
+    WorkerHandle { id, tx, join }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn worker_serves_jobs_end_to_end() {
+        if !artifacts().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let (resp_tx, resp_rx) = channel();
+        let epoch = Instant::now();
+        let w = spawn_worker(3, artifacts(), resp_tx, epoch);
+        for i in 0..4u64 {
+            w.submit(Request {
+                id: i,
+                prompt: format!("test prompt {i}"),
+                z: 3,
+                submitted_at: epoch.elapsed().as_secs_f64(),
+            })
+            .unwrap();
+        }
+        let mut got = Vec::new();
+        for _ in 0..4 {
+            got.push(resp_rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap());
+        }
+        assert_eq!(w.shutdown().unwrap(), 4);
+        for r in &got {
+            assert_eq!(r.worker, 3);
+            assert!(r.latency >= r.gen_time);
+            assert!(r.gen_time > 0.0);
+            assert!(r.checksum.is_finite());
+        }
+        // FIFO within one worker
+        let ids: Vec<u64> = got.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,80 @@
+//! The service-delay model (Eqn 2):
+//!
+//!   T_serv = d_n / v_up  +  ρ_n z_n / f_b'  +  T_wait  +  d̃_n / v_down
+//!
+//! with T_wait = (q_{t-1,b'} + q^bef_{n,t,b'}) / f_b' (Eqn 3).
+
+use super::task::AigcTask;
+
+/// Per-component breakdown of one task's service delay (seconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DelayBreakdown {
+    pub upload: f64,
+    pub compute: f64,
+    pub wait: f64,
+    pub download: f64,
+}
+
+impl DelayBreakdown {
+    pub fn total(&self) -> f64 {
+        self.upload + self.compute + self.wait + self.download
+    }
+}
+
+/// Evaluate Eqn 2 for assigning `task` (arrived at BS b) to ES `es`,
+/// given the waiting workload `pending` (cycles) ahead of it.
+pub fn service_delay(
+    task: &AigcTask,
+    f_es: f64,
+    v_up: f64,
+    v_down: f64,
+    pending: f64,
+) -> DelayBreakdown {
+    DelayBreakdown {
+        upload: task.d_in / v_up,
+        compute: task.workload() / f_es,
+        wait: pending / f_es,
+        download: task.d_out / v_down,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::task::TaskKind;
+
+    fn task() -> AigcTask {
+        AigcTask {
+            origin: 0,
+            slot_index: 0,
+            kind: TaskKind::TextToImage,
+            d_in: 4e6,
+            d_out: 8e5,
+            z: 10,
+            rho: 2e8,
+        }
+    }
+
+    #[test]
+    fn components_match_eqn2() {
+        let d = service_delay(&task(), 20e9, 400e6, 500e6, 40e9);
+        assert!((d.upload - 0.01).abs() < 1e-12); // 4e6/4e8
+        assert!((d.compute - 0.1).abs() < 1e-12); // 2e9/2e10
+        assert!((d.wait - 2.0).abs() < 1e-12); // 4e10/2e10
+        assert!((d.download - 0.0016).abs() < 1e-12);
+        assert!((d.total() - 2.1116).abs() < 1e-9);
+    }
+
+    #[test]
+    fn faster_es_strictly_better_all_else_equal() {
+        let slow = service_delay(&task(), 10e9, 450e6, 450e6, 1e9);
+        let fast = service_delay(&task(), 50e9, 450e6, 450e6, 1e9);
+        assert!(fast.total() < slow.total());
+    }
+
+    #[test]
+    fn empty_queue_zero_wait() {
+        let d = service_delay(&task(), 20e9, 400e6, 500e6, 0.0);
+        assert_eq!(d.wait, 0.0);
+    }
+}

@@ -1,0 +1,274 @@
+//! The gym-style edge environment driving Algorithm 1.
+//!
+//! A slot proceeds as:
+//! 1. [`EdgeEnv::tasks`] exposes this slot's arrival sets N_{b,t};
+//! 2. the scheduler reads per-task states ([`EdgeEnv::state_for`],
+//!    Eqn 6 — note the queue observation is q_{t-1}, frozen at the slot
+//!    start, which is what makes batched decisions exact);
+//! 3. assignments are applied in arrival order via [`EdgeEnv::assign`],
+//!    which evaluates Eqn 2 against the *live* intra-slot backlog
+//!    (q^bef) and returns the delay/reward outcome;
+//! 4. [`EdgeEnv::advance_slot`] applies Eqn 4 and generates the next
+//!    arrivals.
+
+use crate::config::EnvConfig;
+use crate::util::rng::Rng;
+
+use super::delay::{service_delay, DelayBreakdown};
+use super::generator::TaskGenerator;
+use super::normalizer::Normalizer;
+use super::queues::QueueState;
+use super::task::AigcTask;
+use super::topology::Topology;
+
+/// Result of assigning one task to an ES.
+#[derive(Clone, Copy, Debug)]
+pub struct Outcome {
+    pub es: usize,
+    pub delay: DelayBreakdown,
+}
+
+impl Outcome {
+    /// Paper reward (Eqn 9): the negative service delay.
+    pub fn reward(&self) -> f64 {
+        -self.delay.total()
+    }
+}
+
+/// One episode of the distributed edge system.
+pub struct EdgeEnv {
+    pub cfg: EnvConfig,
+    pub topo: Topology,
+    queues: QueueState,
+    gen: TaskGenerator,
+    norm: Normalizer,
+    rng: Rng,
+    t: usize,
+    slot_tasks: Vec<Vec<AigcTask>>,
+}
+
+impl EdgeEnv {
+    /// Fresh episode with a fresh topology draw. For multi-episode
+    /// training prefer [`EdgeEnv::with_topology`]: the paper's agents
+    /// learn a *deployment* (fixed ES capacities) across episodes — the
+    /// Eqn-6 state carries queue lengths but not capacities, so per-
+    /// episode capacity resampling would make the mapping unlearnable.
+    pub fn new(cfg: &EnvConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let topo = Topology::sample(cfg, &mut rng);
+        Self::with_topology(cfg, topo, seed)
+    }
+
+    /// Fresh episode over an existing (persistent) topology.
+    pub fn with_topology(cfg: &EnvConfig, topo: Topology, seed: u64) -> Self {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1));
+        let mut topo = topo;
+        topo.resample_links(cfg, &mut rng);
+        let mut gen = TaskGenerator::new(cfg, &mut rng);
+        let slot_tasks = (0..cfg.num_bs)
+            .map(|b| gen.slot_tasks(b, &mut rng))
+            .collect();
+        Self {
+            cfg: cfg.clone(),
+            topo,
+            queues: QueueState::new(cfg.num_bs),
+            gen,
+            norm: Normalizer::new(cfg),
+            rng,
+            t: 0,
+            slot_tasks,
+        }
+    }
+
+    /// Current slot index t.
+    pub fn slot(&self) -> usize {
+        self.t
+    }
+
+    /// True once the horizon |T| is exhausted.
+    pub fn done(&self) -> bool {
+        self.t >= self.cfg.slots
+    }
+
+    /// This slot's arrival sets, indexed by BS.
+    pub fn tasks(&self) -> &[Vec<AigcTask>] {
+        &self.slot_tasks
+    }
+
+    pub fn total_tasks_this_slot(&self) -> usize {
+        self.slot_tasks.iter().map(|v| v.len()).sum()
+    }
+
+    /// Normalised Eqn-6 state for `task` (queue vector = q_{t-1}).
+    pub fn state_for(&self, task: &AigcTask, out: &mut Vec<f32>) {
+        self.norm.state(
+            task.d_in,
+            task.workload(),
+            self.queues.backlog_vec(),
+            &self.topo.f,
+            out,
+        );
+    }
+
+    /// Evaluate Eqn 2 for assigning `task` to `es` *now* without
+    /// mutating state — the Opt-TS oracle's enumeration primitive.
+    pub fn peek_delay(&self, task: &AigcTask, es: usize) -> DelayBreakdown {
+        service_delay(
+            task,
+            self.topo.f[es],
+            self.topo.v_up[task.origin][es],
+            self.topo.v_down[es][task.origin],
+            self.queues.pending(es),
+        )
+    }
+
+    /// Commit `task` to `es`: returns the Eqn-2 outcome computed against
+    /// the live backlog and adds the workload to the ES queue.
+    pub fn assign(&mut self, task: &AigcTask, es: usize) -> Outcome {
+        let delay = self.peek_delay(task, es);
+        self.queues.assign(es, task.workload());
+        Outcome { es, delay }
+    }
+
+    /// Slot boundary: Eqn-4 queue update, link-rate refresh, next
+    /// arrivals.
+    pub fn advance_slot(&mut self) {
+        self.queues.end_slot(&self.topo.f, self.cfg.delta);
+        self.t += 1;
+        if self.done() {
+            for tasks in self.slot_tasks.iter_mut() {
+                tasks.clear();
+            }
+            return;
+        }
+        self.topo.resample_links(&self.cfg, &mut self.rng);
+        for b in 0..self.cfg.num_bs {
+            self.slot_tasks[b] = self.gen.slot_tasks(b, &mut self.rng);
+        }
+    }
+
+    /// Backlog (cycles) of one ES at the last slot boundary.
+    pub fn backlog(&self, es: usize) -> f64 {
+        self.queues.backlog(es)
+    }
+
+    /// Live pending workload (backlog + intra-slot) of one ES.
+    pub fn pending(&self, es: usize) -> f64 {
+        self.queues.pending(es)
+    }
+
+    pub fn total_backlog(&self) -> f64 {
+        self.queues.total_backlog()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> EnvConfig {
+        let mut cfg = EnvConfig::default();
+        cfg.num_bs = 4;
+        cfg.slots = 5;
+        cfg.n_max = 6;
+        cfg
+    }
+
+    #[test]
+    fn episode_runs_to_horizon() {
+        let cfg = small_cfg();
+        let mut env = EdgeEnv::new(&cfg, 1);
+        let mut assigned = 0usize;
+        while !env.done() {
+            let tasks: Vec<AigcTask> =
+                env.tasks().iter().flatten().cloned().collect();
+            for task in &tasks {
+                let out = env.assign(task, task.origin);
+                assert!(out.delay.total() > 0.0);
+                assigned += 1;
+            }
+            env.advance_slot();
+        }
+        assert!(assigned >= cfg.slots * cfg.num_bs); // >=1 task per BS-slot
+        assert!(env.tasks().iter().all(|v| v.is_empty()));
+    }
+
+    #[test]
+    fn state_vector_shape_and_freeze() {
+        let cfg = small_cfg();
+        let mut env = EdgeEnv::new(&cfg, 2);
+        let task = env.tasks()[0][0].clone();
+        let mut s1 = Vec::new();
+        env.state_for(&task, &mut s1);
+        assert_eq!(s1.len(), cfg.state_dim());
+        // Assignments within the slot must NOT change the Eqn-6 state
+        // (it reads q_{t-1}).
+        let heavy = env.tasks()[1][0].clone();
+        env.assign(&heavy, 0);
+        let mut s2 = Vec::new();
+        env.state_for(&task, &mut s2);
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn peek_matches_assign_and_wait_grows() {
+        let cfg = small_cfg();
+        let mut env = EdgeEnv::new(&cfg, 3);
+        let t1 = env.tasks()[0][0].clone();
+        let t2 = env.tasks()[1][0].clone();
+        let peek = env.peek_delay(&t1, 2).total();
+        let out = env.assign(&t1, 2);
+        assert!((peek - out.delay.total()).abs() < 1e-12);
+        // second task behind the first waits longer
+        let d2 = env.peek_delay(&t2, 2);
+        assert!(d2.wait > 0.0);
+        assert!(
+            (d2.wait - t1.workload() / env.topo.f[2]).abs() / d2.wait < 1e-9
+        );
+    }
+
+    #[test]
+    fn reward_is_negative_delay() {
+        let cfg = small_cfg();
+        let mut env = EdgeEnv::new(&cfg, 4);
+        let task = env.tasks()[0][0].clone();
+        let out = env.assign(&task, 1);
+        assert_eq!(out.reward(), -out.delay.total());
+    }
+
+    #[test]
+    fn advance_resets_intra_slot_and_carries_backlog() {
+        let cfg = small_cfg();
+        let mut env = EdgeEnv::new(&cfg, 5);
+        // Overload ES 0 far beyond one slot of capacity.
+        let task = env.tasks()[0][0].clone();
+        for _ in 0..200 {
+            env.assign(&task, 0);
+        }
+        let pending = env.pending(0);
+        env.advance_slot();
+        let expect = (pending - env.topo.f[0] * cfg.delta).max(0.0);
+        assert!((env.backlog(0) - expect).abs() < 1.0);
+        assert_eq!(env.pending(0), env.backlog(0));
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let cfg = small_cfg();
+        let run = |seed| {
+            let mut env = EdgeEnv::new(&cfg, seed);
+            let mut total = 0.0;
+            while !env.done() {
+                let tasks: Vec<AigcTask> =
+                    env.tasks().iter().flatten().cloned().collect();
+                for task in &tasks {
+                    total += env.assign(task, 0).delay.total();
+                }
+                env.advance_slot();
+            }
+            total
+        };
+        assert_eq!(run(9), run(9));
+        assert_ne!(run(9), run(10));
+    }
+}

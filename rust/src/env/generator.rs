@@ -1,0 +1,182 @@
+//! Workload generator (§III.A + Table III).
+//!
+//! Tasks are sampled uniformly within Table III's ranges. On top of the
+//! i.i.d. base, per-(BS, slot-index) *profiles* persist across slots
+//! with probability `periodicity` — the "specific periodic pattern over
+//! a certain period" (§IV.A) that motivates seeding the reverse
+//! diffusion from the previous action probability. `periodicity = 0`
+//! recovers a fully i.i.d. workload (used by the ablation bench).
+
+use crate::config::EnvConfig;
+use crate::util::rng::Rng;
+
+use super::task::{AigcTask, TaskKind};
+
+/// Persistent per-slot-index task profile at one BS.
+#[derive(Clone, Debug)]
+struct Profile {
+    d_in: f64,
+    d_out: f64,
+    z: usize,
+    rho: f64,
+    kind: TaskKind,
+}
+
+/// Generates each slot's arrival set per BS.
+#[derive(Clone, Debug)]
+pub struct TaskGenerator {
+    cfg: EnvConfig,
+    /// profiles[b][n] — lazily grown up to n_max per BS.
+    profiles: Vec<Vec<Profile>>,
+    /// Persistent arrival-count level per BS.
+    counts: Vec<usize>,
+}
+
+impl TaskGenerator {
+    pub fn new(cfg: &EnvConfig, rng: &mut Rng) -> Self {
+        let mut gen = Self {
+            cfg: cfg.clone(),
+            profiles: vec![Vec::new(); cfg.num_bs],
+            counts: Vec::with_capacity(cfg.num_bs),
+        };
+        for _ in 0..cfg.num_bs {
+            gen.counts.push(rng.range_usize(1, cfg.n_max));
+        }
+        gen
+    }
+
+    fn fresh_profile(cfg: &EnvConfig, rng: &mut Rng) -> Profile {
+        let kind = if rng.f32() < 0.7 {
+            TaskKind::TextToImage
+        } else {
+            TaskKind::ImageToImage
+        };
+        // image-to-image inputs carry an image: skew towards d_max.
+        let d_in = match kind {
+            TaskKind::TextToImage => rng.range_f64(cfg.d_min, cfg.d_max),
+            TaskKind::ImageToImage => {
+                rng.range_f64((cfg.d_min + cfg.d_max) / 2.0, cfg.d_max)
+            }
+        };
+        Profile {
+            d_in,
+            d_out: rng.range_f64(cfg.dout_min, cfg.dout_max),
+            z: rng.range_usize(cfg.z_min, cfg.z_max),
+            rho: rng.range_f64(cfg.rho_min, cfg.rho_max),
+            kind,
+        }
+    }
+
+    /// Jitter a base value by ±cfg.jitter (relative), clamped to range.
+    fn jitter(cfg: &EnvConfig, rng: &mut Rng, v: f64, lo: f64, hi: f64) -> f64 {
+        (v * (1.0 + cfg.jitter * rng.range_f64(-1.0, 1.0))).clamp(lo, hi)
+    }
+
+    /// Generate the arrival set N_{b,t} for BS `b` this slot.
+    pub fn slot_tasks(&mut self, b: usize, rng: &mut Rng) -> Vec<AigcTask> {
+        let cfg = self.cfg.clone();
+        // arrival count: persistent level with occasional resample.
+        if rng.f64() >= cfg.periodicity {
+            self.counts[b] = rng.range_usize(1, cfg.n_max);
+        } else {
+            // small drift around the level
+            let delta = rng.range_usize(0, 4) as i64 - 2;
+            let n = (self.counts[b] as i64 + delta).clamp(1, cfg.n_max as i64);
+            self.counts[b] = n as usize;
+        }
+        let n_tasks = self.counts[b];
+
+        let profiles = &mut self.profiles[b];
+        while profiles.len() < n_tasks {
+            profiles.push(Self::fresh_profile(&cfg, rng));
+        }
+
+        (0..n_tasks)
+            .map(|n| {
+                if rng.f64() >= cfg.periodicity {
+                    profiles[n] = Self::fresh_profile(&cfg, rng);
+                }
+                let p = &profiles[n];
+                AigcTask {
+                    origin: b,
+                    slot_index: n,
+                    kind: p.kind,
+                    d_in: Self::jitter(&cfg, rng, p.d_in, cfg.d_min, cfg.d_max),
+                    d_out: Self::jitter(
+                        &cfg, rng, p.d_out, cfg.dout_min, cfg.dout_max,
+                    ),
+                    z: p.z,
+                    rho: Self::jitter(&cfg, rng, p.rho, cfg.rho_min, cfg.rho_max),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tasks_within_table_iii_ranges() {
+        let cfg = EnvConfig::default();
+        let mut rng = Rng::new(3);
+        let mut gen = TaskGenerator::new(&cfg, &mut rng);
+        for t in 0..20 {
+            for b in 0..cfg.num_bs {
+                let tasks = gen.slot_tasks(b, &mut rng);
+                assert!(!tasks.is_empty() && tasks.len() <= cfg.n_max, "t={t}");
+                for (n, task) in tasks.iter().enumerate() {
+                    assert_eq!(task.origin, b);
+                    assert_eq!(task.slot_index, n);
+                    assert!(task.d_in >= cfg.d_min && task.d_in <= cfg.d_max);
+                    assert!(task.d_out >= cfg.dout_min && task.d_out <= cfg.dout_max);
+                    assert!(task.z >= cfg.z_min && task.z <= cfg.z_max);
+                    assert!(task.rho >= cfg.rho_min && task.rho <= cfg.rho_max);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn periodic_profiles_persist() {
+        let mut cfg = EnvConfig::default();
+        cfg.periodicity = 1.0;
+        cfg.jitter = 0.0;
+        let mut rng = Rng::new(5);
+        let mut gen = TaskGenerator::new(&cfg, &mut rng);
+        let a = gen.slot_tasks(0, &mut rng);
+        let b = gen.slot_tasks(0, &mut rng);
+        let common = a.len().min(b.len());
+        for n in 0..common {
+            assert_eq!(a[n].z, b[n].z);
+            assert_eq!(a[n].rho, b[n].rho);
+        }
+    }
+
+    #[test]
+    fn zero_periodicity_decorrelates() {
+        let mut cfg = EnvConfig::default();
+        cfg.periodicity = 0.0;
+        let mut rng = Rng::new(7);
+        let mut gen = TaskGenerator::new(&cfg, &mut rng);
+        let a = gen.slot_tasks(0, &mut rng);
+        let b = gen.slot_tasks(0, &mut rng);
+        let common = a.len().min(b.len());
+        let same = (0..common)
+            .filter(|&n| a[n].z == b[n].z && a[n].rho == b[n].rho)
+            .count();
+        assert!(same < common, "profiles should resample");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = EnvConfig::default();
+        let run = || {
+            let mut rng = Rng::new(11);
+            let mut gen = TaskGenerator::new(&cfg, &mut rng);
+            (0..5).flat_map(|_| gen.slot_tasks(0, &mut rng)).map(|t| t.rho).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,21 @@
+//! The edge-network substrate: AIGC task model, topology, queue
+//! dynamics (Eqns 3-4), service-delay model (Eqn 2), workload generator
+//! and the gym-style environment driving Algorithm 1.
+
+pub mod delay;
+pub mod generator;
+pub mod normalizer;
+pub mod queues;
+pub mod task;
+pub mod topology;
+
+#[allow(clippy::module_inception)]
+mod env;
+
+pub use delay::DelayBreakdown;
+pub use env::{EdgeEnv, Outcome};
+pub use generator::TaskGenerator;
+pub use normalizer::Normalizer;
+pub use queues::QueueState;
+pub use task::{AigcTask, TaskKind};
+pub use topology::Topology;

@@ -1,0 +1,75 @@
+//! State normalisation for the DRL agents.
+//!
+//! Raw Eqn-6 states span ~10 orders of magnitude (bits vs cycles); the
+//! 20-neuron networks of Table IV need conditioned inputs. Queue
+//! entries are expressed in *seconds of backlog* (`q_{t-1,i} / f_i`),
+//! which folds the heterogeneous capacities into the state — the same
+//! information content as the paper's raw q vector, better scaled.
+
+use crate::config::EnvConfig;
+
+#[derive(Clone, Debug)]
+pub struct Normalizer {
+    d_max: f64,
+    w_max: f64,
+    /// Backlog horizon (seconds) mapped to 1.0.
+    q_horizon: f64,
+}
+
+impl Normalizer {
+    pub fn new(cfg: &EnvConfig) -> Self {
+        Self {
+            d_max: cfg.d_max,
+            w_max: cfg.rho_max * cfg.z_max as f64,
+            q_horizon: 20.0 * cfg.delta,
+        }
+    }
+
+    /// Build the normalised state vector [d, ρz, q_1/f_1, …, q_B/f_B].
+    pub fn state(
+        &self,
+        d_in: f64,
+        workload: f64,
+        backlog: &[f64],
+        f: &[f64],
+        out: &mut Vec<f32>,
+    ) {
+        out.clear();
+        out.push((d_in / self.d_max) as f32);
+        out.push((workload / self.w_max) as f32);
+        for (q, cap) in backlog.iter().zip(f.iter()) {
+            out.push(((q / cap) / self.q_horizon).min(5.0) as f32);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_layout_and_scaling() {
+        let cfg = EnvConfig::default();
+        let norm = Normalizer::new(&cfg);
+        let backlog = vec![20e9; cfg.num_bs];
+        let f = vec![20e9; cfg.num_bs];
+        let mut s = Vec::new();
+        norm.state(cfg.d_max, cfg.rho_max * cfg.z_max as f64, &backlog, &f, &mut s);
+        assert_eq!(s.len(), cfg.state_dim());
+        assert!((s[0] - 1.0).abs() < 1e-6);
+        assert!((s[1] - 1.0).abs() < 1e-6);
+        // 1 second of backlog over a 20 s horizon
+        assert!((s[2] - 0.05).abs() < 1e-6);
+    }
+
+    #[test]
+    fn queue_entries_clamped() {
+        let cfg = EnvConfig::default();
+        let norm = Normalizer::new(&cfg);
+        let backlog = vec![1e15];
+        let f = vec![1e9];
+        let mut s = Vec::new();
+        norm.state(0.0, 0.0, &backlog, &f, &mut s);
+        assert_eq!(s[2], 5.0);
+    }
+}

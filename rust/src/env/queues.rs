@@ -1,0 +1,110 @@
+//! Processing-queue dynamics (Eqns 3-4).
+//!
+//! Each ES has a workload backlog `q_{t,b'}` (cycles). Within a slot,
+//! newly assigned workloads accumulate in `acc`; at the slot boundary
+//! the ES drains up to `f_b' · Δ` cycles:
+//!
+//!   q_{t,b'} = max( q_{t-1,b'} + Σ assigned ρ_n z_n  −  f_b' Δ, 0 )
+
+/// Per-ES backlog state for one episode.
+#[derive(Clone, Debug)]
+pub struct QueueState {
+    /// q_{t-1,b'}: backlog at the end of the previous slot (cycles).
+    q: Vec<f64>,
+    /// Intra-slot accumulated workload per ES (the q^bef source).
+    acc: Vec<f64>,
+}
+
+impl QueueState {
+    pub fn new(num_es: usize) -> Self {
+        Self { q: vec![0.0; num_es], acc: vec![0.0; num_es] }
+    }
+
+    pub fn num_es(&self) -> usize {
+        self.q.len()
+    }
+
+    /// q_{t-1,b'} (the state input of Eqn 6).
+    pub fn backlog(&self, es: usize) -> f64 {
+        self.q[es]
+    }
+
+    pub fn backlog_vec(&self) -> &[f64] {
+        &self.q
+    }
+
+    /// Workload already assigned to `es` earlier in the current slot —
+    /// `q^bef_{n,t,b'}` of Eqn 3 (observable by the system, not part of
+    /// the DRL state).
+    pub fn intra_slot(&self, es: usize) -> f64 {
+        self.acc[es]
+    }
+
+    /// Waiting workload a task assigned to `es` *now* would sit behind
+    /// (Eqn 3 numerator).
+    pub fn pending(&self, es: usize) -> f64 {
+        self.q[es] + self.acc[es]
+    }
+
+    /// Record an assignment of `workload` cycles to `es` (updates q^bef
+    /// for subsequent tasks in this slot).
+    pub fn assign(&mut self, es: usize, workload: f64) {
+        debug_assert!(workload >= 0.0);
+        self.acc[es] += workload;
+    }
+
+    /// Slot boundary: apply Eqn 4 with capacities `f` (cycles/s) over a
+    /// slot of `delta` seconds, folding the intra-slot accumulator into
+    /// the backlog.
+    pub fn end_slot(&mut self, f: &[f64], delta: f64) {
+        for es in 0..self.q.len() {
+            self.q[es] = (self.q[es] + self.acc[es] - f[es] * delta).max(0.0);
+            self.acc[es] = 0.0;
+        }
+    }
+
+    /// Total backlog across ESs (diagnostics).
+    pub fn total_backlog(&self) -> f64 {
+        self.q.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assignment_accumulates_and_drains() {
+        let mut qs = QueueState::new(2);
+        qs.assign(0, 5.0e9);
+        qs.assign(0, 3.0e9);
+        qs.assign(1, 1.0e9);
+        assert_eq!(qs.pending(0), 8.0e9);
+        assert_eq!(qs.intra_slot(0), 8.0e9);
+        assert_eq!(qs.backlog(0), 0.0); // not yet folded
+        qs.end_slot(&[2.0e9, 2.0e9], 1.0);
+        assert_eq!(qs.backlog(0), 6.0e9);
+        assert_eq!(qs.backlog(1), 0.0); // drained below zero -> clamped
+        assert_eq!(qs.intra_slot(0), 0.0);
+    }
+
+    #[test]
+    fn backlog_never_negative() {
+        let mut qs = QueueState::new(1);
+        qs.assign(0, 1.0);
+        qs.end_slot(&[1.0e12], 1.0);
+        assert_eq!(qs.backlog(0), 0.0);
+    }
+
+    #[test]
+    fn eqn4_carryover_matches_closed_form() {
+        // Constant arrival w per slot, capacity c: q_t = max(t*(w-c), 0).
+        let (w, c) = (3.0e9, 2.0e9);
+        let mut qs = QueueState::new(1);
+        for t in 1..=5 {
+            qs.assign(0, w);
+            qs.end_slot(&[c], 1.0);
+            assert!((qs.backlog(0) - t as f64 * (w - c)).abs() < 1.0);
+        }
+    }
+}

@@ -1,0 +1,71 @@
+//! The AIGC task model (§III.A.1).
+//!
+//! Unlike generic offloading tasks, an AIGC task's workload is governed
+//! by the *model's* complexity, not the input size: `workload = ρ_n ·
+//! z_n` cycles, where `z_n` is the generation-quality demand (number of
+//! denoising steps) and `ρ_n` the per-step cost on the target ES class.
+
+/// Task modality. Both map to the same workload model; the kind
+/// controls input-size sampling and is carried for metrics/serving.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    TextToImage,
+    ImageToImage,
+}
+
+/// One AIGC request arriving at a BS in a slot.
+#[derive(Clone, Debug)]
+pub struct AigcTask {
+    /// Originating BS index b.
+    pub origin: usize,
+    /// Index n within the slot's arrival set at this BS.
+    pub slot_index: usize,
+    pub kind: TaskKind,
+    /// Input size d_n in bits (text prompt, or prompt + image).
+    pub d_in: f64,
+    /// Result size d̃_n in bits (the generated image).
+    pub d_out: f64,
+    /// Generation-quality demand z_n (denoising steps).
+    pub z: usize,
+    /// Per-step compute ρ_n in cycles/step.
+    pub rho: f64,
+}
+
+impl AigcTask {
+    /// Total workload ρ_n · z_n in cycles (§III.A.1).
+    pub fn workload(&self) -> f64 {
+        self.rho * self.z as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(z: usize, rho: f64) -> AigcTask {
+        AigcTask {
+            origin: 0,
+            slot_index: 0,
+            kind: TaskKind::TextToImage,
+            d_in: 2e6,
+            d_out: 8e5,
+            z,
+            rho,
+        }
+    }
+
+    #[test]
+    fn workload_is_rho_times_z() {
+        assert_eq!(mk(10, 2.0e8).workload(), 2.0e9);
+        assert_eq!(mk(1, 1.0e8).workload(), 1.0e8);
+    }
+
+    #[test]
+    fn workload_independent_of_data_size() {
+        let mut a = mk(5, 1.5e8);
+        let w = a.workload();
+        a.d_in *= 100.0;
+        a.d_out *= 100.0;
+        assert_eq!(a.workload(), w);
+    }
+}

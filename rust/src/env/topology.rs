@@ -1,0 +1,99 @@
+//! Network topology: B base stations, each with one ES; per-episode ES
+//! capacities and per-slot link rates (§III.A).
+
+use crate::config::EnvConfig;
+use crate::util::rng::Rng;
+
+/// The physical substrate sampled at episode reset.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    /// ES compute capacities f_b' in cycles/s (fixed per episode).
+    pub f: Vec<f64>,
+    /// Uplink rates v_up[b][b'] (user via BS b to ES b'), bits/s,
+    /// resampled per slot.
+    pub v_up: Vec<Vec<f64>>,
+    /// Downlink rates v_down[b'][b] (result back), bits/s.
+    pub v_down: Vec<Vec<f64>>,
+}
+
+impl Topology {
+    pub fn sample(cfg: &EnvConfig, rng: &mut Rng) -> Self {
+        let b = cfg.num_bs;
+        let f = (0..b).map(|_| rng.range_f64(cfg.f_min, cfg.f_max)).collect();
+        let mut topo = Self {
+            f,
+            v_up: vec![vec![0.0; b]; b],
+            v_down: vec![vec![0.0; b]; b],
+        };
+        topo.resample_links(cfg, rng);
+        topo
+    }
+
+    /// Per-slot link-rate refresh (v_{n,b',t} varies with t).
+    pub fn resample_links(&mut self, cfg: &EnvConfig, rng: &mut Rng) {
+        let b = cfg.num_bs;
+        for i in 0..b {
+            for j in 0..b {
+                self.v_up[i][j] = rng.range_f64(cfg.v_min, cfg.v_max);
+                self.v_down[i][j] = rng.range_f64(cfg.v_min, cfg.v_max);
+            }
+        }
+    }
+
+    pub fn num_bs(&self) -> usize {
+        self.f.len()
+    }
+
+    /// Fastest ES index (used by sanity baselines and tests).
+    pub fn fastest(&self) -> usize {
+        self.f
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampled_within_bounds() {
+        let cfg = EnvConfig::default();
+        let mut rng = Rng::new(1);
+        let t = Topology::sample(&cfg, &mut rng);
+        assert_eq!(t.f.len(), cfg.num_bs);
+        for &f in &t.f {
+            assert!(f >= cfg.f_min && f <= cfg.f_max);
+        }
+        for row in t.v_up.iter().chain(t.v_down.iter()) {
+            for &v in row {
+                assert!(v >= cfg.v_min && v <= cfg.v_max);
+            }
+        }
+    }
+
+    #[test]
+    fn links_change_capacities_fixed() {
+        let cfg = EnvConfig::default();
+        let mut rng = Rng::new(2);
+        let mut t = Topology::sample(&cfg, &mut rng);
+        let f0 = t.f.clone();
+        let v0 = t.v_up[0][0];
+        t.resample_links(&cfg, &mut rng);
+        assert_eq!(t.f, f0);
+        assert_ne!(t.v_up[0][0], v0);
+    }
+
+    #[test]
+    fn fastest_is_argmax() {
+        let t = Topology {
+            f: vec![1.0, 5.0, 3.0],
+            v_up: vec![],
+            v_down: vec![],
+        };
+        assert_eq!(t.fastest(), 1);
+    }
+}

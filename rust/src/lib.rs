@@ -1,0 +1,29 @@
+//! # DEdgeAI / LAD-TS
+//!
+//! A three-layer (Rust + JAX + Pallas, AOT via PJRT) reproduction of
+//! *"Accelerating AIGC Services with Latent Action Diffusion Scheduling
+//! in Edge Networks"*.
+//!
+//! - **Layer 3 (this crate)**: the edge-network substrate, the LAD-TS
+//!   scheduler and all baselines, the experiment harness regenerating
+//!   every paper figure/table, and the DEdgeAI serving prototype.
+//! - **Layer 2** (`python/compile/model.py`): JAX compute graphs (actor
+//!   forward, SAC/DQN train steps, toy generation model), AOT-lowered to
+//!   HLO text at build time.
+//! - **Layer 1** (`python/compile/kernels/`): Pallas kernels for the
+//!   fused epsilon network and the latent denoise step.
+//!
+//! Python never runs on the request path: the rust binary loads
+//! `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate) and is
+//! self-contained once `make artifacts` has run.
+
+pub mod agents;
+pub mod config;
+pub mod coordinator;
+pub mod env;
+pub mod nn;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use config::{AgentConfig, EnvConfig, ExpConfig};

@@ -1,0 +1,199 @@
+//! `dedgeai` — CLI entrypoint for the LAD-TS / DEdgeAI reproduction.
+//!
+//! Subcommands:
+//!   train   — train one method, print the learning curve
+//!   exp     — regenerate paper figures/tables (fig5..fig8b, table5,
+//!             mem, ablation, or `all`)
+//!   serve   — run the DEdgeAI serving prototype (workers + router)
+//!   info    — environment/calibration summary
+//!
+//! Common options: --artifacts DIR, --out DIR, --seed N, --episodes N,
+//! --replications N, --backend native|xla, plus per-experiment sweeps.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use dedgeai::agents::{make_scheduler, Method};
+use dedgeai::config::{ActorLoss, AgentConfig, Backend, EnvConfig, ExpConfig};
+use dedgeai::coordinator;
+use dedgeai::runtime::XlaRuntime;
+use dedgeai::sim::{experiments, output, runner};
+use dedgeai::util::cli::Args;
+use dedgeai::util::logger;
+
+const USAGE: &str = "\
+dedgeai — latent action diffusion scheduling for AIGC edge services
+
+USAGE:
+  dedgeai train --method lad-ts [--episodes 60] [--seed 42]
+  dedgeai exp <fig5|fig6a|fig6b|fig7a|fig7b|fig8a|fig8b|table5|mem|ablation|all>
+  dedgeai serve [--workers 5] [--requests 100] [--real-time]
+  dedgeai info
+
+OPTIONS (shared):
+  --artifacts DIR    AOT artifacts directory (default: artifacts)
+  --out DIR          results directory (default: results)
+  --seed N           base PRNG seed (default: 42)
+  --episodes N       training episodes per run
+  --replications N   independent replications per configuration
+  --backend B        inference backend: native | xla (default native)
+  --method M         lad-ts|d2sac|sac|dqn|opt|random|rr|local|ll
+  --bs N             number of base stations (default 20)
+  --n-max N          max tasks per BS per slot (default 50)
+  --share            share one agent across BSs (speed/ablation)
+  --train-every N    decisions per train step (default 25)
+  --periodicity P    workload periodicity in [0,1] (default 0.85)
+";
+
+fn main() {
+    logger::init();
+    let args = Args::from_env();
+    if args.flag("help") || args.positional.is_empty() {
+        println!("{USAGE}");
+        return;
+    }
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn env_config(args: &Args) -> Result<EnvConfig> {
+    let mut cfg = EnvConfig::default();
+    cfg.num_bs = args.usize_or("bs", cfg.num_bs)?;
+    cfg.slots = args.usize_or("slots", cfg.slots)?;
+    cfg.n_max = args.usize_or("n-max", cfg.n_max)?;
+    cfg.z_max = args.usize_or("z-max", cfg.z_max)?;
+    cfg.periodicity = args.f64_or("periodicity", cfg.periodicity)?;
+    if let Some(f_max) = args.get("f-max-ghz") {
+        cfg.f_max = f_max.parse::<f64>().map_err(|_| {
+            anyhow::anyhow!("--f-max-ghz: bad number")
+        })? * 1e9;
+    }
+    Ok(cfg)
+}
+
+fn agent_config(args: &Args) -> Result<AgentConfig> {
+    let mut cfg = AgentConfig::default();
+    cfg.denoise_steps = args.usize_or("denoise-steps", cfg.denoise_steps)?;
+    cfg.alpha0 = args.f64_or("alpha", cfg.alpha0)?;
+    cfg.train_every = args.usize_or("train-every", cfg.train_every)?;
+    cfg.share_params = args.flag("share");
+    if args.flag("no-alpha-autotune") {
+        cfg.alpha_autotune = false;
+    }
+    if args.flag("paper-loss") {
+        cfg.actor_loss = ActorLoss::Paper;
+    }
+    cfg.backend = match args.str_or("backend", "native").as_str() {
+        "native" => Backend::Native,
+        "xla" => Backend::Xla,
+        other => bail!("unknown backend '{other}'"),
+    };
+    Ok(cfg)
+}
+
+fn exp_config(args: &Args) -> Result<ExpConfig> {
+    let mut cfg = ExpConfig::default();
+    cfg.replications = args.usize_or("replications", cfg.replications)?;
+    cfg.episodes = args.usize_or("episodes", cfg.episodes)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.out_dir = args.str_or("out", &cfg.out_dir);
+    cfg.artifacts_dir = args.str_or("artifacts", &cfg.artifacts_dir);
+    Ok(cfg)
+}
+
+fn load_runtime(exp: &ExpConfig) -> Option<Rc<XlaRuntime>> {
+    match XlaRuntime::new(Path::new(&exp.artifacts_dir)) {
+        Ok(rt) => Some(Rc::new(rt)),
+        Err(e) => {
+            log::warn!("AOT runtime unavailable ({e}); learning methods disabled");
+            None
+        }
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand(USAGE)? {
+        "train" => cmd_train(args),
+        "exp" => cmd_exp(args),
+        "serve" => cmd_serve(args),
+        "info" => cmd_info(args),
+        other => bail!("unknown subcommand '{other}'\n{USAGE}"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let env_cfg = env_config(args)?;
+    let agent_cfg = agent_config(args)?;
+    let exp = exp_config(args)?;
+    let method = Method::parse(&args.str_or("method", "lad-ts"))?;
+    let runtime = if method.is_learner() { load_runtime(&exp) } else { None };
+    let mut agent =
+        make_scheduler(method, env_cfg.num_bs, &agent_cfg, runtime, exp.seed)?;
+    let t0 = std::time::Instant::now();
+    let run = runner::run_training(&env_cfg, agent.as_mut(), exp.episodes, exp.seed)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{}: {} episodes in {:.1}s ({} tasks, {} train steps)",
+        method.name(),
+        exp.episodes,
+        dt,
+        run.total_tasks,
+        run.total_train_steps
+    );
+    println!("learning curve: {}", output::sparkline(&run.episode_delays, 60));
+    println!(
+        "first-5 mean delay: {:.3}s   last-5 mean delay: {:.3}s",
+        dedgeai::util::stats::mean(
+            &run.episode_delays[..5.min(run.episode_delays.len())]
+        ),
+        run.converged_delay(0.1)
+    );
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let env_cfg = env_config(args)?;
+    let agent_cfg = agent_config(args)?;
+    let exp = exp_config(args)?;
+    experiments::run_experiment(id, &env_cfg, &agent_cfg, &exp)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let exp = exp_config(args)?;
+    let opts = coordinator::ServeOptions {
+        workers: args.usize_or("workers", 5)?,
+        requests: args.usize_or("requests", 100)?,
+        real_time: args.flag("real-time"),
+        seed: exp.seed,
+        artifacts_dir: exp.artifacts_dir.clone(),
+        scheduler: args.str_or("method", "lad-ts"),
+        z_steps: args.usize_or("z-steps", 15)?,
+    };
+    coordinator::serve_and_report(&opts)
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let env_cfg = env_config(args)?;
+    println!("DEdgeAI / LAD-TS reproduction");
+    println!("  BSs: {}  slots: {}  n_max: {}", env_cfg.num_bs, env_cfg.slots, env_cfg.n_max);
+    println!("  offered-load / capacity: {:.2}", env_cfg.utilization());
+    let exp = exp_config(args)?;
+    match load_runtime(&exp) {
+        Some(rt) => println!(
+            "  artifacts: {} graphs loaded from {}",
+            rt.manifest.graphs.len(),
+            exp.artifacts_dir
+        ),
+        None => println!("  artifacts: NOT FOUND (run `make artifacts`)"),
+    }
+    Ok(())
+}

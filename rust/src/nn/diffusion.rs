@@ -1,0 +1,254 @@
+//! Native LADN reverse diffusion (Theorem 2), mirroring
+//! `model.beta_schedule` / `model.actor_fwd` bit-compatibly (f32).
+//!
+//! Per denoising step i = I..1:
+//!   x_{i-1} = clip( (x_i − β_i/√(1−λ̄_i) · ε_θ(x_i, i, s)) / √λ_i
+//!             + (β̃_i / 2) · ε , ±X_CLIP )
+//! and the action distribution is softmax(x_0). The per-step clip is
+//! the standard DDPM x-clamp; it is what keeps the paper's latent
+//! feedback loop (X_b[n] <- x_0 -> next x_I) bounded — the reverse
+//! chain amplifies by 1/√λ̄ ≈ 12× per pass otherwise.
+
+use super::mlp::{Mlp, MlpScratch};
+use super::tensor::Mat;
+
+/// Per-step clamp on the diffusion iterate (mirrors `model.X_CLIP`).
+pub const X_CLIP: f32 = 5.0;
+
+/// VP-SDE discrete schedule (DESIGN.md §5: β_min=0.1, β_max=10).
+#[derive(Clone, Debug)]
+pub struct BetaSchedule {
+    pub beta: Vec<f32>,
+    pub lam: Vec<f32>,
+    pub lam_bar: Vec<f32>,
+    pub beta_tilde: Vec<f32>,
+}
+
+impl BetaSchedule {
+    pub fn new(i_steps: usize, beta_min: f64, beta_max: f64) -> Self {
+        let mut beta = Vec::with_capacity(i_steps);
+        let mut lam = Vec::with_capacity(i_steps);
+        let mut lam_bar = Vec::with_capacity(i_steps);
+        let mut beta_tilde = Vec::with_capacity(i_steps);
+        let mut cum = 1.0f64;
+        for idx in 0..i_steps {
+            let i = (idx + 1) as f64;
+            let b = 1.0
+                - (-beta_min / i_steps as f64
+                    - (2.0 * i - 1.0) / (2.0 * (i_steps as f64).powi(2))
+                        * (beta_max - beta_min))
+                    .exp();
+            let l = 1.0 - b;
+            let prev_cum = cum;
+            cum *= l;
+            beta.push(b as f32);
+            lam.push(l as f32);
+            lam_bar.push(cum as f32);
+            beta_tilde.push(((1.0 - prev_cum) / (1.0 - cum) * b) as f32);
+        }
+        Self { beta, lam, lam_bar, beta_tilde }
+    }
+
+    pub fn steps(&self) -> usize {
+        self.beta.len()
+    }
+}
+
+/// Sinusoidal timestep embedding, identical to
+/// `model.timestep_embedding`.
+pub fn timestep_embedding(i: usize, dim: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), dim);
+    let half = dim / 2;
+    let ln10k = (10000.0f64).ln();
+    for k in 0..half {
+        let freq = (-ln10k * k as f64 / half as f64).exp();
+        let ang = i as f64 * freq;
+        out[k] = ang.sin() as f32;
+        out[half + k] = ang.cos() as f32;
+    }
+}
+
+/// Reusable buffers for the actor forward pass.
+#[derive(Clone, Debug, Default)]
+pub struct ActorScratch {
+    concat: Mat,
+    eps: Mat,
+    temb: Vec<f32>,
+    mlp: MlpScratch,
+}
+
+/// Run the full reverse-diffusion actor forward.
+///
+/// * `eps_net` — the ε MLP with input layout [x | temb | s].
+/// * `x` — [N, B] starting iterate, **overwritten in place** with x_0.
+/// * `s` — [N, S] state batch.
+/// * `noise` — per-step injected noise: `noise[k]` is the [N, B] matrix
+///   applied at the k-th executed step (i = I−k), or `None` for
+///   deterministic evaluation.
+/// * returns `pi` — softmax(x_0) as a fresh matrix.
+pub fn actor_forward(
+    eps_net: &Mlp,
+    sched: &BetaSchedule,
+    temb_dim: usize,
+    x: &mut Mat,
+    s: &Mat,
+    noise: Option<&[Mat]>,
+    scratch: &mut ActorScratch,
+) -> Mat {
+    let n = x.rows;
+    let b_dim = x.cols;
+    let s_dim = s.cols;
+    assert_eq!(s.rows, n, "x/s batch mismatch");
+    assert_eq!(eps_net.din(), b_dim + temb_dim + s_dim, "eps input layout");
+    if let Some(nz) = noise {
+        assert_eq!(nz.len(), sched.steps(), "noise steps mismatch");
+    }
+    scratch.temb.resize(temb_dim, 0.0);
+
+    let i_steps = sched.steps();
+    for (k, i) in (1..=i_steps).rev().enumerate() {
+        let idx = i - 1;
+        timestep_embedding(i, temb_dim, &mut scratch.temb);
+        // concat [x | temb | s]
+        let cat = &mut scratch.concat;
+        cat.rows = n;
+        cat.cols = b_dim + temb_dim + s_dim;
+        cat.data.resize(n * cat.cols, 0.0);
+        for r in 0..n {
+            let dst = &mut cat.data[r * cat.cols..(r + 1) * cat.cols];
+            dst[..b_dim].copy_from_slice(x.row(r));
+            dst[b_dim..b_dim + temb_dim].copy_from_slice(&scratch.temb);
+            dst[b_dim + temb_dim..].copy_from_slice(s.row(r));
+        }
+        eps_net.forward_into(cat, &mut scratch.mlp, &mut scratch.eps);
+
+        let coef_eps = sched.beta[idx] / (1.0 - sched.lam_bar[idx]).sqrt();
+        let inv_sqrt_lam = 1.0 / sched.lam[idx].sqrt();
+        let noise_scale = sched.beta_tilde[idx] / 2.0;
+        let nz = noise.map(|nzs| &nzs[k]);
+        for (r, xv) in x.data.iter_mut().enumerate() {
+            let mut v = (*xv - coef_eps * scratch.eps.data[r]) * inv_sqrt_lam;
+            if let Some(nzm) = nz {
+                v += noise_scale * nzm.data[r];
+            }
+            // smooth clamp (matches model.py): bounded with live grads
+            *xv = X_CLIP * (v / X_CLIP).tanh();
+        }
+    }
+    let mut pi = x.clone();
+    pi.softmax_rows_inplace();
+    pi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    const BETA_MIN: f64 = 0.1;
+    const BETA_MAX: f64 = 10.0;
+
+    #[test]
+    fn schedule_matches_closed_form() {
+        let i_steps = 5;
+        let s = BetaSchedule::new(i_steps, BETA_MIN, BETA_MAX);
+        for i in 1..=i_steps {
+            let want = 1.0
+                - (-BETA_MIN / i_steps as f64
+                    - (2.0 * i as f64 - 1.0) / (2.0 * (i_steps as f64).powi(2))
+                        * (BETA_MAX - BETA_MIN))
+                    .exp();
+            assert!((s.beta[i - 1] as f64 - want).abs() < 1e-6);
+        }
+        // first posterior variance is exactly zero
+        assert_eq!(s.beta_tilde[0], 0.0);
+        // betas increase, cumulative product decreases
+        assert!(s.beta.windows(2).all(|w| w[1] > w[0]));
+        assert!(s.lam_bar.windows(2).all(|w| w[1] < w[0]));
+    }
+
+    fn setup(n: usize, b_dim: usize, i_steps: usize) -> (Mlp, BetaSchedule, Mat, Mat) {
+        let temb_dim = 16;
+        let s_dim = 2 + b_dim;
+        let mut rng = Rng::new(42);
+        let mlp = Mlp::init(&mut rng, b_dim + temb_dim + s_dim, 20, b_dim);
+        let sched = BetaSchedule::new(i_steps, BETA_MIN, BETA_MAX);
+        let x = Mat::from_vec(
+            n, b_dim, (0..n * b_dim).map(|_| rng.normal_f32()).collect(),
+        );
+        let s = Mat::from_vec(
+            n, s_dim, (0..n * s_dim).map(|_| rng.f32()).collect(),
+        );
+        (mlp, sched, x, s)
+    }
+
+    #[test]
+    fn forward_yields_simplex_rows() {
+        let (mlp, sched, mut x, s) = setup(32, 20, 5);
+        let mut scratch = ActorScratch::default();
+        let pi = actor_forward(&mlp, &sched, 16, &mut x, &s, None, &mut scratch);
+        assert!(x.is_finite());
+        for r in 0..pi.rows {
+            let sum: f32 = pi.row(r).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+            assert!(pi.row(r).iter().all(|&p| p >= 0.0));
+        }
+    }
+
+    #[test]
+    fn forward_deterministic_without_noise() {
+        let (mlp, sched, x0, s) = setup(8, 10, 5);
+        let mut scratch = ActorScratch::default();
+        let mut xa = x0.clone();
+        let pa = actor_forward(&mlp, &sched, 16, &mut xa, &s, None, &mut scratch);
+        let mut xb = x0.clone();
+        let pb = actor_forward(&mlp, &sched, 16, &mut xb, &s, None, &mut scratch);
+        assert_eq!(xa.data, xb.data);
+        assert_eq!(pa.data, pb.data);
+    }
+
+    #[test]
+    fn noise_perturbs_intermediate_steps_only_when_nonzero() {
+        let (mlp, sched, x0, s) = setup(8, 10, 5);
+        let mut scratch = ActorScratch::default();
+        let zero_noise: Vec<Mat> = (0..5).map(|_| Mat::zeros(8, 10)).collect();
+        let mut rng = Rng::new(7);
+        let real_noise: Vec<Mat> = (0..5)
+            .map(|_| {
+                Mat::from_vec(8, 10, (0..80).map(|_| rng.normal_f32()).collect())
+            })
+            .collect();
+        let mut xa = x0.clone();
+        actor_forward(&mlp, &sched, 16, &mut xa, &s, None, &mut scratch);
+        let mut xb = x0.clone();
+        actor_forward(&mlp, &sched, 16, &mut xb, &s, Some(&zero_noise), &mut scratch);
+        assert_eq!(xa.data, xb.data, "zero noise == no noise");
+        let mut xc = x0.clone();
+        actor_forward(&mlp, &sched, 16, &mut xc, &s, Some(&real_noise), &mut scratch);
+        assert_ne!(xa.data, xc.data, "real noise must perturb");
+    }
+
+    #[test]
+    fn latent_start_changes_output() {
+        let (mlp, sched, x0, s) = setup(8, 10, 5);
+        let mut scratch = ActorScratch::default();
+        let mut xa = x0.clone();
+        actor_forward(&mlp, &sched, 16, &mut xa, &s, None, &mut scratch);
+        let mut xb = Mat::from_vec(
+            8, 10, x0.data.iter().map(|v| v + 1.0).collect(),
+        );
+        actor_forward(&mlp, &sched, 16, &mut xb, &s, None, &mut scratch);
+        assert_ne!(xa.data, xb.data);
+    }
+
+    #[test]
+    fn temb_matches_python_formula() {
+        let mut out = vec![0.0f32; 16];
+        timestep_embedding(3, 16, &mut out);
+        // k=0: freq=1, sin(3), cos(3)
+        assert!((out[0] - (3.0f64).sin() as f32).abs() < 1e-6);
+        assert!((out[8] - (3.0f64).cos() as f32).abs() < 1e-6);
+        // all in [-1, 1]
+        assert!(out.iter().all(|v| v.abs() <= 1.0 + 1e-6));
+    }
+}

@@ -1,0 +1,89 @@
+//! Parameter initialisation for the train-state tensors described by
+//! the artifact manifest. Mirrors the *family* of `model.mlp_init`
+//! (Kaiming-uniform weights, zero biases) — exact bit-equality with JAX
+//! init is unnecessary (only forward math must match), but shapes are
+//! driven by the manifest so rust and HLO can never disagree.
+
+use crate::util::rng::Rng;
+
+/// Initialise one named tensor of the train state by convention:
+/// - `*.w1|w2|w3`  -> Kaiming-uniform with fan_in = shape[0]
+/// - `*.b1|b2|b3`  -> zeros
+/// - `m_*`, `v_*`  -> zeros (Adam moments)
+/// - `log_alpha`   -> ln(alpha0)
+/// - `step`        -> 0
+pub fn init_tensor(name: &str, shape: &[usize], alpha0: f64, rng: &mut Rng) -> Vec<f32> {
+    let numel: usize = shape.iter().product::<usize>().max(1);
+    let leaf = name.rsplit('.').next().unwrap_or(name);
+    if name == "log_alpha" {
+        return vec![(alpha0.ln()) as f32];
+    }
+    if name == "step" || name.starts_with("m_") || name.starts_with("v_") {
+        return vec![0.0; numel];
+    }
+    match leaf {
+        "w1" | "w2" | "w3" => {
+            let fan_in = shape.first().copied().unwrap_or(1).max(1);
+            let bound = 1.0 / (fan_in as f32).sqrt();
+            (0..numel).map(|_| rng.range_f32(-bound, bound)).collect()
+        }
+        "b1" | "b2" | "b3" => vec![0.0; numel],
+        "m_alpha" | "v_alpha" => vec![0.0; numel],
+        _ => vec![0.0; numel],
+    }
+}
+
+/// Target networks start as copies of their critics; this maps a target
+/// tensor name to its source (`t1.w1` -> `c1.w1`, `t.b2` -> `q.b2`).
+pub fn target_source(name: &str) -> Option<String> {
+    let (net, leaf) = name.split_once('.')?;
+    match net {
+        "t1" => Some(format!("c1.{leaf}")),
+        "t2" => Some(format!("c2.{leaf}")),
+        "t" => Some(format!("q.{leaf}")),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weight_tensors_bounded_nonzero() {
+        let mut rng = Rng::new(1);
+        let w = init_tensor("actor.w1", &[58, 20], 0.05, &mut rng);
+        assert_eq!(w.len(), 58 * 20);
+        let bound = 1.0 / (58f32).sqrt();
+        assert!(w.iter().all(|v| v.abs() <= bound));
+        assert!(w.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn biases_moments_and_step_zero() {
+        let mut rng = Rng::new(2);
+        assert!(init_tensor("c1.b2", &[20], 0.05, &mut rng)
+            .iter()
+            .all(|&v| v == 0.0));
+        assert!(init_tensor("m_actor.w1", &[58, 20], 0.05, &mut rng)
+            .iter()
+            .all(|&v| v == 0.0));
+        assert_eq!(init_tensor("step", &[], 0.05, &mut rng), vec![0.0]);
+    }
+
+    #[test]
+    fn log_alpha_encodes_alpha0() {
+        let mut rng = Rng::new(3);
+        let v = init_tensor("log_alpha", &[], 0.05, &mut rng);
+        assert!((v[0] - (0.05f64.ln()) as f32).abs() < 1e-6);
+    }
+
+    #[test]
+    fn target_mapping() {
+        assert_eq!(target_source("t1.w3").unwrap(), "c1.w3");
+        assert_eq!(target_source("t2.b1").unwrap(), "c2.b1");
+        assert_eq!(target_source("t.w1").unwrap(), "q.w1");
+        assert!(target_source("actor.w1").is_none());
+        assert!(target_source("log_alpha").is_none());
+    }
+}

@@ -1,0 +1,191 @@
+//! The 2-hidden-layer ReLU MLP used by every network in the paper
+//! (Table IV: hidden layers (20, 20)). Forward math matches
+//! `model.mlp_apply` / `ref.eps_mlp_ref` exactly.
+
+use anyhow::{bail, Result};
+
+use super::tensor::Mat;
+use crate::util::rng::Rng;
+
+/// MLP parameters: din -> hidden -> hidden -> dout.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub w1: Mat,
+    pub b1: Vec<f32>,
+    pub w2: Mat,
+    pub b2: Vec<f32>,
+    pub w3: Mat,
+    pub b3: Vec<f32>,
+}
+
+/// Reusable intermediate buffers for an allocation-free forward pass.
+#[derive(Clone, Debug, Default)]
+pub struct MlpScratch {
+    h1: Mat,
+    h2: Mat,
+}
+
+impl Mlp {
+    /// Kaiming-uniform init (bound 1/sqrt(fan_in)), zero biases —
+    /// the same family as `model.mlp_init`.
+    pub fn init(rng: &mut Rng, din: usize, hidden: usize, dout: usize) -> Self {
+        let layer = |rng: &mut Rng, i: usize, o: usize| {
+            let bound = 1.0 / (i as f32).sqrt();
+            Mat::from_vec(
+                i,
+                o,
+                (0..i * o).map(|_| rng.range_f32(-bound, bound)).collect(),
+            )
+        };
+        Self {
+            w1: layer(rng, din, hidden),
+            b1: vec![0.0; hidden],
+            w2: layer(rng, hidden, hidden),
+            b2: vec![0.0; hidden],
+            w3: layer(rng, hidden, dout),
+            b3: vec![0.0; dout],
+        }
+    }
+
+    pub fn din(&self) -> usize {
+        self.w1.rows
+    }
+
+    pub fn dout(&self) -> usize {
+        self.w3.cols
+    }
+
+    /// Forward into `out` using scratch buffers (no allocations once
+    /// warm).
+    pub fn forward_into(&self, x: &Mat, scratch: &mut MlpScratch, out: &mut Mat) {
+        x.matmul_into(&self.w1, Some(&self.b1), &mut scratch.h1);
+        scratch.h1.relu_inplace();
+        scratch.h1.matmul_into(&self.w2, Some(&self.b2), &mut scratch.h2);
+        scratch.h2.relu_inplace();
+        scratch.h2.matmul_into(&self.w3, Some(&self.b3), out);
+    }
+
+    pub fn forward(&self, x: &Mat) -> Mat {
+        let mut scratch = MlpScratch::default();
+        let mut out = Mat::default();
+        self.forward_into(x, &mut scratch, &mut out);
+        out
+    }
+
+    /// Flat parameter layout in the manifest order
+    /// (w1, b1, w2, b2, w3, b3) — used for HLO interop.
+    pub fn flat_tensors(&self) -> Vec<&[f32]> {
+        vec![
+            &self.w1.data, &self.b1, &self.w2.data, &self.b2, &self.w3.data,
+            &self.b3,
+        ]
+    }
+
+    /// Rebuild from flat tensors in manifest order.
+    pub fn from_flat(
+        din: usize,
+        hidden: usize,
+        dout: usize,
+        tensors: &[Vec<f32>],
+    ) -> Result<Self> {
+        if tensors.len() != 6 {
+            bail!("expected 6 tensors, got {}", tensors.len());
+        }
+        let expect = [
+            din * hidden, hidden, hidden * hidden, hidden, hidden * dout, dout,
+        ];
+        for (i, (t, e)) in tensors.iter().zip(expect.iter()).enumerate() {
+            if t.len() != *e {
+                bail!("tensor {i}: expected {e} elements, got {}", t.len());
+            }
+        }
+        Ok(Self {
+            w1: Mat::from_vec(din, hidden, tensors[0].clone()),
+            b1: tensors[1].clone(),
+            w2: Mat::from_vec(hidden, hidden, tensors[2].clone()),
+            b2: tensors[3].clone(),
+            w3: Mat::from_vec(hidden, dout, tensors[4].clone()),
+            b3: tensors[5].clone(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_identity_path() {
+        // w1 = I-ish with positive inputs: relu is a no-op, so the MLP
+        // composes to x @ (w1 w2 w3) + carried biases.
+        let eye = |n: usize| {
+            let mut m = Mat::zeros(n, n);
+            for i in 0..n {
+                m.set(i, i, 1.0);
+            }
+            m
+        };
+        let mlp = Mlp {
+            w1: eye(3),
+            b1: vec![0.0; 3],
+            w2: eye(3),
+            b2: vec![1.0; 3],
+            w3: eye(3),
+            b3: vec![0.0; 3],
+        };
+        let x = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let y = mlp.forward(&x);
+        assert_eq!(y.data, vec![2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn relu_clips_negative_hidden() {
+        let mlp = Mlp {
+            w1: Mat::from_vec(1, 1, vec![1.0]),
+            b1: vec![0.0],
+            w2: Mat::from_vec(1, 1, vec![1.0]),
+            b2: vec![0.0],
+            w3: Mat::from_vec(1, 1, vec![1.0]),
+            b3: vec![0.5],
+        };
+        let y = mlp.forward(&Mat::from_vec(1, 1, vec![-3.0]));
+        assert_eq!(y.data, vec![0.5]); // negative killed at first relu
+    }
+
+    #[test]
+    fn init_shapes_and_bounds() {
+        let mut rng = Rng::new(1);
+        let mlp = Mlp::init(&mut rng, 38, 20, 20);
+        assert_eq!((mlp.w1.rows, mlp.w1.cols), (38, 20));
+        assert_eq!(mlp.din(), 38);
+        assert_eq!(mlp.dout(), 20);
+        let bound = 1.0 / (38f32).sqrt();
+        assert!(mlp.w1.data.iter().all(|v| v.abs() <= bound));
+        assert!(mlp.b1.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn flat_roundtrip() {
+        let mut rng = Rng::new(2);
+        let mlp = Mlp::init(&mut rng, 5, 4, 3);
+        let flats: Vec<Vec<f32>> =
+            mlp.flat_tensors().iter().map(|t| t.to_vec()).collect();
+        let mlp2 = Mlp::from_flat(5, 4, 3, &flats).unwrap();
+        let x = Mat::from_vec(2, 5, (0..10).map(|i| i as f32 / 10.0).collect());
+        assert_eq!(mlp.forward(&x).data, mlp2.forward(&x).data);
+        assert!(Mlp::from_flat(5, 4, 3, &flats[..5].to_vec()).is_err());
+    }
+
+    #[test]
+    fn forward_into_is_allocation_stable() {
+        let mut rng = Rng::new(3);
+        let mlp = Mlp::init(&mut rng, 8, 20, 4);
+        let x = Mat::from_vec(16, 8, (0..128).map(|i| (i % 7) as f32).collect());
+        let mut scratch = MlpScratch::default();
+        let mut out = Mat::default();
+        mlp.forward_into(&x, &mut scratch, &mut out);
+        let first = out.clone();
+        mlp.forward_into(&x, &mut scratch, &mut out);
+        assert_eq!(out, first);
+    }
+}

@@ -1,0 +1,18 @@
+//! Native mirror of the Layer-2 forward passes.
+//!
+//! Reimplements — in pure rust, bit-compatible math — the MLP and the
+//! LADN reverse-diffusion forward defined in `python/compile/model.py`.
+//! Used for (a) numerical cross-checks against the AOT HLO graphs
+//! (`rust/tests/integration_xla.rs`), (b) a fast inference path for
+//! parameter sweeps, and (c) serving without artifacts. Training always
+//! runs the JAX-derived HLO train-step graphs, keeping a single source
+//! of truth for gradients.
+
+pub mod diffusion;
+pub mod init;
+pub mod mlp;
+pub mod tensor;
+
+pub use diffusion::{ActorScratch, BetaSchedule};
+pub use mlp::{Mlp, MlpScratch};
+pub use tensor::Mat;

@@ -1,0 +1,188 @@
+//! Minimal row-major f32 matrix for the tiny (20-neuron) networks of
+//! Table IV. Deliberately simple: at these sizes a cache-friendly naive
+//! loop beats any BLAS dispatch overhead (measured in bench_decide).
+
+/// Row-major matrix of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Default for Mat {
+    fn default() -> Self {
+        Mat::zeros(0, 0)
+    }
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// out = self @ rhs (+ bias broadcast per row, if given), written
+    /// into `out` (resized as needed). ikj loop order: streams `rhs`
+    /// rows sequentially — the layout the prefetcher likes.
+    pub fn matmul_into(&self, rhs: &Mat, bias: Option<&[f32]>, out: &mut Mat) {
+        assert_eq!(self.cols, rhs.rows, "inner dim mismatch");
+        out.rows = self.rows;
+        out.cols = rhs.cols;
+        out.data.resize(self.rows * rhs.cols, 0.0);
+        for i in 0..self.rows {
+            let orow = &mut out.data[i * rhs.cols..(i + 1) * rhs.cols];
+            match bias {
+                Some(b) => orow.copy_from_slice(b),
+                None => orow.fill(0.0),
+            }
+            let arow = self.row(i);
+            for (k, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue; // ReLU outputs are ~50% zero
+                }
+                let brow = &rhs.data[k * rhs.cols..(k + 1) * rhs.cols];
+                for (o, &b) in orow.iter_mut().zip(brow.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+    }
+
+    pub fn matmul(&self, rhs: &Mat, bias: Option<&[f32]>) -> Mat {
+        let mut out = Mat::zeros(0, 0);
+        self.matmul_into(rhs, bias, &mut out);
+        out
+    }
+
+    /// Element-wise ReLU in place.
+    pub fn relu_inplace(&mut self) {
+        for v in &mut self.data {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+
+    /// Row-wise softmax in place (numerically stabilised).
+    pub fn softmax_rows_inplace(&mut self) {
+        for r in 0..self.rows {
+            let row = self.row_mut(r);
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for v in row.iter_mut() {
+                *v = (*v - max).exp();
+                sum += *v;
+            }
+            let inv = 1.0 / sum;
+            for v in row.iter_mut() {
+                *v *= inv;
+            }
+        }
+    }
+
+    /// Arg-max per row.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        (0..self.rows)
+            .map(|r| {
+                self.row(r)
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+            .collect()
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b, None);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+        let c = a.matmul(&b, Some(&[2.0, -1.0]));
+        assert_eq!(c.data, vec![5.0, 2.0, 9.0, 6.0]);
+    }
+
+    #[test]
+    fn matmul_rectangular() {
+        let a = Mat::from_vec(1, 3, vec![1.0, 0.0, 2.0]);
+        let b = Mat::from_vec(3, 2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let c = a.matmul(&b, None);
+        assert_eq!((c.rows, c.cols), (1, 2));
+        assert_eq!(c.data, vec![11.0, 14.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dim")]
+    fn matmul_shape_checked() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(2, 3);
+        let _ = a.matmul(&b, None);
+    }
+
+    #[test]
+    fn relu_and_softmax() {
+        let mut m = Mat::from_vec(1, 3, vec![-1.0, 0.0, 2.0]);
+        m.relu_inplace();
+        assert_eq!(m.data, vec![0.0, 0.0, 2.0]);
+
+        let mut m = Mat::from_vec(2, 2, vec![0.0, 0.0, 1000.0, 1000.0]);
+        m.softmax_rows_inplace();
+        for r in 0..2 {
+            let s: f32 = m.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+            assert!((m.at(r, 0) - 0.5).abs() < 1e-6); // stable at +1000
+        }
+    }
+
+    #[test]
+    fn argmax_rows_works() {
+        let m = Mat::from_vec(2, 3, vec![0.1, 0.9, 0.0, 0.5, 0.2, 0.7]);
+        assert_eq!(m.argmax_rows(), vec![1, 2]);
+    }
+
+    #[test]
+    fn matmul_into_reuses_buffer() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let b = Mat::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        let mut out = Mat::zeros(9, 9); // wrong shape on purpose
+        a.matmul_into(&b, None, &mut out);
+        assert_eq!((out.rows, out.cols), (2, 2));
+        assert_eq!(out.data[..4], [5.0, 6.0, 7.0, 8.0]);
+    }
+}

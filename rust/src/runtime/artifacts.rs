@@ -1,0 +1,241 @@
+//! Artifact manifest parsing — the build-time contract between
+//! `python/compile/aot.py` and this runtime (DESIGN.md §3).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+}
+
+/// One input/output tensor of a graph.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            name: j.req("name")?.as_str()?.to_string(),
+            shape: j.req("shape")?.as_vec_usize()?,
+            dtype: match j.get("dtype") {
+                Some(d) => Dtype::parse(d.as_str()?)?,
+                None => Dtype::F32,
+            },
+        })
+    }
+}
+
+/// One AOT-lowered graph.
+#[derive(Clone, Debug)]
+pub struct GraphSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub family: String,
+    pub kind: String,
+    /// Number of leading inputs (and outputs, for train graphs) that
+    /// form the persistent state (params / full train state).
+    pub state_len: usize,
+    pub b_dim: Option<usize>,
+    pub i_steps: Option<usize>,
+}
+
+impl GraphSpec {
+    fn from_json(name: &str, j: &Json) -> Result<Self> {
+        let meta = j.req("meta")?;
+        let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            j.req(key)?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        Ok(Self {
+            name: name.to_string(),
+            file: j.req("file")?.as_str()?.to_string(),
+            inputs: parse_specs("inputs")?,
+            outputs: parse_specs("outputs")?,
+            family: meta.req("family")?.as_str()?.to_string(),
+            kind: meta.req("kind")?.as_str()?.to_string(),
+            state_len: meta.req("state_len")?.as_usize()?,
+            b_dim: meta.get("b").and_then(|v| v.as_usize().ok()),
+            i_steps: meta.get("i").and_then(|v| v.as_usize().ok()),
+        })
+    }
+}
+
+/// Parsed `manifest.json` plus the directory holding the HLO files.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub hidden: usize,
+    pub temb_dim: usize,
+    pub beta_min: f64,
+    pub beta_max: f64,
+    pub act_batch: usize,
+    pub train_k: usize,
+    pub gen_latent: usize,
+    pub gen_cond: usize,
+    pub gen_vocab: usize,
+    pub gen_tokens: usize,
+    pub graphs: BTreeMap<String, GraphSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let j = Json::read_file(&dir.join("manifest.json"))
+            .context("loading artifact manifest (run `make artifacts`)")?;
+        let mut graphs = BTreeMap::new();
+        for (name, g) in j.req("graphs")?.as_obj()? {
+            graphs.insert(
+                name.clone(),
+                GraphSpec::from_json(name, g)
+                    .with_context(|| format!("graph '{name}'"))?,
+            );
+        }
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            hidden: j.req("hidden")?.as_usize()?,
+            temb_dim: j.req("temb_dim")?.as_usize()?,
+            beta_min: j.req("beta_min")?.as_f64()?,
+            beta_max: j.req("beta_max")?.as_f64()?,
+            act_batch: j.req("act_batch")?.as_usize()?,
+            train_k: j.req("train_k")?.as_usize()?,
+            gen_latent: j.req("gen_latent")?.as_usize()?,
+            gen_cond: j.req("gen_cond")?.as_usize()?,
+            gen_vocab: j.req("gen_vocab")?.as_usize()?,
+            gen_tokens: j.req("gen_tokens")?.as_usize()?,
+            graphs,
+        })
+    }
+
+    pub fn graph(&self, name: &str) -> Result<&GraphSpec> {
+        self.graphs
+            .get(name)
+            .ok_or_else(|| anyhow!("graph '{name}' not in manifest"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.graph(name)?.file))
+    }
+
+    /// Graph-name helpers for the naming scheme of aot.py.
+    pub fn ladn_fwd(b: usize, i: usize) -> String {
+        format!("ladn_actor_fwd_b{b}_i{i}")
+    }
+
+    pub fn ladn_train(b: usize, i: usize, autotune: bool, paper_loss: bool) -> String {
+        let mut name = format!("ladn_train_b{b}_i{i}");
+        if paper_loss {
+            name.push_str("_paperloss");
+        } else if !autotune {
+            name.push_str("_noauto");
+        }
+        name
+    }
+
+    pub fn sac_fwd(b: usize) -> String {
+        format!("sac_actor_fwd_b{b}")
+    }
+
+    pub fn sac_train(b: usize) -> String {
+        format!("sac_train_b{b}")
+    }
+
+    pub fn dqn_fwd(b: usize) -> String {
+        format!("dqn_fwd_b{b}")
+    }
+
+    pub fn dqn_train(b: usize) -> String {
+        format!("dqn_train_b{b}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests run from the crate root; artifacts may or may not exist.
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn graph_name_helpers() {
+        assert_eq!(Manifest::ladn_fwd(20, 5), "ladn_actor_fwd_b20_i5");
+        assert_eq!(
+            Manifest::ladn_train(20, 5, true, false),
+            "ladn_train_b20_i5"
+        );
+        assert_eq!(
+            Manifest::ladn_train(20, 5, false, false),
+            "ladn_train_b20_i5_noauto"
+        );
+        assert_eq!(
+            Manifest::ladn_train(20, 5, true, true),
+            "ladn_train_b20_i5_paperloss"
+        );
+        assert_eq!(Manifest::dqn_fwd(40), "dqn_fwd_b40");
+    }
+
+    #[test]
+    fn parses_real_manifest_when_present() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.hidden, 20);
+        assert_eq!(m.act_batch, 128);
+        let g = m.graph("ladn_actor_fwd_b20_i5").unwrap();
+        assert_eq!(g.state_len, 6);
+        assert_eq!(g.b_dim, Some(20));
+        assert_eq!(g.i_steps, Some(5));
+        assert_eq!(g.inputs.len(), 9);
+        assert_eq!(g.outputs.len(), 2);
+        // train graph: inputs = state + 8 batch tensors
+        let t = m.graph("ladn_train_b20_i5").unwrap();
+        assert_eq!(t.inputs.len(), t.state_len + 8);
+        assert_eq!(t.outputs.len(), t.state_len + 1);
+        assert!(m.hlo_path("ladn_train_b20_i5").unwrap().exists());
+        // batch.a is i32
+        let a = t.inputs.iter().find(|s| s.name == "batch.a").unwrap();
+        assert_eq!(a.dtype, Dtype::I32);
+    }
+
+    #[test]
+    fn missing_graph_errors() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.graph("nope").is_err());
+    }
+}

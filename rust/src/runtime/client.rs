@@ -1,0 +1,93 @@
+//! PJRT client + executable cache.
+//!
+//! Loads HLO *text* (the interchange format — see DESIGN.md §3 and
+//! /opt/xla-example/README.md), compiles on the CPU PJRT client, and
+//! caches executables per graph name. `!Send` by construction: every
+//! thread owns its own `XlaRuntime`.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::artifacts::Manifest;
+
+pub struct XlaRuntime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client and load the manifest from `dir`.
+    pub fn new(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::debug!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Self { manifest, client, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Compile (or fetch from cache) one graph by manifest name.
+    pub fn load(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.hlo_path(name)?;
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling graph '{name}'"))?,
+        );
+        log::debug!("compiled '{name}' in {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Number of compiled executables held in cache.
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    debug_assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+    let l = xla::Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(l);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(l.reshape(&dims)?)
+}
+
+/// Build an i32 literal of the given shape from a flat slice.
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    debug_assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+    let l = xla::Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(l);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(l.reshape(&dims)?)
+}
+
+/// Read an f32 literal back to a Vec.
+pub fn lit_to_vec_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}

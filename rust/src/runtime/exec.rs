@@ -1,0 +1,390 @@
+//! Typed executors over the AOT graphs: actor forward (LADN / SAC),
+//! Q-network forward (DQN), SAC/DQN train steps, and the generation
+//! model. These are the only places PJRT `execute` is called.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::nn::tensor::Mat;
+use crate::util::rng::Rng;
+
+use super::artifacts::{Dtype, GraphSpec};
+use super::client::{lit_f32, lit_i32, XlaRuntime};
+use super::params::TrainState;
+
+/// Metrics emitted by every train graph (manifest `meta.metrics`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Metrics {
+    pub critic_loss: f32,
+    pub actor_loss: f32,
+    pub alpha: f32,
+    pub entropy: f32,
+    pub q_mean: f32,
+}
+
+impl Metrics {
+    fn from_vec(v: &[f32]) -> Result<Self> {
+        if v.len() != 5 {
+            bail!("metrics arity {} != 5", v.len());
+        }
+        Ok(Self {
+            critic_loss: v[0],
+            actor_loss: v[1],
+            alpha: v[2],
+            entropy: v[3],
+            q_mean: v[4],
+        })
+    }
+}
+
+fn run_tuple(
+    exe: &xla::PjRtLoadedExecutable,
+    args: &[xla::Literal],
+) -> Result<Vec<xla::Literal>> {
+    let result = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+    Ok(result.to_tuple()?)
+}
+
+/// Pad an [n, cols] matrix to [rows_padded, cols] (zero rows appended).
+fn pad_rows(m: &Mat, rows_padded: usize) -> Mat {
+    debug_assert!(m.rows <= rows_padded);
+    let mut out = Mat::zeros(rows_padded, m.cols);
+    out.data[..m.data.len()].copy_from_slice(&m.data);
+    out
+}
+
+fn truncate_rows(data: Vec<f32>, rows_padded: usize, rows: usize, cols: usize) -> Mat {
+    debug_assert_eq!(data.len(), rows_padded * cols);
+    let mut d = data;
+    d.truncate(rows * cols);
+    Mat::from_vec(rows, cols, d)
+}
+
+// ---------------------------------------------------------------------------
+// Actor forward (LADN diffusion / SAC categorical).
+// ---------------------------------------------------------------------------
+
+/// Executor for `ladn_actor_fwd_*` and `sac_actor_fwd_*` graphs.
+pub struct ActorFwdExec {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    pub b_dim: usize,
+    pub s_dim: usize,
+    /// Denoising steps I (0 for the SAC categorical actor).
+    pub i_steps: usize,
+    pub act_batch: usize,
+    /// true for LADN graphs (x_i + noise inputs present).
+    pub diffusion: bool,
+}
+
+impl ActorFwdExec {
+    pub fn new(rt: &XlaRuntime, name: &str) -> Result<Self> {
+        let g = rt.manifest.graph(name)?.clone();
+        if g.kind != "actor_fwd" {
+            bail!("'{name}' is not an actor_fwd graph");
+        }
+        let diffusion = g.family == "ladn";
+        let s_spec = g
+            .inputs
+            .iter()
+            .find(|t| t.name == "s")
+            .context("graph lacks 's' input")?;
+        let act_batch = s_spec.shape[0];
+        let s_dim = s_spec.shape[1];
+        let b_dim = g.b_dim.context("graph lacks b meta")?;
+        let i_steps = g.i_steps.unwrap_or(0);
+        Ok(Self {
+            exe: rt.load(name)?,
+            b_dim,
+            s_dim,
+            i_steps,
+            act_batch,
+            diffusion,
+        })
+    }
+
+    /// Run a decision batch.
+    ///
+    /// * `params` — the actor's 6 tensors (manifest order).
+    /// * `x` — [n, B] latent start (LADN only; ignored for SAC).
+    /// * `s` — [n, S] states, n ≤ act_batch (padded internally).
+    /// * `rng` — noise source for the Eqn-10 injection; `None` = zeros
+    ///   (deterministic evaluation).
+    ///
+    /// Returns (x_0, pi), both [n, B]. For SAC graphs x_0 is the logits.
+    pub fn run(
+        &self,
+        params: &[Vec<f32>],
+        x: Option<&Mat>,
+        s: &Mat,
+        rng: Option<&mut Rng>,
+    ) -> Result<(Mat, Mat)> {
+        let n = s.rows;
+        if n == 0 || n > self.act_batch {
+            bail!("batch size {n} outside 1..={}", self.act_batch);
+        }
+        if s.cols != self.s_dim {
+            bail!("state dim {} != {}", s.cols, self.s_dim);
+        }
+        if params.len() != 6 {
+            bail!("expected 6 actor tensors");
+        }
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(9);
+        // actor tensor shapes: w1 [din,h], b1 [h], w2 [h,h], b2 [h],
+        // w3 [h,b], b3 [b] — recovered from the flat lengths.
+        let h = params[1].len();
+        let din = params[0].len() / h;
+        args.push(lit_f32(&[din, h], &params[0])?);
+        args.push(lit_f32(&[h], &params[1])?);
+        args.push(lit_f32(&[h, h], &params[2])?);
+        args.push(lit_f32(&[h], &params[3])?);
+        args.push(lit_f32(&[h, self.b_dim], &params[4])?);
+        args.push(lit_f32(&[self.b_dim], &params[5])?);
+
+        if self.diffusion {
+            let x = x.context("LADN graph requires x")?;
+            if x.rows != n || x.cols != self.b_dim {
+                bail!("x shape mismatch");
+            }
+            let xp = pad_rows(x, self.act_batch);
+            args.push(lit_f32(&[self.act_batch, self.b_dim], &xp.data)?);
+        }
+        let sp = pad_rows(s, self.act_batch);
+        args.push(lit_f32(&[self.act_batch, self.s_dim], &sp.data)?);
+        if self.diffusion {
+            let numel = self.i_steps * self.act_batch * self.b_dim;
+            let mut noise = vec![0.0f32; numel];
+            if let Some(r) = rng {
+                r.fill_normal(&mut noise);
+            }
+            args.push(lit_f32(
+                &[self.i_steps, self.act_batch, self.b_dim],
+                &noise,
+            )?);
+        }
+
+        let outs = run_tuple(&self.exe, &args)?;
+        if outs.len() != 2 {
+            bail!("actor_fwd returned {} outputs", outs.len());
+        }
+        let x0 = truncate_rows(
+            outs[0].to_vec::<f32>()?,
+            self.act_batch,
+            n,
+            self.b_dim,
+        );
+        let pi = truncate_rows(
+            outs[1].to_vec::<f32>()?,
+            self.act_batch,
+            n,
+            self.b_dim,
+        );
+        Ok((x0, pi))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DQN Q-network forward.
+// ---------------------------------------------------------------------------
+
+pub struct QFwdExec {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    pub b_dim: usize,
+    pub s_dim: usize,
+    pub act_batch: usize,
+}
+
+impl QFwdExec {
+    pub fn new(rt: &XlaRuntime, name: &str) -> Result<Self> {
+        let g = rt.manifest.graph(name)?.clone();
+        if g.family != "dqn" || g.kind != "fwd" {
+            bail!("'{name}' is not a dqn fwd graph");
+        }
+        let s_spec = g.inputs.iter().find(|t| t.name == "s").context("no s")?;
+        Ok(Self {
+            exe: rt.load(name)?,
+            b_dim: g.b_dim.context("no b meta")?,
+            s_dim: s_spec.shape[1],
+            act_batch: s_spec.shape[0],
+        })
+    }
+
+    /// Q values [n, B] for states [n, S].
+    pub fn run(&self, params: &[Vec<f32>], s: &Mat) -> Result<Mat> {
+        let n = s.rows;
+        if n == 0 || n > self.act_batch || s.cols != self.s_dim {
+            bail!("bad state batch {n}x{}", s.cols);
+        }
+        let h = params[1].len();
+        let din = params[0].len() / h;
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(7);
+        args.push(lit_f32(&[din, h], &params[0])?);
+        args.push(lit_f32(&[h], &params[1])?);
+        args.push(lit_f32(&[h, h], &params[2])?);
+        args.push(lit_f32(&[h], &params[3])?);
+        args.push(lit_f32(&[h, self.b_dim], &params[4])?);
+        args.push(lit_f32(&[self.b_dim], &params[5])?);
+        let sp = pad_rows(s, self.act_batch);
+        args.push(lit_f32(&[self.act_batch, self.s_dim], &sp.data)?);
+        let outs = run_tuple(&self.exe, &args)?;
+        Ok(truncate_rows(
+            outs[0].to_vec::<f32>()?,
+            self.act_batch,
+            n,
+            self.b_dim,
+        ))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Train step.
+// ---------------------------------------------------------------------------
+
+/// One batch tensor handed to a train graph.
+pub enum BatchTensor {
+    F32(Vec<usize>, Vec<f32>),
+    I32(Vec<usize>, Vec<i32>),
+}
+
+/// Executor for `*_train_*` graphs: threads the full TrainState through
+/// the HLO and returns the metrics vector.
+pub struct TrainExec {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    pub spec: GraphSpec,
+}
+
+impl TrainExec {
+    pub fn new(rt: &XlaRuntime, name: &str) -> Result<Self> {
+        let spec = rt.manifest.graph(name)?.clone();
+        if spec.kind != "train" {
+            bail!("'{name}' is not a train graph");
+        }
+        Ok(Self { exe: rt.load(name)?, spec })
+    }
+
+    /// Batch tensor specs (inputs after the state prefix).
+    pub fn batch_specs(&self) -> &[super::artifacts::TensorSpec] {
+        &self.spec.inputs[self.spec.state_len..]
+    }
+
+    /// Execute one train step, updating `state` in place.
+    pub fn run(&self, state: &mut TrainState, batch: &[BatchTensor]) -> Result<Metrics> {
+        let state_len = self.spec.state_len;
+        if state.len() != state_len {
+            bail!("state arity {} != {}", state.len(), state_len);
+        }
+        let expected_batch = self.spec.inputs.len() - state_len;
+        if batch.len() != expected_batch {
+            bail!("batch arity {} != {}", batch.len(), expected_batch);
+        }
+        let mut args: Vec<xla::Literal> =
+            Vec::with_capacity(self.spec.inputs.len());
+        for (i, t) in state.tensors.iter().enumerate() {
+            args.push(lit_f32(&state.shapes[i], t)?);
+        }
+        for (bt, spec) in batch.iter().zip(self.batch_specs()) {
+            match (bt, spec.dtype) {
+                (BatchTensor::F32(shape, data), Dtype::F32) => {
+                    if shape != &spec.shape {
+                        bail!("batch tensor '{}' shape mismatch", spec.name);
+                    }
+                    args.push(lit_f32(shape, data)?);
+                }
+                (BatchTensor::I32(shape, data), Dtype::I32) => {
+                    if shape != &spec.shape {
+                        bail!("batch tensor '{}' shape mismatch", spec.name);
+                    }
+                    args.push(lit_i32(shape, data)?);
+                }
+                _ => bail!("batch tensor '{}' dtype mismatch", spec.name),
+            }
+        }
+        let outs = run_tuple(&self.exe, &args)?;
+        if outs.len() != state_len + 1 {
+            bail!("train graph returned {} outputs", outs.len());
+        }
+        let mut new_state = Vec::with_capacity(state_len);
+        for out in outs.iter().take(state_len) {
+            new_state.push(out.to_vec::<f32>()?);
+        }
+        state.update_from(new_state)?;
+        Metrics::from_vec(&outs[state_len].to_vec::<f32>()?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Generation model (the reSD3-m stand-in).
+// ---------------------------------------------------------------------------
+
+/// Executor pair for `genmodel_encode` + `genmodel_step`.
+pub struct GenModelExec {
+    encode: Rc<xla::PjRtLoadedExecutable>,
+    step: Rc<xla::PjRtLoadedExecutable>,
+    pub latent: usize,
+    pub cond: usize,
+    pub tokens: usize,
+    pub vocab: usize,
+}
+
+impl GenModelExec {
+    pub fn new(rt: &XlaRuntime) -> Result<Self> {
+        Ok(Self {
+            encode: rt.load("genmodel_encode")?,
+            step: rt.load("genmodel_step")?,
+            latent: rt.manifest.gen_latent,
+            cond: rt.manifest.gen_cond,
+            tokens: rt.manifest.gen_tokens,
+            vocab: rt.manifest.gen_vocab,
+        })
+    }
+
+    /// Tokenise a prompt: byte-level, pad/truncate to the fixed length.
+    pub fn tokenize(&self, prompt: &str) -> Vec<i32> {
+        let mut toks: Vec<i32> = prompt
+            .bytes()
+            .take(self.tokens)
+            .map(|b| (b as i32) % self.vocab as i32)
+            .collect();
+        toks.resize(self.tokens, 0);
+        toks
+    }
+
+    /// Prompt -> conditioning vector.
+    pub fn encode(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        if tokens.len() != self.tokens {
+            bail!("token length {} != {}", tokens.len(), self.tokens);
+        }
+        let args = [lit_i32(&[self.tokens], tokens)?];
+        let outs = run_tuple(&self.encode, &args)?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+
+    /// One conditioned denoise step (z_n of them make one image).
+    pub fn denoise_step(
+        &self,
+        latent: &[f32],
+        cond: &[f32],
+        step_idx: f32,
+    ) -> Result<Vec<f32>> {
+        let args = [
+            lit_f32(&[self.latent, self.latent], latent)?,
+            lit_f32(&[self.cond], cond)?,
+            lit_f32(&[], &[step_idx])?,
+        ];
+        let outs = run_tuple(&self.step, &args)?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+
+    /// Full generation: encode + z denoise steps; returns the final
+    /// latent (the "image").
+    pub fn generate(&self, prompt: &str, z: usize, seed: u64) -> Result<Vec<f32>> {
+        let cond = self.encode(&self.tokenize(prompt))?;
+        let mut rng = Rng::new(seed);
+        let mut latent = vec![0.0f32; self.latent * self.latent];
+        rng.fill_normal(&mut latent);
+        for step in (1..=z).rev() {
+            latent = self.denoise_step(&latent, &cond, step as f32)?;
+        }
+        Ok(latent)
+    }
+}

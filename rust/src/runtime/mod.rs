@@ -1,0 +1,19 @@
+//! The PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json`) produced by `python/compile/aot.py` and executes
+//! them from the rust request path through the `xla` crate's PJRT CPU
+//! client. Python never runs here.
+//!
+//! Thread-model: PJRT wrapper types are `!Send` (raw pointers), so each
+//! thread that needs inference owns its own [`XlaRuntime`] — the
+//! simulator runs one on its thread; every coordinator worker creates
+//! its own (compilation of these tiny graphs is milliseconds).
+
+pub mod artifacts;
+pub mod client;
+pub mod exec;
+pub mod params;
+
+pub use artifacts::{Dtype, GraphSpec, Manifest, TensorSpec};
+pub use client::XlaRuntime;
+pub use exec::{ActorFwdExec, GenModelExec, Metrics, QFwdExec, TrainExec};
+pub use params::TrainState;

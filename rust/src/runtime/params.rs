@@ -1,0 +1,224 @@
+//! Train-state management: the flat ordered tensor list round-tripped
+//! through the HLO train-step graphs (DESIGN.md §3 "artifact contract").
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::nn::init::{init_tensor, target_source};
+use crate::util::rng::Rng;
+
+use super::artifacts::{Dtype, GraphSpec};
+
+/// The persistent state of one agent: named tensors in manifest order
+/// (network params, target nets, Adam moments, temperature, step).
+#[derive(Clone, Debug)]
+pub struct TrainState {
+    pub names: Vec<String>,
+    pub shapes: Vec<Vec<usize>>,
+    pub tensors: Vec<Vec<f32>>,
+    index: HashMap<String, usize>,
+}
+
+impl TrainState {
+    /// Initialise from a train graph's leading `state_len` input specs.
+    pub fn init(graph: &GraphSpec, alpha0: f64, rng: &mut Rng) -> Result<Self> {
+        let mut st = Self {
+            names: Vec::new(),
+            shapes: Vec::new(),
+            tensors: Vec::new(),
+            index: HashMap::new(),
+        };
+        for spec in &graph.inputs[..graph.state_len] {
+            if spec.dtype != Dtype::F32 {
+                bail!("state tensor {} must be f32", spec.name);
+            }
+            st.index.insert(spec.name.clone(), st.names.len());
+            st.names.push(spec.name.clone());
+            st.shapes.push(spec.shape.clone());
+            st.tensors
+                .push(init_tensor(&spec.name, &spec.shape, alpha0, rng));
+        }
+        // target networks start as copies of their critics
+        for i in 0..st.names.len() {
+            if let Some(src) = target_source(&st.names[i]) {
+                let j = *st
+                    .index
+                    .get(&src)
+                    .ok_or_else(|| anyhow!("target source '{src}' missing"))?;
+                st.tensors[i] = st.tensors[j].clone();
+            }
+        }
+        Ok(st)
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Result<&[f32]> {
+        let i = self
+            .index
+            .get(name)
+            .ok_or_else(|| anyhow!("state tensor '{name}' missing"))?;
+        Ok(&self.tensors[*i])
+    }
+
+    pub fn scalar(&self, name: &str) -> Result<f32> {
+        let t = self.get(name)?;
+        if t.len() != 1 {
+            bail!("'{name}' is not a scalar");
+        }
+        Ok(t[0])
+    }
+
+    /// The six tensors of one named MLP (`prefix.w1` … `prefix.b3`),
+    /// cloned for handing to `nn::Mlp::from_flat`.
+    pub fn mlp_tensors(&self, prefix: &str) -> Result<Vec<Vec<f32>>> {
+        ["w1", "b1", "w2", "b2", "w3", "b3"]
+            .iter()
+            .map(|leaf| Ok(self.get(&format!("{prefix}.{leaf}"))?.to_vec()))
+            .collect()
+    }
+
+    /// Overwrite all tensors from the leading outputs of a train step.
+    pub fn update_from(&mut self, new_tensors: Vec<Vec<f32>>) -> Result<()> {
+        if new_tensors.len() != self.tensors.len() {
+            bail!(
+                "state arity mismatch: {} vs {}",
+                new_tensors.len(),
+                self.tensors.len()
+            );
+        }
+        for (i, t) in new_tensors.into_iter().enumerate() {
+            if t.len() != self.tensors[i].len() {
+                bail!(
+                    "tensor '{}' size changed: {} vs {}",
+                    self.names[i],
+                    t.len(),
+                    self.tensors[i].len()
+                );
+            }
+            self.tensors[i] = t;
+        }
+        Ok(())
+    }
+
+    /// Training-step counter (the trailing `step` scalar).
+    pub fn step(&self) -> f32 {
+        self.scalar("step").unwrap_or(0.0)
+    }
+
+    /// Serialise to JSON (checkpointing — `dedgeai train --save`).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut tensors = Json::obj();
+        for (i, name) in self.names.iter().enumerate() {
+            tensors.set(
+                name,
+                Json::from_pairs(vec![
+                    (
+                        "shape",
+                        Json::Arr(
+                            self.shapes[i]
+                                .iter()
+                                .map(|&d| Json::num(d as f64))
+                                .collect(),
+                        ),
+                    ),
+                    ("data", Json::arr_f32(&self.tensors[i])),
+                ]),
+            );
+        }
+        Json::from_pairs(vec![("tensors", tensors)])
+    }
+
+    /// Restore tensor values from a checkpoint produced by `to_json`.
+    /// Names/shapes must match the current state (same graph).
+    pub fn load_json(&mut self, j: &crate::util::json::Json) -> Result<()> {
+        let tensors = j.req("tensors")?;
+        for (i, name) in self.names.iter().enumerate() {
+            let entry = tensors
+                .req(name)
+                .map_err(|_| anyhow!("checkpoint missing tensor '{name}'"))?;
+            let shape = entry.req("shape")?.as_vec_usize()?;
+            if shape != self.shapes[i] {
+                bail!("checkpoint tensor '{name}' shape mismatch");
+            }
+            let data = entry.req("data")?.as_vec_f64()?;
+            if data.len() != self.tensors[i].len() {
+                bail!("checkpoint tensor '{name}' length mismatch");
+            }
+            self.tensors[i] = data.into_iter().map(|v| v as f32).collect();
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::TensorSpec;
+
+    fn toy_graph() -> GraphSpec {
+        let t = |name: &str, shape: &[usize]| TensorSpec {
+            name: name.into(),
+            shape: shape.to_vec(),
+            dtype: Dtype::F32,
+        };
+        GraphSpec {
+            name: "toy_train".into(),
+            file: "toy.hlo.txt".into(),
+            inputs: vec![
+                t("c1.w1", &[4, 3]),
+                t("c1.b1", &[3]),
+                t("t1.w1", &[4, 3]),
+                t("t1.b1", &[3]),
+                t("log_alpha", &[]),
+                t("step", &[]),
+                t("batch.s", &[8, 4]),
+            ],
+            outputs: vec![],
+            family: "test".into(),
+            kind: "train".into(),
+            state_len: 6,
+            b_dim: None,
+            i_steps: None,
+        }
+    }
+
+    #[test]
+    fn init_targets_copy_critics() {
+        let mut rng = Rng::new(1);
+        let st = TrainState::init(&toy_graph(), 0.05, &mut rng).unwrap();
+        assert_eq!(st.len(), 6);
+        assert_eq!(st.get("c1.w1").unwrap(), st.get("t1.w1").unwrap());
+        assert_eq!(st.scalar("step").unwrap(), 0.0);
+        assert!((st.scalar("log_alpha").unwrap() - (0.05f64.ln()) as f32).abs() < 1e-6);
+    }
+
+    #[test]
+    fn update_checks_arity_and_sizes() {
+        let mut rng = Rng::new(2);
+        let mut st = TrainState::init(&toy_graph(), 0.05, &mut rng).unwrap();
+        assert!(st.update_from(vec![vec![0.0]]).is_err());
+        let mut news: Vec<Vec<f32>> = st.tensors.clone();
+        news[0][0] = 99.0;
+        st.update_from(news).unwrap();
+        assert_eq!(st.get("c1.w1").unwrap()[0], 99.0);
+        let mut bad: Vec<Vec<f32>> = st.tensors.clone();
+        bad[1] = vec![0.0; 99];
+        assert!(st.update_from(bad).is_err());
+    }
+
+    #[test]
+    fn mlp_tensors_requires_all_six() {
+        let mut rng = Rng::new(3);
+        let st = TrainState::init(&toy_graph(), 0.05, &mut rng).unwrap();
+        assert!(st.mlp_tensors("c1").is_err()); // only w1/b1 present
+    }
+}

@@ -1,0 +1,568 @@
+//! The experiment harness: regenerates every table and figure of the
+//! paper's evaluation (§V Figs 5-8, §VI Table V + memory) plus the
+//! ablations called out in DESIGN.md.
+//!
+//! Absolute numbers come from our CPU substrate, not the authors'
+//! testbed; what must (and does) reproduce is the *shape*: method
+//! ordering, convergence ranking, sweep trends and crossovers. Each
+//! experiment prints a paper-style ASCII table and writes JSON + CSV
+//! under the results directory.
+//!
+//! Cost control: all experiments train per-BS agents (faithful to
+//! Algorithm 1 — parameter sharing was measured to herd all BSs onto
+//! the same ES and is exposed only as an ablation flag); sweeps run at
+//! half the fig5 episode budget. EXPERIMENTS.md records the settings
+//! used in the recorded runs.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::agents::{make_scheduler, Method};
+use crate::config::{AgentConfig, EnvConfig, ExpConfig};
+use crate::coordinator::models::{reduction_pct, ModelStack};
+use crate::coordinator::platforms::PLATFORMS;
+use crate::coordinator::service::{DEdgeAi, ServeOptions};
+use crate::runtime::XlaRuntime;
+use crate::util::json::Json;
+use crate::util::stats::{convergence_episode, mean, std};
+use crate::util::table::{fci, fnum, Table};
+
+use super::output;
+use super::runner::run_training;
+
+/// Everything an experiment needs.
+struct Ctx<'a> {
+    env: &'a EnvConfig,
+    agent: &'a AgentConfig,
+    exp: &'a ExpConfig,
+    runtime: Option<Rc<XlaRuntime>>,
+}
+
+impl<'a> Ctx<'a> {
+    fn runtime(&self) -> Result<Rc<XlaRuntime>> {
+        self.runtime
+            .clone()
+            .context("AOT artifacts required (run `make artifacts`)")
+    }
+}
+
+/// Dispatch one experiment id (or `all`).
+pub fn run_experiment(
+    id: &str,
+    env: &EnvConfig,
+    agent: &AgentConfig,
+    exp: &ExpConfig,
+) -> Result<()> {
+    let runtime = XlaRuntime::new(Path::new(&exp.artifacts_dir))
+        .map(Rc::new)
+        .map_err(|e| {
+            log::warn!("artifacts unavailable: {e}");
+            e
+        })
+        .ok();
+    let ctx = Ctx { env, agent, exp, runtime };
+    match id {
+        "fig5" => fig5(&ctx),
+        "fig6a" => sweep_experiment(&ctx, SweepKind::TaskCount),
+        "fig6b" => sweep_experiment(&ctx, SweepKind::EsCapacity),
+        "fig7a" => sweep_experiment(&ctx, SweepKind::Quality),
+        "fig7b" => sweep_experiment(&ctx, SweepKind::NumBs),
+        "fig8a" => fig8a(&ctx),
+        "fig8b" => fig8b(&ctx),
+        "table5" => table5(&ctx),
+        "mem" => mem(&ctx),
+        "ablation" => ablation(&ctx),
+        "all" => {
+            for id in [
+                "fig5", "fig6a", "fig6b", "fig7a", "fig7b", "fig8a", "fig8b",
+                "table5", "mem", "ablation",
+            ] {
+                println!("\n================ {id} ================");
+                run_experiment(id, env, agent, exp)?;
+            }
+            Ok(())
+        }
+        other => bail!(
+            "unknown experiment '{other}' \
+             (fig5|fig6a|fig6b|fig7a|fig7b|fig8a|fig8b|table5|mem|ablation|all)"
+        ),
+    }
+}
+
+/// Train `method` for the configured replications; returns the
+/// per-episode delay curves.
+fn train_curves(
+    ctx: &Ctx,
+    method: Method,
+    env_cfg: &EnvConfig,
+    agent_cfg: &AgentConfig,
+    episodes: usize,
+) -> Result<Vec<Vec<f64>>> {
+    let mut curves = Vec::new();
+    for rep in 0..ctx.exp.replications {
+        let seed = ctx.exp.seed.wrapping_add(rep as u64 * 7919);
+        let runtime = if method.is_learner() {
+            Some(ctx.runtime()?)
+        } else {
+            None
+        };
+        let mut agent =
+            make_scheduler(method, env_cfg.num_bs, agent_cfg, runtime, seed)?;
+        let run = run_training(env_cfg, agent.as_mut(), episodes, seed)?;
+        curves.push(run.episode_delays);
+    }
+    Ok(curves)
+}
+
+/// Mean curve across replications.
+fn mean_curve(curves: &[Vec<f64>]) -> Vec<f64> {
+    if curves.is_empty() {
+        return Vec::new();
+    }
+    let n = curves.iter().map(|c| c.len()).min().unwrap_or(0);
+    (0..n)
+        .map(|i| mean(&curves.iter().map(|c| c[i]).collect::<Vec<_>>()))
+        .collect()
+}
+
+/// Converged delay per replication (tail mean), for CI reporting.
+fn converged_per_rep(curves: &[Vec<f64>], frac: f64) -> Vec<f64> {
+    curves
+        .iter()
+        .map(|c| {
+            let k = ((c.len() as f64 * frac).ceil() as usize).clamp(1, c.len());
+            mean(&c[c.len() - k..])
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 5 — learning curves.
+// ---------------------------------------------------------------------------
+
+fn fig5(ctx: &Ctx) -> Result<()> {
+    let episodes = ctx.exp.episodes;
+    println!(
+        "Fig. 5 — learning performance ({episodes} episodes, {} reps, per-BS agents)",
+        ctx.exp.replications
+    );
+    let mut result = Json::obj();
+    let mut table =
+        Table::new(&["method", "converged delay (s)", "conv. episode", "vs DQN-TS"])
+            .left_first()
+            .title("Fig. 5 summary");
+    let mut csv_rows: Vec<Vec<f64>> = Vec::new();
+    let mut dqn_delay = f64::NAN;
+    let mut curves_all: Vec<(Method, Vec<f64>)> = Vec::new();
+
+    for method in Method::fig5_set() {
+        let t0 = std::time::Instant::now();
+        let curves = train_curves(ctx, method, ctx.env, ctx.agent, episodes)?;
+        let curve = mean_curve(&curves);
+        let tail = converged_per_rep(&curves, 0.2);
+        let (m, s) = (mean(&tail), std(&tail));
+        let conv = convergence_episode(&curve, 0.08);
+        if method == Method::DqnTs {
+            dqn_delay = m;
+        }
+        let vs = if dqn_delay.is_finite() && method != Method::DqnTs {
+            format!("{:+.1}%", (m / dqn_delay - 1.0) * 100.0)
+        } else {
+            "-".into()
+        };
+        table.row(vec![
+            method.name().into(),
+            fci(m, 1.96 * s / (tail.len().max(1) as f64).sqrt(), 2),
+            conv.to_string(),
+            vs,
+        ]);
+        println!(
+            "  {:10} {}  ({:.1}s)",
+            method.name(),
+            output::sparkline(&curve, 50),
+            t0.elapsed().as_secs_f64()
+        );
+        let mut mj = Json::obj();
+        mj.set("curve", Json::arr_f64(&curve));
+        mj.set("converged", Json::num(m));
+        mj.set("converged_std", Json::num(s));
+        mj.set("convergence_episode", Json::num(conv as f64));
+        result.set(method.name(), mj);
+        curves_all.push((method, curve));
+    }
+    println!("{}", table.render());
+
+    // CSV: episode, one column per method
+    let n = curves_all.iter().map(|(_, c)| c.len()).min().unwrap_or(0);
+    for ep in 0..n {
+        let mut row = vec![ep as f64];
+        row.extend(curves_all.iter().map(|(_, c)| c[ep]));
+        csv_rows.push(row);
+    }
+    let mut header = vec!["episode"];
+    header.extend(curves_all.iter().map(|(m, _)| m.name()));
+    output::write_csv(&ctx.exp.out_dir, "fig5", &header, &csv_rows)?;
+    output::write_json(&ctx.exp.out_dir, "fig5", &result)
+}
+
+// ---------------------------------------------------------------------------
+// Figs. 6-7 — delay sweeps.
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+enum SweepKind {
+    /// Fig 6(a): task-count bound N_max.
+    TaskCount,
+    /// Fig 6(b): ES capacity bound f_max (GHz).
+    EsCapacity,
+    /// Fig 7(a): quality bound z_max.
+    Quality,
+    /// Fig 7(b): number of BSs B.
+    NumBs,
+}
+
+impl SweepKind {
+    fn id(&self) -> &'static str {
+        match self {
+            SweepKind::TaskCount => "fig6a",
+            SweepKind::EsCapacity => "fig6b",
+            SweepKind::Quality => "fig7a",
+            SweepKind::NumBs => "fig7b",
+        }
+    }
+
+    fn label(&self) -> &'static str {
+        match self {
+            SweepKind::TaskCount => "N_max (tasks/BS/slot)",
+            SweepKind::EsCapacity => "f_max (GHz)",
+            SweepKind::Quality => "z_max (denoise steps)",
+            SweepKind::NumBs => "B (number of BSs)",
+        }
+    }
+
+    fn points(&self) -> Vec<f64> {
+        match self {
+            SweepKind::TaskCount => vec![10.0, 20.0, 30.0, 40.0, 50.0, 60.0, 70.0],
+            SweepKind::EsCapacity => vec![30.0, 40.0, 50.0, 60.0, 70.0],
+            SweepKind::Quality => vec![5.0, 10.0, 15.0, 20.0],
+            SweepKind::NumBs => vec![10.0, 20.0, 30.0, 40.0],
+        }
+    }
+
+    fn apply(&self, cfg: &mut EnvConfig, v: f64) {
+        match self {
+            SweepKind::TaskCount => cfg.n_max = v as usize,
+            SweepKind::EsCapacity => cfg.f_max = v * 1e9,
+            SweepKind::Quality => cfg.z_max = v as usize,
+            SweepKind::NumBs => cfg.num_bs = v as usize,
+        }
+    }
+}
+
+fn sweep_experiment(ctx: &Ctx, kind: SweepKind) -> Result<()> {
+    // Sweeps use half the episode budget (cost control; override with
+    // --episodes). Agents stay per-BS: sharing parameters makes all BSs
+    // pick identically and herd onto one ES (measured catastrophic).
+    let episodes = (ctx.exp.episodes / 2).max(10);
+    let agent_cfg = ctx.agent.clone();
+    let methods = [
+        Method::DqnTs,
+        Method::SacTs,
+        Method::D2SacTs,
+        Method::LadTs,
+        Method::OptTs,
+    ];
+    println!(
+        "{} — mean service delay vs {} ({} episodes, {} reps, per-BS agents)",
+        kind.id(),
+        kind.label(),
+        episodes,
+        ctx.exp.replications
+    );
+
+    let points = kind.points();
+    let mut header: Vec<&str> = vec![kind.label()];
+    header.extend(methods.iter().map(|m| m.name()));
+    let mut table = Table::new(&header)
+        .left_first()
+        .title(format!("{} — mean service delay (s)", kind.id()));
+    let mut result = Json::obj();
+    let mut csv_rows = Vec::new();
+
+    for &p in &points {
+        let mut env_cfg = ctx.env.clone();
+        kind.apply(&mut env_cfg, p);
+        let mut row = vec![format!("{p}")];
+        let mut csv_row = vec![p];
+        let mut point_json = Json::obj();
+        for &method in &methods {
+            let curves = train_curves(ctx, method, &env_cfg, &agent_cfg, episodes)?;
+            let tail = converged_per_rep(&curves, 0.2);
+            let m = mean(&tail);
+            row.push(fnum(m, 2));
+            csv_row.push(m);
+            point_json.set(method.name(), Json::num(m));
+            log::info!(
+                "{} {}={p} {}: {:.2}s",
+                kind.id(),
+                kind.label(),
+                method.name(),
+                m
+            );
+        }
+        table.row(row);
+        csv_rows.push(csv_row);
+        result.set(&format!("{p}"), point_json);
+    }
+    println!("{}", table.render());
+    output::write_csv(&ctx.exp.out_dir, kind.id(), &header, &csv_rows)?;
+    output::write_json(&ctx.exp.out_dir, kind.id(), &result)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 8 — LAD-TS key-parameter analysis.
+// ---------------------------------------------------------------------------
+
+fn fig8a(ctx: &Ctx) -> Result<()> {
+    let episodes = (ctx.exp.episodes / 2).max(10);
+    let steps = [1usize, 2, 3, 5, 7, 10];
+    println!("fig8a — LAD-TS delay vs denoising steps I ({episodes} episodes)");
+    let mut table = Table::new(&["I", "mean delay (s)", "std"])
+        .left_first()
+        .title("Fig. 8(a)");
+    let mut result = Json::obj();
+    let mut csv = Vec::new();
+    for &i in &steps {
+        let mut agent_cfg = ctx.agent.clone();
+        agent_cfg.denoise_steps = i;
+        let curves = train_curves(ctx, Method::LadTs, ctx.env, &agent_cfg, episodes)?;
+        let tail = converged_per_rep(&curves, 0.2);
+        let (m, s) = (mean(&tail), std(&tail));
+        table.row(vec![i.to_string(), fnum(m, 2), fnum(s, 2)]);
+        result.set(&i.to_string(), Json::num(m));
+        csv.push(vec![i as f64, m, s]);
+    }
+    println!("{}", table.render());
+    output::write_csv(&ctx.exp.out_dir, "fig8a", &["I", "delay", "std"], &csv)?;
+    output::write_json(&ctx.exp.out_dir, "fig8a", &result)
+}
+
+fn fig8b(ctx: &Ctx) -> Result<()> {
+    let episodes = (ctx.exp.episodes / 2).max(10);
+    let alphas = [0.01, 0.05, 0.1, 0.2, 0.5];
+    println!(
+        "fig8b — LAD-TS delay vs entropy temperature alpha \
+         ({episodes} episodes, autotune off)"
+    );
+    let mut table = Table::new(&["alpha", "mean delay (s)", "std"])
+        .left_first()
+        .title("Fig. 8(b)");
+    let mut result = Json::obj();
+    let mut csv = Vec::new();
+    for &a in &alphas {
+        let mut agent_cfg = ctx.agent.clone();
+        agent_cfg.alpha0 = a;
+        agent_cfg.alpha_autotune = false; // fixed temperature sweep
+        let curves = train_curves(ctx, Method::LadTs, ctx.env, &agent_cfg, episodes)?;
+        let tail = converged_per_rep(&curves, 0.2);
+        let (m, s) = (mean(&tail), std(&tail));
+        table.row(vec![format!("{a}"), fnum(m, 2), fnum(s, 2)]);
+        result.set(&format!("{a}"), Json::num(m));
+        csv.push(vec![a, m, s]);
+    }
+    println!("{}", table.render());
+    output::write_csv(&ctx.exp.out_dir, "fig8b", &["alpha", "delay", "std"], &csv)?;
+    output::write_json(&ctx.exp.out_dir, "fig8b", &result)
+}
+
+// ---------------------------------------------------------------------------
+// Table V — DEdgeAI vs commercial platforms.
+// ---------------------------------------------------------------------------
+
+fn table5(ctx: &Ctx) -> Result<()> {
+    let ns = [1usize, 100, 500, 1000];
+    println!(
+        "Table V — total generation delay, DEdgeAI (5 virtual Jetsons, \
+         calibrated clock) vs platforms"
+    );
+    let mut header: Vec<String> = vec!["platform/system".into(), "model".into()];
+    header.extend(ns.iter().map(|n| format!("|N|={n}")));
+    header.push("price per 1K (USD)".into());
+    let hrefs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&hrefs).left_first().title("Table V");
+    let mut result = Json::obj();
+
+    for p in PLATFORMS {
+        let mut row = vec![p.name.to_string(), p.model.to_string()];
+        let mut pj = Json::obj();
+        for &n in &ns {
+            row.push(fnum(p.total_delay(n), 1));
+            pj.set(&n.to_string(), Json::num(p.total_delay(n)));
+        }
+        row.push(format!("${:.2}", p.price_per_1k.unwrap_or(0.0)));
+        table.row(row);
+        result.set(p.name, pj);
+    }
+
+    let mut row = vec!["DEdgeAI (ours)".to_string(), "reSD3-m".to_string()];
+    let mut dj = Json::obj();
+    let mut crossover_beaten = Vec::new();
+    let mut dedge_delays = Vec::new();
+    for &n in &ns {
+        let opts = ServeOptions {
+            requests: n,
+            seed: ctx.exp.seed,
+            scheduler: "least-loaded".into(),
+            artifacts_dir: ctx.exp.artifacts_dir.clone(),
+            ..ServeOptions::default()
+        };
+        let metrics = DEdgeAi::new(opts).run_virtual()?;
+        let d = metrics.makespan();
+        dedge_delays.push(d);
+        row.push(fnum(d, 1));
+        dj.set(&n.to_string(), Json::num(d));
+        let beaten = PLATFORMS.iter().filter(|p| p.total_delay(n) > d).count();
+        crossover_beaten.push(beaten);
+    }
+    row.push("Free".to_string());
+    table.row(row);
+    result.set("DEdgeAI", dj);
+    println!("{}", table.render());
+
+    // paper claim: for |N| >= 100 DEdgeAI beats all five platforms
+    println!(
+        "platforms beaten per |N| {:?}: {:?} (paper: 2 at N=1, 5 at N>=100)",
+        ns, crossover_beaten
+    );
+    if let (Some(&d100), Some(best)) = (
+        dedge_delays.get(1),
+        PLATFORMS
+            .iter()
+            .map(|p| p.total_delay(100))
+            .min_by(|a, b| a.partial_cmp(b).unwrap()),
+    ) {
+        println!(
+            "delay reduction vs best platform at |N|=100: {:.2}% (paper: 29.18%)",
+            (1.0 - d100 / best) * 100.0
+        );
+    }
+    output::write_json(&ctx.exp.out_dir, "table5", &result)
+}
+
+// ---------------------------------------------------------------------------
+// Memory occupation (§VI.C).
+// ---------------------------------------------------------------------------
+
+fn mem(ctx: &Ctx) -> Result<()> {
+    println!("Memory occupation — SD3-medium vs reSD3-m (§VI.C)");
+    let sd3 = ModelStack::sd3_medium();
+    let re = ModelStack::re_sd3_m();
+    let mut table = Table::new(&[
+        "component",
+        "params (B)",
+        "fp16 weights (GB)",
+        "workspace (GB)",
+        "in reSD3-m",
+    ])
+    .left_first()
+    .title("Model registry");
+    for c in &sd3.components {
+        let kept = re.components.iter().any(|rc| rc.name == c.name);
+        table.row(vec![
+            c.name.into(),
+            fnum(c.params / 1e9, 2),
+            fnum(c.params * 2.0 / 1e9, 2),
+            fnum(c.workspace_gb, 1),
+            if kept { "yes" } else { "REMOVED" }.into(),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "SD3-medium:  {:.1} GB   ({:.2}B params)",
+        sd3.memory_gb(),
+        sd3.total_params() / 1e9
+    );
+    println!(
+        "reSD3-m:     {:.1} GB   ({:.2}B params)",
+        re.memory_gb(),
+        re.total_params() / 1e9
+    );
+    println!(
+        "reduction:   {:.1}%  (paper: ~60%, 40 GB -> 16 GB)",
+        reduction_pct(&sd3, &re)
+    );
+    let result = Json::from_pairs(vec![
+        ("sd3_gb", Json::num(sd3.memory_gb())),
+        ("resd3m_gb", Json::num(re.memory_gb())),
+        ("reduction_pct", Json::num(reduction_pct(&sd3, &re))),
+    ]);
+    output::write_json(&ctx.exp.out_dir, "mem", &result)
+}
+
+// ---------------------------------------------------------------------------
+// Ablations (beyond the paper): periodicity × latent memory, and the
+// verbatim Eqn-15 actor loss.
+// ---------------------------------------------------------------------------
+
+fn ablation(ctx: &Ctx) -> Result<()> {
+    let episodes = (ctx.exp.episodes / 2).max(10);
+    println!(
+        "Ablation — workload periodicity vs latent-memory advantage, and \
+         the Eqn-15 actor-loss form ({episodes} episodes, shared agents)"
+    );
+    let mut table = Table::new(&[
+        "periodicity",
+        "LAD-TS (s)",
+        "D2SAC-TS (s)",
+        "latent advantage",
+    ])
+    .left_first()
+    .title("Latent action memory vs workload periodicity");
+    let mut result = Json::obj();
+    for &p in &[0.0, 0.5, 0.85, 1.0] {
+        let mut env_cfg = ctx.env.clone();
+        env_cfg.periodicity = p;
+        let agent_cfg = ctx.agent.clone();
+        let lad = {
+            let curves =
+                train_curves(ctx, Method::LadTs, &env_cfg, &agent_cfg, episodes)?;
+            mean(&converged_per_rep(&curves, 0.2))
+        };
+        let d2 = {
+            let curves =
+                train_curves(ctx, Method::D2SacTs, &env_cfg, &agent_cfg, episodes)?;
+            mean(&converged_per_rep(&curves, 0.2))
+        };
+        table.row(vec![
+            format!("{p}"),
+            fnum(lad, 2),
+            fnum(d2, 2),
+            format!("{:+.1}%", (1.0 - lad / d2) * 100.0),
+        ]);
+        result.set(
+            &format!("periodicity_{p}"),
+            Json::from_pairs(vec![("lad", Json::num(lad)), ("d2sac", Json::num(d2))]),
+        );
+    }
+    println!("{}", table.render());
+
+    // actor-loss form ablation (standard vs the paper's squared Eqn 15)
+    let mut t2 = Table::new(&["actor loss", "LAD-TS delay (s)"])
+        .left_first()
+        .title("Eqn-15 form ablation");
+    for (label, form) in [
+        ("standard", crate::config::ActorLoss::Standard),
+        ("paper (Eqn 15)", crate::config::ActorLoss::Paper),
+    ] {
+        let mut agent_cfg = ctx.agent.clone();
+        agent_cfg.actor_loss = form;
+        let curves = train_curves(ctx, Method::LadTs, ctx.env, &agent_cfg, episodes)?;
+        let m = mean(&converged_per_rep(&curves, 0.2));
+        t2.row(vec![label.into(), fnum(m, 2)]);
+        result.set(&format!("actor_loss_{label}"), Json::num(m));
+    }
+    println!("{}", t2.render());
+    output::write_json(&ctx.exp.out_dir, "ablation", &result)
+}

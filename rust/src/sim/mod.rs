@@ -1,0 +1,9 @@
+//! Simulation layer: the episode runner implementing Algorithm 1's
+//! online loop, and the experiment harness regenerating every figure
+//! and table of the paper's evaluation (§V, §VI).
+
+pub mod experiments;
+pub mod output;
+pub mod runner;
+
+pub use runner::{run_episode, EpisodeStats, TrainRun};

@@ -1,0 +1,97 @@
+//! Result emission: JSON (machine-readable), CSV (plotting), ASCII
+//! (paper-style tables on stdout).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// Write one experiment's JSON result under `<out_dir>/<id>.json`.
+pub fn write_json(out_dir: &str, id: &str, result: &Json) -> Result<()> {
+    let path = Path::new(out_dir).join(format!("{id}.json"));
+    result.write_file(&path)?;
+    log::info!("wrote {}", path.display());
+    Ok(())
+}
+
+/// Write a CSV: header row + rows of f64 cells (NaN -> empty).
+pub fn write_csv(
+    out_dir: &str,
+    id: &str,
+    header: &[&str],
+    rows: &[Vec<f64>],
+) -> Result<()> {
+    let mut text = header.join(",");
+    text.push('\n');
+    for row in rows {
+        let cells: Vec<String> = row
+            .iter()
+            .map(|v| {
+                if v.is_nan() {
+                    String::new()
+                } else {
+                    format!("{v}")
+                }
+            })
+            .collect();
+        text.push_str(&cells.join(","));
+        text.push('\n');
+    }
+    let path = Path::new(out_dir).join(format!("{id}.csv"));
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&path, text)?;
+    log::info!("wrote {}", path.display());
+    Ok(())
+}
+
+/// Render a learning-curve / sweep series as a compact ASCII sparkline
+/// (for terminal output and EXPERIMENTS.md).
+pub fn sparkline(series: &[f64], width: usize) -> String {
+    if series.is_empty() {
+        return String::new();
+    }
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let lo = series.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = series.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let step = (series.len() as f64 / width as f64).max(1.0);
+    let mut out = String::new();
+    let mut i = 0.0;
+    while (i as usize) < series.len() && out.chars().count() < width {
+        let v = series[i as usize];
+        let idx = if hi > lo {
+            (((v - lo) / (hi - lo)) * 7.0).round() as usize
+        } else {
+            0
+        };
+        out.push(BARS[idx.min(7)]);
+        i += step;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let dir = std::env::temp_dir().join("dedgeai_test_out");
+        let dir_s = dir.to_str().unwrap();
+        write_csv(dir_s, "t", &["a", "b"], &[vec![1.0, 2.0], vec![f64::NAN, 4.0]])
+            .unwrap();
+        let text = std::fs::read_to_string(dir.join("t.csv")).unwrap();
+        assert_eq!(text, "a,b\n1,2\n,4\n");
+    }
+
+    #[test]
+    fn sparkline_monotone() {
+        let s = sparkline(&[1.0, 2.0, 3.0, 4.0], 4);
+        assert_eq!(s.chars().count(), 4);
+        let chars: Vec<char> = s.chars().collect();
+        assert!(chars[0] < chars[3]);
+        assert_eq!(sparkline(&[], 5), "");
+    }
+}

@@ -1,0 +1,243 @@
+//! The online episode loop (Algorithm 1).
+//!
+//! Per slot: all BSs decide in parallel (batched per BS, exact because
+//! the Eqn-6 state is frozen at q_{t-1}); assignments then execute in
+//! interleaved arrival order (round-robin over BSs, one task each) so
+//! every task's waiting time reflects the true global q^bef; rewards
+//! are reported back; each BS runs its periodic training tick; the slot
+//! closes with the Eqn-4 queue update.
+//!
+//! Sequential agents (Opt-TS, LeastLoaded) instead choose at assignment
+//! time with live queue knowledge — the oracle advantage §V.B grants
+//! Opt-TS.
+
+use anyhow::Result;
+
+use crate::agents::Scheduler;
+use crate::config::EnvConfig;
+use crate::env::EdgeEnv;
+use crate::util::stats::Welford;
+
+/// Aggregated outcome of one episode.
+#[derive(Clone, Debug, Default)]
+pub struct EpisodeStats {
+    pub tasks: u64,
+    pub mean_delay: f64,
+    pub mean_wait: f64,
+    pub mean_compute: f64,
+    pub mean_transmit: f64,
+    pub p95_delay: f64,
+    pub train_steps: u64,
+    pub final_backlog: f64,
+}
+
+/// Run one episode of `env` under `agent`. `learn` gates the training
+/// ticks (Algorithm 1 lines 15-18).
+pub fn run_episode(
+    env: &mut EdgeEnv,
+    agent: &mut dyn Scheduler,
+    learn: bool,
+) -> Result<EpisodeStats> {
+    let num_bs = env.cfg.num_bs;
+    let mut delay = Welford::new();
+    let mut wait = Welford::new();
+    let mut compute = Welford::new();
+    let mut transmit = Welford::new();
+    let mut delays_all: Vec<f64> = Vec::new();
+    let mut train_steps = 0u64;
+
+    while !env.done() {
+        let sequential = agent.sequential();
+        // Phase 1: batched decisions per BS (skipped for sequential).
+        let mut decisions: Vec<Vec<usize>> = Vec::with_capacity(num_bs);
+        if !sequential {
+            for b in 0..num_bs {
+                let tasks = env.tasks()[b].clone();
+                decisions.push(agent.decide(b, &tasks, env));
+            }
+        } else {
+            decisions.resize(num_bs, Vec::new());
+        }
+
+        // Phase 2: interleaved assignment (round-robin, one task per BS
+        // per round) against the live intra-slot backlog.
+        let counts: Vec<usize> = env.tasks().iter().map(|v| v.len()).collect();
+        let max_n = counts.iter().copied().max().unwrap_or(0);
+        let mut rewards: Vec<Vec<f64>> =
+            counts.iter().map(|&c| Vec::with_capacity(c)).collect();
+        for n in 0..max_n {
+            for b in 0..num_bs {
+                if n >= counts[b] {
+                    continue;
+                }
+                let task = env.tasks()[b][n].clone();
+                let es = if sequential {
+                    agent.decide_one(&task, env)
+                } else {
+                    decisions[b][n]
+                };
+                let out = env.assign(&task, es);
+                let d = out.delay;
+                delay.push(d.total());
+                wait.push(d.wait);
+                compute.push(d.compute);
+                transmit.push(d.upload + d.download);
+                delays_all.push(d.total());
+                rewards[b].push(out.reward());
+            }
+        }
+
+        // Phase 3: reward feedback + periodic training per BS.
+        if !sequential {
+            for b in 0..num_bs {
+                agent.rewards(b, &rewards[b]);
+                if learn {
+                    if let Some(_m) = agent.train_tick(b)? {
+                        train_steps += 1;
+                    }
+                }
+            }
+        }
+
+        env.advance_slot();
+    }
+    agent.end_episode();
+
+    Ok(EpisodeStats {
+        tasks: delay.count(),
+        mean_delay: delay.mean(),
+        mean_wait: wait.mean(),
+        mean_compute: compute.mean(),
+        mean_transmit: transmit.mean(),
+        p95_delay: crate::util::stats::percentile(&delays_all, 95.0),
+        train_steps,
+        final_backlog: env.total_backlog(),
+    })
+}
+
+/// A multi-episode training run: fresh env sample per episode (as in
+/// §V.C "reset system environment"), agent state persisting throughout.
+#[derive(Clone, Debug, Default)]
+pub struct TrainRun {
+    /// Mean service delay per episode — one learning-curve series.
+    pub episode_delays: Vec<f64>,
+    pub episode_p95: Vec<f64>,
+    pub total_tasks: u64,
+    pub total_train_steps: u64,
+}
+
+impl TrainRun {
+    /// Mean delay over the last `frac` of episodes (converged regime).
+    pub fn converged_delay(&self, frac: f64) -> f64 {
+        let n = self.episode_delays.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        let k = ((n as f64 * frac).ceil() as usize).clamp(1, n);
+        crate::util::stats::mean(&self.episode_delays[n - k..])
+    }
+}
+
+/// Train (or simply run, for non-learners) for `episodes` episodes.
+///
+/// The topology (ES capacities) is sampled once from `seed` and kept
+/// fixed across episodes — the deployment the agents learn; workloads
+/// and link rates resample every episode.
+pub fn run_training(
+    env_cfg: &EnvConfig,
+    agent: &mut dyn Scheduler,
+    episodes: usize,
+    seed: u64,
+) -> Result<TrainRun> {
+    let mut run = TrainRun::default();
+    let mut topo_rng = crate::util::rng::Rng::new(seed);
+    let topo = crate::env::Topology::sample(env_cfg, &mut topo_rng);
+    for ep in 0..episodes {
+        let mut env = EdgeEnv::with_topology(
+            env_cfg,
+            topo.clone(),
+            seed.wrapping_add(ep as u64),
+        );
+        let stats = run_episode(&mut env, agent, true)?;
+        run.episode_delays.push(stats.mean_delay);
+        run.episode_p95.push(stats.p95_delay);
+        run.total_tasks += stats.tasks;
+        run.total_train_steps += stats.train_steps;
+        log::debug!(
+            "{} ep {ep}: delay={:.3}s tasks={} train_steps={}",
+            agent.method().name(),
+            stats.mean_delay,
+            stats.tasks,
+            stats.train_steps
+        );
+    }
+    Ok(run)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agents::{make_scheduler, Method};
+    use crate::config::AgentConfig;
+
+    fn small_cfg() -> EnvConfig {
+        let mut cfg = EnvConfig::default();
+        cfg.num_bs = 4;
+        cfg.slots = 10;
+        cfg.n_max = 8;
+        cfg
+    }
+
+    #[test]
+    fn heuristic_episode_accumulates_stats() {
+        let cfg = small_cfg();
+        let mut env = EdgeEnv::new(&cfg, 1);
+        let mut agent =
+            make_scheduler(Method::Random, 4, &AgentConfig::default(), None, 1)
+                .unwrap();
+        let stats = run_episode(&mut env, agent.as_mut(), false).unwrap();
+        assert!(stats.tasks >= (cfg.slots * cfg.num_bs) as u64);
+        assert!(stats.mean_delay > 0.0);
+        assert!(stats.mean_wait >= 0.0);
+        assert!(stats.p95_delay >= stats.mean_delay * 0.5);
+    }
+
+    #[test]
+    fn oracle_beats_random() {
+        let cfg = small_cfg();
+        let avg = |method: Method| {
+            let mut agent =
+                make_scheduler(method, 4, &AgentConfig::default(), None, 2).unwrap();
+            let run = run_training(&cfg, agent.as_mut(), 5, 33).unwrap();
+            crate::util::stats::mean(&run.episode_delays)
+        };
+        let opt = avg(Method::OptTs);
+        let rnd = avg(Method::Random);
+        assert!(
+            opt < rnd,
+            "oracle ({opt:.3}) must beat random ({rnd:.3})"
+        );
+    }
+
+    #[test]
+    fn local_is_much_worse_than_least_loaded() {
+        // Local processing ignores the resource pool entirely; with
+        // heterogeneous capacities it must lose.
+        let cfg = small_cfg();
+        let avg = |method: Method| {
+            let mut agent =
+                make_scheduler(method, 4, &AgentConfig::default(), None, 3).unwrap();
+            let run = run_training(&cfg, agent.as_mut(), 5, 44).unwrap();
+            crate::util::stats::mean(&run.episode_delays)
+        };
+        assert!(avg(Method::LeastLoaded) < avg(Method::Local));
+    }
+
+    #[test]
+    fn converged_delay_uses_tail() {
+        let mut run = TrainRun::default();
+        run.episode_delays = vec![10.0, 10.0, 10.0, 2.0, 2.0];
+        assert!((run.converged_delay(0.4) - 2.0).abs() < 1e-12);
+        assert!(TrainRun::default().converged_delay(0.2).is_nan());
+    }
+}

@@ -1,0 +1,189 @@
+//! Hand-rolled CLI argument parsing (clap is not in the offline crate
+//! set). Supports `command [subcommand] --key value --flag positional`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line: positionals in order, `--key value` options,
+/// bare `--flag`s.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (program name excluded).
+    /// `--key=value` and `--key value` are both accepted; a `--key`
+    /// followed by another `--...` or end-of-args is a flag.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let items: Vec<String> = raw.into_iter().collect();
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < items.len() {
+            let item = &items[i];
+            if let Some(stripped) = item.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < items.len() && !items[i + 1].starts_with("--") {
+                    args.options
+                        .insert(stripped.to_string(), items[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else {
+                args.positional.push(item.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name}: expected number, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated list of numbers, e.g. `--sweep 10,20,30`.
+    pub fn list_f64(&self, name: &str) -> Result<Option<Vec<f64>>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => {
+                let parsed: Result<Vec<f64>> = v
+                    .split(',')
+                    .map(|p| {
+                        p.trim()
+                            .parse()
+                            .map_err(|_| anyhow!("--{name}: bad number '{p}'"))
+                    })
+                    .collect();
+                Ok(Some(parsed?))
+            }
+        }
+    }
+
+    pub fn list_usize(&self, name: &str) -> Result<Option<Vec<usize>>> {
+        Ok(self
+            .list_f64(name)?
+            .map(|v| v.into_iter().map(|x| x as usize).collect()))
+    }
+
+    /// First positional = subcommand; error with usage text if missing.
+    pub fn subcommand(&self, usage: &str) -> Result<&str> {
+        self.positional
+            .first()
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("missing subcommand\n{usage}"))
+    }
+
+    /// Reject unknown option keys (catches typos early).
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.options.keys().chain(self.flags.iter()) {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown option --{k} (known: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse("exp fig5 --episodes 60 --seed=7 --quiet --out results");
+        assert_eq!(a.positional, vec!["exp", "fig5"]);
+        assert_eq!(a.usize_or("episodes", 0).unwrap(), 60);
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 7);
+        assert!(a.flag("quiet"));
+        assert_eq!(a.str_or("out", "x"), "results");
+        assert_eq!(a.subcommand("").unwrap(), "exp");
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("run --n abc");
+        assert_eq!(a.f64_or("missing", 1.5).unwrap(), 1.5);
+        assert!(a.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("x --sweep 10,20,30 --alphas 0.01,0.05");
+        assert_eq!(a.list_usize("sweep").unwrap().unwrap(), vec![10, 20, 30]);
+        assert_eq!(
+            a.list_f64("alphas").unwrap().unwrap(),
+            vec![0.01, 0.05]
+        );
+        assert!(a.list_f64("nope").unwrap().is_none());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("serve --real --workers 5 --verbose");
+        assert!(a.flag("real"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.usize_or("workers", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn check_known_catches_typos() {
+        let a = parse("x --episdes 5");
+        assert!(a.check_known(&["episodes"]).is_err());
+        assert!(a.check_known(&["episdes"]).is_ok());
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        // "--target -1.0": '-1.0' does not start with '--' so it binds.
+        let a = parse("x --target -1.0");
+        assert_eq!(a.f64_or("target", 0.0).unwrap(), -1.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Support layer built from scratch for the offline environment: the
+//! vendored crate set has no rand/serde/clap/criterion, so deterministic
+//! PRNGs, JSON, CLI parsing, stats, tables, logging and a mini
+//! property-testing harness live here.
+
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,127 @@
+//! Mini property-testing harness (proptest is not in the offline crate
+//! set). A property is a closure over a seeded [`Rng`]; the runner
+//! executes it for many derived seeds and, on failure, retries the
+//! failing seed with progressively smaller "size" hints to report a
+//! smaller counterexample.
+//!
+//! Usage:
+//! ```ignore
+//! prop::check("queue is non-negative", 200, |g| {
+//!     let n = g.size(1, 50);
+//!     ... build random case from g.rng ...
+//!     assert!(invariant_holds);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Generation context handed to properties: a PRNG plus a size hint the
+/// shrinker reduces on failure.
+pub struct Gen {
+    pub rng: Rng,
+    size_factor: f64,
+}
+
+impl Gen {
+    /// A size-like quantity in [lo, hi], scaled down while shrinking.
+    pub fn size(&mut self, lo: usize, hi: usize) -> usize {
+        let hi_eff = lo + (((hi - lo) as f64) * self.size_factor) as usize;
+        self.rng.range_usize(lo, hi_eff.max(lo))
+    }
+
+    /// Uniform f64 in [lo, hi] (not shrunk).
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Uniform usize in [lo, hi] (not shrunk).
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_usize(lo, hi)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.range_usize(0, xs.len() - 1)]
+    }
+}
+
+/// Run `cases` random cases of `property`. Panics (with the failing
+/// seed) if any case panics. `DEDGEAI_PROP_SEED` pins the base seed for
+/// replaying a failure.
+pub fn check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    name: &str,
+    cases: u32,
+    property: F,
+) {
+    let base_seed: u64 = std::env::var("DEDGEAI_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xDEDE_A1A1);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let run = |factor: f64| {
+            std::panic::catch_unwind(|| {
+                let mut gen = Gen { rng: Rng::new(seed), size_factor: factor };
+                property(&mut gen);
+            })
+        };
+        if let Err(err) = run(1.0) {
+            // Shrink: retry the same seed at smaller size factors and
+            // report the smallest factor that still fails.
+            let mut smallest = 1.0;
+            for &factor in &[0.5, 0.25, 0.1, 0.05] {
+                if run(factor).is_err() {
+                    smallest = factor;
+                }
+            }
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed (seed={seed}, case={case}, \
+                 smallest failing size-factor={smallest}):\n{msg}\n\
+                 replay with DEDGEAI_PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("abs is non-negative", 100, |g| {
+            let x = g.f64(-100.0, 100.0);
+            assert!(x.abs() >= 0.0);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check("always fails above 30", 50, |g| {
+                let n = g.size(1, 100);
+                assert!(n <= 30, "n={n} too big");
+            });
+        });
+        let err = result.expect_err("should have failed");
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("seed="), "{msg}");
+        assert!(msg.contains("replay with"), "{msg}");
+    }
+
+    #[test]
+    fn size_respects_bounds() {
+        let mut g = Gen { rng: Rng::new(1), size_factor: 1.0 };
+        for _ in 0..200 {
+            let n = g.size(3, 9);
+            assert!((3..=9).contains(&n));
+        }
+        let mut g = Gen { rng: Rng::new(1), size_factor: 0.0 };
+        assert_eq!(g.size(5, 100), 5);
+    }
+}

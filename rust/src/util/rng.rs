@@ -1,0 +1,281 @@
+//! Deterministic PRNGs: SplitMix64 (seeding / stream splitting) and
+//! PCG32 (the workhorse), plus Box-Muller normal sampling.
+//!
+//! Every stochastic component of the system (workload generator, latent
+//! initialisation, diffusion noise, epsilon-greedy exploration, replay
+//! sampling) draws from a seeded [`Rng`], making simulations and
+//! experiments bit-reproducible — a deliberate improvement over the
+//! paper's unseeded PyTorch setup.
+
+/// SplitMix64: used to expand one `u64` seed into PCG state/stream pairs.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG32 (XSH-RR 64/32). Small, fast, and statistically solid for
+/// simulation workloads.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+    inc: u64,
+    /// cached second Box-Muller variate
+    spare_normal: Option<f64>,
+}
+
+impl Rng {
+    /// Seed a generator; distinct seeds give independent streams.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let state = sm.next_u64();
+        let inc = sm.next_u64() | 1;
+        let mut rng = Self { state, inc, spare_normal: None };
+        rng.next_u32(); // advance past the (correlated) initial state
+        rng
+    }
+
+    /// Derive an independent child stream (for per-BS / per-thread use).
+    pub fn split(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6_364_136_223_846_793_005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.range_f64(lo as f64, hi as f64) as f32
+    }
+
+    /// Uniform integer in [lo, hi] (inclusive), via rejection-free Lemire.
+    pub fn range_u32(&mut self, lo: u32, hi: u32) -> u32 {
+        debug_assert!(lo <= hi);
+        let span = (hi - lo) as u64 + 1;
+        lo + ((self.next_u32() as u64 * span) >> 32) as u32
+    }
+
+    pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.range_u32(lo as u32, hi as u32) as usize
+    }
+
+    /// Standard normal via Box-Muller (second variate cached).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(v) = self.spare_normal.take() {
+            return v;
+        }
+        // u1 in (0,1] to avoid ln(0)
+        let u1 = 1.0 - self.f64();
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    pub fn normal_f32(&mut self) -> f32 {
+        self.normal() as f32
+    }
+
+    /// Fill a slice with standard normals.
+    pub fn fill_normal(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.normal_f32();
+        }
+    }
+
+    /// Sample an index from a discrete probability vector (sums ~1).
+    /// Falls back to argmax on numerical leftovers; NaN entries are
+    /// treated as zero mass (never chosen, never panic).
+    pub fn categorical(&mut self, probs: &[f32]) -> usize {
+        let u = self.f32();
+        let mut acc = 0.0f32;
+        for (i, &p) in probs.iter().enumerate() {
+            if p.is_nan() {
+                continue;
+            }
+            acc += p;
+            if u < acc {
+                return i;
+            }
+        }
+        // leftover mass from rounding: return the most probable index
+        let mut best = 0;
+        let mut best_p = f32::NEG_INFINITY;
+        for (i, &p) in probs.iter().enumerate() {
+            if !p.is_nan() && p > best_p {
+                best_p = p;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.range_usize(0, i);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from 0..n (k <= n), unordered.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        debug_assert!(k <= n);
+        // partial Fisher-Yates over an index vector
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = self.range_usize(i, n - 1);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+        let mut c = Rng::new(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut r = Rng::new(7);
+        let mut sum = 0.0;
+        for _ in 0..20_000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / 20_000.0;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn range_u32_inclusive_and_covering() {
+        let mut r = Rng::new(9);
+        let mut seen = [false; 6];
+        for _ in 0..1000 {
+            let v = r.range_u32(2, 7);
+            assert!((2..=7).contains(&v));
+            seen[(v - 2) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let v = r.normal();
+            s += v;
+            s2 += v * v;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Rng::new(13);
+        let probs = [0.1f32, 0.7, 0.2];
+        let mut counts = [0usize; 3];
+        for _ in 0..10_000 {
+            counts[r.categorical(&probs)] += 1;
+        }
+        assert!(counts[1] > counts[0] && counts[1] > counts[2]);
+        assert!((counts[1] as f64 / 10_000.0 - 0.7).abs() < 0.05);
+    }
+
+    #[test]
+    fn categorical_degenerate_sum() {
+        let mut r = Rng::new(17);
+        // Sums to < 1 due to truncation; must still return a valid index.
+        let probs = [0.0f32, 0.0, 0.0];
+        assert!(r.categorical(&probs) < 3);
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::new(19);
+        for _ in 0..100 {
+            let mut s = r.sample_indices(10, 4);
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), 4);
+            assert!(s.iter().all(|&i| i < 10));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(23);
+        let mut v: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_streams_independent() {
+        let mut parent = Rng::new(31);
+        let mut c1 = parent.split();
+        let mut c2 = parent.split();
+        let a: Vec<u32> = (0..10).map(|_| c1.next_u32()).collect();
+        let b: Vec<u32> = (0..10).map(|_| c2.next_u32()).collect();
+        assert_ne!(a, b);
+    }
+}

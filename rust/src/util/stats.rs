@@ -1,0 +1,216 @@
+//! Statistics helpers for experiment aggregation: online moments
+//! (Welford), summaries with confidence intervals, percentiles, and
+//! exponential moving averages for learning curves.
+
+/// Online mean/variance accumulator (Welford's algorithm).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.mean }
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn var(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    /// Standard error of the mean.
+    pub fn sem(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.std() / (self.n as f64).sqrt() }
+    }
+
+    /// Half-width of the normal-approximation 95% CI.
+    pub fn ci95(&self) -> f64 {
+        1.96 * self.sem()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        let mean = self.mean + d * other.n as f64 / n as f64;
+        self.m2 += other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        self.mean = mean;
+        self.n = n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Linear-interpolated percentile, p in [0, 100]. Input need not be sorted.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Exponential moving average of a series (smoothing for learning curves).
+pub fn ema(xs: &[f64], beta: f64) -> Vec<f64> {
+    let mut out = Vec::with_capacity(xs.len());
+    let mut acc = 0.0;
+    let mut corr = 0.0;
+    for (i, &x) in xs.iter().enumerate() {
+        acc = beta * acc + (1.0 - beta) * x;
+        corr = beta * corr + (1.0 - beta);
+        let _ = i;
+        out.push(acc / corr);
+    }
+    out
+}
+
+/// Episode index after which the EMA-smoothed series stays within
+/// `tol` (relative) of its final value — the "convergence episode"
+/// metric of Fig. 5.
+pub fn convergence_episode(series: &[f64], tol: f64) -> usize {
+    if series.is_empty() {
+        return 0;
+    }
+    let sm = ema(series, 0.6);
+    let fin = *sm.last().unwrap();
+    if fin == 0.0 {
+        return 0;
+    }
+    let mut idx = sm.len() - 1;
+    for i in (0..sm.len()).rev() {
+        if ((sm[i] - fin) / fin).abs() <= tol {
+            idx = i;
+        } else {
+            break;
+        }
+    }
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((w.std() - std(&xs)).abs() < 1e-12);
+        assert_eq!(w.min(), 1.0);
+        assert_eq!(w.max(), 10.0);
+        assert_eq!(w.count(), 5);
+    }
+
+    #[test]
+    fn welford_merge_equals_combined() {
+        let (a, b) = ([1.0, 5.0, 3.0], [2.0, 8.0]);
+        let mut wa = Welford::new();
+        a.iter().for_each(|&x| wa.push(x));
+        let mut wb = Welford::new();
+        b.iter().for_each(|&x| wb.push(x));
+        wa.merge(&wb);
+        let all = [1.0, 5.0, 3.0, 2.0, 8.0];
+        assert!((wa.mean() - mean(&all)).abs() < 1e-12);
+        assert!((wa.std() - std(&all)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ema_smooths_but_tracks() {
+        let xs: Vec<f64> = (0..50).map(|i| if i < 25 { 10.0 } else { 2.0 }).collect();
+        let sm = ema(&xs, 0.8);
+        assert!((sm[0] - 10.0).abs() < 1e-9); // bias-corrected start
+        assert!(sm[49] < 2.5);
+        assert!(sm[26] > 2.5); // lags the raw series
+    }
+
+    #[test]
+    fn convergence_detects_plateau() {
+        let mut series = vec![10.0, 9.0, 8.0, 7.0, 6.0, 5.0];
+        series.extend(std::iter::repeat(4.0).take(30));
+        let ep = convergence_episode(&series, 0.05);
+        assert!(ep > 3 && ep < 20, "ep={ep}");
+    }
+
+    #[test]
+    fn empty_inputs_safe() {
+        assert!(mean(&[]).is_nan());
+        assert!(percentile(&[], 50.0).is_nan());
+        assert_eq!(convergence_episode(&[], 0.05), 0);
+        let w = Welford::new();
+        assert!(w.mean().is_nan());
+    }
+}

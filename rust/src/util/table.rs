@@ -1,0 +1,163 @@
+//! ASCII table rendering for paper-style experiment output.
+
+/// Column alignment.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple table builder: headers + rows of strings, rendered with
+/// box-drawing separators. All experiment CLIs print through this so the
+/// output mirrors the paper's tables.
+#[derive(Clone, Debug)]
+pub struct Table {
+    title: Option<String>,
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            title: None,
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            aligns: vec![Align::Right; headers.len()],
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn title(mut self, t: impl Into<String>) -> Self {
+        self.title = Some(t.into());
+        self
+    }
+
+    /// First column left-aligned (typical "method" column), rest right.
+    pub fn left_first(mut self) -> Self {
+        if !self.aligns.is_empty() {
+            self.aligns[0] = Align::Left;
+        }
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) {
+        self.row(cells.iter().map(|s| s.to_string()).collect());
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String], aligns: &[Align]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                let pad = widths[i] - cells[i].chars().count();
+                match aligns[i] {
+                    Align::Left => {
+                        s.push(' ');
+                        s.push_str(&cells[i]);
+                        s.push_str(&" ".repeat(pad + 1));
+                    }
+                    Align::Right => {
+                        s.push_str(&" ".repeat(pad + 1));
+                        s.push_str(&cells[i]);
+                        s.push(' ');
+                    }
+                }
+                s.push('|');
+            }
+            s
+        };
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.headers, &vec![Align::Left; ncol]));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &self.aligns));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out
+    }
+}
+
+/// Format a float with `prec` decimals (common cell helper).
+pub fn fnum(v: f64, prec: usize) -> String {
+    if v.is_nan() {
+        "-".to_string()
+    } else {
+        format!("{v:.prec$}")
+    }
+}
+
+/// "mean ± ci" cell.
+pub fn fci(mean: f64, ci: f64, prec: usize) -> String {
+    format!("{:.p$} ± {:.p$}", mean, ci, p = prec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["method", "delay (s)"]).left_first();
+        t.row_strs(&["LAD-TS", "7.67"]);
+        t.row_strs(&["DQN-TS", "9.59"]);
+        let s = t.render();
+        assert!(s.contains("| LAD-TS |"));
+        assert!(s.contains("      7.67 |") || s.contains("7.67 |"));
+        // all lines equal width
+        let lens: Vec<usize> =
+            s.lines().map(|l| l.chars().count()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn rejects_bad_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn title_and_helpers() {
+        let mut t = Table::new(&["x"]).title("Table V");
+        t.row(vec![fci(1.234, 0.05, 2)]);
+        let s = t.render();
+        assert!(s.starts_with("Table V\n"));
+        assert!(s.contains("1.23 ± 0.05"));
+        assert_eq!(fnum(f64::NAN, 2), "-");
+        assert_eq!(fnum(2.5, 1), "2.5");
+    }
+}

@@ -1,0 +1,84 @@
+//! Coordinator integration: the DEdgeAI prototype serving real requests
+//! through worker threads (each with its own PJRT client), plus the
+//! virtual Table-V protocol at scale.
+
+use dedgeai::coordinator::service::{DEdgeAi, ServeOptions};
+
+fn artifacts_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn base_opts() -> ServeOptions {
+    ServeOptions {
+        artifacts_dir: artifacts_dir(),
+        ..ServeOptions::default()
+    }
+}
+
+#[test]
+fn real_time_serving_with_three_workers() {
+    let opts = ServeOptions {
+        workers: 3,
+        requests: 9,
+        real_time: true,
+        z_steps: 3, // small z: fast real compute
+        scheduler: "least-loaded".into(),
+        ..base_opts()
+    };
+    let metrics = DEdgeAi::new(opts).run().unwrap();
+    assert_eq!(metrics.count(), 9);
+    assert!(metrics.median_latency() > 0.0);
+    assert!(metrics.mean_gen_time() > 0.0);
+    // all three workers should have been used
+    assert!(metrics.per_worker().iter().all(|&c| c > 0));
+}
+
+#[test]
+fn real_time_lad_policy_routes_through_hlo() {
+    // The LADN diffusion actor on the request path (b5 artifacts).
+    let opts = ServeOptions {
+        workers: 5,
+        requests: 10,
+        real_time: true,
+        z_steps: 2,
+        scheduler: "lad-ts".into(),
+        ..base_opts()
+    };
+    let metrics = DEdgeAi::new(opts).run().unwrap();
+    assert_eq!(metrics.count(), 10);
+}
+
+#[test]
+fn virtual_table5_scaling_beats_platforms_at_100() {
+    for (n, expect_max) in [(100usize, 460.0f64), (500, 2200.0), (1000, 4400.0)] {
+        let opts = ServeOptions {
+            requests: n,
+            scheduler: "least-loaded".into(),
+            ..base_opts()
+        };
+        let m = DEdgeAi::new(opts).run_virtual().unwrap();
+        let makespan = m.makespan();
+        // must beat the fastest platform (Stability.AI: 5.4 s/image)
+        assert!(
+            makespan < 5.4 * n as f64,
+            "N={n}: {makespan} not faster than best platform"
+        );
+        assert!(makespan < expect_max, "N={n}: {makespan} > {expect_max}");
+    }
+}
+
+#[test]
+fn virtual_scheduler_quality_ordering() {
+    // least-loaded must not lose to round-robin under equal z.
+    let run = |sched: &str| {
+        let opts = ServeOptions {
+            requests: 200,
+            scheduler: sched.into(),
+            ..base_opts()
+        };
+        DEdgeAi::new(opts).run_virtual().unwrap().makespan()
+    };
+    let ll = run("least-loaded");
+    let rr = run("round-robin");
+    assert!(ll <= rr * 1.05, "ll={ll} rr={rr}");
+}

@@ -1,0 +1,224 @@
+//! Cross-layer numerical integration: the AOT HLO graphs (Pallas kernel
+//! + JAX lowering, executed via PJRT) must agree with the native rust
+//! mirror to f32 tolerance — closing the rust == jnp-ref == kernel ==
+//! HLO chain whose python half is checked by pytest.
+//!
+//! Requires `make artifacts`. Tests panic (not skip) when artifacts are
+//! missing: artifacts are part of the build.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use dedgeai::nn::diffusion::{actor_forward, ActorScratch, BetaSchedule};
+use dedgeai::nn::{Mat, Mlp};
+use dedgeai::runtime::exec::BatchTensor;
+use dedgeai::runtime::{
+    ActorFwdExec, GenModelExec, Manifest, QFwdExec, TrainExec, TrainState,
+    XlaRuntime,
+};
+use dedgeai::util::rng::Rng;
+
+fn runtime() -> Rc<XlaRuntime> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Rc::new(XlaRuntime::new(&dir).expect("artifacts missing — run `make artifacts`"))
+}
+
+fn random_mat(rng: &mut Rng, rows: usize, cols: usize, scale: f32) -> Mat {
+    Mat::from_vec(
+        rows,
+        cols,
+        (0..rows * cols).map(|_| rng.normal_f32() * scale).collect(),
+    )
+}
+
+#[test]
+fn ladn_actor_fwd_matches_native_mirror() {
+    let rt = runtime();
+    let (b_dim, i_steps) = (20, 5);
+    let exec = ActorFwdExec::new(&rt, &Manifest::ladn_fwd(b_dim, i_steps)).unwrap();
+    let s_dim = b_dim + 2;
+    let mut rng = Rng::new(1234);
+    let mlp = Mlp::init(&mut rng, b_dim + rt.manifest.temb_dim + s_dim, 20, b_dim);
+    let params: Vec<Vec<f32>> =
+        mlp.flat_tensors().iter().map(|t| t.to_vec()).collect();
+
+    for n in [1usize, 7, 64, 128] {
+        let x0 = random_mat(&mut rng, n, b_dim, 1.0);
+        let s = random_mat(&mut rng, n, s_dim, 0.5);
+        // deterministic: no injected noise on either path
+        let (hlo_x, hlo_pi) = exec.run(&params, Some(&x0), &s, None).unwrap();
+
+        let sched =
+            BetaSchedule::new(i_steps, rt.manifest.beta_min, rt.manifest.beta_max);
+        let mut nat_x = x0.clone();
+        let mut scratch = ActorScratch::default();
+        let nat_pi = actor_forward(
+            &mlp,
+            &sched,
+            rt.manifest.temb_dim,
+            &mut nat_x,
+            &s,
+            None,
+            &mut scratch,
+        );
+        for (a, b) in hlo_x.data.iter().zip(nat_x.data.iter()) {
+            assert!((a - b).abs() < 1e-3, "x0 mismatch: {a} vs {b} (n={n})");
+        }
+        for (a, b) in hlo_pi.data.iter().zip(nat_pi.data.iter()) {
+            assert!((a - b).abs() < 1e-4, "pi mismatch: {a} vs {b} (n={n})");
+        }
+    }
+}
+
+#[test]
+fn ladn_actor_fwd_other_bdims_match() {
+    let rt = runtime();
+    for b_dim in [10usize, 30, 40] {
+        let exec =
+            ActorFwdExec::new(&rt, &Manifest::ladn_fwd(b_dim, 5)).unwrap();
+        let s_dim = b_dim + 2;
+        let mut rng = Rng::new(b_dim as u64);
+        let mlp =
+            Mlp::init(&mut rng, b_dim + rt.manifest.temb_dim + s_dim, 20, b_dim);
+        let params: Vec<Vec<f32>> =
+            mlp.flat_tensors().iter().map(|t| t.to_vec()).collect();
+        let x0 = random_mat(&mut rng, 16, b_dim, 1.0);
+        let s = random_mat(&mut rng, 16, s_dim, 0.5);
+        let (hlo_x, _) = exec.run(&params, Some(&x0), &s, None).unwrap();
+        let sched = BetaSchedule::new(5, rt.manifest.beta_min, rt.manifest.beta_max);
+        let mut nat_x = x0.clone();
+        let mut scratch = ActorScratch::default();
+        actor_forward(
+            &mlp, &sched, rt.manifest.temb_dim, &mut nat_x, &s, None, &mut scratch,
+        );
+        for (a, b) in hlo_x.data.iter().zip(nat_x.data.iter()) {
+            assert!((a - b).abs() < 1e-3, "b_dim={b_dim}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn sac_actor_fwd_matches_native_softmax() {
+    let rt = runtime();
+    let b_dim = 20;
+    let s_dim = b_dim + 2;
+    let exec = ActorFwdExec::new(&rt, &Manifest::sac_fwd(b_dim)).unwrap();
+    let mut rng = Rng::new(99);
+    let mlp = Mlp::init(&mut rng, s_dim, 20, b_dim);
+    let params: Vec<Vec<f32>> =
+        mlp.flat_tensors().iter().map(|t| t.to_vec()).collect();
+    let s = random_mat(&mut rng, 33, s_dim, 1.0);
+    let (logits, pi) = exec.run(&params, None, &s, None).unwrap();
+    let mut native = mlp.forward(&s);
+    for (a, b) in logits.data.iter().zip(native.data.iter()) {
+        assert!((a - b).abs() < 1e-4, "logits mismatch");
+    }
+    native.softmax_rows_inplace();
+    for (a, b) in pi.data.iter().zip(native.data.iter()) {
+        assert!((a - b).abs() < 1e-5, "pi mismatch");
+    }
+}
+
+#[test]
+fn dqn_fwd_matches_native() {
+    let rt = runtime();
+    let b_dim = 20;
+    let s_dim = b_dim + 2;
+    let exec = QFwdExec::new(&rt, &Manifest::dqn_fwd(b_dim)).unwrap();
+    let mut rng = Rng::new(7);
+    let mlp = Mlp::init(&mut rng, s_dim, 20, b_dim);
+    let params: Vec<Vec<f32>> =
+        mlp.flat_tensors().iter().map(|t| t.to_vec()).collect();
+    let s = random_mat(&mut rng, 16, s_dim, 1.0);
+    let q = exec.run(&params, &s).unwrap();
+    let native = mlp.forward(&s);
+    for (a, b) in q.data.iter().zip(native.data.iter()) {
+        assert!((a - b).abs() < 1e-4, "q mismatch");
+    }
+}
+
+#[test]
+fn ladn_train_step_runs_and_learns_on_fixed_batch() {
+    let rt = runtime();
+    let (b_dim, i_steps, k) = (20usize, 5usize, rt.manifest.train_k);
+    let s_dim = b_dim + 2;
+    let exec = TrainExec::new(&rt, &Manifest::ladn_train(b_dim, i_steps, true, false))
+        .unwrap();
+    let mut rng = Rng::new(5);
+    let mut state = TrainState::init(&exec.spec, 0.05, &mut rng).unwrap();
+    assert_eq!(state.step(), 0.0);
+
+    let randv = |rng: &mut Rng, n: usize, scale: f32| -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32() * scale).collect()
+    };
+    let s: Vec<f32> = (0..k * s_dim).map(|_| rng.f32()).collect();
+    let s2: Vec<f32> = (0..k * s_dim).map(|_| rng.f32()).collect();
+    let x = randv(&mut rng, k * b_dim, 1.0);
+    let x2 = randv(&mut rng, k * b_dim, 1.0);
+    let a: Vec<i32> = (0..k).map(|_| rng.range_u32(0, 19) as i32).collect();
+    let r: Vec<f32> = (0..k).map(|_| -rng.f32()).collect();
+
+    let mut first_loss = None;
+    let mut last_loss = 0.0;
+    for _ in 0..25 {
+        let batch = [
+            BatchTensor::F32(vec![k, s_dim], s.clone()),
+            BatchTensor::F32(vec![k, b_dim], x.clone()),
+            BatchTensor::I32(vec![k], a.clone()),
+            BatchTensor::F32(vec![k], r.clone()),
+            BatchTensor::F32(vec![k, s_dim], s2.clone()),
+            BatchTensor::F32(vec![k, b_dim], x2.clone()),
+            BatchTensor::F32(
+                vec![i_steps, k, b_dim],
+                randv(&mut rng, i_steps * k * b_dim, 1.0),
+            ),
+            BatchTensor::F32(
+                vec![i_steps, k, b_dim],
+                randv(&mut rng, i_steps * k * b_dim, 1.0),
+            ),
+        ];
+        let m = exec.run(&mut state, &batch).unwrap();
+        assert!(m.critic_loss.is_finite());
+        assert!(m.alpha > 0.0);
+        if first_loss.is_none() {
+            first_loss = Some(m.critic_loss);
+        }
+        last_loss = m.critic_loss;
+    }
+    assert_eq!(state.step(), 25.0);
+    assert!(
+        last_loss < first_loss.unwrap(),
+        "critic loss should fall on a fixed batch: {} -> {}",
+        first_loss.unwrap(),
+        last_loss
+    );
+}
+
+#[test]
+fn genmodel_generates_finite_latents_and_respects_z() {
+    let rt = runtime();
+    let gen = GenModelExec::new(&rt).unwrap();
+    let img = gen.generate("a dog on a grassy hill", 5, 42).unwrap();
+    assert_eq!(img.len(), rt.manifest.gen_latent * rt.manifest.gen_latent);
+    assert!(img.iter().all(|v| v.is_finite()));
+    // more denoising steps -> different (more refined) output
+    let img2 = gen.generate("a dog on a grassy hill", 10, 42).unwrap();
+    assert_ne!(img, img2);
+    // same prompt/seed/z -> deterministic
+    let img3 = gen.generate("a dog on a grassy hill", 5, 42).unwrap();
+    assert_eq!(img, img3);
+    // different prompt -> different conditioning -> different image
+    let img4 = gen.generate("a red car in the rain", 5, 42).unwrap();
+    assert_ne!(img, img4);
+}
+
+#[test]
+fn tokenizer_pads_and_truncates() {
+    let rt = runtime();
+    let gen = GenModelExec::new(&rt).unwrap();
+    let t1 = gen.tokenize("hi");
+    assert_eq!(t1.len(), rt.manifest.gen_tokens);
+    assert_eq!(t1[2..], vec![0; rt.manifest.gen_tokens - 2][..]);
+    let long = "x".repeat(100);
+    assert_eq!(gen.tokenize(&long).len(), rt.manifest.gen_tokens);
+}

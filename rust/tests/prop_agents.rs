@@ -1,0 +1,128 @@
+//! Property tests over the scheduling layer: every policy must emit
+//! valid ES indices, the oracle must dominate pointwise, the transition
+//! linker must preserve the Eqn-7 chain, and the latent memory must be
+//! stable under arbitrary access patterns.
+
+use dedgeai::agents::drl_common::{Rec, TransitionLinker};
+use dedgeai::agents::latent::LatentMemory;
+use dedgeai::agents::{make_scheduler, Method};
+use dedgeai::config::{AgentConfig, EnvConfig};
+use dedgeai::env::EdgeEnv;
+use dedgeai::util::prop;
+use dedgeai::util::rng::Rng;
+
+#[test]
+fn prop_heuristic_decisions_always_valid() {
+    prop::check("decisions in range", 50, |g| {
+        let mut cfg = EnvConfig::default();
+        cfg.num_bs = g.size(2, 10);
+        cfg.slots = 3;
+        cfg.n_max = g.size(1, 8);
+        let seed = g.usize(0, 1_000_000) as u64;
+        let env = EdgeEnv::new(&cfg, seed);
+        for method in [
+            Method::Random,
+            Method::RoundRobin,
+            Method::Local,
+            Method::LeastLoaded,
+            Method::OptTs,
+        ] {
+            let mut agent = make_scheduler(
+                method,
+                cfg.num_bs,
+                &AgentConfig::default(),
+                None,
+                seed,
+            )
+            .unwrap();
+            for b in 0..cfg.num_bs {
+                let tasks = env.tasks()[b].clone();
+                let picks = agent.decide(b, &tasks, &env);
+                assert_eq!(picks.len(), tasks.len());
+                assert!(picks.iter().all(|&es| es < cfg.num_bs), "{method:?}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_oracle_pointwise_dominates_any_fixed_choice() {
+    prop::check("oracle pointwise optimal", 60, |g| {
+        let mut cfg = EnvConfig::default();
+        cfg.num_bs = g.size(2, 10);
+        let seed = g.usize(0, 1_000_000) as u64;
+        let env = EdgeEnv::new(&cfg, seed);
+        let mut opt = make_scheduler(
+            Method::OptTs,
+            cfg.num_bs,
+            &AgentConfig::default(),
+            None,
+            seed,
+        )
+        .unwrap();
+        let task = env.tasks()[g.usize(0, cfg.num_bs - 1)][0].clone();
+        let chosen = opt.decide_one(&task, &env);
+        let best = env.peek_delay(&task, chosen).total();
+        let other = g.usize(0, cfg.num_bs - 1);
+        assert!(best <= env.peek_delay(&task, other).total() + 1e-9);
+    });
+}
+
+#[test]
+fn prop_transition_linker_preserves_chain() {
+    prop::check("linker chain", 80, |g| {
+        let mut linker = TransitionLinker::new(1);
+        let slots = g.size(1, 6);
+        let mut expected_sources: Vec<f32> = Vec::new();
+        let mut got_sources: Vec<f32> = Vec::new();
+        let mut tag = 0.0f32;
+        let mut all_tags: Vec<f32> = Vec::new();
+        for _slot in 0..slots {
+            let n = g.size(1, 7);
+            let recs: Vec<Rec> = (0..n)
+                .map(|_| {
+                    tag += 1.0;
+                    all_tags.push(tag);
+                    Rec { s: vec![tag], x: vec![], a: 0, r: None }
+                })
+                .collect();
+            if let Some(t) = linker.begin(0, recs) {
+                got_sources.push(t.s[0]);
+            }
+            let rewards: Vec<f32> = (0..n).map(|i| -(i as f32)).collect();
+            for t in linker.rewards(0, &rewards) {
+                got_sources.push(t.s[0]);
+            }
+        }
+        // every decision except the final one must appear exactly once
+        // as a transition source, in order
+        expected_sources.extend(&all_tags[..all_tags.len() - 1]);
+        assert_eq!(got_sources, expected_sources);
+    });
+}
+
+#[test]
+fn prop_latent_memory_consistent() {
+    prop::check("latent memory", 80, |g| {
+        let b_dim = g.size(2, 16);
+        let mut mem = LatentMemory::new(1, b_dim);
+        let mut rng = Rng::new(g.usize(0, 1_000_000) as u64);
+        let mut shadow: Vec<Option<Vec<f32>>> = vec![None; 64];
+        for _ in 0..g.size(1, 60) {
+            let n = g.usize(0, 63);
+            if g.f64(0.0, 1.0) < 0.5 {
+                let v = mem.get(0, n, &mut rng).to_vec();
+                if let Some(prev) = &shadow[n] {
+                    assert_eq!(&v, prev, "stored latent changed on read");
+                } else {
+                    shadow[n] = Some(v);
+                }
+            } else {
+                let new: Vec<f32> = (0..b_dim).map(|i| i as f32).collect();
+                let _ = mem.get(0, n, &mut rng); // ensure exists
+                mem.update(0, n, &new);
+                shadow[n] = Some(new);
+            }
+        }
+    });
+}

@@ -1,0 +1,135 @@
+//! Property tests over the edge-network substrate: queue dynamics,
+//! delay model, generator bounds, and environment invariants that must
+//! hold for any random workload.
+
+use dedgeai::config::EnvConfig;
+use dedgeai::env::{AigcTask, EdgeEnv};
+use dedgeai::util::prop;
+
+fn random_cfg(g: &mut prop::Gen) -> EnvConfig {
+    let mut cfg = EnvConfig::default();
+    cfg.num_bs = g.size(2, 12);
+    cfg.slots = g.size(2, 8);
+    cfg.n_max = g.size(1, 12);
+    cfg.periodicity = g.f64(0.0, 1.0);
+    cfg
+}
+
+#[test]
+fn prop_backlog_never_negative_and_conserved() {
+    prop::check("backlog conservation", 60, |g| {
+        let cfg = random_cfg(g);
+        let seed = g.usize(0, 1_000_000) as u64;
+        let mut env = EdgeEnv::new(&cfg, seed);
+        let mut assigned_work = 0.0f64;
+        while !env.done() {
+            let tasks: Vec<AigcTask> =
+                env.tasks().iter().flatten().cloned().collect();
+            for task in &tasks {
+                let es = g.usize(0, cfg.num_bs - 1);
+                let out = env.assign(task, es);
+                assigned_work += task.workload();
+                assert!(out.delay.total().is_finite());
+                assert!(out.delay.total() > 0.0);
+                assert!(out.delay.wait >= 0.0);
+            }
+            // pending work across ESs never exceeds everything assigned
+            let pending: f64 = (0..cfg.num_bs).map(|es| env.pending(es)).sum();
+            assert!(
+                pending <= assigned_work + 1.0,
+                "pending {pending} > assigned {assigned_work}"
+            );
+            env.advance_slot();
+            for es in 0..cfg.num_bs {
+                assert!(env.backlog(es) >= 0.0);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_delay_monotone_in_queue() {
+    prop::check("delay monotone in backlog", 60, |g| {
+        let cfg = random_cfg(g);
+        let seed = g.usize(0, 1_000_000) as u64;
+        let mut env = EdgeEnv::new(&cfg, seed);
+        let task = env.tasks()[0][0].clone();
+        let es = g.usize(0, cfg.num_bs - 1);
+        let before = env.peek_delay(&task, es).total();
+        // adding work to the ES can only increase the task's delay
+        env.assign(&task, es);
+        let after = env.peek_delay(&task, es).total();
+        assert!(
+            after >= before - 1e-9,
+            "delay decreased after queueing: {before} -> {after}"
+        );
+    });
+}
+
+#[test]
+fn prop_state_vector_well_formed() {
+    prop::check("state vector well-formed", 60, |g| {
+        let cfg = random_cfg(g);
+        let seed = g.usize(0, 1_000_000) as u64;
+        let env = EdgeEnv::new(&cfg, seed);
+        let mut s = Vec::new();
+        for tasks in env.tasks() {
+            for task in tasks {
+                env.state_for(task, &mut s);
+                assert_eq!(s.len(), cfg.state_dim());
+                assert!(s.iter().all(|v| v.is_finite()));
+                // normalised inputs stay in a sane range
+                assert!(s.iter().all(|&v| (-0.01..=5.01).contains(&v)));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_generator_respects_bounds_under_any_periodicity() {
+    prop::check("generator bounds", 80, |g| {
+        let cfg = random_cfg(g);
+        let seed = g.usize(0, 1_000_000) as u64;
+        let mut env = EdgeEnv::new(&cfg, seed);
+        for _ in 0..3 {
+            if env.done() {
+                break; // past the horizon task lists are empty by design
+            }
+            for (b, tasks) in env.tasks().iter().enumerate() {
+                assert!(!tasks.is_empty() && tasks.len() <= cfg.n_max);
+                for (n, t) in tasks.iter().enumerate() {
+                    assert_eq!(t.origin, b);
+                    assert_eq!(t.slot_index, n);
+                    assert!(t.d_in >= cfg.d_min && t.d_in <= cfg.d_max);
+                    assert!(t.z >= cfg.z_min && t.z <= cfg.z_max);
+                    assert!(t.rho >= cfg.rho_min && t.rho <= cfg.rho_max);
+                    assert!(t.workload() > 0.0);
+                }
+            }
+            env.advance_slot();
+        }
+    });
+}
+
+#[test]
+fn prop_episode_is_deterministic_in_seed() {
+    prop::check("episode determinism", 30, |g| {
+        let cfg = random_cfg(g);
+        let seed = g.usize(0, 1_000_000) as u64;
+        let run = |seed: u64| -> f64 {
+            let mut env = EdgeEnv::new(&cfg, seed);
+            let mut total = 0.0;
+            while !env.done() {
+                let tasks: Vec<AigcTask> =
+                    env.tasks().iter().flatten().cloned().collect();
+                for task in &tasks {
+                    total +=
+                        env.assign(task, task.origin % cfg.num_bs).delay.total();
+                }
+                env.advance_slot();
+            }
+            total
+        };
+        assert_eq!(run(seed).to_bits(), run(seed).to_bits());
+    });
+}
