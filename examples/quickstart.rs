@@ -6,7 +6,7 @@
 //! ```
 
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use dedgeai::agents::{make_scheduler, Method};
 use dedgeai::config::{AgentConfig, EnvConfig};
@@ -20,7 +20,7 @@ fn main() -> anyhow::Result<()> {
 
     // 1. The AOT runtime: HLO text -> PJRT CPU executables. Built once
     //    by `make artifacts`; no Python from here on.
-    let rt = Rc::new(XlaRuntime::new(Path::new("artifacts"))?);
+    let rt = Arc::new(XlaRuntime::new(Path::new("artifacts"))?);
     println!(
         "loaded {} AOT graphs (hidden={}, act_batch={})",
         rt.manifest.graphs.len(),

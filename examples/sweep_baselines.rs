@@ -6,7 +6,7 @@
 //! ```
 
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use dedgeai::agents::{make_scheduler, Method};
 use dedgeai::config::{AgentConfig, EnvConfig};
@@ -17,7 +17,7 @@ use dedgeai::util::table::{fnum, Table};
 
 fn main() -> anyhow::Result<()> {
     dedgeai::util::logger::init();
-    let rt = Rc::new(XlaRuntime::new(Path::new("artifacts"))?);
+    let rt = Arc::new(XlaRuntime::new(Path::new("artifacts"))?);
     let env_cfg = EnvConfig::default();
     let episodes = 10;
 

@@ -4,7 +4,7 @@
 mod common;
 
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use dedgeai::agents::{make_scheduler, Method};
 use dedgeai::config::{AgentConfig, EnvConfig};
@@ -15,7 +15,7 @@ use dedgeai::sim::runner::run_episode;
 
 fn main() {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let rt = Rc::new(XlaRuntime::new(&dir).expect("run `make artifacts` first"));
+    let rt = Arc::new(XlaRuntime::new(&dir).expect("run `make artifacts` first"));
     let env_cfg = EnvConfig::default();
     let agent_cfg = AgentConfig::default();
 

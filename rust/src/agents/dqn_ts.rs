@@ -1,7 +1,7 @@
 //! DQN-TS baseline (Mnih et al.): Q-network with epsilon-greedy
 //! exploration, soft-updated target, trained via the `dqn_train_*` HLO.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{ensure, Context, Result};
 
@@ -9,12 +9,12 @@ use crate::config::{AgentConfig, Backend};
 use crate::env::{AigcTask, EdgeEnv};
 use crate::nn::{Mat, Mlp, MlpScratch};
 use crate::runtime::exec::BatchTensor;
-use crate::runtime::{Manifest, Metrics, QFwdExec, TrainExec, TrainState, XlaRuntime};
+use crate::runtime::{Manifest, QFwdExec, TrainExec, TrainState, XlaRuntime};
 use crate::util::rng::Rng;
 
 use super::drl_common::{Cadence, Rec, TransitionLinker};
 use super::replay::ReplayBuffer;
-use super::{Method, Scheduler};
+use super::{Method, Scheduler, TickOutcome};
 
 pub struct DqnTsAgent {
     cfg: AgentConfig,
@@ -35,7 +35,7 @@ pub struct DqnTsAgent {
 
 impl DqnTsAgent {
     pub fn new(
-        rt: Rc<XlaRuntime>,
+        rt: Arc<XlaRuntime>,
         num_bs: usize,
         cfg: &AgentConfig,
         mut rng: Rng,
@@ -121,29 +121,40 @@ impl Scheduler for DqnTsAgent {
             env.state_for(task, &mut buf);
             s.row_mut(i).copy_from_slice(&buf);
         }
-        let q = match self.q_values(b, &s) {
-            Ok(q) => q,
-            Err(e) => {
-                log::error!("DQN forward failed: {e:#}");
-                return tasks.iter().map(|t| t.origin).collect();
-            }
-        };
-        let greedy = q.argmax_rows();
         let mut actions = Vec::with_capacity(n);
         let mut recs = Vec::with_capacity(n);
-        for i in 0..n {
-            let action = if self.rng.f64() < self.epsilon {
-                self.rng.range_usize(0, self.b_dim - 1)
-            } else {
-                greedy[i]
-            };
-            actions.push(action);
-            recs.push(Rec {
-                s: s.row(i).to_vec(),
-                x: Vec::new(),
-                a: action,
-                r: None,
-            });
+        match self.q_values(b, &s) {
+            Ok(q) => {
+                let greedy = q.argmax_rows();
+                for i in 0..n {
+                    let action = if self.rng.f64() < self.epsilon {
+                        self.rng.range_usize(0, self.b_dim - 1)
+                    } else {
+                        greedy[i]
+                    };
+                    actions.push(action);
+                    recs.push(Rec {
+                        s: s.row(i).to_vec(),
+                        x: Vec::new(),
+                        a: action,
+                        r: None,
+                    });
+                }
+            }
+            Err(e) => {
+                // Record the fallback decisions so the linker's reward
+                // arity stays consistent (see LadTsAgent::decide).
+                log::error!("DQN forward failed (local fallback): {e:#}");
+                for (i, task) in tasks.iter().enumerate() {
+                    actions.push(task.origin);
+                    recs.push(Rec {
+                        s: s.row(i).to_vec(),
+                        x: Vec::new(),
+                        a: task.origin,
+                        r: None,
+                    });
+                }
+            }
         }
         if let Some(cross) = self.linker.begin(b, recs) {
             self.replay[b].push(cross);
@@ -162,12 +173,12 @@ impl Scheduler for DqnTsAgent {
         }
     }
 
-    fn train_tick(&mut self, b: usize) -> Result<Option<Metrics>> {
+    fn train_tick(&mut self, b: usize) -> Result<TickOutcome> {
         let steps = self.cadence.take(b);
         if steps == 0
             || self.replay[b].len() < self.cfg.warmup.max(self.cfg.batch_k)
         {
-            return Ok(None);
+            return Ok(TickOutcome::default());
         }
         let idx = self.state_idx(b);
         let k = self.cfg.batch_k;
@@ -199,7 +210,7 @@ impl Scheduler for DqnTsAgent {
             self.b_dim,
             &self.states[idx].mlp_tensors("q")?,
         )?;
-        Ok(last)
+        Ok(TickOutcome { steps, metrics: last })
     }
 
     fn end_episode(&mut self) {

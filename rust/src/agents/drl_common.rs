@@ -54,8 +54,23 @@ impl TransitionLinker {
     /// Report realized rewards for the records of the last `begin(b)`,
     /// in order. Returns all intra-slot transitions; the slot's tail
     /// record is held back until the next `begin`.
+    ///
+    /// An empty current slot (no `begin` since the last harvest — e.g.
+    /// an agent whose forward pass failed before it could record its
+    /// decisions) drops the rewards instead of panicking; a *partial*
+    /// mismatch still asserts, because that means decisions and rewards
+    /// went out of sync.
     pub fn rewards(&mut self, b: usize, rewards: &[f32]) -> Vec<Transition> {
         let mut recs = std::mem::take(&mut self.current[b]);
+        if recs.is_empty() {
+            if !rewards.is_empty() {
+                log::warn!(
+                    "BS {b}: dropping {} rewards with no recorded decisions",
+                    rewards.len()
+                );
+            }
+            return Vec::new();
+        }
         assert_eq!(recs.len(), rewards.len(), "reward arity mismatch");
         for (rec, &r) in recs.iter_mut().zip(rewards) {
             rec.r = Some(r);
@@ -155,6 +170,19 @@ mod tests {
         assert!(l.rewards(0, &[-5.0]).is_empty());
         let t = l.begin(0, vec![rec(2.0)]).unwrap();
         assert_eq!((t.r, &t.s[..], &t.s2[..]), (-5.0, &[1.0][..], &[2.0][..]));
+    }
+
+    #[test]
+    fn rewards_without_begin_are_dropped_not_panicking() {
+        // Regression: a forward-failure fallback used to leave the slot
+        // empty while the runner still reported rewards — the arity
+        // assert then killed the whole run.
+        let mut l = TransitionLinker::new(2);
+        assert!(l.rewards(0, &[-1.0, -2.0]).is_empty());
+        // the other BS is unaffected and keeps linking normally
+        assert!(l.begin(1, vec![rec(1.0)]).is_none());
+        assert!(l.rewards(1, &[-5.0]).is_empty());
+        assert!(l.begin(1, vec![rec(2.0)]).is_some());
     }
 
     #[test]

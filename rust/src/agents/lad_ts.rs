@@ -11,7 +11,7 @@
 //! through the AOT `ladn_actor_fwd_*` graph (the deployed path);
 //! training always runs the `ladn_train_*` HLO via PJRT.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{ensure, Context, Result};
 
@@ -26,10 +26,10 @@ use crate::util::rng::Rng;
 use super::drl_common::{Cadence, Rec, TransitionLinker};
 use super::latent::LatentMemory;
 use super::replay::ReplayBuffer;
-use super::{Method, Scheduler};
+use super::{Method, Scheduler, TickOutcome};
 
 pub struct LadTsAgent {
-    rt: Rc<XlaRuntime>,
+    rt: Arc<XlaRuntime>,
     cfg: AgentConfig,
     b_dim: usize,
     s_dim: usize,
@@ -53,7 +53,7 @@ pub struct LadTsAgent {
 
 impl LadTsAgent {
     pub fn new(
-        rt: Rc<XlaRuntime>,
+        rt: Arc<XlaRuntime>,
         num_bs: usize,
         cfg: &AgentConfig,
         mut rng: Rng,
@@ -261,27 +261,41 @@ impl Scheduler for LadTsAgent {
             x.row_mut(i).copy_from_slice(&xi);
         }
         let x_start = x.clone();
-        let (x0, pi) = match self.forward(b, x, &s) {
-            Ok(v) => v,
-            Err(e) => {
-                log::error!("actor forward failed: {e:#}");
-                return tasks.iter().map(|t| t.origin).collect();
-            }
-        };
         let mut actions = Vec::with_capacity(n);
         let mut recs = Vec::with_capacity(n);
-        for i in 0..n {
-            let action = self.rng.categorical(pi.row(i));
-            actions.push(action);
-            if self.latent_memory {
-                self.mem.update(b, tasks[i].slot_index, x0.row(i));
+        match self.forward(b, x, &s) {
+            Ok((x0, pi)) => {
+                for i in 0..n {
+                    let action = self.rng.categorical(pi.row(i));
+                    actions.push(action);
+                    if self.latent_memory {
+                        self.mem.update(b, tasks[i].slot_index, x0.row(i));
+                    }
+                    recs.push(Rec {
+                        s: s.row(i).to_vec(),
+                        x: x_start.row(i).to_vec(),
+                        a: action,
+                        r: None,
+                    });
+                }
             }
-            recs.push(Rec {
-                s: s.row(i).to_vec(),
-                x: x_start.row(i).to_vec(),
-                a: action,
-                r: None,
-            });
+            Err(e) => {
+                // Fall back to local processing — but still record the
+                // decisions: the runner reports one reward per task, and
+                // an empty slot in the linker would trip its arity check
+                // on the next `rewards(b, ...)`. The executed fallback
+                // actions are legitimate experience, so learn from them.
+                log::error!("actor forward failed (local fallback): {e:#}");
+                for (i, task) in tasks.iter().enumerate() {
+                    actions.push(task.origin);
+                    recs.push(Rec {
+                        s: s.row(i).to_vec(),
+                        x: x_start.row(i).to_vec(),
+                        a: task.origin,
+                        r: None,
+                    });
+                }
+            }
         }
         if let Some(cross) = self.linker.begin(b, recs) {
             self.replay[b].push(cross);
@@ -300,21 +314,19 @@ impl Scheduler for LadTsAgent {
         }
     }
 
-    fn train_tick(&mut self, b: usize) -> Result<Option<Metrics>> {
+    fn train_tick(&mut self, b: usize) -> Result<TickOutcome> {
         let steps = self.cadence.take(b);
         if steps == 0 || self.replay[b].len() < self.cfg.warmup.max(self.cfg.batch_k)
         {
-            return Ok(None);
+            return Ok(TickOutcome::default());
         }
         let mut last = None;
         for _ in 0..steps {
             last = Some(self.train_batch(b)?);
         }
-        if last.is_some() {
-            self.rebuild_mirror(self.state_idx(b))?;
-            self.last_metrics = last;
-        }
-        Ok(last)
+        self.rebuild_mirror(self.state_idx(b))?;
+        self.last_metrics = last;
+        Ok(TickOutcome { steps, metrics: last })
     }
 
     fn end_episode(&mut self) {

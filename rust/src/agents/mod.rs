@@ -20,7 +20,7 @@ pub mod opt_ts;
 pub mod replay;
 pub mod sac_ts;
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -117,8 +117,22 @@ pub struct Transition {
     pub x2: Vec<f32>,
 }
 
+/// Outcome of one [`Scheduler::train_tick`]: how many gradient steps
+/// actually executed this tick (up to `Cadence::max_steps_per_tick`)
+/// and the metrics of the last one.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TickOutcome {
+    pub steps: usize,
+    pub metrics: Option<Metrics>,
+}
+
 /// A task scheduler (one per method; internally per-BS agents).
-pub trait Scheduler {
+///
+/// `Send` is a supertrait so schedulers can be constructed inside the
+/// `sim::parallel` worker threads (and moved across threads if a
+/// future harness wants to); every constituent (train states, replay
+/// buffers, RNGs, `Arc<XlaRuntime>`) is plain data or thread-safe.
+pub trait Scheduler: Send {
     fn method(&self) -> Method;
 
     /// Batched decision for BS `b`'s slot arrivals. Returns one ES
@@ -141,9 +155,10 @@ pub trait Scheduler {
     fn rewards(&mut self, _b: usize, _rewards: &[f64]) {}
 
     /// Periodic offline training (Algorithm 1 lines 15-18); called once
-    /// per (BS, slot). Returns metrics when train steps ran.
-    fn train_tick(&mut self, _b: usize) -> Result<Option<Metrics>> {
-        Ok(None)
+    /// per (BS, slot). Reports the number of gradient steps that ran
+    /// (possibly several per tick) and the last step's metrics.
+    fn train_tick(&mut self, _b: usize) -> Result<TickOutcome> {
+        Ok(TickOutcome::default())
     }
 
     /// Episode boundary (env reset follows).
@@ -156,7 +171,7 @@ pub fn make_scheduler(
     method: Method,
     num_bs: usize,
     cfg: &AgentConfig,
-    runtime: Option<Rc<XlaRuntime>>,
+    runtime: Option<Arc<XlaRuntime>>,
     seed: u64,
 ) -> Result<Box<dyn Scheduler>> {
     let rng = Rng::new(seed);
@@ -196,9 +211,9 @@ pub fn make_scheduler(
 }
 
 fn runtime_required(
-    runtime: Option<Rc<XlaRuntime>>,
+    runtime: Option<Arc<XlaRuntime>>,
     method: Method,
-) -> Result<Rc<XlaRuntime>> {
+) -> Result<Arc<XlaRuntime>> {
     match runtime {
         Some(rt) => Ok(rt),
         None => bail!(
@@ -228,6 +243,13 @@ mod tests {
         assert!(!Method::OptTs.is_learner());
         assert_eq!(Method::learners().len(), 4);
         assert!(Method::fig5_set().contains(&Method::OptTs));
+    }
+
+    #[test]
+    fn scheduler_trait_objects_are_send() {
+        fn assert_send<T: Send + ?Sized>() {}
+        assert_send::<dyn Scheduler>();
+        assert_send::<Box<dyn Scheduler>>();
     }
 
     #[test]

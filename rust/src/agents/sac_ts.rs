@@ -1,7 +1,7 @@
 //! SAC-TS baseline: discrete soft actor-critic with a categorical MLP
 //! actor (Haarnoja et al., as instantiated in the paper's §V.B).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{ensure, Context, Result};
 
@@ -9,12 +9,12 @@ use crate::config::{AgentConfig, Backend};
 use crate::env::{AigcTask, EdgeEnv};
 use crate::nn::{Mat, Mlp, MlpScratch};
 use crate::runtime::exec::BatchTensor;
-use crate::runtime::{ActorFwdExec, Manifest, Metrics, TrainExec, TrainState, XlaRuntime};
+use crate::runtime::{ActorFwdExec, Manifest, TrainExec, TrainState, XlaRuntime};
 use crate::util::rng::Rng;
 
 use super::drl_common::{Cadence, Rec, TransitionLinker};
 use super::replay::ReplayBuffer;
-use super::{Method, Scheduler};
+use super::{Method, Scheduler, TickOutcome};
 
 pub struct SacTsAgent {
     cfg: AgentConfig,
@@ -33,7 +33,7 @@ pub struct SacTsAgent {
 
 impl SacTsAgent {
     pub fn new(
-        rt: Rc<XlaRuntime>,
+        rt: Arc<XlaRuntime>,
         num_bs: usize,
         cfg: &AgentConfig,
         mut rng: Rng,
@@ -120,24 +120,35 @@ impl Scheduler for SacTsAgent {
             env.state_for(task, &mut buf);
             s.row_mut(i).copy_from_slice(&buf);
         }
-        let pi = match self.policy(b, &s) {
-            Ok(pi) => pi,
-            Err(e) => {
-                log::error!("SAC policy failed: {e:#}");
-                return tasks.iter().map(|t| t.origin).collect();
-            }
-        };
         let mut actions = Vec::with_capacity(n);
         let mut recs = Vec::with_capacity(n);
-        for i in 0..n {
-            let action = self.rng.categorical(pi.row(i));
-            actions.push(action);
-            recs.push(Rec {
-                s: s.row(i).to_vec(),
-                x: Vec::new(),
-                a: action,
-                r: None,
-            });
+        match self.policy(b, &s) {
+            Ok(pi) => {
+                for i in 0..n {
+                    let action = self.rng.categorical(pi.row(i));
+                    actions.push(action);
+                    recs.push(Rec {
+                        s: s.row(i).to_vec(),
+                        x: Vec::new(),
+                        a: action,
+                        r: None,
+                    });
+                }
+            }
+            Err(e) => {
+                // Record the fallback decisions so the linker's reward
+                // arity stays consistent (see LadTsAgent::decide).
+                log::error!("SAC policy failed (local fallback): {e:#}");
+                for (i, task) in tasks.iter().enumerate() {
+                    actions.push(task.origin);
+                    recs.push(Rec {
+                        s: s.row(i).to_vec(),
+                        x: Vec::new(),
+                        a: task.origin,
+                        r: None,
+                    });
+                }
+            }
         }
         if let Some(cross) = self.linker.begin(b, recs) {
             self.replay[b].push(cross);
@@ -156,12 +167,12 @@ impl Scheduler for SacTsAgent {
         }
     }
 
-    fn train_tick(&mut self, b: usize) -> Result<Option<Metrics>> {
+    fn train_tick(&mut self, b: usize) -> Result<TickOutcome> {
         let steps = self.cadence.take(b);
         if steps == 0
             || self.replay[b].len() < self.cfg.warmup.max(self.cfg.batch_k)
         {
-            return Ok(None);
+            return Ok(TickOutcome::default());
         }
         let idx = self.state_idx(b);
         let k = self.cfg.batch_k;
@@ -193,7 +204,7 @@ impl Scheduler for SacTsAgent {
             self.b_dim,
             &self.states[idx].mlp_tensors("actor")?,
         )?;
-        Ok(last)
+        Ok(TickOutcome { steps, metrics: last })
     }
 
     fn end_episode(&mut self) {

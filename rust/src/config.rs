@@ -327,6 +327,11 @@ pub struct ExpConfig {
     pub out_dir: String,
     /// Artifacts directory (HLO + manifest).
     pub artifacts_dir: String,
+    /// Worker threads for the harness fan-out (`sim::parallel`):
+    /// `0` = auto (the host's available parallelism), `1` = the old
+    /// sequential behavior. Results are bit-identical for any value —
+    /// each work unit owns its seed, env, and agent.
+    pub jobs: usize,
 }
 
 impl Default for ExpConfig {
@@ -337,6 +342,7 @@ impl Default for ExpConfig {
             seed: 42,
             out_dir: "results".into(),
             artifacts_dir: "artifacts".into(),
+            jobs: 0,
         }
     }
 }
@@ -349,6 +355,7 @@ impl ExpConfig {
             ("seed", Json::num(self.seed as f64)),
             ("out_dir", Json::str(self.out_dir.clone())),
             ("artifacts_dir", Json::str(self.artifacts_dir.clone())),
+            ("jobs", Json::num(self.jobs as f64)),
         ])
     }
 }
@@ -435,6 +442,15 @@ mod tests {
         assert_eq!(a.target_entropy, -1.0);
         assert_eq!(a.pool_size, 1000);
         assert_eq!(a.warmup, 300);
+    }
+
+    #[test]
+    fn exp_defaults_to_auto_jobs() {
+        // 0 = auto: `sim::parallel::resolve_jobs` turns it into the
+        // host's available parallelism at run time.
+        let e = ExpConfig::default();
+        assert_eq!(e.jobs, 0);
+        assert!(e.to_json().get("jobs").is_some());
     }
 
     #[test]

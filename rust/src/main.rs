@@ -11,7 +11,7 @@
 //! --replications N, --backend native|xla, plus per-experiment sweeps.
 
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -38,6 +38,8 @@ OPTIONS (shared):
   --seed N           base PRNG seed (default: 42)
   --episodes N       training episodes per run
   --replications N   independent replications per configuration
+  --jobs N           experiment worker threads (0 = auto/all cores,
+                     1 = sequential; results are bit-identical either way)
   --backend B        inference backend: native | xla (default native)
   --method M         lad-ts|d2sac|sac|dqn|opt|random|rr|local|ll
   --bs N             number of base stations (default 20)
@@ -102,12 +104,13 @@ fn exp_config(args: &Args) -> Result<ExpConfig> {
     cfg.seed = args.u64_or("seed", cfg.seed)?;
     cfg.out_dir = args.str_or("out", &cfg.out_dir);
     cfg.artifacts_dir = args.str_or("artifacts", &cfg.artifacts_dir);
+    cfg.jobs = args.usize_or("jobs", cfg.jobs)?;
     Ok(cfg)
 }
 
-fn load_runtime(exp: &ExpConfig) -> Option<Rc<XlaRuntime>> {
+fn load_runtime(exp: &ExpConfig) -> Option<Arc<XlaRuntime>> {
     match XlaRuntime::new(Path::new(&exp.artifacts_dir)) {
-        Ok(rt) => Some(Rc::new(rt)),
+        Ok(rt) => Some(Arc::new(rt)),
         Err(e) => {
             log::warn!("AOT runtime unavailable ({e}); learning methods disabled");
             None

@@ -2,23 +2,61 @@
 //!
 //! Loads HLO *text* (the interchange format — see DESIGN.md §3 and
 //! /opt/xla-example/README.md), compiles on the CPU PJRT client, and
-//! caches executables per graph name. `!Send` by construction: every
-//! thread owns its own `XlaRuntime`.
+//! caches executables per graph name.
+//!
+//! Thread-model: [`XlaRuntime`] is declared `Send + Sync` so it can
+//! ride inside `Arc` in `Send` schedulers (required by the parallel
+//! experiment harness). The in-tree discipline is still
+//! **share-nothing**: every `sim::parallel` work unit and every
+//! coordinator worker constructs its *own* runtime on the thread that
+//! uses it (compiling these tiny graphs costs milliseconds), so no
+//! PJRT client is ever driven from two threads concurrently — the
+//! `unsafe impl`s below only ever vouch for moving a runtime with its
+//! owning agent, not for concurrent use. See the SAFETY notes.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
 use super::artifacts::Manifest;
 
+/// A compiled PJRT executable wrapped for cross-thread sharing.
+pub struct SharedExec(xla::PjRtLoadedExecutable);
+
+// SAFETY: `PJRT_LoadedExecutable_Execute` (and the rest of the PJRT C
+// API) is documented thread-safe. The `xla` wrapper, however, may keep
+// a non-atomic handle to its client, so in-tree code keeps each
+// executable on the thread that compiled it (one runtime per work
+// unit / worker); these impls exist to satisfy the `Send` bounds on
+// that whole-ownership transfer, not to endorse concurrent use of one
+// executable from several threads.
+unsafe impl Send for SharedExec {}
+unsafe impl Sync for SharedExec {}
+
+impl SharedExec {
+    /// Borrow the underlying executable for `execute` calls.
+    pub fn raw(&self) -> &xla::PjRtLoadedExecutable {
+        &self.0
+    }
+}
+
 pub struct XlaRuntime {
     pub manifest: Manifest,
     client: xla::PjRtClient,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    cache: Mutex<HashMap<String, Arc<SharedExec>>>,
 }
+
+// SAFETY: `manifest` is plain data; `cache` is `Mutex`-guarded; the
+// PJRT CPU client is thread-safe per the PJRT C API contract. These
+// impls are what let a `Box<dyn Scheduler + Send>` own an
+// `Arc<XlaRuntime>`; in-tree callers uphold the stronger discipline
+// of constructing and using each runtime on a single thread (see the
+// module doc), so the wrapper's possibly non-atomic internal handles
+// are never mutated concurrently.
+unsafe impl Send for XlaRuntime {}
+unsafe impl Sync for XlaRuntime {}
 
 impl XlaRuntime {
     /// Create a CPU PJRT client and load the manifest from `dir`.
@@ -30,12 +68,19 @@ impl XlaRuntime {
             client.platform_name(),
             client.device_count()
         );
-        Ok(Self { manifest, client, cache: RefCell::new(HashMap::new()) })
+        Ok(Self { manifest, client, cache: Mutex::new(HashMap::new()) })
     }
 
     /// Compile (or fetch from cache) one graph by manifest name.
-    pub fn load(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.borrow().get(name) {
+    ///
+    /// The cache lock is held across compilation deliberately: it
+    /// serializes every `load`-path touch of the PJRT client, so even
+    /// a runtime that *is* shared across threads never drives the
+    /// client's compile entry point concurrently (compilation of
+    /// these tiny graphs is milliseconds; contention is a non-issue).
+    pub fn load(&self, name: &str) -> Result<Arc<SharedExec>> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(exe) = cache.get(name) {
             return Ok(exe.clone());
         }
         let path = self.manifest.hlo_path(name)?;
@@ -45,13 +90,13 @@ impl XlaRuntime {
         )
         .with_context(|| format!("parsing HLO text {}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(
+        let exe = Arc::new(SharedExec(
             self.client
                 .compile(&comp)
                 .with_context(|| format!("compiling graph '{name}'"))?,
-        );
+        ));
         log::debug!("compiled '{name}' in {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
-        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        cache.insert(name.to_string(), exe.clone());
         Ok(exe)
     }
 
@@ -61,7 +106,7 @@ impl XlaRuntime {
 
     /// Number of compiled executables held in cache.
     pub fn cached(&self) -> usize {
-        self.cache.borrow().len()
+        self.cache.lock().unwrap().len()
     }
 }
 

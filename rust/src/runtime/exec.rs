@@ -2,7 +2,7 @@
 //! Q-network forward (DQN), SAC/DQN train steps, and the generation
 //! model. These are the only places PJRT `execute` is called.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -10,7 +10,7 @@ use crate::nn::tensor::Mat;
 use crate::util::rng::Rng;
 
 use super::artifacts::{Dtype, GraphSpec};
-use super::client::{lit_f32, lit_i32, XlaRuntime};
+use super::client::{lit_f32, lit_i32, SharedExec, XlaRuntime};
 use super::params::TrainState;
 
 /// Metrics emitted by every train graph (manifest `meta.metrics`).
@@ -67,7 +67,7 @@ fn truncate_rows(data: Vec<f32>, rows_padded: usize, rows: usize, cols: usize) -
 
 /// Executor for `ladn_actor_fwd_*` and `sac_actor_fwd_*` graphs.
 pub struct ActorFwdExec {
-    exe: Rc<xla::PjRtLoadedExecutable>,
+    exe: Arc<SharedExec>,
     pub b_dim: usize,
     pub s_dim: usize,
     /// Denoising steps I (0 for the SAC categorical actor).
@@ -163,7 +163,7 @@ impl ActorFwdExec {
             )?);
         }
 
-        let outs = run_tuple(&self.exe, &args)?;
+        let outs = run_tuple(self.exe.raw(), &args)?;
         if outs.len() != 2 {
             bail!("actor_fwd returned {} outputs", outs.len());
         }
@@ -188,7 +188,7 @@ impl ActorFwdExec {
 // ---------------------------------------------------------------------------
 
 pub struct QFwdExec {
-    exe: Rc<xla::PjRtLoadedExecutable>,
+    exe: Arc<SharedExec>,
     pub b_dim: usize,
     pub s_dim: usize,
     pub act_batch: usize,
@@ -226,7 +226,7 @@ impl QFwdExec {
         args.push(lit_f32(&[self.b_dim], &params[5])?);
         let sp = pad_rows(s, self.act_batch);
         args.push(lit_f32(&[self.act_batch, self.s_dim], &sp.data)?);
-        let outs = run_tuple(&self.exe, &args)?;
+        let outs = run_tuple(self.exe.raw(), &args)?;
         Ok(truncate_rows(
             outs[0].to_vec::<f32>()?,
             self.act_batch,
@@ -249,7 +249,7 @@ pub enum BatchTensor {
 /// Executor for `*_train_*` graphs: threads the full TrainState through
 /// the HLO and returns the metrics vector.
 pub struct TrainExec {
-    exe: Rc<xla::PjRtLoadedExecutable>,
+    exe: Arc<SharedExec>,
     pub spec: GraphSpec,
 }
 
@@ -299,7 +299,7 @@ impl TrainExec {
                 _ => bail!("batch tensor '{}' dtype mismatch", spec.name),
             }
         }
-        let outs = run_tuple(&self.exe, &args)?;
+        let outs = run_tuple(self.exe.raw(), &args)?;
         if outs.len() != state_len + 1 {
             bail!("train graph returned {} outputs", outs.len());
         }
@@ -318,8 +318,8 @@ impl TrainExec {
 
 /// Executor pair for `genmodel_encode` + `genmodel_step`.
 pub struct GenModelExec {
-    encode: Rc<xla::PjRtLoadedExecutable>,
-    step: Rc<xla::PjRtLoadedExecutable>,
+    encode: Arc<SharedExec>,
+    step: Arc<SharedExec>,
     pub latent: usize,
     pub cond: usize,
     pub tokens: usize,
@@ -355,7 +355,7 @@ impl GenModelExec {
             bail!("token length {} != {}", tokens.len(), self.tokens);
         }
         let args = [lit_i32(&[self.tokens], tokens)?];
-        let outs = run_tuple(&self.encode, &args)?;
+        let outs = run_tuple(self.encode.raw(), &args)?;
         Ok(outs[0].to_vec::<f32>()?)
     }
 
@@ -371,7 +371,7 @@ impl GenModelExec {
             lit_f32(&[self.cond], cond)?,
             lit_f32(&[], &[step_idx])?,
         ];
-        let outs = run_tuple(&self.step, &args)?;
+        let outs = run_tuple(self.step.raw(), &args)?;
         Ok(outs[0].to_vec::<f32>()?)
     }
 

@@ -3,10 +3,11 @@
 //! them from the rust request path through the `xla` crate's PJRT CPU
 //! client. Python never runs here.
 //!
-//! Thread-model: PJRT wrapper types are `!Send` (raw pointers), so each
-//! thread that needs inference owns its own [`XlaRuntime`] — the
-//! simulator runs one on its thread; every coordinator worker creates
-//! its own (compilation of these tiny graphs is milliseconds).
+//! Thread-model: share-nothing. Every thread that needs inference
+//! constructs its own [`XlaRuntime`] (compiling these tiny graphs is
+//! milliseconds) — `sim::parallel` work units and coordinator workers
+//! alike. The runtime is declared `Send + Sync` (see `client.rs`
+//! SAFETY notes) only so `Send` schedulers can own one via `Arc`.
 
 pub mod artifacts;
 pub mod client;
@@ -14,6 +15,6 @@ pub mod exec;
 pub mod params;
 
 pub use artifacts::{Dtype, GraphSpec, Manifest, TensorSpec};
-pub use client::XlaRuntime;
+pub use client::{SharedExec, XlaRuntime};
 pub use exec::{ActorFwdExec, GenModelExec, Metrics, QFwdExec, TrainExec};
 pub use params::TrainState;

@@ -8,14 +8,26 @@
 //! experiment prints a paper-style ASCII table and writes JSON + CSV
 //! under the results directory.
 //!
+//! Parallelism: every training run of a figure (replication × sweep
+//! point × method) is an independent [`TrainUnit`] — it owns its seed,
+//! env, and agent, and learner units borrow their worker thread's
+//! `XlaRuntime` (constructed once per worker, thread-locally cached),
+//! so no PJRT client is ever touched from two threads. The harness
+//! fans the full grid out over `--jobs` workers via
+//! [`sim::parallel`](super::parallel) and collects results in
+//! submission order. Outputs are bit-identical for any `--jobs` value
+//! (covered by the `parallel_parity` test).
+//!
 //! Cost control: all experiments train per-BS agents (faithful to
 //! Algorithm 1 — parameter sharing was measured to herd all BSs onto
 //! the same ES and is exposed only as an ablation flag); sweeps run at
 //! half the fig5 episode budget. EXPERIMENTS.md records the settings
 //! used in the recorded runs.
 
+use std::cell::RefCell;
+use std::collections::HashMap;
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -30,6 +42,7 @@ use crate::util::stats::{convergence_episode, mean, std};
 use crate::util::table::{fci, fnum, Table};
 
 use super::output;
+use super::parallel;
 use super::runner::run_training;
 
 /// Everything an experiment needs.
@@ -37,15 +50,108 @@ struct Ctx<'a> {
     env: &'a EnvConfig,
     agent: &'a AgentConfig,
     exp: &'a ExpConfig,
-    runtime: Option<Rc<XlaRuntime>>,
+    runtime: Option<Arc<XlaRuntime>>,
 }
 
 impl<'a> Ctx<'a> {
-    fn runtime(&self) -> Result<Rc<XlaRuntime>> {
+    fn runtime(&self) -> Result<Arc<XlaRuntime>> {
         self.runtime
             .clone()
             .context("AOT artifacts required (run `make artifacts`)")
     }
+
+    /// Build the grid unit for replication `rep` of one sweep cell.
+    /// The seed depends only on `rep`, matching the pre-parallel
+    /// harness, so every cell reuses the same replication seeds.
+    fn unit(
+        &self,
+        method: Method,
+        env_cfg: &EnvConfig,
+        agent_cfg: &AgentConfig,
+        episodes: usize,
+        rep: usize,
+    ) -> Result<TrainUnit> {
+        Ok(TrainUnit {
+            method,
+            env: env_cfg.clone(),
+            agent: agent_cfg.clone(),
+            episodes,
+            seed: self.exp.seed.wrapping_add(rep as u64 * 7919),
+            artifacts: if method.is_learner() {
+                // Fail fast (before spawning workers) when the AOT
+                // artifacts are unavailable.
+                self.runtime()?;
+                Some(self.exp.artifacts_dir.clone())
+            } else {
+                None
+            },
+        })
+    }
+}
+
+/// One independent training run of an experiment grid — the unit of
+/// parallelism. Public so integration tests can drive the executor
+/// directly (e.g. the `--jobs` parity test).
+///
+/// Learner units carry the artifacts *directory*, not a runtime: each
+/// worker thread constructs (and thread-locally caches) its own
+/// `XlaRuntime`, so no PJRT client is ever shared across threads
+/// (same share-nothing discipline as the coordinator workers).
+pub struct TrainUnit {
+    pub method: Method,
+    pub env: EnvConfig,
+    pub agent: AgentConfig,
+    pub episodes: usize,
+    pub seed: u64,
+    pub artifacts: Option<String>,
+}
+
+/// The calling worker thread's runtime for `dir`: constructed on
+/// first use, then reused for every unit this thread runs — one PJRT
+/// client and one compile per graph per *worker*, not per unit (the
+/// pre-parallel harness compiled once total; per-worker is the
+/// share-nothing equivalent).
+fn worker_runtime(dir: &str) -> Result<Arc<XlaRuntime>> {
+    thread_local! {
+        static CACHE: RefCell<HashMap<String, Arc<XlaRuntime>>> =
+            RefCell::new(HashMap::new());
+    }
+    CACHE.with(|cache| {
+        let mut cache = cache.borrow_mut();
+        if let Some(rt) = cache.get(dir) {
+            return Ok(rt.clone());
+        }
+        let rt = Arc::new(
+            XlaRuntime::new(Path::new(dir))
+                .context("loading AOT artifacts for train unit")?,
+        );
+        cache.insert(dir.to_string(), rt.clone());
+        Ok(rt)
+    })
+}
+
+/// Train every unit, fanned out over `jobs` workers (`0` = auto,
+/// `1` = sequential), and return each unit's per-episode delay curve
+/// in unit order. Results are bit-identical for any `jobs` value:
+/// every unit owns its seed, env, agent, and (per worker thread)
+/// runtime, and the executor only orders result collection.
+pub fn run_train_units(units: Vec<TrainUnit>, jobs: usize) -> Result<Vec<Vec<f64>>> {
+    let closures: Vec<_> = units
+        .into_iter()
+        .map(|u| {
+            move || -> Result<Vec<f64>> {
+                let runtime = match &u.artifacts {
+                    Some(dir) => Some(worker_runtime(dir)?),
+                    None => None,
+                };
+                let mut agent =
+                    make_scheduler(u.method, u.env.num_bs, &u.agent, runtime, u.seed)?;
+                let run = run_training(&u.env, agent.as_mut(), u.episodes, u.seed)?;
+                Ok(run.episode_delays)
+            }
+        })
+        .collect();
+    parallel::run_indexed(jobs, closures)
 }
 
 /// Dispatch one experiment id (or `all`).
@@ -56,12 +162,17 @@ pub fn run_experiment(
     exp: &ExpConfig,
 ) -> Result<()> {
     let runtime = XlaRuntime::new(Path::new(&exp.artifacts_dir))
-        .map(Rc::new)
+        .map(Arc::new)
         .map_err(|e| {
             log::warn!("artifacts unavailable: {e}");
             e
         })
         .ok();
+    log::info!(
+        "experiment harness: {} worker(s) (--jobs {})",
+        parallel::resolve_jobs(exp.jobs),
+        exp.jobs
+    );
     let ctx = Ctx { env, agent, exp, runtime };
     match id {
         "fig5" => fig5(&ctx),
@@ -91,8 +202,8 @@ pub fn run_experiment(
     }
 }
 
-/// Train `method` for the configured replications; returns the
-/// per-episode delay curves.
+/// Train `method` for the configured replications (fanned out over the
+/// configured workers); returns the per-episode delay curves.
 fn train_curves(
     ctx: &Ctx,
     method: Method,
@@ -100,20 +211,10 @@ fn train_curves(
     agent_cfg: &AgentConfig,
     episodes: usize,
 ) -> Result<Vec<Vec<f64>>> {
-    let mut curves = Vec::new();
-    for rep in 0..ctx.exp.replications {
-        let seed = ctx.exp.seed.wrapping_add(rep as u64 * 7919);
-        let runtime = if method.is_learner() {
-            Some(ctx.runtime()?)
-        } else {
-            None
-        };
-        let mut agent =
-            make_scheduler(method, env_cfg.num_bs, agent_cfg, runtime, seed)?;
-        let run = run_training(env_cfg, agent.as_mut(), episodes, seed)?;
-        curves.push(run.episode_delays);
-    }
-    Ok(curves)
+    let units = (0..ctx.exp.replications)
+        .map(|rep| ctx.unit(method, env_cfg, agent_cfg, episodes, rep))
+        .collect::<Result<Vec<_>>>()?;
+    run_train_units(units, ctx.exp.jobs)
 }
 
 /// Mean curve across replications.
@@ -274,15 +375,31 @@ fn sweep_experiment(ctx: &Ctx, kind: SweepKind) -> Result<()> {
         Method::LadTs,
         Method::OptTs,
     ];
+    let reps = ctx.exp.replications;
     println!(
         "{} — mean service delay vs {} ({} episodes, {} reps, per-BS agents)",
         kind.id(),
         kind.label(),
         episodes,
-        ctx.exp.replications
+        reps
     );
 
+    // Flatten the full grid (point × method × replication) into
+    // independent units and fan them all out at once: the executor
+    // keeps unit order, so cell c's curves live at c*reps..(c+1)*reps.
     let points = kind.points();
+    let mut units = Vec::with_capacity(points.len() * methods.len() * reps);
+    for &p in &points {
+        let mut env_cfg = ctx.env.clone();
+        kind.apply(&mut env_cfg, p);
+        for &method in &methods {
+            for rep in 0..reps {
+                units.push(ctx.unit(method, &env_cfg, &agent_cfg, episodes, rep)?);
+            }
+        }
+    }
+    let curves = run_train_units(units, ctx.exp.jobs)?;
+
     let mut header: Vec<&str> = vec![kind.label()];
     header.extend(methods.iter().map(|m| m.name()));
     let mut table = Table::new(&header)
@@ -291,15 +408,13 @@ fn sweep_experiment(ctx: &Ctx, kind: SweepKind) -> Result<()> {
     let mut result = Json::obj();
     let mut csv_rows = Vec::new();
 
-    for &p in &points {
-        let mut env_cfg = ctx.env.clone();
-        kind.apply(&mut env_cfg, p);
+    for (pi, &p) in points.iter().enumerate() {
         let mut row = vec![format!("{p}")];
         let mut csv_row = vec![p];
         let mut point_json = Json::obj();
-        for &method in &methods {
-            let curves = train_curves(ctx, method, &env_cfg, &agent_cfg, episodes)?;
-            let tail = converged_per_rep(&curves, 0.2);
+        for (mi, &method) in methods.iter().enumerate() {
+            let cell = (pi * methods.len() + mi) * reps;
+            let tail = converged_per_rep(&curves[cell..cell + reps], 0.2);
             let m = mean(&tail);
             row.push(fnum(m, 2));
             csv_row.push(m);
@@ -328,17 +443,26 @@ fn sweep_experiment(ctx: &Ctx, kind: SweepKind) -> Result<()> {
 fn fig8a(ctx: &Ctx) -> Result<()> {
     let episodes = (ctx.exp.episodes / 2).max(10);
     let steps = [1usize, 2, 3, 5, 7, 10];
+    let reps = ctx.exp.replications;
     println!("fig8a — LAD-TS delay vs denoising steps I ({episodes} episodes)");
+
+    let mut units = Vec::with_capacity(steps.len() * reps);
+    for &i in &steps {
+        let mut agent_cfg = ctx.agent.clone();
+        agent_cfg.denoise_steps = i;
+        for rep in 0..reps {
+            units.push(ctx.unit(Method::LadTs, ctx.env, &agent_cfg, episodes, rep)?);
+        }
+    }
+    let curves = run_train_units(units, ctx.exp.jobs)?;
+
     let mut table = Table::new(&["I", "mean delay (s)", "std"])
         .left_first()
         .title("Fig. 8(a)");
     let mut result = Json::obj();
     let mut csv = Vec::new();
-    for &i in &steps {
-        let mut agent_cfg = ctx.agent.clone();
-        agent_cfg.denoise_steps = i;
-        let curves = train_curves(ctx, Method::LadTs, ctx.env, &agent_cfg, episodes)?;
-        let tail = converged_per_rep(&curves, 0.2);
+    for (si, &i) in steps.iter().enumerate() {
+        let tail = converged_per_rep(&curves[si * reps..(si + 1) * reps], 0.2);
         let (m, s) = (mean(&tail), std(&tail));
         table.row(vec![i.to_string(), fnum(m, 2), fnum(s, 2)]);
         result.set(&i.to_string(), Json::num(m));
@@ -352,21 +476,30 @@ fn fig8a(ctx: &Ctx) -> Result<()> {
 fn fig8b(ctx: &Ctx) -> Result<()> {
     let episodes = (ctx.exp.episodes / 2).max(10);
     let alphas = [0.01, 0.05, 0.1, 0.2, 0.5];
+    let reps = ctx.exp.replications;
     println!(
         "fig8b — LAD-TS delay vs entropy temperature alpha \
          ({episodes} episodes, autotune off)"
     );
+
+    let mut units = Vec::with_capacity(alphas.len() * reps);
+    for &a in &alphas {
+        let mut agent_cfg = ctx.agent.clone();
+        agent_cfg.alpha0 = a;
+        agent_cfg.alpha_autotune = false; // fixed temperature sweep
+        for rep in 0..reps {
+            units.push(ctx.unit(Method::LadTs, ctx.env, &agent_cfg, episodes, rep)?);
+        }
+    }
+    let curves = run_train_units(units, ctx.exp.jobs)?;
+
     let mut table = Table::new(&["alpha", "mean delay (s)", "std"])
         .left_first()
         .title("Fig. 8(b)");
     let mut result = Json::obj();
     let mut csv = Vec::new();
-    for &a in &alphas {
-        let mut agent_cfg = ctx.agent.clone();
-        agent_cfg.alpha0 = a;
-        agent_cfg.alpha_autotune = false; // fixed temperature sweep
-        let curves = train_curves(ctx, Method::LadTs, ctx.env, &agent_cfg, episodes)?;
-        let tail = converged_per_rep(&curves, 0.2);
+    for (ai, &a) in alphas.iter().enumerate() {
+        let tail = converged_per_rep(&curves[ai * reps..(ai + 1) * reps], 0.2);
         let (m, s) = (mean(&tail), std(&tail));
         table.row(vec![format!("{a}"), fnum(m, 2), fnum(s, 2)]);
         result.set(&format!("{a}"), Json::num(m));
@@ -508,10 +641,27 @@ fn mem(ctx: &Ctx) -> Result<()> {
 
 fn ablation(ctx: &Ctx) -> Result<()> {
     let episodes = (ctx.exp.episodes / 2).max(10);
+    let reps = ctx.exp.replications;
     println!(
         "Ablation — workload periodicity vs latent-memory advantage, and \
          the Eqn-15 actor-loss form ({episodes} episodes, shared agents)"
     );
+
+    // Grid 1: periodicity × {LAD-TS, D2SAC-TS}.
+    let periods = [0.0, 0.5, 0.85, 1.0];
+    let pair = [Method::LadTs, Method::D2SacTs];
+    let mut units = Vec::with_capacity(periods.len() * pair.len() * reps);
+    for &p in &periods {
+        let mut env_cfg = ctx.env.clone();
+        env_cfg.periodicity = p;
+        for &method in &pair {
+            for rep in 0..reps {
+                units.push(ctx.unit(method, &env_cfg, ctx.agent, episodes, rep)?);
+            }
+        }
+    }
+    let curves = run_train_units(units, ctx.exp.jobs)?;
+
     let mut table = Table::new(&[
         "periodicity",
         "LAD-TS (s)",
@@ -521,20 +671,11 @@ fn ablation(ctx: &Ctx) -> Result<()> {
     .left_first()
     .title("Latent action memory vs workload periodicity");
     let mut result = Json::obj();
-    for &p in &[0.0, 0.5, 0.85, 1.0] {
-        let mut env_cfg = ctx.env.clone();
-        env_cfg.periodicity = p;
-        let agent_cfg = ctx.agent.clone();
-        let lad = {
-            let curves =
-                train_curves(ctx, Method::LadTs, &env_cfg, &agent_cfg, episodes)?;
-            mean(&converged_per_rep(&curves, 0.2))
-        };
-        let d2 = {
-            let curves =
-                train_curves(ctx, Method::D2SacTs, &env_cfg, &agent_cfg, episodes)?;
-            mean(&converged_per_rep(&curves, 0.2))
-        };
+    for (pi, &p) in periods.iter().enumerate() {
+        let cell = pi * pair.len() * reps;
+        let lad = mean(&converged_per_rep(&curves[cell..cell + reps], 0.2));
+        let d2 =
+            mean(&converged_per_rep(&curves[cell + reps..cell + 2 * reps], 0.2));
         table.row(vec![
             format!("{p}"),
             fnum(lad, 2),
@@ -548,19 +689,28 @@ fn ablation(ctx: &Ctx) -> Result<()> {
     }
     println!("{}", table.render());
 
-    // actor-loss form ablation (standard vs the paper's squared Eqn 15)
+    // Grid 2: actor-loss form (standard vs the paper's squared Eqn 15).
+    let forms = [
+        ("standard", crate::config::ActorLoss::Standard),
+        ("paper (Eqn 15)", crate::config::ActorLoss::Paper),
+    ];
+    let mut units = Vec::with_capacity(forms.len() * reps);
+    for (_, form) in forms {
+        let mut agent_cfg = ctx.agent.clone();
+        agent_cfg.actor_loss = form;
+        for rep in 0..reps {
+            units.push(ctx.unit(Method::LadTs, ctx.env, &agent_cfg, episodes, rep)?);
+        }
+    }
+    let curves = run_train_units(units, ctx.exp.jobs)?;
+
     let mut t2 = Table::new(&["actor loss", "LAD-TS delay (s)"])
         .left_first()
         .title("Eqn-15 form ablation");
-    for (label, form) in [
-        ("standard", crate::config::ActorLoss::Standard),
-        ("paper (Eqn 15)", crate::config::ActorLoss::Paper),
-    ] {
-        let mut agent_cfg = ctx.agent.clone();
-        agent_cfg.actor_loss = form;
-        let curves = train_curves(ctx, Method::LadTs, ctx.env, &agent_cfg, episodes)?;
-        let m = mean(&converged_per_rep(&curves, 0.2));
-        t2.row(vec![label.into(), fnum(m, 2)]);
+    for (fi, (label, _)) in forms.iter().enumerate() {
+        let m =
+            mean(&converged_per_rep(&curves[fi * reps..(fi + 1) * reps], 0.2));
+        t2.row(vec![(*label).into(), fnum(m, 2)]);
         result.set(&format!("actor_loss_{label}"), Json::num(m));
     }
     println!("{}", t2.render());

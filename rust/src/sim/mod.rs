@@ -1,9 +1,11 @@
 //! Simulation layer: the episode runner implementing Algorithm 1's
-//! online loop, and the experiment harness regenerating every figure
-//! and table of the paper's evaluation (§V, §VI).
+//! online loop, the experiment harness regenerating every figure and
+//! table of the paper's evaluation (§V, §VI), and the deterministic
+//! multi-core executor that fans the harness out over `--jobs` workers.
 
 pub mod experiments;
 pub mod output;
+pub mod parallel;
 pub mod runner;
 
 pub use runner::{run_episode, EpisodeStats, TrainRun};

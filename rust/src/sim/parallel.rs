@@ -1,0 +1,161 @@
+//! Deterministic multi-core fan-out for the experiment harness.
+//!
+//! Every work unit (one replication / sweep-cell training run) is
+//! independent by construction: it owns its seed, env, and agent, so
+//! no scheduling order can change any number it produces. The executor
+//! therefore only has to (a) hand each queued unit to exactly one
+//! worker and (b) collect results back into submission order — which
+//! is why `--jobs N` and `--jobs 1` yield bit-identical outputs.
+//!
+//! Built on `std::thread::scope` (no external dependencies): workers
+//! pull unit indices from an atomic counter, so the queue needs no
+//! locking beyond one `Mutex` per slot for handoff.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+/// Resolve a requested `--jobs` value: `0` means auto (the host's
+/// available parallelism), anything else is taken literally.
+pub fn resolve_jobs(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    }
+}
+
+/// Run every closure in `units` on up to `jobs` worker threads
+/// (`0` = auto) and return the outputs in submission order.
+///
+/// Failure mirrors the sequential path's stop-early semantics: once
+/// any unit errors, workers stop *starting* new units (in-flight ones
+/// finish — units are not cancellable mid-run), and the reported
+/// error is the failed unit with the lowest index among those that
+/// ran. A grid that errors immediately therefore doesn't burn the
+/// rest of its compute budget first.
+pub fn run_indexed<T, F>(jobs: usize, units: Vec<F>) -> Result<Vec<T>>
+where
+    T: Send,
+    F: FnOnce() -> Result<T> + Send,
+{
+    let n = units.len();
+    let jobs = resolve_jobs(jobs).min(n.max(1));
+    if jobs <= 1 {
+        return units.into_iter().map(|f| f()).collect();
+    }
+
+    let queue: Vec<Mutex<Option<F>>> =
+        units.into_iter().map(|f| Mutex::new(Some(f))).collect();
+    let results: Vec<Mutex<Option<Result<T>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    let failed = AtomicBool::new(false);
+
+    std::thread::scope(|s| {
+        for _ in 0..jobs {
+            s.spawn(|| loop {
+                if failed.load(Ordering::Relaxed) {
+                    break;
+                }
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let unit = queue[i]
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .expect("unit dispatched twice");
+                let out = unit();
+                if out.is_err() {
+                    failed.store(true, Ordering::Relaxed);
+                }
+                *results[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+
+    // Collect in submission order; surface the lowest-index error
+    // among the units that ran. After a failure, later slots may be
+    // empty (their units were never started).
+    let had_failure = failed.into_inner();
+    let mut out = Vec::with_capacity(n);
+    for slot in results {
+        match slot.into_inner().unwrap() {
+            Some(Ok(v)) => out.push(v),
+            Some(Err(e)) => return Err(e),
+            None if had_failure => continue,
+            None => unreachable!("worker exited without storing a result"),
+        }
+    }
+    assert!(!had_failure, "failure flagged but no unit stored an error");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::bail;
+
+    #[test]
+    fn resolve_jobs_auto_is_at_least_one() {
+        assert!(resolve_jobs(0) >= 1);
+        assert_eq!(resolve_jobs(3), 3);
+    }
+
+    #[test]
+    fn results_come_back_in_submission_order() {
+        // Stagger run times so completion order differs from submission
+        // order; collection must still be by index.
+        let units: Vec<_> = (0..32usize)
+            .map(|i| {
+                move || {
+                    std::thread::sleep(std::time::Duration::from_micros(
+                        ((32 - i) * 50) as u64,
+                    ));
+                    Ok(i * i)
+                }
+            })
+            .collect();
+        let out = run_indexed(8, units).unwrap();
+        assert_eq!(out, (0..32).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn jobs_values_agree() {
+        let make = || {
+            (0..10u64)
+                .map(|i| move || Ok(crate::util::rng::Rng::new(i).next_u64()))
+                .collect::<Vec<_>>()
+        };
+        let seq = run_indexed(1, make()).unwrap();
+        let par = run_indexed(4, make()).unwrap();
+        let auto = run_indexed(0, make()).unwrap();
+        assert_eq!(seq, par);
+        assert_eq!(seq, auto);
+    }
+
+    #[test]
+    fn first_error_by_index_wins() {
+        let units: Vec<Box<dyn FnOnce() -> Result<usize> + Send>> = vec![
+            Box::new(|| Ok(1)),
+            Box::new(|| bail!("unit 1 failed")),
+            Box::new(|| bail!("unit 2 failed")),
+            Box::new(|| Ok(4)),
+        ];
+        let err = run_indexed(4, units).unwrap_err();
+        assert!(err.to_string().contains("unit 1"), "{err}");
+    }
+
+    #[test]
+    fn more_jobs_than_units_is_fine() {
+        let units: Vec<_> = (0..2usize).map(|i| move || Ok(i)).collect();
+        assert_eq!(run_indexed(16, units).unwrap(), vec![0, 1]);
+        let empty: Vec<fn() -> Result<usize>> = Vec::new();
+        assert!(run_indexed(4, empty).unwrap().is_empty());
+    }
+}

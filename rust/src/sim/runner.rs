@@ -87,14 +87,14 @@ pub fn run_episode(
             }
         }
 
-        // Phase 3: reward feedback + periodic training per BS.
+        // Phase 3: reward feedback + periodic training per BS. A tick
+        // may run several gradient steps (Cadence caps them per tick),
+        // so count what actually executed, not ticks-with-training.
         if !sequential {
             for b in 0..num_bs {
                 agent.rewards(b, &rewards[b]);
                 if learn {
-                    if let Some(_m) = agent.train_tick(b)? {
-                        train_steps += 1;
-                    }
+                    train_steps += agent.train_tick(b)?.steps as u64;
                 }
             }
         }
@@ -177,8 +177,9 @@ pub fn run_training(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::agents::{make_scheduler, Method};
+    use crate::agents::{make_scheduler, Method, TickOutcome};
     use crate::config::AgentConfig;
+    use crate::env::AigcTask;
 
     fn small_cfg() -> EnvConfig {
         let mut cfg = EnvConfig::default();
@@ -200,6 +201,47 @@ mod tests {
         assert!(stats.mean_delay > 0.0);
         assert!(stats.mean_wait >= 0.0);
         assert!(stats.p95_delay >= stats.mean_delay * 0.5);
+    }
+
+    /// Stub learner whose every tick reports a fixed number of
+    /// executed gradient steps.
+    struct FixedStepScheduler {
+        steps_per_tick: usize,
+    }
+
+    impl crate::agents::Scheduler for FixedStepScheduler {
+        fn method(&self) -> Method {
+            Method::Local
+        }
+
+        fn decide(
+            &mut self,
+            _b: usize,
+            tasks: &[AigcTask],
+            _env: &EdgeEnv,
+        ) -> Vec<usize> {
+            tasks.iter().map(|t| t.origin).collect()
+        }
+
+        fn train_tick(&mut self, _b: usize) -> Result<TickOutcome> {
+            Ok(TickOutcome { steps: self.steps_per_tick, metrics: None })
+        }
+    }
+
+    #[test]
+    fn train_steps_count_executed_gradient_steps() {
+        // Regression: the runner used to count ticks-with-training
+        // (+1), undercounting whenever a tick ran up to
+        // Cadence::max_steps_per_tick gradient steps.
+        let cfg = small_cfg();
+        let mut env = EdgeEnv::new(&cfg, 5);
+        let mut agent = FixedStepScheduler { steps_per_tick: 3 };
+        let stats = run_episode(&mut env, &mut agent, true).unwrap();
+        assert_eq!(stats.train_steps, (cfg.slots * cfg.num_bs * 3) as u64);
+        // learn=false gates training entirely
+        let mut env = EdgeEnv::new(&cfg, 5);
+        let stats = run_episode(&mut env, &mut agent, false).unwrap();
+        assert_eq!(stats.train_steps, 0);
     }
 
     #[test]

@@ -93,7 +93,15 @@ impl Rng {
         lo + ((self.next_u32() as u64 * span) >> 32) as u32
     }
 
+    /// Uniform integer in [lo, hi] (inclusive). Bounds are routed
+    /// through [`Rng::range_u32`], so `hi` must fit in `u32` — large
+    /// bounds would silently truncate; debug builds assert instead.
+    /// (Every in-tree caller indexes ESs/pool slots, far below 2^32.)
     pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(
+            hi <= u32::MAX as usize,
+            "range_usize bound {hi} exceeds u32::MAX and would truncate"
+        );
         self.range_u32(lo as u32, hi as u32) as usize
     }
 

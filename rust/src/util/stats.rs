@@ -3,13 +3,22 @@
 //! exponential moving averages for learning curves.
 
 /// Online mean/variance accumulator (Welford's algorithm).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct Welford {
     n: u64,
     mean: f64,
     m2: f64,
     min: f64,
     max: f64,
+}
+
+impl Default for Welford {
+    /// Same as [`Welford::new`]. (A derived `Default` would zero
+    /// `min`/`max` instead of starting them at ±infinity, corrupting
+    /// the extrema of every accumulator built with `..Default`.)
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Welford {
@@ -165,6 +174,19 @@ mod tests {
         assert_eq!(w.min(), 1.0);
         assert_eq!(w.max(), 10.0);
         assert_eq!(w.count(), 5);
+    }
+
+    #[test]
+    fn welford_default_matches_new() {
+        // Regression: the derived Default zeroed min/max.
+        let d = Welford::default();
+        assert_eq!(d.min(), f64::INFINITY);
+        assert_eq!(d.max(), f64::NEG_INFINITY);
+        assert_eq!(d.count(), 0);
+        let mut d = d;
+        d.push(-3.5);
+        assert_eq!(d.min(), -3.5);
+        assert_eq!(d.max(), -3.5);
     }
 
     #[test]

@@ -8,11 +8,11 @@ use dedgeai::runtime::XlaRuntime;
 use dedgeai::sim::runner::run_training;
 use dedgeai::util::stats::mean;
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::Arc;
 
-fn runtime() -> Rc<XlaRuntime> {
+fn runtime() -> Arc<XlaRuntime> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    Rc::new(XlaRuntime::new(&dir).expect("artifacts missing — run `make artifacts`"))
+    Arc::new(XlaRuntime::new(&dir).expect("artifacts missing — run `make artifacts`"))
 }
 
 fn small_env() -> EnvConfig {

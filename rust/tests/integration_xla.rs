@@ -7,7 +7,7 @@
 //! missing: artifacts are part of the build.
 
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use dedgeai::nn::diffusion::{actor_forward, ActorScratch, BetaSchedule};
 use dedgeai::nn::{Mat, Mlp};
@@ -18,9 +18,9 @@ use dedgeai::runtime::{
 };
 use dedgeai::util::rng::Rng;
 
-fn runtime() -> Rc<XlaRuntime> {
+fn runtime() -> Arc<XlaRuntime> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    Rc::new(XlaRuntime::new(&dir).expect("artifacts missing — run `make artifacts`"))
+    Arc::new(XlaRuntime::new(&dir).expect("artifacts missing — run `make artifacts`"))
 }
 
 fn random_mat(rng: &mut Rng, rows: usize, cols: usize, scale: f32) -> Mat {

@@ -1,0 +1,116 @@
+//! `--jobs` parity: the multi-core executor must produce bit-identical
+//! results to the sequential path. The grid is fig8a-style (sweep
+//! points × methods × replications) but built from the non-learning
+//! methods so no AOT artifacts are required — the determinism argument
+//! is the same either way: each unit owns its seed, env, and agent.
+
+use dedgeai::agents::Method;
+use dedgeai::config::{AgentConfig, EnvConfig};
+use dedgeai::sim::experiments::{run_train_units, TrainUnit};
+use dedgeai::sim::parallel::run_indexed;
+
+const REPS: usize = 2;
+const BASE_SEED: u64 = 42;
+
+fn grid() -> Vec<TrainUnit> {
+    let methods = [
+        Method::OptTs,
+        Method::Random,
+        Method::RoundRobin,
+        Method::LeastLoaded,
+    ];
+    let mut units = Vec::new();
+    for &n_max in &[4usize, 8, 12] {
+        let mut env = EnvConfig::default();
+        env.num_bs = 4;
+        env.slots = 6;
+        env.n_max = n_max;
+        for &method in &methods {
+            for rep in 0..REPS as u64 {
+                units.push(TrainUnit {
+                    method,
+                    env: env.clone(),
+                    agent: AgentConfig::default(),
+                    episodes: 3,
+                    seed: BASE_SEED.wrapping_add(rep * 7919),
+                    artifacts: None,
+                });
+            }
+        }
+    }
+    units
+}
+
+#[test]
+fn jobs1_and_jobs4_are_bit_identical() {
+    let seq = run_train_units(grid(), 1).unwrap();
+    let par = run_train_units(grid(), 4).unwrap();
+    assert_eq!(seq.len(), par.len());
+    for (i, (a, b)) in seq.iter().zip(&par).enumerate() {
+        assert_eq!(a.len(), b.len(), "unit {i}: curve length diverged");
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "unit {i}: {x} != {y} — parallel run is not bit-identical"
+            );
+        }
+    }
+}
+
+#[test]
+fn auto_jobs_matches_sequential() {
+    let seq = run_train_units(grid(), 1).unwrap();
+    let auto = run_train_units(grid(), 0).unwrap();
+    assert_eq!(seq, auto);
+}
+
+#[test]
+fn learner_parity_when_artifacts_present() {
+    // The real claim covers learners too: each worker thread builds
+    // its own XlaRuntime from the artifacts dir. Gated on the AOT
+    // artifacts being built (same pattern as the coordinator tests).
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let grid = || {
+        let mut env = EnvConfig::default();
+        env.num_bs = 10; // matches the b10 artifact graphs
+        env.slots = 8;
+        env.n_max = 10;
+        let mut agent = AgentConfig::default();
+        agent.warmup = 40;
+        agent.train_every = 10;
+        (0..REPS as u64)
+            .map(|rep| TrainUnit {
+                method: Method::LadTs,
+                env: env.clone(),
+                agent: agent.clone(),
+                episodes: 2,
+                seed: BASE_SEED.wrapping_add(rep * 7919),
+                artifacts: Some(dir.to_str().unwrap().to_string()),
+            })
+            .collect::<Vec<_>>()
+    };
+    let seq = run_train_units(grid(), 1).unwrap();
+    let par = run_train_units(grid(), 2).unwrap();
+    assert_eq!(seq.len(), par.len());
+    for (a, b) in seq.iter().zip(&par) {
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "learner parity broke: {x} != {y}");
+        }
+    }
+}
+
+#[test]
+fn executor_keeps_grid_order_under_oversubscription() {
+    // More workers than units, tiny units: any collection-order bug
+    // would scramble which curve lands in which grid cell.
+    let tags: Vec<_> = (0..12u64)
+        .map(|i| move || Ok(vec![i as f64]))
+        .collect();
+    let out = run_indexed(64, tags).unwrap();
+    assert_eq!(out, (0..12).map(|i| vec![i as f64]).collect::<Vec<_>>());
+}
