@@ -1,0 +1,87 @@
+//! Open-loop serving on the discrete-event engine: Poisson traffic at
+//! rising arrival rates against the 5-Jetson virtual fleet, with
+//! heterogeneous per-request quality demand. Shows the steady-state
+//! measures (p50/p99, time-in-system, utilization) crossing from an
+//! under-loaded to a saturated fleet — the regime the Table V batch
+//! protocol cannot express.
+//!
+//! ```bash
+//! cargo run --release --example serve_open_loop
+//! ```
+//!
+//! Runs without AOT artifacts (heuristic schedulers); swap in
+//! `"lad-ts"` after `make artifacts` to put the LADN actor on the
+//! dispatch path.
+
+use dedgeai::coordinator::arrivals::{ArrivalProcess, ZDist};
+use dedgeai::coordinator::clock;
+use dedgeai::coordinator::service::{DEdgeAi, ServeOptions};
+use dedgeai::util::table::{fnum, Table};
+
+fn main() -> anyhow::Result<()> {
+    dedgeai::util::logger::init();
+    let z_dist = ZDist::Uniform { lo: 5, hi: 15 };
+    let capacity = clock::fleet_capacity_rps(5, z_dist.mean());
+    println!(
+        "5 virtual Jetsons, z ~ U[5,15]: fleet capacity {:.3} img/s",
+        capacity
+    );
+
+    let mut table = Table::new(&[
+        "scheduler", "rate (req/s)", "rho", "p50 (s)", "p99 (s)",
+        "mean TIS (s)", "util",
+    ])
+    .left_first()
+    .title("Open-loop Poisson serving (200 requests per cell)");
+
+    for scheduler in ["least-loaded", "round-robin"] {
+        for rate in [0.2, 0.3, 0.4] {
+            let opts = ServeOptions {
+                workers: 5,
+                requests: 200,
+                scheduler: scheduler.into(),
+                arrivals: ArrivalProcess::Poisson { rate },
+                z_dist: Some(z_dist.clone()),
+                ..ServeOptions::default()
+            };
+            let m = DEdgeAi::new(opts).run_virtual()?;
+            table.row(vec![
+                scheduler.into(),
+                fnum(rate, 2),
+                fnum(rate / capacity, 2),
+                fnum(m.median_latency(), 2),
+                fnum(m.p99_latency(), 2),
+                fnum(m.mean_latency(), 2),
+                fnum(m.mean_utilization(), 2),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+
+    // A bursty day: MMPP-2 with 4x bursts vs the same mean rate.
+    println!("\nBursty vs steady traffic at the same mean rate (0.3 req/s):");
+    for (label, arrivals) in [
+        ("poisson", ArrivalProcess::Poisson { rate: 0.3 }),
+        (
+            "bursty 4x",
+            ArrivalProcess::Bursty { rate: 0.3, burst: 4.0, dwell: 120.0 },
+        ),
+    ] {
+        let opts = ServeOptions {
+            workers: 5,
+            requests: 200,
+            scheduler: "least-loaded".into(),
+            arrivals,
+            z_dist: Some(z_dist.clone()),
+            ..ServeOptions::default()
+        };
+        let m = DEdgeAi::new(opts).run_virtual()?;
+        println!(
+            "  {label:10}  p50 {:6.2} s   p99 {:7.2} s   mean TIS {:6.2} s",
+            m.median_latency(),
+            m.p99_latency(),
+            m.mean_latency()
+        );
+    }
+    Ok(())
+}

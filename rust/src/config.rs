@@ -314,6 +314,64 @@ impl AgentConfig {
     }
 }
 
+/// `exp serve-sweep` grid: open-loop serving measured over
+/// (arrival rate × scheduler × fleet size) on the virtual Jetson
+/// clock, fanned out over the parallel executor.
+#[derive(Clone, Debug)]
+pub struct ServeSweepConfig {
+    /// Arrival rates in requests/second (`--rates`). Defaults span
+    /// under- to over-load at the default fleet and z distribution.
+    pub rates: Vec<f64>,
+    /// Scheduling policies (`--schedulers`). `lad-ts` is dropped with
+    /// a warning when AOT artifacts are unavailable.
+    pub schedulers: Vec<String>,
+    /// Fleet sizes in workers (`--fleets`).
+    pub fleets: Vec<usize>,
+    /// Requests simulated per grid cell (`--serve-requests`).
+    pub requests: usize,
+    /// Arrival-process kind (`--arrivals`): poisson|bursty|diurnal.
+    pub arrivals: String,
+    /// Quality-demand spec (`--z-dist`), e.g. `uniform:5,15`.
+    pub z_dist: String,
+}
+
+impl Default for ServeSweepConfig {
+    fn default() -> Self {
+        Self {
+            // fleet capacity at z~U[5,15] is ~0.40 img/s for 5 workers:
+            // rho ~ 0.5 / 0.75 / 1.0
+            rates: vec![0.2, 0.3, 0.4],
+            schedulers: vec![
+                "round-robin".into(),
+                "least-loaded".into(),
+                "lad-ts".into(),
+            ],
+            fleets: vec![5],
+            requests: 200,
+            arrivals: "poisson".into(),
+            z_dist: "uniform:5,15".into(),
+        }
+    }
+}
+
+impl ServeSweepConfig {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("rates", Json::arr_f64(&self.rates)),
+            (
+                "fleets",
+                Json::arr_f64(
+                    &self.fleets.iter().map(|&f| f as f64).collect::<Vec<_>>(),
+                ),
+            ),
+            ("schedulers", Json::str(self.schedulers.join(","))),
+            ("requests", Json::num(self.requests as f64)),
+            ("arrivals", Json::str(self.arrivals.clone())),
+            ("z_dist", Json::str(self.z_dist.clone())),
+        ])
+    }
+}
+
 /// Experiment-harness settings.
 #[derive(Clone, Debug)]
 pub struct ExpConfig {
@@ -332,6 +390,8 @@ pub struct ExpConfig {
     /// sequential behavior. Results are bit-identical for any value —
     /// each work unit owns its seed, env, and agent.
     pub jobs: usize,
+    /// Open-loop serving sweep grid (`exp serve-sweep`).
+    pub serve: ServeSweepConfig,
 }
 
 impl Default for ExpConfig {
@@ -343,6 +403,7 @@ impl Default for ExpConfig {
             out_dir: "results".into(),
             artifacts_dir: "artifacts".into(),
             jobs: 0,
+            serve: ServeSweepConfig::default(),
         }
     }
 }
@@ -356,6 +417,7 @@ impl ExpConfig {
             ("out_dir", Json::str(self.out_dir.clone())),
             ("artifacts_dir", Json::str(self.artifacts_dir.clone())),
             ("jobs", Json::num(self.jobs as f64)),
+            ("serve", self.serve.to_json()),
         ])
     }
 }
@@ -442,6 +504,16 @@ mod tests {
         assert_eq!(a.target_entropy, -1.0);
         assert_eq!(a.pool_size, 1000);
         assert_eq!(a.warmup, 300);
+    }
+
+    #[test]
+    fn serve_sweep_defaults_form_a_grid() {
+        let s = ServeSweepConfig::default();
+        assert!(s.rates.len() >= 3, "need >=3 rates for the sweep");
+        assert!(s.schedulers.len() >= 3, "need >=3 schedulers");
+        assert!(!s.fleets.is_empty() && s.requests > 0);
+        assert_eq!(s.arrivals, "poisson");
+        assert!(s.to_json().get("rates").is_some());
     }
 
     #[test]

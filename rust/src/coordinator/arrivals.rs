@@ -1,0 +1,359 @@
+//! Arrival processes and per-request quality-demand distributions for
+//! the open-loop serving engine.
+//!
+//! The Table V batch protocol (every request at t=0) is one special
+//! case; the open-loop processes model the "heavy traffic from
+//! millions of users" regime: homogeneous Poisson, a two-state
+//! Markov-modulated Poisson process (bursty), and a diurnal ramp
+//! (sinusoidal rate, sampled by thinning). All draws come from the
+//! caller's seeded [`Rng`], so a request trace is a pure function of
+//! (process, n, seed).
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::Rng;
+
+/// When a request is submitted to the fleet.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Table V protocol: all requests at t=0 (closed batch).
+    Batch,
+    /// Homogeneous Poisson arrivals at `rate` requests/second.
+    Poisson { rate: f64 },
+    /// MMPP-2: Poisson whose rate switches between a low and a high
+    /// state. `burst` is the high/low rate ratio; `dwell` the mean
+    /// seconds spent in each state. The long-run mean rate is `rate`.
+    Bursty { rate: f64, burst: f64, dwell: f64 },
+    /// Diurnal ramp: non-homogeneous Poisson with
+    /// λ(t) = rate·(1 + amp·sin(2πt/period)), sampled by thinning.
+    Diurnal { rate: f64, period: f64, amp: f64 },
+}
+
+fn parse_params(spec: &str) -> Result<(&str, Vec<f64>)> {
+    let (kind, rest) = match spec.split_once(':') {
+        Some((k, r)) => (k, r),
+        None => return Ok((spec, Vec::new())),
+    };
+    let nums = rest
+        .split(',')
+        .map(|p| {
+            p.trim()
+                .parse::<f64>()
+                .with_context(|| format!("bad number '{p}' in '{spec}'"))
+        })
+        .collect::<Result<Vec<f64>>>()?;
+    Ok((kind, nums))
+}
+
+impl ArrivalProcess {
+    /// Parse a `--arrivals` spec. `rate` (req/s) comes from `--rate`.
+    /// Accepted: `batch`, `poisson`, `bursty[:burst,dwell]`,
+    /// `diurnal[:period,amp]`.
+    pub fn parse(spec: &str, rate: f64) -> Result<Self> {
+        let (kind, p) = parse_params(spec)?;
+        if kind != "batch" && !(rate > 0.0) {
+            bail!("arrival process '{kind}' needs --rate > 0 (got {rate})");
+        }
+        let proc = match kind {
+            "batch" => ArrivalProcess::Batch,
+            "poisson" => ArrivalProcess::Poisson { rate },
+            "bursty" | "mmpp" => ArrivalProcess::Bursty {
+                rate,
+                burst: *p.first().unwrap_or(&4.0),
+                dwell: *p.get(1).unwrap_or(&30.0),
+            },
+            "diurnal" => ArrivalProcess::Diurnal {
+                rate,
+                period: *p.first().unwrap_or(&240.0),
+                amp: p.get(1).unwrap_or(&0.8).clamp(0.0, 1.0),
+            },
+            other => bail!(
+                "unknown arrival process '{other}' \
+                 (batch|poisson|bursty[:burst,dwell]|diurnal[:period,amp])"
+            ),
+        };
+        // Non-positive shape parameters make times() spin forever
+        // (zero-dwell state flips, NaN thinning) — reject them here.
+        match proc {
+            ArrivalProcess::Bursty { burst, dwell, .. }
+                if !(burst > 0.0 && dwell > 0.0) =>
+            {
+                bail!("bursty arrivals need burst > 0 and dwell > 0, got '{spec}'")
+            }
+            ArrivalProcess::Diurnal { period, .. } if !(period > 0.0) => {
+                bail!("diurnal arrivals need period > 0, got '{spec}'")
+            }
+            _ => Ok(proc),
+        }
+    }
+
+    /// Long-run mean arrival rate; `None` for the batch protocol.
+    pub fn rate(&self) -> Option<f64> {
+        match self {
+            ArrivalProcess::Batch => None,
+            ArrivalProcess::Poisson { rate }
+            | ArrivalProcess::Bursty { rate, .. }
+            | ArrivalProcess::Diurnal { rate, .. } => Some(*rate),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Batch => "batch",
+            ArrivalProcess::Poisson { .. } => "poisson",
+            ArrivalProcess::Bursty { .. } => "bursty",
+            ArrivalProcess::Diurnal { .. } => "diurnal",
+        }
+    }
+
+    /// Generate `n` non-decreasing submission times (seconds).
+    pub fn times(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
+        match *self {
+            ArrivalProcess::Batch => vec![0.0; n],
+            ArrivalProcess::Poisson { rate } => {
+                let mut t = 0.0;
+                (0..n)
+                    .map(|_| {
+                        t += exp_draw(rng, rate);
+                        t
+                    })
+                    .collect()
+            }
+            ArrivalProcess::Bursty { rate, burst, dwell } => {
+                // Rates chosen so equal mean dwell in each state gives a
+                // long-run average of exactly `rate`.
+                let hi = 2.0 * rate * burst / (burst + 1.0);
+                let lo = 2.0 * rate / (burst + 1.0);
+                let mut t = 0.0;
+                let mut in_hi = false;
+                let mut dwell_left = exp_draw(rng, 1.0 / dwell);
+                let mut out = Vec::with_capacity(n);
+                while out.len() < n {
+                    let dt = exp_draw(rng, if in_hi { hi } else { lo });
+                    if dt <= dwell_left {
+                        t += dt;
+                        dwell_left -= dt;
+                        out.push(t);
+                    } else {
+                        t += dwell_left;
+                        in_hi = !in_hi;
+                        dwell_left = exp_draw(rng, 1.0 / dwell);
+                    }
+                }
+                out
+            }
+            ArrivalProcess::Diurnal { rate, period, amp } => {
+                let l_max = rate * (1.0 + amp);
+                let mut t = 0.0;
+                let mut out = Vec::with_capacity(n);
+                while out.len() < n {
+                    t += exp_draw(rng, l_max);
+                    let l_t = rate
+                        * (1.0
+                            + amp
+                                * (2.0 * std::f64::consts::PI * t / period).sin());
+                    if rng.f64() * l_max < l_t {
+                        out.push(t);
+                    }
+                }
+                out
+            }
+        }
+    }
+}
+
+/// Exponential draw with the given rate; u in (0,1] avoids ln(0).
+fn exp_draw(rng: &mut Rng, rate: f64) -> f64 {
+    -(1.0 - rng.f64()).ln() / rate
+}
+
+/// Per-request generation-quality demand z_n.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ZDist {
+    /// Every request demands exactly `z` denoising steps.
+    Fixed(usize),
+    /// z ~ U[lo, hi] (inclusive).
+    Uniform { lo: usize, hi: usize },
+    /// z = hi with probability `p_hi`, else lo (draft vs final quality).
+    Bimodal { lo: usize, hi: usize, p_hi: f64 },
+}
+
+impl ZDist {
+    /// Parse a `--z-dist` spec: `fixed:Z` (or a bare integer),
+    /// `uniform:LO,HI`, `bimodal:LO,HI,P_HI`.
+    pub fn parse(spec: &str) -> Result<Self> {
+        if let Ok(z) = spec.trim().parse::<usize>() {
+            return Self::validated(ZDist::Fixed(z));
+        }
+        let (kind, p) = parse_params(spec)?;
+        let at = |i: usize| -> Result<f64> {
+            p.get(i)
+                .copied()
+                .with_context(|| format!("'{spec}': missing parameter {i}"))
+        };
+        let d = match kind {
+            "fixed" => ZDist::Fixed(at(0)? as usize),
+            "uniform" => ZDist::Uniform {
+                lo: at(0)? as usize,
+                hi: at(1)? as usize,
+            },
+            "bimodal" => ZDist::Bimodal {
+                lo: at(0)? as usize,
+                hi: at(1)? as usize,
+                p_hi: at(2)?,
+            },
+            other => bail!(
+                "unknown z distribution '{other}' \
+                 (fixed:Z|uniform:LO,HI|bimodal:LO,HI,P)"
+            ),
+        };
+        Self::validated(d)
+    }
+
+    fn validated(d: ZDist) -> Result<Self> {
+        let ok = match d {
+            ZDist::Fixed(z) => z >= 1,
+            ZDist::Uniform { lo, hi } => lo >= 1 && lo <= hi,
+            ZDist::Bimodal { lo, hi, p_hi } => {
+                lo >= 1 && lo <= hi && (0.0..=1.0).contains(&p_hi)
+            }
+        };
+        if !ok {
+            bail!("invalid z distribution {d:?} (need 1 <= lo <= hi, p in [0,1])");
+        }
+        Ok(d)
+    }
+
+    /// Draw one demand. `Fixed` consumes no randomness, so a fixed-z
+    /// trace is stream-identical to the pre-open-loop request maker.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        match *self {
+            ZDist::Fixed(z) => z,
+            ZDist::Uniform { lo, hi } => rng.range_usize(lo, hi),
+            ZDist::Bimodal { lo, hi, p_hi } => {
+                if rng.f64() < p_hi {
+                    hi
+                } else {
+                    lo
+                }
+            }
+        }
+    }
+
+    /// Expected demand (for capacity / utilization reporting).
+    pub fn mean(&self) -> f64 {
+        match *self {
+            ZDist::Fixed(z) => z as f64,
+            ZDist::Uniform { lo, hi } => (lo + hi) as f64 / 2.0,
+            ZDist::Bimodal { lo, hi, p_hi } => {
+                lo as f64 * (1.0 - p_hi) + hi as f64 * p_hi
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn monotone(ts: &[f64]) -> bool {
+        ts.windows(2).all(|w| w[0] <= w[1])
+    }
+
+    #[test]
+    fn batch_is_all_zero() {
+        let mut rng = Rng::new(1);
+        let ts = ArrivalProcess::Batch.times(10, &mut rng);
+        assert_eq!(ts, vec![0.0; 10]);
+    }
+
+    #[test]
+    fn poisson_mean_interarrival_matches_rate() {
+        let mut rng = Rng::new(2);
+        let n = 5000;
+        let ts = ArrivalProcess::Poisson { rate: 0.5 }.times(n, &mut rng);
+        assert_eq!(ts.len(), n);
+        assert!(monotone(&ts));
+        assert!(ts[0] > 0.0);
+        let mean_dt = ts[n - 1] / n as f64;
+        assert!((mean_dt - 2.0).abs() < 0.1, "mean_dt={mean_dt}");
+    }
+
+    #[test]
+    fn bursty_long_run_rate_matches() {
+        let mut rng = Rng::new(3);
+        let n = 4000;
+        let p = ArrivalProcess::Bursty { rate: 1.0, burst: 4.0, dwell: 30.0 };
+        let ts = p.times(n, &mut rng);
+        assert!(monotone(&ts));
+        let rate = n as f64 / ts[n - 1];
+        assert!((rate - 1.0).abs() < 0.2, "long-run rate={rate}");
+    }
+
+    #[test]
+    fn diurnal_is_monotone_and_rate_bounded() {
+        let mut rng = Rng::new(4);
+        let p = ArrivalProcess::Diurnal { rate: 0.5, period: 100.0, amp: 0.8 };
+        let ts = p.times(2000, &mut rng);
+        assert!(monotone(&ts));
+        let rate = 2000.0 / ts[1999];
+        // long-run mean of λ(t) is `rate`
+        assert!((rate - 0.5).abs() < 0.1, "rate={rate}");
+    }
+
+    #[test]
+    fn arrival_times_are_deterministic_per_seed() {
+        let p = ArrivalProcess::Poisson { rate: 0.3 };
+        let a = p.times(50, &mut Rng::new(7));
+        let b = p.times(50, &mut Rng::new(7));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(
+            ArrivalProcess::parse("batch", 0.0).unwrap(),
+            ArrivalProcess::Batch
+        );
+        assert_eq!(
+            ArrivalProcess::parse("poisson", 0.25).unwrap(),
+            ArrivalProcess::Poisson { rate: 0.25 }
+        );
+        assert_eq!(
+            ArrivalProcess::parse("bursty:8,10", 1.0).unwrap(),
+            ArrivalProcess::Bursty { rate: 1.0, burst: 8.0, dwell: 10.0 }
+        );
+        assert_eq!(
+            ArrivalProcess::parse("diurnal:120,0.5", 1.0).unwrap(),
+            ArrivalProcess::Diurnal { rate: 1.0, period: 120.0, amp: 0.5 }
+        );
+        assert!(ArrivalProcess::parse("poisson", 0.0).is_err());
+        assert!(ArrivalProcess::parse("nope", 1.0).is_err());
+        // non-positive shape params would make times() loop forever
+        assert!(ArrivalProcess::parse("bursty:4,0", 1.0).is_err());
+        assert!(ArrivalProcess::parse("bursty:-2,30", 1.0).is_err());
+        assert!(ArrivalProcess::parse("diurnal:0", 1.0).is_err());
+    }
+
+    #[test]
+    fn zdist_parse_sample_mean() {
+        let mut rng = Rng::new(5);
+        assert_eq!(ZDist::parse("15").unwrap(), ZDist::Fixed(15));
+        assert_eq!(ZDist::parse("fixed:7").unwrap(), ZDist::Fixed(7));
+        let u = ZDist::parse("uniform:5,15").unwrap();
+        for _ in 0..200 {
+            let z = u.sample(&mut rng);
+            assert!((5..=15).contains(&z));
+        }
+        assert_eq!(u.mean(), 10.0);
+        let b = ZDist::parse("bimodal:5,15,0.25").unwrap();
+        assert_eq!(b.mean(), 7.5);
+        for _ in 0..50 {
+            let z = b.sample(&mut rng);
+            assert!(z == 5 || z == 15);
+        }
+        assert!(ZDist::parse("uniform:9,3").is_err());
+        assert!(ZDist::parse("fixed:0").is_err());
+        assert!(ZDist::parse("bimodal:1,2,7").is_err());
+    }
+}

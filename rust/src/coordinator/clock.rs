@@ -26,6 +26,13 @@ pub fn lan_seconds(bits: f64) -> f64 {
     LAN_RTT_S + bits / LAN_RATE_BPS
 }
 
+/// Steady-state fleet capacity in images/second at mean quality
+/// demand `mean_z` — the saturation point of an open-loop arrival
+/// rate sweep (offered rate / capacity = utilization rho).
+pub fn fleet_capacity_rps(workers: usize, mean_z: f64) -> f64 {
+    workers as f64 / (JETSON_ENCODE_S + mean_z * JETSON_STEP_S)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -35,6 +42,13 @@ mod tests {
         // Table V: DEdgeAI |N|=1 median = 18.3 s.
         let t = jetson_image_seconds(DEFAULT_Z);
         assert!((t - 18.3).abs() < 0.05, "t={t}");
+    }
+
+    #[test]
+    fn fleet_capacity_matches_single_image_rate() {
+        // five Jetsons at 18.3 s/image ≈ 0.273 img/s of capacity
+        let c = fleet_capacity_rps(5, DEFAULT_Z as f64);
+        assert!((c - 5.0 / 18.295).abs() < 1e-3, "c={c}");
     }
 
     #[test]

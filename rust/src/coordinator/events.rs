@@ -1,0 +1,207 @@
+//! Virtual-time discrete-event queue for the serving engine.
+//!
+//! The open-loop simulation interleaves two event kinds on one virtual
+//! clock: request arrivals (which the router dispatches) and worker
+//! completions (which feed `Router::complete`, draining the pending
+//! load the dispatch decision charged). Events pop in non-decreasing
+//! time order; at equal timestamps they pop in insertion order (FIFO),
+//! so a run is a pure function of the pushed events — no heap-order
+//! nondeterminism can leak into results.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::message::{Request, Response};
+
+/// One serving event on the virtual clock.
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// A request enters the system and must be dispatched.
+    Arrival(Request),
+    /// A worker finished a job; its pending load drains.
+    Completion(Response),
+}
+
+struct Entry {
+    time: f64,
+    /// Insertion sequence number: the FIFO tiebreak at equal times.
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.time.to_bits() == other.time.to_bits() && self.seq == other.seq
+    }
+}
+
+impl Eq for Entry {}
+
+impl Ord for Entry {
+    // Reversed on purpose: `BinaryHeap` is a max-heap and we want the
+    // earliest time (then the lowest sequence number) on top.
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .time
+            .total_cmp(&self.time)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Min-heap of timestamped events with stable FIFO order at ties.
+#[derive(Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Entry>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule `event` at virtual time `time` (must be finite).
+    pub fn push(&mut self, time: f64, event: Event) {
+        assert!(time.is_finite(), "event time must be finite, got {time}");
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { time, seq, event });
+    }
+
+    /// Earliest event, FIFO at equal timestamps.
+    pub fn pop(&mut self) -> Option<(f64, Event)> {
+        self.heap.pop().map(|e| (e.time, e.event))
+    }
+
+    /// Timestamp of the next event without removing it.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arrival(id: u64, t: f64) -> (f64, Event) {
+        (
+            t,
+            Event::Arrival(Request {
+                id,
+                prompt: String::new(),
+                z: 1,
+                submitted_at: t,
+            }),
+        )
+    }
+
+    fn id_of(ev: &Event) -> u64 {
+        match ev {
+            Event::Arrival(r) => r.id,
+            Event::Completion(r) => r.id,
+        }
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        for (i, &t) in [5.0, 1.0, 3.0, 2.0, 4.0].iter().enumerate() {
+            let (t, e) = arrival(i as u64, t);
+            q.push(t, e);
+        }
+        let mut times = Vec::new();
+        while let Some((t, _)) = q.pop() {
+            times.push(t);
+        }
+        assert_eq!(times, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn fifo_at_equal_timestamps() {
+        // All events at t=0 (the batch protocol): pop order must equal
+        // push order, even with pushes at other times interleaved.
+        let mut q = EventQueue::new();
+        for id in 0..6u64 {
+            let (t, e) = arrival(id, 0.0);
+            q.push(t, e);
+            let (t, e) = arrival(100 + id, 7.5);
+            q.push(t, e);
+        }
+        let mut zero_ids = Vec::new();
+        let mut late_ids = Vec::new();
+        while let Some((t, e)) = q.pop() {
+            if t == 0.0 {
+                assert!(late_ids.is_empty(), "t=0 event after t=7.5 event");
+                zero_ids.push(id_of(&e));
+            } else {
+                late_ids.push(id_of(&e));
+            }
+        }
+        assert_eq!(zero_ids, (0..6).collect::<Vec<u64>>());
+        assert_eq!(late_ids, (100..106).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn interleaved_push_pop_keeps_order() {
+        let mut q = EventQueue::new();
+        let (t, e) = arrival(0, 2.0);
+        q.push(t, e);
+        let (t, e) = arrival(1, 1.0);
+        q.push(t, e);
+        let (t, ev) = q.pop().unwrap();
+        assert_eq!((t, id_of(&ev)), (1.0, 1));
+        // push an earlier event while one is still queued
+        let (t, e) = arrival(2, 1.5);
+        q.push(t, e);
+        assert_eq!(q.peek_time(), Some(1.5));
+        let (_, ev) = q.pop().unwrap();
+        assert_eq!(id_of(&ev), 2);
+        let (_, ev) = q.pop().unwrap();
+        assert_eq!(id_of(&ev), 0);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn property_no_reordering_at_equal_times() {
+        crate::util::prop::check("fifo within timestamp groups", 100, |g| {
+            let n = g.size(2, 60);
+            let mut q = EventQueue::new();
+            let mut expect: Vec<(u64, u64)> = Vec::new(); // (time-key, id)
+            for id in 0..n as u64 {
+                // few distinct times -> many ties
+                let tk = g.usize(0, 3) as u64;
+                let (_, e) = arrival(id, tk as f64);
+                q.push(tk as f64, e);
+                expect.push((tk, id));
+            }
+            expect.sort(); // stable: ids ascending within equal time-keys
+            let mut got = Vec::new();
+            while let Some((t, e)) = q.pop() {
+                got.push((t as u64, id_of(&e)));
+            }
+            assert_eq!(got, expect);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn rejects_non_finite_times() {
+        let mut q = EventQueue::new();
+        let (_, e) = arrival(0, 0.0);
+        q.push(f64::NAN, e);
+    }
+}

@@ -16,6 +16,10 @@ pub struct Request {
 pub struct Response {
     pub id: u64,
     pub worker: usize,
+    /// The quality demand actually served — routers must drain pending
+    /// load by this, not by any global default (loads are wrong
+    /// otherwise whenever z is heterogeneous).
+    pub z: usize,
     /// End-to-end latency (submission -> result), seconds.
     pub latency: f64,
     /// Time spent in the worker queue, seconds.
@@ -44,11 +48,13 @@ mod tests {
         let resp = Response {
             id: r.id,
             worker: 2,
+            z: r.z,
             latency: 18.3,
             queue_wait: 0.0,
             gen_time: 18.3,
             checksum: 0.5,
         };
         assert_eq!(resp.id, r.id);
+        assert_eq!(resp.z, 15);
     }
 }

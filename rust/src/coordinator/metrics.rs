@@ -1,4 +1,6 @@
-//! Serving metrics: latency distribution, throughput, per-worker load.
+//! Serving metrics: latency distribution, throughput, per-worker load,
+//! and the steady-state measures used by the open-loop engine (p99,
+//! time-in-system, windowed throughput, per-worker utilization).
 
 use crate::util::stats::{percentile, Welford};
 
@@ -7,9 +9,13 @@ use super::message::Response;
 #[derive(Clone, Debug)]
 pub struct ServeMetrics {
     latencies: Vec<f64>,
+    /// Completion timestamps on the serving clock (for windowed rates).
+    completions: Vec<f64>,
     queue_waits: Welford,
     gen_times: Welford,
     per_worker: Vec<u64>,
+    /// Seconds each worker spent generating (for utilization).
+    busy: Vec<f64>,
     first_submit: f64,
     last_complete: f64,
 }
@@ -18,21 +24,33 @@ impl ServeMetrics {
     pub fn new(workers: usize) -> Self {
         Self {
             latencies: Vec::new(),
+            completions: Vec::new(),
             queue_waits: Welford::new(),
             gen_times: Welford::new(),
             per_worker: vec![0; workers],
+            busy: vec![0.0; workers],
             first_submit: f64::INFINITY,
             last_complete: 0.0,
         }
     }
 
+    /// Record a completion. A worker index outside the fleet is a hard
+    /// error: silently dropping it would mask router bugs (a policy
+    /// that picks a phantom worker would look *better*, not broken).
     pub fn record(&mut self, resp: &Response, completed_at: f64) {
+        assert!(
+            resp.worker < self.per_worker.len(),
+            "ServeMetrics::record: worker {} out of range for a {}-worker \
+             fleet (router bug)",
+            resp.worker,
+            self.per_worker.len()
+        );
         self.latencies.push(resp.latency);
+        self.completions.push(completed_at);
         self.queue_waits.push(resp.queue_wait);
         self.gen_times.push(resp.gen_time);
-        if resp.worker < self.per_worker.len() {
-            self.per_worker[resp.worker] += 1;
-        }
+        self.per_worker[resp.worker] += 1;
+        self.busy[resp.worker] += resp.gen_time;
         self.first_submit = self
             .first_submit
             .min(completed_at - resp.latency);
@@ -43,12 +61,21 @@ impl ServeMetrics {
         self.latencies.len()
     }
 
+    /// Mean time-in-system (submission -> result).
+    pub fn mean_latency(&self) -> f64 {
+        crate::util::stats::mean(&self.latencies)
+    }
+
     pub fn median_latency(&self) -> f64 {
         percentile(&self.latencies, 50.0)
     }
 
     pub fn p95_latency(&self) -> f64 {
         percentile(&self.latencies, 95.0)
+    }
+
+    pub fn p99_latency(&self) -> f64 {
+        percentile(&self.latencies, 99.0)
     }
 
     pub fn mean_queue_wait(&self) -> f64 {
@@ -79,6 +106,53 @@ impl ServeMetrics {
         }
     }
 
+    /// Completion rate (img/s) per consecutive `window`-second window
+    /// from first submission to last completion — the steady-state
+    /// throughput trace of an open-loop run. The final window is
+    /// normalized by its actual (possibly partial) width, so the trace
+    /// doesn't end in a spurious cliff.
+    pub fn windowed_throughput(&self, window: f64) -> Vec<f64> {
+        if self.completions.is_empty() || window <= 0.0 {
+            return Vec::new();
+        }
+        let t0 = self.first_submit;
+        let span = (self.last_complete - t0).max(0.0);
+        let n_win = ((span / window).ceil() as usize).max(1);
+        let mut counts = vec![0u64; n_win];
+        for &c in &self.completions {
+            let i = (((c - t0) / window).floor() as usize).min(n_win - 1);
+            counts[i] += 1;
+        }
+        counts
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                let tail = span - i as f64 * window;
+                let width = if tail > 0.0 { tail.min(window) } else { window };
+                c as f64 / width
+            })
+            .collect()
+    }
+
+    /// Fraction of the makespan each worker spent generating.
+    pub fn utilization(&self) -> Vec<f64> {
+        let m = self.makespan();
+        if m <= 0.0 {
+            return vec![0.0; self.busy.len()];
+        }
+        self.busy.iter().map(|&b| b / m).collect()
+    }
+
+    pub fn mean_utilization(&self) -> f64 {
+        let u = self.utilization();
+        // stats::mean is NaN on empty; a zero-worker fleet reads as 0
+        if u.is_empty() {
+            0.0
+        } else {
+            crate::util::stats::mean(&u)
+        }
+    }
+
     /// Load-balance factor: max/mean per-worker completions (1.0 =
     /// perfectly balanced).
     pub fn imbalance(&self) -> f64 {
@@ -105,6 +179,7 @@ mod tests {
         Response {
             id,
             worker,
+            z: 15,
             latency,
             queue_wait: latency * 0.3,
             gen_time: latency * 0.7,
@@ -119,6 +194,7 @@ mod tests {
         m.record(&resp(1, 1, 10.0), 15.0); // submitted at 5
         assert_eq!(m.count(), 2);
         assert!((m.median_latency() - 10.0).abs() < 1e-9);
+        assert!((m.mean_latency() - 10.0).abs() < 1e-9);
         assert!((m.makespan() - 15.0).abs() < 1e-9);
         assert!((m.throughput() - 2.0 / 15.0).abs() < 1e-9);
         assert_eq!(m.per_worker(), &[1, 1]);
@@ -132,5 +208,63 @@ mod tests {
             m.record(&resp(i, 0, 1.0), i as f64);
         }
         assert_eq!(m.imbalance(), 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_worker_is_a_hard_error() {
+        // Regression: this used to be silently dropped, masking router
+        // bugs behind a short `per_worker` histogram.
+        let mut m = ServeMetrics::new(2);
+        m.record(&resp(0, 2, 1.0), 1.0);
+    }
+
+    #[test]
+    fn p99_orders_tail() {
+        let mut m = ServeMetrics::new(1);
+        for i in 0..100 {
+            m.record(&resp(i, 0, (i + 1) as f64), (i + 1) as f64);
+        }
+        assert!(m.p99_latency() >= m.p95_latency());
+        assert!(m.p95_latency() >= m.median_latency());
+        assert!((m.p99_latency() - 99.01).abs() < 0.1);
+    }
+
+    #[test]
+    fn utilization_tracks_busy_time() {
+        let mut m = ServeMetrics::new(2);
+        // worker 0 generates for 7.0 s of a 10 s makespan, worker 1 idle
+        m.record(
+            &Response {
+                id: 0,
+                worker: 0,
+                z: 15,
+                latency: 10.0,
+                queue_wait: 3.0,
+                gen_time: 7.0,
+                checksum: 0.0,
+            },
+            10.0,
+        );
+        let u = m.utilization();
+        assert!((u[0] - 0.7).abs() < 1e-9, "u={u:?}");
+        assert_eq!(u[1], 0.0);
+        assert!((m.mean_utilization() - 0.35).abs() < 1e-9);
+    }
+
+    #[test]
+    fn windowed_throughput_counts_completions() {
+        let mut m = ServeMetrics::new(1);
+        // submissions at t=0 (latency == completion time)
+        for (i, &t) in [1.0f64, 2.0, 3.0, 12.0].iter().enumerate() {
+            m.record(&resp(i as u64, 0, t), t);
+        }
+        let w = m.windowed_throughput(10.0);
+        assert_eq!(w.len(), 2);
+        assert!((w[0] - 0.3).abs() < 1e-9); // 3 completions / 10 s
+        // last window spans only [10, 12): 1 completion / 2 s
+        assert!((w[1] - 0.5).abs() < 1e-9, "w={w:?}");
+        assert!(m.windowed_throughput(0.0).is_empty());
+        assert!(ServeMetrics::new(1).windowed_throughput(5.0).is_empty());
     }
 }

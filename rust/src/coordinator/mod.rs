@@ -12,12 +12,27 @@
 //!   B=5 artifacts — the paper's scheduler-per-device);
 //! - [`clock`]: real wallclock or the calibrated virtual Jetson clock
 //!   used by Table V;
+//! - [`events`]: the virtual-time discrete-event queue driving
+//!   open-loop serving — arrivals and worker completions interleave on
+//!   one clock, so `Router::complete` fires at the correct virtual
+//!   timestamp and pending-load estimates drain under live traffic;
+//! - [`arrivals`]: open-loop arrival processes (Poisson, bursty MMPP,
+//!   diurnal ramp; the Table V batch protocol is the special case) and
+//!   per-request quality-demand distributions (`--z-dist`);
 //! - [`platforms`]: the five commercial-platform latency/price models
 //!   of Table V; [`models`]: the SD3-m vs reSD3-m memory registry;
 //! - [`corpus`]: the synthetic caption corpus standing in for Flickr8k.
+//!
+//! Serving entry points: `DEdgeAi::run_batch` (Table V closed batch,
+//! bit-stable), `DEdgeAi::run_events` (open loop on the event engine),
+//! `DEdgeAi::run_real` (threads + PJRT). The `serve-sweep` experiment
+//! (`sim::experiments`) fans (arrival rate × scheduler × fleet size)
+//! grids of open-loop runs over the parallel executor.
 
+pub mod arrivals;
 pub mod clock;
 pub mod corpus;
+pub mod events;
 pub mod message;
 pub mod metrics;
 pub mod models;
@@ -26,6 +41,8 @@ pub mod router;
 pub mod service;
 pub mod worker;
 
+pub use arrivals::{ArrivalProcess, ZDist};
+pub use events::{Event, EventQueue};
 pub use message::{Request, Response};
 pub use metrics::ServeMetrics;
 pub use service::{serve_and_report, DEdgeAi, ServeOptions};

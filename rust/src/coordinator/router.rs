@@ -157,7 +157,10 @@ impl Router {
         Ok(w)
     }
 
-    /// Worker completed a job of `z` steps.
+    /// Worker completed a job of `z` steps. Callers must pass the
+    /// *completed request's* demand (carried on `Response::z`), not a
+    /// global default — the load estimate drifts otherwise whenever z
+    /// is heterogeneous.
     pub fn complete(&mut self, worker: usize, z: usize) {
         self.pending_steps[worker] =
             (self.pending_steps[worker] - z as f64).max(0.0);
@@ -165,6 +168,14 @@ impl Router {
 
     pub fn pending(&self) -> &[f64] {
         &self.pending_steps
+    }
+
+    /// Sum of pending denoise-steps across the fleet. With matched
+    /// dispatch/complete pairs this equals dispatched-z minus
+    /// completed-z exactly (integer-valued f64 arithmetic) — the
+    /// conservation law the event engine asserts after draining.
+    pub fn pending_total(&self) -> f64 {
+        self.pending_steps.iter().sum()
     }
 
     pub fn dispatched(&self) -> &[u64] {
@@ -212,5 +223,41 @@ mod tests {
         let mut r = Router::new(Policy::RoundRobin, 1);
         r.complete(0, 99);
         assert_eq!(r.pending(), &[0.0]);
+    }
+
+    #[test]
+    fn pending_load_is_conserved() {
+        // dispatched-z − completed-z == pending_total(), under any
+        // interleaving of dispatches and (matched) completions.
+        crate::util::prop::check("pending-load conservation", 100, |g| {
+            let workers = g.usize(1, 6);
+            let policy = if g.usize(0, 1) == 0 {
+                Policy::RoundRobin
+            } else {
+                Policy::LeastLoaded
+            };
+            let mut r = Router::new(policy, workers);
+            let n = g.size(1, 40);
+            let mut in_flight: Vec<(usize, usize)> = Vec::new(); // (worker, z)
+            let (mut dispatched, mut completed) = (0u64, 0u64);
+            for id in 0..n as u64 {
+                let z = g.usize(1, 15);
+                let w = r.dispatch(&req(id, z)).unwrap();
+                in_flight.push((w, z));
+                dispatched += z as u64;
+                // randomly drain some completions out of dispatch order
+                while !in_flight.is_empty() && g.usize(0, 2) == 0 {
+                    let i = g.usize(0, in_flight.len() - 1);
+                    let (w, z) = in_flight.swap_remove(i);
+                    r.complete(w, z);
+                    completed += z as u64;
+                }
+            }
+            assert_eq!(
+                r.pending_total(),
+                (dispatched - completed) as f64,
+                "conservation broke"
+            );
+        });
     }
 }

@@ -1,6 +1,18 @@
 //! DEdgeAI service assembly: spawn the worker fleet, drive the router,
 //! collect responses — in real time (actual PJRT compute per request)
-//! or on the calibrated virtual Jetson clock (Table V scale).
+//! or on the calibrated virtual Jetson clock.
+//!
+//! Virtual-clock serving has two modes:
+//!
+//! - **Batch** ([`DEdgeAi::run_batch`]): the Table V protocol — every
+//!   request at t=0, makespan measured. Kept on the original closed
+//!   loop so its numbers stay bit-identical release to release.
+//! - **Open loop** ([`DEdgeAi::run_events`]): a discrete-event engine
+//!   on [`super::events::EventQueue`] interleaving arrivals (from an
+//!   [`ArrivalProcess`]) with worker completions, so
+//!   `Router::complete` fires at the correct virtual timestamp and
+//!   pending-load estimates drain as traffic flows — the steady-state
+//!   serving regime the batch protocol cannot express.
 
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::channel;
@@ -12,8 +24,10 @@ use crate::runtime::XlaRuntime;
 use crate::util::rng::Rng;
 use crate::util::table::{fnum, Table};
 
+use super::arrivals::{ArrivalProcess, ZDist};
 use super::clock;
 use super::corpus::Corpus;
+use super::events::{Event, EventQueue};
 use super::message::{Request, Response};
 use super::metrics::ServeMetrics;
 use super::router::{LadPolicy, Policy, Router};
@@ -30,8 +44,12 @@ pub struct ServeOptions {
     pub artifacts_dir: String,
     /// "lad-ts" | "least-loaded" | "round-robin".
     pub scheduler: String,
-    /// Generation-quality demand z per request.
+    /// Generation-quality demand z per request (when `z_dist` is None).
     pub z_steps: usize,
+    /// Submission-time process; `Batch` reproduces Table V.
+    pub arrivals: ArrivalProcess,
+    /// Per-request quality demand; None = `Fixed(z_steps)`.
+    pub z_dist: Option<ZDist>,
 }
 
 impl Default for ServeOptions {
@@ -44,6 +62,8 @@ impl Default for ServeOptions {
             artifacts_dir: "artifacts".into(),
             scheduler: "least-loaded".into(),
             z_steps: clock::DEFAULT_Z,
+            arrivals: ArrivalProcess::Batch,
+            z_dist: None,
         }
     }
 }
@@ -75,22 +95,9 @@ impl DEdgeAi {
         })
     }
 
-    fn make_requests(&self) -> Vec<Request> {
-        let mut corpus = Corpus::new(self.opts.seed);
-        (0..self.opts.requests as u64)
-            .map(|id| Request {
-                id,
-                prompt: corpus.caption(),
-                z: self.opts.z_steps,
-                submitted_at: 0.0,
-            })
-            .collect()
-    }
-
-    /// Virtual-time batch run (the Table V protocol: all requests
-    /// submitted at t=0, makespan measured on the Jetson-calibrated
-    /// clock). Deterministic, no threads.
-    pub fn run_virtual(&self) -> Result<ServeMetrics> {
+    /// Build the router (loading AOT artifacts only when the policy
+    /// needs them; the LAD policy owns its executables afterwards).
+    fn make_router(&self) -> Result<Router> {
         let rt = if self.opts.scheduler.starts_with("lad") {
             Some(
                 XlaRuntime::new(Path::new(&self.opts.artifacts_dir))
@@ -99,18 +106,62 @@ impl DEdgeAi {
         } else {
             None
         };
-        let mut router = Router::new(self.make_policy(rt.as_ref())?, self.opts.workers);
+        Ok(Router::new(self.make_policy(rt.as_ref())?, self.opts.workers))
+    }
+
+    /// Effective per-request quality-demand distribution.
+    fn z_dist(&self) -> ZDist {
+        self.opts
+            .z_dist
+            .clone()
+            .unwrap_or(ZDist::Fixed(self.opts.z_steps))
+    }
+
+    /// Deterministic request trace: captions, demands, and submission
+    /// times are pure functions of (opts, seed). The caption and
+    /// arrival/demand streams are independent, so the batch trace with
+    /// fixed z is bit-identical to the pre-open-loop one.
+    fn make_requests(&self) -> Vec<Request> {
+        let mut corpus = Corpus::new(self.opts.seed);
+        let mut arr_rng = Rng::new(self.opts.seed ^ 0xA881_07A1);
+        let mut z_rng = Rng::new(self.opts.seed ^ 0x57E9_D157);
+        let zd = self.z_dist();
+        self.opts
+            .arrivals
+            .times(self.opts.requests, &mut arr_rng)
+            .into_iter()
+            .enumerate()
+            .map(|(id, submitted_at)| Request {
+                id: id as u64,
+                prompt: corpus.caption(),
+                z: zd.sample(&mut z_rng),
+                submitted_at,
+            })
+            .collect()
+    }
+
+    /// Service-time model for one request on a virtual Jetson: LAN up,
+    /// generation (with small per-image jitter), LAN down.
+    fn service_times(req: &Request, rng: &mut Rng) -> (f64, f64, f64) {
+        let up = clock::lan_seconds(req.prompt.len() as f64 * 8.0);
+        let gen =
+            clock::jetson_image_seconds(req.z) * (1.0 + 0.03 * rng.normal());
+        let down = clock::lan_seconds(0.8e6);
+        (up, gen, down)
+    }
+
+    /// Virtual-time batch run (the Table V protocol: all requests
+    /// submitted at t=0, makespan measured on the Jetson-calibrated
+    /// clock). Deterministic, no threads.
+    pub fn run_batch(&self) -> Result<ServeMetrics> {
+        let mut router = self.make_router()?;
         let mut metrics = ServeMetrics::new(self.opts.workers);
         // event clock per worker: time the worker becomes free
         let mut free_at = vec![0.0f64; self.opts.workers];
         let mut rng = Rng::new(self.opts.seed ^ 0xC0FFEE);
         for req in self.make_requests() {
             let w = router.dispatch(&req)?;
-            let up = clock::lan_seconds(req.prompt.len() as f64 * 8.0);
-            // small per-image variation around the Jetson calibration
-            let gen = clock::jetson_image_seconds(req.z)
-                * (1.0 + 0.03 * rng.normal());
-            let down = clock::lan_seconds(0.8e6);
+            let (up, gen, down) = Self::service_times(&req, &mut rng);
             let start = free_at[w].max(req.submitted_at + up);
             let done = start + gen + down;
             free_at[w] = done;
@@ -120,6 +171,7 @@ impl DEdgeAi {
             let resp = Response {
                 id: req.id,
                 worker: w,
+                z: req.z,
                 latency: done - req.submitted_at,
                 queue_wait: start - req.submitted_at - up,
                 gen_time: gen,
@@ -130,9 +182,77 @@ impl DEdgeAi {
         Ok(metrics)
     }
 
+    /// Open-loop run on the discrete-event engine: arrivals and
+    /// completions interleave on one virtual clock, so every dispatch
+    /// decision sees the pending load *after* all completions that
+    /// precede it — the router's load estimates finally drain.
+    pub fn run_events(&self) -> Result<ServeMetrics> {
+        let mut router = self.make_router()?;
+        let mut metrics = ServeMetrics::new(self.opts.workers);
+        let mut free_at = vec![0.0f64; self.opts.workers];
+        let mut rng = Rng::new(self.opts.seed ^ 0xC0FFEE);
+        let mut queue = EventQueue::new();
+        for req in self.make_requests() {
+            queue.push(req.submitted_at, Event::Arrival(req));
+        }
+        while let Some((now, event)) = queue.pop() {
+            match event {
+                Event::Arrival(req) => {
+                    let w = router.dispatch(&req)?;
+                    let (up, gen, down) = Self::service_times(&req, &mut rng);
+                    let start = free_at[w].max(now + up);
+                    let done = start + gen + down;
+                    free_at[w] = done;
+                    queue.push(
+                        done,
+                        Event::Completion(Response {
+                            id: req.id,
+                            worker: w,
+                            z: req.z,
+                            latency: done - now,
+                            queue_wait: start - now - up,
+                            gen_time: gen,
+                            checksum: 0.0,
+                        }),
+                    );
+                }
+                Event::Completion(resp) => {
+                    router.complete(resp.worker, resp.z);
+                    metrics.record(&resp, now);
+                }
+            }
+        }
+        // Conservation: every dispatched step completed, and the
+        // integer-valued f64 arithmetic cancels exactly.
+        debug_assert_eq!(
+            router.pending_total(),
+            0.0,
+            "event engine drained but pending load remains"
+        );
+        Ok(metrics)
+    }
+
+    /// Virtual-clock entry point: the batch protocol keeps its legacy
+    /// closed loop (bit-identical Table V); open-loop arrival processes
+    /// run on the event engine.
+    pub fn run_virtual(&self) -> Result<ServeMetrics> {
+        match self.opts.arrivals {
+            ArrivalProcess::Batch => self.run_batch(),
+            _ => self.run_events(),
+        }
+    }
+
     /// Real-time run: worker threads with their own PJRT clients doing
-    /// actual generation compute; wallclock latencies.
+    /// actual generation compute; wallclock latencies. Requests are
+    /// submitted back-to-back (open-loop pacing is a virtual-clock
+    /// feature; pacing real PJRT compute would just measure sleeps).
     pub fn run_real(&self) -> Result<ServeMetrics> {
+        if !matches!(self.opts.arrivals, ArrivalProcess::Batch) {
+            log::warn!(
+                "real-time mode submits back-to-back; --arrivals {} ignored",
+                self.opts.arrivals.name()
+            );
+        }
         let artifacts = PathBuf::from(&self.opts.artifacts_dir);
         let rt = XlaRuntime::new(&artifacts)?;
         let mut router = Router::new(self.make_policy(Some(&rt))?, self.opts.workers);
@@ -156,7 +276,10 @@ impl DEdgeAi {
             let resp: Response = resp_rx
                 .recv()
                 .context("worker fleet died before completing requests")?;
-            router.complete(resp.worker, self.opts.z_steps);
+            // Drain by the completed request's own demand, not the
+            // global default — the two differ whenever z is
+            // heterogeneous, and the drift compounds per completion.
+            router.complete(resp.worker, resp.z);
             let now = epoch.elapsed().as_secs_f64();
             metrics.record(&resp, now);
         }
@@ -186,19 +309,34 @@ pub fn serve_and_report(opts: &ServeOptions) -> Result<()> {
 
     let mode = if opts.real_time { "real-time (PJRT compute)" } else { "virtual Jetson clock" };
     println!(
-        "DEdgeAI: {} requests, {} workers, z={}, scheduler={}, mode={}",
-        opts.requests, opts.workers, opts.z_steps, opts.scheduler, mode
+        "DEdgeAI: {} requests, {} workers, arrivals={}, scheduler={}, mode={}",
+        opts.requests, opts.workers, opts.arrivals.name(), opts.scheduler, mode
     );
+    if let Some(rate) = opts.arrivals.rate() {
+        let mean_z = sys.z_dist().mean();
+        let cap = clock::fleet_capacity_rps(opts.workers, mean_z);
+        println!(
+            "offered load: {rate:.3} req/s vs fleet capacity {cap:.3} img/s \
+             at mean z={mean_z:.1}  (rho={:.2})",
+            rate / cap
+        );
+    }
     let mut t = Table::new(&["metric", "value"]).left_first();
     t.row(vec!["served".into(), metrics.count().to_string()]);
     t.row(vec!["makespan (s)".into(), fnum(metrics.makespan(), 2)]);
+    t.row(vec!["mean time-in-system (s)".into(), fnum(metrics.mean_latency(), 2)]);
     t.row(vec!["median latency (s)".into(), fnum(metrics.median_latency(), 2)]);
     t.row(vec!["p95 latency (s)".into(), fnum(metrics.p95_latency(), 2)]);
+    t.row(vec!["p99 latency (s)".into(), fnum(metrics.p99_latency(), 2)]);
     t.row(vec!["mean queue wait (s)".into(), fnum(metrics.mean_queue_wait(), 2)]);
     t.row(vec!["mean gen time (s)".into(), fnum(metrics.mean_gen_time(), 3)]);
     t.row(vec![
         "throughput (img/s)".into(),
         fnum(metrics.throughput(), 3),
+    ]);
+    t.row(vec![
+        "mean worker utilization".into(),
+        fnum(metrics.mean_utilization(), 3),
     ]);
     t.row(vec!["worker imbalance".into(), fnum(metrics.imbalance(), 3)]);
     t.row(vec!["wallclock (s)".into(), fnum(wall, 2)]);
@@ -253,5 +391,59 @@ mod tests {
         };
         let m = DEdgeAi::new(opts).run_virtual().unwrap();
         assert_eq!(m.count(), 20);
+    }
+
+    #[test]
+    fn event_engine_reproduces_batch_protocol() {
+        // Same opts, both engines: the event queue processes the t=0
+        // arrivals in submission order (FIFO tiebreak), draws the same
+        // jitter stream, and so lands on the identical schedule.
+        let opts = ServeOptions {
+            requests: 60,
+            ..ServeOptions::default()
+        };
+        let sys = DEdgeAi::new(opts);
+        let a = sys.run_batch().unwrap();
+        let b = sys.run_events().unwrap();
+        assert_eq!(a.count(), b.count());
+        assert_eq!(a.per_worker(), b.per_worker());
+        assert_eq!(a.makespan().to_bits(), b.makespan().to_bits());
+        assert_eq!(a.median_latency().to_bits(), b.median_latency().to_bits());
+        assert_eq!(a.p99_latency().to_bits(), b.p99_latency().to_bits());
+    }
+
+    #[test]
+    fn poisson_open_loop_serves_everything() {
+        let opts = ServeOptions {
+            requests: 80,
+            arrivals: ArrivalProcess::Poisson { rate: 0.25 },
+            z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+            ..ServeOptions::default()
+        };
+        let m = DEdgeAi::new(opts).run_virtual().unwrap();
+        assert_eq!(m.count(), 80);
+        assert!(m.mean_latency() > 0.0);
+        assert!(m.p99_latency() >= m.median_latency());
+        let u = m.mean_utilization();
+        assert!(u > 0.0 && u <= 1.0, "utilization={u}");
+    }
+
+    #[test]
+    fn open_loop_latency_grows_with_rate() {
+        // Under-loaded vs over-loaded: time-in-system must rise.
+        let run = |rate: f64| {
+            let opts = ServeOptions {
+                requests: 150,
+                arrivals: ArrivalProcess::Poisson { rate },
+                ..ServeOptions::default()
+            };
+            DEdgeAi::new(opts).run_virtual().unwrap().mean_latency()
+        };
+        let light = run(0.15); // rho ~ 0.55 at z=15
+        let heavy = run(0.40); // rho ~ 1.46
+        assert!(
+            heavy > light * 1.5,
+            "light={light} heavy={heavy}: queueing delay did not grow"
+        );
     }
 }

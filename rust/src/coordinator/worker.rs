@@ -73,6 +73,7 @@ pub fn spawn_worker(
                 let resp = Response {
                     id: req.id,
                     worker: id,
+                    z: req.z,
                     latency: done - req.submitted_at,
                     queue_wait: start - req.submitted_at,
                     gen_time: done - start,

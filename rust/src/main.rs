@@ -18,6 +18,7 @@ use anyhow::{bail, Result};
 use dedgeai::agents::{make_scheduler, Method};
 use dedgeai::config::{ActorLoss, AgentConfig, Backend, EnvConfig, ExpConfig};
 use dedgeai::coordinator;
+use dedgeai::coordinator::{ArrivalProcess, ZDist};
 use dedgeai::runtime::XlaRuntime;
 use dedgeai::sim::{experiments, output, runner};
 use dedgeai::util::cli::Args;
@@ -28,8 +29,10 @@ dedgeai — latent action diffusion scheduling for AIGC edge services
 
 USAGE:
   dedgeai train --method lad-ts [--episodes 60] [--seed 42]
-  dedgeai exp <fig5|fig6a|fig6b|fig7a|fig7b|fig8a|fig8b|table5|mem|ablation|all>
+  dedgeai exp <fig5|fig6a|fig6b|fig7a|fig7b|fig8a|fig8b|table5|mem|ablation|
+               serve-sweep|all>
   dedgeai serve [--workers 5] [--requests 100] [--real-time]
+                [--arrivals poisson --rate 0.3] [--z-dist uniform:5,15]
   dedgeai info
 
 OPTIONS (shared):
@@ -47,6 +50,21 @@ OPTIONS (shared):
   --share            share one agent across BSs (speed/ablation)
   --train-every N    decisions per train step (default 25)
   --periodicity P    workload periodicity in [0,1] (default 0.85)
+
+OPTIONS (serving / serve-sweep):
+  --arrivals A       arrival process: batch | poisson |
+                     bursty[:burst,dwell] | diurnal[:period,amp]
+                     (serve default: batch; serve-sweep default: poisson)
+  --rate R           mean arrival rate in req/s (serve, default 0.25)
+  --z-dist D         per-request quality demand: fixed:Z | uniform:LO,HI |
+                     bimodal:LO,HI,P  (serve default: fixed z-steps)
+  --z-steps N        serve only: fixed demand when --z-dist absent
+                     (default 15; serve-sweep always uses --z-dist)
+  --rates LIST       serve-sweep arrival rates, e.g. 0.2,0.3,0.4
+  --fleets LIST      serve-sweep fleet sizes (default 5)
+  --schedulers LIST  serve-sweep policies
+                     (default round-robin,least-loaded,lad-ts)
+  --serve-requests N requests per serve-sweep cell (default 200)
 ";
 
 fn main() {
@@ -105,6 +123,20 @@ fn exp_config(args: &Args) -> Result<ExpConfig> {
     cfg.out_dir = args.str_or("out", &cfg.out_dir);
     cfg.artifacts_dir = args.str_or("artifacts", &cfg.artifacts_dir);
     cfg.jobs = args.usize_or("jobs", cfg.jobs)?;
+    // serve-sweep grid overrides
+    if let Some(rates) = args.list_f64("rates")? {
+        cfg.serve.rates = rates;
+    }
+    if let Some(fleets) = args.list_usize("fleets")? {
+        cfg.serve.fleets = fleets;
+    }
+    if let Some(s) = args.get("schedulers") {
+        cfg.serve.schedulers =
+            s.split(',').map(|x| x.trim().to_string()).collect();
+    }
+    cfg.serve.requests = args.usize_or("serve-requests", cfg.serve.requests)?;
+    cfg.serve.arrivals = args.str_or("arrivals", &cfg.serve.arrivals);
+    cfg.serve.z_dist = args.str_or("z-dist", &cfg.serve.z_dist);
     Ok(cfg)
 }
 
@@ -172,6 +204,12 @@ fn cmd_exp(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let exp = exp_config(args)?;
+    let rate = args.f64_or("rate", 0.25)?;
+    let arrivals = ArrivalProcess::parse(&args.str_or("arrivals", "batch"), rate)?;
+    let z_dist = match args.get("z-dist") {
+        Some(spec) => Some(ZDist::parse(spec)?),
+        None => None,
+    };
     let opts = coordinator::ServeOptions {
         workers: args.usize_or("workers", 5)?,
         requests: args.usize_or("requests", 100)?,
@@ -180,6 +218,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         artifacts_dir: exp.artifacts_dir.clone(),
         scheduler: args.str_or("method", "lad-ts"),
         z_steps: args.usize_or("z-steps", 15)?,
+        arrivals,
+        z_dist,
     };
     coordinator::serve_and_report(&opts)
 }

@@ -33,9 +33,12 @@ use anyhow::{bail, Context, Result};
 
 use crate::agents::{make_scheduler, Method};
 use crate::config::{AgentConfig, EnvConfig, ExpConfig};
+use crate::coordinator::arrivals::{ArrivalProcess, ZDist};
+use crate::coordinator::clock;
 use crate::coordinator::models::{reduction_pct, ModelStack};
 use crate::coordinator::platforms::PLATFORMS;
 use crate::coordinator::service::{DEdgeAi, ServeOptions};
+use crate::coordinator::ServeMetrics;
 use crate::runtime::XlaRuntime;
 use crate::util::json::Json;
 use crate::util::stats::{convergence_episode, mean, std};
@@ -154,6 +157,62 @@ pub fn run_train_units(units: Vec<TrainUnit>, jobs: usize) -> Result<Vec<Vec<f64
     parallel::run_indexed(jobs, closures)
 }
 
+/// Scalar summary of one open-loop serving run — the value a
+/// `serve-sweep` grid cell produces. `PartialEq` is exact f64 equality
+/// so the `--jobs` parity test can assert bit-identical sweeps.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeSummary {
+    pub served: usize,
+    pub makespan: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    /// Mean time-in-system (submission -> result).
+    pub mean_tis: f64,
+    pub mean_queue_wait: f64,
+    pub throughput: f64,
+    pub mean_utilization: f64,
+    pub imbalance: f64,
+}
+
+impl ServeSummary {
+    pub fn from_metrics(m: &ServeMetrics) -> Self {
+        Self {
+            served: m.count(),
+            makespan: m.makespan(),
+            p50: m.median_latency(),
+            p95: m.p95_latency(),
+            p99: m.p99_latency(),
+            mean_tis: m.mean_latency(),
+            mean_queue_wait: m.mean_queue_wait(),
+            throughput: m.throughput(),
+            mean_utilization: m.mean_utilization(),
+            imbalance: m.imbalance(),
+        }
+    }
+}
+
+/// Run every serving configuration on the virtual clock, fanned out
+/// over `jobs` workers, results in unit order. Each unit owns its
+/// seed, router, and (for lad-ts) its own `XlaRuntime`, so outputs are
+/// bit-identical for any `jobs` value — the serving analogue of
+/// [`run_train_units`].
+pub fn run_serve_units(
+    units: Vec<ServeOptions>,
+    jobs: usize,
+) -> Result<Vec<ServeSummary>> {
+    let closures: Vec<_> = units
+        .into_iter()
+        .map(|opts| {
+            move || -> Result<ServeSummary> {
+                let metrics = DEdgeAi::new(opts).run_virtual()?;
+                Ok(ServeSummary::from_metrics(&metrics))
+            }
+        })
+        .collect();
+    parallel::run_indexed(jobs, closures)
+}
+
 /// Dispatch one experiment id (or `all`).
 pub fn run_experiment(
     id: &str,
@@ -185,10 +244,11 @@ pub fn run_experiment(
         "table5" => table5(&ctx),
         "mem" => mem(&ctx),
         "ablation" => ablation(&ctx),
+        "serve-sweep" => serve_sweep(&ctx),
         "all" => {
             for id in [
                 "fig5", "fig6a", "fig6b", "fig7a", "fig7b", "fig8a", "fig8b",
-                "table5", "mem", "ablation",
+                "table5", "mem", "ablation", "serve-sweep",
             ] {
                 println!("\n================ {id} ================");
                 run_experiment(id, env, agent, exp)?;
@@ -196,25 +256,10 @@ pub fn run_experiment(
             Ok(())
         }
         other => bail!(
-            "unknown experiment '{other}' \
-             (fig5|fig6a|fig6b|fig7a|fig7b|fig8a|fig8b|table5|mem|ablation|all)"
+            "unknown experiment '{other}' (fig5|fig6a|fig6b|fig7a|fig7b|\
+             fig8a|fig8b|table5|mem|ablation|serve-sweep|all)"
         ),
     }
-}
-
-/// Train `method` for the configured replications (fanned out over the
-/// configured workers); returns the per-episode delay curves.
-fn train_curves(
-    ctx: &Ctx,
-    method: Method,
-    env_cfg: &EnvConfig,
-    agent_cfg: &AgentConfig,
-    episodes: usize,
-) -> Result<Vec<Vec<f64>>> {
-    let units = (0..ctx.exp.replications)
-        .map(|rep| ctx.unit(method, env_cfg, agent_cfg, episodes, rep))
-        .collect::<Result<Vec<_>>>()?;
-    run_train_units(units, ctx.exp.jobs)
 }
 
 /// Mean curve across replications.
@@ -245,9 +290,9 @@ fn converged_per_rep(curves: &[Vec<f64>], frac: f64) -> Vec<f64> {
 
 fn fig5(ctx: &Ctx) -> Result<()> {
     let episodes = ctx.exp.episodes;
+    let reps = ctx.exp.replications;
     println!(
-        "Fig. 5 — learning performance ({episodes} episodes, {} reps, per-BS agents)",
-        ctx.exp.replications
+        "Fig. 5 — learning performance ({episodes} episodes, {reps} reps, per-BS agents)"
     );
     let mut result = Json::obj();
     let mut table =
@@ -258,11 +303,30 @@ fn fig5(ctx: &Ctx) -> Result<()> {
     let mut dqn_delay = f64::NAN;
     let mut curves_all: Vec<(Method, Vec<f64>)> = Vec::new();
 
-    for method in Method::fig5_set() {
-        let t0 = std::time::Instant::now();
-        let curves = train_curves(ctx, method, ctx.env, ctx.agent, episodes)?;
-        let curve = mean_curve(&curves);
-        let tail = converged_per_rep(&curves, 0.2);
+    // One flat (method × replication) grid so the executor fans across
+    // methods too, not just replications — method mi's curves live at
+    // mi*reps..(mi+1)*reps. Seeds depend only on `rep`, so the numbers
+    // match the old per-method loop exactly.
+    let methods = Method::fig5_set();
+    let t0 = std::time::Instant::now();
+    let mut units = Vec::with_capacity(methods.len() * reps);
+    for &method in &methods {
+        for rep in 0..reps {
+            units.push(ctx.unit(method, ctx.env, ctx.agent, episodes, rep)?);
+        }
+    }
+    let all_curves = run_train_units(units, ctx.exp.jobs)?;
+    println!(
+        "  trained {} units in {:.1}s (--jobs {})",
+        methods.len() * reps,
+        t0.elapsed().as_secs_f64(),
+        ctx.exp.jobs
+    );
+
+    for (mi, &method) in methods.iter().enumerate() {
+        let curves = &all_curves[mi * reps..(mi + 1) * reps];
+        let curve = mean_curve(curves);
+        let tail = converged_per_rep(curves, 0.2);
         let (m, s) = (mean(&tail), std(&tail));
         let conv = convergence_episode(&curve, 0.08);
         if method == Method::DqnTs {
@@ -279,12 +343,7 @@ fn fig5(ctx: &Ctx) -> Result<()> {
             conv.to_string(),
             vs,
         ]);
-        println!(
-            "  {:10} {}  ({:.1}s)",
-            method.name(),
-            output::sparkline(&curve, 50),
-            t0.elapsed().as_secs_f64()
-        );
+        println!("  {:10} {}", method.name(), output::sparkline(&curve, 50));
         let mut mj = Json::obj();
         mj.set("curve", Json::arr_f64(&curve));
         mj.set("converged", Json::num(m));
@@ -715,4 +774,142 @@ fn ablation(ctx: &Ctx) -> Result<()> {
     }
     println!("{}", t2.render());
     output::write_json(&ctx.exp.out_dir, "ablation", &result)
+}
+
+// ---------------------------------------------------------------------------
+// serve-sweep — open-loop serving under arrival-rate pressure (beyond
+// the paper's Table V batch protocol).
+// ---------------------------------------------------------------------------
+
+/// (arrival rate × scheduler × fleet size) grid of open-loop serving
+/// runs on the discrete-event engine, fanned over the executor. Each
+/// cell reports steady-state measures: p50/p99 latency, mean
+/// time-in-system, throughput, and per-worker utilization.
+fn serve_sweep(ctx: &Ctx) -> Result<()> {
+    let sc = &ctx.exp.serve;
+    let mut schedulers = sc.schedulers.clone();
+    if ctx.runtime.is_none() {
+        let before = schedulers.len();
+        schedulers.retain(|s| !s.starts_with("lad"));
+        if schedulers.len() < before {
+            log::warn!("serve-sweep: AOT artifacts unavailable; dropping lad-ts");
+        }
+    }
+    if schedulers.is_empty() || sc.rates.is_empty() || sc.fleets.is_empty() {
+        bail!("serve-sweep: empty grid (need rates, schedulers, fleets)");
+    }
+    if sc.arrivals == "batch" {
+        // batch ignores the rate, so every rate cell would be the same
+        // run reported under different rho values — a fake sweep.
+        bail!(
+            "serve-sweep is an open-loop rate sweep; '--arrivals batch' has \
+             no rate dimension (use `serve` or `exp table5` for the batch \
+             protocol)"
+        );
+    }
+    let z_dist = ZDist::parse(&sc.z_dist)?;
+
+    let mut units = Vec::new();
+    let mut cells: Vec<(usize, f64, String)> = Vec::new();
+    for &workers in &sc.fleets {
+        for &rate in &sc.rates {
+            for sched in &schedulers {
+                units.push(ServeOptions {
+                    workers,
+                    requests: sc.requests,
+                    real_time: false,
+                    seed: ctx.exp.seed,
+                    artifacts_dir: ctx.exp.artifacts_dir.clone(),
+                    scheduler: sched.clone(),
+                    z_steps: clock::DEFAULT_Z,
+                    arrivals: ArrivalProcess::parse(&sc.arrivals, rate)?,
+                    z_dist: Some(z_dist.clone()),
+                });
+                cells.push((workers, rate, sched.clone()));
+            }
+        }
+    }
+    println!(
+        "serve-sweep — open-loop {} arrivals, {} requests/cell, z ~ {} \
+         ({} cells: {} fleet(s) x {} rate(s) x {} scheduler(s), --jobs {})",
+        sc.arrivals,
+        sc.requests,
+        sc.z_dist,
+        units.len(),
+        sc.fleets.len(),
+        sc.rates.len(),
+        schedulers.len(),
+        ctx.exp.jobs
+    );
+    let t0 = std::time::Instant::now();
+    let summaries = run_serve_units(units, ctx.exp.jobs)?;
+    println!("  simulated in {:.1}s", t0.elapsed().as_secs_f64());
+
+    let mut table = Table::new(&[
+        "fleet", "rate (req/s)", "rho", "scheduler", "p50 (s)", "p99 (s)",
+        "mean TIS (s)", "tput (img/s)", "util", "imbalance",
+    ])
+    .left_first()
+    .title("serve-sweep — steady-state serving measures");
+    let mut result = Json::obj();
+    let mut csv_rows = Vec::new();
+    for ((workers, rate, sched), s) in cells.iter().zip(&summaries) {
+        let rho = rate / clock::fleet_capacity_rps(*workers, z_dist.mean());
+        table.row(vec![
+            workers.to_string(),
+            fnum(*rate, 3),
+            fnum(rho, 2),
+            sched.clone(),
+            fnum(s.p50, 2),
+            fnum(s.p99, 2),
+            fnum(s.mean_tis, 2),
+            fnum(s.throughput, 3),
+            fnum(s.mean_utilization, 2),
+            fnum(s.imbalance, 2),
+        ]);
+        // index into the *configured* scheduler list, not the
+        // artifact-filtered one, so CSVs from machines with and
+        // without artifacts attribute rows to the same policy
+        let sched_idx = sc.schedulers.iter().position(|x| x == sched).unwrap();
+        csv_rows.push(vec![
+            *workers as f64,
+            *rate,
+            rho,
+            sched_idx as f64,
+            s.p50,
+            s.p95,
+            s.p99,
+            s.mean_tis,
+            s.throughput,
+            s.mean_utilization,
+            s.imbalance,
+        ]);
+        result.set(
+            &format!("w{workers}_r{rate}_{sched}"),
+            Json::from_pairs(vec![
+                ("served", Json::num(s.served as f64)),
+                ("rho", Json::num(rho)),
+                ("p50", Json::num(s.p50)),
+                ("p95", Json::num(s.p95)),
+                ("p99", Json::num(s.p99)),
+                ("mean_tis", Json::num(s.mean_tis)),
+                ("mean_queue_wait", Json::num(s.mean_queue_wait)),
+                ("throughput", Json::num(s.throughput)),
+                ("utilization", Json::num(s.mean_utilization)),
+                ("imbalance", Json::num(s.imbalance)),
+                ("makespan", Json::num(s.makespan)),
+            ]),
+        );
+    }
+    println!("{}", table.render());
+    output::write_csv(
+        &ctx.exp.out_dir,
+        "serve_sweep",
+        &[
+            "fleet", "rate", "rho", "sched_idx", "p50", "p95", "p99",
+            "mean_tis", "throughput", "utilization", "imbalance",
+        ],
+        &csv_rows,
+    )?;
+    output::write_json(&ctx.exp.out_dir, "serve_sweep", &result)
 }

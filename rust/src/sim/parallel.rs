@@ -37,6 +37,10 @@ pub fn resolve_jobs(requested: usize) -> usize {
 /// error is the failed unit with the lowest index among those that
 /// ran. A grid that errors immediately therefore doesn't burn the
 /// rest of its compute budget first.
+///
+/// Progress: each finished unit logs `parallel: done/total` (log
+/// level info), so long grids are observable with `RUST_LOG=info` —
+/// reporting only, never part of any result.
 pub fn run_indexed<T, F>(jobs: usize, units: Vec<F>) -> Result<Vec<T>>
 where
     T: Send,
@@ -45,7 +49,12 @@ where
     let n = units.len();
     let jobs = resolve_jobs(jobs).min(n.max(1));
     if jobs <= 1 {
-        return units.into_iter().map(|f| f()).collect();
+        let mut out = Vec::with_capacity(n);
+        for (i, f) in units.into_iter().enumerate() {
+            out.push(f()?);
+            log::info!("parallel: {}/{n} units done (sequential)", i + 1);
+        }
+        return Ok(out);
     }
 
     let queue: Vec<Mutex<Option<F>>> =
@@ -53,6 +62,7 @@ where
     let results: Vec<Mutex<Option<Result<T>>>> =
         (0..n).map(|_| Mutex::new(None)).collect();
     let next = AtomicUsize::new(0);
+    let completed = AtomicUsize::new(0);
     let failed = AtomicBool::new(false);
 
     std::thread::scope(|s| {
@@ -75,6 +85,8 @@ where
                     failed.store(true, Ordering::Relaxed);
                 }
                 *results[i].lock().unwrap() = Some(out);
+                let done = completed.fetch_add(1, Ordering::Relaxed) + 1;
+                log::info!("parallel: {done}/{n} units done");
             });
         }
     });

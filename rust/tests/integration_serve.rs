@@ -8,6 +8,15 @@ fn artifacts_dir() -> String {
     format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
 }
 
+/// Real-time tests need the AOT artifacts (each worker compiles the
+/// genmodel); gate instead of failing so the suite runs artifact-free
+/// in CI (same pattern as the worker/runtime tests).
+fn have_artifacts() -> bool {
+    std::path::Path::new(&artifacts_dir())
+        .join("manifest.json")
+        .exists()
+}
+
 fn base_opts() -> ServeOptions {
     ServeOptions {
         artifacts_dir: artifacts_dir(),
@@ -17,6 +26,10 @@ fn base_opts() -> ServeOptions {
 
 #[test]
 fn real_time_serving_with_three_workers() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
     let opts = ServeOptions {
         workers: 3,
         requests: 9,
@@ -35,6 +48,10 @@ fn real_time_serving_with_three_workers() {
 
 #[test]
 fn real_time_lad_policy_routes_through_hlo() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
     // The LADN diffusion actor on the request path (b5 artifacts).
     let opts = ServeOptions {
         workers: 5,

@@ -6,7 +6,9 @@
 
 use dedgeai::agents::Method;
 use dedgeai::config::{AgentConfig, EnvConfig};
-use dedgeai::sim::experiments::{run_train_units, TrainUnit};
+use dedgeai::coordinator::arrivals::{ArrivalProcess, ZDist};
+use dedgeai::coordinator::service::ServeOptions;
+use dedgeai::sim::experiments::{run_serve_units, run_train_units, TrainUnit};
 use dedgeai::sim::parallel::run_indexed;
 
 const REPS: usize = 2;
@@ -102,6 +104,46 @@ fn learner_parity_when_artifacts_present() {
             assert_eq!(x.to_bits(), y.to_bits(), "learner parity broke: {x} != {y}");
         }
     }
+}
+
+/// serve-sweep style grid: (fleet × rate × scheduler) open-loop
+/// serving runs on the event engine, heuristic schedulers only (no
+/// artifacts needed).
+fn serve_grid() -> Vec<ServeOptions> {
+    let mut units = Vec::new();
+    for &workers in &[3usize, 5] {
+        for &rate in &[0.2, 0.35, 0.5] {
+            for sched in ["round-robin", "least-loaded"] {
+                units.push(ServeOptions {
+                    workers,
+                    requests: 40,
+                    real_time: false,
+                    seed: BASE_SEED,
+                    artifacts_dir: "unused".into(),
+                    scheduler: sched.into(),
+                    z_steps: 15,
+                    arrivals: ArrivalProcess::Poisson { rate },
+                    z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+                });
+            }
+        }
+    }
+    units
+}
+
+#[test]
+fn serve_sweep_is_jobs_invariant() {
+    // The serving analogue of the training parity claim: every grid
+    // cell owns its seed, router, and event queue, so `--jobs` can
+    // only change scheduling of the cells, never their numbers.
+    let seq = run_serve_units(serve_grid(), 1).unwrap();
+    let par = run_serve_units(serve_grid(), 4).unwrap();
+    let auto = run_serve_units(serve_grid(), 0).unwrap();
+    assert_eq!(seq.len(), par.len());
+    for (i, (a, b)) in seq.iter().zip(&par).enumerate() {
+        assert_eq!(a, b, "serve unit {i} diverged between --jobs 1 and 4");
+    }
+    assert_eq!(seq, auto, "auto jobs diverged from sequential");
 }
 
 #[test]

@@ -1,0 +1,146 @@
+//! Open-loop serving integration: the discrete-event engine under
+//! Poisson/bursty/diurnal arrival processes with heterogeneous quality
+//! demand, and its equivalence to the legacy batch path on the Table V
+//! protocol. No AOT artifacts required (heuristic schedulers only).
+
+use dedgeai::coordinator::arrivals::{ArrivalProcess, ZDist};
+use dedgeai::coordinator::service::{DEdgeAi, ServeOptions};
+
+fn open_loop_opts(rate: f64) -> ServeOptions {
+    ServeOptions {
+        requests: 80,
+        scheduler: "least-loaded".into(),
+        arrivals: ArrivalProcess::Poisson { rate },
+        z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+        ..ServeOptions::default()
+    }
+}
+
+#[test]
+fn poisson_open_loop_completes_all_requests() {
+    let m = DEdgeAi::new(open_loop_opts(0.3)).run_virtual().unwrap();
+    assert_eq!(m.count(), 80);
+    assert!(m.makespan() > 0.0);
+    // every latency includes at least one generation (z >= 5 -> ~6.8 s)
+    assert!(m.median_latency() > 5.0, "median={}", m.median_latency());
+    assert!(m.p99_latency() >= m.p95_latency());
+    let u = m.mean_utilization();
+    assert!(u > 0.0 && u <= 1.0, "utilization={u}");
+    // windowed throughput covers the run and integrates back to the
+    // request count (the last window is normalized by its real width)
+    let w = m.windowed_throughput(60.0);
+    let span = m.makespan();
+    let total: f64 = w
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let width = (span - i as f64 * 60.0).min(60.0);
+            r * width
+        })
+        .sum();
+    assert!((total - 80.0).abs() < 1e-6, "windowed integral={total}");
+}
+
+#[test]
+fn event_engine_matches_legacy_batch_bitwise() {
+    // The Table V protocol expressed as events must reproduce the
+    // closed-loop batch numbers exactly: same dispatch order (FIFO at
+    // t=0), same jitter stream, same schedule.
+    for scheduler in ["least-loaded", "round-robin"] {
+        let opts = ServeOptions {
+            requests: 120,
+            scheduler: scheduler.into(),
+            ..ServeOptions::default()
+        };
+        let sys = DEdgeAi::new(opts);
+        let batch = sys.run_batch().unwrap();
+        let events = sys.run_events().unwrap();
+        assert_eq!(batch.count(), events.count());
+        assert_eq!(batch.per_worker(), events.per_worker());
+        assert_eq!(
+            batch.makespan().to_bits(),
+            events.makespan().to_bits(),
+            "{scheduler}: makespan diverged"
+        );
+        assert_eq!(
+            batch.median_latency().to_bits(),
+            events.median_latency().to_bits(),
+            "{scheduler}: median diverged"
+        );
+    }
+}
+
+#[test]
+fn completion_feedback_drains_pending_load() {
+    // At low rate each request usually completes before the next
+    // arrives: with completions fed back, least-loaded sees an idle
+    // fleet and keeps re-picking worker 0; without feedback (the old
+    // behavior) it would rotate round-robin-style over accumulated
+    // phantom load. Skewed completion counts are the fingerprint of
+    // draining load estimates.
+    let opts = ServeOptions {
+        requests: 40,
+        scheduler: "least-loaded".into(),
+        arrivals: ArrivalProcess::Poisson { rate: 0.01 }, // ~100 s apart
+        ..ServeOptions::default()
+    };
+    let m = DEdgeAi::new(opts).run_virtual().unwrap();
+    assert_eq!(m.count(), 40);
+    // with draining, worker 0 serves the large majority (~idle fleet at
+    // most arrivals); without it, rotation caps any worker near 40/5
+    assert!(
+        m.per_worker()[0] >= 20,
+        "per_worker={:?}: pending load did not drain between arrivals",
+        m.per_worker()
+    );
+    // and queueing is negligible at this rate
+    assert!(m.mean_queue_wait() < 1.0, "wait={}", m.mean_queue_wait());
+}
+
+#[test]
+fn saturation_shows_in_latency_and_utilization() {
+    let light = DEdgeAi::new(open_loop_opts(0.15)).run_virtual().unwrap();
+    let heavy = DEdgeAi::new(open_loop_opts(0.6)).run_virtual().unwrap();
+    assert!(
+        heavy.mean_latency() > light.mean_latency(),
+        "latency must grow with offered load: light={} heavy={}",
+        light.mean_latency(),
+        heavy.mean_latency()
+    );
+    assert!(
+        heavy.mean_utilization() > light.mean_utilization(),
+        "utilization must grow with offered load"
+    );
+}
+
+#[test]
+fn bursty_and_diurnal_processes_serve_to_completion() {
+    for arrivals in [
+        ArrivalProcess::Bursty { rate: 0.3, burst: 4.0, dwell: 60.0 },
+        ArrivalProcess::Diurnal { rate: 0.3, period: 300.0, amp: 0.8 },
+    ] {
+        let opts = ServeOptions {
+            requests: 60,
+            scheduler: "least-loaded".into(),
+            arrivals: arrivals.clone(),
+            z_dist: Some(ZDist::Bimodal { lo: 5, hi: 15, p_hi: 0.3 }),
+            ..ServeOptions::default()
+        };
+        let m = DEdgeAi::new(opts).run_virtual().unwrap();
+        assert_eq!(m.count(), 60, "{arrivals:?}");
+        assert!(m.p99_latency().is_finite());
+    }
+}
+
+#[test]
+fn open_loop_is_deterministic_per_seed() {
+    let a = DEdgeAi::new(open_loop_opts(0.3)).run_virtual().unwrap();
+    let b = DEdgeAi::new(open_loop_opts(0.3)).run_virtual().unwrap();
+    assert_eq!(a.makespan().to_bits(), b.makespan().to_bits());
+    assert_eq!(a.p99_latency().to_bits(), b.p99_latency().to_bits());
+    assert_eq!(a.per_worker(), b.per_worker());
+    let mut c_opts = open_loop_opts(0.3);
+    c_opts.seed = 43;
+    let c = DEdgeAi::new(c_opts).run_virtual().unwrap();
+    assert_ne!(a.makespan().to_bits(), c.makespan().to_bits());
+}
