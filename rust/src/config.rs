@@ -372,6 +372,80 @@ impl ServeSweepConfig {
     }
 }
 
+/// `exp placement-sweep` grid: placement-aware open-loop serving
+/// measured over (arrival rate × dispatch policy × VRAM profile ×
+/// model mix) on the event engine, fanned over the parallel executor.
+#[derive(Clone, Debug)]
+pub struct PlacementSweepConfig {
+    /// Arrival rates in requests/second (`--rates`).
+    pub rates: Vec<f64>,
+    /// Dispatch policies (`--schedulers`): the weak `random` baseline,
+    /// placement-unaware `least-loaded`, and the cache-aware pair.
+    pub schedulers: Vec<String>,
+    /// Worker VRAM profiles (`--vram-profiles`): semicolon-separated
+    /// comma lists of GB; each list's length sets the fleet size.
+    pub vram_profiles: Vec<String>,
+    /// Model-demand mixes (`--model-dists`): semicolon-separated
+    /// `ModelDist` specs.
+    pub model_dists: Vec<String>,
+    /// Requests simulated per grid cell (`--serve-requests`).
+    pub requests: usize,
+    /// Arrival-process kind (`--arrivals`): poisson|bursty|diurnal.
+    pub arrivals: String,
+    /// Quality-demand spec (`--z-dist`).
+    pub z_dist: String,
+    /// Slow-timescale re-placement period (`--replace-every`, seconds;
+    /// 0 disables the hook).
+    pub replace_every: f64,
+    /// Admission cap (`--queue-cap`; 0 = unbounded).
+    pub queue_cap: usize,
+}
+
+impl Default for PlacementSweepConfig {
+    fn default() -> Self {
+        Self {
+            rates: vec![0.15, 0.25],
+            schedulers: vec![
+                "random".into(),
+                "least-loaded".into(),
+                "cache-first".into(),
+                "cache-ll".into(),
+            ],
+            vram_profiles: vec![
+                // homogeneous AGX Orin fleet vs a constrained
+                // heterogeneous one where variants compete for VRAM
+                "64,64,64,64,64".into(),
+                "24,24,24,24,48".into(),
+            ],
+            model_dists: vec![
+                "fixed:resd3-m".into(),
+                "mix:resd3-m=0.45,resd3-turbo=0.45,sd3-medium=0.1".into(),
+            ],
+            requests: 200,
+            arrivals: "poisson".into(),
+            z_dist: "uniform:5,15".into(),
+            replace_every: 0.0,
+            queue_cap: 0,
+        }
+    }
+}
+
+impl PlacementSweepConfig {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("rates", Json::arr_f64(&self.rates)),
+            ("schedulers", Json::str(self.schedulers.join(","))),
+            ("vram_profiles", Json::str(self.vram_profiles.join(";"))),
+            ("model_dists", Json::str(self.model_dists.join(";"))),
+            ("requests", Json::num(self.requests as f64)),
+            ("arrivals", Json::str(self.arrivals.clone())),
+            ("z_dist", Json::str(self.z_dist.clone())),
+            ("replace_every", Json::num(self.replace_every)),
+            ("queue_cap", Json::num(self.queue_cap as f64)),
+        ])
+    }
+}
+
 /// Experiment-harness settings.
 #[derive(Clone, Debug)]
 pub struct ExpConfig {
@@ -392,6 +466,8 @@ pub struct ExpConfig {
     pub jobs: usize,
     /// Open-loop serving sweep grid (`exp serve-sweep`).
     pub serve: ServeSweepConfig,
+    /// Placement-aware serving sweep grid (`exp placement-sweep`).
+    pub placement: PlacementSweepConfig,
 }
 
 impl Default for ExpConfig {
@@ -404,6 +480,7 @@ impl Default for ExpConfig {
             artifacts_dir: "artifacts".into(),
             jobs: 0,
             serve: ServeSweepConfig::default(),
+            placement: PlacementSweepConfig::default(),
         }
     }
 }
@@ -418,6 +495,7 @@ impl ExpConfig {
             ("artifacts_dir", Json::str(self.artifacts_dir.clone())),
             ("jobs", Json::num(self.jobs as f64)),
             ("serve", self.serve.to_json()),
+            ("placement", self.placement.to_json()),
         ])
     }
 }
@@ -514,6 +592,18 @@ mod tests {
         assert!(!s.fleets.is_empty() && s.requests > 0);
         assert_eq!(s.arrivals, "poisson");
         assert!(s.to_json().get("rates").is_some());
+    }
+
+    #[test]
+    fn placement_sweep_defaults_form_a_grid() {
+        let p = PlacementSweepConfig::default();
+        assert!(p.rates.len() >= 2);
+        assert!(p.schedulers.iter().any(|s| s == "random"));
+        assert!(p.schedulers.iter().any(|s| s.starts_with("cache")));
+        assert!(p.vram_profiles.len() >= 2, "need >=2 VRAM profiles");
+        assert!(p.model_dists.len() >= 2, "need >=2 model mixes");
+        assert!(p.requests > 0);
+        assert!(p.to_json().get("vram_profiles").is_some());
     }
 
     #[test]

@@ -302,6 +302,68 @@ mod tests {
     }
 
     #[test]
+    fn poisson_empirical_rate_long_horizon() {
+        // n/t_n -> rate; at n=20k the relative error should be well
+        // under the ~1/sqrt(n) ≈ 0.7% noise floor's 4-sigma band.
+        let mut rng = Rng::new(21);
+        let n = 20_000;
+        let rate = 2.0;
+        let ts = ArrivalProcess::Poisson { rate }.times(n, &mut rng);
+        let emp = n as f64 / ts[n - 1];
+        assert!(
+            (emp - rate).abs() / rate < 0.03,
+            "poisson empirical rate {emp} vs configured {rate}"
+        );
+    }
+
+    #[test]
+    fn bursty_empirical_rate_long_horizon() {
+        // The MMPP-2 state rates are chosen so equal mean dwell gives
+        // a long-run average of exactly `rate`; dwell switching adds
+        // variance, so the tolerance is looser than plain Poisson.
+        let mut rng = Rng::new(22);
+        let n = 20_000;
+        let rate = 0.8;
+        let p = ArrivalProcess::Bursty { rate, burst: 6.0, dwell: 20.0 };
+        let ts = p.times(n, &mut rng);
+        let emp = n as f64 / ts[n - 1];
+        assert!(
+            (emp - rate).abs() / rate < 0.05,
+            "bursty empirical rate {emp} vs configured {rate}"
+        );
+    }
+
+    #[test]
+    fn diurnal_peak_trough_ratio_matches_parameters() {
+        // λ(t) = rate·(1 + amp·sin(2πt/period)). Over the quarter
+        // period centred on the peak, mean sin = 2√2/π ≈ 0.9003, so
+        // counts in the peak vs trough quarters should come in at
+        // (1 + 0.9003·amp) / (1 − 0.9003·amp) ≈ 6.15 for amp = 0.8.
+        let mut rng = Rng::new(23);
+        let (rate, period, amp) = (1.0, 200.0, 0.8);
+        let n = 40_000; // ~200 periods: counting noise ≈ 1-2%
+        let p = ArrivalProcess::Diurnal { rate, period, amp };
+        let ts = p.times(n, &mut rng);
+        let (mut peak, mut trough) = (0u64, 0u64);
+        for &t in &ts {
+            let phase = (t % period) / period;
+            if (0.125..0.375).contains(&phase) {
+                peak += 1;
+            } else if (0.625..0.875).contains(&phase) {
+                trough += 1;
+            }
+        }
+        assert!(peak > 0 && trough > 0);
+        let s = 2.0 * std::f64::consts::SQRT_2 / std::f64::consts::PI;
+        let expected = (1.0 + amp * s) / (1.0 - amp * s);
+        let ratio = peak as f64 / trough as f64;
+        assert!(
+            (ratio - expected).abs() < 0.9,
+            "peak/trough ratio {ratio} vs analytic {expected}"
+        );
+    }
+
+    #[test]
     fn arrival_times_are_deterministic_per_seed() {
         let p = ArrivalProcess::Poisson { rate: 0.3 };
         let a = p.times(50, &mut Rng::new(7));

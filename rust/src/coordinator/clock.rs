@@ -18,7 +18,14 @@ pub const LAN_RATE_BPS: f64 = 1.0e9;
 
 /// Per-image generation time on a virtual Jetson.
 pub fn jetson_image_seconds(z: usize) -> f64 {
-    JETSON_ENCODE_S + z as f64 * JETSON_STEP_S
+    jetson_image_seconds_mult(z, 1.0)
+}
+
+/// Per-image generation time with a per-step time multiplier (the
+/// distilled turbo tier halves the step cost; the encode is model
+/// independent). `mult = 1.0` is bit-identical to the plain model.
+pub fn jetson_image_seconds_mult(z: usize, step_mult: f64) -> f64 {
+    JETSON_ENCODE_S + z as f64 * JETSON_STEP_S * step_mult
 }
 
 /// LAN transfer seconds for `bits` of payload.
@@ -30,7 +37,13 @@ pub fn lan_seconds(bits: f64) -> f64 {
 /// demand `mean_z` — the saturation point of an open-loop arrival
 /// rate sweep (offered rate / capacity = utilization rho).
 pub fn fleet_capacity_rps(workers: usize, mean_z: f64) -> f64 {
-    workers as f64 / (JETSON_ENCODE_S + mean_z * JETSON_STEP_S)
+    fleet_capacity_rps_mult(workers, mean_z, 1.0)
+}
+
+/// Fleet capacity with a mean per-step time multiplier (for model
+/// mixes that include the faster distilled tier).
+pub fn fleet_capacity_rps_mult(workers: usize, mean_z: f64, step_mult: f64) -> f64 {
+    workers as f64 / (JETSON_ENCODE_S + mean_z * JETSON_STEP_S * step_mult)
 }
 
 #[cfg(test)]

@@ -20,6 +20,13 @@ pub enum Event {
     Arrival(Request),
     /// A worker finished a job; its pending load drains.
     Completion(Response),
+    /// A cold model load finished on `worker`. The delay was already
+    /// charged into the worker's timeline at dispatch; this event
+    /// books the cold-load time into the metrics at the virtual
+    /// timestamp the load actually completes.
+    ModelLoaded { worker: usize, model: usize, delay: f64 },
+    /// Slow-timescale re-placement epoch tick (`--replace-every`).
+    Replace,
 }
 
 struct Entry {
@@ -104,6 +111,7 @@ mod tests {
                 id,
                 prompt: String::new(),
                 z: 1,
+                model: 0,
                 submitted_at: t,
             }),
         )
@@ -113,6 +121,7 @@ mod tests {
         match ev {
             Event::Arrival(r) => r.id,
             Event::Completion(r) => r.id,
+            Event::ModelLoaded { .. } | Event::Replace => u64::MAX,
         }
     }
 

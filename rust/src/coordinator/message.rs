@@ -7,6 +7,10 @@ pub struct Request {
     pub prompt: String,
     /// Generation-quality demand z_n (denoising steps).
     pub z: usize,
+    /// Model-variant demand: index into the placement
+    /// [`Catalog`](super::placement::Catalog) (0 = reSD3-m, the
+    /// paper's default deployment). Ignored when placement is off.
+    pub model: usize,
     /// Submission time (seconds on the serving clock).
     pub submitted_at: f64,
 }
@@ -20,6 +24,8 @@ pub struct Response {
     /// load by this, not by any global default (loads are wrong
     /// otherwise whenever z is heterogeneous).
     pub z: usize,
+    /// The model variant actually served (catalog index).
+    pub model: usize,
     /// End-to-end latency (submission -> result), seconds.
     pub latency: f64,
     /// Time spent in the worker queue, seconds.
@@ -41,14 +47,17 @@ mod tests {
             id: 7,
             prompt: "a dog".into(),
             z: 15,
+            model: 0,
             submitted_at: 1.5,
         };
         assert_eq!(r.id, 7);
         assert_eq!(r.z, 15);
+        assert_eq!(r.model, 0);
         let resp = Response {
             id: r.id,
             worker: 2,
             z: r.z,
+            model: r.model,
             latency: 18.3,
             queue_wait: 0.0,
             gen_time: 18.3,
@@ -56,5 +65,6 @@ mod tests {
         };
         assert_eq!(resp.id, r.id);
         assert_eq!(resp.z, 15);
+        assert_eq!(resp.model, 0);
     }
 }

@@ -18,6 +18,14 @@ pub struct ServeMetrics {
     busy: Vec<f64>,
     first_submit: f64,
     last_complete: f64,
+    /// Model-cache accounting (placement-aware serving).
+    cache_hits: u64,
+    cache_misses: u64,
+    evictions: u64,
+    /// Total virtual seconds spent cold-loading model weights.
+    cold_load_s: f64,
+    /// Requests rejected by admission control (`--queue-cap`).
+    dropped: u64,
 }
 
 impl ServeMetrics {
@@ -31,6 +39,11 @@ impl ServeMetrics {
             busy: vec![0.0; workers],
             first_submit: f64::INFINITY,
             last_complete: 0.0,
+            cache_hits: 0,
+            cache_misses: 0,
+            evictions: 0,
+            cold_load_s: 0.0,
+            dropped: 0,
         }
     }
 
@@ -55,6 +68,80 @@ impl ServeMetrics {
             .first_submit
             .min(completed_at - resp.latency);
         self.last_complete = self.last_complete.max(completed_at);
+    }
+
+    /// Record one dispatch's model-cache outcome: a warm hit or a cold
+    /// miss with however many evictions the load forced.
+    pub fn record_cache(&mut self, hit: bool, evictions: u64) {
+        if hit {
+            self.cache_hits += 1;
+        } else {
+            self.cache_misses += 1;
+        }
+        self.evictions += evictions;
+    }
+
+    /// Book a completed cold load's delay (charged in virtual time).
+    /// The load occupied the worker, so it also counts toward that
+    /// worker's busy time — utilization reports occupancy, not just
+    /// generation, under cache churn.
+    pub fn record_cold_load_on(&mut self, worker: usize, delay_s: f64) {
+        self.cold_load_s += delay_s;
+        if let Some(b) = self.busy.get_mut(worker) {
+            *b += delay_s;
+        }
+    }
+
+    /// Count evictions that happened outside a dispatch miss (the
+    /// slow-timescale re-placement loads).
+    pub fn record_evictions(&mut self, n: u64) {
+        self.evictions += n;
+    }
+
+    /// Record one request rejected by admission control.
+    pub fn record_drop(&mut self) {
+        self.dropped += 1;
+    }
+
+    pub fn cache_hits(&self) -> u64 {
+        self.cache_hits
+    }
+
+    pub fn cache_misses(&self) -> u64 {
+        self.cache_misses
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    pub fn cold_load_s(&self) -> f64 {
+        self.cold_load_s
+    }
+
+    /// Warm-hit fraction of all placement-checked dispatches (0 when
+    /// placement was off).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Fraction of offered requests rejected by admission control.
+    pub fn drop_rate(&self) -> f64 {
+        let offered = self.dropped + self.count() as u64;
+        if offered == 0 {
+            0.0
+        } else {
+            self.dropped as f64 / offered as f64
+        }
     }
 
     pub fn count(&self) -> usize {
@@ -134,7 +221,8 @@ impl ServeMetrics {
             .collect()
     }
 
-    /// Fraction of the makespan each worker spent generating.
+    /// Fraction of the makespan each worker spent occupied (generating,
+    /// plus cold model loads when placement is on).
     pub fn utilization(&self) -> Vec<f64> {
         let m = self.makespan();
         if m <= 0.0 {
@@ -180,6 +268,7 @@ mod tests {
             id,
             worker,
             z: 15,
+            model: 0,
             latency,
             queue_wait: latency * 0.3,
             gen_time: latency * 0.7,
@@ -231,6 +320,29 @@ mod tests {
     }
 
     #[test]
+    fn cache_and_drop_accounting() {
+        let mut m = ServeMetrics::new(1);
+        assert_eq!(m.cache_hit_rate(), 0.0);
+        assert_eq!(m.drop_rate(), 0.0);
+        m.record_cache(true, 0);
+        m.record_cache(true, 0);
+        m.record_cache(false, 2);
+        m.record_cold_load_on(0, 8.5);
+        assert_eq!(m.cache_hits(), 2);
+        assert_eq!(m.cache_misses(), 1);
+        assert_eq!(m.evictions(), 2);
+        assert!((m.cache_hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((m.cold_load_s() - 8.5).abs() < 1e-12);
+        // 1 served + 3 dropped -> 75% drop rate
+        m.record(&resp(0, 0, 1.0), 1.0);
+        for _ in 0..3 {
+            m.record_drop();
+        }
+        assert_eq!(m.dropped(), 3);
+        assert!((m.drop_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
     fn utilization_tracks_busy_time() {
         let mut m = ServeMetrics::new(2);
         // worker 0 generates for 7.0 s of a 10 s makespan, worker 1 idle
@@ -239,6 +351,7 @@ mod tests {
                 id: 0,
                 worker: 0,
                 z: 15,
+                model: 0,
                 latency: 10.0,
                 queue_wait: 3.0,
                 gen_time: 7.0,

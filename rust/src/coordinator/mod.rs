@@ -21,6 +21,12 @@
 //!   per-request quality-demand distributions (`--z-dist`);
 //! - [`platforms`]: the five commercial-platform latency/price models
 //!   of Table V; [`models`]: the SD3-m vs reSD3-m memory registry;
+//! - [`placement`]: model placement & cache-aware serving — the
+//!   variant catalog (reSD3-m / SD3-medium / distilled turbo) with
+//!   VRAM footprints from the §VI.C accounting, per-worker VRAM
+//!   budgets over LRU model caches charging cold-load delays in
+//!   virtual time, per-request model demand (`--model-dist`), and the
+//!   slow-timescale re-placement hook (after arXiv:2411.01458);
 //! - [`corpus`]: the synthetic caption corpus standing in for Flickr8k.
 //!
 //! Serving entry points: `DEdgeAi::run_batch` (Table V closed batch,
@@ -36,6 +42,7 @@ pub mod events;
 pub mod message;
 pub mod metrics;
 pub mod models;
+pub mod placement;
 pub mod platforms;
 pub mod router;
 pub mod service;
@@ -45,4 +52,5 @@ pub use arrivals::{ArrivalProcess, ZDist};
 pub use events::{Event, EventQueue};
 pub use message::{Request, Response};
 pub use metrics::ServeMetrics;
+pub use placement::{Catalog, ModelDist, Placement};
 pub use service::{serve_and_report, DEdgeAi, ServeOptions};

@@ -54,6 +54,32 @@ impl ModelStack {
         }
     }
 
+    /// A step-distilled "turbo" tier of reSD3-m: the MMDiT backbone
+    /// distilled to half its parameters and workspace (the usual
+    /// guidance/step-distillation recipe), trading some quality
+    /// headroom for roughly half the per-step latency and a ~12 GB
+    /// footprint that fits devices the full reSD3-m cannot share.
+    pub fn re_sd3_turbo() -> Self {
+        Self {
+            name: "reSD3-turbo",
+            components: SD3_COMPONENTS
+                .iter()
+                .filter(|c| c.name != "T5-XXL encoder")
+                .map(|c| {
+                    if c.name == "MMDiT backbone" {
+                        Component {
+                            name: c.name,
+                            params: c.params / 2.0,
+                            workspace_gb: c.workspace_gb / 2.0,
+                        }
+                    } else {
+                        *c
+                    }
+                })
+                .collect(),
+        }
+    }
+
     pub fn total_params(&self) -> f64 {
         self.components.iter().map(|c| c.params).sum()
     }
@@ -92,6 +118,17 @@ mod tests {
         assert!((re.memory_gb() - 16.0).abs() < 1.5, "re={}", re.memory_gb());
         let red = reduction_pct(&sd3, &re);
         assert!((red - 60.0).abs() < 5.0, "reduction={red}%");
+    }
+
+    #[test]
+    fn turbo_is_smaller_than_resd3m() {
+        let re = ModelStack::re_sd3_m();
+        let turbo = ModelStack::re_sd3_turbo();
+        // half the backbone: ~12 GB, between the distill floor and reSD3-m
+        assert!((turbo.memory_gb() - 12.0).abs() < 1.0, "turbo={}", turbo.memory_gb());
+        assert!(turbo.memory_gb() < re.memory_gb());
+        assert!(turbo.total_params() < re.total_params());
+        assert_eq!(turbo.components.len(), 4);
     }
 
     #[test]

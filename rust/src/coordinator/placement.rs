@@ -1,0 +1,852 @@
+//! Model placement & cache-aware serving: which generation stack lives
+//! in which worker's VRAM, and what a cold load costs.
+//!
+//! The paper's DEdgeAI deployment exists *because* of a placement
+//! constraint: §VI.C shows the full SD3-medium stack occupies ≈40 GB —
+//! too large for a Jetson-class device to share with anything — while
+//! the refined reSD3-m fits in ≈16 GB, which is what makes a five-Jetson
+//! fleet viable at all. This module turns that observation into a
+//! serving-layer subsystem:
+//!
+//! - [`Catalog`]: deployable model variants derived from the
+//!   [`ModelStack`](super::models::ModelStack) registry (`resd3-m`,
+//!   `sd3-medium`, plus a step-distilled `resd3-turbo` tier), each with
+//!   its fp16-weights + workspace VRAM footprint and a per-GB cold-load
+//!   delay ([`COLD_LOAD_S_PER_GB`], NVMe → VRAM incl. runtime init);
+//! - [`ModelDist`]: per-request model demand (`--model-dist`), the
+//!   model analogue of the `--z-dist` quality demand;
+//! - [`Placement`]: per-worker VRAM budgets (`--worker-vram`,
+//!   heterogeneous via a comma list; default = the 64 GB Jetson AGX
+//!   Orin) over LRU [`ModelCache`]s. A dispatch to a worker without the
+//!   request's model warm charges the cold-load (and any eviction) time
+//!   in *virtual time* through the event engine; warm hits pay nothing.
+//!
+//! Two timescales (after "Two-Timescale Model Caching and Resource
+//! Allocation for Edge-Enabled AI-Generated Content Services",
+//! arXiv:2411.01458, and the joint model-assignment framing of
+//! arXiv:2409.09072):
+//!
+//! - **fast**: per-request dispatch. The router's placement-aware
+//!   policies (`cache-first`, `cache-ll`) read [`Placement::is_warm`] /
+//!   [`Placement::load_penalty_s`] so the expected cold-load cost
+//!   enters the pending-load estimate;
+//! - **slow**: [`Placement::rebalance`] (`--replace-every` seconds)
+//!   recomputes which variants each worker should *pin* from the
+//!   observed demand mix — quota by demand share, a coverage pass so
+//!   every demanded variant that fits *some* device is warm somewhere,
+//!   and a fill pass that spends leftover VRAM on the heaviest demand.
+//!
+//! Knob ↔ paper map: variant footprints reproduce the §VI.C memory
+//! figures (≈40 GB / ≈16 GB / ≈12 GB distilled); `--worker-vram 64`
+//! is the AGX Orin of the testbed; `--worker-vram 24,...` models
+//! constrained devices that hold only one refined variant at a time
+//! (note a literal 16 GB budget holds only the turbo tier — reSD3-m
+//! itself needs ≈16.2 GB); `--replace-every` is 2411.01458's slow
+//! caching timescale.
+//!
+//! Everything here is deterministic: cache state is a pure function of
+//! the dispatch/ensure sequence, and [`ModelDist::sample`] draws from
+//! the caller's seeded [`Rng`] (a `Fixed` dist draws nothing, so
+//! placement-off request traces stay bit-identical).
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::Rng;
+
+use super::models::ModelStack;
+
+/// Cold-load cost: seconds per GB moved NVMe → VRAM including runtime
+/// re-init (≈2 GB/s effective on the Jetson deployment).
+pub const COLD_LOAD_S_PER_GB: f64 = 0.5;
+/// Eviction cost: freeing weights is cheap but not free (allocator /
+/// driver teardown), charged per GB released.
+pub const EVICT_S_PER_GB: f64 = 0.02;
+/// Default per-worker VRAM budget: the Jetson AGX Orin 64 GB unified
+/// memory of the paper's testbed (§VI.A).
+pub const DEFAULT_VRAM_GB: f64 = 64.0;
+
+/// Catalog index of the paper's default deployment (reSD3-m).
+pub const RESD3M: usize = 0;
+/// Catalog index of the full SD3-medium stack.
+pub const SD3_MEDIUM: usize = 1;
+/// Catalog index of the step-distilled turbo tier.
+pub const RESD3_TURBO: usize = 2;
+
+/// One deployable model variant.
+#[derive(Clone, Copy, Debug)]
+pub struct Variant {
+    pub name: &'static str,
+    /// Deployed VRAM footprint (fp16 weights + workspaces), GB.
+    pub mem_gb: f64,
+    /// Per-denoise-step time multiplier relative to reSD3-m (the
+    /// distilled tier trades quality headroom for ~2x faster steps).
+    pub step_mult: f64,
+}
+
+impl Variant {
+    /// Virtual-time cost of loading this variant into VRAM.
+    pub fn cold_load_s(&self) -> f64 {
+        self.mem_gb * COLD_LOAD_S_PER_GB
+    }
+
+    /// Virtual-time cost of evicting this variant.
+    pub fn evict_s(&self) -> f64 {
+        self.mem_gb * EVICT_S_PER_GB
+    }
+}
+
+/// The deployable-variant catalog, derived from the `ModelStack`
+/// registry so the footprints track the §VI.C memory accounting.
+#[derive(Clone, Debug)]
+pub struct Catalog {
+    variants: Vec<Variant>,
+}
+
+impl Catalog {
+    /// The standard three-tier catalog: reSD3-m (the paper's
+    /// deployment), full SD3-medium, and the distilled turbo tier.
+    pub fn standard() -> Self {
+        let v = |stack: &ModelStack, name, step_mult| Variant {
+            name,
+            mem_gb: stack.memory_gb(),
+            step_mult,
+        };
+        Self {
+            variants: vec![
+                v(&ModelStack::re_sd3_m(), "resd3-m", 1.0),
+                v(&ModelStack::sd3_medium(), "sd3-medium", 1.0),
+                v(&ModelStack::re_sd3_turbo(), "resd3-turbo", 0.5),
+            ],
+        }
+    }
+
+    pub fn get(&self, id: usize) -> &Variant {
+        &self.variants[id]
+    }
+
+    pub fn len(&self) -> usize {
+        self.variants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.variants.is_empty()
+    }
+
+    pub fn name(&self, id: usize) -> &'static str {
+        self.variants[id].name
+    }
+
+    /// Resolve a variant name (with short aliases) to its catalog id
+    /// by searching the catalog itself, so the name → index mapping
+    /// has a single source of truth (the `standard()` ordering).
+    pub fn id_of(&self, name: &str) -> Option<usize> {
+        let canonical = match name.trim() {
+            "resd3" | "re-sd3-m" => "resd3-m",
+            "sd3" | "sd3-m" => "sd3-medium",
+            "turbo" => "resd3-turbo",
+            other => other,
+        };
+        self.variants.iter().position(|v| v.name == canonical)
+    }
+}
+
+/// Per-request model demand: which variant a request asks for
+/// (`--model-dist`), alongside the `--z-dist` quality demand.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ModelDist {
+    /// Every request asks for one variant. Consumes no randomness, so
+    /// placement-off traces stay bit-identical.
+    Fixed(usize),
+    /// Weighted mix over variants (weights normalised to sum 1).
+    Mix { ids: Vec<usize>, weights: Vec<f64> },
+}
+
+impl ModelDist {
+    /// Parse a `--model-dist` spec: a bare variant name, `fixed:NAME`,
+    /// `mix:NAME=W,NAME=W,...`, or `uniform:NAME,NAME,...`.
+    pub fn parse(spec: &str, catalog: &Catalog) -> Result<Self> {
+        let (kind, rest) = spec.split_once(':').unwrap_or((spec.trim(), ""));
+        let id = |name: &str| -> Result<usize> {
+            catalog.id_of(name).with_context(|| {
+                format!("unknown model variant '{name}' in '{spec}'")
+            })
+        };
+        match kind {
+            _ if rest.is_empty() && catalog.id_of(kind).is_some() => {
+                Ok(ModelDist::Fixed(id(kind)?))
+            }
+            "fixed" => Ok(ModelDist::Fixed(id(rest)?)),
+            "uniform" => {
+                let ids = rest
+                    .split(',')
+                    .map(id)
+                    .collect::<Result<Vec<usize>>>()?;
+                Self::mix(spec, ids.clone(), vec![1.0; ids.len()])
+            }
+            "mix" => {
+                let mut ids = Vec::new();
+                let mut weights = Vec::new();
+                for pair in rest.split(',') {
+                    let (name, w) = pair.split_once('=').with_context(|| {
+                        format!("'{spec}': expected NAME=WEIGHT, got '{pair}'")
+                    })?;
+                    ids.push(id(name)?);
+                    weights.push(w.trim().parse::<f64>().with_context(|| {
+                        format!("'{spec}': bad weight '{w}'")
+                    })?);
+                }
+                Self::mix(spec, ids, weights)
+            }
+            other => bail!(
+                "unknown model distribution '{other}' \
+                 (NAME|fixed:NAME|mix:NAME=W,...|uniform:NAME,...)"
+            ),
+        }
+    }
+
+    fn mix(spec: &str, ids: Vec<usize>, weights: Vec<f64>) -> Result<Self> {
+        if ids.is_empty() {
+            bail!("'{spec}': empty model mix");
+        }
+        let mut seen = ids.clone();
+        seen.sort_unstable();
+        seen.dedup();
+        if seen.len() != ids.len() {
+            bail!("'{spec}': duplicate variant in model mix");
+        }
+        if weights.iter().any(|&w| !(w > 0.0) || !w.is_finite()) {
+            bail!("'{spec}': mix weights must be positive and finite");
+        }
+        if ids.len() == 1 {
+            return Ok(ModelDist::Fixed(ids[0]));
+        }
+        let total: f64 = weights.iter().sum();
+        Ok(ModelDist::Mix {
+            ids,
+            weights: weights.iter().map(|w| w / total).collect(),
+        })
+    }
+
+    /// Draw one model demand. `Fixed` consumes no randomness.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        match self {
+            ModelDist::Fixed(id) => *id,
+            ModelDist::Mix { ids, weights } => {
+                let u = rng.f64();
+                let mut acc = 0.0;
+                for (i, &w) in weights.iter().enumerate() {
+                    acc += w;
+                    if u < acc {
+                        return ids[i];
+                    }
+                }
+                ids[ids.len() - 1]
+            }
+        }
+    }
+
+    /// Variants with positive demand.
+    pub fn support(&self) -> Vec<usize> {
+        match self {
+            ModelDist::Fixed(id) => vec![*id],
+            ModelDist::Mix { ids, .. } => ids.clone(),
+        }
+    }
+
+    /// Demand shares as a full-length vector over `n` catalog slots.
+    pub fn weights_vec(&self, n: usize) -> Vec<f64> {
+        let mut out = vec![0.0; n];
+        match self {
+            ModelDist::Fixed(id) => out[*id] = 1.0,
+            ModelDist::Mix { ids, weights } => {
+                for (&id, &w) in ids.iter().zip(weights) {
+                    out[id] = w;
+                }
+            }
+        }
+        out
+    }
+
+    /// Expected per-step time multiplier (for capacity reporting).
+    pub fn mean_step_mult(&self, catalog: &Catalog) -> f64 {
+        match self {
+            ModelDist::Fixed(id) => catalog.get(*id).step_mult,
+            ModelDist::Mix { ids, weights } => ids
+                .iter()
+                .zip(weights)
+                .map(|(&id, &w)| w * catalog.get(id).step_mult)
+                .sum(),
+        }
+    }
+
+    /// Human-readable label, e.g. `resd3-m` or `mix(resd3-m=0.70,...)`.
+    pub fn label(&self, catalog: &Catalog) -> String {
+        match self {
+            ModelDist::Fixed(id) => catalog.name(*id).to_string(),
+            ModelDist::Mix { ids, weights } => {
+                let parts: Vec<String> = ids
+                    .iter()
+                    .zip(weights)
+                    .map(|(&id, &w)| format!("{}={w:.2}", catalog.name(id)))
+                    .collect();
+                format!("mix({})", parts.join(","))
+            }
+        }
+    }
+}
+
+/// Parse a `--worker-vram` spec: one GB value applied to all `workers`
+/// workers, or a comma list giving a heterogeneous fleet (the list
+/// length then *defines* the fleet size).
+pub fn parse_vram_spec(spec: &str, workers: usize) -> Result<Vec<f64>> {
+    let vals = spec
+        .split(',')
+        .map(|p| {
+            p.trim()
+                .parse::<f64>()
+                .with_context(|| format!("--worker-vram: bad number '{p}'"))
+        })
+        .collect::<Result<Vec<f64>>>()?;
+    if vals.iter().any(|&v| !(v > 0.0) || !v.is_finite()) {
+        bail!("--worker-vram: budgets must be positive GB, got '{spec}'");
+    }
+    Ok(if vals.len() == 1 {
+        vec![vals[0]; workers.max(1)]
+    } else {
+        vals
+    })
+}
+
+/// What one cold miss cost: the load (plus eviction) delay charged in
+/// virtual time, and how many resident models were evicted for it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LoadCharge {
+    pub delay_s: f64,
+    pub evictions: u64,
+}
+
+/// One model load triggered by a slow-timescale re-placement epoch.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplacementLoad {
+    pub worker: usize,
+    pub model: usize,
+    pub delay_s: f64,
+    pub evictions: u64,
+}
+
+/// One worker's VRAM: a budget and the LRU set of resident variants.
+#[derive(Clone, Debug)]
+pub struct ModelCache {
+    pub budget_gb: f64,
+    /// (variant id, last-use tick); LRU order lives in the ticks.
+    loaded: Vec<(usize, u64)>,
+    /// Variants the slow timescale wants resident: evicted last.
+    pinned: Vec<usize>,
+}
+
+impl ModelCache {
+    fn new(budget_gb: f64) -> Self {
+        Self { budget_gb, loaded: Vec::new(), pinned: Vec::new() }
+    }
+
+    pub fn contains(&self, id: usize) -> bool {
+        self.loaded.iter().any(|&(v, _)| v == id)
+    }
+
+    pub fn used_gb(&self, catalog: &Catalog) -> f64 {
+        self.loaded.iter().map(|&(v, _)| catalog.get(v).mem_gb).sum()
+    }
+
+    fn touch(&mut self, id: usize, tick: u64) {
+        if let Some(e) = self.loaded.iter_mut().find(|(v, _)| *v == id) {
+            e.1 = tick;
+        }
+    }
+
+    /// Evict-to-fit then load `id`; the caller charges the returned
+    /// delay into the worker's virtual timeline. Non-pinned variants
+    /// are evicted first, LRU within each class, lowest id on tick
+    /// ties (cannot happen with the monotone tick, kept for safety).
+    fn insert(&mut self, catalog: &Catalog, id: usize, tick: u64) -> LoadCharge {
+        let mem = catalog.get(id).mem_gb;
+        debug_assert!(
+            self.budget_gb >= mem,
+            "insert of '{}' ({mem} GB) into a {} GB cache — caller must \
+             check fits() first",
+            catalog.name(id),
+            self.budget_gb
+        );
+        let mut delay_s = catalog.get(id).cold_load_s();
+        let mut evictions = 0u64;
+        while self.used_gb(catalog) + mem > self.budget_gb {
+            let victim = self
+                .loaded
+                .iter()
+                .enumerate()
+                .min_by_key(|&(_, &(v, t))| (self.pinned.contains(&v), t, v))
+                .map(|(i, _)| i);
+            let Some(i) = victim else { break };
+            let (vid, _) = self.loaded.remove(i);
+            delay_s += catalog.get(vid).evict_s();
+            evictions += 1;
+        }
+        self.loaded.push((id, tick));
+        LoadCharge { delay_s, evictions }
+    }
+}
+
+/// Fleet-wide placement state: the slow-timescale model-caching layer
+/// the router's fast-timescale dispatch decisions consult.
+#[derive(Debug)]
+pub struct Placement {
+    catalog: Catalog,
+    caches: Vec<ModelCache>,
+    /// Monotone use counter (the LRU clock).
+    tick: u64,
+    /// Per-variant demand observed since the last re-placement epoch.
+    demand: Vec<u64>,
+    /// Configured demand shares — the prior before any observation.
+    prior: Vec<f64>,
+}
+
+impl Placement {
+    pub fn new(budgets: Vec<f64>, catalog: Catalog, prior: Vec<f64>) -> Result<Self> {
+        if budgets.is_empty() {
+            bail!("placement needs at least one worker VRAM budget");
+        }
+        if budgets.iter().any(|&b| !(b > 0.0) || !b.is_finite()) {
+            bail!("worker VRAM budgets must be positive GB, got {budgets:?}");
+        }
+        if prior.len() != catalog.len() {
+            bail!(
+                "demand prior has {} entries for a {}-variant catalog",
+                prior.len(),
+                catalog.len()
+            );
+        }
+        let demand = vec![0; catalog.len()];
+        Ok(Self {
+            caches: budgets.into_iter().map(ModelCache::new).collect(),
+            catalog,
+            tick: 0,
+            demand,
+            prior,
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.caches.len()
+    }
+
+    pub fn catalog(&self) -> &Catalog {
+        &self.catalog
+    }
+
+    /// Whether `model` is resident in worker `w`'s VRAM right now.
+    pub fn is_warm(&self, w: usize, model: usize) -> bool {
+        self.caches[w].contains(model)
+    }
+
+    /// Whether worker `w`'s budget can hold `model` at all (possibly
+    /// after evictions) — the dispatch feasibility mask.
+    pub fn fits(&self, w: usize, model: usize) -> bool {
+        self.caches[w].budget_gb >= self.catalog.get(model).mem_gb
+    }
+
+    /// Expected dispatch penalty in seconds: zero on a warm hit, the
+    /// cold-load delay when the model fits but is not resident (the
+    /// dominant term; eviction costs are ~25x smaller), infinite when
+    /// the budget cannot hold it.
+    pub fn load_penalty_s(&self, w: usize, model: usize) -> f64 {
+        if self.is_warm(w, model) {
+            0.0
+        } else if self.fits(w, model) {
+            self.catalog.get(model).cold_load_s()
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Per-step time multiplier of `model` (1.0 for the standard tiers).
+    pub fn step_mult(&self, model: usize) -> f64 {
+        self.catalog.get(model).step_mult
+    }
+
+    /// Resident variant ids of worker `w`, ascending (for tests/report).
+    pub fn loaded(&self, w: usize) -> Vec<usize> {
+        let mut ids: Vec<usize> =
+            self.caches[w].loaded.iter().map(|&(v, _)| v).collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Currently pinned variants of worker `w`.
+    pub fn pinned(&self, w: usize) -> &[usize] {
+        &self.caches[w].pinned
+    }
+
+    /// Record one request's model demand (the fast-timescale signal
+    /// the next re-placement epoch aggregates).
+    pub fn note_demand(&mut self, model: usize) {
+        if let Some(d) = self.demand.get_mut(model) {
+            *d += 1;
+        }
+    }
+
+    /// Make `model` resident on worker `w`, charging the cold-load
+    /// (and eviction) delay; a warm hit costs nothing and just
+    /// refreshes LRU recency. Errors if the budget cannot hold it —
+    /// the router's feasibility mask must prevent that.
+    pub fn ensure(&mut self, w: usize, model: usize) -> Result<LoadCharge> {
+        if w >= self.caches.len() || model >= self.catalog.len() {
+            bail!("ensure({w}, {model}) out of range");
+        }
+        if !self.fits(w, model) {
+            bail!(
+                "worker {w} ({} GB VRAM) cannot hold '{}' ({:.1} GB) — \
+                 the dispatch policy must respect the feasibility mask",
+                self.caches[w].budget_gb,
+                self.catalog.name(model),
+                self.catalog.get(model).mem_gb
+            );
+        }
+        self.tick += 1;
+        if self.caches[w].contains(model) {
+            self.caches[w].touch(model, self.tick);
+            Ok(LoadCharge { delay_s: 0.0, evictions: 0 })
+        } else {
+            Ok(self.caches[w].insert(&self.catalog, model, self.tick))
+        }
+    }
+
+    /// Compute the target pin sets for the given demand shares:
+    /// (1) quota pass — each demanded variant gets ~share×workers
+    /// replicas on the emptiest fitting workers; (2) coverage pass —
+    /// a variant no remaining budget holds steals the largest-budget
+    /// worker that can hold it alone, dropping that worker's
+    /// lowest-share pins; (3) fill pass — leftover VRAM is spent on
+    /// the highest-share variants. Deterministic: all ties break on
+    /// the lower index.
+    fn assign(&self, shares: &[f64]) -> Vec<Vec<usize>> {
+        let n = self.caches.len();
+        let mut order: Vec<usize> =
+            (0..shares.len().min(self.catalog.len())).filter(|&v| shares[v] > 0.0).collect();
+        order.sort_by(|&a, &b| {
+            shares[b].partial_cmp(&shares[a]).unwrap().then(a.cmp(&b))
+        });
+        let mut remaining: Vec<f64> =
+            self.caches.iter().map(|c| c.budget_gb).collect();
+        let mut pins: Vec<Vec<usize>> = vec![Vec::new(); n];
+
+        for &v in &order {
+            let mem = self.catalog.get(v).mem_gb;
+            let quota = ((shares[v] * n as f64).round() as usize).clamp(1, n);
+            let mut cands: Vec<usize> =
+                (0..n).filter(|&w| remaining[w] >= mem).collect();
+            cands.sort_by(|&a, &b| {
+                remaining[b].partial_cmp(&remaining[a]).unwrap().then(a.cmp(&b))
+            });
+            for &w in cands.iter().take(quota) {
+                pins[w].push(v);
+                remaining[w] -= mem;
+            }
+        }
+
+        for &v in &order {
+            if pins.iter().any(|p| p.contains(&v)) {
+                continue;
+            }
+            let mem = self.catalog.get(v).mem_gb;
+            let host = (0..n)
+                .filter(|&w| self.caches[w].budget_gb >= mem)
+                .max_by(|&a, &b| {
+                    self.caches[a]
+                        .budget_gb
+                        .partial_cmp(&self.caches[b].budget_gb)
+                        .unwrap()
+                        .then(b.cmp(&a))
+                });
+            if let Some(w) = host {
+                while remaining[w] < mem {
+                    match pins[w].pop() {
+                        Some(dropped) => {
+                            remaining[w] += self.catalog.get(dropped).mem_gb;
+                        }
+                        None => break,
+                    }
+                }
+                if remaining[w] >= mem {
+                    pins[w].push(v);
+                    remaining[w] -= mem;
+                }
+            }
+        }
+
+        for (w, pin) in pins.iter_mut().enumerate() {
+            for &v in &order {
+                if !pin.contains(&v) && remaining[w] >= self.catalog.get(v).mem_gb {
+                    remaining[w] -= self.catalog.get(v).mem_gb;
+                    pin.push(v);
+                }
+            }
+        }
+        pins
+    }
+
+    /// Install the initial placement from the configured demand prior.
+    /// Free of charge: the slow timescale provisions models before
+    /// traffic starts (the deployment step of §VI.A).
+    pub fn prewarm(&mut self) {
+        let prior = self.prior.clone();
+        let pins = self.assign(&prior);
+        for (w, pin) in pins.into_iter().enumerate() {
+            for &v in &pin {
+                self.tick += 1;
+                let tick = self.tick;
+                self.caches[w].loaded.push((v, tick));
+            }
+            self.caches[w].pinned = pin;
+        }
+    }
+
+    /// Slow-timescale re-placement: recompute pin sets from the demand
+    /// observed since the last epoch (falling back to the prior before
+    /// any observation), load newly pinned variants (evicting LRU
+    /// non-pinned residents as needed), and reset the epoch counters.
+    /// Returns the loads so the engine can charge them in virtual time.
+    pub fn rebalance(&mut self) -> Vec<ReplacementLoad> {
+        let total: u64 = self.demand.iter().sum();
+        let shares: Vec<f64> = if total == 0 {
+            self.prior.clone()
+        } else {
+            self.demand.iter().map(|&c| c as f64 / total as f64).collect()
+        };
+        let pins = self.assign(&shares);
+        let mut out = Vec::new();
+        for (w, target) in pins.into_iter().enumerate() {
+            self.caches[w].pinned = target.clone();
+            for &v in &target {
+                self.tick += 1;
+                let tick = self.tick;
+                if self.caches[w].contains(v) {
+                    self.caches[w].touch(v, tick);
+                    continue;
+                }
+                let charge = self.caches[w].insert(&self.catalog, v, tick);
+                out.push(ReplacementLoad {
+                    worker: w,
+                    model: v,
+                    delay_s: charge.delay_s,
+                    evictions: charge.evictions,
+                });
+            }
+        }
+        for d in &mut self.demand {
+            *d = 0;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn placement(budgets: &[f64], prior: &[f64]) -> Placement {
+        Placement::new(budgets.to_vec(), Catalog::standard(), prior.to_vec())
+            .unwrap()
+    }
+
+    #[test]
+    fn catalog_tracks_model_registry() {
+        let c = Catalog::standard();
+        assert_eq!(c.len(), 3);
+        // §VI.C: ≈16 GB refined, ≈40 GB full; distilled ≈12 GB
+        assert!((c.get(RESD3M).mem_gb - 16.0).abs() < 1.5);
+        assert!((c.get(SD3_MEDIUM).mem_gb - 40.0).abs() < 1.5);
+        assert!((c.get(RESD3_TURBO).mem_gb - 12.0).abs() < 1.0);
+        assert_eq!(c.get(RESD3M).step_mult, 1.0);
+        assert!(c.get(RESD3_TURBO).step_mult < 1.0);
+        // cold loads scale with footprint
+        assert!(c.get(SD3_MEDIUM).cold_load_s() > c.get(RESD3M).cold_load_s());
+        assert!(c.get(RESD3M).evict_s() < c.get(RESD3M).cold_load_s());
+    }
+
+    #[test]
+    fn id_of_accepts_aliases() {
+        let c = Catalog::standard();
+        assert_eq!(c.id_of("resd3-m"), Some(RESD3M));
+        assert_eq!(c.id_of("resd3"), Some(RESD3M));
+        assert_eq!(c.id_of("sd3"), Some(SD3_MEDIUM));
+        assert_eq!(c.id_of("turbo"), Some(RESD3_TURBO));
+        assert_eq!(c.id_of("nope"), None);
+    }
+
+    #[test]
+    fn model_dist_parse_and_sample() {
+        let c = Catalog::standard();
+        assert_eq!(
+            ModelDist::parse("resd3-m", &c).unwrap(),
+            ModelDist::Fixed(RESD3M)
+        );
+        assert_eq!(
+            ModelDist::parse("fixed:sd3-medium", &c).unwrap(),
+            ModelDist::Fixed(SD3_MEDIUM)
+        );
+        let mix = ModelDist::parse("mix:resd3-m=3,turbo=1", &c).unwrap();
+        match &mix {
+            ModelDist::Mix { ids, weights } => {
+                assert_eq!(ids, &vec![RESD3M, RESD3_TURBO]);
+                assert!((weights[0] - 0.75).abs() < 1e-12);
+                assert!((weights[1] - 0.25).abs() < 1e-12);
+            }
+            other => panic!("expected mix, got {other:?}"),
+        }
+        let mut rng = Rng::new(5);
+        let mut counts = [0usize; 3];
+        for _ in 0..4000 {
+            counts[mix.sample(&mut rng)] += 1;
+        }
+        assert_eq!(counts[SD3_MEDIUM], 0);
+        let frac = counts[RESD3M] as f64 / 4000.0;
+        assert!((frac - 0.75).abs() < 0.03, "frac={frac}");
+        // uniform over two names = 50/50; single-name mix degrades to Fixed
+        let u = ModelDist::parse("uniform:resd3-m,sd3", &c).unwrap();
+        assert!((u.weights_vec(3)[RESD3M] - 0.5).abs() < 1e-12);
+        assert_eq!(
+            ModelDist::parse("mix:turbo=2", &c).unwrap(),
+            ModelDist::Fixed(RESD3_TURBO)
+        );
+        assert!(ModelDist::parse("mix:resd3-m=0", &c).is_err());
+        assert!(ModelDist::parse("mix:resd3-m=1,resd3=1", &c).is_err());
+        assert!(ModelDist::parse("nope", &c).is_err());
+        assert!(ModelDist::parse("fixed:nope", &c).is_err());
+    }
+
+    #[test]
+    fn fixed_dist_consumes_no_randomness() {
+        // The guarantee that keeps placement-off traces bit-identical.
+        let c = Catalog::standard();
+        let d = ModelDist::parse("resd3-m", &c).unwrap();
+        let mut a = Rng::new(7);
+        for _ in 0..10 {
+            assert_eq!(d.sample(&mut a), RESD3M);
+        }
+        assert_eq!(a.next_u64(), Rng::new(7).next_u64());
+    }
+
+    #[test]
+    fn mean_step_mult_weights_the_turbo_tier() {
+        let c = Catalog::standard();
+        let m = ModelDist::parse("mix:resd3-m=1,turbo=1", &c).unwrap();
+        assert!((m.mean_step_mult(&c) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn vram_spec_broadcast_and_list() {
+        assert_eq!(parse_vram_spec("24", 3).unwrap(), vec![24.0; 3]);
+        assert_eq!(parse_vram_spec("16,24,48", 5).unwrap(), vec![16.0, 24.0, 48.0]);
+        assert!(parse_vram_spec("0", 1).is_err());
+        assert!(parse_vram_spec("16,x", 1).is_err());
+    }
+
+    #[test]
+    fn cache_lru_evicts_to_fit() {
+        let c = Catalog::standard();
+        let mut cache = ModelCache::new(20.0);
+        let a = cache.insert(&c, RESD3M, 1);
+        assert_eq!(a.evictions, 0);
+        assert!((a.delay_s - c.get(RESD3M).cold_load_s()).abs() < 1e-9);
+        // 16.2 + 12.0 > 20 -> must evict reSD3-m for the turbo tier
+        let b = cache.insert(&c, RESD3_TURBO, 2);
+        assert_eq!(b.evictions, 1);
+        assert!(b.delay_s > c.get(RESD3_TURBO).cold_load_s());
+        assert!(cache.contains(RESD3_TURBO));
+        assert!(!cache.contains(RESD3M));
+    }
+
+    #[test]
+    fn ensure_warm_hits_are_free_and_misses_charge() {
+        let mut p = placement(&[64.0], &[1.0, 0.0, 0.0]);
+        p.prewarm();
+        assert!(p.is_warm(0, RESD3M));
+        let hit = p.ensure(0, RESD3M).unwrap();
+        assert_eq!(hit, LoadCharge { delay_s: 0.0, evictions: 0 });
+        let miss = p.ensure(0, RESD3_TURBO).unwrap();
+        assert!(miss.delay_s > 0.0);
+        assert_eq!(miss.evictions, 0); // 16.2 + 12.0 fits in 64
+        assert!(p.is_warm(0, RESD3_TURBO));
+    }
+
+    #[test]
+    fn infeasible_budget_is_masked_and_ensure_errors() {
+        let p = placement(&[16.0], &[0.0, 1.0, 0.0]);
+        assert!(!p.fits(0, SD3_MEDIUM));
+        assert!(p.load_penalty_s(0, SD3_MEDIUM).is_infinite());
+        let mut p = p;
+        assert!(p.ensure(0, SD3_MEDIUM).is_err());
+    }
+
+    #[test]
+    fn assign_covers_every_demanded_variant() {
+        // [24,24,24,24,48] with a 45/45/10 resd3/turbo/sd3 mix: the
+        // quota pass cannot place sd3-medium (40 GB) anywhere, so the
+        // coverage pass must steal the 48 GB worker for it.
+        let p = placement(
+            &[24.0, 24.0, 24.0, 24.0, 48.0],
+            &[0.45, 0.10, 0.45],
+        );
+        let pins = p.assign(&[0.45, 0.10, 0.45]);
+        for v in [RESD3M, SD3_MEDIUM, RESD3_TURBO] {
+            assert!(
+                pins.iter().any(|pin| pin.contains(&v)),
+                "variant {v} unpinned: {pins:?}"
+            );
+        }
+        assert_eq!(pins[4], vec![SD3_MEDIUM], "48 GB worker hosts sd3");
+        // only the 48 GB worker can host sd3-medium
+        for (w, pin) in pins.iter().enumerate().take(4) {
+            assert!(!pin.contains(&SD3_MEDIUM), "worker {w}: {pin:?}");
+        }
+    }
+
+    #[test]
+    fn rebalance_follows_observed_demand() {
+        let mut p = placement(&[64.0], &[1.0, 0.0, 0.0]);
+        p.prewarm();
+        assert_eq!(p.pinned(0), &[RESD3M]);
+        for _ in 0..10 {
+            p.note_demand(RESD3_TURBO);
+        }
+        let loads = p.rebalance();
+        assert_eq!(loads.len(), 1);
+        assert_eq!(loads[0].model, RESD3_TURBO);
+        assert!(loads[0].delay_s > 0.0);
+        assert_eq!(p.pinned(0), &[RESD3_TURBO]);
+        // the old pin stays resident (evictable) until space is needed
+        assert!(p.is_warm(0, RESD3M));
+        // with no fresh observations the next epoch falls back to the
+        // prior, whose pin (resd3-m) is still resident — nothing loads
+        assert!(p.rebalance().is_empty());
+    }
+
+    #[test]
+    fn rebalance_is_deterministic() {
+        let run = || {
+            let mut p = placement(
+                &[24.0, 24.0, 48.0],
+                &[0.5, 0.2, 0.3],
+            );
+            p.prewarm();
+            for (v, n) in [(RESD3M, 5), (SD3_MEDIUM, 9), (RESD3_TURBO, 2)] {
+                for _ in 0..n {
+                    p.note_demand(v);
+                }
+            }
+            let loads: Vec<(usize, usize)> =
+                p.rebalance().iter().map(|l| (l.worker, l.model)).collect();
+            (loads, (0..3).map(|w| p.loaded(w)).collect::<Vec<_>>())
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -4,11 +4,25 @@
 //! - `RoundRobin` — naive spreading;
 //! - `LeastLoaded` — dispatch to the worker with the fewest pending
 //!   denoise-steps (what a converged LAD-TS policy approximates);
+//! - `Random` — seeded uniform pick; the standard weak baseline for
+//!   placement sweeps;
+//! - `CacheFirst` — placement-aware: least-loaded among the workers
+//!   holding the request's model *warm*, falling back to least-loaded
+//!   over the feasible fleet when nobody does;
+//! - `CacheLl` — cache-aware least-loaded: minimises pending
+//!   denoise-steps *plus* the expected cold-load penalty (seconds
+//!   converted to step units), so a lightly warmer worker can beat an
+//!   idle cold one exactly when the load cost says so;
 //! - `LadTs` — the paper's scheduler: the LADN diffusion actor runs on
 //!   the request path through the AOT `ladn_actor_fwd_b{W}` graph
 //!   (PJRT), seeded from the latent action memory; parameters come
 //!   from a training checkpoint when provided, otherwise fresh init
 //!   (the online system would keep training them).
+//!
+//! When a [`Placement`] is provided, every policy respects the
+//! feasibility mask: a worker whose VRAM budget cannot hold the
+//! request's model is never picked (a 16 GB device simply cannot serve
+//! SD3-medium — the §VI.C constraint that motivated reSD3-m).
 
 use std::path::Path;
 
@@ -20,12 +34,20 @@ use crate::runtime::{ActorFwdExec, Manifest, TrainState, XlaRuntime};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
+use super::clock;
 use super::message::Request;
+use super::placement::Placement;
 
 /// Routing policy selector.
 pub enum Policy {
     RoundRobin,
     LeastLoaded,
+    /// Seeded uniform-random dispatch (weak baseline).
+    Random(Rng),
+    /// Warm-cache workers first, least-loaded within them.
+    CacheFirst,
+    /// Least-loaded with the cold-load penalty added to the estimate.
+    CacheLl,
     LadTs(Box<LadPolicy>),
 }
 
@@ -34,9 +56,33 @@ impl Policy {
         match self {
             Policy::RoundRobin => "round-robin",
             Policy::LeastLoaded => "least-loaded",
+            Policy::Random(_) => "random",
+            Policy::CacheFirst => "cache-first",
+            Policy::CacheLl => "cache-ll",
             Policy::LadTs(_) => "LAD-TS (LADN via PJRT)",
         }
     }
+}
+
+/// Lowest-index argmin of `score` over the workers passing `ok`.
+fn argmin(
+    n: usize,
+    ok: impl Fn(usize) -> bool,
+    score: impl Fn(usize) -> f64,
+) -> Option<usize> {
+    let mut best = None;
+    let mut best_s = f64::INFINITY;
+    for w in 0..n {
+        if !ok(w) {
+            continue;
+        }
+        let s = score(w);
+        if s < best_s {
+            best_s = s;
+            best = Some(w);
+        }
+    }
+    best
 }
 
 /// The LADN actor wired to the routing state space.
@@ -128,42 +174,121 @@ impl Router {
         self.policy.name()
     }
 
-    /// Choose a worker for `req` and account its load.
-    pub fn dispatch(&mut self, req: &Request) -> Result<usize> {
+    /// Choose a worker for `req` and account its load. With a
+    /// [`Placement`], only workers whose VRAM can hold `req.model` are
+    /// candidates, and the cache-aware policies read warm/cold state.
+    pub fn dispatch(
+        &mut self,
+        req: &Request,
+        placement: Option<&Placement>,
+    ) -> Result<usize> {
+        let n = self.pending_steps.len();
+        let pending = &self.pending_steps;
+        let feasible = |w: usize| match placement {
+            Some(p) => p.fits(w, req.model),
+            None => true,
+        };
         let w = match &mut self.policy {
             Policy::RoundRobin => {
-                let w = self.rr_next;
-                self.rr_next = (self.rr_next + 1) % self.pending_steps.len();
+                let mut pick = None;
+                for k in 0..n {
+                    let w = (self.rr_next + k) % n;
+                    if feasible(w) {
+                        pick = Some(w);
+                        break;
+                    }
+                }
+                let w = pick.with_context(|| {
+                    format!("no worker can hold model {}", req.model)
+                })?;
+                self.rr_next = (w + 1) % n;
                 w
             }
             Policy::LeastLoaded => {
-                let mut best = 0;
-                let mut best_p = f64::INFINITY;
-                for (w, &p) in self.pending_steps.iter().enumerate() {
-                    if p < best_p {
-                        best_p = p;
-                        best = w;
-                    }
-                }
-                best
+                argmin(n, feasible, |w| pending[w]).with_context(|| {
+                    format!("no worker can hold model {}", req.model)
+                })?
             }
-            Policy::LadTs(lad) => lad.pick(req, &self.pending_steps)?,
+            Policy::Random(rng) => {
+                let cands: Vec<usize> = (0..n).filter(|&w| feasible(w)).collect();
+                if cands.is_empty() {
+                    bail!("no worker can hold model {}", req.model);
+                }
+                cands[rng.range_usize(0, cands.len() - 1)]
+            }
+            Policy::CacheFirst => {
+                let p = placement.context(
+                    "cache-first policy needs placement state \
+                     (--worker-vram / --model-dist)",
+                )?;
+                argmin(
+                    n,
+                    |w| feasible(w) && p.is_warm(w, req.model),
+                    |w| pending[w],
+                )
+                .or_else(|| argmin(n, feasible, |w| pending[w]))
+                .with_context(|| {
+                    format!("no worker can hold model {}", req.model)
+                })?
+            }
+            Policy::CacheLl => {
+                let p = placement.context(
+                    "cache-ll policy needs placement state \
+                     (--worker-vram / --model-dist)",
+                )?;
+                // load penalty in denoise-step units so it lands on
+                // the same scale as the pending-load estimate
+                argmin(n, feasible, |w| {
+                    pending[w]
+                        + p.load_penalty_s(w, req.model) / clock::JETSON_STEP_S
+                })
+                .with_context(|| {
+                    format!("no worker can hold model {}", req.model)
+                })?
+            }
+            Policy::LadTs(lad) => {
+                if placement.is_some() {
+                    bail!(
+                        "lad-ts is not placement-aware yet; use cache-first \
+                         or cache-ll with --worker-vram/--model-dist"
+                    );
+                }
+                lad.pick(req, pending)?
+            }
         };
         if w >= self.pending_steps.len() {
             bail!("policy picked invalid worker {w}");
         }
-        self.pending_steps[w] += req.z as f64;
+        // Charge pending load in *effective* step units: a distilled
+        // tier's steps run faster, so z is scaled by the variant's
+        // step_mult (1.0 exactly when placement is off — bit-identical
+        // to the unweighted accounting). This keeps the pending
+        // estimate and the cache-ll cold-load penalty (seconds /
+        // JETSON_STEP_S = full-speed steps) on one time scale.
+        let mult = match placement {
+            Some(p) => p.step_mult(req.model),
+            None => 1.0,
+        };
+        self.pending_steps[w] += req.z as f64 * mult;
         self.dispatched[w] += 1;
         Ok(w)
     }
 
-    /// Worker completed a job of `z` steps. Callers must pass the
-    /// *completed request's* demand (carried on `Response::z`), not a
-    /// global default — the load estimate drifts otherwise whenever z
-    /// is heterogeneous.
+    /// Worker completed a job of `z` steps at full speed. Callers must
+    /// pass the *completed request's* demand (carried on
+    /// `Response::z`), not a global default — the load estimate drifts
+    /// otherwise whenever z is heterogeneous.
     pub fn complete(&mut self, worker: usize, z: usize) {
+        self.complete_steps(worker, z as f64);
+    }
+
+    /// Drain `steps` effective denoise-steps from `worker`. The
+    /// placement-aware engine drains by `z * step_mult` — exactly what
+    /// dispatch charged for the same request, so the cancellation
+    /// stays bit-exact (step multipliers are powers of two).
+    pub fn complete_steps(&mut self, worker: usize, steps: f64) {
         self.pending_steps[worker] =
-            (self.pending_steps[worker] - z as f64).max(0.0);
+            (self.pending_steps[worker] - steps).max(0.0);
     }
 
     pub fn pending(&self) -> &[f64] {
@@ -186,21 +311,40 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::placement::{
+        Catalog, Placement, RESD3M, RESD3_TURBO, SD3_MEDIUM,
+    };
 
     fn req(id: u64, z: usize) -> Request {
         Request {
             id,
             prompt: "p".into(),
             z,
+            model: RESD3M,
             submitted_at: 0.0,
         }
+    }
+
+    fn req_m(id: u64, z: usize, model: usize) -> Request {
+        Request { model, ..req(id, z) }
+    }
+
+    fn placement(budgets: &[f64], prior: &[f64]) -> Placement {
+        let mut p = Placement::new(
+            budgets.to_vec(),
+            Catalog::standard(),
+            prior.to_vec(),
+        )
+        .unwrap();
+        p.prewarm();
+        p
     }
 
     #[test]
     fn round_robin_cycles() {
         let mut r = Router::new(Policy::RoundRobin, 3);
         let picks: Vec<usize> =
-            (0..6).map(|i| r.dispatch(&req(i, 5)).unwrap()).collect();
+            (0..6).map(|i| r.dispatch(&req(i, 5), None).unwrap()).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
         assert_eq!(r.dispatched(), &[2, 2, 2]);
     }
@@ -208,13 +352,13 @@ mod tests {
     #[test]
     fn least_loaded_balances_by_steps() {
         let mut r = Router::new(Policy::LeastLoaded, 2);
-        assert_eq!(r.dispatch(&req(0, 10)).unwrap(), 0);
+        assert_eq!(r.dispatch(&req(0, 10), None).unwrap(), 0);
         // worker 0 now has 10 steps pending -> next goes to 1
-        assert_eq!(r.dispatch(&req(1, 2)).unwrap(), 1);
+        assert_eq!(r.dispatch(&req(1, 2), None).unwrap(), 1);
         // worker 1 only has 2 -> next again to 1
-        assert_eq!(r.dispatch(&req(2, 2)).unwrap(), 1);
+        assert_eq!(r.dispatch(&req(2, 2), None).unwrap(), 1);
         r.complete(0, 10);
-        assert_eq!(r.dispatch(&req(3, 1)).unwrap(), 0);
+        assert_eq!(r.dispatch(&req(3, 1), None).unwrap(), 0);
         assert_eq!(r.pending(), &[1.0, 4.0]);
     }
 
@@ -226,15 +370,93 @@ mod tests {
     }
 
     #[test]
+    fn random_policy_is_seed_deterministic() {
+        let run = |seed: u64| -> Vec<usize> {
+            let mut r = Router::new(Policy::Random(Rng::new(seed)), 4);
+            (0..32).map(|i| r.dispatch(&req(i, 5), None).unwrap()).collect()
+        };
+        assert_eq!(run(7), run(7), "same seed must give the same sequence");
+        assert_ne!(run(7), run(8), "different seeds should diverge");
+        // uniform over the fleet: every worker picked at least once
+        let picks = run(7);
+        for w in 0..4 {
+            assert!(picks.contains(&w), "worker {w} never picked: {picks:?}");
+        }
+    }
+
+    #[test]
+    fn feasibility_mask_excludes_small_workers() {
+        // Worker 0 (16 GB) cannot hold SD3-medium (~40 GB): every
+        // policy must route the big model to worker 1 only.
+        let p = placement(&[16.0, 48.0], &[0.5, 0.5, 0.0]);
+        for policy in [
+            Policy::RoundRobin,
+            Policy::LeastLoaded,
+            Policy::Random(Rng::new(3)),
+            Policy::CacheFirst,
+            Policy::CacheLl,
+        ] {
+            let mut r = Router::new(policy, 2);
+            for i in 0..6 {
+                let w = r
+                    .dispatch(&req_m(i, 5, SD3_MEDIUM), Some(&p))
+                    .unwrap();
+                assert_eq!(w, 1, "{} sent sd3 to a 16 GB device", r.policy_name());
+            }
+        }
+    }
+
+    #[test]
+    fn cache_first_prefers_warm_workers() {
+        // Prewarm pins reSD3-m on worker 0 and the turbo tier on
+        // worker 1 (two 20 GB devices can hold one variant each).
+        let p = placement(&[20.0, 20.0], &[0.5, 0.0, 0.5]);
+        assert!(p.is_warm(0, RESD3M) ^ p.is_warm(1, RESD3M));
+        let warm_re = if p.is_warm(0, RESD3M) { 0 } else { 1 };
+        let mut r = Router::new(Policy::CacheFirst, 2);
+        // even after loading the warm worker, requests stick to it
+        for i in 0..3 {
+            assert_eq!(
+                r.dispatch(&req_m(i, 10, RESD3M), Some(&p)).unwrap(),
+                warm_re
+            );
+            assert_eq!(
+                r.dispatch(&req_m(100 + i, 10, RESD3_TURBO), Some(&p)).unwrap(),
+                1 - warm_re
+            );
+        }
+    }
+
+    #[test]
+    fn cache_ll_trades_load_penalty_against_queue() {
+        let p = placement(&[20.0, 20.0], &[0.5, 0.0, 0.5]);
+        let warm_re = if p.is_warm(0, RESD3M) { 0 } else { 1 };
+        let mut r = Router::new(Policy::CacheLl, 2);
+        // warm worker wins while its queue is shorter than the cold
+        // penalty (~16 GB * 0.5 s/GB / 1.153 s/step ≈ 7 steps)
+        assert_eq!(r.dispatch(&req_m(0, 5, RESD3M), Some(&p)).unwrap(), warm_re);
+        // pile pending load past the penalty: the cold worker wins
+        for i in 1..4 {
+            r.dispatch(&req_m(i, 15, RESD3M), Some(&p)).unwrap();
+        }
+        assert!(r.pending()[warm_re] > 10.0);
+        assert_eq!(
+            r.dispatch(&req_m(9, 5, RESD3M), Some(&p)).unwrap(),
+            1 - warm_re,
+            "cache-ll must spill once pending exceeds the load penalty"
+        );
+    }
+
+    #[test]
     fn pending_load_is_conserved() {
         // dispatched-z − completed-z == pending_total(), under any
         // interleaving of dispatches and (matched) completions.
         crate::util::prop::check("pending-load conservation", 100, |g| {
             let workers = g.usize(1, 6);
-            let policy = if g.usize(0, 1) == 0 {
-                Policy::RoundRobin
-            } else {
-                Policy::LeastLoaded
+            let policy = match g.usize(0, 2) {
+                0 => Policy::RoundRobin,
+                1 => Policy::LeastLoaded,
+                _ => Policy::Random(Rng::new(g.usize(0, 1000) as u64)),
             };
             let mut r = Router::new(policy, workers);
             let n = g.size(1, 40);
@@ -242,7 +464,7 @@ mod tests {
             let (mut dispatched, mut completed) = (0u64, 0u64);
             for id in 0..n as u64 {
                 let z = g.usize(1, 15);
-                let w = r.dispatch(&req(id, z)).unwrap();
+                let w = r.dispatch(&req(id, z), None).unwrap();
                 in_flight.push((w, z));
                 dispatched += z as u64;
                 // randomly drain some completions out of dispatch order

@@ -13,12 +13,19 @@
 //!   `Router::complete` fires at the correct virtual timestamp and
 //!   pending-load estimates drain as traffic flows — the steady-state
 //!   serving regime the batch protocol cannot express.
+//!
+//! The event engine additionally carries the placement subsystem
+//! ([`super::placement`]): per-request model demand (`--model-dist`),
+//! per-worker VRAM budgets (`--worker-vram`) with LRU model caches
+//! whose cold-load delays are charged in virtual time, a slow
+//! re-placement timescale (`--replace-every`), and admission control
+//! under overload (`--queue-cap`).
 
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::channel;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::runtime::XlaRuntime;
 use crate::util::rng::Rng;
@@ -30,6 +37,7 @@ use super::corpus::Corpus;
 use super::events::{Event, EventQueue};
 use super::message::{Request, Response};
 use super::metrics::ServeMetrics;
+use super::placement::{self, Catalog, ModelDist, Placement};
 use super::router::{LadPolicy, Policy, Router};
 use super::worker::spawn_worker;
 
@@ -42,7 +50,8 @@ pub struct ServeOptions {
     pub real_time: bool,
     pub seed: u64,
     pub artifacts_dir: String,
-    /// "lad-ts" | "least-loaded" | "round-robin".
+    /// "lad-ts" | "least-loaded" | "round-robin" | "random" |
+    /// "cache-first" | "cache-ll".
     pub scheduler: String,
     /// Generation-quality demand z per request (when `z_dist` is None).
     pub z_steps: usize,
@@ -50,6 +59,20 @@ pub struct ServeOptions {
     pub arrivals: ArrivalProcess,
     /// Per-request quality demand; None = `Fixed(z_steps)`.
     pub z_dist: Option<ZDist>,
+    /// Per-request model-variant demand (`--model-dist`). Setting this
+    /// (or `worker_vram`) enables the placement subsystem; None with
+    /// `worker_vram` unset keeps the PR 2 behaviour bit-identical.
+    pub model_dist: Option<ModelDist>,
+    /// Per-worker VRAM budgets in GB (`--worker-vram`); length must
+    /// equal `workers`. None = placement off (or, with `model_dist`
+    /// set, the 64 GB Jetson AGX Orin default per worker).
+    pub worker_vram: Option<Vec<f64>>,
+    /// Slow-timescale re-placement period in virtual seconds
+    /// (`--replace-every`); 0 disables the hook.
+    pub replace_every: f64,
+    /// Admission control: maximum admitted-but-incomplete requests
+    /// (`--queue-cap`); arrivals beyond it are dropped and counted.
+    pub queue_cap: Option<usize>,
 }
 
 impl Default for ServeOptions {
@@ -64,6 +87,10 @@ impl Default for ServeOptions {
             z_steps: clock::DEFAULT_Z,
             arrivals: ArrivalProcess::Batch,
             z_dist: None,
+            model_dist: None,
+            worker_vram: None,
+            replace_every: 0.0,
+            queue_cap: None,
         }
     }
 }
@@ -78,19 +105,53 @@ impl DEdgeAi {
         Self { opts }
     }
 
+    /// Whether the placement subsystem is active for this run.
+    fn placement_enabled(&self) -> bool {
+        self.opts.model_dist.is_some() || self.opts.worker_vram.is_some()
+    }
+
     fn make_policy(&self, rt: Option<&XlaRuntime>) -> Result<Policy> {
+        let needs_placement = |name: &str| -> Result<()> {
+            if self.placement_enabled() {
+                Ok(())
+            } else {
+                anyhow::bail!(
+                    "{name} policy needs placement state — set \
+                     --model-dist and/or --worker-vram"
+                )
+            }
+        };
         Ok(match self.opts.scheduler.as_str() {
             "round-robin" | "rr" => Policy::RoundRobin,
             "least-loaded" | "ll" => Policy::LeastLoaded,
-            "lad-ts" | "lad" => match rt {
-                Some(rt) => Policy::LadTs(Box::new(LadPolicy::new(
-                    rt,
-                    self.opts.workers,
-                    None,
-                    self.opts.seed,
-                )?)),
-                None => anyhow::bail!("lad-ts policy needs artifacts"),
-            },
+            "random" | "rand" => {
+                Policy::Random(Rng::new(self.opts.seed ^ 0x5EED_0D15))
+            }
+            "cache-first" | "cf" => {
+                needs_placement("cache-first")?;
+                Policy::CacheFirst
+            }
+            "cache-ll" | "cll" | "cache-aware" => {
+                needs_placement("cache-ll")?;
+                Policy::CacheLl
+            }
+            "lad-ts" | "lad" => {
+                if self.placement_enabled() {
+                    anyhow::bail!(
+                        "lad-ts is not placement-aware yet; use cache-first \
+                         or cache-ll for placement runs"
+                    );
+                }
+                match rt {
+                    Some(rt) => Policy::LadTs(Box::new(LadPolicy::new(
+                        rt,
+                        self.opts.workers,
+                        None,
+                        self.opts.seed,
+                    )?)),
+                    None => anyhow::bail!("lad-ts policy needs artifacts"),
+                }
+            }
             other => anyhow::bail!("unknown scheduler '{other}'"),
         })
     }
@@ -117,15 +178,68 @@ impl DEdgeAi {
             .unwrap_or(ZDist::Fixed(self.opts.z_steps))
     }
 
+    /// Effective per-request model-demand distribution (the paper's
+    /// reSD3-m deployment when unset).
+    fn model_dist(&self) -> ModelDist {
+        self.opts
+            .model_dist
+            .clone()
+            .unwrap_or(ModelDist::Fixed(placement::RESD3M))
+    }
+
+    /// Build the placement state: VRAM budgets (heterogeneous via
+    /// `--worker-vram`, else the 64 GB AGX Orin default), the variant
+    /// catalog, and the initial pin set prewarmed from the demand
+    /// prior. `None` when placement is off — the PR 2 fast path.
+    fn make_placement(&self) -> Result<Option<Placement>> {
+        if !self.placement_enabled() {
+            return Ok(None);
+        }
+        let catalog = Catalog::standard();
+        let budgets = match &self.opts.worker_vram {
+            Some(v) => {
+                if v.len() != self.opts.workers {
+                    bail!(
+                        "--worker-vram lists {} budgets for {} workers",
+                        v.len(),
+                        self.opts.workers
+                    );
+                }
+                v.clone()
+            }
+            None => vec![placement::DEFAULT_VRAM_GB; self.opts.workers],
+        };
+        let dist = self.model_dist();
+        for id in dist.support() {
+            let v = catalog.get(id);
+            if !budgets.iter().any(|&b| b >= v.mem_gb) {
+                bail!(
+                    "model '{}' needs {:.1} GB VRAM but the largest worker \
+                     budget is {:.1} GB",
+                    v.name,
+                    v.mem_gb,
+                    budgets.iter().cloned().fold(0.0, f64::max)
+                );
+            }
+        }
+        let prior = dist.weights_vec(catalog.len());
+        let mut p = Placement::new(budgets, catalog, prior)?;
+        p.prewarm();
+        Ok(Some(p))
+    }
+
     /// Deterministic request trace: captions, demands, and submission
-    /// times are pure functions of (opts, seed). The caption and
-    /// arrival/demand streams are independent, so the batch trace with
-    /// fixed z is bit-identical to the pre-open-loop one.
+    /// times are pure functions of (opts, seed). The caption,
+    /// arrival/quality, and model streams are independent, so the
+    /// batch trace with fixed z is bit-identical to the pre-open-loop
+    /// one, and a fixed model dist perturbs nothing.
     fn make_requests(&self) -> Vec<Request> {
         let mut corpus = Corpus::new(self.opts.seed);
         let mut arr_rng = Rng::new(self.opts.seed ^ 0xA881_07A1);
         let mut z_rng = Rng::new(self.opts.seed ^ 0x57E9_D157);
+        let mut m_rng = Rng::new(self.opts.seed ^ 0x3A9D_11AD);
         let zd = self.z_dist();
+        let md = self.model_dist();
         self.opts
             .arrivals
             .times(self.opts.requests, &mut arr_rng)
@@ -135,33 +249,44 @@ impl DEdgeAi {
                 id: id as u64,
                 prompt: corpus.caption(),
                 z: zd.sample(&mut z_rng),
+                model: md.sample(&mut m_rng),
                 submitted_at,
             })
             .collect()
     }
 
     /// Service-time model for one request on a virtual Jetson: LAN up,
-    /// generation (with small per-image jitter), LAN down.
-    fn service_times(req: &Request, rng: &mut Rng) -> (f64, f64, f64) {
+    /// generation (with small per-image jitter, scaled by the model
+    /// tier's per-step multiplier), LAN down. `step_mult = 1.0` is
+    /// bit-identical to the placement-free model.
+    fn service_times(req: &Request, rng: &mut Rng, step_mult: f64) -> (f64, f64, f64) {
         let up = clock::lan_seconds(req.prompt.len() as f64 * 8.0);
-        let gen =
-            clock::jetson_image_seconds(req.z) * (1.0 + 0.03 * rng.normal());
+        let gen = clock::jetson_image_seconds_mult(req.z, step_mult)
+            * (1.0 + 0.03 * rng.normal());
         let down = clock::lan_seconds(0.8e6);
         (up, gen, down)
     }
 
     /// Virtual-time batch run (the Table V protocol: all requests
     /// submitted at t=0, makespan measured on the Jetson-calibrated
-    /// clock). Deterministic, no threads.
+    /// clock). Deterministic, no threads. Placement and admission
+    /// control live on the event engine — this closed loop stays
+    /// untouched so its numbers remain bit-identical.
     pub fn run_batch(&self) -> Result<ServeMetrics> {
+        if self.placement_enabled() || self.opts.queue_cap.is_some() {
+            bail!(
+                "placement-aware serving and admission control run on the \
+                 event engine; run_batch is the legacy Table V closed loop"
+            );
+        }
         let mut router = self.make_router()?;
         let mut metrics = ServeMetrics::new(self.opts.workers);
         // event clock per worker: time the worker becomes free
         let mut free_at = vec![0.0f64; self.opts.workers];
         let mut rng = Rng::new(self.opts.seed ^ 0xC0FFEE);
         for req in self.make_requests() {
-            let w = router.dispatch(&req)?;
-            let (up, gen, down) = Self::service_times(&req, &mut rng);
+            let w = router.dispatch(&req, None)?;
+            let (up, gen, down) = Self::service_times(&req, &mut rng, 1.0);
             let start = free_at[w].max(req.submitted_at + up);
             let done = start + gen + down;
             free_at[w] = done;
@@ -172,6 +297,7 @@ impl DEdgeAi {
                 id: req.id,
                 worker: w,
                 z: req.z,
+                model: req.model,
                 latency: done - req.submitted_at,
                 queue_wait: start - req.submitted_at - up,
                 gen_time: gen,
@@ -186,29 +312,80 @@ impl DEdgeAi {
     /// completions interleave on one virtual clock, so every dispatch
     /// decision sees the pending load *after* all completions that
     /// precede it — the router's load estimates finally drain.
+    ///
+    /// The placement subsystem rides the same clock: a dispatch whose
+    /// model is cold charges the load (and eviction) delay into the
+    /// worker's timeline before generation starts (a `ModelLoaded`
+    /// event books it when the load completes; warm hits pay nothing),
+    /// `Replace` events fire the slow re-placement timescale, and
+    /// `--queue-cap` drops arrivals once the admitted-but-incomplete
+    /// count reaches the cap, keeping pending load bounded.
     pub fn run_events(&self) -> Result<ServeMetrics> {
+        let mut placement = self.make_placement()?;
         let mut router = self.make_router()?;
         let mut metrics = ServeMetrics::new(self.opts.workers);
         let mut free_at = vec![0.0f64; self.opts.workers];
         let mut rng = Rng::new(self.opts.seed ^ 0xC0FFEE);
         let mut queue = EventQueue::new();
+        let mut arrivals_left = 0usize;
         for req in self.make_requests() {
             queue.push(req.submitted_at, Event::Arrival(req));
+            arrivals_left += 1;
         }
+        if placement.is_some() && self.opts.replace_every > 0.0 {
+            queue.push(self.opts.replace_every, Event::Replace);
+        }
+        let mut in_flight = 0usize;
         while let Some((now, event)) = queue.pop() {
             match event {
                 Event::Arrival(req) => {
-                    let w = router.dispatch(&req)?;
-                    let (up, gen, down) = Self::service_times(&req, &mut rng);
-                    let start = free_at[w].max(now + up);
+                    arrivals_left -= 1;
+                    if let Some(p) = placement.as_mut() {
+                        // offered demand feeds the slow timescale,
+                        // admitted or not
+                        p.note_demand(req.model);
+                    }
+                    if let Some(cap) = self.opts.queue_cap {
+                        if in_flight >= cap {
+                            metrics.record_drop();
+                            continue;
+                        }
+                    }
+                    let w = router.dispatch(&req, placement.as_ref())?;
+                    let mut load_delay = 0.0;
+                    let mut step_mult = 1.0;
+                    if let Some(p) = placement.as_mut() {
+                        step_mult = p.step_mult(req.model);
+                        let charge = p.ensure(w, req.model)?;
+                        metrics.record_cache(
+                            charge.delay_s == 0.0,
+                            charge.evictions,
+                        );
+                        load_delay = charge.delay_s;
+                    }
+                    let (up, gen, down) =
+                        Self::service_times(&req, &mut rng, step_mult);
+                    let start = free_at[w].max(now + up) + load_delay;
+                    if load_delay > 0.0 {
+                        queue.push(
+                            start,
+                            Event::ModelLoaded {
+                                worker: w,
+                                model: req.model,
+                                delay: load_delay,
+                            },
+                        );
+                    }
                     let done = start + gen + down;
                     free_at[w] = done;
+                    in_flight += 1;
                     queue.push(
                         done,
                         Event::Completion(Response {
                             id: req.id,
                             worker: w,
                             z: req.z,
+                            model: req.model,
                             latency: done - now,
                             queue_wait: start - now - up,
                             gen_time: gen,
@@ -217,8 +394,49 @@ impl DEdgeAi {
                     );
                 }
                 Event::Completion(resp) => {
-                    router.complete(resp.worker, resp.z);
+                    // drain exactly what dispatch charged: effective
+                    // steps (z x the served variant's step_mult)
+                    let mult = match placement.as_ref() {
+                        Some(p) => p.step_mult(resp.model),
+                        None => 1.0,
+                    };
+                    router.complete_steps(resp.worker, resp.z as f64 * mult);
+                    in_flight -= 1;
                     metrics.record(&resp, now);
+                }
+                Event::ModelLoaded { worker, model, delay } => {
+                    log::debug!(
+                        "t={now:.1}s: worker {worker} finished cold load of \
+                         model {model} ({delay:.1}s)"
+                    );
+                    metrics.record_cold_load_on(worker, delay);
+                }
+                Event::Replace => {
+                    if let Some(p) = placement.as_mut() {
+                        for load in p.rebalance() {
+                            // proactive loads occupy the worker like
+                            // any other work, from whichever is later:
+                            // its current backlog or the epoch tick
+                            let t0 = free_at[load.worker].max(now);
+                            free_at[load.worker] = t0 + load.delay_s;
+                            metrics.record_evictions(load.evictions);
+                            queue.push(
+                                t0 + load.delay_s,
+                                Event::ModelLoaded {
+                                    worker: load.worker,
+                                    model: load.model,
+                                    delay: load.delay_s,
+                                },
+                            );
+                        }
+                    }
+                    // keep ticking only while traffic is still due
+                    if arrivals_left > 0 {
+                        queue.push(
+                            now + self.opts.replace_every,
+                            Event::Replace,
+                        );
+                    }
                 }
             }
         }
@@ -232,13 +450,18 @@ impl DEdgeAi {
         Ok(metrics)
     }
 
-    /// Virtual-clock entry point: the batch protocol keeps its legacy
-    /// closed loop (bit-identical Table V); open-loop arrival processes
+    /// Virtual-clock entry point: the plain batch protocol keeps its
+    /// legacy closed loop (bit-identical Table V); open-loop arrival
+    /// processes — and any run using placement or admission control —
     /// run on the event engine.
     pub fn run_virtual(&self) -> Result<ServeMetrics> {
-        match self.opts.arrivals {
-            ArrivalProcess::Batch => self.run_batch(),
-            _ => self.run_events(),
+        let legacy_batch = matches!(self.opts.arrivals, ArrivalProcess::Batch)
+            && !self.placement_enabled()
+            && self.opts.queue_cap.is_none();
+        if legacy_batch {
+            self.run_batch()
+        } else {
+            self.run_events()
         }
     }
 
@@ -251,6 +474,13 @@ impl DEdgeAi {
             log::warn!(
                 "real-time mode submits back-to-back; --arrivals {} ignored",
                 self.opts.arrivals.name()
+            );
+        }
+        if self.placement_enabled() || self.opts.queue_cap.is_some() {
+            bail!(
+                "placement and admission control are virtual-clock features \
+                 (the real-time path runs one resident genmodel per worker); \
+                 drop --real-time"
             );
         }
         let artifacts = PathBuf::from(&self.opts.artifacts_dir);
@@ -269,7 +499,7 @@ impl DEdgeAi {
         let mut requests = self.make_requests();
         for req in requests.iter_mut() {
             req.submitted_at = epoch.elapsed().as_secs_f64();
-            let w = router.dispatch(req)?;
+            let w = router.dispatch(req, None)?;
             workers[w].submit(req.clone())?;
         }
         for _ in 0..self.opts.requests {
@@ -312,9 +542,39 @@ pub fn serve_and_report(opts: &ServeOptions) -> Result<()> {
         "DEdgeAI: {} requests, {} workers, arrivals={}, scheduler={}, mode={}",
         opts.requests, opts.workers, opts.arrivals.name(), opts.scheduler, mode
     );
+    let placement_on = opts.model_dist.is_some() || opts.worker_vram.is_some();
+    let catalog = Catalog::standard();
+    if placement_on {
+        let budgets = opts
+            .worker_vram
+            .clone()
+            .unwrap_or_else(|| vec![placement::DEFAULT_VRAM_GB; opts.workers]);
+        let md = opts
+            .model_dist
+            .clone()
+            .unwrap_or(ModelDist::Fixed(placement::RESD3M));
+        println!(
+            "placement: models ~ {}, worker VRAM {:?} GB, replace-every {}",
+            md.label(&catalog),
+            budgets,
+            if opts.replace_every > 0.0 {
+                format!("{:.0}s", opts.replace_every)
+            } else {
+                "off".into()
+            }
+        );
+    }
     if let Some(rate) = opts.arrivals.rate() {
         let mean_z = sys.z_dist().mean();
-        let cap = clock::fleet_capacity_rps(opts.workers, mean_z);
+        let mult = if placement_on {
+            opts.model_dist
+                .clone()
+                .unwrap_or(ModelDist::Fixed(placement::RESD3M))
+                .mean_step_mult(&catalog)
+        } else {
+            1.0
+        };
+        let cap = clock::fleet_capacity_rps_mult(opts.workers, mean_z, mult);
         println!(
             "offered load: {rate:.3} req/s vs fleet capacity {cap:.3} img/s \
              at mean z={mean_z:.1}  (rho={:.2})",
@@ -328,6 +588,10 @@ pub fn serve_and_report(opts: &ServeOptions) -> Result<()> {
     t.row(vec!["median latency (s)".into(), fnum(metrics.median_latency(), 2)]);
     t.row(vec!["p95 latency (s)".into(), fnum(metrics.p95_latency(), 2)]);
     t.row(vec!["p99 latency (s)".into(), fnum(metrics.p99_latency(), 2)]);
+    if opts.queue_cap.is_some() {
+        t.row(vec!["dropped".into(), metrics.dropped().to_string()]);
+        t.row(vec!["drop rate".into(), fnum(metrics.drop_rate(), 3)]);
+    }
     t.row(vec!["mean queue wait (s)".into(), fnum(metrics.mean_queue_wait(), 2)]);
     t.row(vec!["mean gen time (s)".into(), fnum(metrics.mean_gen_time(), 3)]);
     t.row(vec![
@@ -339,6 +603,17 @@ pub fn serve_and_report(opts: &ServeOptions) -> Result<()> {
         fnum(metrics.mean_utilization(), 3),
     ]);
     t.row(vec!["worker imbalance".into(), fnum(metrics.imbalance(), 3)]);
+    if placement_on {
+        t.row(vec![
+            "cache hit rate".into(),
+            fnum(metrics.cache_hit_rate(), 3),
+        ]);
+        t.row(vec![
+            "cold-load delay total (s)".into(),
+            fnum(metrics.cold_load_s(), 1),
+        ]);
+        t.row(vec!["model evictions".into(), metrics.evictions().to_string()]);
+    }
     t.row(vec!["wallclock (s)".into(), fnum(wall, 2)]);
     println!("{}", t.render());
     println!(
@@ -426,6 +701,63 @@ mod tests {
         assert!(m.p99_latency() >= m.median_latency());
         let u = m.mean_utilization();
         assert!(u > 0.0 && u <= 1.0, "utilization={u}");
+    }
+
+    #[test]
+    fn placement_single_variant_is_bit_identical_to_plain() {
+        // Placement with one variant that every budget holds changes
+        // nothing: prewarm makes every dispatch a warm hit, the fixed
+        // model dist draws no randomness, and step_mult is 1.0 — the
+        // run must be bit-identical to the placement-free engine.
+        let base = ServeOptions {
+            requests: 60,
+            arrivals: ArrivalProcess::Poisson { rate: 0.25 },
+            z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+            ..ServeOptions::default()
+        };
+        let plain = DEdgeAi::new(base.clone()).run_virtual().unwrap();
+        let placed = DEdgeAi::new(ServeOptions {
+            model_dist: Some(ModelDist::Fixed(placement::RESD3M)),
+            worker_vram: Some(vec![64.0; 5]),
+            ..base
+        })
+        .run_virtual()
+        .unwrap();
+        assert_eq!(plain.count(), placed.count());
+        assert_eq!(plain.per_worker(), placed.per_worker());
+        assert_eq!(plain.makespan().to_bits(), placed.makespan().to_bits());
+        assert_eq!(
+            plain.p99_latency().to_bits(),
+            placed.p99_latency().to_bits()
+        );
+        assert_eq!(placed.cache_hit_rate(), 1.0);
+        assert_eq!(placed.cold_load_s(), 0.0);
+        assert_eq!(placed.evictions(), 0);
+    }
+
+    #[test]
+    fn infeasible_model_dist_is_rejected_upfront() {
+        let opts = ServeOptions {
+            requests: 5,
+            arrivals: ArrivalProcess::Poisson { rate: 0.2 },
+            model_dist: Some(ModelDist::Fixed(placement::SD3_MEDIUM)),
+            worker_vram: Some(vec![16.0; 5]),
+            ..ServeOptions::default()
+        };
+        let err = DEdgeAi::new(opts).run_virtual().unwrap_err();
+        assert!(err.to_string().contains("VRAM"), "{err}");
+    }
+
+    #[test]
+    fn cache_policies_require_placement_state() {
+        let opts = ServeOptions {
+            requests: 5,
+            scheduler: "cache-first".into(),
+            arrivals: ArrivalProcess::Poisson { rate: 0.2 },
+            ..ServeOptions::default()
+        };
+        let err = DEdgeAi::new(opts).run_virtual().unwrap_err();
+        assert!(err.to_string().contains("placement"), "{err}");
     }
 
     #[test]

@@ -74,6 +74,7 @@ pub fn spawn_worker(
                     id: req.id,
                     worker: id,
                     z: req.z,
+                    model: req.model,
                     latency: done - req.submitted_at,
                     queue_wait: start - req.submitted_at,
                     gen_time: done - start,
@@ -112,6 +113,7 @@ mod tests {
                 id: i,
                 prompt: format!("test prompt {i}"),
                 z: 3,
+                model: 0,
                 submitted_at: epoch.elapsed().as_secs_f64(),
             })
             .unwrap();

@@ -18,7 +18,8 @@ use anyhow::{bail, Result};
 use dedgeai::agents::{make_scheduler, Method};
 use dedgeai::config::{ActorLoss, AgentConfig, Backend, EnvConfig, ExpConfig};
 use dedgeai::coordinator;
-use dedgeai::coordinator::{ArrivalProcess, ZDist};
+use dedgeai::coordinator::placement;
+use dedgeai::coordinator::{ArrivalProcess, Catalog, ModelDist, ZDist};
 use dedgeai::runtime::XlaRuntime;
 use dedgeai::sim::{experiments, output, runner};
 use dedgeai::util::cli::Args;
@@ -30,9 +31,11 @@ dedgeai — latent action diffusion scheduling for AIGC edge services
 USAGE:
   dedgeai train --method lad-ts [--episodes 60] [--seed 42]
   dedgeai exp <fig5|fig6a|fig6b|fig7a|fig7b|fig8a|fig8b|table5|mem|ablation|
-               serve-sweep|all>
+               serve-sweep|placement-sweep|all>
   dedgeai serve [--workers 5] [--requests 100] [--real-time]
                 [--arrivals poisson --rate 0.3] [--z-dist uniform:5,15]
+                [--model-dist mix:resd3-m=0.7,sd3-medium=0.3]
+                [--worker-vram 24,24,24,24,48] [--queue-cap 50]
   dedgeai info
 
 OPTIONS (shared):
@@ -60,11 +63,28 @@ OPTIONS (serving / serve-sweep):
                      bimodal:LO,HI,P  (serve default: fixed z-steps)
   --z-steps N        serve only: fixed demand when --z-dist absent
                      (default 15; serve-sweep always uses --z-dist)
-  --rates LIST       serve-sweep arrival rates, e.g. 0.2,0.3,0.4
+  --rates LIST       sweep arrival rates, e.g. 0.2,0.3,0.4
   --fleets LIST      serve-sweep fleet sizes (default 5)
-  --schedulers LIST  serve-sweep policies
-                     (default round-robin,least-loaded,lad-ts)
-  --serve-requests N requests per serve-sweep cell (default 200)
+  --schedulers LIST  sweep policies (serve-sweep default
+                     round-robin,least-loaded,lad-ts; placement-sweep
+                     default random,least-loaded,cache-first,cache-ll)
+  --serve-requests N requests per sweep cell (default 200)
+
+OPTIONS (placement / placement-sweep):
+  --model-dist D     per-request model demand: NAME | fixed:NAME |
+                     mix:NAME=W,... | uniform:NAME,...
+                     (variants: resd3-m, sd3-medium, resd3-turbo)
+  --worker-vram GB   per-worker VRAM budgets: one value for all, or a
+                     comma list (its length sets the fleet size);
+                     setting this or --model-dist enables placement
+  --replace-every S  slow-timescale re-placement period in virtual
+                     seconds (0 = off)
+  --queue-cap N      admission control: max admitted-but-incomplete
+                     requests; beyond it arrivals are dropped (0 = off)
+  --vram-profiles P  placement-sweep VRAM profiles, ';'-separated
+                     comma lists, e.g. '64,64;24,24,48'
+  --model-dists D    placement-sweep model mixes, ';'-separated
+                     --model-dist specs
 ";
 
 fn main() {
@@ -131,12 +151,34 @@ fn exp_config(args: &Args) -> Result<ExpConfig> {
         cfg.serve.fleets = fleets;
     }
     if let Some(s) = args.get("schedulers") {
-        cfg.serve.schedulers =
+        let list: Vec<String> =
             s.split(',').map(|x| x.trim().to_string()).collect();
+        cfg.serve.schedulers = list.clone();
+        cfg.placement.schedulers = list;
     }
     cfg.serve.requests = args.usize_or("serve-requests", cfg.serve.requests)?;
     cfg.serve.arrivals = args.str_or("arrivals", &cfg.serve.arrivals);
     cfg.serve.z_dist = args.str_or("z-dist", &cfg.serve.z_dist);
+    // placement-sweep grid overrides (rates/arrivals/z-dist shared)
+    if let Some(rates) = args.list_f64("rates")? {
+        cfg.placement.rates = rates;
+    }
+    if let Some(p) = args.get("vram-profiles") {
+        cfg.placement.vram_profiles =
+            p.split(';').map(|x| x.trim().to_string()).collect();
+    }
+    if let Some(d) = args.get("model-dists") {
+        cfg.placement.model_dists =
+            d.split(';').map(|x| x.trim().to_string()).collect();
+    }
+    cfg.placement.requests =
+        args.usize_or("serve-requests", cfg.placement.requests)?;
+    cfg.placement.arrivals = args.str_or("arrivals", &cfg.placement.arrivals);
+    cfg.placement.z_dist = args.str_or("z-dist", &cfg.placement.z_dist);
+    cfg.placement.replace_every =
+        args.f64_or("replace-every", cfg.placement.replace_every)?;
+    cfg.placement.queue_cap =
+        args.usize_or("queue-cap", cfg.placement.queue_cap)?;
     Ok(cfg)
 }
 
@@ -210,8 +252,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(spec) => Some(ZDist::parse(spec)?),
         None => None,
     };
+    // placement: --worker-vram (a multi-entry list sets the fleet
+    // size) and/or --model-dist enable the cache-aware serving path
+    let mut workers = args.usize_or("workers", 5)?;
+    let worker_vram = match args.get("worker-vram") {
+        Some(spec) => {
+            let budgets = placement::parse_vram_spec(spec, workers)?;
+            workers = budgets.len();
+            Some(budgets)
+        }
+        None => None,
+    };
+    let model_dist = match args.get("model-dist") {
+        Some(spec) => Some(ModelDist::parse(spec, &Catalog::standard())?),
+        None => None,
+    };
+    let queue_cap = match args.usize_or("queue-cap", 0)? {
+        0 => None,
+        cap => Some(cap),
+    };
     let opts = coordinator::ServeOptions {
-        workers: args.usize_or("workers", 5)?,
+        workers,
         requests: args.usize_or("requests", 100)?,
         real_time: args.flag("real-time"),
         seed: exp.seed,
@@ -220,6 +281,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         z_steps: args.usize_or("z-steps", 15)?,
         arrivals,
         z_dist,
+        model_dist,
+        worker_vram,
+        replace_every: args.f64_or("replace-every", 0.0)?,
+        queue_cap,
     };
     coordinator::serve_and_report(&opts)
 }

@@ -36,6 +36,7 @@ use crate::config::{AgentConfig, EnvConfig, ExpConfig};
 use crate::coordinator::arrivals::{ArrivalProcess, ZDist};
 use crate::coordinator::clock;
 use crate::coordinator::models::{reduction_pct, ModelStack};
+use crate::coordinator::placement::{parse_vram_spec, Catalog, ModelDist};
 use crate::coordinator::platforms::PLATFORMS;
 use crate::coordinator::service::{DEdgeAi, ServeOptions};
 use crate::coordinator::ServeMetrics;
@@ -158,8 +159,9 @@ pub fn run_train_units(units: Vec<TrainUnit>, jobs: usize) -> Result<Vec<Vec<f64
 }
 
 /// Scalar summary of one open-loop serving run — the value a
-/// `serve-sweep` grid cell produces. `PartialEq` is exact f64 equality
-/// so the `--jobs` parity test can assert bit-identical sweeps.
+/// `serve-sweep` / `placement-sweep` grid cell produces. `PartialEq`
+/// is exact f64 equality so the `--jobs` parity test can assert
+/// bit-identical sweeps.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServeSummary {
     pub served: usize,
@@ -173,6 +175,13 @@ pub struct ServeSummary {
     pub throughput: f64,
     pub mean_utilization: f64,
     pub imbalance: f64,
+    /// Model-cache accounting (zero when placement is off).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub evictions: u64,
+    pub cold_load_s: f64,
+    /// Requests rejected by admission control.
+    pub dropped: u64,
 }
 
 impl ServeSummary {
@@ -188,6 +197,21 @@ impl ServeSummary {
             throughput: m.throughput(),
             mean_utilization: m.mean_utilization(),
             imbalance: m.imbalance(),
+            cache_hits: m.cache_hits(),
+            cache_misses: m.cache_misses(),
+            evictions: m.evictions(),
+            cold_load_s: m.cold_load_s(),
+            dropped: m.dropped(),
+        }
+    }
+
+    /// Warm-hit fraction of placement-checked dispatches.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
         }
     }
 }
@@ -245,10 +269,11 @@ pub fn run_experiment(
         "mem" => mem(&ctx),
         "ablation" => ablation(&ctx),
         "serve-sweep" => serve_sweep(&ctx),
+        "placement-sweep" => placement_sweep(&ctx),
         "all" => {
             for id in [
                 "fig5", "fig6a", "fig6b", "fig7a", "fig7b", "fig8a", "fig8b",
-                "table5", "mem", "ablation", "serve-sweep",
+                "table5", "mem", "ablation", "serve-sweep", "placement-sweep",
             ] {
                 println!("\n================ {id} ================");
                 run_experiment(id, env, agent, exp)?;
@@ -257,7 +282,7 @@ pub fn run_experiment(
         }
         other => bail!(
             "unknown experiment '{other}' (fig5|fig6a|fig6b|fig7a|fig7b|\
-             fig8a|fig8b|table5|mem|ablation|serve-sweep|all)"
+             fig8a|fig8b|table5|mem|ablation|serve-sweep|placement-sweep|all)"
         ),
     }
 }
@@ -824,6 +849,7 @@ fn serve_sweep(ctx: &Ctx) -> Result<()> {
                     z_steps: clock::DEFAULT_Z,
                     arrivals: ArrivalProcess::parse(&sc.arrivals, rate)?,
                     z_dist: Some(z_dist.clone()),
+                    ..ServeOptions::default()
                 });
                 cells.push((workers, rate, sched.clone()));
             }
@@ -912,4 +938,169 @@ fn serve_sweep(ctx: &Ctx) -> Result<()> {
         &csv_rows,
     )?;
     output::write_json(&ctx.exp.out_dir, "serve_sweep", &result)
+}
+
+// ---------------------------------------------------------------------------
+// placement-sweep — cache-aware serving under heterogeneous VRAM and
+// model demand (the two-timescale caching problem of 2411.01458).
+// ---------------------------------------------------------------------------
+
+/// (arrival rate × dispatch policy × VRAM profile × model mix) grid of
+/// placement-aware open-loop runs on the event engine, fanned over the
+/// executor with the usual `--jobs` bit-parity guarantee. Each cell
+/// reports latency measures plus cache hit rate, total cold-load
+/// delay, evictions, and admission drops.
+fn placement_sweep(ctx: &Ctx) -> Result<()> {
+    let pc = &ctx.exp.placement;
+    let catalog = Catalog::standard();
+    let mut schedulers = pc.schedulers.clone();
+    schedulers.retain(|s| {
+        let lad = s.starts_with("lad");
+        if lad {
+            log::warn!("placement-sweep: lad-ts is not placement-aware; dropping");
+        }
+        !lad
+    });
+    if schedulers.is_empty()
+        || pc.rates.is_empty()
+        || pc.vram_profiles.is_empty()
+        || pc.model_dists.is_empty()
+    {
+        bail!("placement-sweep: empty grid (need rates, schedulers, profiles, mixes)");
+    }
+    if pc.arrivals == "batch" {
+        bail!(
+            "placement-sweep is an open-loop rate sweep; '--arrivals batch' \
+             has no rate dimension"
+        );
+    }
+    let z_dist = ZDist::parse(&pc.z_dist)?;
+    let queue_cap = if pc.queue_cap > 0 { Some(pc.queue_cap) } else { None };
+
+    let mut units = Vec::new();
+    // (profile idx, mix idx, rate, scheduler, workers, mean step mult)
+    let mut cells: Vec<(usize, usize, f64, String, usize, f64)> = Vec::new();
+    for (pi, profile) in pc.vram_profiles.iter().enumerate() {
+        let budgets = parse_vram_spec(profile, 5)?;
+        let workers = budgets.len();
+        for (mi, mix) in pc.model_dists.iter().enumerate() {
+            let md = ModelDist::parse(mix, &catalog)?;
+            let mult = md.mean_step_mult(&catalog);
+            for &rate in &pc.rates {
+                for sched in &schedulers {
+                    units.push(ServeOptions {
+                        workers,
+                        requests: pc.requests,
+                        real_time: false,
+                        seed: ctx.exp.seed,
+                        artifacts_dir: ctx.exp.artifacts_dir.clone(),
+                        scheduler: sched.clone(),
+                        z_steps: clock::DEFAULT_Z,
+                        arrivals: ArrivalProcess::parse(&pc.arrivals, rate)?,
+                        z_dist: Some(z_dist.clone()),
+                        model_dist: Some(md.clone()),
+                        worker_vram: Some(budgets.clone()),
+                        replace_every: pc.replace_every,
+                        queue_cap,
+                    });
+                    cells.push((pi, mi, rate, sched.clone(), workers, mult));
+                }
+            }
+        }
+    }
+    println!(
+        "placement-sweep — open-loop {} arrivals, {} requests/cell, z ~ {} \
+         ({} cells: {} profile(s) x {} mix(es) x {} rate(s) x {} policy(ies), \
+         --jobs {})",
+        pc.arrivals,
+        pc.requests,
+        pc.z_dist,
+        units.len(),
+        pc.vram_profiles.len(),
+        pc.model_dists.len(),
+        pc.rates.len(),
+        schedulers.len(),
+        ctx.exp.jobs
+    );
+    for (pi, profile) in pc.vram_profiles.iter().enumerate() {
+        println!("  profile {pi}: VRAM [{profile}] GB");
+    }
+    for (mi, mix) in pc.model_dists.iter().enumerate() {
+        println!("  mix {mi}: {mix}");
+    }
+    let t0 = std::time::Instant::now();
+    let summaries = run_serve_units(units, ctx.exp.jobs)?;
+    println!("  simulated in {:.1}s", t0.elapsed().as_secs_f64());
+
+    let mut table = Table::new(&[
+        "profile", "mix", "rate (req/s)", "rho", "policy", "p50 (s)",
+        "p99 (s)", "mean TIS (s)", "hit rate", "cold (s)", "evict", "drop",
+    ])
+    .left_first()
+    .title("placement-sweep — cache-aware serving measures");
+    let mut result = Json::obj();
+    let mut csv_rows = Vec::new();
+    for ((pi, mi, rate, sched, workers, mult), s) in cells.iter().zip(&summaries)
+    {
+        let rho = rate
+            / clock::fleet_capacity_rps_mult(*workers, z_dist.mean(), *mult);
+        table.row(vec![
+            pi.to_string(),
+            mi.to_string(),
+            fnum(*rate, 3),
+            fnum(rho, 2),
+            sched.clone(),
+            fnum(s.p50, 2),
+            fnum(s.p99, 2),
+            fnum(s.mean_tis, 2),
+            fnum(s.hit_rate(), 2),
+            fnum(s.cold_load_s, 1),
+            s.evictions.to_string(),
+            s.dropped.to_string(),
+        ]);
+        let sched_idx = pc.schedulers.iter().position(|x| x == sched).unwrap();
+        csv_rows.push(vec![
+            *pi as f64,
+            *mi as f64,
+            *rate,
+            rho,
+            sched_idx as f64,
+            s.p50,
+            s.p95,
+            s.p99,
+            s.mean_tis,
+            s.hit_rate(),
+            s.cold_load_s,
+            s.evictions as f64,
+            s.dropped as f64,
+        ]);
+        result.set(
+            &format!("prof{pi}_mix{mi}_r{rate}_{sched}"),
+            Json::from_pairs(vec![
+                ("served", Json::num(s.served as f64)),
+                ("rho", Json::num(rho)),
+                ("p50", Json::num(s.p50)),
+                ("p95", Json::num(s.p95)),
+                ("p99", Json::num(s.p99)),
+                ("mean_tis", Json::num(s.mean_tis)),
+                ("throughput", Json::num(s.throughput)),
+                ("hit_rate", Json::num(s.hit_rate())),
+                ("cold_load_s", Json::num(s.cold_load_s)),
+                ("evictions", Json::num(s.evictions as f64)),
+                ("dropped", Json::num(s.dropped as f64)),
+                ("imbalance", Json::num(s.imbalance)),
+            ]),
+        );
+    }
+    println!("{}", table.render());
+    output::write_csv(
+        &ctx.exp.out_dir,
+        "placement_sweep",
+        &[
+            "profile", "mix", "rate", "rho", "sched_idx", "p50", "p95", "p99",
+            "mean_tis", "hit_rate", "cold_load_s", "evictions", "dropped",
+        ],
+        &csv_rows,
+    )?;
+    output::write_json(&ctx.exp.out_dir, "placement_sweep", &result)
 }

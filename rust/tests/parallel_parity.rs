@@ -7,6 +7,7 @@
 use dedgeai::agents::Method;
 use dedgeai::config::{AgentConfig, EnvConfig};
 use dedgeai::coordinator::arrivals::{ArrivalProcess, ZDist};
+use dedgeai::coordinator::placement::{Catalog, ModelDist};
 use dedgeai::coordinator::service::ServeOptions;
 use dedgeai::sim::experiments::{run_serve_units, run_train_units, TrainUnit};
 use dedgeai::sim::parallel::run_indexed;
@@ -117,18 +118,62 @@ fn serve_grid() -> Vec<ServeOptions> {
                 units.push(ServeOptions {
                     workers,
                     requests: 40,
-                    real_time: false,
-                    seed: BASE_SEED,
-                    artifacts_dir: "unused".into(),
                     scheduler: sched.into(),
-                    z_steps: 15,
                     arrivals: ArrivalProcess::Poisson { rate },
                     z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+                    seed: BASE_SEED,
+                    ..ServeOptions::default()
                 });
             }
         }
     }
     units
+}
+
+/// placement-sweep style grid: (VRAM profile × rate × policy) runs
+/// with model mixes, cold loads, re-placement epochs, and admission
+/// control all active — every placement feature on the determinism
+/// hook at once.
+fn placement_grid() -> Vec<ServeOptions> {
+    let catalog = Catalog::standard();
+    let md = ModelDist::parse(
+        "mix:resd3-m=0.45,resd3-turbo=0.45,sd3-medium=0.1",
+        &catalog,
+    )
+    .unwrap();
+    let mut units = Vec::new();
+    for profile in [vec![64.0; 5], vec![24.0, 24.0, 24.0, 24.0, 48.0]] {
+        for &rate in &[0.15, 0.3] {
+            for sched in ["random", "least-loaded", "cache-first", "cache-ll"] {
+                units.push(ServeOptions {
+                    workers: profile.len(),
+                    requests: 40,
+                    scheduler: sched.into(),
+                    arrivals: ArrivalProcess::Poisson { rate },
+                    z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+                    model_dist: Some(md.clone()),
+                    worker_vram: Some(profile.clone()),
+                    replace_every: 200.0,
+                    queue_cap: Some(30),
+                    seed: BASE_SEED,
+                    ..ServeOptions::default()
+                });
+            }
+        }
+    }
+    units
+}
+
+#[test]
+fn placement_sweep_is_jobs_invariant() {
+    let seq = run_serve_units(placement_grid(), 1).unwrap();
+    let par = run_serve_units(placement_grid(), 4).unwrap();
+    let auto = run_serve_units(placement_grid(), 0).unwrap();
+    assert_eq!(seq.len(), par.len());
+    for (i, (a, b)) in seq.iter().zip(&par).enumerate() {
+        assert_eq!(a, b, "placement unit {i} diverged between --jobs 1 and 4");
+    }
+    assert_eq!(seq, auto, "auto jobs diverged from sequential");
 }
 
 #[test]

@@ -1,0 +1,193 @@
+//! Placement-aware serving integration: VRAM-budgeted workers with
+//! cold-load delays charged in virtual time, cache-aware dispatch vs
+//! the placement-unaware baselines, admission control under overload,
+//! and the seeded random baseline's determinism. No AOT artifacts
+//! required (heuristic/placement schedulers only).
+
+use dedgeai::coordinator::arrivals::{ArrivalProcess, ZDist};
+use dedgeai::coordinator::placement::{Catalog, ModelDist};
+use dedgeai::coordinator::service::{DEdgeAi, ServeOptions};
+
+/// The churn scenario: four 24 GB devices hold exactly one of
+/// {reSD3-m (~16 GB), turbo (~12 GB)} at a time, the lone 48 GB device
+/// is the only one that can host SD3-medium (~40 GB). A
+/// placement-unaware policy ping-pongs variants through the caches;
+/// cache-aware dispatch specializes workers and stays warm.
+fn churn_opts(scheduler: &str, rate: f64) -> ServeOptions {
+    let catalog = Catalog::standard();
+    ServeOptions {
+        workers: 5,
+        requests: 200,
+        scheduler: scheduler.into(),
+        arrivals: ArrivalProcess::Poisson { rate },
+        z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+        model_dist: Some(
+            ModelDist::parse(
+                "mix:resd3-m=0.45,resd3-turbo=0.45,sd3-medium=0.1",
+                &catalog,
+            )
+            .unwrap(),
+        ),
+        worker_vram: Some(vec![24.0, 24.0, 24.0, 24.0, 48.0]),
+        ..ServeOptions::default()
+    }
+}
+
+#[test]
+fn cache_aware_dispatch_beats_least_loaded_under_churn() {
+    // The acceptance claim: with >= 2 variants in demand and a
+    // heterogeneous VRAM fleet, cache-first and cache-aware
+    // least-loaded achieve strictly lower mean time-in-system than
+    // plain least-loaded, because the latter keeps paying cold loads.
+    let ll = DEdgeAi::new(churn_opts("least-loaded", 0.15))
+        .run_virtual()
+        .unwrap();
+    let cf = DEdgeAi::new(churn_opts("cache-first", 0.15))
+        .run_virtual()
+        .unwrap();
+    let cll = DEdgeAi::new(churn_opts("cache-ll", 0.15))
+        .run_virtual()
+        .unwrap();
+    assert_eq!(ll.count(), 200);
+    assert_eq!(cf.count(), 200);
+    assert_eq!(cll.count(), 200);
+    assert!(
+        cf.mean_latency() < ll.mean_latency(),
+        "cache-first {} !< least-loaded {}",
+        cf.mean_latency(),
+        ll.mean_latency()
+    );
+    assert!(
+        cll.mean_latency() < ll.mean_latency(),
+        "cache-ll {} !< least-loaded {}",
+        cll.mean_latency(),
+        ll.mean_latency()
+    );
+    // the mechanism: cache-aware dispatch converts misses into hits
+    assert!(
+        cf.cache_hit_rate() > ll.cache_hit_rate(),
+        "cache-first hit rate {} !> least-loaded {}",
+        cf.cache_hit_rate(),
+        ll.cache_hit_rate()
+    );
+    assert!(cf.cold_load_s() < ll.cold_load_s());
+    assert!(cll.cold_load_s() < ll.cold_load_s());
+    assert!(ll.cold_load_s() > 0.0, "scenario produced no churn at all");
+}
+
+#[test]
+fn feasibility_mask_routes_big_models_to_big_workers() {
+    // Only the 48 GB device can hold SD3-medium: every completion must
+    // land there no matter the policy.
+    let catalog = Catalog::standard();
+    for scheduler in ["least-loaded", "round-robin", "random", "cache-first"] {
+        let opts = ServeOptions {
+            workers: 2,
+            requests: 30,
+            scheduler: scheduler.into(),
+            arrivals: ArrivalProcess::Poisson { rate: 0.1 },
+            model_dist: Some(ModelDist::parse("sd3-medium", &catalog).unwrap()),
+            worker_vram: Some(vec![16.0, 48.0]),
+            ..ServeOptions::default()
+        };
+        let m = DEdgeAi::new(opts).run_virtual().unwrap();
+        assert_eq!(m.count(), 30, "{scheduler}");
+        assert_eq!(
+            m.per_worker(),
+            &[0, 30],
+            "{scheduler} sent sd3-medium to a 16 GB device"
+        );
+    }
+}
+
+#[test]
+fn admission_control_bounds_overload() {
+    // A 1-worker fleet at ~18x its capacity: without a cap the queue
+    // (and the tail) grows without bound over the run; with
+    // --queue-cap 5 the pending work stays bounded, which shows up as
+    // a bounded p99, and the excess arrivals are counted as drops.
+    let opts = |queue_cap| ServeOptions {
+        workers: 1,
+        requests: 120,
+        scheduler: "least-loaded".into(),
+        arrivals: ArrivalProcess::Poisson { rate: 1.0 },
+        queue_cap,
+        ..ServeOptions::default()
+    };
+    let uncapped = DEdgeAi::new(opts(None)).run_virtual().unwrap();
+    assert_eq!(uncapped.count(), 120);
+    assert_eq!(uncapped.dropped(), 0);
+    assert!(
+        uncapped.p99_latency() > 300.0,
+        "uncapped overload should blow up the tail, p99={}",
+        uncapped.p99_latency()
+    );
+
+    let capped = DEdgeAi::new(opts(Some(5))).run_virtual().unwrap();
+    assert!(capped.dropped() > 0, "saturation must produce drops");
+    assert_eq!(
+        capped.count() + capped.dropped() as usize,
+        120,
+        "every request is either served or counted as dropped"
+    );
+    assert!(capped.drop_rate() > 0.5, "drop rate {}", capped.drop_rate());
+    // pending work bounded by the cap: at most 5 jobs (~19.3 s each)
+    // ahead of any admitted request, plus its own service and jitter
+    assert!(
+        capped.p99_latency() < 150.0,
+        "capped p99 {} — pending load not bounded",
+        capped.p99_latency()
+    );
+}
+
+#[test]
+fn random_policy_runs_are_seed_deterministic() {
+    let opts = |seed| ServeOptions {
+        requests: 80,
+        seed,
+        scheduler: "random".into(),
+        arrivals: ArrivalProcess::Poisson { rate: 0.3 },
+        z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+        ..ServeOptions::default()
+    };
+    let a = DEdgeAi::new(opts(42)).run_virtual().unwrap();
+    let b = DEdgeAi::new(opts(42)).run_virtual().unwrap();
+    assert_eq!(a.per_worker(), b.per_worker());
+    assert_eq!(a.makespan().to_bits(), b.makespan().to_bits());
+    assert_eq!(a.p99_latency().to_bits(), b.p99_latency().to_bits());
+    let c = DEdgeAi::new(opts(43)).run_virtual().unwrap();
+    assert_ne!(
+        a.makespan().to_bits(),
+        c.makespan().to_bits(),
+        "different seeds should change the run"
+    );
+}
+
+#[test]
+fn replacement_epochs_are_deterministic_and_complete() {
+    let run = || {
+        let mut o = churn_opts("cache-first", 0.2);
+        o.replace_every = 300.0;
+        DEdgeAi::new(o).run_virtual().unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.count(), 200);
+    assert_eq!(a.per_worker(), b.per_worker());
+    assert_eq!(a.makespan().to_bits(), b.makespan().to_bits());
+    assert_eq!(a.cold_load_s().to_bits(), b.cold_load_s().to_bits());
+    assert_eq!(a.evictions(), b.evictions());
+    assert!(a.cache_hit_rate() > 0.5, "hit rate {}", a.cache_hit_rate());
+}
+
+#[test]
+fn every_dispatch_is_cache_checked() {
+    let m = DEdgeAi::new(churn_opts("least-loaded", 0.2))
+        .run_virtual()
+        .unwrap();
+    assert_eq!(
+        (m.cache_hits() + m.cache_misses()) as usize,
+        m.count(),
+        "placement must account a hit or miss per admitted dispatch"
+    );
+}
