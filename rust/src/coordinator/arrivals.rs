@@ -106,57 +106,93 @@ impl ArrivalProcess {
         }
     }
 
+    /// Streaming generator over this process: one arrival per call,
+    /// O(1) state, the exact draw sequence of the old batch
+    /// materialiser (which [`times`](Self::times) is now built on).
+    pub fn stream(&self) -> ArrivalGen {
+        ArrivalGen {
+            proc: self.clone(),
+            t: 0.0,
+            in_hi: false,
+            dwell_left: 0.0,
+            started: false,
+        }
+    }
+
     /// Generate `n` non-decreasing submission times (seconds).
+    /// Convenience wrapper over [`stream`](Self::stream) — the serving
+    /// engine itself synthesises arrivals lazily and never
+    /// materialises a trace.
     pub fn times(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
-        match *self {
-            ArrivalProcess::Batch => vec![0.0; n],
+        let mut gen = self.stream();
+        (0..n).map(|_| gen.next_time(rng)).collect()
+    }
+}
+
+/// Streaming arrival-time generator: holds the walking clock plus the
+/// MMPP-2 modulation state, so the next submission time is synthesised
+/// on demand — the O(in-flight) serving engine's arrival feed. For any
+/// process the draw sequence from the caller's [`Rng`] is identical to
+/// the eager `times()` materialiser, so a streamed trace is
+/// bit-identical to a collected one.
+#[derive(Clone, Debug)]
+pub struct ArrivalGen {
+    proc: ArrivalProcess,
+    /// Virtual clock: time of the last emitted arrival.
+    t: f64,
+    /// MMPP-2 state (bursty only): currently in the high-rate state?
+    in_hi: bool,
+    /// MMPP-2 state: seconds left before the next state flip.
+    dwell_left: f64,
+    /// Whether the lazy first-dwell draw has happened (bursty only —
+    /// the eager path drew it before its loop; streaming defers it to
+    /// the first `next_time` call so construction needs no RNG).
+    started: bool,
+}
+
+impl ArrivalGen {
+    /// Submission time of the next arrival (non-decreasing).
+    pub fn next_time(&mut self, rng: &mut Rng) -> f64 {
+        match self.proc {
+            ArrivalProcess::Batch => 0.0,
             ArrivalProcess::Poisson { rate } => {
-                let mut t = 0.0;
-                (0..n)
-                    .map(|_| {
-                        t += exp_draw(rng, rate);
-                        t
-                    })
-                    .collect()
+                self.t += exp_draw(rng, rate);
+                self.t
             }
             ArrivalProcess::Bursty { rate, burst, dwell } => {
-                // Rates chosen so equal mean dwell in each state gives a
-                // long-run average of exactly `rate`.
+                // Rates chosen so equal mean dwell in each state gives
+                // a long-run average of exactly `rate`.
                 let hi = 2.0 * rate * burst / (burst + 1.0);
                 let lo = 2.0 * rate / (burst + 1.0);
-                let mut t = 0.0;
-                let mut in_hi = false;
-                let mut dwell_left = exp_draw(rng, 1.0 / dwell);
-                let mut out = Vec::with_capacity(n);
-                while out.len() < n {
-                    let dt = exp_draw(rng, if in_hi { hi } else { lo });
-                    if dt <= dwell_left {
-                        t += dt;
-                        dwell_left -= dt;
-                        out.push(t);
-                    } else {
-                        t += dwell_left;
-                        in_hi = !in_hi;
-                        dwell_left = exp_draw(rng, 1.0 / dwell);
-                    }
+                if !self.started {
+                    self.dwell_left = exp_draw(rng, 1.0 / dwell);
+                    self.started = true;
                 }
-                out
+                loop {
+                    let dt = exp_draw(rng, if self.in_hi { hi } else { lo });
+                    if dt <= self.dwell_left {
+                        self.t += dt;
+                        self.dwell_left -= dt;
+                        return self.t;
+                    }
+                    self.t += self.dwell_left;
+                    self.in_hi = !self.in_hi;
+                    self.dwell_left = exp_draw(rng, 1.0 / dwell);
+                }
             }
             ArrivalProcess::Diurnal { rate, period, amp } => {
                 let l_max = rate * (1.0 + amp);
-                let mut t = 0.0;
-                let mut out = Vec::with_capacity(n);
-                while out.len() < n {
-                    t += exp_draw(rng, l_max);
+                loop {
+                    self.t += exp_draw(rng, l_max);
                     let l_t = rate
                         * (1.0
                             + amp
-                                * (2.0 * std::f64::consts::PI * t / period).sin());
+                                * (2.0 * std::f64::consts::PI * self.t / period)
+                                    .sin());
                     if rng.f64() * l_max < l_t {
-                        out.push(t);
+                        return self.t;
                     }
                 }
-                out
             }
         }
     }
@@ -361,6 +397,26 @@ mod tests {
             (ratio - expected).abs() < 0.9,
             "peak/trough ratio {ratio} vs analytic {expected}"
         );
+    }
+
+    #[test]
+    fn streamed_times_equal_materialised_trace() {
+        // One generator pulled incrementally must reproduce the
+        // one-shot trace exactly, for every process — the property the
+        // streaming serving engine's bit-parity rests on.
+        for p in [
+            ArrivalProcess::Batch,
+            ArrivalProcess::Poisson { rate: 0.4 },
+            ArrivalProcess::Bursty { rate: 0.8, burst: 5.0, dwell: 20.0 },
+            ArrivalProcess::Diurnal { rate: 0.5, period: 120.0, amp: 0.7 },
+        ] {
+            let eager = p.times(300, &mut Rng::new(11));
+            let mut rng = Rng::new(11);
+            let mut gen = p.stream();
+            let streamed: Vec<f64> =
+                (0..300).map(|_| gen.next_time(&mut rng)).collect();
+            assert_eq!(eager, streamed, "{p:?}");
+        }
     }
 
     #[test]

@@ -3,6 +3,12 @@
 //! Only prompt length/variety matter to the scheduler and the toy
 //! generation model; captions are Flickr8k-style templated sentences,
 //! deterministic under a seed.
+//!
+//! The serving hot path never materialises caption text: a draw yields
+//! a [`PromptDesc`] — the three template indices plus the byte length
+//! of the sentence they would render — which is `Copy` and
+//! allocation-free. Only the real-time (PJRT) path rehydrates the
+//! actual string, at submit time, via [`PromptDesc::render`].
 
 use crate::util::rng::Rng;
 
@@ -25,6 +31,48 @@ const PLACES: &[&str] = &[
     "the city square", "a mountain trail", "a quiet lake",
 ];
 
+/// Compact caption descriptor: the three template indices. 3 bytes of
+/// `Copy` data stand in for a heap `String` on the dispatch hot path;
+/// the rendered text is a pure function of the indices.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PromptDesc {
+    subject: u8,
+    verb: u8,
+    place: u8,
+}
+
+impl PromptDesc {
+    /// Build from explicit template indices (wrapped into range; used
+    /// by tests and synthetic traffic).
+    pub fn from_indices(subject: usize, verb: usize, place: usize) -> Self {
+        Self {
+            subject: (subject % SUBJECTS.len()) as u8,
+            verb: (verb % VERBS.len()) as u8,
+            place: (place % PLACES.len()) as u8,
+        }
+    }
+
+    /// Byte length of the sentence [`render`](Self::render) would
+    /// produce, without allocating it (two joining spaces).
+    pub fn len_bytes(&self) -> usize {
+        SUBJECTS[self.subject as usize].len()
+            + VERBS[self.verb as usize].len()
+            + PLACES[self.place as usize].len()
+            + 2
+    }
+
+    /// Rehydrate the caption text (the real-time PJRT path calls this
+    /// at submit time; the virtual-clock engines never do).
+    pub fn render(&self) -> String {
+        format!(
+            "{} {} {}",
+            SUBJECTS[self.subject as usize],
+            VERBS[self.verb as usize],
+            PLACES[self.place as usize]
+        )
+    }
+}
+
 /// Deterministic caption generator.
 #[derive(Clone, Debug)]
 pub struct Corpus {
@@ -36,12 +84,20 @@ impl Corpus {
         Self { rng: Rng::new(seed) }
     }
 
+    /// Next caption descriptor — the same three RNG draws as
+    /// [`caption`](Self::caption), no allocation, so a descriptor
+    /// trace is stream-identical to a text trace.
+    pub fn descriptor(&mut self) -> PromptDesc {
+        PromptDesc {
+            subject: self.rng.range_usize(0, SUBJECTS.len() - 1) as u8,
+            verb: self.rng.range_usize(0, VERBS.len() - 1) as u8,
+            place: self.rng.range_usize(0, PLACES.len() - 1) as u8,
+        }
+    }
+
     /// Next caption (uniform over the template space).
     pub fn caption(&mut self) -> String {
-        let s = SUBJECTS[self.rng.range_usize(0, SUBJECTS.len() - 1)];
-        let v = VERBS[self.rng.range_usize(0, VERBS.len() - 1)];
-        let p = PLACES[self.rng.range_usize(0, PLACES.len() - 1)];
-        format!("{s} {v} {p}")
+        self.descriptor().render()
     }
 
     /// A batch of captions.
@@ -64,5 +120,32 @@ mod tests {
         for c in &a {
             assert!(c.split_whitespace().count() >= 5);
         }
+    }
+
+    #[test]
+    fn descriptor_len_matches_rendered_text() {
+        let mut c = Corpus::new(7);
+        for _ in 0..200 {
+            let d = c.descriptor();
+            assert_eq!(d.len_bytes(), d.render().len(), "{d:?}");
+        }
+    }
+
+    #[test]
+    fn descriptor_stream_equals_caption_stream() {
+        // Same seed, one corpus drawing descriptors, one drawing text:
+        // the streams must coincide draw for draw (bit-parity of the
+        // streaming engine depends on this).
+        let mut by_desc = Corpus::new(42);
+        let mut by_text = Corpus::new(42);
+        for _ in 0..100 {
+            assert_eq!(by_desc.descriptor().render(), by_text.caption());
+        }
+    }
+
+    #[test]
+    fn from_indices_wraps_into_range() {
+        let d = PromptDesc::from_indices(1000, 1000, 1000);
+        assert_eq!(d.render().len(), d.len_bytes());
     }
 }

@@ -109,7 +109,7 @@ mod tests {
             t,
             Event::Arrival(Request {
                 id,
-                prompt: String::new(),
+                prompt: crate::coordinator::corpus::PromptDesc::default(),
                 z: 1,
                 model: 0,
                 submitted_at: t,

@@ -1,10 +1,19 @@
 //! Wire types between router and workers.
 
+use super::corpus::PromptDesc;
+
 /// One text-to-image request.
-#[derive(Clone, Debug)]
+///
+/// `Copy`: the serving hot path moves requests through the event
+/// engine by value with no heap allocation — the caption travels as a
+/// [`PromptDesc`] (template indices + derivable byte length), and only
+/// the real-time PJRT path rehydrates the text, at submit time.
+#[derive(Clone, Copy, Debug)]
 pub struct Request {
     pub id: u64,
-    pub prompt: String,
+    /// Caption descriptor (`prompt.len_bytes()` for the LAN/state
+    /// models, `prompt.render()` for actual generation).
+    pub prompt: PromptDesc,
     /// Generation-quality demand z_n (denoising steps).
     pub z: usize,
     /// Model-variant demand: index into the placement
@@ -16,7 +25,7 @@ pub struct Request {
 }
 
 /// Completed generation.
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug)]
 pub struct Response {
     pub id: u64,
     pub worker: usize,
@@ -45,7 +54,7 @@ mod tests {
     fn request_roundtrip_fields() {
         let r = Request {
             id: 7,
-            prompt: "a dog".into(),
+            prompt: PromptDesc::from_indices(0, 0, 0),
             z: 15,
             model: 0,
             submitted_at: 1.5,
@@ -53,6 +62,7 @@ mod tests {
         assert_eq!(r.id, 7);
         assert_eq!(r.z, 15);
         assert_eq!(r.model, 0);
+        assert!(r.prompt.len_bytes() > 0);
         let resp = Response {
             id: r.id,
             worker: 2,

@@ -2,13 +2,19 @@
 //! and the steady-state measures used by the open-loop engine (p99,
 //! time-in-system, windowed throughput, per-worker utilization).
 
-use crate::util::stats::{percentile, Welford};
+use std::cell::RefCell;
+
+use crate::util::stats::{percentile_sorted, Welford};
 
 use super::message::Response;
 
 #[derive(Clone, Debug)]
 pub struct ServeMetrics {
     latencies: Vec<f64>,
+    /// Lazily sorted copy of `latencies`, shared by every quantile
+    /// query: `median/p95/p99` used to pay a full clone+sort *each*,
+    /// i.e. three sorts per report. Invalidated on `record`.
+    sorted_latencies: RefCell<Option<Vec<f64>>>,
     /// Completion timestamps on the serving clock (for windowed rates).
     completions: Vec<f64>,
     queue_waits: Welford,
@@ -26,12 +32,19 @@ pub struct ServeMetrics {
     cold_load_s: f64,
     /// Requests rejected by admission control (`--queue-cap`).
     dropped: u64,
+    /// High-water mark of the event queue (streaming engine: bounded
+    /// by in-flight work, not total requests — the O(in-flight) claim
+    /// a guard test asserts).
+    queue_peak: usize,
+    /// High-water mark of admitted-but-incomplete requests.
+    in_flight_peak: usize,
 }
 
 impl ServeMetrics {
     pub fn new(workers: usize) -> Self {
         Self {
             latencies: Vec::new(),
+            sorted_latencies: RefCell::new(None),
             completions: Vec::new(),
             queue_waits: Welford::new(),
             gen_times: Welford::new(),
@@ -44,7 +57,27 @@ impl ServeMetrics {
             evictions: 0,
             cold_load_s: 0.0,
             dropped: 0,
+            queue_peak: 0,
+            in_flight_peak: 0,
         }
+    }
+
+    /// Quantile over the latency distribution via the shared
+    /// sort-once cache. NaN latencies are a recording bug — asserted
+    /// here (debug) because `total_cmp` would otherwise order them
+    /// silently instead of panicking like the old `partial_cmp` sort.
+    fn latency_quantile(&self, p: f64) -> f64 {
+        let mut cache = self.sorted_latencies.borrow_mut();
+        let sorted = cache.get_or_insert_with(|| {
+            debug_assert!(
+                self.latencies.iter().all(|x| !x.is_nan()),
+                "NaN latency recorded"
+            );
+            let mut v = self.latencies.clone();
+            v.sort_unstable_by(f64::total_cmp);
+            v
+        });
+        percentile_sorted(sorted, p)
     }
 
     /// Record a completion. A worker index outside the fleet is a hard
@@ -59,6 +92,7 @@ impl ServeMetrics {
             self.per_worker.len()
         );
         self.latencies.push(resp.latency);
+        self.sorted_latencies.borrow_mut().take();
         self.completions.push(completed_at);
         self.queue_waits.push(resp.queue_wait);
         self.gen_times.push(resp.gen_time);
@@ -101,6 +135,25 @@ impl ServeMetrics {
     /// Record one request rejected by admission control.
     pub fn record_drop(&mut self) {
         self.dropped += 1;
+    }
+
+    /// Note the engine's current event-queue length and in-flight
+    /// count; keeps the high-water marks that certify the streaming
+    /// engine's O(in-flight) footprint.
+    pub fn note_queue_depth(&mut self, queue_len: usize, in_flight: usize) {
+        self.queue_peak = self.queue_peak.max(queue_len);
+        self.in_flight_peak = self.in_flight_peak.max(in_flight);
+    }
+
+    /// Event-queue high-water mark over the run (0 for engines that
+    /// never report depth, e.g. the closed batch loop).
+    pub fn queue_peak(&self) -> usize {
+        self.queue_peak
+    }
+
+    /// High-water mark of admitted-but-incomplete requests.
+    pub fn in_flight_peak(&self) -> usize {
+        self.in_flight_peak
     }
 
     pub fn cache_hits(&self) -> u64 {
@@ -154,15 +207,15 @@ impl ServeMetrics {
     }
 
     pub fn median_latency(&self) -> f64 {
-        percentile(&self.latencies, 50.0)
+        self.latency_quantile(50.0)
     }
 
     pub fn p95_latency(&self) -> f64 {
-        percentile(&self.latencies, 95.0)
+        self.latency_quantile(95.0)
     }
 
     pub fn p99_latency(&self) -> f64 {
-        percentile(&self.latencies, 99.0)
+        self.latency_quantile(99.0)
     }
 
     pub fn mean_queue_wait(&self) -> f64 {
@@ -317,6 +370,34 @@ mod tests {
         assert!(m.p99_latency() >= m.p95_latency());
         assert!(m.p95_latency() >= m.median_latency());
         assert!((m.p99_latency() - 99.01).abs() < 0.1);
+    }
+
+    #[test]
+    fn quantile_cache_invalidates_on_new_records() {
+        // Regression for the sort-once cache: reading a quantile, then
+        // recording more data, then reading again must reflect the new
+        // data (stale-cache bug), and repeated reads must agree.
+        let mut m = ServeMetrics::new(1);
+        for i in 0..10 {
+            m.record(&resp(i, 0, (i + 1) as f64), (i + 1) as f64);
+        }
+        let before = m.median_latency();
+        assert_eq!(before.to_bits(), m.median_latency().to_bits());
+        m.record(&resp(10, 0, 1000.0), 1000.0);
+        assert!(m.median_latency() > before);
+        assert!(m.p99_latency() > 500.0);
+    }
+
+    #[test]
+    fn queue_depth_high_water_marks() {
+        let mut m = ServeMetrics::new(1);
+        assert_eq!(m.queue_peak(), 0);
+        assert_eq!(m.in_flight_peak(), 0);
+        m.note_queue_depth(3, 2);
+        m.note_queue_depth(7, 5);
+        m.note_queue_depth(1, 1);
+        assert_eq!(m.queue_peak(), 7);
+        assert_eq!(m.in_flight_peak(), 5);
     }
 
     #[test]

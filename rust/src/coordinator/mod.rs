@@ -27,7 +27,12 @@
 //!   budgets over LRU model caches charging cold-load delays in
 //!   virtual time, per-request model demand (`--model-dist`), and the
 //!   slow-timescale re-placement hook (after arXiv:2411.01458);
-//! - [`corpus`]: the synthetic caption corpus standing in for Flickr8k.
+//! - [`corpus`]: the synthetic caption corpus standing in for
+//!   Flickr8k (hot paths carry a `Copy` [`corpus::PromptDesc`]; text
+//!   is rehydrated only on the real-time PJRT path);
+//! - [`source`]: the lazy request stream — arrival/caption/z/model
+//!   draws synthesised per request, so open-loop runs hold
+//!   O(in-flight) state instead of materialising the whole trace.
 //!
 //! Serving entry points: `DEdgeAi::run_batch` (Table V closed batch,
 //! bit-stable), `DEdgeAi::run_events` (open loop on the event engine),
@@ -46,11 +51,14 @@ pub mod placement;
 pub mod platforms;
 pub mod router;
 pub mod service;
+pub mod source;
 pub mod worker;
 
 pub use arrivals::{ArrivalProcess, ZDist};
+pub use corpus::PromptDesc;
 pub use events::{Event, EventQueue};
 pub use message::{Request, Response};
+pub use source::RequestSource;
 pub use metrics::ServeMetrics;
 pub use placement::{Catalog, ModelDist, Placement};
 pub use service::{serve_and_report, DEdgeAi, ServeOptions};

@@ -31,6 +31,7 @@ use anyhow::{bail, Context, Result};
 use crate::agents::latent::LatentMemory;
 use crate::nn::Mat;
 use crate::runtime::{ActorFwdExec, Manifest, TrainState, XlaRuntime};
+use crate::util::argmin::ArgminTree;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -133,7 +134,7 @@ impl LadPolicy {
     fn pick(&mut self, req: &Request, pending_steps: &[f64]) -> Result<usize> {
         let s_dim = self.workers + 2;
         let mut s = Mat::zeros(1, s_dim);
-        s.set(0, 0, (req.prompt.len() as f32 / 64.0).min(1.0));
+        s.set(0, 0, (req.prompt.len_bytes() as f32 / 64.0).min(1.0));
         s.set(0, 1, req.z as f32 / self.norm_steps as f32);
         for (w, &p) in pending_steps.iter().enumerate() {
             s.set(0, 2 + w, (p / (self.norm_steps * 10.0)) as f32);
@@ -156,15 +157,23 @@ pub struct Router {
     policy: Policy,
     /// Estimated pending denoise-steps per worker.
     pending_steps: Vec<f64>,
+    /// Tournament tree mirroring `pending_steps` — built only for the
+    /// least-loaded policy, whose unmasked dispatch is then an O(1)
+    /// argmin instead of a linear fleet walk (lowest-index tie-break
+    /// preserved bit-exactly; see [`ArgminTree`]).
+    load_index: Option<ArgminTree>,
     dispatched: Vec<u64>,
     rr_next: usize,
 }
 
 impl Router {
     pub fn new(policy: Policy, workers: usize) -> Self {
+        let load_index = matches!(policy, Policy::LeastLoaded)
+            .then(|| ArgminTree::new(workers, 0.0));
         Self {
             policy,
             pending_steps: vec![0.0; workers],
+            load_index,
             dispatched: vec![0; workers],
             rr_next: 0,
         }
@@ -182,6 +191,14 @@ impl Router {
         req: &Request,
         placement: Option<&Placement>,
     ) -> Result<usize> {
+        // A placement run masks feasibility per request, so the static
+        // argmin index can never answer its dispatches — drop it on
+        // first sight rather than paying two O(log n) updates per
+        // request for an index nobody reads (placement is fixed for a
+        // run's lifetime; later dispatches just use the linear scan).
+        if placement.is_some() {
+            self.load_index = None;
+        }
         let n = self.pending_steps.len();
         let pending = &self.pending_steps;
         let feasible = |w: usize| match placement {
@@ -204,17 +221,38 @@ impl Router {
                 self.rr_next = (w + 1) % n;
                 w
             }
-            Policy::LeastLoaded => {
-                argmin(n, feasible, |w| pending[w]).with_context(|| {
+            Policy::LeastLoaded => match (placement, &self.load_index) {
+                // no feasibility mask -> the indexed argmin answers in
+                // O(1), bit-identical to the linear scan it replaced
+                (None, Some(tree)) => tree.argmin().with_context(|| {
                     format!("no worker can hold model {}", req.model)
-                })?
-            }
+                })?,
+                // masked (placement) dispatch keeps the linear walk:
+                // the mask is per-request, so no static index applies
+                _ => argmin(n, feasible, |w| pending[w]).with_context(|| {
+                    format!("no worker can hold model {}", req.model)
+                })?,
+            },
             Policy::Random(rng) => {
-                let cands: Vec<usize> = (0..n).filter(|&w| feasible(w)).collect();
-                if cands.is_empty() {
+                // Count-then-kth single draw: one `range_usize` over
+                // the same candidate count the old collect-a-Vec pick
+                // used, so the pick sequence is bit-identical — with
+                // zero allocation on the dispatch hot path.
+                let count = match placement {
+                    None => n,
+                    Some(_) => (0..n).filter(|&w| feasible(w)).count(),
+                };
+                if count == 0 {
                     bail!("no worker can hold model {}", req.model);
                 }
-                cands[rng.range_usize(0, cands.len() - 1)]
+                let k = rng.range_usize(0, count - 1);
+                match placement {
+                    None => k,
+                    Some(_) => (0..n)
+                        .filter(|&w| feasible(w))
+                        .nth(k)
+                        .expect("k-th feasible worker exists by count"),
+                }
             }
             Policy::CacheFirst => {
                 let p = placement.context(
@@ -270,6 +308,9 @@ impl Router {
             None => 1.0,
         };
         self.pending_steps[w] += req.z as f64 * mult;
+        if let Some(tree) = self.load_index.as_mut() {
+            tree.update(w, self.pending_steps[w]);
+        }
         self.dispatched[w] += 1;
         Ok(w)
     }
@@ -289,6 +330,9 @@ impl Router {
     pub fn complete_steps(&mut self, worker: usize, steps: f64) {
         self.pending_steps[worker] =
             (self.pending_steps[worker] - steps).max(0.0);
+        if let Some(tree) = self.load_index.as_mut() {
+            tree.update(worker, self.pending_steps[worker]);
+        }
     }
 
     pub fn pending(&self) -> &[f64] {
@@ -318,7 +362,7 @@ mod tests {
     fn req(id: u64, z: usize) -> Request {
         Request {
             id,
-            prompt: "p".into(),
+            prompt: crate::coordinator::corpus::PromptDesc::default(),
             z,
             model: RESD3M,
             submitted_at: 0.0,
@@ -382,6 +426,74 @@ mod tests {
         for w in 0..4 {
             assert!(picks.contains(&w), "worker {w} never picked: {picks:?}");
         }
+    }
+
+    #[test]
+    fn random_pick_sequence_is_pinned() {
+        // Regression for the count-then-kth rewrite: the old policy
+        // collected a candidate Vec and drew one index into it; with
+        // no mask the candidates are 0..n, so the pick sequence must
+        // equal the raw `range_usize(0, n-1)` draw stream. Any change
+        // to the draw pattern (extra draws, different bounds) breaks
+        // bit-compatibility of every seeded serving run.
+        let seed = 7;
+        let mut r = Router::new(Policy::Random(Rng::new(seed)), 4);
+        let picks: Vec<usize> =
+            (0..64).map(|i| r.dispatch(&req(i, 5), None).unwrap()).collect();
+        let mut ref_rng = Rng::new(seed);
+        let expect: Vec<usize> =
+            (0..64).map(|_| ref_rng.range_usize(0, 3)).collect();
+        assert_eq!(picks, expect);
+    }
+
+    #[test]
+    fn random_masked_pick_matches_collecting_reference() {
+        // With a feasibility mask, the zero-alloc walk must land on
+        // the same worker the collect-a-Vec reference would, draw for
+        // draw: worker 0 (16 GB) is infeasible for SD3-medium, so the
+        // candidate set is {1, 2} and each pick is cands[k].
+        let p = placement(&[16.0, 48.0, 48.0], &[0.3, 0.4, 0.3]);
+        let seed = 11;
+        let mut r = Router::new(Policy::Random(Rng::new(seed)), 3);
+        let mut ref_rng = Rng::new(seed);
+        for i in 0..48 {
+            let w = r.dispatch(&req_m(i, 5, SD3_MEDIUM), Some(&p)).unwrap();
+            let cands = [1usize, 2];
+            let expect = cands[ref_rng.range_usize(0, cands.len() - 1)];
+            assert_eq!(w, expect, "dispatch {i}");
+        }
+    }
+
+    #[test]
+    fn least_loaded_tree_matches_linear_scan() {
+        // The indexed least-loaded path must shadow a by-hand linear
+        // argmin through an adversarial interleaving of dispatches and
+        // completions (ties included: equal z forces equal loads).
+        crate::util::prop::check("ll tree == linear", 100, |g| {
+            let workers = g.usize(1, 17);
+            let mut r = Router::new(Policy::LeastLoaded, workers);
+            let mut shadow = vec![0.0f64; workers];
+            let mut in_flight: Vec<(usize, usize)> = Vec::new();
+            for id in 0..g.size(1, 60) as u64 {
+                let z = g.usize(1, 3); // few distinct z -> frequent ties
+                let expect = shadow
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap();
+                let w = r.dispatch(&req(id, z), None).unwrap();
+                assert_eq!(w, expect, "shadow={shadow:?}");
+                shadow[w] += z as f64;
+                in_flight.push((w, z));
+                while !in_flight.is_empty() && g.usize(0, 2) == 0 {
+                    let i = g.usize(0, in_flight.len() - 1);
+                    let (w, z) = in_flight.swap_remove(i);
+                    r.complete(w, z);
+                    shadow[w] = (shadow[w] - z as f64).max(0.0);
+                }
+            }
+        });
     }
 
     #[test]

@@ -14,6 +14,20 @@
 //!   pending-load estimates drain as traffic flows — the steady-state
 //!   serving regime the batch protocol cannot express.
 //!
+//! The open-loop engine *streams*: requests come one at a time from a
+//! lazy [`RequestSource`] (the single pending arrival lives outside
+//! the heap), so the event queue holds only in-flight completions —
+//! the *engine state* is O(in-flight) however many requests a run
+//! offers (metrics still record one latency/completion sample per
+//! served request), which is what makes million-request open-loop
+//! runs (the regime where scheduling policies actually separate)
+//! feasible. Bit-parity with
+//! the pre-streaming engine is load-bearing: the frozen eager
+//! reference ([`DEdgeAi::run_events_eager`]) exists purely so the
+//! parity suite can assert the two produce bitwise-equal metrics
+//! across arrival processes, demand distributions, policies, and
+//! admission caps.
+//!
 //! The event engine additionally carries the placement subsystem
 //! ([`super::placement`]): per-request model demand (`--model-dist`),
 //! per-worker VRAM budgets (`--worker-vram`) with LRU model caches
@@ -33,12 +47,12 @@ use crate::util::table::{fnum, Table};
 
 use super::arrivals::{ArrivalProcess, ZDist};
 use super::clock;
-use super::corpus::Corpus;
 use super::events::{Event, EventQueue};
 use super::message::{Request, Response};
 use super::metrics::ServeMetrics;
 use super::placement::{self, Catalog, ModelDist, Placement};
 use super::router::{LadPolicy, Policy, Router};
+use super::source::RequestSource;
 use super::worker::spawn_worker;
 
 /// Options for a serving run.
@@ -228,31 +242,21 @@ impl DEdgeAi {
         Ok(Some(p))
     }
 
-    /// Deterministic request trace: captions, demands, and submission
-    /// times are pure functions of (opts, seed). The caption,
-    /// arrival/quality, and model streams are independent, so the
-    /// batch trace with fixed z is bit-identical to the pre-open-loop
-    /// one, and a fixed model dist perturbs nothing.
-    fn make_requests(&self) -> Vec<Request> {
-        let mut corpus = Corpus::new(self.opts.seed);
-        let mut arr_rng = Rng::new(self.opts.seed ^ 0xA881_07A1);
-        let mut z_rng = Rng::new(self.opts.seed ^ 0x57E9_D157);
-        let mut m_rng = Rng::new(self.opts.seed ^ 0x3A9D_11AD);
-        let zd = self.z_dist();
-        let md = self.model_dist();
-        self.opts
-            .arrivals
-            .times(self.opts.requests, &mut arr_rng)
-            .into_iter()
-            .enumerate()
-            .map(|(id, submitted_at)| Request {
-                id: id as u64,
-                prompt: corpus.caption(),
-                z: zd.sample(&mut z_rng),
-                model: md.sample(&mut m_rng),
-                submitted_at,
-            })
-            .collect()
+    /// Lazy deterministic request trace: captions, demands, and
+    /// submission times are pure functions of (opts, seed), emitted
+    /// one request at a time. The caption, arrival, quality, and model
+    /// streams are independent seeded RNGs, so the stream is
+    /// bit-identical to the eager trace the engine used to
+    /// materialise (and the batch trace with fixed z remains
+    /// bit-identical to the pre-open-loop one).
+    fn source(&self) -> RequestSource {
+        RequestSource::new(
+            self.opts.seed,
+            &self.opts.arrivals,
+            self.z_dist(),
+            self.model_dist(),
+            self.opts.requests,
+        )
     }
 
     /// Service-time model for one request on a virtual Jetson: LAN up,
@@ -260,7 +264,7 @@ impl DEdgeAi {
     /// tier's per-step multiplier), LAN down. `step_mult = 1.0` is
     /// bit-identical to the placement-free model.
     fn service_times(req: &Request, rng: &mut Rng, step_mult: f64) -> (f64, f64, f64) {
-        let up = clock::lan_seconds(req.prompt.len() as f64 * 8.0);
+        let up = clock::lan_seconds(req.prompt.len_bytes() as f64 * 8.0);
         let gen = clock::jetson_image_seconds_mult(req.z, step_mult)
             * (1.0 + 0.03 * rng.normal());
         let down = clock::lan_seconds(0.8e6);
@@ -284,7 +288,7 @@ impl DEdgeAi {
         // event clock per worker: time the worker becomes free
         let mut free_at = vec![0.0f64; self.opts.workers];
         let mut rng = Rng::new(self.opts.seed ^ 0xC0FFEE);
-        for req in self.make_requests() {
+        for req in self.source() {
             let w = router.dispatch(&req, None)?;
             let (up, gen, down) = Self::service_times(&req, &mut rng, 1.0);
             let start = free_at[w].max(req.submitted_at + up);
@@ -313,6 +317,17 @@ impl DEdgeAi {
     /// decision sees the pending load *after* all completions that
     /// precede it — the router's load estimates finally drain.
     ///
+    /// **Streaming**: arrivals never enter the event heap. The single
+    /// pending arrival is synthesised on demand from the lazy
+    /// [`RequestSource`] and held outside the queue, winning ties
+    /// against every queued event — exactly the order the eager
+    /// engine produced, where all arrivals carried the lowest
+    /// sequence numbers. The heap therefore holds only in-flight
+    /// completions (plus transient `ModelLoaded`/`Replace` ticks):
+    /// O(in-flight) memory however many requests the run offers.
+    /// Bit-parity with [`run_events_eager`](Self::run_events_eager) is
+    /// enforced by the `serve_stream` parity suite.
+    ///
     /// The placement subsystem rides the same clock: a dispatch whose
     /// model is cold charges the load (and eviction) delay into the
     /// worker's timeline before generation starts (a `ModelLoaded`
@@ -327,8 +342,163 @@ impl DEdgeAi {
         let mut free_at = vec![0.0f64; self.opts.workers];
         let mut rng = Rng::new(self.opts.seed ^ 0xC0FFEE);
         let mut queue = EventQueue::new();
+        let mut source = self.source();
+        let mut next_arrival = source.next();
+        if placement.is_some() && self.opts.replace_every > 0.0 {
+            queue.push(self.opts.replace_every, Event::Replace);
+        }
+        let mut in_flight = 0usize;
+        loop {
+            // Pending arrival vs queue head; the arrival wins ties
+            // (eager-engine ordering, see the method docs).
+            let take_arrival = match (next_arrival.as_ref(), queue.peek_time()) {
+                (Some(req), Some(t)) => req.submitted_at <= t,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (None, None) => break,
+            };
+            if take_arrival {
+                let req = next_arrival.take().expect("checked by take_arrival");
+                next_arrival = source.next();
+                let now = req.submitted_at;
+                if let Some(p) = placement.as_mut() {
+                    // offered demand feeds the slow timescale,
+                    // admitted or not
+                    p.note_demand(req.model);
+                }
+                let admitted = match self.opts.queue_cap {
+                    Some(cap) if in_flight >= cap => {
+                        metrics.record_drop();
+                        false
+                    }
+                    _ => true,
+                };
+                if admitted {
+                    let w = router.dispatch(&req, placement.as_ref())?;
+                    let mut load_delay = 0.0;
+                    let mut step_mult = 1.0;
+                    if let Some(p) = placement.as_mut() {
+                        step_mult = p.step_mult(req.model);
+                        let charge = p.ensure(w, req.model)?;
+                        metrics.record_cache(
+                            charge.delay_s == 0.0,
+                            charge.evictions,
+                        );
+                        load_delay = charge.delay_s;
+                    }
+                    let (up, gen, down) =
+                        Self::service_times(&req, &mut rng, step_mult);
+                    let start = free_at[w].max(now + up) + load_delay;
+                    if load_delay > 0.0 {
+                        queue.push(
+                            start,
+                            Event::ModelLoaded {
+                                worker: w,
+                                model: req.model,
+                                delay: load_delay,
+                            },
+                        );
+                    }
+                    let done = start + gen + down;
+                    free_at[w] = done;
+                    in_flight += 1;
+                    queue.push(
+                        done,
+                        Event::Completion(Response {
+                            id: req.id,
+                            worker: w,
+                            z: req.z,
+                            model: req.model,
+                            latency: done - now,
+                            queue_wait: start - now - up,
+                            gen_time: gen,
+                            checksum: 0.0,
+                        }),
+                    );
+                }
+            } else {
+                let (now, event) =
+                    queue.pop().expect("queue non-empty by take_arrival case");
+                match event {
+                    Event::Arrival(_) => {
+                        unreachable!("streaming engine never queues arrivals")
+                    }
+                    Event::Completion(resp) => {
+                        // drain exactly what dispatch charged:
+                        // effective steps (z x the variant's step_mult)
+                        let mult = match placement.as_ref() {
+                            Some(p) => p.step_mult(resp.model),
+                            None => 1.0,
+                        };
+                        router.complete_steps(resp.worker, resp.z as f64 * mult);
+                        in_flight -= 1;
+                        metrics.record(&resp, now);
+                    }
+                    Event::ModelLoaded { worker, model, delay } => {
+                        log::debug!(
+                            "t={now:.1}s: worker {worker} finished cold load \
+                             of model {model} ({delay:.1}s)"
+                        );
+                        metrics.record_cold_load_on(worker, delay);
+                    }
+                    Event::Replace => {
+                        if let Some(p) = placement.as_mut() {
+                            for load in p.rebalance() {
+                                // proactive loads occupy the worker
+                                // like any other work, from whichever
+                                // is later: its current backlog or the
+                                // epoch tick
+                                let t0 = free_at[load.worker].max(now);
+                                free_at[load.worker] = t0 + load.delay_s;
+                                metrics.record_evictions(load.evictions);
+                                queue.push(
+                                    t0 + load.delay_s,
+                                    Event::ModelLoaded {
+                                        worker: load.worker,
+                                        model: load.model,
+                                        delay: load.delay_s,
+                                    },
+                                );
+                            }
+                        }
+                        // keep ticking only while traffic is still due
+                        if next_arrival.is_some() {
+                            queue.push(
+                                now + self.opts.replace_every,
+                                Event::Replace,
+                            );
+                        }
+                    }
+                }
+            }
+            metrics.note_queue_depth(queue.len(), in_flight);
+        }
+        // Conservation: every dispatched step completed, and the
+        // integer-valued f64 arithmetic cancels exactly.
+        debug_assert_eq!(
+            router.pending_total(),
+            0.0,
+            "event engine drained but pending load remains"
+        );
+        Ok(metrics)
+    }
+
+    /// The pre-streaming open-loop engine, frozen: materialises the
+    /// whole request trace and pushes every arrival into the event
+    /// heap up front (O(total-requests) memory). Kept **only** as the
+    /// reference implementation the streaming-parity suite compares
+    /// [`run_events`](Self::run_events) against, bit for bit — do not
+    /// grow features onto it.
+    #[doc(hidden)]
+    pub fn run_events_eager(&self) -> Result<ServeMetrics> {
+        let mut placement = self.make_placement()?;
+        let mut router = self.make_router()?;
+        let mut metrics = ServeMetrics::new(self.opts.workers);
+        let mut free_at = vec![0.0f64; self.opts.workers];
+        let mut rng = Rng::new(self.opts.seed ^ 0xC0FFEE);
+        let mut queue = EventQueue::new();
         let mut arrivals_left = 0usize;
-        for req in self.make_requests() {
+        for req in self.source() {
             queue.push(req.submitted_at, Event::Arrival(req));
             arrivals_left += 1;
         }
@@ -341,8 +511,6 @@ impl DEdgeAi {
                 Event::Arrival(req) => {
                     arrivals_left -= 1;
                     if let Some(p) = placement.as_mut() {
-                        // offered demand feeds the slow timescale,
-                        // admitted or not
                         p.note_demand(req.model);
                     }
                     if let Some(cap) = self.opts.queue_cap {
@@ -394,8 +562,6 @@ impl DEdgeAi {
                     );
                 }
                 Event::Completion(resp) => {
-                    // drain exactly what dispatch charged: effective
-                    // steps (z x the served variant's step_mult)
                     let mult = match placement.as_ref() {
                         Some(p) => p.step_mult(resp.model),
                         None => 1.0,
@@ -404,19 +570,12 @@ impl DEdgeAi {
                     in_flight -= 1;
                     metrics.record(&resp, now);
                 }
-                Event::ModelLoaded { worker, model, delay } => {
-                    log::debug!(
-                        "t={now:.1}s: worker {worker} finished cold load of \
-                         model {model} ({delay:.1}s)"
-                    );
+                Event::ModelLoaded { worker, delay, .. } => {
                     metrics.record_cold_load_on(worker, delay);
                 }
                 Event::Replace => {
                     if let Some(p) = placement.as_mut() {
                         for load in p.rebalance() {
-                            // proactive loads occupy the worker like
-                            // any other work, from whichever is later:
-                            // its current backlog or the epoch tick
                             let t0 = free_at[load.worker].max(now);
                             free_at[load.worker] = t0 + load.delay_s;
                             metrics.record_evictions(load.evictions);
@@ -430,7 +589,6 @@ impl DEdgeAi {
                             );
                         }
                     }
-                    // keep ticking only while traffic is still due
                     if arrivals_left > 0 {
                         queue.push(
                             now + self.opts.replace_every,
@@ -439,9 +597,8 @@ impl DEdgeAi {
                     }
                 }
             }
+            metrics.note_queue_depth(queue.len(), in_flight);
         }
-        // Conservation: every dispatched step completed, and the
-        // integer-valued f64 arithmetic cancels exactly.
         debug_assert_eq!(
             router.pending_total(),
             0.0,
@@ -450,18 +607,24 @@ impl DEdgeAi {
         Ok(metrics)
     }
 
+    /// Whether a virtual-clock run routes to the event engine (vs the
+    /// legacy Table V closed batch loop). The single source of truth
+    /// for both `run_virtual` and the report's queue-peak rows.
+    pub fn uses_event_engine(&self) -> bool {
+        !matches!(self.opts.arrivals, ArrivalProcess::Batch)
+            || self.placement_enabled()
+            || self.opts.queue_cap.is_some()
+    }
+
     /// Virtual-clock entry point: the plain batch protocol keeps its
     /// legacy closed loop (bit-identical Table V); open-loop arrival
     /// processes — and any run using placement or admission control —
     /// run on the event engine.
     pub fn run_virtual(&self) -> Result<ServeMetrics> {
-        let legacy_batch = matches!(self.opts.arrivals, ArrivalProcess::Batch)
-            && !self.placement_enabled()
-            && self.opts.queue_cap.is_none();
-        if legacy_batch {
-            self.run_batch()
-        } else {
+        if self.uses_event_engine() {
             self.run_events()
+        } else {
+            self.run_batch()
         }
     }
 
@@ -496,11 +659,13 @@ impl DEdgeAi {
         drop(resp_tx);
 
         let mut metrics = ServeMetrics::new(self.opts.workers);
-        let mut requests = self.make_requests();
-        for req in requests.iter_mut() {
+        // Stream straight off the source and submit by value: no
+        // materialised trace, no per-request clone into the channel
+        // (the worker rehydrates the prompt text at generate time).
+        for mut req in self.source() {
             req.submitted_at = epoch.elapsed().as_secs_f64();
-            let w = router.dispatch(req, None)?;
-            workers[w].submit(req.clone())?;
+            let w = router.dispatch(&req, None)?;
+            workers[w].submit(req)?;
         }
         for _ in 0..self.opts.requests {
             let resp: Response = resp_rx
@@ -603,6 +768,17 @@ pub fn serve_and_report(opts: &ServeOptions) -> Result<()> {
         fnum(metrics.mean_utilization(), 3),
     ]);
     t.row(vec!["worker imbalance".into(), fnum(metrics.imbalance(), 3)]);
+    if sys.uses_event_engine() && !opts.real_time {
+        // the O(in-flight) certificate of the streaming engine
+        t.row(vec![
+            "event-queue peak".into(),
+            metrics.queue_peak().to_string(),
+        ]);
+        t.row(vec![
+            "in-flight peak".into(),
+            metrics.in_flight_peak().to_string(),
+        ]);
+    }
     if placement_on {
         t.row(vec![
             "cache hit rate".into(),
@@ -758,6 +934,66 @@ mod tests {
         };
         let err = DEdgeAi::new(opts).run_virtual().unwrap_err();
         assert!(err.to_string().contains("placement"), "{err}");
+    }
+
+    #[test]
+    fn streaming_matches_eager_reference_bitwise() {
+        // The in-module smoke of the cross-product parity suite
+        // (rust/tests/serve_stream.rs): same opts through the
+        // streaming engine and the frozen eager reference must agree
+        // bit for bit, here with placement + admission control on.
+        let opts = ServeOptions {
+            requests: 120,
+            arrivals: ArrivalProcess::Poisson { rate: 0.3 },
+            z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+            model_dist: Some(ModelDist::Mix {
+                ids: vec![placement::RESD3M, placement::RESD3_TURBO],
+                weights: vec![0.5, 0.5],
+            }),
+            worker_vram: Some(vec![24.0; 5]),
+            scheduler: "cache-ll".into(),
+            queue_cap: Some(20),
+            ..ServeOptions::default()
+        };
+        let sys = DEdgeAi::new(opts);
+        let s = sys.run_events().unwrap();
+        let e = sys.run_events_eager().unwrap();
+        assert_eq!(s.count(), e.count());
+        assert_eq!(s.per_worker(), e.per_worker());
+        assert_eq!(s.dropped(), e.dropped());
+        assert_eq!(s.makespan().to_bits(), e.makespan().to_bits());
+        assert_eq!(s.p99_latency().to_bits(), e.p99_latency().to_bits());
+        assert_eq!(s.cold_load_s().to_bits(), e.cold_load_s().to_bits());
+        assert_eq!(s.evictions(), e.evictions());
+    }
+
+    #[test]
+    fn streaming_queue_peak_is_in_flight_not_total_requests() {
+        // The O(in-flight) certificate: a subcritical open-loop run
+        // keeps the event heap at the in-flight population (+1 for a
+        // transient tick), nowhere near the total request count —
+        // while the eager reference starts with all n queued.
+        let opts = ServeOptions {
+            requests: 2000,
+            arrivals: ArrivalProcess::Poisson { rate: 0.2 }, // rho ~ 0.73
+            ..ServeOptions::default()
+        };
+        let sys = DEdgeAi::new(opts);
+        let s = sys.run_events().unwrap();
+        assert_eq!(s.count(), 2000);
+        assert!(
+            s.queue_peak() <= s.in_flight_peak() + 1,
+            "queue peak {} exceeds in-flight peak {}",
+            s.queue_peak(),
+            s.in_flight_peak()
+        );
+        assert!(
+            s.queue_peak() < 200,
+            "queue peak {} is not O(in-flight) at rho<1",
+            s.queue_peak()
+        );
+        let e = sys.run_events_eager().unwrap();
+        assert!(e.queue_peak() >= 2000, "eager peak {}", e.queue_peak());
     }
 
     #[test]

@@ -65,8 +65,11 @@ pub fn spawn_worker(
                     WorkerCmd::Shutdown => break,
                 };
                 let start = epoch.elapsed().as_secs_f64();
+                // rehydrate the caption text from its descriptor here,
+                // off the dispatch hot path (PJRT needs the real string)
+                let prompt = req.prompt.render();
                 let latent =
-                    gen.generate(&req.prompt, req.z, req.id ^ (id as u64) << 32)?;
+                    gen.generate(&prompt, req.z, req.id ^ (id as u64) << 32)?;
                 let done = epoch.elapsed().as_secs_f64();
                 let checksum = latent.iter().sum::<f32>() / latent.len() as f32;
                 served += 1;
@@ -111,7 +114,9 @@ mod tests {
         for i in 0..4u64 {
             w.submit(Request {
                 id: i,
-                prompt: format!("test prompt {i}"),
+                prompt: crate::coordinator::corpus::PromptDesc::from_indices(
+                    i as usize, i as usize, i as usize,
+                ),
                 z: 3,
                 model: 0,
                 submitted_at: epoch.elapsed().as_secs_f64(),

@@ -5,6 +5,8 @@
 //!   exp     — regenerate paper figures/tables (fig5..fig8b, table5,
 //!             mem, ablation, or `all`)
 //!   serve   — run the DEdgeAI serving prototype (workers + router)
+//!   bench   — time the canonical serving scenarios and record the
+//!             perf-trajectory point (BENCH_serve.json)
 //!   info    — environment/calibration summary
 //!
 //! Common options: --artifacts DIR, --out DIR, --seed N, --episodes N,
@@ -36,6 +38,7 @@ USAGE:
                 [--arrivals poisson --rate 0.3] [--z-dist uniform:5,15]
                 [--model-dist mix:resd3-m=0.7,sd3-medium=0.3]
                 [--worker-vram 24,24,24,24,48] [--queue-cap 50]
+  dedgeai bench [--bench-requests 1000000] [--bench-out BENCH_serve.json]
   dedgeai info
 
 OPTIONS (shared):
@@ -69,6 +72,16 @@ OPTIONS (serving / serve-sweep):
                      round-robin,least-loaded,lad-ts; placement-sweep
                      default random,least-loaded,cache-first,cache-ll)
   --serve-requests N requests per sweep cell (default 200)
+
+OPTIONS (bench):
+  --bench-requests N total request budget (default 1000000; the
+                     flagship Poisson open loop runs all of it, the
+                     other scenarios run fractions)
+  --bench-out FILE   where to write the trajectory point (default: the
+                     repo root's BENCH_serve.json, found via ROADMAP.md;
+                     commit only quiet-machine release-mode runs)
+                     bench defaults to --jobs 1 for clean per-scenario
+                     wallclock
 
 OPTIONS (placement / placement-sweep):
   --model-dist D     per-request model demand: NAME | fixed:NAME |
@@ -197,9 +210,25 @@ fn run(args: &Args) -> Result<()> {
         "train" => cmd_train(args),
         "exp" => cmd_exp(args),
         "serve" => cmd_serve(args),
+        "bench" => cmd_bench(args),
         "info" => cmd_info(args),
         other => bail!("unknown subcommand '{other}'\n{USAGE}"),
     }
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let budget = args.usize_or("bench-requests", 1_000_000)?;
+    // sequential by default: per-scenario wallclock stays uncontended
+    let jobs = args.usize_or("jobs", 1)?;
+    let seed = args.u64_or("seed", 42)?;
+    let out = match args.get("bench-out") {
+        Some(path) => path.to_string(),
+        // default to the *repo-root* BENCH_serve.json (the committed
+        // trajectory point) regardless of whether cargo ran from the
+        // root or the crate directory
+        None => dedgeai::sim::bench::default_out_path(),
+    };
+    dedgeai::sim::bench::run_bench(budget, jobs, seed, &out)
 }
 
 fn cmd_train(args: &Args) -> Result<()> {

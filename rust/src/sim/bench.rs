@@ -1,0 +1,327 @@
+//! `bench` — the serving performance harness that seeds the repo's
+//! perf trajectory.
+//!
+//! Times canonical virtual-clock serving scenarios (batch closed loop,
+//! million-request Poisson open loop, placement churn, saturation
+//! under admission control) through the same [`parallel`] executor the
+//! experiment grids use, and reports *simulated requests
+//! per wallclock second* — the engine's hot-path throughput — plus
+//! wallclock, peak RSS, and the streaming engine's event-queue
+//! high-water mark (the O(in-flight) certificate).
+//!
+//! Output goes to `BENCH_serve.json`: the recorded baseline every
+//! later perf PR must not regress. Regenerate on a quiet machine with
+//!
+//! ```text
+//! cargo run --release -- bench
+//! ```
+//!
+//! (scale down with `--bench-requests`, e.g. the CI smoke uses a tiny
+//! budget and a scratch `--bench-out`). All scenarios use heuristic
+//! schedulers, so no AOT artifacts are needed.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::arrivals::{ArrivalProcess, ZDist};
+use crate::coordinator::clock;
+use crate::coordinator::placement::{Catalog, ModelDist};
+use crate::coordinator::service::{DEdgeAi, ServeOptions};
+use crate::util::json::Json;
+use crate::util::table::{fnum, Table};
+
+use super::experiments::ServeSummary;
+use super::parallel;
+
+/// One timed scenario: a name plus the serving options it runs.
+pub struct Scenario {
+    pub name: &'static str,
+    /// What the scenario certifies; lands in the JSON for the reader.
+    pub what: &'static str,
+    pub opts: ServeOptions,
+}
+
+/// One scenario's measurement.
+pub struct Measurement {
+    pub name: &'static str,
+    pub what: &'static str,
+    /// Requests offered (served + dropped).
+    pub requests: usize,
+    /// Wallclock seconds for the whole simulated run.
+    pub wall_s: f64,
+    pub summary: ServeSummary,
+}
+
+impl Measurement {
+    /// Simulated traffic rate: offered requests per wallclock second —
+    /// the engine-throughput number the trajectory tracks.
+    pub fn sim_req_per_s(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.requests as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The canonical scenario set, scaled by `budget` (the flagship open
+/// loop runs the full budget; cheaper/denser scenarios run fractions
+/// so a default run stays minutes, not hours). All heuristic-scheduler
+/// (artifact-free) and virtual-clock.
+pub fn scenarios(budget: usize, seed: u64) -> Vec<Scenario> {
+    let catalog = Catalog::standard();
+    // z ~ U[5,15] (mean 10) everywhere the open loop runs; rates are
+    // set relative to the 5-worker fleet capacity at that demand.
+    let z = ZDist::Uniform { lo: 5, hi: 15 };
+    let cap = clock::fleet_capacity_rps(5, 10.0);
+    let base = |requests: usize| ServeOptions {
+        requests: requests.max(1),
+        seed,
+        scheduler: "least-loaded".into(),
+        z_dist: Some(z.clone()),
+        ..ServeOptions::default()
+    };
+    vec![
+        Scenario {
+            name: "batch",
+            what: "Table V closed loop (all requests at t=0)",
+            opts: ServeOptions {
+                z_dist: None,
+                ..base(budget / 10)
+            },
+        },
+        Scenario {
+            name: "poisson-open-loop",
+            what: "flagship open loop at rho~0.9: O(in-flight) streaming",
+            opts: ServeOptions {
+                arrivals: ArrivalProcess::Poisson { rate: 0.9 * cap },
+                ..base(budget)
+            },
+        },
+        Scenario {
+            name: "placement-churn",
+            what: "cache-aware dispatch under VRAM churn + re-placement",
+            opts: ServeOptions {
+                arrivals: ArrivalProcess::Poisson { rate: 0.5 * cap },
+                scheduler: "cache-ll".into(),
+                model_dist: Some(
+                    ModelDist::parse(
+                        "mix:resd3-m=0.45,resd3-turbo=0.45,sd3-medium=0.1",
+                        &catalog,
+                    )
+                    .expect("static spec parses"),
+                ),
+                worker_vram: Some(vec![24.0, 24.0, 24.0, 24.0, 48.0]),
+                replace_every: 600.0,
+                ..base(budget / 5)
+            },
+        },
+        Scenario {
+            name: "saturation-capped",
+            what: "2x overload behind --queue-cap: drop path + bounded heap",
+            opts: ServeOptions {
+                arrivals: ArrivalProcess::Poisson { rate: 2.0 * cap },
+                // scale the cap with the budget so even the tiny CI
+                // smoke actually saturates and exercises the drop path
+                queue_cap: Some((budget / 5000).clamp(10, 100)),
+                ..base(budget / 2)
+            },
+        },
+    ]
+}
+
+/// Default output path: `BENCH_serve.json` next to the repo root (the
+/// committed trajectory point), found by walking up from the current
+/// directory to the first ancestor holding `ROADMAP.md` — so the
+/// default lands on the committed file whether cargo ran from the
+/// repo root or the crate directory. Falls back to the current
+/// directory when no marker is found.
+pub fn default_out_path() -> String {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        if dir.join("ROADMAP.md").exists() {
+            return dir.join("BENCH_serve.json").to_string_lossy().into_owned();
+        }
+        if !dir.pop() {
+            return "BENCH_serve.json".into();
+        }
+    }
+}
+
+/// Linux VmHWM (peak resident set) in kB; `None` off-Linux.
+pub fn peak_rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find(|l| l.starts_with("VmHWM:"))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse().ok())
+}
+
+/// Run the scenario set over the parallel executor (`jobs = 1` — the
+/// default — keeps per-scenario wallclock uncontended; each unit times
+/// itself either way) and return the measurements in scenario order.
+pub fn run_scenarios(set: Vec<Scenario>, jobs: usize) -> Result<Vec<Measurement>> {
+    let units: Vec<_> = set
+        .into_iter()
+        .map(|sc| {
+            move || -> Result<Measurement> {
+                let requests = sc.opts.requests;
+                let t0 = Instant::now();
+                let metrics = DEdgeAi::new(sc.opts).run_virtual()?;
+                let wall_s = t0.elapsed().as_secs_f64();
+                Ok(Measurement {
+                    name: sc.name,
+                    what: sc.what,
+                    requests,
+                    wall_s,
+                    summary: ServeSummary::from_metrics(&metrics),
+                })
+            }
+        })
+        .collect();
+    parallel::run_indexed(jobs, units)
+}
+
+/// The `bench` subcommand: measure, print the table, write the
+/// trajectory point to `out_path`.
+pub fn run_bench(budget: usize, jobs: usize, seed: u64, out_path: &str) -> Result<()> {
+    println!(
+        "bench — serving engine throughput, budget {budget} requests \
+         (seed {seed}, --jobs {jobs})"
+    );
+    let t0 = Instant::now();
+    let measurements = run_scenarios(scenarios(budget, seed), jobs)?;
+    let total_wall = t0.elapsed().as_secs_f64();
+
+    let mut table = Table::new(&[
+        "scenario",
+        "requests",
+        "wallclock (s)",
+        "sim req/s",
+        "served",
+        "dropped",
+        "p99 (s)",
+        "queue peak",
+    ])
+    .left_first()
+    .title("bench — simulated serving throughput");
+    let mut scen_json = Json::obj();
+    for m in &measurements {
+        let s = &m.summary;
+        table.row(vec![
+            m.name.into(),
+            m.requests.to_string(),
+            fnum(m.wall_s, 3),
+            fnum(m.sim_req_per_s(), 0),
+            s.served.to_string(),
+            s.dropped.to_string(),
+            fnum(s.p99, 2),
+            s.queue_peak.to_string(),
+        ]);
+        scen_json.set(
+            m.name,
+            Json::from_pairs(vec![
+                ("what", Json::str(m.what)),
+                ("requests", Json::num(m.requests as f64)),
+                ("wallclock_s", Json::num(m.wall_s)),
+                ("sim_req_per_s", Json::num(m.sim_req_per_s())),
+                ("served", Json::num(s.served as f64)),
+                ("dropped", Json::num(s.dropped as f64)),
+                ("makespan_s", Json::num(s.makespan)),
+                ("p99_s", Json::num(s.p99)),
+                ("queue_peak", Json::num(s.queue_peak as f64)),
+                ("in_flight_peak", Json::num(s.in_flight_peak as f64)),
+            ]),
+        );
+    }
+    println!("{}", table.render());
+
+    let rss = peak_rss_kb();
+    match rss {
+        Some(kb) => println!("peak RSS: {:.1} MB", kb as f64 / 1024.0),
+        None => println!("peak RSS: unavailable (non-Linux)"),
+    }
+    println!("total bench wallclock: {total_wall:.1}s");
+
+    let mut out = Json::obj();
+    out.set("schema", Json::str("dedgeai-bench-v1"));
+    out.set("budget_requests", Json::num(budget as f64));
+    out.set("jobs", Json::num(jobs as f64));
+    out.set("seed", Json::num(seed as f64));
+    out.set("total_wallclock_s", Json::num(total_wall));
+    out.set(
+        "peak_rss_kb",
+        rss.map(|kb| Json::num(kb as f64)).unwrap_or(Json::Null),
+    );
+    out.set("scenarios", scen_json);
+    out.write_file(std::path::Path::new(out_path))
+        .with_context(|| format!("writing bench record to {out_path}"))?;
+    println!("wrote {out_path}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_set_covers_the_acceptance_matrix() {
+        let set = scenarios(1_000_000, 42);
+        assert!(set.len() >= 4);
+        let names: Vec<&str> = set.iter().map(|s| s.name).collect();
+        for want in [
+            "batch",
+            "poisson-open-loop",
+            "placement-churn",
+            "saturation-capped",
+        ] {
+            assert!(names.contains(&want), "missing scenario '{want}'");
+        }
+        // flagship runs the full budget
+        let flagship = set.iter().find(|s| s.name == "poisson-open-loop").unwrap();
+        assert_eq!(flagship.opts.requests, 1_000_000);
+        // every scenario is virtual-clock and artifact-free
+        for s in &set {
+            assert!(!s.opts.real_time, "{}", s.name);
+            assert!(!s.opts.scheduler.starts_with("lad"), "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn tiny_budget_bench_runs_end_to_end() {
+        // The CI smoke in miniature: a small budget must survive every
+        // scenario (placement feasibility, caps, replace ticks) and
+        // produce sane measurements.
+        let ms = run_scenarios(scenarios(400, 42), 1).unwrap();
+        assert_eq!(ms.len(), 4);
+        for m in &ms {
+            assert!(m.requests >= 1, "{}", m.name);
+            assert!(m.wall_s >= 0.0);
+            assert_eq!(
+                m.summary.served + m.summary.dropped as usize,
+                m.requests,
+                "{}: served+dropped != offered",
+                m.name
+            );
+        }
+        // the capped scenario must exercise the drop path at 2x load
+        // (budget 400 -> cap clamps to 10)
+        let sat = ms.iter().find(|m| m.name == "saturation-capped").unwrap();
+        assert!(sat.summary.dropped > 0, "no drops under 2x overload");
+        assert!(
+            sat.summary.in_flight_peak <= 10,
+            "queue cap not enforced: {}",
+            sat.summary.in_flight_peak
+        );
+    }
+
+    #[test]
+    fn peak_rss_reads_on_linux() {
+        if cfg!(target_os = "linux") {
+            let kb = peak_rss_kb().expect("VmHWM present on Linux");
+            assert!(kb > 0);
+        }
+    }
+}

@@ -182,6 +182,11 @@ pub struct ServeSummary {
     pub cold_load_s: f64,
     /// Requests rejected by admission control.
     pub dropped: u64,
+    /// Event-queue high-water mark (streaming engine: bounded by
+    /// in-flight work, not total requests; 0 on the batch closed loop).
+    pub queue_peak: usize,
+    /// High-water mark of admitted-but-incomplete requests.
+    pub in_flight_peak: usize,
 }
 
 impl ServeSummary {
@@ -202,6 +207,8 @@ impl ServeSummary {
             evictions: m.evictions(),
             cold_load_s: m.cold_load_s(),
             dropped: m.dropped(),
+            queue_peak: m.queue_peak(),
+            in_flight_peak: m.in_flight_peak(),
         }
     }
 

@@ -3,6 +3,7 @@
 //! table of the paper's evaluation (§V, §VI), and the deterministic
 //! multi-core executor that fans the harness out over `--jobs` workers.
 
+pub mod bench;
 pub mod experiments;
 pub mod output;
 pub mod parallel;

@@ -1,0 +1,168 @@
+//! Indexed argmin over a dense array of f64 scores — a tournament
+//! (segment) tree giving O(log n) point updates and O(1) argmin with
+//! the *lowest-index* tie-break, exactly matching a left-to-right
+//! linear scan with strict `<`. The router's least-loaded policy keeps
+//! its per-worker pending-load estimates behind one of these so a
+//! dispatch over a large fleet no longer walks every worker.
+
+/// Sentinel for "no leaf below this node" (padding leaves of the
+/// power-of-two tree and the n = 0 edge case).
+const NONE: u32 = u32::MAX;
+
+/// Tournament tree over `n` scores. Ties resolve to the lowest index
+/// (left child wins on equal values), so `argmin()` is bit-identical
+/// to the naive first-strict-minimum scan the router used before.
+#[derive(Clone, Debug)]
+pub struct ArgminTree {
+    n: usize,
+    /// Power-of-two leaf span (>= n, >= 1).
+    size: usize,
+    /// Current leaf values.
+    vals: Vec<f64>,
+    /// Winner leaf index per tree node (1-based heap layout; leaves at
+    /// `size..size+n`, padding leaves hold [`NONE`]).
+    win: Vec<u32>,
+}
+
+impl ArgminTree {
+    /// Build over `n` leaves all holding `init`.
+    pub fn new(n: usize, init: f64) -> Self {
+        assert!(
+            n <= NONE as usize,
+            "ArgminTree index space is u32 ({n} leaves requested)"
+        );
+        let size = n.next_power_of_two().max(1);
+        let mut t = Self {
+            n,
+            size,
+            vals: vec![init; n],
+            win: vec![NONE; 2 * size],
+        };
+        for i in 0..n {
+            t.win[size + i] = i as u32;
+        }
+        for node in (1..size).rev() {
+            t.win[node] = t.winner(t.win[2 * node], t.win[2 * node + 1]);
+        }
+        t
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Current value at leaf `i`.
+    pub fn get(&self, i: usize) -> f64 {
+        self.vals[i]
+    }
+
+    fn winner(&self, a: u32, b: u32) -> u32 {
+        match (a, b) {
+            (NONE, b) => b,
+            (a, NONE) => a,
+            // `<=` prefers the left (lower-index) child on ties —
+            // the lowest-index argmin the linear scan produced.
+            (a, b) => {
+                if self.vals[a as usize] <= self.vals[b as usize] {
+                    a
+                } else {
+                    b
+                }
+            }
+        }
+    }
+
+    /// Set leaf `i` to `v` and rebuild its O(log n) path to the root.
+    pub fn update(&mut self, i: usize, v: f64) {
+        assert!(i < self.n, "ArgminTree::update: leaf {i} of {}", self.n);
+        self.vals[i] = v;
+        let mut node = (self.size + i) / 2;
+        while node >= 1 {
+            self.win[node] = self.winner(self.win[2 * node], self.win[2 * node + 1]);
+            node /= 2;
+        }
+    }
+
+    /// Index of the minimum value (lowest index on ties); `None` only
+    /// when the tree has no leaves.
+    pub fn argmin(&self) -> Option<usize> {
+        match self.win[1] {
+            NONE => None,
+            i => Some(i as usize),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The reference the router used before: first strict minimum.
+    fn linear_argmin(vals: &[f64]) -> Option<usize> {
+        let mut best = None;
+        let mut best_v = f64::INFINITY;
+        for (i, &v) in vals.iter().enumerate() {
+            if v < best_v {
+                best_v = v;
+                best = Some(i);
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        assert_eq!(ArgminTree::new(0, 0.0).argmin(), None);
+        let mut t = ArgminTree::new(1, 5.0);
+        assert_eq!(t.argmin(), Some(0));
+        t.update(0, -1.0);
+        assert_eq!(t.argmin(), Some(0));
+        assert_eq!(t.get(0), -1.0);
+    }
+
+    #[test]
+    fn ties_resolve_to_lowest_index() {
+        let mut t = ArgminTree::new(6, 3.0);
+        assert_eq!(t.argmin(), Some(0));
+        t.update(0, 7.0);
+        // remaining five all equal -> index 1
+        assert_eq!(t.argmin(), Some(1));
+        t.update(4, 3.0); // still tied with 1,2,3,5
+        assert_eq!(t.argmin(), Some(1));
+        t.update(3, 1.0);
+        assert_eq!(t.argmin(), Some(3));
+    }
+
+    #[test]
+    fn non_power_of_two_padding_is_inert() {
+        // 5 leaves in an 8-wide tree: padding must never win.
+        let mut t = ArgminTree::new(5, 0.0);
+        for i in 0..5 {
+            t.update(i, 10.0 + i as f64);
+        }
+        assert_eq!(t.argmin(), Some(0));
+        t.update(0, 100.0);
+        assert_eq!(t.argmin(), Some(1));
+    }
+
+    #[test]
+    fn property_matches_linear_scan_under_random_updates() {
+        crate::util::prop::check("argmin tree == linear scan", 200, |g| {
+            let n = g.size(1, 33);
+            let mut t = ArgminTree::new(n, 0.0);
+            let mut vals = vec![0.0f64; n];
+            for _ in 0..g.size(1, 80) {
+                let i = g.usize(0, n - 1);
+                // small integer-ish values force plenty of ties
+                let v = g.usize(0, 4) as f64;
+                t.update(i, v);
+                vals[i] = v;
+                assert_eq!(t.argmin(), linear_argmin(&vals));
+            }
+        });
+    }
+}

@@ -3,6 +3,7 @@
 //! PRNGs, JSON, CLI parsing, stats, tables, logging and a mini
 //! property-testing harness live here.
 
+pub mod argmin;
 pub mod cli;
 pub mod json;
 pub mod logger;

@@ -111,6 +111,20 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
     let mut v: Vec<f64> = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Linear-interpolated percentile over an already-sorted slice — the
+/// repeated-quantile fast path (callers that need several quantiles
+/// sort once and reuse; `percentile` pays the sort every call).
+pub fn percentile_sorted(v: &[f64], p: f64) -> f64 {
+    if v.is_empty() {
+        return f64::NAN;
+    }
+    debug_assert!(
+        v.windows(2).all(|w| w[0] <= w[1]),
+        "percentile_sorted: input not sorted"
+    );
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -208,6 +222,21 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 4.0);
         assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_sorted_matches_unsorted_entry_point() {
+        let xs = [9.0, 1.0, 5.0, 3.0, 7.0, 2.0];
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [0.0, 17.3, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(
+                percentile(&xs, p).to_bits(),
+                percentile_sorted(&sorted, p).to_bits(),
+                "p={p}"
+            );
+        }
+        assert!(percentile_sorted(&[], 50.0).is_nan());
     }
 
     #[test]

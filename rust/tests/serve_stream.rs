@@ -1,0 +1,244 @@
+//! Streaming-engine guard suite: the O(in-flight) open-loop engine
+//! must be *bit-identical* to the frozen eager reference
+//! (`DEdgeAi::run_events_eager`, the pre-streaming implementation kept
+//! for exactly this comparison) across the full serving configuration
+//! space, and its event heap must stay bounded by in-flight work.
+//! No AOT artifacts required (heuristic/placement schedulers only).
+
+use dedgeai::coordinator::arrivals::{ArrivalProcess, ZDist};
+use dedgeai::coordinator::placement::ModelDist;
+use dedgeai::coordinator::service::{DEdgeAi, ServeOptions};
+use dedgeai::coordinator::ServeMetrics;
+use dedgeai::util::prop;
+
+/// Assert every parity-relevant measure is bitwise equal. The queue /
+/// in-flight high-water marks are deliberately excluded: the eager
+/// reference queues all n arrivals up front, so its peak is O(n) by
+/// construction — that *difference* is asserted separately.
+fn assert_bit_identical(s: &ServeMetrics, e: &ServeMetrics, label: &str) {
+    assert_eq!(s.count(), e.count(), "{label}: count");
+    assert_eq!(s.per_worker(), e.per_worker(), "{label}: per_worker");
+    assert_eq!(s.dropped(), e.dropped(), "{label}: dropped");
+    assert_eq!(
+        s.makespan().to_bits(),
+        e.makespan().to_bits(),
+        "{label}: makespan {} vs {}",
+        s.makespan(),
+        e.makespan()
+    );
+    assert_eq!(
+        s.median_latency().to_bits(),
+        e.median_latency().to_bits(),
+        "{label}: p50"
+    );
+    assert_eq!(
+        s.p99_latency().to_bits(),
+        e.p99_latency().to_bits(),
+        "{label}: p99"
+    );
+    assert_eq!(
+        s.mean_latency().to_bits(),
+        e.mean_latency().to_bits(),
+        "{label}: mean TIS"
+    );
+    assert_eq!(
+        s.mean_queue_wait().to_bits(),
+        e.mean_queue_wait().to_bits(),
+        "{label}: queue wait"
+    );
+    assert_eq!(s.cache_hits(), e.cache_hits(), "{label}: cache hits");
+    assert_eq!(s.cache_misses(), e.cache_misses(), "{label}: cache misses");
+    assert_eq!(s.evictions(), e.evictions(), "{label}: evictions");
+    assert_eq!(
+        s.cold_load_s().to_bits(),
+        e.cold_load_s().to_bits(),
+        "{label}: cold load"
+    );
+}
+
+#[test]
+fn streaming_equals_eager_across_the_configuration_cross_product() {
+    // Property over (arrival process x z-dist x model-dist x policy x
+    // queue-cap x fleet x seed): the streaming engine and the eager
+    // reference must agree bit for bit. Placement-aware policies force
+    // placement on; a heterogeneous fleet keeps sd3-medium feasible.
+    prop::check("streaming == eager", 60, |g| {
+        let arrivals = match g.usize(0, 3) {
+            0 => ArrivalProcess::Batch,
+            1 => ArrivalProcess::Poisson { rate: g.f64(0.05, 0.6) },
+            2 => ArrivalProcess::Bursty {
+                rate: g.f64(0.1, 0.5),
+                burst: g.f64(2.0, 6.0),
+                dwell: g.f64(10.0, 60.0),
+            },
+            _ => ArrivalProcess::Diurnal {
+                rate: g.f64(0.1, 0.5),
+                period: g.f64(60.0, 400.0),
+                amp: g.f64(0.1, 0.9),
+            },
+        };
+        let z_dist = match g.usize(0, 2) {
+            0 => ZDist::Fixed(g.usize(5, 20)),
+            1 => ZDist::Uniform { lo: 5, hi: 15 },
+            _ => ZDist::Bimodal { lo: 5, hi: 15, p_hi: g.f64(0.1, 0.9) },
+        };
+        let policy = *g.choose(&[
+            "least-loaded",
+            "round-robin",
+            "random",
+            "cache-first",
+            "cache-ll",
+        ]);
+        let needs_placement = policy.starts_with("cache");
+        let with_placement = needs_placement || g.usize(0, 1) == 0;
+        let workers = g.usize(2, 6);
+        let (model_dist, worker_vram) = if with_placement {
+            let md = match g.usize(0, 2) {
+                0 => ModelDist::Fixed(0),
+                1 => ModelDist::Mix {
+                    ids: vec![0, 2],
+                    weights: vec![0.5, 0.5],
+                },
+                _ => ModelDist::Mix {
+                    ids: vec![0, 1, 2],
+                    weights: vec![0.45, 0.1, 0.45],
+                },
+            };
+            // 24 GB fleet with one 48 GB device so sd3-medium fits
+            let mut vram = vec![24.0; workers];
+            vram[workers - 1] = 48.0;
+            (Some(md), Some(vram))
+        } else {
+            (None, None)
+        };
+        let queue_cap = match g.usize(0, 2) {
+            0 => None,
+            _ => Some(g.usize(3, 40)),
+        };
+        let opts = ServeOptions {
+            workers,
+            requests: g.size(5, 120),
+            seed: g.usize(0, 10_000) as u64,
+            scheduler: policy.into(),
+            arrivals,
+            z_dist: Some(z_dist),
+            model_dist,
+            worker_vram,
+            replace_every: if with_placement && g.usize(0, 1) == 0 {
+                g.f64(100.0, 600.0)
+            } else {
+                0.0
+            },
+            queue_cap,
+            ..ServeOptions::default()
+        };
+        let label = format!(
+            "{} {} placement={} cap={:?}",
+            opts.arrivals.name(),
+            opts.scheduler,
+            with_placement,
+            opts.queue_cap
+        );
+        let sys = DEdgeAi::new(opts);
+        let streamed = sys.run_events().unwrap();
+        let eager = sys.run_events_eager().unwrap();
+        assert_bit_identical(&streamed, &eager, &label);
+    });
+}
+
+#[test]
+fn streaming_also_matches_the_legacy_batch_closed_loop() {
+    // Transitivity check on the Table V guard: batch closed loop ==
+    // eager events == streaming events, all bitwise.
+    let opts = ServeOptions {
+        requests: 100,
+        ..ServeOptions::default()
+    };
+    let sys = DEdgeAi::new(opts);
+    let batch = sys.run_batch().unwrap();
+    let eager = sys.run_events_eager().unwrap();
+    let streamed = sys.run_events().unwrap();
+    assert_bit_identical(&streamed, &eager, "stream vs eager");
+    assert_eq!(batch.per_worker(), streamed.per_worker());
+    assert_eq!(batch.makespan().to_bits(), streamed.makespan().to_bits());
+    assert_eq!(
+        batch.p99_latency().to_bits(),
+        streamed.p99_latency().to_bits()
+    );
+}
+
+#[test]
+fn event_queue_high_water_is_bounded_by_in_flight_work() {
+    // The acceptance property behind the million-request claim, at
+    // test scale: a long subcritical open-loop run keeps the heap at
+    // the in-flight population (+1 transient tick), independent of
+    // total requests; with admission control the bound is the cap.
+    let base = ServeOptions {
+        requests: 20_000,
+        arrivals: ArrivalProcess::Poisson { rate: 0.2 }, // rho ~ 0.73
+        ..ServeOptions::default()
+    };
+    let free = DEdgeAi::new(base.clone()).run_events().unwrap();
+    assert_eq!(free.count(), 20_000);
+    assert!(
+        free.queue_peak() <= free.in_flight_peak() + 1,
+        "queue peak {} vs in-flight peak {}",
+        free.queue_peak(),
+        free.in_flight_peak()
+    );
+    assert!(
+        free.queue_peak() < 500,
+        "subcritical run should hold a small heap, got {}",
+        free.queue_peak()
+    );
+
+    // overloaded but capped: the cap bounds the heap, not the offered
+    // traffic (2x capacity, 5k requests, cap 50)
+    let capped = DEdgeAi::new(ServeOptions {
+        requests: 5_000,
+        arrivals: ArrivalProcess::Poisson { rate: 0.55 },
+        queue_cap: Some(50),
+        ..ServeOptions::default()
+    })
+    .run_events()
+    .unwrap();
+    assert!(capped.dropped() > 0);
+    assert!(
+        capped.in_flight_peak() <= 50,
+        "cap violated: {}",
+        capped.in_flight_peak()
+    );
+    assert!(
+        capped.queue_peak() <= 51,
+        "queue peak {} not bounded by the cap",
+        capped.queue_peak()
+    );
+}
+
+/// Release-mode scale check of the acceptance criterion (`cargo test
+/// --release -- --ignored`): a million-request Poisson open-loop run
+/// completes with the heap bounded by in-flight work. Ignored by
+/// default — it is deliberately heavy for debug builds.
+#[test]
+#[ignore = "million-request scale check; run in release with --ignored"]
+fn million_request_open_loop_completes_with_bounded_queue() {
+    let m = DEdgeAi::new(ServeOptions {
+        requests: 1_000_000,
+        arrivals: ArrivalProcess::Poisson { rate: 0.25 }, // rho ~ 0.91
+        ..ServeOptions::default()
+    })
+    .run_events()
+    .unwrap();
+    assert_eq!(m.count(), 1_000_000);
+    assert!(
+        m.queue_peak() <= m.in_flight_peak() + 1,
+        "queue peak {} vs in-flight peak {}",
+        m.queue_peak(),
+        m.in_flight_peak()
+    );
+    assert!(
+        m.queue_peak() < 10_000,
+        "heap grew with total requests: {}",
+        m.queue_peak()
+    );
+}
