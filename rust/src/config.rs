@@ -322,8 +322,8 @@ pub struct ServeSweepConfig {
     /// Arrival rates in requests/second (`--rates`). Defaults span
     /// under- to over-load at the default fleet and z distribution.
     pub rates: Vec<f64>,
-    /// Scheduling policies (`--schedulers`). `lad-ts` is dropped with
-    /// a warning when AOT artifacts are unavailable.
+    /// Scheduling policies (`--schedulers`). `lad-ts` routes through
+    /// the native LADN fallback when AOT artifacts are unavailable.
     pub schedulers: Vec<String>,
     /// Fleet sizes in workers (`--fleets`).
     pub fleets: Vec<usize>,
@@ -446,6 +446,69 @@ impl PlacementSweepConfig {
     }
 }
 
+/// `exp topology-sweep` grid: transmission-aware open-loop serving
+/// measured over (arrival rate × dispatch policy × topology profile)
+/// on the event engine, fanned over the parallel executor. One worker
+/// per site (the five-Jetson deployment shape).
+#[derive(Clone, Debug)]
+pub struct TopologySweepConfig {
+    /// Arrival rates in requests/second (`--rates`).
+    pub rates: Vec<f64>,
+    /// Dispatch policies (`--schedulers`): the weak `random` baseline,
+    /// transmission-blind `least-loaded`, and transmission-aware
+    /// `net-ll`.
+    pub schedulers: Vec<String>,
+    /// Topology profiles (`--topology-profiles`, comma-separated):
+    /// uniform|lan|wan|star|degraded:<i>.
+    pub profiles: Vec<String>,
+    /// Edge sites (`--sites`); the sweep runs one worker per site.
+    pub sites: usize,
+    /// Requests simulated per grid cell (`--serve-requests`).
+    pub requests: usize,
+    /// Arrival-process kind (`--arrivals`): poisson|bursty|diurnal.
+    pub arrivals: String,
+    /// Quality-demand spec (`--z-dist`).
+    pub z_dist: String,
+}
+
+impl Default for TopologySweepConfig {
+    fn default() -> Self {
+        Self {
+            // rho ~ 0.5 / 0.9 at 5 workers, z ~ U[5,15]
+            rates: vec![0.2, 0.36],
+            schedulers: vec![
+                "random".into(),
+                "least-loaded".into(),
+                "net-ll".into(),
+            ],
+            profiles: vec![
+                "uniform".into(),
+                "lan".into(),
+                "wan".into(),
+                "degraded:0".into(),
+            ],
+            sites: 5,
+            requests: 200,
+            arrivals: "poisson".into(),
+            z_dist: "uniform:5,15".into(),
+        }
+    }
+}
+
+impl TopologySweepConfig {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("rates", Json::arr_f64(&self.rates)),
+            ("schedulers", Json::str(self.schedulers.join(","))),
+            ("profiles", Json::str(self.profiles.join(","))),
+            ("sites", Json::num(self.sites as f64)),
+            ("requests", Json::num(self.requests as f64)),
+            ("arrivals", Json::str(self.arrivals.clone())),
+            ("z_dist", Json::str(self.z_dist.clone())),
+        ])
+    }
+}
+
 /// Experiment-harness settings.
 #[derive(Clone, Debug)]
 pub struct ExpConfig {
@@ -468,6 +531,8 @@ pub struct ExpConfig {
     pub serve: ServeSweepConfig,
     /// Placement-aware serving sweep grid (`exp placement-sweep`).
     pub placement: PlacementSweepConfig,
+    /// Transmission-aware serving sweep grid (`exp topology-sweep`).
+    pub topology: TopologySweepConfig,
 }
 
 impl Default for ExpConfig {
@@ -481,6 +546,7 @@ impl Default for ExpConfig {
             jobs: 0,
             serve: ServeSweepConfig::default(),
             placement: PlacementSweepConfig::default(),
+            topology: TopologySweepConfig::default(),
         }
     }
 }
@@ -496,6 +562,7 @@ impl ExpConfig {
             ("jobs", Json::num(self.jobs as f64)),
             ("serve", self.serve.to_json()),
             ("placement", self.placement.to_json()),
+            ("topology", self.topology.to_json()),
         ])
     }
 }
@@ -604,6 +671,19 @@ mod tests {
         assert!(p.model_dists.len() >= 2, "need >=2 model mixes");
         assert!(p.requests > 0);
         assert!(p.to_json().get("vram_profiles").is_some());
+    }
+
+    #[test]
+    fn topology_sweep_defaults_form_a_grid() {
+        let t = TopologySweepConfig::default();
+        assert!(t.rates.len() >= 2);
+        assert!(t.schedulers.iter().any(|s| s == "net-ll"));
+        assert!(t.schedulers.iter().any(|s| s == "least-loaded"));
+        assert!(t.profiles.len() >= 3, "need >=3 topology profiles");
+        assert!(t.profiles.iter().any(|p| p == "wan"));
+        assert!(t.sites >= 2 && t.requests > 0);
+        assert_eq!(t.arrivals, "poisson");
+        assert!(t.to_json().get("profiles").is_some());
     }
 
     #[test]

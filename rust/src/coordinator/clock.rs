@@ -33,6 +33,19 @@ pub fn lan_seconds(bits: f64) -> f64 {
     LAN_RTT_S + bits / LAN_RATE_BPS
 }
 
+/// Generated-image payload model: base compressed size plus a
+/// per-denoise-step detail term (more steps sharpen detail that
+/// compresses worse). Calibrated so the default demand z = 15
+/// reproduces the legacy 0.8 Mbit constant *exactly* — pre-network
+/// runs at the default quality stay bit-identical.
+pub const IMAGE_BITS_BASE: f64 = 0.5e6;
+pub const IMAGE_BITS_PER_STEP: f64 = 20.0e3;
+
+/// Image-return payload in bits for quality demand `z`.
+pub fn image_bits(z: usize) -> f64 {
+    IMAGE_BITS_BASE + z as f64 * IMAGE_BITS_PER_STEP
+}
+
 /// Steady-state fleet capacity in images/second at mean quality
 /// demand `mean_z` — the saturation point of an open-loop arrival
 /// rate sweep (offered rate / capacity = utilization rho).
@@ -68,5 +81,14 @@ mod tests {
     fn lan_transfer_fast_but_nonzero() {
         let t = lan_seconds(8e5); // a generated image (~0.8 Mbit)
         assert!(t > 0.0 && t < 0.01);
+    }
+
+    #[test]
+    fn image_bits_reproduces_legacy_size_at_default_z() {
+        // The bit-stability anchor: z=15 must equal the old 0.8 Mbit
+        // constant exactly, and the size must grow with quality.
+        assert_eq!(image_bits(DEFAULT_Z).to_bits(), 0.8e6f64.to_bits());
+        assert!(image_bits(5) < image_bits(15));
+        assert!(image_bits(20) > image_bits(15));
     }
 }

@@ -25,6 +25,13 @@ pub enum Event {
     /// books the cold-load time into the metrics at the virtual
     /// timestamp the load actually completes.
     ModelLoaded { worker: usize, model: usize, delay: f64 },
+    /// An inter-site transfer leg finished on link `from → to`. The
+    /// delay was already charged into the request's timeline at
+    /// dispatch (upload brackets the front of compute, the image
+    /// return the back); this event books the traffic into the
+    /// per-link metrics at the virtual timestamp the leg completes.
+    /// Only the network subsystem emits these.
+    TransferDone { from: usize, to: usize, bits: f64, secs: f64 },
     /// Slow-timescale re-placement epoch tick (`--replace-every`).
     Replace,
 }
@@ -112,6 +119,7 @@ mod tests {
                 prompt: crate::coordinator::corpus::PromptDesc::default(),
                 z: 1,
                 model: 0,
+                origin: 0,
                 submitted_at: t,
             }),
         )
@@ -121,7 +129,9 @@ mod tests {
         match ev {
             Event::Arrival(r) => r.id,
             Event::Completion(r) => r.id,
-            Event::ModelLoaded { .. } | Event::Replace => u64::MAX,
+            Event::ModelLoaded { .. }
+            | Event::TransferDone { .. }
+            | Event::Replace => u64::MAX,
         }
     }
 

@@ -20,6 +20,10 @@ pub struct Request {
     /// [`Catalog`](super::placement::Catalog) (0 = reSD3-m, the
     /// paper's default deployment). Ignored when placement is off.
     pub model: usize,
+    /// Origin edge site: where the request entered the network
+    /// (index into the [`Topology`](super::network::Topology)).
+    /// Always 0 when the network subsystem is off (single site).
+    pub origin: usize,
     /// Submission time (seconds on the serving clock).
     pub submitted_at: f64,
 }
@@ -41,6 +45,10 @@ pub struct Response {
     pub queue_wait: f64,
     /// Pure generation time, seconds.
     pub gen_time: f64,
+    /// Transmission time (prompt upload + image return), seconds.
+    /// With `queue_wait` and `gen_time` this decomposes the paper's
+    /// service delay: latency = transmission + queuing + computation.
+    pub trans_time: f64,
     /// Checksum of the produced latent (integrity check; proves the
     /// compute actually ran through PJRT).
     pub checksum: f32,
@@ -57,11 +65,13 @@ mod tests {
             prompt: PromptDesc::from_indices(0, 0, 0),
             z: 15,
             model: 0,
+            origin: 0,
             submitted_at: 1.5,
         };
         assert_eq!(r.id, 7);
         assert_eq!(r.z, 15);
         assert_eq!(r.model, 0);
+        assert_eq!(r.origin, 0);
         assert!(r.prompt.len_bytes() > 0);
         let resp = Response {
             id: r.id,
@@ -71,6 +81,7 @@ mod tests {
             latency: 18.3,
             queue_wait: 0.0,
             gen_time: 18.3,
+            trans_time: 0.0,
             checksum: 0.5,
         };
         assert_eq!(resp.id, r.id);

@@ -1,12 +1,26 @@
 //! Serving metrics: latency distribution, throughput, per-worker load,
-//! and the steady-state measures used by the open-loop engine (p99,
-//! time-in-system, windowed throughput, per-worker utilization).
+//! the steady-state measures used by the open-loop engine (p99,
+//! time-in-system, windowed throughput, per-worker utilization), and
+//! the network subsystem's delay decomposition (transmission + queuing
+//! + computation = time-in-system) with per-link traffic accounting.
 
 use std::cell::RefCell;
+use std::collections::BTreeMap;
 
 use crate::util::stats::{percentile_sorted, Welford};
 
 use super::message::Response;
+
+/// Aggregate traffic on one directed site-to-site link.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LinkStat {
+    /// Payload bits moved over the link.
+    pub bits: f64,
+    /// Seconds the link spent busy (includes per-transfer RTT).
+    pub secs: f64,
+    /// Completed transfer legs.
+    pub transfers: u64,
+}
 
 #[derive(Clone, Debug)]
 pub struct ServeMetrics {
@@ -19,6 +33,14 @@ pub struct ServeMetrics {
     completions: Vec<f64>,
     queue_waits: Welford,
     gen_times: Welford,
+    /// Transmission time (prompt upload + image return) per request.
+    trans_times: Welford,
+    /// Max relative residual of the per-request decomposition identity
+    /// latency = queue_wait + gen_time + trans_time — asserted ≈0 by
+    /// the network test suite.
+    decomp_err: f64,
+    /// Per-link traffic (network runs only): (from, to) → stats.
+    links: BTreeMap<(usize, usize), LinkStat>,
     per_worker: Vec<u64>,
     /// Seconds each worker spent generating (for utilization).
     busy: Vec<f64>,
@@ -48,6 +70,9 @@ impl ServeMetrics {
             completions: Vec::new(),
             queue_waits: Welford::new(),
             gen_times: Welford::new(),
+            trans_times: Welford::new(),
+            decomp_err: 0.0,
+            links: BTreeMap::new(),
             per_worker: vec![0; workers],
             busy: vec![0.0; workers],
             first_submit: f64::INFINITY,
@@ -96,6 +121,13 @@ impl ServeMetrics {
         self.completions.push(completed_at);
         self.queue_waits.push(resp.queue_wait);
         self.gen_times.push(resp.gen_time);
+        self.trans_times.push(resp.trans_time);
+        // delay-decomposition residual (float association error only)
+        let residual = (resp.latency
+            - (resp.queue_wait + resp.gen_time + resp.trans_time))
+            .abs()
+            / resp.latency.abs().max(1.0);
+        self.decomp_err = self.decomp_err.max(residual);
         self.per_worker[resp.worker] += 1;
         self.busy[resp.worker] += resp.gen_time;
         self.first_submit = self
@@ -135,6 +167,33 @@ impl ServeMetrics {
     /// Record one request rejected by admission control.
     pub fn record_drop(&mut self) {
         self.dropped += 1;
+    }
+
+    /// Book one completed inter-site transfer leg into the per-link
+    /// accounting (the engine fires this from `Event::TransferDone`).
+    pub fn record_transfer(&mut self, from: usize, to: usize, bits: f64, secs: f64) {
+        let st = self.links.entry((from, to)).or_default();
+        st.bits += bits;
+        st.secs += secs;
+        st.transfers += 1;
+    }
+
+    /// Per-link traffic totals (empty when the network subsystem was
+    /// off), keyed by directed (from, to) site pair.
+    pub fn link_stats(&self) -> &BTreeMap<(usize, usize), LinkStat> {
+        &self.links
+    }
+
+    /// Mean transmission time (prompt upload + image return), seconds.
+    pub fn mean_trans_time(&self) -> f64 {
+        self.trans_times.mean()
+    }
+
+    /// Max relative residual of latency = transmission + queuing +
+    /// computation across all recorded requests (≈0 up to float
+    /// association error; the network suite asserts it).
+    pub fn decomposition_error(&self) -> f64 {
+        self.decomp_err
     }
 
     /// Note the engine's current event-queue length and in-flight
@@ -325,6 +384,7 @@ mod tests {
             latency,
             queue_wait: latency * 0.3,
             gen_time: latency * 0.7,
+            trans_time: 0.0,
             checksum: 0.0,
         }
     }
@@ -436,6 +496,7 @@ mod tests {
                 latency: 10.0,
                 queue_wait: 3.0,
                 gen_time: 7.0,
+                trans_time: 0.0,
                 checksum: 0.0,
             },
             10.0,
@@ -444,6 +505,54 @@ mod tests {
         assert!((u[0] - 0.7).abs() < 1e-9, "u={u:?}");
         assert_eq!(u[1], 0.0);
         assert!((m.mean_utilization() - 0.35).abs() < 1e-9);
+    }
+
+    #[test]
+    fn link_and_decomposition_accounting() {
+        let mut m = ServeMetrics::new(1);
+        assert!(m.link_stats().is_empty());
+        assert_eq!(m.decomposition_error(), 0.0);
+        m.record_transfer(0, 1, 1.0e6, 0.1);
+        m.record_transfer(0, 1, 2.0e6, 0.2);
+        m.record_transfer(1, 0, 0.5e6, 0.05);
+        let st = m.link_stats()[&(0, 1)];
+        assert_eq!(st.transfers, 2);
+        assert!((st.bits - 3.0e6).abs() < 1e-6);
+        assert!((st.secs - 0.3).abs() < 1e-12);
+        assert_eq!(m.link_stats()[&(1, 0)].transfers, 1);
+        // a response whose legs sum exactly leaves no residual...
+        m.record(
+            &Response {
+                id: 0,
+                worker: 0,
+                z: 15,
+                model: 0,
+                latency: 10.0,
+                queue_wait: 2.5,
+                gen_time: 7.0,
+                trans_time: 0.5,
+                checksum: 0.0,
+            },
+            10.0,
+        );
+        assert!(m.decomposition_error() < 1e-12);
+        assert!((m.mean_trans_time() - 0.5).abs() < 1e-12);
+        // ...and one that violates the identity is caught
+        m.record(
+            &Response {
+                id: 1,
+                worker: 0,
+                z: 15,
+                model: 0,
+                latency: 10.0,
+                queue_wait: 1.0,
+                gen_time: 7.0,
+                trans_time: 0.5,
+                checksum: 0.0,
+            },
+            20.0,
+        );
+        assert!(m.decomposition_error() > 0.1);
     }
 
     #[test]

@@ -27,6 +27,12 @@
 //!   budgets over LRU model caches charging cold-load delays in
 //!   virtual time, per-request model demand (`--model-dist`), and the
 //!   slow-timescale re-placement hook (after arXiv:2411.01458);
+//! - [`network`]: the inter-edge network — N edge sites with a
+//!   bandwidth/latency matrix (named profiles: uniform/lan/wan/star/
+//!   degraded, `--bw-matrix` overrides), workers pinned to sites,
+//!   requests originating at seeded sites, and prompt-upload /
+//!   image-return legs charged in virtual time so service delay
+//!   decomposes into transmission + queuing + computation;
 //! - [`corpus`]: the synthetic caption corpus standing in for
 //!   Flickr8k (hot paths carry a `Copy` [`corpus::PromptDesc`]; text
 //!   is rehydrated only on the real-time PJRT path);
@@ -47,6 +53,7 @@ pub mod events;
 pub mod message;
 pub mod metrics;
 pub mod models;
+pub mod network;
 pub mod placement;
 pub mod platforms;
 pub mod router;
@@ -60,5 +67,6 @@ pub use events::{Event, EventQueue};
 pub use message::{Request, Response};
 pub use source::RequestSource;
 pub use metrics::ServeMetrics;
+pub use network::{NetOptions, Network, Topology};
 pub use placement::{Catalog, ModelDist, Placement};
 pub use service::{serve_and_report, DEdgeAi, ServeOptions};

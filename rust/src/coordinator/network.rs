@@ -1,0 +1,470 @@
+//! Inter-edge network: the transmission side of the offloading problem.
+//!
+//! The paper's service delay is explicitly *transmission + queuing +
+//! computation*: a task arrives at a local edge site and is either
+//! served there or offloaded to a peer, paying the prompt-upload and
+//! image-return costs over heterogeneous links (DEdgeAI itself is five
+//! Jetsons on a real Gigabit LAN, §VI.A). PRs 2–4 modelled only the
+//! compute/queue terms — every request reached a central router for
+//! free. This module opens the transmission axis:
+//!
+//! - [`Topology`]: an N-site bandwidth/latency matrix built from named
+//!   profiles (`--topology uniform|lan|wan|star|degraded:<i>`), with
+//!   heterogeneous bandwidth overrides via `--bw-matrix`;
+//! - [`Network`]: the per-run view — the topology plus the worker →
+//!   site pinning (`--site-of`; default `w % sites`) — that converts a
+//!   (request origin, candidate worker) pair into upload/return
+//!   transfer times;
+//! - [`NetOptions`]: the unvalidated CLI/sweep-facing spec carried on
+//!   `ServeOptions` (`None` = the pre-network engine, bit-identical).
+//!
+//! Delay model: a transfer of `bits` over link (i, j) costs
+//! `rtt(i,j) + bits / bw(i,j)` virtual seconds. Intra-site links (and
+//! every link of the `uniform` profile) use the §VI.A Gigabit LAN
+//! calibration from [`clock`], which makes the single-site `uniform`
+//! topology reproduce the pre-network engine *bitwise* — the parity
+//! contract `rust/tests/serve_network.rs` enforces. The scenario axis
+//! (LAN vs WAN vs degraded backhauls) follows the edge-offloading
+//! settings of EAT (arXiv:2507.10026) and the 6G-MEC formulation
+//! (arXiv:2312.06203).
+
+use anyhow::{bail, Context, Result};
+
+use super::clock;
+use super::message::Request;
+
+/// Inter-site link grade of the `lan` profile (multi-switch campus:
+/// same Gigabit rate as the intra-site hop, a little more latency).
+pub const INTER_LAN_BW_BPS: f64 = 1.0e9;
+pub const INTER_LAN_RTT_S: f64 = 0.005;
+/// Inter-site link grade of the `wan` profile (metro/backbone hop:
+/// 50 Mbps effective, 80 ms RTT — image returns become visible).
+pub const WAN_BW_BPS: f64 = 50.0e6;
+pub const WAN_RTT_S: f64 = 0.08;
+/// `star` profile: leaf ↔ hub (site 0) link grade.
+pub const STAR_HUB_BW_BPS: f64 = 1.0e9;
+pub const STAR_HUB_RTT_S: f64 = 0.01;
+/// `star` profile: leaf ↔ leaf traffic relays through the hub — half
+/// the rate, twice the latency.
+pub const STAR_LEAF_BW_BPS: f64 = 500.0e6;
+pub const STAR_LEAF_RTT_S: f64 = 0.02;
+/// `degraded:<i>` profile: every link touching site `i` collapses to a
+/// failing backhaul.
+pub const DEGRADED_BW_BPS: f64 = 25.0e6;
+pub const DEGRADED_RTT_S: f64 = 0.12;
+
+/// N-site bandwidth/latency matrix. Links are directed (the `--bw-matrix`
+/// override can make them asymmetric); every named profile is symmetric.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    sites: usize,
+    /// Row-major `sites × sites` link bandwidths, bits/second.
+    bw: Vec<f64>,
+    /// Row-major `sites × sites` link round-trip latencies, seconds.
+    rtt: Vec<f64>,
+    label: String,
+}
+
+impl Topology {
+    /// Build from a per-pair link model `(bw_bps, rtt_s) = link(from, to)`.
+    fn from_link_fn(
+        sites: usize,
+        label: String,
+        link: impl Fn(usize, usize) -> (f64, f64),
+    ) -> Self {
+        let mut bw = Vec::with_capacity(sites * sites);
+        let mut rtt = Vec::with_capacity(sites * sites);
+        for from in 0..sites {
+            for to in 0..sites {
+                let (b, r) = link(from, to);
+                bw.push(b);
+                rtt.push(r);
+            }
+        }
+        Self { sites, bw, rtt, label }
+    }
+
+    /// Parse a `--topology` profile spec:
+    /// `uniform` | `lan` | `wan` | `star` | `degraded[:<site>]`.
+    ///
+    /// Every profile uses the §VI.A LAN link for intra-site transfers;
+    /// `uniform` uses it for *all* pairs, which is what makes a
+    /// uniform topology bit-identical to the pre-network engine.
+    pub fn parse(spec: &str, sites: usize) -> Result<Self> {
+        if sites == 0 {
+            bail!("topology needs at least one site");
+        }
+        let lan = (clock::LAN_RATE_BPS, clock::LAN_RTT_S);
+        let (kind, rest) = spec.trim().split_once(':').unwrap_or((spec.trim(), ""));
+        if !rest.is_empty() && kind != "degraded" {
+            bail!(
+                "topology profile '{kind}' takes no ':' parameter (got '{spec}'); \
+                 only degraded:<site> is parameterized"
+            );
+        }
+        let t = match kind {
+            "uniform" => {
+                Self::from_link_fn(sites, "uniform".into(), |_, _| lan)
+            }
+            "lan" => Self::from_link_fn(sites, "lan".into(), |a, b| {
+                if a == b {
+                    lan
+                } else {
+                    (INTER_LAN_BW_BPS, INTER_LAN_RTT_S)
+                }
+            }),
+            "wan" => Self::from_link_fn(sites, "wan".into(), |a, b| {
+                if a == b {
+                    lan
+                } else {
+                    (WAN_BW_BPS, WAN_RTT_S)
+                }
+            }),
+            "star" => Self::from_link_fn(sites, "star".into(), |a, b| {
+                if a == b {
+                    lan
+                } else if a == 0 || b == 0 {
+                    (STAR_HUB_BW_BPS, STAR_HUB_RTT_S)
+                } else {
+                    (STAR_LEAF_BW_BPS, STAR_LEAF_RTT_S)
+                }
+            }),
+            "degraded" => {
+                let i: usize = if rest.is_empty() {
+                    0
+                } else {
+                    rest.trim().parse().with_context(|| {
+                        format!("bad degraded site index in '{spec}'")
+                    })?
+                };
+                if i >= sites {
+                    bail!(
+                        "degraded site {i} out of range for {sites} site(s)"
+                    );
+                }
+                Self::from_link_fn(sites, format!("degraded:{i}"), |a, b| {
+                    if a == b {
+                        lan
+                    } else if a == i || b == i {
+                        (DEGRADED_BW_BPS, DEGRADED_RTT_S)
+                    } else {
+                        (INTER_LAN_BW_BPS, INTER_LAN_RTT_S)
+                    }
+                })
+            }
+            other => bail!(
+                "unknown topology profile '{other}' \
+                 (uniform|lan|wan|star|degraded:<site>)"
+            ),
+        };
+        Ok(t)
+    }
+
+    /// Apply a heterogeneous bandwidth override (`--bw-matrix`): a
+    /// `sites × sites` matrix in Mbps, rows separated by ';', entries
+    /// by ','. RTTs keep the profile's values.
+    pub fn apply_bw_matrix(&mut self, spec: &str) -> Result<()> {
+        let rows: Vec<&str> = spec.split(';').collect();
+        if rows.len() != self.sites {
+            bail!(
+                "--bw-matrix has {} row(s) for {} site(s)",
+                rows.len(),
+                self.sites
+            );
+        }
+        let mut bw = Vec::with_capacity(self.sites * self.sites);
+        for row in rows {
+            let vals = row
+                .split(',')
+                .map(|p| {
+                    p.trim().parse::<f64>().with_context(|| {
+                        format!("--bw-matrix: bad Mbps value '{p}'")
+                    })
+                })
+                .collect::<Result<Vec<f64>>>()?;
+            if vals.len() != self.sites {
+                bail!(
+                    "--bw-matrix row '{row}' has {} entries for {} site(s)",
+                    vals.len(),
+                    self.sites
+                );
+            }
+            if vals.iter().any(|&v| !(v > 0.0) || !v.is_finite()) {
+                bail!("--bw-matrix: bandwidths must be positive Mbps");
+            }
+            bw.extend(vals.iter().map(|v| v * 1.0e6));
+        }
+        self.bw = bw;
+        self.label = format!("{}+bw-matrix", self.label);
+        Ok(())
+    }
+
+    pub fn sites(&self) -> usize {
+        self.sites
+    }
+
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    pub fn bw_bps(&self, from: usize, to: usize) -> f64 {
+        self.bw[from * self.sites + to]
+    }
+
+    pub fn rtt_s(&self, from: usize, to: usize) -> f64 {
+        self.rtt[from * self.sites + to]
+    }
+
+    /// Virtual-time cost of moving `bits` over link (from, to):
+    /// `rtt + bits / bw` — the same arithmetic as
+    /// [`clock::lan_seconds`], so a LAN-grade link is bit-identical to
+    /// the pre-network transfer model.
+    pub fn transfer_seconds(&self, from: usize, to: usize, bits: f64) -> f64 {
+        let i = from * self.sites + to;
+        self.rtt[i] + bits / self.bw[i]
+    }
+}
+
+/// Unvalidated network spec carried on `ServeOptions` (`None` keeps
+/// the pre-network engine bit-identical). Validated into a [`Network`]
+/// by `DEdgeAi::make_network` at run start.
+#[derive(Clone, Debug)]
+pub struct NetOptions {
+    /// Number of edge sites (`--sites`; the CLI defaults it to the
+    /// fleet size, one site per worker like the five-Jetson testbed).
+    pub sites: usize,
+    /// Named link profile (`--topology`):
+    /// uniform|lan|wan|star|degraded:<i>.
+    pub profile: String,
+    /// Worker → site pinning (`--site-of`, one entry per worker);
+    /// `None` = round-robin `w % sites`.
+    pub site_of: Option<Vec<usize>>,
+    /// Heterogeneous bandwidth override (`--bw-matrix`), Mbps rows.
+    pub bw_matrix: Option<String>,
+}
+
+impl NetOptions {
+    /// Convenience for sweeps/bench: a profile over `sites` sites with
+    /// default pinning and no overrides.
+    pub fn profile_only(profile: &str, sites: usize) -> Self {
+        Self {
+            sites,
+            profile: profile.into(),
+            site_of: None,
+            bw_matrix: None,
+        }
+    }
+
+    /// Validate into the per-run [`Network`] for a `workers`-sized fleet.
+    pub fn build(&self, workers: usize) -> Result<Network> {
+        let mut topo = Topology::parse(&self.profile, self.sites)?;
+        if let Some(spec) = &self.bw_matrix {
+            topo.apply_bw_matrix(spec)?;
+        }
+        let site_of = match &self.site_of {
+            Some(v) => {
+                if v.len() != workers {
+                    bail!(
+                        "--site-of lists {} site(s) for {} worker(s)",
+                        v.len(),
+                        workers
+                    );
+                }
+                v.clone()
+            }
+            None => (0..workers).map(|w| w % self.sites).collect(),
+        };
+        Network::new(topo, site_of)
+    }
+}
+
+/// Per-run network view: the topology plus the worker → site pinning.
+/// This is what the engine and the transmission-aware policies consult
+/// — the network analogue of [`super::placement::Placement`].
+#[derive(Clone, Debug)]
+pub struct Network {
+    topo: Topology,
+    /// `site_of[w]` = the edge site worker `w` is pinned to.
+    site_of: Vec<usize>,
+}
+
+impl Network {
+    pub fn new(topo: Topology, site_of: Vec<usize>) -> Result<Self> {
+        if site_of.is_empty() {
+            bail!("network needs at least one worker pinning");
+        }
+        if let Some(&bad) = site_of.iter().find(|&&s| s >= topo.sites()) {
+            bail!(
+                "--site-of pins a worker to site {bad}, but the topology \
+                 has {} site(s)",
+                topo.sites()
+            );
+        }
+        Ok(Self { topo, site_of })
+    }
+
+    pub fn sites(&self) -> usize {
+        self.topo.sites()
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// Site worker `w` is pinned to.
+    pub fn site(&self, w: usize) -> usize {
+        self.site_of[w]
+    }
+
+    /// Prompt-upload payload for one request, bits.
+    pub fn up_bits(req: &Request) -> f64 {
+        req.prompt.len_bytes() as f64 * 8.0
+    }
+
+    /// Image-return payload for one request, bits (z-derived).
+    pub fn down_bits(req: &Request) -> f64 {
+        clock::image_bits(req.z)
+    }
+
+    /// Prompt-upload time: origin site → worker `w`'s site.
+    pub fn up_seconds(&self, req: &Request, w: usize) -> f64 {
+        self.topo
+            .transfer_seconds(req.origin, self.site_of[w], Self::up_bits(req))
+    }
+
+    /// Image-return time: worker `w`'s site → origin site.
+    pub fn down_seconds(&self, req: &Request, w: usize) -> f64 {
+        self.topo
+            .transfer_seconds(self.site_of[w], req.origin, Self::down_bits(req))
+    }
+
+    /// Expected transfer cost of serving `req` on worker `w` (upload +
+    /// return) — the `net-ll` dispatch penalty and the origin-site
+    /// term in the LAD policy's state features.
+    pub fn round_trip_s(&self, req: &Request, w: usize) -> f64 {
+        self.up_seconds(req, w) + self.down_seconds(req, w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::corpus::PromptDesc;
+
+    fn req(origin: usize, z: usize) -> Request {
+        Request {
+            id: 0,
+            prompt: PromptDesc::default(),
+            z,
+            model: 0,
+            origin,
+            submitted_at: 0.0,
+        }
+    }
+
+    #[test]
+    fn uniform_links_are_bitwise_the_lan_model() {
+        let t = Topology::parse("uniform", 4).unwrap();
+        for bits in [320.0, 0.8e6, 5.0e6] {
+            for (a, b) in [(0, 0), (1, 3), (2, 0)] {
+                assert_eq!(
+                    t.transfer_seconds(a, b, bits).to_bits(),
+                    clock::lan_seconds(bits).to_bits(),
+                    "({a},{b}) bits={bits}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn profiles_order_intra_before_inter() {
+        for spec in ["lan", "wan", "star", "degraded:1"] {
+            let t = Topology::parse(spec, 3).unwrap();
+            let intra = t.transfer_seconds(1, 1, 0.8e6);
+            let inter = t.transfer_seconds(1, 2, 0.8e6);
+            assert!(
+                intra < inter,
+                "{spec}: intra {intra} not cheaper than inter {inter}"
+            );
+        }
+    }
+
+    #[test]
+    fn star_relays_leaf_traffic_through_the_hub() {
+        let t = Topology::parse("star", 4).unwrap();
+        let leaf_hub = t.transfer_seconds(2, 0, 0.8e6);
+        let leaf_leaf = t.transfer_seconds(2, 3, 0.8e6);
+        assert!(leaf_hub < leaf_leaf, "hub {leaf_hub} vs leaf {leaf_leaf}");
+    }
+
+    #[test]
+    fn degraded_slows_only_links_touching_the_site() {
+        let t = Topology::parse("degraded:1", 3).unwrap();
+        assert_eq!(t.bw_bps(0, 1), DEGRADED_BW_BPS);
+        assert_eq!(t.bw_bps(1, 2), DEGRADED_BW_BPS);
+        assert_eq!(t.rtt_s(2, 1), DEGRADED_RTT_S);
+        // the healthy pair keeps the lan inter-site grade
+        assert_eq!(t.bw_bps(0, 2), INTER_LAN_BW_BPS);
+        assert_eq!(t.rtt_s(2, 0), INTER_LAN_RTT_S);
+        // bare spec defaults to site 0
+        let d0 = Topology::parse("degraded", 2).unwrap();
+        assert_eq!(d0.bw_bps(0, 1), DEGRADED_BW_BPS);
+        assert!(Topology::parse("degraded:5", 3).is_err());
+        assert!(Topology::parse("nope", 3).is_err());
+        assert!(Topology::parse("uniform", 0).is_err());
+        // only degraded takes a ':' parameter — 'wan:100' must not be
+        // silently accepted as plain wan
+        assert!(Topology::parse("wan:100", 3).is_err());
+        assert!(Topology::parse("uniform:2", 3).is_err());
+    }
+
+    #[test]
+    fn bw_matrix_overrides_bandwidth_and_keeps_rtt() {
+        let mut t = Topology::parse("wan", 2).unwrap();
+        t.apply_bw_matrix("1000,200;150,1000").unwrap();
+        assert_eq!(t.bw_bps(0, 1), 200.0e6);
+        assert_eq!(t.bw_bps(1, 0), 150.0e6); // asymmetric links allowed
+        assert_eq!(t.bw_bps(0, 0), 1000.0e6);
+        assert_eq!(t.rtt_s(0, 1), WAN_RTT_S); // rtt untouched
+        assert!(t.label().contains("bw-matrix"));
+        // dimension / value errors
+        let mut t = Topology::parse("wan", 2).unwrap();
+        assert!(t.apply_bw_matrix("1000,200").is_err());
+        assert!(t.apply_bw_matrix("1000;200").is_err());
+        assert!(t.apply_bw_matrix("1000,0;150,1000").is_err());
+        assert!(t.apply_bw_matrix("1000,x;150,1000").is_err());
+    }
+
+    #[test]
+    fn net_options_build_pins_round_robin_by_default() {
+        let net = NetOptions::profile_only("lan", 2).build(5).unwrap();
+        assert_eq!(
+            (0..5).map(|w| net.site(w)).collect::<Vec<_>>(),
+            vec![0, 1, 0, 1, 0]
+        );
+        // explicit pinning is validated
+        let mut opts = NetOptions::profile_only("lan", 2);
+        opts.site_of = Some(vec![0, 1, 1]);
+        assert!(opts.build(5).is_err(), "length mismatch");
+        opts.site_of = Some(vec![0, 1, 1, 0, 7]);
+        assert!(opts.build(5).is_err(), "site out of range");
+    }
+
+    #[test]
+    fn round_trip_composes_upload_and_return() {
+        let net = NetOptions::profile_only("wan", 3).build(3).unwrap();
+        let r = req(1, 15);
+        // worker 1 is local to origin site 1, worker 2 is remote
+        let local = net.round_trip_s(&r, 1);
+        let remote = net.round_trip_s(&r, 2);
+        assert!(local < remote);
+        assert_eq!(
+            net.round_trip_s(&r, 2).to_bits(),
+            (net.up_seconds(&r, 2) + net.down_seconds(&r, 2)).to_bits()
+        );
+        // return payload is z-derived: higher quality, bigger image
+        let big = req(1, 15);
+        let small = req(1, 5);
+        assert!(net.down_seconds(&big, 2) > net.down_seconds(&small, 2));
+    }
+}

@@ -13,23 +13,40 @@
 //!   denoise-steps *plus* the expected cold-load penalty (seconds
 //!   converted to step units), so a lightly warmer worker can beat an
 //!   idle cold one exactly when the load cost says so;
+//! - `NetLl` — transmission-aware least-loaded: pending denoise-steps
+//!   plus the expected transfer time (prompt upload + image return
+//!   from the request's *origin site*, in step units) plus — when
+//!   placement is on — the cold-load penalty, so a nearby warm worker
+//!   beats a distant idle one exactly when the link costs say so;
 //! - `LadTs` — the paper's scheduler: the LADN diffusion actor runs on
 //!   the request path through the AOT `ladn_actor_fwd_b{W}` graph
-//!   (PJRT), seeded from the latent action memory; parameters come
-//!   from a training checkpoint when provided, otherwise fresh init
-//!   (the online system would keep training them).
+//!   (PJRT) when artifacts are available, or through the bit-compatible
+//!   native reverse diffusion ([`crate::nn::diffusion::actor_forward`])
+//!   when they are not — so `lad-ts` works in artifact-free sweeps and
+//!   CI smoke runs. Seeded from the latent action memory; parameters
+//!   come from a training checkpoint when provided, otherwise fresh
+//!   init (the online system would keep training them).
 //!
 //! When a [`Placement`] is provided, every policy respects the
 //! feasibility mask: a worker whose VRAM budget cannot hold the
 //! request's model is never picked (a 16 GB device simply cannot serve
-//! SD3-medium — the §VI.C constraint that motivated reSD3-m).
+//! SD3-medium — the §VI.C constraint that motivated reSD3-m). For the
+//! LAD policy the mask is applied to π *before* the categorical draw,
+//! renormalising over the feasible fleet. When a [`Network`] is
+//! provided, the cost-aware policies fold the origin-site transfer
+//! terms into their estimates — for lad-ts this happens for *any*
+//! configured topology, `uniform` included, so lad-ts routing under a
+//! uniform topology intentionally differs from a network-free run
+//! (the engine-level uniform≡plain bit-parity contract covers the
+//! transfer-cost-blind policies).
 
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
 use crate::agents::latent::LatentMemory;
-use crate::nn::Mat;
+use crate::nn::diffusion::{actor_forward, ActorScratch, BetaSchedule};
+use crate::nn::{Mat, Mlp};
 use crate::runtime::{ActorFwdExec, Manifest, TrainState, XlaRuntime};
 use crate::util::argmin::ArgminTree;
 use crate::util::json::Json;
@@ -37,6 +54,7 @@ use crate::util::rng::Rng;
 
 use super::clock;
 use super::message::Request;
+use super::network::Network;
 use super::placement::Placement;
 
 /// Routing policy selector.
@@ -49,6 +67,9 @@ pub enum Policy {
     CacheFirst,
     /// Least-loaded with the cold-load penalty added to the estimate.
     CacheLl,
+    /// Least-loaded with the expected transfer time (and cold-load
+    /// penalty, when placement is on) added to the estimate.
+    NetLl,
     LadTs(Box<LadPolicy>),
 }
 
@@ -60,7 +81,8 @@ impl Policy {
             Policy::Random(_) => "random",
             Policy::CacheFirst => "cache-first",
             Policy::CacheLl => "cache-ll",
-            Policy::LadTs(_) => "LAD-TS (LADN via PJRT)",
+            Policy::NetLl => "net-ll",
+            Policy::LadTs(p) => p.backend_name(),
         }
     }
 }
@@ -86,10 +108,31 @@ fn argmin(
     best
 }
 
+/// Native-fallback hyper-parameters: the Table IV defaults the AOT
+/// artifacts are built with (hidden width, timestep embedding, I,
+/// VP-SDE β range), so the fallback runs the same architecture.
+const NATIVE_HIDDEN: usize = 20;
+const NATIVE_TEMB_DIM: usize = 16;
+const NATIVE_STEPS: usize = 5;
+const NATIVE_BETA_MIN: f64 = 0.1;
+const NATIVE_BETA_MAX: f64 = 10.0;
+
+/// Where the LADN reverse diffusion runs.
+enum LadBackend {
+    /// The deployed path: the AOT `ladn_actor_fwd_b{W}` graph on PJRT.
+    Xla { exec: ActorFwdExec, state: TrainState },
+    /// Artifact-free fallback: the bit-compatible native forward
+    /// ([`actor_forward`]) over a fresh-init ε-MLP.
+    Native {
+        mlp: Mlp,
+        sched: BetaSchedule,
+        scratch: ActorScratch,
+    },
+}
+
 /// The LADN actor wired to the routing state space.
 pub struct LadPolicy {
-    exec: ActorFwdExec,
-    state: TrainState,
+    backend: LadBackend,
     mem: LatentMemory,
     rng: Rng,
     workers: usize,
@@ -98,31 +141,65 @@ pub struct LadPolicy {
 }
 
 impl LadPolicy {
-    /// Build from artifacts; requires the `ladn_actor_fwd_b{workers}`
-    /// graph (aot.py emits B=5 for the five-Jetson prototype).
+    /// Build from artifacts (the `ladn_actor_fwd_b{workers}` graph;
+    /// aot.py emits B=5 for the five-Jetson prototype), or — when
+    /// `rt` is `None` — fall back to the native reverse diffusion so
+    /// `lad-ts` stays routable in artifact-free sweeps and CI runs.
     pub fn new(
-        rt: &XlaRuntime,
+        rt: Option<&XlaRuntime>,
         workers: usize,
         checkpoint: Option<&Path>,
         seed: u64,
     ) -> Result<Self> {
-        let fwd_name = Manifest::ladn_fwd(workers, 5);
-        let exec = ActorFwdExec::new(rt, &fwd_name).with_context(|| {
-            format!("LADN graph for {workers} workers not in artifacts")
-        })?;
-        let train_spec = rt
-            .manifest
-            .graph(&Manifest::ladn_train(workers, 5, true, false))?
-            .clone();
         let mut rng = Rng::new(seed);
-        let mut state = TrainState::init(&train_spec, 0.05, &mut rng)?;
-        if let Some(path) = checkpoint {
-            state.load_json(&Json::read_file(path)?)?;
-            log::info!("router: loaded LADN checkpoint {}", path.display());
-        }
+        let backend = match rt {
+            Some(rt) => {
+                let fwd_name = Manifest::ladn_fwd(workers, 5);
+                let exec = ActorFwdExec::new(rt, &fwd_name).with_context(|| {
+                    format!("LADN graph for {workers} workers not in artifacts")
+                })?;
+                let train_spec = rt
+                    .manifest
+                    .graph(&Manifest::ladn_train(workers, 5, true, false))?
+                    .clone();
+                let mut state = TrainState::init(&train_spec, 0.05, &mut rng)?;
+                if let Some(path) = checkpoint {
+                    state.load_json(&Json::read_file(path)?)?;
+                    log::info!(
+                        "router: loaded LADN checkpoint {}",
+                        path.display()
+                    );
+                }
+                LadBackend::Xla { exec, state }
+            }
+            None => {
+                if let Some(path) = checkpoint {
+                    bail!(
+                        "cannot load LADN checkpoint {} without AOT \
+                         artifacts (the native fallback is fresh-init)",
+                        path.display()
+                    );
+                }
+                let s_dim = workers + 2;
+                let mlp = Mlp::init(
+                    &mut rng,
+                    workers + NATIVE_TEMB_DIM + s_dim,
+                    NATIVE_HIDDEN,
+                    workers,
+                );
+                LadBackend::Native {
+                    mlp,
+                    sched: BetaSchedule::new(
+                        NATIVE_STEPS,
+                        NATIVE_BETA_MIN,
+                        NATIVE_BETA_MAX,
+                    ),
+                    scratch: ActorScratch::default(),
+                }
+            }
+        };
         Ok(Self {
-            exec,
-            state,
+            backend,
             mem: LatentMemory::new(1, workers),
             rng,
             workers,
@@ -130,25 +207,116 @@ impl LadPolicy {
         })
     }
 
-    /// One routing decision via reverse diffusion on the PJRT path.
-    fn pick(&mut self, req: &Request, pending_steps: &[f64]) -> Result<usize> {
+    /// Display name keyed by backend (the report's scheduler line).
+    pub fn backend_name(&self) -> &'static str {
+        match self.backend {
+            LadBackend::Xla { .. } => "LAD-TS (LADN via PJRT)",
+            LadBackend::Native { .. } => "LAD-TS (native LADN)",
+        }
+    }
+
+    /// One reverse-diffusion pass on whichever backend is loaded;
+    /// `x` is consumed and returned as x_0 alongside π.
+    fn forward(&mut self, x: Mat, s: &Mat) -> Result<(Mat, Mat)> {
+        match &mut self.backend {
+            LadBackend::Xla { exec, state } => {
+                let params = state.mlp_tensors("actor")?;
+                exec.run(&params, Some(&x), s, Some(&mut self.rng))
+            }
+            LadBackend::Native { mlp, sched, scratch } => {
+                let mut x = x;
+                let mut noise = Vec::with_capacity(sched.steps());
+                for _ in 0..sched.steps() {
+                    let mut m = Mat::zeros(1, self.workers);
+                    self.rng.fill_normal(&mut m.data);
+                    noise.push(m);
+                }
+                let pi = actor_forward(
+                    mlp,
+                    sched,
+                    NATIVE_TEMB_DIM,
+                    &mut x,
+                    s,
+                    Some(&noise),
+                    scratch,
+                );
+                Ok((x, pi))
+            }
+        }
+    }
+
+    /// One routing decision via reverse diffusion. The per-worker
+    /// state features carry *effective* load: pending steps plus —
+    /// when the subsystems are active — the cold-load penalty and the
+    /// origin-site transfer time in step units; with neither active
+    /// the computation is bit-identical to the pre-network policy.
+    /// The π the actor emits is feasibility-masked (and renormalised)
+    /// before the categorical draw, so an infeasible worker can never
+    /// be picked.
+    fn pick(
+        &mut self,
+        req: &Request,
+        pending_steps: &[f64],
+        placement: Option<&Placement>,
+        network: Option<&Network>,
+    ) -> Result<usize> {
         let s_dim = self.workers + 2;
         let mut s = Mat::zeros(1, s_dim);
         s.set(0, 0, (req.prompt.len_bytes() as f32 / 64.0).min(1.0));
         s.set(0, 1, req.z as f32 / self.norm_steps as f32);
         for (w, &p) in pending_steps.iter().enumerate() {
-            s.set(0, 2 + w, (p / (self.norm_steps * 10.0)) as f32);
+            let mut eff = p;
+            if let Some(pl) = placement {
+                let pen = pl.load_penalty_s(w, req.model);
+                if pen.is_finite() {
+                    eff += pen / clock::JETSON_STEP_S;
+                }
+            }
+            if let Some(net) = network {
+                eff += net.round_trip_s(req, w) / clock::JETSON_STEP_S;
+            }
+            s.set(0, 2 + w, (eff / (self.norm_steps * 10.0)) as f32);
         }
         let slot = (req.id % 64) as usize;
         let mut x = Mat::zeros(1, self.workers);
         x.row_mut(0)
             .copy_from_slice(self.mem.get(0, slot, &mut self.rng));
-        let params = self.state.mlp_tensors("actor")?;
-        let (x0, pi) =
-            self.exec
-                .run(&params, Some(&x), &s, Some(&mut self.rng))?;
+        let (x0, pi) = self.forward(x, &s)?;
         self.mem.update(0, slot, x0.row(0));
-        Ok(self.rng.categorical(pi.row(0)))
+        let probs = pi.row(0);
+        match placement {
+            // no placement: every worker is feasible — draw from π
+            // untouched (bit-identical to the pre-mask policy)
+            None => Ok(self.rng.categorical(probs)),
+            Some(pl) => {
+                // mask infeasible workers *before* the draw (the PR 3
+                // follow-up: an infeasible worker could be sampled),
+                // renormalising π over the feasible fleet
+                let mut masked: Vec<f32> = probs
+                    .iter()
+                    .enumerate()
+                    .map(|(w, &v)| if pl.fits(w, req.model) { v } else { 0.0 })
+                    .collect();
+                let total: f32 = masked.iter().sum();
+                if total > 0.0 {
+                    for v in &mut masked {
+                        *v /= total;
+                    }
+                } else {
+                    // degenerate π: uniform over the feasible fleet
+                    let feas: Vec<usize> = (0..self.workers)
+                        .filter(|&w| pl.fits(w, req.model))
+                        .collect();
+                    if feas.is_empty() {
+                        bail!("no worker can hold model {}", req.model);
+                    }
+                    for &w in &feas {
+                        masked[w] = 1.0 / feas.len() as f32;
+                    }
+                }
+                Ok(self.rng.categorical(&masked))
+            }
+        }
     }
 }
 
@@ -186,10 +354,23 @@ impl Router {
     /// Choose a worker for `req` and account its load. With a
     /// [`Placement`], only workers whose VRAM can hold `req.model` are
     /// candidates, and the cache-aware policies read warm/cold state.
+    /// Network-unaware convenience wrapper over
+    /// [`dispatch_with`](Self::dispatch_with).
     pub fn dispatch(
         &mut self,
         req: &Request,
         placement: Option<&Placement>,
+    ) -> Result<usize> {
+        self.dispatch_with(req, placement, None)
+    }
+
+    /// Full dispatch: placement feasibility/cache state plus the
+    /// inter-edge [`Network`] the transmission-aware policies read.
+    pub fn dispatch_with(
+        &mut self,
+        req: &Request,
+        placement: Option<&Placement>,
+        network: Option<&Network>,
     ) -> Result<usize> {
         // A placement run masks feasibility per request, so the static
         // argmin index can never answer its dispatches — drop it on
@@ -284,15 +465,29 @@ impl Router {
                     format!("no worker can hold model {}", req.model)
                 })?
             }
-            Policy::LadTs(lad) => {
-                if placement.is_some() {
-                    bail!(
-                        "lad-ts is not placement-aware yet; use cache-first \
-                         or cache-ll with --worker-vram/--model-dist"
-                    );
-                }
-                lad.pick(req, pending)?
+            Policy::NetLl => {
+                let net = network.context(
+                    "net-ll policy needs an inter-edge topology \
+                     (--topology / --sites)",
+                )?;
+                // transfer (and cold-load) penalties in denoise-step
+                // units, the same scale as the pending-load estimate —
+                // a nearby warm worker beats a distant idle one
+                // exactly when the combined cost says so
+                argmin(n, feasible, |w| {
+                    let cold = match placement {
+                        Some(p) => p.load_penalty_s(w, req.model),
+                        None => 0.0,
+                    };
+                    pending[w]
+                        + (net.round_trip_s(req, w) + cold)
+                            / clock::JETSON_STEP_S
+                })
+                .with_context(|| {
+                    format!("no worker can hold model {}", req.model)
+                })?
             }
+            Policy::LadTs(lad) => lad.pick(req, pending, placement, network)?,
         };
         if w >= self.pending_steps.len() {
             bail!("policy picked invalid worker {w}");
@@ -365,12 +560,17 @@ mod tests {
             prompt: crate::coordinator::corpus::PromptDesc::default(),
             z,
             model: RESD3M,
+            origin: 0,
             submitted_at: 0.0,
         }
     }
 
     fn req_m(id: u64, z: usize, model: usize) -> Request {
         Request { model, ..req(id, z) }
+    }
+
+    fn req_o(id: u64, z: usize, origin: usize) -> Request {
+        Request { origin, ..req(id, z) }
     }
 
     fn placement(budgets: &[f64], prior: &[f64]) -> Placement {
@@ -557,6 +757,64 @@ mod tests {
             1 - warm_re,
             "cache-ll must spill once pending exceeds the load penalty"
         );
+    }
+
+    #[test]
+    fn net_ll_prefers_the_local_site_and_spills_under_load() {
+        use crate::coordinator::network::NetOptions;
+        // Two workers on two WAN-linked sites, identity pinning.
+        let net = NetOptions::profile_only("wan", 2).build(2).unwrap();
+        let mut r = Router::new(Policy::NetLl, 2);
+        // equal (zero) pending: least-loaded would tie-break to worker
+        // 0; net-ll must pick the origin-local worker instead
+        assert_eq!(r.dispatch_with(&req_o(0, 5, 1), None, Some(&net)).unwrap(), 1);
+        assert_eq!(r.dispatch_with(&req_o(1, 5, 0), None, Some(&net)).unwrap(), 0);
+        // pile load on site 1's worker: the WAN penalty (~0.2 s) is
+        // far below one pending step (~1.15 s), so net-ll spills
+        for i in 0..3 {
+            r.dispatch_with(&req_o(10 + i, 15, 1), None, Some(&net)).unwrap();
+        }
+        assert!(r.pending()[1] > r.pending()[0]);
+        assert_eq!(
+            r.dispatch_with(&req_o(20, 5, 1), None, Some(&net)).unwrap(),
+            0,
+            "net-ll must offload once pending exceeds the transfer penalty"
+        );
+        // without a topology the policy is unusable
+        let err = r.dispatch(&req(99, 5), None).unwrap_err();
+        assert!(err.to_string().contains("topology"), "{err}");
+    }
+
+    #[test]
+    fn lad_native_fallback_masks_infeasible_workers() {
+        // The PR 3 follow-up fix, testable artifact-free through the
+        // native LADN backend: with a placement mask, π must be
+        // renormalised over feasible workers before the categorical
+        // draw — the 16 GB device can never receive SD3-medium.
+        let p = placement(&[16.0, 48.0, 48.0], &[0.0, 1.0, 0.0]);
+        let lad = LadPolicy::new(None, 3, None, 9).unwrap();
+        assert_eq!(lad.backend_name(), "LAD-TS (native LADN)");
+        let mut r = Router::new(Policy::LadTs(Box::new(lad)), 3);
+        let mut hit = [0usize; 3];
+        for i in 0..40 {
+            let w = r.dispatch(&req_m(i, 5, SD3_MEDIUM), Some(&p)).unwrap();
+            assert_ne!(w, 0, "dispatch {i} picked the 16 GB device");
+            hit[w] += 1;
+            // drain so the run stays in a regime where π is spread
+            r.complete(w, 5);
+        }
+        assert!(hit[1] + hit[2] == 40);
+    }
+
+    #[test]
+    fn lad_native_fallback_is_seed_deterministic() {
+        let run = |seed: u64| -> Vec<usize> {
+            let lad = LadPolicy::new(None, 4, None, seed).unwrap();
+            let mut r = Router::new(Policy::LadTs(Box::new(lad)), 4);
+            (0..24).map(|i| r.dispatch(&req(i, 5), None).unwrap()).collect()
+        };
+        assert_eq!(run(3), run(3));
+        assert_ne!(run(3), run(4), "different seeds should diverge");
     }
 
     #[test]

@@ -33,7 +33,25 @@
 //! per-worker VRAM budgets (`--worker-vram`) with LRU model caches
 //! whose cold-load delays are charged in virtual time, a slow
 //! re-placement timescale (`--replace-every`), and admission control
-//! under overload (`--queue-cap`).
+//! under overload (`--queue-cap`) — and the inter-edge network
+//! subsystem ([`super::network`]): requests originate at seeded edge
+//! sites, workers are pinned to sites (`--sites`, `--site-of`), and
+//! the prompt-upload / image-return legs pay the topology's link costs
+//! (`--topology`, `--bw-matrix`) in virtual time, with
+//! `Event::TransferDone` legs bracketing compute so `ServeMetrics` can
+//! decompose time-in-system into transmission + queuing + computation
+//! and track per-link traffic. Parity contract: a run with no topology
+//! and one on the `uniform` profile (any site count) are bit-identical
+//! to each other for every transfer-cost-blind policy — both charge
+//! the same implicit LAN legs — and `rust/tests/serve_network.rs` pins
+//! it (lad-ts is the documented exception: a configured topology
+//! deliberately enters its state features, `uniform` included). One
+//! deliberate engine change rode along: the image-return payload is
+//! now z-derived ([`clock::image_bits`]) *everywhere*, calibrated so
+//! the default z = 15 equals the legacy 0.8 Mbit constant exactly —
+//! Table V batch numbers are unchanged, while heterogeneous-z runs
+//! shift their down legs by sub-millisecond amounts relative to
+//! pre-network builds.
 
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::channel;
@@ -50,6 +68,7 @@ use super::clock;
 use super::events::{Event, EventQueue};
 use super::message::{Request, Response};
 use super::metrics::ServeMetrics;
+use super::network::{NetOptions, Network};
 use super::placement::{self, Catalog, ModelDist, Placement};
 use super::router::{LadPolicy, Policy, Router};
 use super::source::RequestSource;
@@ -65,7 +84,7 @@ pub struct ServeOptions {
     pub seed: u64,
     pub artifacts_dir: String,
     /// "lad-ts" | "least-loaded" | "round-robin" | "random" |
-    /// "cache-first" | "cache-ll".
+    /// "cache-first" | "cache-ll" | "net-ll".
     pub scheduler: String,
     /// Generation-quality demand z per request (when `z_dist` is None).
     pub z_steps: usize,
@@ -87,6 +106,11 @@ pub struct ServeOptions {
     /// Admission control: maximum admitted-but-incomplete requests
     /// (`--queue-cap`); arrivals beyond it are dropped and counted.
     pub queue_cap: Option<usize>,
+    /// Inter-edge network (`--topology`/`--sites`/`--site-of`/
+    /// `--bw-matrix`): origin sites, worker pinning, and link costs.
+    /// `None` keeps the pre-network engine bit-identical (the implicit
+    /// single-site LAN).
+    pub network: Option<NetOptions>,
 }
 
 impl Default for ServeOptions {
@@ -105,6 +129,7 @@ impl Default for ServeOptions {
             worker_vram: None,
             replace_every: 0.0,
             queue_cap: None,
+            network: None,
         }
     }
 }
@@ -122,6 +147,11 @@ impl DEdgeAi {
     /// Whether the placement subsystem is active for this run.
     fn placement_enabled(&self) -> bool {
         self.opts.model_dist.is_some() || self.opts.worker_vram.is_some()
+    }
+
+    /// Whether the inter-edge network subsystem is active for this run.
+    fn network_enabled(&self) -> bool {
+        self.opts.network.is_some()
     }
 
     fn make_policy(&self, rt: Option<&XlaRuntime>) -> Result<Policy> {
@@ -149,39 +179,61 @@ impl DEdgeAi {
                 needs_placement("cache-ll")?;
                 Policy::CacheLl
             }
-            "lad-ts" | "lad" => {
-                if self.placement_enabled() {
+            "net-ll" | "nll" | "net-aware" => {
+                if !self.network_enabled() {
                     anyhow::bail!(
-                        "lad-ts is not placement-aware yet; use cache-first \
-                         or cache-ll for placement runs"
+                        "net-ll policy needs an inter-edge topology — set \
+                         --topology (and optionally --sites/--site-of)"
                     );
                 }
-                match rt {
-                    Some(rt) => Policy::LadTs(Box::new(LadPolicy::new(
-                        rt,
-                        self.opts.workers,
-                        None,
-                        self.opts.seed,
-                    )?)),
-                    None => anyhow::bail!("lad-ts policy needs artifacts"),
-                }
+                Policy::NetLl
             }
+            "lad-ts" | "lad" => Policy::LadTs(Box::new(LadPolicy::new(
+                rt,
+                self.opts.workers,
+                None,
+                self.opts.seed,
+            )?)),
             other => anyhow::bail!("unknown scheduler '{other}'"),
         })
     }
 
     /// Build the router (loading AOT artifacts only when the policy
-    /// needs them; the LAD policy owns its executables afterwards).
+    /// wants them; the LAD policy owns its executables afterwards and
+    /// falls back to the native LADN forward when artifacts are
+    /// *absent*, so lad-ts stays routable in artifact-free runs). A
+    /// present-but-broken artifacts directory still errors — silently
+    /// swapping a corrupt deployment for fresh-init weights would make
+    /// bad numbers indistinguishable from real LAD-TS ones.
     fn make_router(&self) -> Result<Router> {
         let rt = if self.opts.scheduler.starts_with("lad") {
-            Some(
-                XlaRuntime::new(Path::new(&self.opts.artifacts_dir))
-                    .context("lad-ts policy needs artifacts")?,
-            )
+            let dir = Path::new(&self.opts.artifacts_dir);
+            if dir.join("manifest.json").exists() {
+                Some(
+                    XlaRuntime::new(dir)
+                        .context("loading AOT artifacts for lad-ts")?,
+                )
+            } else {
+                log::warn!(
+                    "lad-ts: no AOT artifacts at {} (manifest.json absent); \
+                     routing through the native LADN fallback",
+                    dir.display()
+                );
+                None
+            }
         } else {
             None
         };
         Ok(Router::new(self.make_policy(rt.as_ref())?, self.opts.workers))
+    }
+
+    /// Build the validated inter-edge network view; `None` when the
+    /// subsystem is off — the pre-network fast path.
+    fn make_network(&self) -> Result<Option<Network>> {
+        match &self.opts.network {
+            None => Ok(None),
+            Some(n) => Ok(Some(n.build(self.opts.workers)?)),
+        }
     }
 
     /// Effective per-request quality-demand distribution.
@@ -242,32 +294,52 @@ impl DEdgeAi {
         Ok(Some(p))
     }
 
-    /// Lazy deterministic request trace: captions, demands, and
-    /// submission times are pure functions of (opts, seed), emitted
-    /// one request at a time. The caption, arrival, quality, and model
-    /// streams are independent seeded RNGs, so the stream is
-    /// bit-identical to the eager trace the engine used to
-    /// materialise (and the batch trace with fixed z remains
-    /// bit-identical to the pre-open-loop one).
+    /// Lazy deterministic request trace: captions, demands, origin
+    /// sites, and submission times are pure functions of (opts, seed),
+    /// emitted one request at a time. The caption, arrival, quality,
+    /// model, and origin-site streams are independent seeded RNGs, so
+    /// the stream is bit-identical to the eager trace the engine used
+    /// to materialise (and the batch trace with fixed z remains
+    /// bit-identical to the pre-open-loop one; a single-site run draws
+    /// no site randomness at all).
     fn source(&self) -> RequestSource {
         RequestSource::new(
             self.opts.seed,
             &self.opts.arrivals,
             self.z_dist(),
             self.model_dist(),
+            self.opts.network.as_ref().map(|n| n.sites).unwrap_or(1),
             self.opts.requests,
         )
     }
 
-    /// Service-time model for one request on a virtual Jetson: LAN up,
-    /// generation (with small per-image jitter, scaled by the model
-    /// tier's per-step multiplier), LAN down. `step_mult = 1.0` is
-    /// bit-identical to the placement-free model.
-    fn service_times(req: &Request, rng: &mut Rng, step_mult: f64) -> (f64, f64, f64) {
-        let up = clock::lan_seconds(req.prompt.len_bytes() as f64 * 8.0);
+    /// Service-time legs for one request on a virtual Jetson: prompt
+    /// upload, generation (with small per-image jitter, scaled by the
+    /// model tier's per-step multiplier), image return. Without a
+    /// network the transfers ride the implicit single-site LAN; with
+    /// one they pay the origin-site ↔ worker-site link costs. The
+    /// image payload is z-derived ([`clock::image_bits`]), calibrated
+    /// so the default demand z = 15 reproduces the legacy 0.8 Mbit
+    /// constant exactly — the Table V batch protocol stays
+    /// bit-identical (and `step_mult = 1.0` keeps the placement-free
+    /// model bit-identical).
+    fn service_times(
+        req: &Request,
+        rng: &mut Rng,
+        step_mult: f64,
+        network: Option<&Network>,
+        worker: usize,
+    ) -> (f64, f64, f64) {
+        let up = match network {
+            Some(net) => net.up_seconds(req, worker),
+            None => clock::lan_seconds(Network::up_bits(req)),
+        };
         let gen = clock::jetson_image_seconds_mult(req.z, step_mult)
             * (1.0 + 0.03 * rng.normal());
-        let down = clock::lan_seconds(0.8e6);
+        let down = match network {
+            Some(net) => net.down_seconds(req, worker),
+            None => clock::lan_seconds(Network::down_bits(req)),
+        };
         (up, gen, down)
     }
 
@@ -277,10 +349,14 @@ impl DEdgeAi {
     /// control live on the event engine — this closed loop stays
     /// untouched so its numbers remain bit-identical.
     pub fn run_batch(&self) -> Result<ServeMetrics> {
-        if self.placement_enabled() || self.opts.queue_cap.is_some() {
+        if self.placement_enabled()
+            || self.opts.queue_cap.is_some()
+            || self.network_enabled()
+        {
             bail!(
-                "placement-aware serving and admission control run on the \
-                 event engine; run_batch is the legacy Table V closed loop"
+                "placement-aware serving, admission control, and inter-edge \
+                 topologies run on the event engine; run_batch is the legacy \
+                 Table V closed loop"
             );
         }
         let mut router = self.make_router()?;
@@ -290,7 +366,8 @@ impl DEdgeAi {
         let mut rng = Rng::new(self.opts.seed ^ 0xC0FFEE);
         for req in self.source() {
             let w = router.dispatch(&req, None)?;
-            let (up, gen, down) = Self::service_times(&req, &mut rng, 1.0);
+            let (up, gen, down) =
+                Self::service_times(&req, &mut rng, 1.0, None, w);
             let start = free_at[w].max(req.submitted_at + up);
             let done = start + gen + down;
             free_at[w] = done;
@@ -305,6 +382,7 @@ impl DEdgeAi {
                 latency: done - req.submitted_at,
                 queue_wait: start - req.submitted_at - up,
                 gen_time: gen,
+                trans_time: up + down,
                 checksum: 0.0,
             };
             metrics.record(&resp, done);
@@ -337,6 +415,7 @@ impl DEdgeAi {
     /// count reaches the cap, keeping pending load bounded.
     pub fn run_events(&self) -> Result<ServeMetrics> {
         let mut placement = self.make_placement()?;
+        let network = self.make_network()?;
         let mut router = self.make_router()?;
         let mut metrics = ServeMetrics::new(self.opts.workers);
         let mut free_at = vec![0.0f64; self.opts.workers];
@@ -374,7 +453,11 @@ impl DEdgeAi {
                     _ => true,
                 };
                 if admitted {
-                    let w = router.dispatch(&req, placement.as_ref())?;
+                    let w = router.dispatch_with(
+                        &req,
+                        placement.as_ref(),
+                        network.as_ref(),
+                    )?;
                     let mut load_delay = 0.0;
                     let mut step_mult = 1.0;
                     if let Some(p) = placement.as_mut() {
@@ -386,8 +469,13 @@ impl DEdgeAi {
                         );
                         load_delay = charge.delay_s;
                     }
-                    let (up, gen, down) =
-                        Self::service_times(&req, &mut rng, step_mult);
+                    let (up, gen, down) = Self::service_times(
+                        &req,
+                        &mut rng,
+                        step_mult,
+                        network.as_ref(),
+                        w,
+                    );
                     let start = free_at[w].max(now + up) + load_delay;
                     if load_delay > 0.0 {
                         queue.push(
@@ -412,9 +500,35 @@ impl DEdgeAi {
                             latency: done - now,
                             queue_wait: start - now - up,
                             gen_time: gen,
+                            trans_time: up + down,
                             checksum: 0.0,
                         }),
                     );
+                    // Transfer legs bracket compute: the upload ends
+                    // before generation can start, the image return
+                    // lands with the completion. Both are booked into
+                    // the per-link metrics at their own virtual times.
+                    if let Some(net) = network.as_ref() {
+                        let (o, site) = (req.origin, net.site(w));
+                        queue.push(
+                            now + up,
+                            Event::TransferDone {
+                                from: o,
+                                to: site,
+                                bits: Network::up_bits(&req),
+                                secs: up,
+                            },
+                        );
+                        queue.push(
+                            done,
+                            Event::TransferDone {
+                                from: site,
+                                to: o,
+                                bits: Network::down_bits(&req),
+                                secs: down,
+                            },
+                        );
+                    }
                 }
             } else {
                 let (now, event) =
@@ -440,6 +554,9 @@ impl DEdgeAi {
                              of model {model} ({delay:.1}s)"
                         );
                         metrics.record_cold_load_on(worker, delay);
+                    }
+                    Event::TransferDone { from, to, bits, secs } => {
+                        metrics.record_transfer(from, to, bits, secs);
                     }
                     Event::Replace => {
                         if let Some(p) = placement.as_mut() {
@@ -492,6 +609,7 @@ impl DEdgeAi {
     #[doc(hidden)]
     pub fn run_events_eager(&self) -> Result<ServeMetrics> {
         let mut placement = self.make_placement()?;
+        let network = self.make_network()?;
         let mut router = self.make_router()?;
         let mut metrics = ServeMetrics::new(self.opts.workers);
         let mut free_at = vec![0.0f64; self.opts.workers];
@@ -519,7 +637,11 @@ impl DEdgeAi {
                             continue;
                         }
                     }
-                    let w = router.dispatch(&req, placement.as_ref())?;
+                    let w = router.dispatch_with(
+                        &req,
+                        placement.as_ref(),
+                        network.as_ref(),
+                    )?;
                     let mut load_delay = 0.0;
                     let mut step_mult = 1.0;
                     if let Some(p) = placement.as_mut() {
@@ -531,8 +653,13 @@ impl DEdgeAi {
                         );
                         load_delay = charge.delay_s;
                     }
-                    let (up, gen, down) =
-                        Self::service_times(&req, &mut rng, step_mult);
+                    let (up, gen, down) = Self::service_times(
+                        &req,
+                        &mut rng,
+                        step_mult,
+                        network.as_ref(),
+                        w,
+                    );
                     let start = free_at[w].max(now + up) + load_delay;
                     if load_delay > 0.0 {
                         queue.push(
@@ -557,9 +684,33 @@ impl DEdgeAi {
                             latency: done - now,
                             queue_wait: start - now - up,
                             gen_time: gen,
+                            trans_time: up + down,
                             checksum: 0.0,
                         }),
                     );
+                    // same leg bookkeeping (and push order) as the
+                    // streaming engine — parity is bitwise
+                    if let Some(net) = network.as_ref() {
+                        let (o, site) = (req.origin, net.site(w));
+                        queue.push(
+                            now + up,
+                            Event::TransferDone {
+                                from: o,
+                                to: site,
+                                bits: Network::up_bits(&req),
+                                secs: up,
+                            },
+                        );
+                        queue.push(
+                            done,
+                            Event::TransferDone {
+                                from: site,
+                                to: o,
+                                bits: Network::down_bits(&req),
+                                secs: down,
+                            },
+                        );
+                    }
                 }
                 Event::Completion(resp) => {
                     let mult = match placement.as_ref() {
@@ -572,6 +723,9 @@ impl DEdgeAi {
                 }
                 Event::ModelLoaded { worker, delay, .. } => {
                     metrics.record_cold_load_on(worker, delay);
+                }
+                Event::TransferDone { from, to, bits, secs } => {
+                    metrics.record_transfer(from, to, bits, secs);
                 }
                 Event::Replace => {
                     if let Some(p) = placement.as_mut() {
@@ -614,6 +768,7 @@ impl DEdgeAi {
         !matches!(self.opts.arrivals, ArrivalProcess::Batch)
             || self.placement_enabled()
             || self.opts.queue_cap.is_some()
+            || self.network_enabled()
     }
 
     /// Virtual-clock entry point: the plain batch protocol keeps its
@@ -639,11 +794,15 @@ impl DEdgeAi {
                 self.opts.arrivals.name()
             );
         }
-        if self.placement_enabled() || self.opts.queue_cap.is_some() {
+        if self.placement_enabled()
+            || self.opts.queue_cap.is_some()
+            || self.network_enabled()
+        {
             bail!(
-                "placement and admission control are virtual-clock features \
-                 (the real-time path runs one resident genmodel per worker); \
-                 drop --real-time"
+                "placement, admission control, and inter-edge topologies are \
+                 virtual-clock features (the real-time path runs one \
+                 resident genmodel per worker on a real LAN); drop \
+                 --real-time"
             );
         }
         let artifacts = PathBuf::from(&self.opts.artifacts_dir);
@@ -729,6 +888,18 @@ pub fn serve_and_report(opts: &ServeOptions) -> Result<()> {
             }
         );
     }
+    if let Some(net) = &opts.network {
+        println!(
+            "topology: {} over {} site(s){}{}",
+            net.profile,
+            net.sites,
+            match &net.site_of {
+                Some(pins) => format!(", pins {pins:?}"),
+                None => String::new(),
+            },
+            if net.bw_matrix.is_some() { ", bw-matrix override" } else { "" }
+        );
+    }
     if let Some(rate) = opts.arrivals.rate() {
         let mean_z = sys.z_dist().mean();
         let mult = if placement_on {
@@ -759,6 +930,15 @@ pub fn serve_and_report(opts: &ServeOptions) -> Result<()> {
     }
     t.row(vec!["mean queue wait (s)".into(), fnum(metrics.mean_queue_wait(), 2)]);
     t.row(vec!["mean gen time (s)".into(), fnum(metrics.mean_gen_time(), 3)]);
+    if opts.network.is_some() {
+        // the paper's delay decomposition: transmission + queuing +
+        // computation = time-in-system (queue wait and gen time above
+        // are the other two terms)
+        t.row(vec![
+            "mean transmission (s)".into(),
+            fnum(metrics.mean_trans_time(), 3),
+        ]);
+    }
     t.row(vec![
         "throughput (img/s)".into(),
         fnum(metrics.throughput(), 3),
@@ -796,6 +976,32 @@ pub fn serve_and_report(opts: &ServeOptions) -> Result<()> {
         "per-worker completions: {:?}",
         metrics.per_worker()
     );
+    if opts.network.is_some() && !metrics.link_stats().is_empty() {
+        let makespan = metrics.makespan();
+        let mut lt = Table::new(&[
+            "link",
+            "transfers",
+            "Mbit",
+            "busy (s)",
+            "mean Mbps",
+            "utilization",
+        ])
+        .left_first()
+        .title("per-link traffic");
+        for (&(from, to), st) in metrics.link_stats() {
+            let mbps = if st.secs > 0.0 { st.bits / st.secs / 1e6 } else { 0.0 };
+            let util = if makespan > 0.0 { st.secs / makespan } else { 0.0 };
+            lt.row(vec![
+                format!("{from} -> {to}"),
+                st.transfers.to_string(),
+                fnum(st.bits / 1e6, 1),
+                fnum(st.secs, 1),
+                fnum(mbps, 1),
+                fnum(util, 3),
+            ]);
+        }
+        println!("{}", lt.render());
+    }
     Ok(())
 }
 
@@ -994,6 +1200,72 @@ mod tests {
         );
         let e = sys.run_events_eager().unwrap();
         assert!(e.queue_peak() >= 2000, "eager peak {}", e.queue_peak());
+    }
+
+    #[test]
+    fn uniform_topology_is_bit_identical_to_plain_smoke() {
+        // The in-module smoke of the network parity suite
+        // (rust/tests/serve_network.rs): a uniform topology's links
+        // all carry the LAN cost every request already paid, and the
+        // origin stream is independent of the other four — the run
+        // must be bit-identical to the network-free engine.
+        let base = ServeOptions {
+            requests: 80,
+            arrivals: ArrivalProcess::Poisson { rate: 0.25 },
+            z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+            ..ServeOptions::default()
+        };
+        let plain = DEdgeAi::new(base.clone()).run_virtual().unwrap();
+        let net = DEdgeAi::new(ServeOptions {
+            network: Some(NetOptions::profile_only("uniform", 4)),
+            ..base
+        })
+        .run_virtual()
+        .unwrap();
+        assert_eq!(plain.count(), net.count());
+        assert_eq!(plain.per_worker(), net.per_worker());
+        assert_eq!(plain.makespan().to_bits(), net.makespan().to_bits());
+        assert_eq!(plain.p99_latency().to_bits(), net.p99_latency().to_bits());
+        assert_eq!(
+            plain.mean_latency().to_bits(),
+            net.mean_latency().to_bits()
+        );
+        // the network run additionally books per-link traffic
+        assert!(net.link_stats().len() > 1);
+        assert!(plain.link_stats().is_empty());
+    }
+
+    #[test]
+    fn wan_topology_charges_transfer_legs() {
+        let opts = ServeOptions {
+            requests: 60,
+            arrivals: ArrivalProcess::Poisson { rate: 0.2 },
+            scheduler: "net-ll".into(),
+            network: Some(NetOptions::profile_only("wan", 5)),
+            ..ServeOptions::default()
+        };
+        let m = DEdgeAi::new(opts).run_virtual().unwrap();
+        assert_eq!(m.count(), 60);
+        // transmission is visible but far below compute
+        assert!(m.mean_trans_time() > 0.004, "{}", m.mean_trans_time());
+        assert!(m.mean_trans_time() < m.mean_gen_time());
+        // the decomposition identity holds per request
+        assert!(m.decomposition_error() < 1e-9, "{}", m.decomposition_error());
+        // two legs per served request across all links
+        let legs: u64 = m.link_stats().values().map(|s| s.transfers).sum();
+        assert_eq!(legs, 120);
+    }
+
+    #[test]
+    fn net_ll_requires_a_topology() {
+        let opts = ServeOptions {
+            requests: 5,
+            scheduler: "net-ll".into(),
+            arrivals: ArrivalProcess::Poisson { rate: 0.2 },
+            ..ServeOptions::default()
+        };
+        let err = DEdgeAi::new(opts).run_virtual().unwrap_err();
+        assert!(err.to_string().contains("topology"), "{err}");
     }
 
     #[test]

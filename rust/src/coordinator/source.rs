@@ -4,18 +4,21 @@
 //! front — one heap `String` per prompt, every arrival pushed into the
 //! event heap at construction — making memory and startup cost
 //! O(total requests). [`RequestSource`] replaces that: it owns the
-//! four independent RNG streams (arrival clock, caption, quality
-//! demand z, model demand) and synthesises the *next* request on
-//! demand, so the engine holds O(in-flight) state no matter how many
-//! requests a run offers.
+//! five independent RNG streams (arrival clock, caption, quality
+//! demand z, model demand, origin site) and synthesises the *next*
+//! request on demand, so the engine holds O(in-flight) state no matter
+//! how many requests a run offers.
 //!
 //! Bit-parity: each stream is a separate seeded [`Rng`], so drawing
-//! (time_i, caption_i, z_i, model_i) lazily per request consumes each
-//! stream in exactly the order the eager trace builder did (all times,
-//! then all captions, ...). Collecting the source therefore
-//! reproduces the old `make_requests()` trace exactly, and the parity
-//! suite pins it. (Only the *engine state* is O(in-flight); metrics
-//! still record per-completion measures.)
+//! (time_i, caption_i, z_i, model_i, origin_i) lazily per request
+//! consumes each stream in exactly the order the eager trace builder
+//! did (all times, then all captions, ...). Collecting the source
+//! therefore reproduces the old `make_requests()` trace exactly, and
+//! the parity suite pins it. The origin-site stream draws nothing for
+//! a single-site run — the pre-network default stays bit-identical,
+//! the same guarantee `ZDist::Fixed` gives the quality stream. (Only
+//! the *engine state* is O(in-flight); metrics still record
+//! per-completion measures.)
 
 use crate::util::rng::Rng;
 
@@ -30,6 +33,7 @@ use super::placement::ModelDist;
 const ARRIVAL_SALT: u64 = 0xA881_07A1;
 const Z_SALT: u64 = 0x57E9_D157;
 const MODEL_SALT: u64 = 0x3A9D_11AD;
+const SITE_SALT: u64 = 0x517E_0B17;
 
 /// Lazy, allocation-free generator of the deterministic request trace:
 /// a pure function of (arrivals, z-dist, model-dist, n, seed), emitted
@@ -40,9 +44,13 @@ pub struct RequestSource {
     arr_rng: Rng,
     z_rng: Rng,
     m_rng: Rng,
+    site_rng: Rng,
     gen: ArrivalGen,
     zd: ZDist,
     md: ModelDist,
+    /// Edge sites requests originate from (uniform); 1 = the
+    /// pre-network single-site default, which draws no site RNG.
+    sites: usize,
     next_id: u64,
     remaining: usize,
 }
@@ -53,6 +61,7 @@ impl RequestSource {
         arrivals: &ArrivalProcess,
         zd: ZDist,
         md: ModelDist,
+        sites: usize,
         n: usize,
     ) -> Self {
         Self {
@@ -60,9 +69,11 @@ impl RequestSource {
             arr_rng: Rng::new(seed ^ ARRIVAL_SALT),
             z_rng: Rng::new(seed ^ Z_SALT),
             m_rng: Rng::new(seed ^ MODEL_SALT),
+            site_rng: Rng::new(seed ^ SITE_SALT),
             gen: arrivals.stream(),
             zd,
             md,
+            sites: sites.max(1),
             next_id: 0,
             remaining: n,
         }
@@ -90,6 +101,13 @@ impl Iterator for RequestSource {
             prompt: self.corpus.descriptor(),
             z: self.zd.sample(&mut self.z_rng),
             model: self.md.sample(&mut self.m_rng),
+            // single-site runs consume no site randomness (the
+            // pre-network bit-parity guarantee)
+            origin: if self.sites > 1 {
+                self.site_rng.range_usize(0, self.sites - 1)
+            } else {
+                0
+            },
         })
     }
 
@@ -110,6 +128,7 @@ mod tests {
             &ArrivalProcess::Poisson { rate: 0.3 },
             ZDist::Uniform { lo: 5, hi: 15 },
             ModelDist::Fixed(0),
+            1,
             n,
         )
     }
@@ -154,13 +173,53 @@ mod tests {
             &ArrivalProcess::Batch,
             ZDist::Fixed(15),
             ModelDist::Fixed(0),
+            1,
             50,
         );
         for r in fixed {
             assert_eq!(r.z, 15);
             assert_eq!(r.model, 0);
+            assert_eq!(r.origin, 0);
             assert_eq!(r.submitted_at, 0.0);
         }
+    }
+
+    #[test]
+    fn multi_site_origins_leave_the_other_streams_untouched() {
+        // The origin stream is its own seeded RNG: turning sites on
+        // must not perturb arrival/caption/z/model draws (the network
+        // parity contract at the source level), and origins must stay
+        // in range, deterministic, and non-degenerate.
+        let multi = |n: usize| {
+            RequestSource::new(
+                42,
+                &ArrivalProcess::Poisson { rate: 0.3 },
+                ZDist::Uniform { lo: 5, hi: 15 },
+                ModelDist::Fixed(0),
+                4,
+                n,
+            )
+        };
+        let plain: Vec<Request> = src(200).collect();
+        let sited: Vec<Request> = multi(200).collect();
+        let mut seen = [false; 4];
+        for (a, b) in plain.iter().zip(&sited) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.submitted_at.to_bits(), b.submitted_at.to_bits());
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.z, b.z);
+            assert_eq!(a.model, b.model);
+            assert_eq!(a.origin, 0);
+            assert!(b.origin < 4);
+            seen[b.origin] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all sites should originate traffic");
+        let again: Vec<usize> = multi(200).map(|r| r.origin).collect();
+        assert_eq!(
+            again,
+            sited.iter().map(|r| r.origin).collect::<Vec<_>>(),
+            "origin stream must be seed-deterministic"
+        );
     }
 
     #[test]

@@ -81,6 +81,8 @@ pub fn spawn_worker(
                     latency: done - req.submitted_at,
                     queue_wait: start - req.submitted_at,
                     gen_time: done - start,
+                    // in-process channels: no modeled transfer legs
+                    trans_time: 0.0,
                     checksum,
                 };
                 if resp_tx.send(resp).is_err() {
@@ -119,6 +121,7 @@ mod tests {
                 ),
                 z: 3,
                 model: 0,
+                origin: 0,
                 submitted_at: epoch.elapsed().as_secs_f64(),
             })
             .unwrap();

@@ -21,7 +21,7 @@ use dedgeai::agents::{make_scheduler, Method};
 use dedgeai::config::{ActorLoss, AgentConfig, Backend, EnvConfig, ExpConfig};
 use dedgeai::coordinator;
 use dedgeai::coordinator::placement;
-use dedgeai::coordinator::{ArrivalProcess, Catalog, ModelDist, ZDist};
+use dedgeai::coordinator::{ArrivalProcess, Catalog, ModelDist, NetOptions, ZDist};
 use dedgeai::runtime::XlaRuntime;
 use dedgeai::sim::{experiments, output, runner};
 use dedgeai::util::cli::Args;
@@ -33,11 +33,12 @@ dedgeai — latent action diffusion scheduling for AIGC edge services
 USAGE:
   dedgeai train --method lad-ts [--episodes 60] [--seed 42]
   dedgeai exp <fig5|fig6a|fig6b|fig7a|fig7b|fig8a|fig8b|table5|mem|ablation|
-               serve-sweep|placement-sweep|all>
+               serve-sweep|placement-sweep|topology-sweep|all>
   dedgeai serve [--workers 5] [--requests 100] [--real-time]
                 [--arrivals poisson --rate 0.3] [--z-dist uniform:5,15]
                 [--model-dist mix:resd3-m=0.7,sd3-medium=0.3]
                 [--worker-vram 24,24,24,24,48] [--queue-cap 50]
+                [--topology wan --sites 5 --site-of 0,1,2,3,4]
   dedgeai bench [--bench-requests 1000000] [--bench-out BENCH_serve.json]
   dedgeai info
 
@@ -98,6 +99,19 @@ OPTIONS (placement / placement-sweep):
                      comma lists, e.g. '64,64;24,24,48'
   --model-dists D    placement-sweep model mixes, ';'-separated
                      --model-dist specs
+
+OPTIONS (network / topology-sweep):
+  --topology P       inter-edge link profile: uniform | lan | wan |
+                     star | degraded:<site>; setting this (or --sites/
+                     --site-of/--bw-matrix) enables the network
+                     subsystem (serve default profile: lan)
+  --sites N          number of edge sites (default: one per worker)
+  --site-of LIST     worker -> site pinning, e.g. 0,0,1,1,2
+                     (default: worker w -> site w mod N)
+  --bw-matrix M      bandwidth override, Mbps rows ';'-separated,
+                     e.g. '1000,200;150,1000' (RTTs keep the profile)
+  --topology-profiles P  topology-sweep profiles, comma-separated,
+                     e.g. uniform,lan,wan,degraded:0
 ";
 
 fn main() {
@@ -192,6 +206,24 @@ fn exp_config(args: &Args) -> Result<ExpConfig> {
         args.f64_or("replace-every", cfg.placement.replace_every)?;
     cfg.placement.queue_cap =
         args.usize_or("queue-cap", cfg.placement.queue_cap)?;
+    // topology-sweep grid overrides (rates/schedulers/arrivals/z-dist
+    // shared with the other serving sweeps)
+    if let Some(rates) = args.list_f64("rates")? {
+        cfg.topology.rates = rates;
+    }
+    if let Some(s) = args.get("schedulers") {
+        cfg.topology.schedulers =
+            s.split(',').map(|x| x.trim().to_string()).collect();
+    }
+    if let Some(p) = args.get("topology-profiles") {
+        cfg.topology.profiles =
+            p.split(',').map(|x| x.trim().to_string()).collect();
+    }
+    cfg.topology.sites = args.usize_or("sites", cfg.topology.sites)?;
+    cfg.topology.requests =
+        args.usize_or("serve-requests", cfg.topology.requests)?;
+    cfg.topology.arrivals = args.str_or("arrivals", &cfg.topology.arrivals);
+    cfg.topology.z_dist = args.str_or("z-dist", &cfg.topology.z_dist);
     Ok(cfg)
 }
 
@@ -300,6 +332,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         0 => None,
         cap => Some(cap),
     };
+    // network: any of --topology/--sites/--site-of/--bw-matrix enables
+    // the inter-edge subsystem (profile defaults to lan, one site per
+    // worker like the five-Jetson testbed)
+    let network = if args.get("topology").is_some()
+        || args.get("sites").is_some()
+        || args.get("site-of").is_some()
+        || args.get("bw-matrix").is_some()
+    {
+        Some(NetOptions {
+            sites: args.usize_or("sites", workers)?,
+            profile: args.str_or("topology", "lan"),
+            site_of: args.list_usize("site-of")?,
+            bw_matrix: args.get("bw-matrix").map(|s| s.to_string()),
+        })
+    } else {
+        None
+    };
     let opts = coordinator::ServeOptions {
         workers,
         requests: args.usize_or("requests", 100)?,
@@ -314,6 +363,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         worker_vram,
         replace_every: args.f64_or("replace-every", 0.0)?,
         queue_cap,
+        network,
     };
     coordinator::serve_and_report(&opts)
 }

@@ -26,6 +26,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::arrivals::{ArrivalProcess, ZDist};
 use crate::coordinator::clock;
+use crate::coordinator::network::NetOptions;
 use crate::coordinator::placement::{Catalog, ModelDist};
 use crate::coordinator::service::{DEdgeAi, ServeOptions};
 use crate::util::json::Json;
@@ -126,6 +127,26 @@ pub fn scenarios(budget: usize, seed: u64) -> Vec<Scenario> {
                 // smoke actually saturates and exercises the drop path
                 queue_cap: Some((budget / 5000).clamp(10, 100)),
                 ..base(budget / 2)
+            },
+        },
+        Scenario {
+            name: "topology-churn",
+            what: "WAN offloading x placement churn: transfer legs + \
+                   net-ll dispatch + cold loads on one event clock",
+            opts: ServeOptions {
+                arrivals: ArrivalProcess::Poisson { rate: 0.5 * cap },
+                scheduler: "net-ll".into(),
+                model_dist: Some(
+                    ModelDist::parse(
+                        "mix:resd3-m=0.45,resd3-turbo=0.45,sd3-medium=0.1",
+                        &catalog,
+                    )
+                    .expect("static spec parses"),
+                ),
+                worker_vram: Some(vec![24.0, 24.0, 24.0, 24.0, 48.0]),
+                replace_every: 600.0,
+                network: Some(NetOptions::profile_only("wan", 5)),
+                ..base(budget / 5)
             },
         },
     ]
@@ -269,13 +290,14 @@ mod tests {
     #[test]
     fn scenario_set_covers_the_acceptance_matrix() {
         let set = scenarios(1_000_000, 42);
-        assert!(set.len() >= 4);
+        assert!(set.len() >= 5);
         let names: Vec<&str> = set.iter().map(|s| s.name).collect();
         for want in [
             "batch",
             "poisson-open-loop",
             "placement-churn",
             "saturation-capped",
+            "topology-churn",
         ] {
             assert!(names.contains(&want), "missing scenario '{want}'");
         }
@@ -295,7 +317,7 @@ mod tests {
         // scenario (placement feasibility, caps, replace ticks) and
         // produce sane measurements.
         let ms = run_scenarios(scenarios(400, 42), 1).unwrap();
-        assert_eq!(ms.len(), 4);
+        assert_eq!(ms.len(), 5);
         for m in &ms {
             assert!(m.requests >= 1, "{}", m.name);
             assert!(m.wall_s >= 0.0);

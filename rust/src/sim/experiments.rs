@@ -36,6 +36,7 @@ use crate::config::{AgentConfig, EnvConfig, ExpConfig};
 use crate::coordinator::arrivals::{ArrivalProcess, ZDist};
 use crate::coordinator::clock;
 use crate::coordinator::models::{reduction_pct, ModelStack};
+use crate::coordinator::network::{NetOptions, Topology};
 use crate::coordinator::placement::{parse_vram_spec, Catalog, ModelDist};
 use crate::coordinator::platforms::PLATFORMS;
 use crate::coordinator::service::{DEdgeAi, ServeOptions};
@@ -172,6 +173,9 @@ pub struct ServeSummary {
     /// Mean time-in-system (submission -> result).
     pub mean_tis: f64,
     pub mean_queue_wait: f64,
+    /// Mean transmission time (upload + image return; the implicit
+    /// LAN when the network subsystem is off).
+    pub mean_trans: f64,
     pub throughput: f64,
     pub mean_utilization: f64,
     pub imbalance: f64,
@@ -199,6 +203,7 @@ impl ServeSummary {
             p99: m.p99_latency(),
             mean_tis: m.mean_latency(),
             mean_queue_wait: m.mean_queue_wait(),
+            mean_trans: m.mean_trans_time(),
             throughput: m.throughput(),
             mean_utilization: m.mean_utilization(),
             imbalance: m.imbalance(),
@@ -277,10 +282,12 @@ pub fn run_experiment(
         "ablation" => ablation(&ctx),
         "serve-sweep" => serve_sweep(&ctx),
         "placement-sweep" => placement_sweep(&ctx),
+        "topology-sweep" => topology_sweep(&ctx),
         "all" => {
             for id in [
                 "fig5", "fig6a", "fig6b", "fig7a", "fig7b", "fig8a", "fig8b",
                 "table5", "mem", "ablation", "serve-sweep", "placement-sweep",
+                "topology-sweep",
             ] {
                 println!("\n================ {id} ================");
                 run_experiment(id, env, agent, exp)?;
@@ -289,7 +296,8 @@ pub fn run_experiment(
         }
         other => bail!(
             "unknown experiment '{other}' (fig5|fig6a|fig6b|fig7a|fig7b|\
-             fig8a|fig8b|table5|mem|ablation|serve-sweep|placement-sweep|all)"
+             fig8a|fig8b|table5|mem|ablation|serve-sweep|placement-sweep|\
+             topology-sweep|all)"
         ),
     }
 }
@@ -819,13 +827,13 @@ fn ablation(ctx: &Ctx) -> Result<()> {
 /// time-in-system, throughput, and per-worker utilization.
 fn serve_sweep(ctx: &Ctx) -> Result<()> {
     let sc = &ctx.exp.serve;
-    let mut schedulers = sc.schedulers.clone();
-    if ctx.runtime.is_none() {
-        let before = schedulers.len();
-        schedulers.retain(|s| !s.starts_with("lad"));
-        if schedulers.len() < before {
-            log::warn!("serve-sweep: AOT artifacts unavailable; dropping lad-ts");
-        }
+    let schedulers = sc.schedulers.clone();
+    if ctx.runtime.is_none() && schedulers.iter().any(|s| s.starts_with("lad"))
+    {
+        log::info!(
+            "serve-sweep: AOT artifacts unavailable; lad-ts routes through \
+             the native LADN fallback"
+        );
     }
     if schedulers.is_empty() || sc.rates.is_empty() || sc.fleets.is_empty() {
         bail!("serve-sweep: empty grid (need rates, schedulers, fleets)");
@@ -900,9 +908,6 @@ fn serve_sweep(ctx: &Ctx) -> Result<()> {
             fnum(s.mean_utilization, 2),
             fnum(s.imbalance, 2),
         ]);
-        // index into the *configured* scheduler list, not the
-        // artifact-filtered one, so CSVs from machines with and
-        // without artifacts attribute rows to the same policy
         let sched_idx = sc.schedulers.iter().position(|x| x == sched).unwrap();
         csv_rows.push(vec![
             *workers as f64,
@@ -960,14 +965,10 @@ fn serve_sweep(ctx: &Ctx) -> Result<()> {
 fn placement_sweep(ctx: &Ctx) -> Result<()> {
     let pc = &ctx.exp.placement;
     let catalog = Catalog::standard();
-    let mut schedulers = pc.schedulers.clone();
-    schedulers.retain(|s| {
-        let lad = s.starts_with("lad");
-        if lad {
-            log::warn!("placement-sweep: lad-ts is not placement-aware; dropping");
-        }
-        !lad
-    });
+    // lad-ts is placement-aware since the feasibility-mask fix (π is
+    // renormalised over feasible workers, cold loads enter its state),
+    // so the configured scheduler list runs as-is.
+    let schedulers = pc.schedulers.clone();
     if schedulers.is_empty()
         || pc.rates.is_empty()
         || pc.vram_profiles.is_empty()
@@ -1009,6 +1010,7 @@ fn placement_sweep(ctx: &Ctx) -> Result<()> {
                         worker_vram: Some(budgets.clone()),
                         replace_every: pc.replace_every,
                         queue_cap,
+                        network: None,
                     });
                     cells.push((pi, mi, rate, sched.clone(), workers, mult));
                 }
@@ -1110,4 +1112,144 @@ fn placement_sweep(ctx: &Ctx) -> Result<()> {
         &csv_rows,
     )?;
     output::write_json(&ctx.exp.out_dir, "placement_sweep", &result)
+}
+
+// ---------------------------------------------------------------------------
+// topology-sweep — transmission-aware offloading across link profiles
+// (the LAN/WAN/degraded scenario axis of the paper's inter-edge
+// offloading problem; cf. arXiv:2507.10026, arXiv:2312.06203).
+// ---------------------------------------------------------------------------
+
+/// (arrival rate × dispatch policy × topology profile) grid of
+/// network-aware open-loop runs on the event engine, fanned over the
+/// executor with the usual `--jobs` bit-parity guarantee. Each cell
+/// reports latency measures plus the transmission share of
+/// time-in-system — the paper's delay decomposition, swept across link
+/// qualities.
+fn topology_sweep(ctx: &Ctx) -> Result<()> {
+    let tc = &ctx.exp.topology;
+    let schedulers = tc.schedulers.clone();
+    if schedulers.is_empty() || tc.rates.is_empty() || tc.profiles.is_empty() {
+        bail!("topology-sweep: empty grid (need rates, schedulers, profiles)");
+    }
+    if tc.arrivals == "batch" {
+        bail!(
+            "topology-sweep is an open-loop rate sweep; '--arrivals batch' \
+             has no rate dimension"
+        );
+    }
+    // validate every profile upfront (fail fast, before spawning work)
+    for profile in &tc.profiles {
+        Topology::parse(profile, tc.sites)?;
+    }
+    let z_dist = ZDist::parse(&tc.z_dist)?;
+    // one worker per site, the five-Jetson deployment shape
+    let workers = tc.sites;
+
+    let mut units = Vec::new();
+    let mut cells: Vec<(String, f64, String)> = Vec::new();
+    for profile in &tc.profiles {
+        for &rate in &tc.rates {
+            for sched in &schedulers {
+                units.push(ServeOptions {
+                    workers,
+                    requests: tc.requests,
+                    real_time: false,
+                    seed: ctx.exp.seed,
+                    artifacts_dir: ctx.exp.artifacts_dir.clone(),
+                    scheduler: sched.clone(),
+                    z_steps: clock::DEFAULT_Z,
+                    arrivals: ArrivalProcess::parse(&tc.arrivals, rate)?,
+                    z_dist: Some(z_dist.clone()),
+                    network: Some(NetOptions::profile_only(profile, tc.sites)),
+                    ..ServeOptions::default()
+                });
+                cells.push((profile.clone(), rate, sched.clone()));
+            }
+        }
+    }
+    println!(
+        "topology-sweep — open-loop {} arrivals, {} requests/cell, z ~ {}, \
+         {} site(s) ({} cells: {} profile(s) x {} rate(s) x {} policy(ies), \
+         --jobs {})",
+        tc.arrivals,
+        tc.requests,
+        tc.z_dist,
+        tc.sites,
+        units.len(),
+        tc.profiles.len(),
+        tc.rates.len(),
+        schedulers.len(),
+        ctx.exp.jobs
+    );
+    let t0 = std::time::Instant::now();
+    let summaries = run_serve_units(units, ctx.exp.jobs)?;
+    println!("  simulated in {:.1}s", t0.elapsed().as_secs_f64());
+
+    let mut table = Table::new(&[
+        "profile", "rate (req/s)", "rho", "policy", "p50 (s)", "p99 (s)",
+        "mean TIS (s)", "mean trans (s)", "tput (img/s)", "util",
+    ])
+    .left_first()
+    .title("topology-sweep — transmission-aware serving measures");
+    let mut result = Json::obj();
+    let mut csv_rows = Vec::new();
+    for ((profile, rate, sched), s) in cells.iter().zip(&summaries) {
+        let rho = rate / clock::fleet_capacity_rps(workers, z_dist.mean());
+        table.row(vec![
+            profile.clone(),
+            fnum(*rate, 3),
+            fnum(rho, 2),
+            sched.clone(),
+            fnum(s.p50, 2),
+            fnum(s.p99, 2),
+            fnum(s.mean_tis, 2),
+            fnum(s.mean_trans, 3),
+            fnum(s.throughput, 3),
+            fnum(s.mean_utilization, 2),
+        ]);
+        let profile_idx =
+            tc.profiles.iter().position(|x| x == profile).unwrap();
+        let sched_idx = tc.schedulers.iter().position(|x| x == sched).unwrap();
+        csv_rows.push(vec![
+            profile_idx as f64,
+            *rate,
+            rho,
+            sched_idx as f64,
+            s.p50,
+            s.p95,
+            s.p99,
+            s.mean_tis,
+            s.mean_trans,
+            s.throughput,
+            s.mean_utilization,
+        ]);
+        result.set(
+            &format!("{profile}_r{rate}_{sched}"),
+            Json::from_pairs(vec![
+                ("served", Json::num(s.served as f64)),
+                ("rho", Json::num(rho)),
+                ("p50", Json::num(s.p50)),
+                ("p95", Json::num(s.p95)),
+                ("p99", Json::num(s.p99)),
+                ("mean_tis", Json::num(s.mean_tis)),
+                ("mean_trans", Json::num(s.mean_trans)),
+                ("mean_queue_wait", Json::num(s.mean_queue_wait)),
+                ("throughput", Json::num(s.throughput)),
+                ("utilization", Json::num(s.mean_utilization)),
+                ("imbalance", Json::num(s.imbalance)),
+            ]),
+        );
+    }
+    println!("{}", table.render());
+    output::write_csv(
+        &ctx.exp.out_dir,
+        "topology_sweep",
+        &[
+            "profile_idx", "rate", "rho", "sched_idx", "p50", "p95", "p99",
+            "mean_tis", "mean_trans", "throughput", "utilization",
+        ],
+        &csv_rows,
+    )?;
+    output::write_json(&ctx.exp.out_dir, "topology_sweep", &result)
 }

@@ -164,6 +164,41 @@ fn placement_grid() -> Vec<ServeOptions> {
     units
 }
 
+/// topology-sweep style grid: (profile × rate × policy) runs with the
+/// inter-edge network on — origin sites, transfer legs, and the
+/// transmission-aware policy all on the determinism hook.
+fn topology_grid() -> Vec<ServeOptions> {
+    use dedgeai::coordinator::network::NetOptions;
+    let mut units = Vec::new();
+    for profile in ["uniform", "lan", "wan", "degraded:0"] {
+        for &rate in &[0.2, 0.35] {
+            for sched in ["least-loaded", "net-ll"] {
+                units.push(ServeOptions {
+                    workers: 5,
+                    requests: 40,
+                    scheduler: sched.into(),
+                    arrivals: ArrivalProcess::Poisson { rate },
+                    z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+                    network: Some(NetOptions::profile_only(profile, 5)),
+                    seed: BASE_SEED,
+                    ..ServeOptions::default()
+                });
+            }
+        }
+    }
+    units
+}
+
+#[test]
+fn topology_sweep_is_jobs_invariant() {
+    let seq = run_serve_units(topology_grid(), 1).unwrap();
+    let par = run_serve_units(topology_grid(), 4).unwrap();
+    assert_eq!(seq.len(), par.len());
+    for (i, (a, b)) in seq.iter().zip(&par).enumerate() {
+        assert_eq!(a, b, "topology unit {i} diverged between --jobs 1 and 4");
+    }
+}
+
 #[test]
 fn placement_sweep_is_jobs_invariant() {
     let seq = run_serve_units(placement_grid(), 1).unwrap();
