@@ -1,0 +1,180 @@
+//! The dynamic complement to `simlint`: run one serve configuration
+//! twice and assert the two runs are *bitwise* identical — summary
+//! metrics, per-link traffic books, and the per-stream RNG draw
+//! counts ([`crate::util::rng::RngAudit`]).
+//!
+//! The static rules catch the known ways determinism breaks at the
+//! source level; this harness catches the unknown ones at runtime,
+//! including cross-stream contamination (a code path consuming draws
+//! from the wrong named stream shifts that stream's count even when
+//! the summary happens to survive) — the bug class the "single-site
+//! runs draw no site randomness" discipline guards against.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{DEdgeAi, ServeMetrics, ServeOptions};
+use crate::util::rng::RngAudit;
+
+/// Outcome of one double run: any bitwise mismatches, plus the first
+/// run's audit and headline numbers for reporting.
+#[derive(Clone, Debug)]
+pub struct DeterminismReport {
+    /// Human-readable descriptions of every field that differed.
+    pub mismatches: Vec<String>,
+    /// Per-stream RNG draw counts from the first run (equal to the
+    /// second's when the report passes).
+    pub audit: RngAudit,
+    pub served: usize,
+    pub makespan: f64,
+}
+
+impl DeterminismReport {
+    pub fn passed(&self) -> bool {
+        self.mismatches.is_empty()
+    }
+}
+
+fn bitcmp(mm: &mut Vec<String>, name: &str, a: f64, b: f64) {
+    if a.to_bits() != b.to_bits() {
+        mm.push(format!("{name}: {a:?} vs {b:?}"));
+    }
+}
+
+/// Compare two runs' metrics bitwise (floats via `to_bits`, so -0.0
+/// vs 0.0 or differently-rounded equals both count as drift).
+pub fn compare(a: &ServeMetrics, b: &ServeMetrics) -> DeterminismReport {
+    let mut mm = Vec::new();
+    if a.count() != b.count() {
+        mm.push(format!("served: {} vs {}", a.count(), b.count()));
+    }
+    if a.per_worker() != b.per_worker() {
+        mm.push(format!(
+            "per-worker completions: {:?} vs {:?}",
+            a.per_worker(),
+            b.per_worker()
+        ));
+    }
+    if a.dropped() != b.dropped() {
+        mm.push(format!("dropped: {} vs {}", a.dropped(), b.dropped()));
+    }
+    if (a.cache_hits(), a.cache_misses(), a.evictions())
+        != (b.cache_hits(), b.cache_misses(), b.evictions())
+    {
+        mm.push(format!(
+            "cache books: {}/{}/{} vs {}/{}/{}",
+            a.cache_hits(),
+            a.cache_misses(),
+            a.evictions(),
+            b.cache_hits(),
+            b.cache_misses(),
+            b.evictions()
+        ));
+    }
+    if (a.queue_peak(), a.in_flight_peak())
+        != (b.queue_peak(), b.in_flight_peak())
+    {
+        mm.push(format!(
+            "queue peaks: {}/{} vs {}/{}",
+            a.queue_peak(),
+            a.in_flight_peak(),
+            b.queue_peak(),
+            b.in_flight_peak()
+        ));
+    }
+    bitcmp(&mut mm, "makespan", a.makespan(), b.makespan());
+    bitcmp(&mut mm, "mean latency", a.mean_latency(), b.mean_latency());
+    bitcmp(&mut mm, "median latency", a.median_latency(), b.median_latency());
+    bitcmp(&mut mm, "p95 latency", a.p95_latency(), b.p95_latency());
+    bitcmp(&mut mm, "p99 latency", a.p99_latency(), b.p99_latency());
+    bitcmp(&mut mm, "mean queue wait", a.mean_queue_wait(), b.mean_queue_wait());
+    bitcmp(&mut mm, "mean gen time", a.mean_gen_time(), b.mean_gen_time());
+    bitcmp(&mut mm, "mean trans time", a.mean_trans_time(), b.mean_trans_time());
+    bitcmp(&mut mm, "cold-load total", a.cold_load_s(), b.cold_load_s());
+    // link books: same keys, bitwise-equal traffic on each
+    if a.link_stats().len() != b.link_stats().len() {
+        mm.push(format!(
+            "link book size: {} vs {}",
+            a.link_stats().len(),
+            b.link_stats().len()
+        ));
+    } else {
+        for ((ka, sa), (kb, sb)) in
+            a.link_stats().iter().zip(b.link_stats().iter())
+        {
+            if ka != kb {
+                mm.push(format!("link keys diverge: {ka:?} vs {kb:?}"));
+                break;
+            }
+            if sa.transfers != sb.transfers
+                || sa.bits.to_bits() != sb.bits.to_bits()
+                || sa.secs.to_bits() != sb.secs.to_bits()
+            {
+                mm.push(format!("link {ka:?}: {sa:?} vs {sb:?}"));
+            }
+        }
+    }
+    if a.rng_audit() != b.rng_audit() {
+        mm.push(format!(
+            "per-stream RNG draws: {:?} vs {:?}",
+            a.rng_audit().entries(),
+            b.rng_audit().entries()
+        ));
+    }
+    DeterminismReport {
+        mismatches: mm,
+        audit: a.rng_audit().clone(),
+        served: a.count(),
+        makespan: a.makespan(),
+    }
+}
+
+/// Run `opts` twice on fresh engines and compare bitwise. Virtual
+/// clock only: a real-time run measures the wall clock, which is the
+/// one thing this harness exists to keep off simulated paths.
+pub fn double_run(opts: &ServeOptions) -> Result<DeterminismReport> {
+    if opts.real_time {
+        bail!(
+            "verify-determinism drives the virtual-clock engines; \
+             drop --real-time"
+        );
+    }
+    let a = DEdgeAi::new(opts.clone()).run_virtual()?;
+    let b = DEdgeAi::new(opts.clone()).run_virtual()?;
+    Ok(compare(&a, &b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ArrivalProcess;
+
+    #[test]
+    fn identical_runs_pass_and_report_streams() {
+        let opts = ServeOptions {
+            requests: 40,
+            arrivals: ArrivalProcess::Poisson { rate: 0.4 },
+            ..Default::default()
+        };
+        let rep = double_run(&opts).unwrap();
+        assert!(rep.passed(), "{:?}", rep.mismatches);
+        assert_eq!(rep.served, 40);
+        assert!(rep.audit.draws("arrival").unwrap() > 0);
+        assert!(rep.audit.draws("gen-jitter").unwrap() > 0);
+    }
+
+    #[test]
+    fn real_time_is_rejected() {
+        let opts = ServeOptions { real_time: true, ..Default::default() };
+        assert!(double_run(&opts).is_err());
+    }
+
+    #[test]
+    fn divergent_metrics_are_caught() {
+        let opts = ServeOptions::default();
+        let a = DEdgeAi::new(opts.clone()).run_virtual().unwrap();
+        let opts_b = ServeOptions { seed: 43, ..opts };
+        let b = DEdgeAi::new(opts_b).run_virtual().unwrap();
+        let rep = compare(&a, &b);
+        assert!(!rep.passed());
+    }
+}

@@ -1,0 +1,54 @@
+//! `simlint` — the determinism static-analysis pass plus its runtime
+//! complement.
+//!
+//! House style (like `util::json`): hand-rolled, zero new deps. Three
+//! pieces:
+//!
+//! - [`scanner`]: a comment/string-stripping Rust line scanner, so
+//!   rules match code tokens only and pragmas live in comments only;
+//! - [`rules`]: the rule engine — five determinism invariants with
+//!   per-line allow pragmas (comment marker `simlint:`, syntax in
+//!   docs/determinism.md), whole-file `allow-file` waivers, and
+//!   path-scoped allowlists — exposed as the `lint` subcommand on
+//!   the main binary;
+//! - [`determinism`]: the `verify-determinism` double-run harness,
+//!   asserting two fresh engine runs of one serve configuration are
+//!   bitwise identical down to per-stream RNG draw counts.
+//!
+//! `docs/determinism.md` documents each rule, the pragma syntax, and
+//! which parity test every invariant protects.
+
+pub mod determinism;
+pub mod report;
+pub mod rules;
+pub mod scanner;
+
+use std::path::PathBuf;
+
+pub use determinism::{compare, double_run, DeterminismReport};
+pub use report::{render, Finding};
+pub use rules::{lint_source, lint_tree, RULES};
+
+/// Default lint roots: `rust/src` (reported with bare relative paths,
+/// which the rule scopes key on) plus `examples/` when present, found
+/// by walking up from the cwd to the first ancestor holding ROADMAP.md
+/// — the same repo-root discovery `sim::bench` uses, so `cargo run --
+/// lint` behaves identically from the repo root or the crate dir.
+pub fn default_lint_roots() -> Vec<(PathBuf, String)> {
+    let mut dir =
+        std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        if dir.join("ROADMAP.md").exists() {
+            let mut roots = vec![(dir.join("rust").join("src"), String::new())];
+            let examples = dir.join("examples");
+            if examples.is_dir() {
+                roots.push((examples, "examples/".to_string()));
+            }
+            return roots;
+        }
+        if !dir.pop() {
+            // fall back to a plain crate layout
+            return vec![(PathBuf::from("src"), String::new())];
+        }
+    }
+}

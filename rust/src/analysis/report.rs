@@ -1,0 +1,61 @@
+//! `simlint` findings and their human-readable rendering.
+
+/// One rule violation at a specific source line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    /// Rule name (`wall-clock`, `unordered-iter`, ... or `pragma` for
+    /// a malformed suppression).
+    pub rule: &'static str,
+    /// Path relative to the lint root, with `/` separators.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// What went wrong and what the fix is.
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(
+        rule: &'static str,
+        file: &str,
+        line: usize,
+        message: String,
+    ) -> Self {
+        Self { rule, file: file.to_string(), line, message }
+    }
+}
+
+/// Render findings one per line, `file:line [rule] message`, sorted by
+/// (file, line) for stable output.
+pub fn render(findings: &[Finding]) -> String {
+    let mut sorted: Vec<&Finding> = findings.iter().collect();
+    sorted.sort_by(|a, b| {
+        (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule))
+    });
+    let mut out = String::new();
+    for f in sorted {
+        out.push_str(&format!(
+            "{}:{} [{}] {}\n",
+            f.file, f.line, f.rule, f.message
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_is_sorted_and_one_per_line() {
+        let findings = vec![
+            Finding::new("wall-clock", "b.rs", 2, "late".into()),
+            Finding::new("wall-clock", "a.rs", 9, "early".into()),
+        ];
+        let text = render(&findings);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("a.rs:9 [wall-clock]"));
+        assert!(lines[1].starts_with("b.rs:2 [wall-clock]"));
+    }
+}

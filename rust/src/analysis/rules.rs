@@ -1,0 +1,461 @@
+//! The `simlint` rule engine: determinism invariants as machine-checked
+//! rules over scanned source lines.
+//!
+//! Every guarantee the simulation core makes — `--jobs N` bit-parity,
+//! streaming ≡ eager, uniform-topology ≡ pre-network — rests on
+//! conventions that one stray line can silently break. Each rule here
+//! encodes one such convention (see `docs/determinism.md` for the
+//! rationale-per-rule):
+//!
+//! - `wall-clock`: `Instant::now` / `SystemTime` only inside the
+//!   wall-clock allowlist (bench timers, the logger, the real-time
+//!   PJRT path, experiment wallclock reports).
+//! - `unseeded-rng`: no `rand::` / `thread_rng` / OS entropy anywhere
+//!   but `util/rng.rs` — all randomness flows through named seeded
+//!   streams.
+//! - `unordered-iter`: no `HashMap` / `HashSet` on simulated paths
+//!   (`coordinator/`, `sim/`, `agents/`, `runtime/`); iteration order
+//!   would vary run to run. Keyed-lookup-only uses may pragma out.
+//! - `unsafe-undocumented`: every `unsafe` block or impl carries a
+//!   `SAFETY:` comment.
+//! - `float-fold`: no `.sum::<f32/f64>()` folds on sim paths without
+//!   an order argument — float addition does not associate.
+//!
+//! Suppressions: an allow pragma — the comment marker `simlint:`
+//! followed by `allow(rule-name)` (several names comma-separate) —
+//! on the offending line or as the trailing comment line directly
+//! above it, and `allow-file(rule-name)` anywhere for whole-file
+//! waivers. The exact syntax is shown in docs/determinism.md and
+//! pinned by the fixture suite (this paragraph deliberately never
+//! spells a full pragma, which would parse as one).
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::report::Finding;
+use super::scanner::{scan, SourceLine};
+
+/// All rule names, the single registry pragmas are validated against.
+pub const RULES: [&str; 5] = [
+    "wall-clock",
+    "unseeded-rng",
+    "unordered-iter",
+    "unsafe-undocumented",
+    "float-fold",
+];
+
+/// Files (exact) and directories (trailing `/`) where wall-clock reads
+/// are legitimate: bench timers, the logger's timestamps, the
+/// real-time PJRT path, and experiment wallclock reports.
+const WALL_CLOCK_ALLOW: [&str; 5] = [
+    "sim/bench.rs",
+    "util/logger.rs",
+    "coordinator/worker.rs",
+    "sim/experiments.rs",
+    "runtime/",
+];
+
+/// Simulated paths where unordered-collection iteration would break
+/// bit-parity.
+const UNORDERED_SCOPE: [&str; 4] =
+    ["coordinator/", "sim/", "agents/", "runtime/"];
+
+/// Simulated paths where float-fold order matters.
+const FLOAT_FOLD_SCOPE: [&str; 4] = ["coordinator/", "sim/", "agents/", "env/"];
+
+fn path_allowed(rel: &str, list: &[&str]) -> bool {
+    list.iter().any(|a| {
+        if a.ends_with('/') {
+            rel.starts_with(a)
+        } else {
+            rel == *a
+        }
+    })
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Whitespace-insensitive pattern search over a code channel, with
+/// identifier boundaries enforced at pattern edges that end in
+/// identifier characters (`HashMap` must not match `HashMaps`, and
+/// `rand::` must not match `operand::`).
+fn has_pattern(code: &str, pat: &str) -> bool {
+    let sq: Vec<char> = code.chars().filter(|c| !c.is_whitespace()).collect();
+    let p: Vec<char> = pat.chars().filter(|c| !c.is_whitespace()).collect();
+    if p.is_empty() || sq.len() < p.len() {
+        return false;
+    }
+    let first_ident = is_ident_char(p[0]);
+    let last_ident = is_ident_char(p[p.len() - 1]);
+    let mut i = 0;
+    while i + p.len() <= sq.len() {
+        if sq[i..i + p.len()] == p[..] {
+            let pre_ok = !first_ident || i == 0 || !is_ident_char(sq[i - 1]);
+            let post_ok = !last_ident
+                || i + p.len() == sq.len()
+                || !is_ident_char(sq[i + p.len()]);
+            if pre_ok && post_ok {
+                return true;
+            }
+        }
+        i += 1;
+    }
+    false
+}
+
+/// Identifier-boundary word search on the *raw* code channel — for
+/// bare-keyword patterns, where the whitespace squeeze of
+/// [`has_pattern`] would glue neighboring tokens together (`unsafe
+/// impl` squeezes to `unsafeimpl`, hiding the keyword).
+fn has_word(code: &str, word: &str) -> bool {
+    let sq: Vec<char> = code.chars().collect();
+    let w: Vec<char> = word.chars().collect();
+    if w.is_empty() || sq.len() < w.len() {
+        return false;
+    }
+    let mut i = 0;
+    while i + w.len() <= sq.len() {
+        if sq[i..i + w.len()] == w[..] {
+            let pre_ok = i == 0 || !is_ident_char(sq[i - 1]);
+            let post_ok = i + w.len() == sq.len()
+                || !is_ident_char(sq[i + w.len()]);
+            if pre_ok && post_ok {
+                return true;
+            }
+        }
+        i += 1;
+    }
+    false
+}
+
+/// Pragmas parsed off one comment channel: per-line allows, file-level
+/// allows, and any rule names not in [`RULES`] (malformed pragmas are
+/// findings themselves, so suppressions cannot rot).
+#[derive(Debug, Default)]
+struct Pragmas {
+    line: Vec<String>,
+    file: Vec<String>,
+    unknown: Vec<String>,
+}
+
+fn parse_pragmas(comment: &str) -> Pragmas {
+    let mut out = Pragmas::default();
+    let mut rest = comment;
+    while let Some(pos) = rest.find("simlint:") {
+        rest = rest[pos + "simlint:".len()..].trim_start();
+        let (file_level, after) = if let Some(a) = rest.strip_prefix("allow-file(")
+        {
+            (true, a)
+        } else if let Some(a) = rest.strip_prefix("allow(") {
+            (false, a)
+        } else {
+            continue;
+        };
+        let Some(close) = after.find(')') else {
+            out.unknown.push(after.trim().to_string());
+            rest = after;
+            continue;
+        };
+        for name in after[..close].split(',') {
+            let name = name.trim().to_string();
+            if RULES.contains(&name.as_str()) {
+                if file_level {
+                    out.file.push(name);
+                } else {
+                    out.line.push(name);
+                }
+            } else if !name.is_empty() {
+                out.unknown.push(name);
+            }
+        }
+        rest = &after[close + 1..];
+    }
+    out
+}
+
+/// Whether the `unsafe` on line `i` is covered by a `SAFETY:` comment:
+/// trailing on the same line, or in the contiguous comment block
+/// directly above (walking through consecutive `unsafe` lines, so a
+/// block of impls can share one comment — clippy's per-impl discipline
+/// is still enforced separately in CI).
+fn unsafe_documented(lines: &[SourceLine], i: usize) -> bool {
+    if lines[i].comment.contains("SAFETY:") {
+        return true;
+    }
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let l = &lines[j];
+        let code_blank = l.code.trim().is_empty();
+        if l.comment.contains("SAFETY:") {
+            return true;
+        }
+        if code_blank && !l.comment.trim().is_empty() {
+            continue; // comment-only line: keep walking the block
+        }
+        if !code_blank && has_word(&l.code, "unsafe") {
+            continue; // consecutive unsafe lines share the block above
+        }
+        break; // blank line or unrelated code ends the comment block
+    }
+    false
+}
+
+/// Lint one source file (already read into `content`) under its
+/// lint-root-relative path. Pure — the self-test suite drives it on
+/// fixture snippets with synthetic paths.
+pub fn lint_source(rel: &str, content: &str) -> Vec<Finding> {
+    let lines = scan(content);
+    let mut findings = Vec::new();
+    let mut file_allows: Vec<String> = Vec::new();
+    let mut line_allows: Vec<Vec<String>> = vec![Vec::new(); lines.len()];
+    for (i, l) in lines.iter().enumerate() {
+        let pragmas = parse_pragmas(&l.comment);
+        for u in pragmas.unknown {
+            findings.push(Finding::new(
+                "pragma",
+                rel,
+                i + 1,
+                format!(
+                    "unknown rule '{u}' in simlint pragma (known: {})",
+                    RULES.join(", ")
+                ),
+            ));
+        }
+        file_allows.extend(pragmas.file);
+        if pragmas.line.is_empty() {
+            continue;
+        }
+        if l.code.trim().is_empty() {
+            // standalone pragma comment: applies to the next code line,
+            // reachable through the rest of its comment block
+            let mut j = i + 1;
+            while j < lines.len()
+                && lines[j].code.trim().is_empty()
+                && !lines[j].comment.trim().is_empty()
+            {
+                j += 1;
+            }
+            if j < lines.len() {
+                line_allows[j].extend(pragmas.line);
+            }
+        } else {
+            line_allows[i].extend(pragmas.line);
+        }
+    }
+    let allowed = |rule: &str, i: usize| {
+        file_allows.iter().any(|r| r == rule)
+            || line_allows[i].iter().any(|r| r == rule)
+    };
+    let wall_clock_on = !path_allowed(rel, &WALL_CLOCK_ALLOW);
+    let unseeded_on = rel != "util/rng.rs";
+    let unordered_on = path_allowed(rel, &UNORDERED_SCOPE);
+    let float_fold_on = path_allowed(rel, &FLOAT_FOLD_SCOPE);
+    for (i, l) in lines.iter().enumerate() {
+        if l.code.trim().is_empty() {
+            continue;
+        }
+        if wall_clock_on && !allowed("wall-clock", i) {
+            for pat in ["Instant::now", "SystemTime"] {
+                if has_pattern(&l.code, pat) {
+                    findings.push(Finding::new(
+                        "wall-clock",
+                        rel,
+                        i + 1,
+                        format!(
+                            "{pat} outside the wall-clock allowlist — \
+                             simulated paths must read virtual time only"
+                        ),
+                    ));
+                }
+            }
+        }
+        if unseeded_on && !allowed("unseeded-rng", i) {
+            for pat in
+                ["rand::", "thread_rng", "from_entropy", "OsRng", "getrandom"]
+            {
+                if has_pattern(&l.code, pat) {
+                    findings.push(Finding::new(
+                        "unseeded-rng",
+                        rel,
+                        i + 1,
+                        format!(
+                            "{pat} — all randomness must flow through \
+                             util::rng's named seeded streams"
+                        ),
+                    ));
+                }
+            }
+        }
+        if unordered_on && !allowed("unordered-iter", i) {
+            for pat in ["HashMap", "HashSet"] {
+                if has_pattern(&l.code, pat) {
+                    findings.push(Finding::new(
+                        "unordered-iter",
+                        rel,
+                        i + 1,
+                        format!(
+                            "{pat} on a simulated path — iteration order \
+                             varies run to run; use BTreeMap/Vec, or \
+                             pragma-allow a keyed-lookup-only use"
+                        ),
+                    ));
+                }
+            }
+        }
+        if float_fold_on
+            && !allowed("float-fold", i)
+            && (has_pattern(&l.code, ".sum::<f32>()")
+                || has_pattern(&l.code, ".sum::<f64>()"))
+        {
+            findings.push(Finding::new(
+                "float-fold",
+                rel,
+                i + 1,
+                "float .sum() on a simulated path — addition order must \
+                 be provably deterministic; fold an ordered source or \
+                 pragma-allow with the ordering argument"
+                    .to_string(),
+            ));
+        }
+        if has_word(&l.code, "unsafe")
+            && !allowed("unsafe-undocumented", i)
+            && !unsafe_documented(&lines, i)
+        {
+            findings.push(Finding::new(
+                "unsafe-undocumented",
+                rel,
+                i + 1,
+                "unsafe without a SAFETY: comment directly above it"
+                    .to_string(),
+            ));
+        }
+    }
+    findings
+}
+
+fn collect_rs(dir: &Path, rel: &str, out: &mut Vec<String>) -> Result<()> {
+    let entries = fs::read_dir(dir)
+        .with_context(|| format!("reading lint dir {}", dir.display()))?;
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let child_rel = if rel.is_empty() {
+            name.clone()
+        } else {
+            format!("{rel}/{name}")
+        };
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, &child_rel, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(child_rel);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root`, reporting paths as
+/// `prefix` + root-relative path. Returns (files scanned, findings);
+/// the walk order is sorted so output is deterministic.
+pub fn lint_tree(root: &Path, prefix: &str) -> Result<(usize, Vec<Finding>)> {
+    let mut files = Vec::new();
+    collect_rs(root, "", &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for rel in &files {
+        let path = root.join(rel);
+        let content = fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        findings.extend(lint_source(&format!("{prefix}{rel}"), &content));
+    }
+    Ok((files.len(), findings))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pattern_boundaries() {
+        assert!(has_pattern("let m = HashMap::new();", "HashMap"));
+        assert!(has_pattern("let m: HashMap<u32, u32>", "HashMap"));
+        assert!(!has_pattern("let m = MyHashMapLike::new();", "HashMap"));
+        assert!(!has_pattern("let hashmaps = 3;", "HashMap"));
+        assert!(has_pattern("rand::thread_rng()", "rand::"));
+        assert!(!has_pattern("operand::new()", "rand::"));
+        assert!(has_pattern("Instant :: now()", "Instant::now"));
+        assert!(has_pattern("xs.iter().sum::<f32>()", ".sum::<f32>()"));
+        assert!(!has_pattern("xs.iter().sum::<u64>()", ".sum::<f32>()"));
+    }
+
+    #[test]
+    fn pragma_parsing() {
+        let p = parse_pragmas(" simlint: allow(wall-clock, float-fold)");
+        assert_eq!(p.line, vec!["wall-clock", "float-fold"]);
+        assert!(p.file.is_empty() && p.unknown.is_empty());
+        let p = parse_pragmas(" simlint: allow-file(unordered-iter) — keyed");
+        assert_eq!(p.file, vec!["unordered-iter"]);
+        let p = parse_pragmas(" simlint: allow(no-such-rule)");
+        assert_eq!(p.unknown, vec!["no-such-rule"]);
+    }
+
+    #[test]
+    fn scoping_by_path() {
+        let clock = "fn f() { let t = std::time::Instant::now(); }\n";
+        assert_eq!(lint_source("coordinator/x.rs", clock).len(), 1);
+        assert!(lint_source("sim/bench.rs", clock).is_empty());
+        assert!(lint_source("runtime/deep/x.rs", clock).is_empty());
+        let map = "use std::collections::HashMap;\n";
+        assert_eq!(lint_source("sim/x.rs", map).len(), 1);
+        assert!(lint_source("util/x.rs", map).is_empty());
+    }
+
+    #[test]
+    fn tokens_in_strings_and_comments_do_not_fire() {
+        let src = "// mentions Instant::now and HashMap\n\
+                   let s = \"SystemTime thread_rng\";\n";
+        assert!(lint_source("coordinator/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn standalone_pragma_covers_the_next_code_line() {
+        let src = "// simlint: allow(wall-clock) — fixture rationale\n\
+                   // continues over a second comment line\n\
+                   let t = std::time::Instant::now();\n";
+        assert!(lint_source("coordinator/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_needs_safety_comment() {
+        let bad = "fn f(p: *const u8) -> u8 { unsafe { *p } }\n";
+        let f = lint_source("util/x.rs", bad);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "unsafe-undocumented");
+        // the keyword must survive its following token (the
+        // whitespace-squeezed matcher would glue `unsafe impl`)
+        let bad_impl = "unsafe impl Send for X {}\n";
+        let f = lint_source("util/x.rs", bad_impl);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "unsafe-undocumented");
+        let good = "// SAFETY: caller guarantees p is valid.\n\
+                    fn f(p: *const u8) -> u8 { unsafe { *p } }\n";
+        assert!(lint_source("util/x.rs", good).is_empty());
+        let shared = "// SAFETY: plain data, no interior mutability.\n\
+                      unsafe impl Send for X {}\n\
+                      unsafe impl Sync for X {}\n";
+        assert!(lint_source("util/x.rs", shared).is_empty());
+    }
+
+    #[test]
+    fn unknown_pragma_rule_is_itself_a_finding() {
+        let src = "let x = 1; // simlint: allow(wibble)\n";
+        let f = lint_source("util/x.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "pragma");
+    }
+}

@@ -1,0 +1,294 @@
+//! Comment/string-stripping Rust line scanner — the front end of
+//! `simlint`.
+//!
+//! The rule engine ([`super::rules`]) matches determinism-sensitive
+//! tokens (`Instant::now`, `HashMap`, ...) against *code* only; a
+//! token inside a string literal, a doc comment, or a block comment
+//! must never trip a rule, and pragma text lives in *comments* only.
+//! [`scan`] therefore splits every source line into the two channels:
+//! the code with all literal bodies blanked out, and the concatenated
+//! comment text.
+//!
+//! This is a character-level state machine, not a full lexer: it
+//! understands line comments, nested block comments, string literals
+//! with escapes, raw (and byte/raw-byte) strings with `#` fences, and
+//! disambiguates char literals from lifetimes by lookahead. That is
+//! exactly the subset needed to blank literals correctly; everything
+//! else passes through as code.
+
+/// One source line, split into its code and comment channels.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SourceLine {
+    /// Code with comment text removed and string/char literal bodies
+    /// blanked (the delimiting quotes survive as markers).
+    pub code: String,
+    /// All comment text on the line (line and block comments), without
+    /// the `//` / `/*` delimiters.
+    pub comment: String,
+}
+
+enum State {
+    Code,
+    LineComment,
+    /// Nested block comment with its current depth.
+    Block(u32),
+    Str,
+    /// Raw string, closed by `"` followed by this many `#`s.
+    RawStr(usize),
+}
+
+/// Split `content` into per-line (code, comment) channels. Multi-line
+/// constructs (block comments, multi-line strings) keep their state
+/// across lines, so line accounting stays exact.
+pub fn scan(content: &str) -> Vec<SourceLine> {
+    let chars: Vec<char> = content.chars().collect();
+    let mut lines = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut state = State::Code;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(state, State::LineComment) {
+                state = State::Code;
+            }
+            lines.push(SourceLine {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+            });
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                let next = chars.get(i + 1).copied();
+                let prev_ident = i > 0
+                    && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_');
+                if c == '/' && next == Some('/') {
+                    state = State::LineComment;
+                    code.push(' ');
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    state = State::Block(1);
+                    code.push(' ');
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    state = State::Str;
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !prev_ident {
+                    // r"...", r#"..."#, b"...", br"...", br#"..."#
+                    let mut j = i + 1;
+                    if c == 'b' && chars.get(j) == Some(&'r') {
+                        j += 1;
+                    }
+                    let mut hashes = 0;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    let raw = c == 'r' || j > i + 1;
+                    if chars.get(j) == Some(&'"') && (raw || hashes == 0) {
+                        code.push('"');
+                        if raw {
+                            state = State::RawStr(hashes);
+                        } else {
+                            state = State::Str; // b"..." escapes like str
+                        }
+                        i = j + 1;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // char literal vs lifetime/label, by lookahead
+                    if next == Some('\\') {
+                        // escaped char literal: consume to closing quote
+                        let mut j = i + 2;
+                        if j < chars.len() {
+                            j += 1; // the escaped character itself
+                        }
+                        while j < chars.len()
+                            && chars[j] != '\''
+                            && chars[j] != '\n'
+                        {
+                            j += 1;
+                        }
+                        code.push(' ');
+                        i = (j + 1).min(chars.len());
+                    } else if chars.get(i + 2) == Some(&'\'')
+                        && next != Some('\'')
+                    {
+                        // simple char literal 'x' (including 'x' = '"')
+                        code.push(' ');
+                        i += 3;
+                    } else {
+                        // lifetime ('a) or loop label ('outer:)
+                        code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            State::Block(depth) => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    state = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::Block(depth - 1)
+                    };
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = State::Block(depth + 1);
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    i += 2; // skip the escaped character
+                } else if c == '"' {
+                    code.push('"');
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' {
+                    let closed = (0..hashes)
+                        .all(|k| chars.get(i + 1 + k) == Some(&'#'));
+                    if closed {
+                        code.push('"');
+                        state = State::Code;
+                        i += 1 + hashes;
+                    } else {
+                        i += 1;
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        lines.push(SourceLine { code, comment });
+    }
+    lines
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one(src: &str) -> SourceLine {
+        let lines = scan(src);
+        assert_eq!(lines.len(), 1, "{lines:?}");
+        lines.into_iter().next().unwrap()
+    }
+
+    #[test]
+    fn plain_code_passes_through() {
+        let l = one("let x = HashMap::new();");
+        assert_eq!(l.code, "let x = HashMap::new();");
+        assert!(l.comment.is_empty());
+    }
+
+    #[test]
+    fn line_comment_goes_to_comment_channel() {
+        let l = one("let x = 1; // Instant::now lives here");
+        assert!(l.code.contains("let x = 1;"));
+        assert!(!l.code.contains("Instant"));
+        assert!(l.comment.contains("Instant::now"));
+    }
+
+    #[test]
+    fn string_bodies_are_blanked() {
+        let l = one("let s = \"Instant::now and // fake comment\";");
+        assert!(!l.code.contains("Instant"));
+        assert!(!l.code.contains("fake"));
+        assert!(l.comment.is_empty());
+        assert!(l.code.contains("let s = "));
+    }
+
+    #[test]
+    fn escaped_quotes_stay_inside_the_string() {
+        let l = one(r#"let s = "a \" HashMap \" b"; let t = 1;"#);
+        assert!(!l.code.contains("HashMap"));
+        assert!(l.code.contains("let t = 1;"));
+    }
+
+    #[test]
+    fn raw_strings_with_fences() {
+        let l = one(r##"let s = r#"HashMap " still inside"# ; done()"##);
+        assert!(!l.code.contains("HashMap"));
+        assert!(l.code.contains("done()"));
+    }
+
+    #[test]
+    fn byte_and_raw_byte_strings() {
+        let l = one(r#"let s = b"HashMap"; let t = br"SystemTime";"#);
+        assert!(!l.code.contains("HashMap"));
+        assert!(!l.code.contains("SystemTime"));
+    }
+
+    #[test]
+    fn identifier_ending_in_r_is_not_a_raw_string() {
+        let l = one("let var = attr(\"HashMap\");");
+        assert!(l.code.contains("let var = attr("));
+        assert!(!l.code.contains("HashMap"));
+    }
+
+    #[test]
+    fn char_literals_are_blanked_lifetimes_survive() {
+        let l = one("fn f<'a>(x: &'a str) -> char { '\"' }");
+        assert!(l.code.contains("fn f<'a>(x: &'a str)"));
+        // the quote char literal must not open a string: the brace
+        // after it is still code
+        assert!(l.code.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn escaped_char_literal() {
+        let l = one(r"let c = '\n'; let d = '\''; after()");
+        assert!(l.code.contains("after()"));
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let lines = scan("a /* one /* two */ still */ b\nc /* open\nmid\nend */ d\n");
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].code.contains('a') && lines[0].code.contains('b'));
+        assert!(!lines[0].code.contains("still"));
+        assert!(lines[0].comment.contains("two"));
+        assert!(lines[1].code.contains('c'));
+        assert!(lines[2].code.is_empty());
+        assert!(lines[2].comment.contains("mid"));
+        assert!(lines[3].code.contains('d'));
+    }
+
+    #[test]
+    fn multi_line_strings_keep_line_count() {
+        let lines = scan("let s = \"first\nsecond HashMap\nthird\"; x()\n");
+        assert_eq!(lines.len(), 3);
+        assert!(!lines[1].code.contains("HashMap"));
+        assert!(lines[2].code.contains("x()"));
+    }
+
+    #[test]
+    fn trailing_line_without_newline() {
+        let lines = scan("a\nb");
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[1].code, "b");
+    }
+}

@@ -104,6 +104,12 @@ impl Corpus {
     pub fn batch(&mut self, n: usize) -> Vec<String> {
         (0..n).map(|_| self.caption()).collect()
     }
+
+    /// Base draws the caption stream has consumed (three per
+    /// descriptor) — feeds the per-stream determinism audit.
+    pub fn rng_draws(&self) -> u64 {
+        self.rng.draws()
+    }
 }
 
 #[cfg(test)]

@@ -7,6 +7,7 @@
 use std::cell::RefCell;
 use std::collections::BTreeMap;
 
+use crate::util::rng::RngAudit;
 use crate::util::stats::{percentile_sorted, Welford};
 
 use super::message::Response;
@@ -60,6 +61,10 @@ pub struct ServeMetrics {
     queue_peak: usize,
     /// High-water mark of admitted-but-incomplete requests.
     in_flight_peak: usize,
+    /// Per-stream RNG draw counts, recorded by the virtual-clock
+    /// engines at drain time (empty on the real-time path). The
+    /// `verify-determinism` harness compares it bitwise across runs.
+    rng_audit: RngAudit,
 }
 
 impl ServeMetrics {
@@ -84,6 +89,7 @@ impl ServeMetrics {
             dropped: 0,
             queue_peak: 0,
             in_flight_peak: 0,
+            rng_audit: RngAudit::new(),
         }
     }
 
@@ -368,6 +374,17 @@ impl ServeMetrics {
 
     pub fn per_worker(&self) -> &[u64] {
         &self.per_worker
+    }
+
+    /// Record the engine's per-stream RNG draw ledger at drain time.
+    pub fn set_rng_audit(&mut self, audit: RngAudit) {
+        self.rng_audit = audit;
+    }
+
+    /// Per-stream RNG draw counts (empty when the engine did not
+    /// record them, e.g. the real-time path).
+    pub fn rng_audit(&self) -> &RngAudit {
+        &self.rng_audit
     }
 }
 

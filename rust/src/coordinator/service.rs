@@ -364,7 +364,8 @@ impl DEdgeAi {
         // event clock per worker: time the worker becomes free
         let mut free_at = vec![0.0f64; self.opts.workers];
         let mut rng = Rng::new(self.opts.seed ^ 0xC0FFEE);
-        for req in self.source() {
+        let mut source = self.source();
+        for req in &mut source {
             let w = router.dispatch(&req, None)?;
             let (up, gen, down) =
                 Self::service_times(&req, &mut rng, 1.0, None, w);
@@ -387,6 +388,9 @@ impl DEdgeAi {
             };
             metrics.record(&resp, done);
         }
+        let mut audit = source.audit();
+        audit.note("gen-jitter", rng.draws());
+        metrics.set_rng_audit(audit);
         Ok(metrics)
     }
 
@@ -597,6 +601,9 @@ impl DEdgeAi {
             0.0,
             "event engine drained but pending load remains"
         );
+        let mut audit = source.audit();
+        audit.note("gen-jitter", rng.draws());
+        metrics.set_rng_audit(audit);
         Ok(metrics)
     }
 
@@ -616,7 +623,8 @@ impl DEdgeAi {
         let mut rng = Rng::new(self.opts.seed ^ 0xC0FFEE);
         let mut queue = EventQueue::new();
         let mut arrivals_left = 0usize;
-        for req in self.source() {
+        let mut source = self.source();
+        for req in &mut source {
             queue.push(req.submitted_at, Event::Arrival(req));
             arrivals_left += 1;
         }
@@ -758,6 +766,11 @@ impl DEdgeAi {
             0.0,
             "event engine drained but pending load remains"
         );
+        // same ledger the streaming engine records — audit parity is
+        // part of the bitwise-parity contract
+        let mut audit = source.audit();
+        audit.note("gen-jitter", rng.draws());
+        metrics.set_rng_audit(audit);
         Ok(metrics)
     }
 
@@ -810,6 +823,8 @@ impl DEdgeAi {
         let mut router = Router::new(self.make_policy(Some(&rt))?, self.opts.workers);
         drop(rt);
 
+        // simlint: allow(wall-clock) — the real-time path measures the
+        // wall clock by definition
         let epoch = Instant::now();
         let (resp_tx, resp_rx) = channel();
         let workers: Vec<_> = (0..self.opts.workers)
@@ -857,6 +872,7 @@ impl DEdgeAi {
 /// CLI entry: run and print the serving report.
 pub fn serve_and_report(opts: &ServeOptions) -> Result<()> {
     let sys = DEdgeAi::new(opts.clone());
+    // simlint: allow(wall-clock) — CLI wallclock report, not sim time
     let t0 = Instant::now();
     let metrics = sys.run()?;
     let wall = t0.elapsed().as_secs_f64();

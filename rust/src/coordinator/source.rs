@@ -20,7 +20,7 @@
 //! the *engine state* is O(in-flight); metrics still record
 //! per-completion measures.)
 
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, RngAudit};
 
 use super::arrivals::{ArrivalGen, ArrivalProcess, ZDist};
 use super::corpus::Corpus;
@@ -82,6 +82,20 @@ impl RequestSource {
     /// Requests not yet emitted.
     pub fn remaining(&self) -> usize {
         self.remaining
+    }
+
+    /// Per-stream draw counts for the five named streams this source
+    /// owns, in trace order. Equal audits across two runs of the same
+    /// configuration certify no cross-stream contamination (a fixed-z
+    /// run must report `z: 0`, a single-site run `origin: 0`).
+    pub fn audit(&self) -> RngAudit {
+        let mut audit = RngAudit::new();
+        audit.note("arrival", self.arr_rng.draws());
+        audit.note("caption", self.corpus.rng_draws());
+        audit.note("z", self.z_rng.draws());
+        audit.note("model", self.m_rng.draws());
+        audit.note("origin", self.site_rng.draws());
+        audit
     }
 }
 

@@ -18,6 +18,7 @@
 //! self-contained once `make artifacts` has run.
 
 pub mod agents;
+pub mod analysis;
 pub mod config;
 pub mod coordinator;
 pub mod env;

@@ -7,6 +7,11 @@
 //!   serve   — run the DEdgeAI serving prototype (workers + router)
 //!   bench   — time the canonical serving scenarios and record the
 //!             perf-trajectory point (BENCH_serve.json)
+//!   lint    — run simlint, the determinism static-analysis pass,
+//!             over rust/src (+ examples/); non-zero exit on findings
+//!   verify-determinism — run one serve configuration twice and
+//!             assert bitwise-identical metrics, link books, and
+//!             per-stream RNG draw counts
 //!   info    — environment/calibration summary
 //!
 //! Common options: --artifacts DIR, --out DIR, --seed N, --episodes N,
@@ -40,6 +45,8 @@ USAGE:
                 [--worker-vram 24,24,24,24,48] [--queue-cap 50]
                 [--topology wan --sites 5 --site-of 0,1,2,3,4]
   dedgeai bench [--bench-requests 1000000] [--bench-out BENCH_serve.json]
+  dedgeai lint [--lint-root DIR]
+  dedgeai verify-determinism [any serve option]
   dedgeai info
 
 OPTIONS (shared):
@@ -112,6 +119,16 @@ OPTIONS (network / topology-sweep):
                      e.g. '1000,200;150,1000' (RTTs keep the profile)
   --topology-profiles P  topology-sweep profiles, comma-separated,
                      e.g. uniform,lan,wan,degraded:0
+
+OPTIONS (lint / verify-determinism):
+  --lint-root DIR    lint this directory instead of auto-discovering
+                     rust/src (+ examples/) from the repo root; rule
+                     scopes key on lint-root-relative paths
+  verify-determinism accepts every serve option. With no flags it
+  exercises the full stack — wan topology, model mix over
+  heterogeneous VRAM, poisson arrivals, net-ll routing — twice, and
+  fails unless the runs are bitwise identical down to per-stream RNG
+  draw counts. Virtual clock only (--real-time is rejected).
 ";
 
 fn main() {
@@ -243,6 +260,8 @@ fn run(args: &Args) -> Result<()> {
         "exp" => cmd_exp(args),
         "serve" => cmd_serve(args),
         "bench" => cmd_bench(args),
+        "lint" => cmd_lint(args),
+        "verify-determinism" => cmd_verify_determinism(args),
         "info" => cmd_info(args),
         other => bail!("unknown subcommand '{other}'\n{USAGE}"),
     }
@@ -271,6 +290,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let runtime = if method.is_learner() { load_runtime(&exp) } else { None };
     let mut agent =
         make_scheduler(method, env_cfg.num_bs, &agent_cfg, runtime, exp.seed)?;
+    // simlint: allow(wall-clock) — training wallclock report, not sim time
     let t0 = std::time::Instant::now();
     let run = runner::run_training(&env_cfg, agent.as_mut(), exp.episodes, exp.seed)?;
     let dt = t0.elapsed().as_secs_f64();
@@ -305,7 +325,10 @@ fn cmd_exp(args: &Args) -> Result<()> {
     experiments::run_experiment(id, &env_cfg, &agent_cfg, &exp)
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
+/// Build `ServeOptions` from the serve-family CLI flags — shared by
+/// `serve` and `verify-determinism` so the harness accepts any serve
+/// configuration verbatim.
+fn serve_options(args: &Args) -> Result<coordinator::ServeOptions> {
     let exp = exp_config(args)?;
     let rate = args.f64_or("rate", 0.25)?;
     let arrivals = ArrivalProcess::parse(&args.str_or("arrivals", "batch"), rate)?;
@@ -365,7 +388,120 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_cap,
         network,
     };
+    Ok(opts)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let opts = serve_options(args)?;
     coordinator::serve_and_report(&opts)
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    let roots = match args.get("lint-root") {
+        Some(dir) => vec![(std::path::PathBuf::from(dir), String::new())],
+        None => dedgeai::analysis::default_lint_roots(),
+    };
+    let mut files = 0usize;
+    let mut findings = Vec::new();
+    for (root, prefix) in &roots {
+        if !root.is_dir() {
+            bail!("lint root {} is not a directory", root.display());
+        }
+        let (n, f) = dedgeai::analysis::lint_tree(root, prefix)?;
+        files += n;
+        findings.extend(f);
+    }
+    if findings.is_empty() {
+        println!(
+            "simlint: clean — {} files, {} rules, 0 findings",
+            files,
+            dedgeai::analysis::RULES.len()
+        );
+        return Ok(());
+    }
+    print!("{}", dedgeai::analysis::render(&findings));
+    bail!(
+        "simlint: {} finding(s) across {} files — fix or pragma \
+         (// simlint: allow(rule)) with a justification",
+        findings.len(),
+        files
+    )
+}
+
+fn cmd_verify_determinism(args: &Args) -> Result<()> {
+    let mut opts = serve_options(args)?;
+    // With no explicit configuration, exercise the *full* stack: the
+    // harness's job is to certify the network + placement engine, not
+    // the easy single-site default.
+    if args.get("requests").is_none() {
+        opts.requests = 200;
+    }
+    if opts.network.is_none() {
+        opts.network = Some(NetOptions {
+            sites: opts.workers,
+            profile: "wan".into(),
+            site_of: None,
+            bw_matrix: None,
+        });
+    }
+    if opts.model_dist.is_none() {
+        opts.model_dist = Some(ModelDist::parse(
+            "mix:resd3-m=0.6,resd3-turbo=0.3,sd3-medium=0.1",
+            &Catalog::standard(),
+        )?);
+    }
+    if opts.worker_vram.is_none() {
+        let mut budgets = vec![24.0; opts.workers];
+        if let Some(last) = budgets.last_mut() {
+            *last = 48.0;
+        }
+        opts.worker_vram = Some(budgets);
+    }
+    if args.get("arrivals").is_none()
+        && matches!(opts.arrivals, ArrivalProcess::Batch)
+    {
+        opts.arrivals =
+            ArrivalProcess::Poisson { rate: args.f64_or("rate", 0.25)? };
+    }
+    if args.get("method").is_none() {
+        opts.scheduler = "net-ll".into();
+    }
+    let net = opts.network.as_ref().expect("network set above");
+    println!(
+        "verify-determinism: {} requests, {} workers, arrivals={}, \
+         scheduler={}, topology={} over {} site(s)",
+        opts.requests,
+        opts.workers,
+        opts.arrivals.name(),
+        opts.scheduler,
+        net.profile,
+        net.sites
+    );
+    let report = dedgeai::analysis::double_run(&opts)?;
+    let mut t = dedgeai::util::table::Table::new(&["stream", "draws"])
+        .left_first()
+        .title("per-stream RNG draws (identical across both runs)");
+    for &(stream, draws) in report.audit.entries() {
+        t.row(vec![stream.to_string(), draws.to_string()]);
+    }
+    println!("{}", t.render());
+    if report.passed() {
+        println!(
+            "verify-determinism: PASS — two fresh runs bitwise identical \
+             ({} served, makespan {:.2}s, {} RNG draws audited)",
+            report.served,
+            report.makespan,
+            report.audit.total()
+        );
+        return Ok(());
+    }
+    for m in &report.mismatches {
+        eprintln!("mismatch: {m}");
+    }
+    bail!(
+        "verify-determinism: FAIL — {} field(s) diverged between runs",
+        report.mismatches.len()
+    )
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

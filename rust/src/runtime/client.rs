@@ -14,6 +14,9 @@
 //! `unsafe impl`s below only ever vouch for moving a runtime with its
 //! owning agent, not for concurrent use. See the SAFETY notes.
 
+// simlint: allow-file(unordered-iter) — the executable cache is keyed
+// get/insert by graph name only, never iterated, so its order can't
+// leak into any simulated quantity.
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::{Arc, Mutex};
@@ -29,10 +32,14 @@ pub struct SharedExec(xla::PjRtLoadedExecutable);
 // API) is documented thread-safe. The `xla` wrapper, however, may keep
 // a non-atomic handle to its client, so in-tree code keeps each
 // executable on the thread that compiled it (one runtime per work
-// unit / worker); these impls exist to satisfy the `Send` bounds on
+// unit / worker); this impl exists to satisfy the `Send` bound on
 // that whole-ownership transfer, not to endorse concurrent use of one
 // executable from several threads.
 unsafe impl Send for SharedExec {}
+// SAFETY: shared references only ever reach the execute entry point,
+// which the PJRT C API documents as thread-safe; the in-tree
+// share-nothing discipline (module doc) means no executable is in
+// practice driven from two threads at once.
 unsafe impl Sync for SharedExec {}
 
 impl SharedExec {
@@ -49,13 +56,17 @@ pub struct XlaRuntime {
 }
 
 // SAFETY: `manifest` is plain data; `cache` is `Mutex`-guarded; the
-// PJRT CPU client is thread-safe per the PJRT C API contract. These
-// impls are what let a `Box<dyn Scheduler + Send>` own an
+// PJRT CPU client is thread-safe per the PJRT C API contract. This
+// impl is what lets a `Box<dyn Scheduler + Send>` own an
 // `Arc<XlaRuntime>`; in-tree callers uphold the stronger discipline
 // of constructing and using each runtime on a single thread (see the
 // module doc), so the wrapper's possibly non-atomic internal handles
 // are never mutated concurrently.
 unsafe impl Send for XlaRuntime {}
+// SAFETY: all `&self` entry points either take the cache mutex first
+// (`load`, `cached`) or read plain immutable data (`manifest`,
+// `client`), and the share-nothing discipline above keeps any
+// non-atomic wrapper internals single-threaded in practice.
 unsafe impl Sync for XlaRuntime {}
 
 impl XlaRuntime {

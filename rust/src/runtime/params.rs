@@ -1,6 +1,9 @@
 //! Train-state management: the flat ordered tensor list round-tripped
 //! through the HLO train-step graphs (DESIGN.md §3 "artifact contract").
 
+// simlint: allow-file(unordered-iter) — `index` maps tensor name →
+// position and is only ever get/insert by key; iteration always runs
+// over the ordered `names`/`tensors` vectors.
 use std::collections::HashMap;
 
 use anyhow::{anyhow, bail, Result};

@@ -25,6 +25,8 @@
 //! used in the recorded runs.
 
 use std::cell::RefCell;
+// simlint: allow-file(unordered-iter) — the thread-local runtime cache
+// is keyed get/insert by artifacts dir only, never iterated.
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Arc;

@@ -35,6 +35,11 @@ pub struct Rng {
     inc: u64,
     /// cached second Box-Muller variate
     spare_normal: Option<f64>,
+    /// Base draws ([`next_u32`](Self::next_u32) calls) since seeding;
+    /// every sampling method routes through `next_u32`, so equal
+    /// counts mean equal stream positions — the invariant the
+    /// `verify-determinism` audit compares across runs.
+    draws: u64,
 }
 
 impl Rng {
@@ -43,8 +48,9 @@ impl Rng {
         let mut sm = SplitMix64::new(seed);
         let state = sm.next_u64();
         let inc = sm.next_u64() | 1;
-        let mut rng = Self { state, inc, spare_normal: None };
+        let mut rng = Self { state, inc, spare_normal: None, draws: 0 };
         rng.next_u32(); // advance past the (correlated) initial state
+        rng.draws = 0; // the warm-up draw is part of seeding, not use
         rng
     }
 
@@ -54,6 +60,7 @@ impl Rng {
     }
 
     pub fn next_u32(&mut self) -> u32 {
+        self.draws += 1;
         let old = self.state;
         self.state = old
             .wrapping_mul(6_364_136_223_846_793_005)
@@ -61,6 +68,11 @@ impl Rng {
         let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
         let rot = (old >> 59) as u32;
         xorshifted.rotate_right(rot)
+    }
+
+    /// Base draws consumed since seeding (see the `draws` field doc).
+    pub fn draws(&self) -> u64 {
+        self.draws
     }
 
     pub fn next_u64(&mut self) -> u64 {
@@ -179,6 +191,51 @@ impl Rng {
     }
 }
 
+/// Ledger of named seeded streams and how many base draws each
+/// consumed in one engine run — the runtime complement to the
+/// `simlint` static pass. Two runs of the same configuration must
+/// produce equal ledgers; a shifted count pinpoints *which* stream a
+/// determinism regression contaminated (e.g. a single-site run whose
+/// `origin` stream suddenly draws). Entries keep insertion order so
+/// reports read in engine order.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RngAudit {
+    entries: Vec<(&'static str, u64)>,
+}
+
+impl RngAudit {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one stream's draw count.
+    pub fn note(&mut self, stream: &'static str, draws: u64) {
+        self.entries.push((stream, draws));
+    }
+
+    /// All (stream, draws) entries in insertion order.
+    pub fn entries(&self) -> &[(&'static str, u64)] {
+        &self.entries
+    }
+
+    /// Draw count for one named stream, if recorded.
+    pub fn draws(&self, stream: &str) -> Option<u64> {
+        self.entries
+            .iter()
+            .find(|(name, _)| *name == stream)
+            .map(|&(_, draws)| draws)
+    }
+
+    /// Total base draws across all streams.
+    pub fn total(&self) -> u64 {
+        self.entries.iter().map(|&(_, draws)| draws).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -275,6 +332,48 @@ mod tests {
         let mut sorted = v.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn draw_counter_tracks_base_draws() {
+        let mut r = Rng::new(42);
+        assert_eq!(r.draws(), 0, "seeding warm-up must not count");
+        r.next_u32();
+        assert_eq!(r.draws(), 1);
+        r.next_u64(); // two base draws
+        assert_eq!(r.draws(), 3);
+        r.f64(); // routed through next_u64
+        assert_eq!(r.draws(), 5);
+        r.range_usize(0, 9);
+        assert_eq!(r.draws(), 6);
+        // equal counts on equal seeds: the position == count invariant
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..50 {
+            a.normal();
+            b.normal();
+        }
+        assert_eq!(a.draws(), b.draws());
+        assert_eq!(a.next_u32(), b.next_u32());
+    }
+
+    #[test]
+    fn audit_ledger_basics() {
+        let mut audit = RngAudit::new();
+        assert!(audit.is_empty());
+        audit.note("arrival", 10);
+        audit.note("z", 0);
+        assert_eq!(audit.draws("arrival"), Some(10));
+        assert_eq!(audit.draws("z"), Some(0));
+        assert_eq!(audit.draws("nope"), None);
+        assert_eq!(audit.total(), 10);
+        assert_eq!(audit.entries().len(), 2);
+        let same = audit.clone();
+        assert_eq!(audit, same);
+        let mut other = RngAudit::new();
+        other.note("arrival", 11);
+        other.note("z", 0);
+        assert_ne!(audit, other);
     }
 
     #[test]

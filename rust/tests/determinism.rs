@@ -1,0 +1,159 @@
+//! Determinism double-run suite (ISSUE 6): the dynamic complement to
+//! `simlint`. Every configuration on a grid of (arrival process ×
+//! quality distribution × policy × topology) is run twice on fresh
+//! engines and compared *bitwise* — summary metrics, per-link traffic
+//! books, and the per-stream RNG draw ledger — so a nondeterminism
+//! regression anywhere in the serving core fails loudly here before
+//! it can silently skew an experiment table. No AOT artifacts
+//! required (heuristic schedulers only).
+
+use dedgeai::analysis::{compare, double_run};
+use dedgeai::coordinator::arrivals::{ArrivalProcess, ZDist};
+use dedgeai::coordinator::network::NetOptions;
+use dedgeai::coordinator::placement::{Catalog, ModelDist};
+use dedgeai::coordinator::service::{DEdgeAi, ServeOptions};
+
+#[test]
+fn double_runs_are_bitwise_identical_across_the_grid() {
+    let arrival_axis = [
+        ArrivalProcess::Batch,
+        ArrivalProcess::Poisson { rate: 0.3 },
+    ];
+    let z_axis = [ZDist::Fixed(15), ZDist::Uniform { lo: 5, hi: 15 }];
+    let policy_axis = ["least-loaded", "random", "round-robin"];
+    let topology_axis: [Option<NetOptions>; 3] = [
+        None,
+        Some(NetOptions::profile_only("uniform", 4)),
+        Some(NetOptions::profile_only("wan", 3)),
+    ];
+    for arrivals in &arrival_axis {
+        for z_dist in &z_axis {
+            for policy in policy_axis {
+                for network in &topology_axis {
+                    let opts = ServeOptions {
+                        requests: 30,
+                        scheduler: policy.into(),
+                        arrivals: arrivals.clone(),
+                        z_dist: Some(z_dist.clone()),
+                        network: network.clone(),
+                        ..ServeOptions::default()
+                    };
+                    let label = format!(
+                        "{policy} {arrivals:?} {z_dist:?} net={:?}",
+                        network.as_ref().map(|n| n.profile.as_str())
+                    );
+                    let a = DEdgeAi::new(opts.clone()).run_events().unwrap();
+                    let b = DEdgeAi::new(opts).run_events().unwrap();
+                    let rep = compare(&a, &b);
+                    assert!(
+                        rep.passed(),
+                        "{label} diverged:\n{}",
+                        rep.mismatches.join("\n")
+                    );
+                    assert_eq!(rep.served, 30, "{label}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn stream_ledger_reflects_the_configuration() {
+    // Degenerate distributions must draw *zero* randomness from their
+    // streams — the draw-count restatement of the bit-parity ladder
+    // (fixed z == pre-open-loop trace, single site == pre-network
+    // trace). The ledger makes a violation visible even when the
+    // summary metrics happen to survive it.
+    let fixed = ServeOptions {
+        requests: 40,
+        z_dist: Some(ZDist::Fixed(15)),
+        ..ServeOptions::default()
+    };
+    let m = DEdgeAi::new(fixed).run_events().unwrap();
+    let audit = m.rng_audit();
+    assert_eq!(audit.draws("arrival"), Some(0), "batch draws no clock");
+    assert_eq!(audit.draws("z"), Some(0), "fixed z draws nothing");
+    assert_eq!(audit.draws("model"), Some(0), "fixed model draws nothing");
+    assert_eq!(audit.draws("origin"), Some(0), "single site draws nothing");
+    assert_eq!(audit.draws("caption"), Some(3 * 40), "3 draws per caption");
+    assert!(audit.draws("gen-jitter").unwrap() > 0);
+
+    // ...and turning each axis on consumes exactly its own stream
+    let open = ServeOptions {
+        requests: 40,
+        arrivals: ArrivalProcess::Poisson { rate: 0.3 },
+        z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+        network: Some(NetOptions::profile_only("wan", 4)),
+        ..ServeOptions::default()
+    };
+    let m = DEdgeAi::new(open).run_events().unwrap();
+    let audit = m.rng_audit();
+    assert!(audit.draws("arrival").unwrap() >= 40);
+    assert!(audit.draws("z").unwrap() >= 40);
+    assert!(audit.draws("origin").unwrap() >= 40);
+    assert_eq!(audit.draws("caption"), Some(3 * 40));
+}
+
+#[test]
+fn streaming_and_eager_record_the_same_ledger() {
+    // The PR 4/5 parity contract extended to the audit: the streaming
+    // engine and the eager reference must consume every stream the
+    // same number of times, not just land on the same numbers.
+    let opts = ServeOptions {
+        requests: 60,
+        arrivals: ArrivalProcess::Poisson { rate: 0.25 },
+        z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+        network: Some(NetOptions::profile_only("lan", 3)),
+        ..ServeOptions::default()
+    };
+    let sys = DEdgeAi::new(opts);
+    let streamed = sys.run_events().unwrap();
+    let eager = sys.run_events_eager().unwrap();
+    assert_eq!(streamed.rng_audit(), eager.rng_audit());
+    assert_eq!(streamed.makespan().to_bits(), eager.makespan().to_bits());
+    assert_eq!(
+        streamed.p99_latency().to_bits(),
+        eager.p99_latency().to_bits()
+    );
+}
+
+/// ISSUE 6 acceptance: `verify-determinism` semantics on a network-on
+/// + placement-on configuration, with per-stream draw counts reported
+/// and equal across the double run.
+#[test]
+fn network_and_placement_config_passes_double_run() {
+    let catalog = Catalog::standard();
+    let opts = ServeOptions {
+        requests: 80,
+        scheduler: "net-ll".into(),
+        arrivals: ArrivalProcess::Poisson { rate: 0.25 },
+        z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+        network: Some(NetOptions::profile_only("wan", 4)),
+        model_dist: Some(
+            ModelDist::parse(
+                "mix:resd3-m=0.6,resd3-turbo=0.3,sd3-medium=0.1",
+                &catalog,
+            )
+            .unwrap(),
+        ),
+        worker_vram: Some(vec![24.0, 24.0, 24.0, 24.0, 48.0]),
+        ..ServeOptions::default()
+    };
+    let rep = double_run(&opts).unwrap();
+    assert!(rep.passed(), "mismatches:\n{}", rep.mismatches.join("\n"));
+    assert_eq!(rep.served, 80);
+    assert!(rep.makespan > 0.0);
+    // every named stream is present in the ledger, and the active axes
+    // actually drew from theirs
+    for stream in ["arrival", "caption", "z", "model", "origin", "gen-jitter"]
+    {
+        assert!(
+            rep.audit.draws(stream).is_some(),
+            "stream '{stream}' missing from the audit ledger"
+        );
+    }
+    assert!(rep.audit.draws("arrival").unwrap() > 0);
+    assert!(rep.audit.draws("model").unwrap() > 0);
+    assert!(rep.audit.draws("origin").unwrap() > 0);
+    assert!(rep.audit.total() > 0);
+}

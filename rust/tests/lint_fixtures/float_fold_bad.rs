@@ -1,0 +1,9 @@
+//! Fixture: positive — float .sum() folds on a simulated path.
+
+fn mean(xs: &[f32]) -> f32 {
+    xs.iter().sum::<f32>() / xs.len() as f32
+}
+
+fn total(xs: &[f64]) -> f64 {
+    xs.iter().copied().sum::<f64>()
+}

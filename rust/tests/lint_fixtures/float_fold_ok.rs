@@ -1,0 +1,11 @@
+//! Fixture: negative — explicit ordered folds and integer sums are
+//! fine; only typed float .sum() calls are flagged.
+
+fn mean(xs: &[f32]) -> f32 {
+    let total = xs.iter().fold(0.0f32, |acc, &x| acc + x);
+    total / xs.len() as f32
+}
+
+fn int_total(xs: &[u64]) -> u64 {
+    xs.iter().sum::<u64>()
+}

@@ -1,0 +1,8 @@
+//! Fixture: suppressed — a pragma'd float fold with the required
+//! ordering argument in its justification.
+
+fn checksum(xs: &[f32]) -> f32 {
+    // simlint: allow(float-fold) — folds a Vec in slice order, which
+    // is deterministic
+    xs.iter().sum::<f32>() / xs.len() as f32
+}

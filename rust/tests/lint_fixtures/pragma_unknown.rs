@@ -1,0 +1,6 @@
+//! Fixture: a suppression naming a rule that does not exist must be
+//! flagged itself, so stale pragmas cannot rot silently.
+
+fn quiet() -> u32 {
+    1 // simlint: allow(wibble)
+}

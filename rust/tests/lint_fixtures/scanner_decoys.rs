@@ -1,0 +1,21 @@
+//! Fixture: scanner stress — every rule token below is inert because
+//! it lives in a comment, string, raw string, or char context.
+
+fn decoys() -> Vec<String> {
+    vec![
+        "Instant::now() in a plain string".to_string(),
+        "escaped quote \" then HashMap".to_string(),
+        r#"raw string with thread_rng and "quotes""#.to_string(),
+        r##"double-fenced OsRng "# still inside"##.to_string(),
+        format!("byte len {}", b"byte string with SystemTime".len()),
+    ]
+}
+
+/* block comment: unsafe impl Send for Nothing {}
+   /* nested: .sum::<f32>() still commented */
+   still a comment after the nested close: getrandom */
+fn lifetime_not_char<'a>(x: &'a str) -> &'a str {
+    let _quote = '"'; // a quote char literal must not open a string
+    let _escaped = '\''; // nor an escaped-quote char literal
+    x
+}

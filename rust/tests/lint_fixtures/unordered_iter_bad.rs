@@ -1,0 +1,11 @@
+//! Fixture: positive — unordered collections on a simulated path.
+
+use std::collections::{HashMap, HashSet};
+
+fn tally(xs: &[u32]) -> usize {
+    let mut seen = HashSet::new();
+    for &x in xs {
+        seen.insert(x);
+    }
+    seen.len()
+}

@@ -1,0 +1,18 @@
+//! Fixture: negative — ordered collections and identifier-boundary
+//! decoys.
+
+use std::collections::BTreeMap;
+
+fn tally(xs: &[u32]) -> BTreeMap<u32, u32> {
+    let mut m = BTreeMap::new();
+    for &x in xs {
+        *m.entry(x).or_insert(0) += 1;
+    }
+    m
+}
+
+// neither of these identifiers is the `HashMap` / `HashSet` token
+struct MyHashMapLike;
+fn hashsets_in_name_only(hashmaps: usize) -> usize {
+    hashmaps
+}

@@ -1,0 +1,10 @@
+//! Fixture: suppressed — whole-file waiver for a keyed-lookup-only
+//! cache, the documented escape hatch for this rule.
+
+// simlint: allow-file(unordered-iter) — keyed get/insert only, never
+// iterated, so its order cannot leak into any simulated quantity
+use std::collections::HashMap;
+
+fn cache() -> HashMap<String, u64> {
+    HashMap::new()
+}

@@ -1,0 +1,10 @@
+//! Fixture: positive — unsafe without a SAFETY: comment.
+
+fn read(p: *const u8) -> u8 {
+    unsafe { *p }
+}
+
+struct Raw(u64);
+
+// a comment that is not a safety justification
+unsafe impl Send for Raw {}

@@ -1,0 +1,19 @@
+//! Fixture: negative — every unsafe carries a SAFETY: comment, and a
+//! comment block may cover consecutive unsafe impls.
+
+fn read(p: *const u8) -> u8 {
+    // SAFETY: callers pass pointers derived from live references.
+    unsafe { *p }
+}
+
+struct Raw(u64);
+
+// SAFETY: Raw is plain data with no interior mutability; one comment
+// covers the consecutive impls below.
+unsafe impl Send for Raw {}
+unsafe impl Sync for Raw {}
+
+fn decoy() -> &'static str {
+    // the word unsafe in this comment is not code
+    "unsafe in a string is not code either"
+}

@@ -1,0 +1,6 @@
+//! Fixture: suppressed — pragma'd unsafe (the shape vendored FFI shims
+//! take when the justification lives at the module level).
+
+fn read(p: *const u8) -> u8 {
+    unsafe { *p } // simlint: allow(unsafe-undocumented)
+}

@@ -1,0 +1,10 @@
+//! Fixture: positive — ambient entropy on a simulated path.
+
+fn draw_thread() -> u32 {
+    let mut rng = thread_rng();
+    rng.next_u32()
+}
+
+fn draw_os(buf: &mut [u8]) {
+    getrandom(buf).unwrap();
+}

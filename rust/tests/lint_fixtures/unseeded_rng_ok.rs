@@ -1,0 +1,16 @@
+//! Fixture: negative — seeded streams plus identifier-boundary and
+//! string decoys for every unseeded-rng pattern.
+
+fn seeded_draw(rng: &mut crate::util::rng::Rng) -> u32 {
+    rng.next_u32()
+}
+
+// `operand::` must not match the `rand::` pattern mid-identifier
+fn operand_decoy(x: operand::Kind) -> operand::Kind {
+    x
+}
+
+// thread_rng, OsRng and from_entropy appear only in this comment
+fn strings_only() -> &'static str {
+    "from_entropy getrandom OsRng rand::"
+}

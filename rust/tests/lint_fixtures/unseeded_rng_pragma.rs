@@ -1,0 +1,7 @@
+//! Fixture: suppressed — a pragma'd ambient-entropy call (the shape a
+//! deliberate non-reproducible utility would take).
+
+fn bridge() -> u32 {
+    let v = thread_rng().next_u32(); // simlint: allow(unseeded-rng)
+    v
+}

@@ -1,0 +1,7 @@
+//! Fixture: positive — wall-clock reads on a simulated path.
+
+fn measure() -> f64 {
+    let t0 = std::time::Instant::now();
+    let _stamp = std::time::SystemTime::now();
+    t0.elapsed().as_secs_f64()
+}

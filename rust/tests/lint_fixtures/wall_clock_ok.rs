@@ -1,0 +1,12 @@
+//! Fixture: negative — wall-clock tokens appear only in comments and
+//! strings, where the scanner must blank them.
+
+/// Mentions Instant::now in a doc comment only.
+fn label() -> &'static str {
+    // SystemTime appears here, in a line comment
+    "uses Instant::now and SystemTime only inside a string"
+}
+
+fn virtual_clock(now: f64, dt: f64) -> f64 {
+    now + dt
+}

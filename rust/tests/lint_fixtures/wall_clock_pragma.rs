@@ -1,0 +1,14 @@
+//! Fixture: suppressed — pragma'd wall-clock reads, trailing and
+//! standalone forms.
+
+fn epoch_trailing() -> f64 {
+    let t0 = std::time::Instant::now(); // simlint: allow(wall-clock)
+    t0.elapsed().as_secs_f64()
+}
+
+fn epoch_standalone() -> f64 {
+    // simlint: allow(wall-clock) — standalone pragma; justification
+    // continues over a second comment line before the covered code
+    let t1 = std::time::Instant::now();
+    t1.elapsed().as_secs_f64()
+}

@@ -1,0 +1,164 @@
+//! `simlint` self-tests: every rule is proven by a failing fixture, a
+//! clean fixture, and a suppressed fixture under `tests/lint_fixtures/`
+//! (ISSUE 6). Fixtures are linted under a synthetic fully-in-scope
+//! path (`coordinator/fixture.rs`) so all path-scoped rules apply,
+//! and the suite finishes by asserting the real tree is clean — the
+//! same check `dedgeai lint` runs in CI.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use dedgeai::analysis::{lint_source, lint_tree, render, Finding, RULES};
+
+fn fixture_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/lint_fixtures")
+}
+
+fn fixture(name: &str) -> String {
+    let p = fixture_dir().join(name);
+    fs::read_to_string(&p)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", p.display()))
+}
+
+/// Lint one fixture as if it lived on a fully in-scope simulated path.
+fn lint_fixture(name: &str) -> Vec<Finding> {
+    lint_source("coordinator/fixture.rs", &fixture(name))
+}
+
+fn assert_all(findings: &[Finding], rule: &str, expect: usize, name: &str) {
+    assert_eq!(
+        findings.len(),
+        expect,
+        "{name}: expected {expect} findings, got:\n{}",
+        render(findings)
+    );
+    for f in findings {
+        assert_eq!(f.rule, rule, "{name}: unexpected rule in {f:?}");
+    }
+}
+
+fn assert_clean(name: &str) {
+    let findings = lint_fixture(name);
+    assert!(
+        findings.is_empty(),
+        "{name} should be clean, got:\n{}",
+        render(&findings)
+    );
+}
+
+#[test]
+fn wall_clock_fixtures() {
+    let bad = lint_fixture("wall_clock_bad.rs");
+    assert_all(&bad, "wall-clock", 2, "wall_clock_bad.rs");
+    assert_eq!(bad[0].line, 4);
+    assert_eq!(bad[1].line, 5);
+    assert_clean("wall_clock_ok.rs");
+    assert_clean("wall_clock_pragma.rs");
+}
+
+#[test]
+fn unseeded_rng_fixtures() {
+    let bad = lint_fixture("unseeded_rng_bad.rs");
+    assert_all(&bad, "unseeded-rng", 2, "unseeded_rng_bad.rs");
+    assert_clean("unseeded_rng_ok.rs");
+    assert_clean("unseeded_rng_pragma.rs");
+}
+
+#[test]
+fn unordered_iter_fixtures() {
+    // the use line fires for both HashMap and HashSet, plus one usage
+    let bad = lint_fixture("unordered_iter_bad.rs");
+    assert_all(&bad, "unordered-iter", 3, "unordered_iter_bad.rs");
+    assert_clean("unordered_iter_ok.rs");
+    assert_clean("unordered_iter_pragma.rs");
+}
+
+#[test]
+fn unsafe_fixtures() {
+    let bad = lint_fixture("unsafe_bad.rs");
+    assert_all(&bad, "unsafe-undocumented", 2, "unsafe_bad.rs");
+    assert_clean("unsafe_ok.rs");
+    assert_clean("unsafe_pragma.rs");
+}
+
+#[test]
+fn float_fold_fixtures() {
+    let bad = lint_fixture("float_fold_bad.rs");
+    assert_all(&bad, "float-fold", 2, "float_fold_bad.rs");
+    assert_clean("float_fold_ok.rs");
+    assert_clean("float_fold_pragma.rs");
+}
+
+#[test]
+fn unknown_pragma_rule_is_flagged() {
+    let f = lint_fixture("pragma_unknown.rs");
+    assert_all(&f, "pragma", 1, "pragma_unknown.rs");
+    assert!(f[0].message.contains("wibble"), "{}", f[0].message);
+}
+
+#[test]
+fn scanner_decoys_are_inert() {
+    assert_clean("scanner_decoys.rs");
+}
+
+/// ISSUE 6 acceptance: each rule in the registry has a checked-in
+/// failing fixture, keyed by naming convention.
+#[test]
+fn every_rule_has_a_failing_fixture() {
+    for rule in RULES {
+        let name = match rule {
+            "unsafe-undocumented" => "unsafe_bad.rs".to_string(),
+            r => format!("{}_bad.rs", r.replace('-', "_")),
+        };
+        let findings = lint_fixture(&name);
+        assert!(
+            findings.iter().any(|f| f.rule == rule),
+            "{name} does not trip rule '{rule}':\n{}",
+            render(&findings)
+        );
+    }
+}
+
+#[test]
+fn out_of_scope_paths_do_not_fire_scoped_rules() {
+    // unordered-iter and float-fold are scoped to simulated paths;
+    // the same content is legal under util/
+    let map = fixture("unordered_iter_bad.rs");
+    assert!(lint_source("util/fixture.rs", &map).is_empty());
+    let fold = fixture("float_fold_bad.rs");
+    assert!(lint_source("util/fixture.rs", &fold).is_empty());
+    // wall-clock is global except for the explicit allowlist
+    let clock = fixture("wall_clock_bad.rs");
+    assert_eq!(lint_source("util/fixture.rs", &clock).len(), 2);
+    assert!(lint_source("sim/bench.rs", &clock).is_empty());
+}
+
+#[test]
+fn render_format_is_stable() {
+    let text = render(&lint_fixture("wall_clock_bad.rs"));
+    assert!(
+        text.starts_with("coordinator/fixture.rs:4 [wall-clock]"),
+        "{text}"
+    );
+}
+
+/// The check `dedgeai lint` enforces in CI: the shipped tree is clean.
+#[test]
+fn the_real_tree_is_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let (files, findings) = lint_tree(&src, "").unwrap();
+    assert!(files >= 60, "suspiciously few files scanned: {files}");
+    assert!(
+        findings.is_empty(),
+        "rust/src has simlint findings:\n{}",
+        render(&findings)
+    );
+    let examples = Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples");
+    let (files, findings) = lint_tree(&examples, "examples/").unwrap();
+    assert!(files >= 5, "suspiciously few examples scanned: {files}");
+    assert!(
+        findings.is_empty(),
+        "examples/ has simlint findings:\n{}",
+        render(&findings)
+    );
+}
