@@ -113,6 +113,35 @@ pub fn compare(a: &ServeMetrics, b: &ServeMetrics) -> DeterminismReport {
             }
         }
     }
+    // per-class QoS books: same classes, bitwise-equal ledgers
+    if a.class_stats().len() != b.class_stats().len() {
+        mm.push(format!(
+            "class book size: {} vs {}",
+            a.class_stats().len(),
+            b.class_stats().len()
+        ));
+    } else {
+        for ((ka, sa), (kb, sb)) in
+            a.class_stats().iter().zip(b.class_stats().iter())
+        {
+            if ka != kb {
+                mm.push(format!("class keys diverge: {ka} vs {kb}"));
+                break;
+            }
+            let lat_eq = sa.latencies().len() == sb.latencies().len()
+                && sa
+                    .latencies()
+                    .iter()
+                    .zip(sb.latencies())
+                    .all(|(x, y)| x.to_bits() == y.to_bits());
+            if (sa.count, sa.misses, sa.degraded, sa.rerouted)
+                != (sb.count, sb.misses, sb.degraded, sb.rerouted)
+                || !lat_eq
+            {
+                mm.push(format!("class {ka}: {sa:?} vs {sb:?}"));
+            }
+        }
+    }
     if a.rng_audit() != b.rng_audit() {
         mm.push(format!(
             "per-stream RNG draws: {:?} vs {:?}",

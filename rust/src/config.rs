@@ -509,6 +509,61 @@ impl TopologySweepConfig {
     }
 }
 
+/// `exp qos-sweep` grid: deadline-aware open-loop serving measured
+/// over (arrival rate × dispatch policy × QoS class mix) on a wan
+/// topology, fanned over the parallel executor. The sweep contrasts
+/// deadline-blind FIFO least-loaded with EDF + degradation (`edf-ll`)
+/// on premium-class deadline-miss rate.
+#[derive(Clone, Debug)]
+pub struct QosSweepConfig {
+    /// Arrival rates in requests/second (`--rates`).
+    pub rates: Vec<f64>,
+    /// Dispatch policies (`--schedulers`): deadline-blind
+    /// `least-loaded` vs deadline-aware `edf-ll`.
+    pub schedulers: Vec<String>,
+    /// QoS class mixes (`--qos-mixes`, ';'-separated `--qos-mix`
+    /// specs — the specs themselves contain commas).
+    pub mixes: Vec<String>,
+    /// Edge sites (`--sites`); one worker per site, wan profile.
+    pub sites: usize,
+    /// Requests simulated per grid cell (`--serve-requests`).
+    pub requests: usize,
+    /// Arrival-process kind (`--arrivals`): poisson|bursty|diurnal.
+    pub arrivals: String,
+    /// Quality-demand spec (`--z-dist`).
+    pub z_dist: String,
+}
+
+impl Default for QosSweepConfig {
+    fn default() -> Self {
+        Self {
+            // rho ~ 0.9 / 1.1 at 5 workers, z ~ U[5,15] — the miss
+            // rates only separate policies near and past saturation
+            rates: vec![0.36, 0.44],
+            schedulers: vec!["least-loaded".into(), "edf-ll".into()],
+            mixes: vec!["tiered".into(), "deadline-tight".into()],
+            sites: 5,
+            requests: 1000,
+            arrivals: "poisson".into(),
+            z_dist: "uniform:5,15".into(),
+        }
+    }
+}
+
+impl QosSweepConfig {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("rates", Json::arr_f64(&self.rates)),
+            ("schedulers", Json::str(self.schedulers.join(","))),
+            ("mixes", Json::str(self.mixes.join(";"))),
+            ("sites", Json::num(self.sites as f64)),
+            ("requests", Json::num(self.requests as f64)),
+            ("arrivals", Json::str(self.arrivals.clone())),
+            ("z_dist", Json::str(self.z_dist.clone())),
+        ])
+    }
+}
+
 /// Experiment-harness settings.
 #[derive(Clone, Debug)]
 pub struct ExpConfig {
@@ -533,6 +588,8 @@ pub struct ExpConfig {
     pub placement: PlacementSweepConfig,
     /// Transmission-aware serving sweep grid (`exp topology-sweep`).
     pub topology: TopologySweepConfig,
+    /// Deadline-aware serving sweep grid (`exp qos-sweep`).
+    pub qos: QosSweepConfig,
 }
 
 impl Default for ExpConfig {
@@ -547,6 +604,7 @@ impl Default for ExpConfig {
             serve: ServeSweepConfig::default(),
             placement: PlacementSweepConfig::default(),
             topology: TopologySweepConfig::default(),
+            qos: QosSweepConfig::default(),
         }
     }
 }
@@ -563,6 +621,7 @@ impl ExpConfig {
             ("serve", self.serve.to_json()),
             ("placement", self.placement.to_json()),
             ("topology", self.topology.to_json()),
+            ("qos", self.qos.to_json()),
         ])
     }
 }
@@ -684,6 +743,20 @@ mod tests {
         assert!(t.sites >= 2 && t.requests > 0);
         assert_eq!(t.arrivals, "poisson");
         assert!(t.to_json().get("profiles").is_some());
+    }
+
+    #[test]
+    fn qos_sweep_defaults_form_a_grid() {
+        let q = QosSweepConfig::default();
+        assert!(q.rates.len() >= 2);
+        assert!(q.rates.iter().any(|&r| r > 0.4), "need a rate past rho=1");
+        assert!(q.schedulers.iter().any(|s| s == "edf-ll"));
+        assert!(q.schedulers.iter().any(|s| s == "least-loaded"));
+        assert!(q.mixes.len() >= 2, "need >=2 class mixes");
+        assert!(q.mixes.iter().any(|m| m == "deadline-tight"));
+        assert!(q.sites >= 2 && q.requests > 0);
+        assert_eq!(q.arrivals, "poisson");
+        assert!(q.to_json().get("mixes").is_some());
     }
 
     #[test]

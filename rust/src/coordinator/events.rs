@@ -120,6 +120,8 @@ mod tests {
                 z: 1,
                 model: 0,
                 origin: 0,
+                qos: 0,
+                deadline: f64::INFINITY,
                 submitted_at: t,
             }),
         )

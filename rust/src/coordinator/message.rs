@@ -24,6 +24,14 @@ pub struct Request {
     /// (index into the [`Topology`](super::network::Topology)).
     /// Always 0 when the network subsystem is off (single site).
     pub origin: usize,
+    /// QoS class id (index into the static
+    /// [`qos`](super::qos) registry). [`qos::BEST_EFFORT`]
+    /// (0) when no `--qos-mix` is active — the pre-QoS default.
+    pub qos: usize,
+    /// Absolute deadline on the serving clock
+    /// (`submitted_at + class.deadline_s`); `f64::INFINITY` for the
+    /// best-effort default, so deadline math is inert when QoS is off.
+    pub deadline: f64,
     /// Submission time (seconds on the serving clock).
     pub submitted_at: f64,
 }
@@ -52,6 +60,17 @@ pub struct Response {
     /// Checksum of the produced latent (integrity check; proves the
     /// compute actually ran through PJRT).
     pub checksum: f32,
+    /// QoS class id carried through from the request.
+    pub qos: usize,
+    /// Absolute deadline carried through from the request; metrics
+    /// compare it against the completion time for the miss ledger.
+    pub deadline: f64,
+    /// The quality the *request* demanded. `z < demanded_z` means the
+    /// deadline-pressed degradation stage reduced denoising steps.
+    pub demanded_z: usize,
+    /// The model the *request* demanded. `model != demanded_model`
+    /// means degradation rerouted to the distilled variant.
+    pub demanded_model: usize,
 }
 
 #[cfg(test)]
@@ -66,12 +85,16 @@ mod tests {
             z: 15,
             model: 0,
             origin: 0,
+            qos: 0,
+            deadline: f64::INFINITY,
             submitted_at: 1.5,
         };
         assert_eq!(r.id, 7);
         assert_eq!(r.z, 15);
         assert_eq!(r.model, 0);
         assert_eq!(r.origin, 0);
+        assert_eq!(r.qos, 0);
+        assert!(r.deadline.is_infinite());
         assert!(r.prompt.len_bytes() > 0);
         let resp = Response {
             id: r.id,
@@ -83,9 +106,15 @@ mod tests {
             gen_time: 18.3,
             trans_time: 0.0,
             checksum: 0.5,
+            qos: r.qos,
+            deadline: r.deadline,
+            demanded_z: r.z,
+            demanded_model: r.model,
         };
         assert_eq!(resp.id, r.id);
         assert_eq!(resp.z, 15);
         assert_eq!(resp.model, 0);
+        assert_eq!(resp.demanded_z, resp.z);
+        assert_eq!(resp.demanded_model, resp.model);
     }
 }

@@ -23,6 +23,53 @@ pub struct LinkStat {
     pub transfers: u64,
 }
 
+/// Per-QoS-class serving book (QoS runs only): completions, deadline
+/// misses, the degradation ledger, and per-class latency quantiles —
+/// the per-class mirror of the per-link [`LinkStat`] books.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ClassStat {
+    /// Completions in this class.
+    pub count: u64,
+    /// Completions that landed after their absolute deadline.
+    pub misses: u64,
+    /// Completions served below their demanded z (step reduction).
+    pub degraded: u64,
+    /// Completions served on a different model than demanded
+    /// (rerouted to the distilled variant under deadline pressure).
+    pub rerouted: u64,
+    latencies: Vec<f64>,
+}
+
+impl ClassStat {
+    fn quantile(&self, p: f64) -> f64 {
+        let mut v = self.latencies.clone();
+        v.sort_unstable_by(f64::total_cmp);
+        percentile_sorted(&v, p)
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(99.0)
+    }
+
+    /// Fraction of this class's completions that missed their deadline.
+    pub fn miss_rate(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.misses as f64 / self.count as f64
+        }
+    }
+
+    /// Recorded latencies in completion order (for bitwise compares).
+    pub fn latencies(&self) -> &[f64] {
+        &self.latencies
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct ServeMetrics {
     latencies: Vec<f64>,
@@ -42,6 +89,12 @@ pub struct ServeMetrics {
     decomp_err: f64,
     /// Per-link traffic (network runs only): (from, to) → stats.
     links: BTreeMap<(usize, usize), LinkStat>,
+    /// Per-QoS-class books (populated only when a QoS run arms them
+    /// via [`set_qos_active`](Self::set_qos_active); empty otherwise
+    /// so the pre-QoS metrics surface is untouched).
+    classes: BTreeMap<usize, ClassStat>,
+    /// Whether this run carries QoS semantics (a `--qos-mix` was set).
+    qos_active: bool,
     per_worker: Vec<u64>,
     /// Seconds each worker spent generating (for utilization).
     busy: Vec<f64>,
@@ -78,6 +131,8 @@ impl ServeMetrics {
             trans_times: Welford::new(),
             decomp_err: 0.0,
             links: BTreeMap::new(),
+            classes: BTreeMap::new(),
+            qos_active: false,
             per_worker: vec![0; workers],
             busy: vec![0.0; workers],
             first_submit: f64::INFINITY,
@@ -140,6 +195,65 @@ impl ServeMetrics {
             .first_submit
             .min(completed_at - resp.latency);
         self.last_complete = self.last_complete.max(completed_at);
+        if self.qos_active {
+            let cs = self.classes.entry(resp.qos).or_default();
+            cs.count += 1;
+            cs.latencies.push(resp.latency);
+            if completed_at > resp.deadline {
+                cs.misses += 1;
+            }
+            if resp.z < resp.demanded_z {
+                cs.degraded += 1;
+            }
+            if resp.model != resp.demanded_model {
+                cs.rerouted += 1;
+            }
+        }
+    }
+
+    /// Arm the per-class books: QoS runs call this once before
+    /// serving. Left unarmed, `record` skips class accounting entirely
+    /// so non-QoS metrics stay structurally identical to PR 6.
+    pub fn set_qos_active(&mut self) {
+        self.qos_active = true;
+    }
+
+    /// Whether the per-class books are armed.
+    pub fn qos_active(&self) -> bool {
+        self.qos_active
+    }
+
+    /// Per-class serving books, keyed by class id (empty unless a QoS
+    /// run armed them).
+    pub fn class_stats(&self) -> &BTreeMap<usize, ClassStat> {
+        &self.classes
+    }
+
+    /// Deadline-miss fraction across every class (0 when QoS is off
+    /// or nothing completed).
+    pub fn deadline_miss_rate(&self) -> f64 {
+        let (mut misses, mut count) = (0u64, 0u64);
+        for cs in self.classes.values() {
+            misses += cs.misses;
+            count += cs.count;
+        }
+        if count == 0 {
+            0.0
+        } else {
+            misses as f64 / count as f64
+        }
+    }
+
+    /// Completions served degraded (fewer steps) or rerouted (swapped
+    /// model), across all classes.
+    pub fn degradations(&self) -> (u64, u64) {
+        let mut degraded = 0;
+        let mut rerouted = 0;
+        for cs in self.classes.values() {
+            degraded += cs.degraded;
+            rerouted += cs.rerouted;
+        }
+        (degraded, rerouted)
     }
 
     /// Record one dispatch's model-cache outcome: a warm hit or a cold
@@ -403,6 +517,10 @@ mod tests {
             gen_time: latency * 0.7,
             trans_time: 0.0,
             checksum: 0.0,
+            qos: 0,
+            deadline: f64::INFINITY,
+            demanded_z: 15,
+            demanded_model: 0,
         }
     }
 
@@ -515,6 +633,10 @@ mod tests {
                 gen_time: 7.0,
                 trans_time: 0.0,
                 checksum: 0.0,
+                qos: 0,
+                deadline: f64::INFINITY,
+                demanded_z: 15,
+                demanded_model: 0,
             },
             10.0,
         );
@@ -549,6 +671,10 @@ mod tests {
                 gen_time: 7.0,
                 trans_time: 0.5,
                 checksum: 0.0,
+                qos: 0,
+                deadline: f64::INFINITY,
+                demanded_z: 15,
+                demanded_model: 0,
             },
             10.0,
         );
@@ -566,10 +692,58 @@ mod tests {
                 gen_time: 7.0,
                 trans_time: 0.5,
                 checksum: 0.0,
+                qos: 0,
+                deadline: f64::INFINITY,
+                demanded_z: 15,
+                demanded_model: 0,
             },
             20.0,
         );
         assert!(m.decomposition_error() > 0.1);
+    }
+
+    #[test]
+    fn class_books_stay_empty_until_armed_then_ledger_degradations() {
+        let mut m = ServeMetrics::new(1);
+        assert!(!m.qos_active());
+        // unarmed: even a classed response books nothing (the pre-QoS
+        // structural parity guarantee)
+        let classed = Response {
+            qos: 1,
+            deadline: 5.0,
+            ..resp(0, 0, 10.0)
+        };
+        m.record(&classed, 10.0);
+        assert!(m.class_stats().is_empty());
+        assert_eq!(m.deadline_miss_rate(), 0.0);
+        // armed: misses, degradations, and reroutes all book per class
+        let mut m = ServeMetrics::new(1);
+        m.set_qos_active();
+        // premium completion at t=10 with deadline 5 -> miss
+        m.record(&Response { qos: 1, deadline: 5.0, ..resp(0, 0, 10.0) }, 10.0);
+        // premium completion within deadline, degraded z (8 < 15)
+        m.record(
+            &Response { qos: 1, deadline: 30.0, z: 8, ..resp(1, 0, 4.0) },
+            4.0,
+        );
+        // standard completion rerouted to another model
+        m.record(
+            &Response { qos: 2, deadline: 60.0, model: 2, ..resp(2, 0, 6.0) },
+            6.0,
+        );
+        let premium = &m.class_stats()[&1];
+        assert_eq!(premium.count, 2);
+        assert_eq!(premium.misses, 1);
+        assert_eq!(premium.degraded, 1);
+        assert_eq!(premium.rerouted, 0);
+        assert!((premium.miss_rate() - 0.5).abs() < 1e-12);
+        assert!(premium.p99() >= premium.p50());
+        let standard = &m.class_stats()[&2];
+        assert_eq!(standard.count, 1);
+        assert_eq!(standard.misses, 0);
+        assert_eq!(standard.rerouted, 1);
+        assert!((m.deadline_miss_rate() - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(m.degradations(), (1, 1));
     }
 
     #[test]

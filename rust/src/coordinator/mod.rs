@@ -33,6 +33,11 @@
 //!   requests originating at seeded sites, and prompt-upload /
 //!   image-return legs charged in virtual time so service delay
 //!   decomposes into transmission + queuing + computation;
+//! - [`qos`]: QoS classes — deadline budgets, priority tiers, and
+//!   willingness-to-degrade drawn as a sixth seeded request stream
+//!   (`--qos-mix`), driving earliest-deadline-first dispatch,
+//!   priority-aware admission, and deadline-pressed quality
+//!   degradation (serve z=15 as z=8 or swap to the distilled turbo);
 //! - [`corpus`]: the synthetic caption corpus standing in for
 //!   Flickr8k (hot paths carry a `Copy` [`corpus::PromptDesc`]; text
 //!   is rehydrated only on the real-time PJRT path);
@@ -56,6 +61,7 @@ pub mod models;
 pub mod network;
 pub mod placement;
 pub mod platforms;
+pub mod qos;
 pub mod router;
 pub mod service;
 pub mod source;
@@ -69,4 +75,5 @@ pub use source::RequestSource;
 pub use metrics::ServeMetrics;
 pub use network::{NetOptions, Network, Topology};
 pub use placement::{Catalog, ModelDist, Placement};
+pub use qos::{QosClass, QosMix};
 pub use service::{serve_and_report, DEdgeAi, ServeOptions};

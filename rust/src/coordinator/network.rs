@@ -358,6 +358,8 @@ mod tests {
             z,
             model: 0,
             origin,
+            qos: 0,
+            deadline: f64::INFINITY,
             submitted_at: 0.0,
         }
     }

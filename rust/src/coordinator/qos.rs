@@ -1,0 +1,337 @@
+//! QoS classes: deadline budgets, priority tiers, and willingness to
+//! degrade (the ROADMAP "QoS classes, deadlines, and SLO-aware
+//! scheduling" item; EAT, arXiv:2507.10026, is the reference frame and
+//! arXiv:2312.06203 the quality/latency knob).
+//!
+//! The class registry is static — four tiers with fixed budgets — so a
+//! class id travels on the `Copy` [`Request`](super::message::Request)
+//! as a plain `usize` and every layer (router, engines, metrics) can
+//! look the semantics up without carrying state.
+//!
+//! Bit-parity: [`QosMix::Fixed`] (the default, class
+//! [`BEST_EFFORT`] with an infinite deadline) draws **zero** RNG and
+//! imposes no deadline, so the whole PR 6 engine ladder is reproduced
+//! bitwise when `--qos-mix` is unset. A real mix draws exactly **one**
+//! base draw per request from the dedicated sixth seeded stream, which
+//! the `verify-determinism` audit pins (`qos` draws == requests).
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// Best-effort: the pre-QoS default. Infinite deadline, lowest
+/// priority, never degraded — semantically "no QoS at all".
+pub const BEST_EFFORT: usize = 0;
+/// Interactive premium tier: tight deadline, evicts lower tiers under
+/// admission pressure, accepts degraded quality over a miss.
+pub const PREMIUM: usize = 1;
+/// Standard tier: a human is waiting, but not refreshing the page.
+pub const STANDARD: usize = 2;
+/// Background/batch tier: generous deadline, first to be evicted.
+pub const BACKGROUND: usize = 3;
+
+/// Quality floor for deadline-pressed degradation: a degradable
+/// request demanding more denoising steps than this is served at
+/// `z = DEGRADED_Z` when its slack cannot cover the full-quality cost
+/// (the arXiv:2312.06203 step-reduction knob; the catalog's distilled
+/// `resd3-turbo` is the model-swap half of the same knob).
+pub const DEGRADED_Z: usize = 8;
+
+/// One service tier: deadline budget (seconds from submission),
+/// priority (higher wins admission fights), and whether the tier
+/// accepts reduced quality to make its deadline.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QosClass {
+    pub name: &'static str,
+    /// Deadline budget in seconds from submission
+    /// (`f64::INFINITY` = no deadline).
+    pub deadline_s: f64,
+    /// Admission priority; strictly higher evicts strictly lower when
+    /// `--queue-cap` is saturated under an EDF router.
+    pub priority: u8,
+    /// Whether deadline pressure may reduce z / swap to the distilled
+    /// variant for this tier.
+    pub degradable: bool,
+}
+
+/// The static tier registry. Budgets are sized against the calibrated
+/// Jetson clock: a z=15 generation alone is ~17.3 s
+/// (`clock::jetson_image_seconds`), so 25 s is "tight" (little queue
+/// slack), 60 s tolerates moderate queueing, 180 s is batch-like.
+const CLASSES: [QosClass; 4] = [
+    QosClass {
+        name: "best-effort",
+        deadline_s: f64::INFINITY,
+        priority: 0,
+        degradable: false,
+    },
+    QosClass { name: "premium", deadline_s: 25.0, priority: 2, degradable: true },
+    QosClass { name: "standard", deadline_s: 60.0, priority: 1, degradable: true },
+    QosClass {
+        name: "background",
+        deadline_s: 180.0,
+        priority: 0,
+        degradable: true,
+    },
+];
+
+/// Look up a class by id. Panics on an out-of-range id — class ids
+/// only enter the system through [`QosMix::parse`], which validates.
+pub fn class(id: usize) -> &'static QosClass {
+    &CLASSES[id]
+}
+
+/// Number of registered classes (ids are `0..class_count()`).
+pub fn class_count() -> usize {
+    CLASSES.len()
+}
+
+/// Resolve a class name to its id.
+pub fn id_of(name: &str) -> Option<usize> {
+    CLASSES.iter().position(|c| c.name == name)
+}
+
+/// Per-request class assignment: either every request is one fixed
+/// class (zero RNG draws — the bit-parity default) or classes are
+/// drawn from a weighted mix (exactly one base draw per request).
+#[derive(Clone, Debug, PartialEq)]
+pub enum QosMix {
+    /// Every request gets this class; draws nothing.
+    Fixed(usize),
+    /// Weighted mix over class ids; weights are normalised at parse
+    /// time. One base draw per sample.
+    Mix { ids: Vec<usize>, weights: Vec<f64> },
+}
+
+impl QosMix {
+    /// Parse a `--qos-mix` spec. Forms:
+    ///
+    /// - `tiered` — preset `premium=0.2,standard=0.5,background=0.3`;
+    /// - `deadline-tight` — preset
+    ///   `premium=0.5,standard=0.4,background=0.1` (the qos-pressure
+    ///   bench regime);
+    /// - a bare class name (`premium`) or `fixed:premium` — fixed;
+    /// - `mix:premium=0.3,standard=0.7` — explicit weighted mix;
+    /// - `uniform:premium,background` — equal weights.
+    ///
+    /// A mix that resolves to a single class degrades to `Fixed` so it
+    /// draws nothing (the `ZDist`/`ModelDist` convention).
+    pub fn parse(spec: &str) -> Result<Self> {
+        let spec = spec.trim();
+        match spec {
+            "tiered" => {
+                return Self::from_pairs(&[
+                    (PREMIUM, 0.2),
+                    (STANDARD, 0.5),
+                    (BACKGROUND, 0.3),
+                ])
+            }
+            "deadline-tight" => {
+                return Self::from_pairs(&[
+                    (PREMIUM, 0.5),
+                    (STANDARD, 0.4),
+                    (BACKGROUND, 0.1),
+                ])
+            }
+            _ => {}
+        }
+        if let Some(id) = id_of(spec) {
+            return Ok(QosMix::Fixed(id));
+        }
+        if let Some(name) = spec.strip_prefix("fixed:") {
+            let Some(id) = id_of(name) else {
+                bail!("unknown QoS class {name:?} (see coordinator/qos.rs)");
+            };
+            return Ok(QosMix::Fixed(id));
+        }
+        if let Some(body) = spec.strip_prefix("uniform:") {
+            let mut pairs = Vec::new();
+            for name in body.split(',') {
+                let Some(id) = id_of(name.trim()) else {
+                    bail!("unknown QoS class {name:?} in uniform mix");
+                };
+                pairs.push((id, 1.0));
+            }
+            return Self::from_pairs(&pairs);
+        }
+        if let Some(body) = spec.strip_prefix("mix:") {
+            let mut pairs = Vec::new();
+            for part in body.split(',') {
+                let Some((name, w)) = part.split_once('=') else {
+                    bail!("bad QoS mix component {part:?} (want name=weight)");
+                };
+                let Some(id) = id_of(name.trim()) else {
+                    bail!("unknown QoS class {name:?} in mix");
+                };
+                let w: f64 = w.trim().parse()?;
+                if !(w > 0.0) {
+                    bail!("QoS mix weight for {name:?} must be positive");
+                }
+                pairs.push((id, w));
+            }
+            return Self::from_pairs(&pairs);
+        }
+        bail!(
+            "unrecognised --qos-mix {spec:?} (try tiered, deadline-tight, \
+             a class name, fixed:NAME, mix:NAME=W,..., or uniform:A,B)"
+        )
+    }
+
+    fn from_pairs(pairs: &[(usize, f64)]) -> Result<Self> {
+        if pairs.is_empty() {
+            bail!("empty QoS mix");
+        }
+        if pairs.len() == 1 {
+            return Ok(QosMix::Fixed(pairs[0].0));
+        }
+        let total: f64 = pairs.iter().map(|&(_, w)| w).sum();
+        Ok(QosMix::Mix {
+            ids: pairs.iter().map(|&(id, _)| id).collect(),
+            weights: pairs.iter().map(|&(_, w)| w / total).collect(),
+        })
+    }
+
+    /// Draw a class id. `Fixed` consumes no randomness; `Mix` consumes
+    /// exactly one base draw (a single `next_u32`, *not* `f64()` which
+    /// costs two) so the audit invariant "qos draws == requests" holds
+    /// exactly.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        match self {
+            QosMix::Fixed(id) => *id,
+            QosMix::Mix { ids, weights } => {
+                let u = rng.next_u32() as f64 / 4_294_967_296.0;
+                let mut acc = 0.0;
+                for (&id, &w) in ids.iter().zip(weights) {
+                    acc += w;
+                    if u < acc {
+                        return id;
+                    }
+                }
+                // rounding leftovers land on the last component
+                *ids.last().unwrap()
+            }
+        }
+    }
+
+    /// Human label for reports and sweep axes.
+    pub fn label(&self) -> String {
+        match self {
+            QosMix::Fixed(id) => class(*id).name.to_string(),
+            QosMix::Mix { ids, weights } => {
+                let parts: Vec<String> = ids
+                    .iter()
+                    .zip(weights)
+                    .map(|(&id, &w)| format!("{}={:.2}", class(id).name, w))
+                    .collect();
+                parts.join(",")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_consistent() {
+        assert_eq!(class(BEST_EFFORT).name, "best-effort");
+        assert_eq!(class(PREMIUM).name, "premium");
+        assert_eq!(class(STANDARD).name, "standard");
+        assert_eq!(class(BACKGROUND).name, "background");
+        assert!(class(BEST_EFFORT).deadline_s.is_infinite());
+        assert!(!class(BEST_EFFORT).degradable);
+        assert!(class(PREMIUM).priority > class(STANDARD).priority);
+        assert!(class(STANDARD).priority > class(BACKGROUND).priority);
+        for id in 0..class_count() {
+            assert_eq!(id_of(class(id).name), Some(id));
+        }
+        assert_eq!(id_of("nope"), None);
+    }
+
+    #[test]
+    fn parse_forms() {
+        assert_eq!(QosMix::parse("premium").unwrap(), QosMix::Fixed(PREMIUM));
+        assert_eq!(
+            QosMix::parse("fixed:background").unwrap(),
+            QosMix::Fixed(BACKGROUND)
+        );
+        let tiered = QosMix::parse("tiered").unwrap();
+        let QosMix::Mix { ids, weights } = &tiered else {
+            panic!("tiered should be a mix");
+        };
+        assert_eq!(ids, &[PREMIUM, STANDARD, BACKGROUND]);
+        assert!((weights.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        let tight = QosMix::parse("deadline-tight").unwrap();
+        let QosMix::Mix { weights, .. } = &tight else {
+            panic!("deadline-tight should be a mix");
+        };
+        assert!((weights[0] - 0.5).abs() < 1e-12);
+        let uni = QosMix::parse("uniform:premium,background").unwrap();
+        let QosMix::Mix { weights, .. } = &uni else {
+            panic!("uniform should be a mix");
+        };
+        assert!((weights[0] - 0.5).abs() < 1e-12);
+        let explicit =
+            QosMix::parse("mix:premium=1,standard=3").unwrap();
+        let QosMix::Mix { weights, .. } = &explicit else {
+            panic!("mix should be a mix");
+        };
+        assert!((weights[1] - 0.75).abs() < 1e-12);
+        assert!(QosMix::parse("bogus").is_err());
+        assert!(QosMix::parse("mix:premium=0").is_err());
+        assert!(QosMix::parse("mix:nope=1").is_err());
+        assert!(QosMix::parse("uniform:nope").is_err());
+    }
+
+    #[test]
+    fn single_component_mix_collapses_to_fixed() {
+        // so it draws nothing — the ZDist::Fixed convention
+        assert_eq!(
+            QosMix::parse("mix:premium=1.0").unwrap(),
+            QosMix::Fixed(PREMIUM)
+        );
+        assert_eq!(
+            QosMix::parse("uniform:standard").unwrap(),
+            QosMix::Fixed(STANDARD)
+        );
+    }
+
+    #[test]
+    fn fixed_draws_nothing_and_mix_draws_exactly_once() {
+        // The audit contract: `qos` stream draws == requests when a
+        // real mix is active, == 0 otherwise.
+        let mut rng = Rng::new(42);
+        let fixed = QosMix::Fixed(PREMIUM);
+        for _ in 0..100 {
+            assert_eq!(fixed.sample(&mut rng), PREMIUM);
+        }
+        assert_eq!(rng.draws(), 0);
+        let mix = QosMix::parse("tiered").unwrap();
+        for i in 0..100u64 {
+            let id = mix.sample(&mut rng);
+            assert!(id < class_count());
+            assert_eq!(rng.draws(), i + 1, "exactly one base draw per sample");
+        }
+    }
+
+    #[test]
+    fn mix_is_deterministic_and_respects_weights() {
+        let mix = QosMix::parse("deadline-tight").unwrap();
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        let xs: Vec<usize> = (0..5000).map(|_| mix.sample(&mut a)).collect();
+        let ys: Vec<usize> = (0..5000).map(|_| mix.sample(&mut b)).collect();
+        assert_eq!(xs, ys);
+        let premium =
+            xs.iter().filter(|&&id| id == PREMIUM).count() as f64 / 5000.0;
+        assert!((premium - 0.5).abs() < 0.03, "premium share {premium}");
+    }
+
+    #[test]
+    fn labels_read_back() {
+        assert_eq!(QosMix::Fixed(BEST_EFFORT).label(), "best-effort");
+        let lbl = QosMix::parse("tiered").unwrap().label();
+        assert!(lbl.contains("premium=0.20"), "{lbl}");
+    }
+}

@@ -18,6 +18,12 @@
 //!   from the request's *origin site*, in step units) plus — when
 //!   placement is on — the cold-load penalty, so a nearby warm worker
 //!   beats a distant idle one exactly when the link costs say so;
+//! - `EdfLl` — deadline-aware dispatch for QoS runs: *placement* uses
+//!   the net-ll cost estimate (pending steps + transfer round trip +
+//!   cold-load penalty, each term optional), while *ordering* happens
+//!   in per-worker earliest-deadline-first queues ([`EdfQueues`]) the
+//!   engine drains in deterministic (deadline, seq) order — with
+//!   priority-aware eviction when `--queue-cap` is saturated;
 //! - `LadTs` — the paper's scheduler: the LADN diffusion actor runs on
 //!   the request path through the AOT `ladn_actor_fwd_b{W}` graph
 //!   (PJRT) when artifacts are available, or through the bit-compatible
@@ -40,6 +46,7 @@
 //! (the engine-level uniform≡plain bit-parity contract covers the
 //! transfer-cost-blind policies).
 
+use std::collections::BTreeMap;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -56,6 +63,7 @@ use super::clock;
 use super::message::Request;
 use super::network::Network;
 use super::placement::Placement;
+use super::qos;
 
 /// Routing policy selector.
 pub enum Policy {
@@ -70,6 +78,10 @@ pub enum Policy {
     /// Least-loaded with the expected transfer time (and cold-load
     /// penalty, when placement is on) added to the estimate.
     NetLl,
+    /// Deadline-aware dispatch for QoS runs: the net-ll cost estimate
+    /// with every subsystem term optional; pairs with the engine-side
+    /// [`EdfQueues`] reordering.
+    EdfLl,
     LadTs(Box<LadPolicy>),
 }
 
@@ -82,6 +94,7 @@ impl Policy {
             Policy::CacheFirst => "cache-first",
             Policy::CacheLl => "cache-ll",
             Policy::NetLl => "net-ll",
+            Policy::EdfLl => "edf-ll",
             Policy::LadTs(p) => p.backend_name(),
         }
     }
@@ -138,6 +151,12 @@ pub struct LadPolicy {
     workers: usize,
     /// Max prompt bits / steps used for state normalisation.
     norm_steps: f64,
+    /// Whether the state vector carries the two QoS features (deadline
+    /// slack + priority). Native backend only: the AOT graphs are
+    /// compiled with fixed input dims, so a QoS run on the PJRT path
+    /// keeps the base layout. Off by default — the qos-off layout and
+    /// draw counts are bit-identical to the pre-QoS policy.
+    qos_features: bool,
 }
 
 impl LadPolicy {
@@ -145,11 +164,14 @@ impl LadPolicy {
     /// aot.py emits B=5 for the five-Jetson prototype), or — when
     /// `rt` is `None` — fall back to the native reverse diffusion so
     /// `lad-ts` stays routable in artifact-free sweeps and CI runs.
+    /// `qos` widens the native state vector with deadline-slack and
+    /// priority features (ignored on the fixed-dim AOT backend).
     pub fn new(
         rt: Option<&XlaRuntime>,
         workers: usize,
         checkpoint: Option<&Path>,
         seed: u64,
+        qos: bool,
     ) -> Result<Self> {
         let mut rng = Rng::new(seed);
         let backend = match rt {
@@ -180,7 +202,7 @@ impl LadPolicy {
                         path.display()
                     );
                 }
-                let s_dim = workers + 2;
+                let s_dim = workers + 2 + if qos { 2 } else { 0 };
                 let mlp = Mlp::init(
                     &mut rng,
                     workers + NATIVE_TEMB_DIM + s_dim,
@@ -198,12 +220,14 @@ impl LadPolicy {
                 }
             }
         };
+        let qos_features = qos && matches!(backend, LadBackend::Native { .. });
         Ok(Self {
             backend,
             mem: LatentMemory::new(1, workers),
             rng,
             workers,
             norm_steps: 15.0,
+            qos_features,
         })
     }
 
@@ -260,7 +284,8 @@ impl LadPolicy {
         placement: Option<&Placement>,
         network: Option<&Network>,
     ) -> Result<usize> {
-        let s_dim = self.workers + 2;
+        let s_dim =
+            self.workers + 2 + if self.qos_features { 2 } else { 0 };
         let mut s = Mat::zeros(1, s_dim);
         s.set(0, 0, (req.prompt.len_bytes() as f32 / 64.0).min(1.0));
         s.set(0, 1, req.z as f32 / self.norm_steps as f32);
@@ -276,6 +301,18 @@ impl LadPolicy {
                 eff += net.round_trip_s(req, w) / clock::JETSON_STEP_S;
             }
             s.set(0, 2 + w, (eff / (self.norm_steps * 10.0)) as f32);
+        }
+        if self.qos_features {
+            // deadline slack (at dispatch the clock reads the arrival
+            // time, so slack == the class budget; an infinite budget
+            // saturates to 1.0) and the admission priority
+            let slack = (req.deadline - req.submitted_at) / 300.0;
+            s.set(0, 2 + self.workers, slack.min(1.0) as f32);
+            s.set(
+                0,
+                3 + self.workers,
+                qos::class(req.qos).priority as f32 / 2.0,
+            );
         }
         let slot = (req.id % 64) as usize;
         let mut x = Mat::zeros(1, self.workers);
@@ -349,6 +386,12 @@ impl Router {
 
     pub fn policy_name(&self) -> &'static str {
         self.policy.name()
+    }
+
+    /// Whether the engine should run per-worker earliest-deadline
+    /// reordering ([`EdfQueues`]) behind this router's dispatches.
+    pub fn is_edf(&self) -> bool {
+        matches!(self.policy, Policy::EdfLl)
     }
 
     /// Choose a worker for `req` and account its load. With a
@@ -487,6 +530,26 @@ impl Router {
                     format!("no worker can hold model {}", req.model)
                 })?
             }
+            Policy::EdfLl => {
+                // Placement reuses the net-ll cost estimate, but both
+                // subsystem terms are *optional* — edf-ll must work on
+                // a bare single-site fleet too (deadline ordering, the
+                // policy's point, lives in the engine-side EdfQueues).
+                argmin(n, feasible, |w| {
+                    let cold = match placement {
+                        Some(p) => p.load_penalty_s(w, req.model),
+                        None => 0.0,
+                    };
+                    let rtt = match network {
+                        Some(net) => net.round_trip_s(req, w),
+                        None => 0.0,
+                    };
+                    pending[w] + (rtt + cold) / clock::JETSON_STEP_S
+                })
+                .with_context(|| {
+                    format!("no worker can hold model {}", req.model)
+                })?
+            }
             Policy::LadTs(lad) => lad.pick(req, pending, placement, network)?,
         };
         if w >= self.pending_steps.len() {
@@ -547,6 +610,115 @@ impl Router {
     }
 }
 
+/// One dispatched-but-not-started job parked in an EDF queue. Service
+/// terms were fixed at dispatch (degradation applied, gen-jitter
+/// drawn, cold load charged) so reordering can never perturb the RNG
+/// or cache sequence — only *when* the start lands on the worker
+/// timeline.
+#[derive(Clone, Debug)]
+pub struct EdfJob {
+    /// The request as it will be served (post-degradation z/model).
+    pub req: Request,
+    /// Upload leg seconds (charged before compute can start).
+    pub up: f64,
+    /// Generation seconds at the served z/model.
+    pub gen: f64,
+    /// Image-return leg seconds.
+    pub down: f64,
+    /// Cold-load delay charged at dispatch, seconds.
+    pub load_delay: f64,
+    /// Earliest start on the worker: arrival plus the upload leg.
+    pub ready_at: f64,
+    /// Quality the request originally demanded (pre-degradation),
+    /// carried through to the response's degradation ledger.
+    pub demanded_z: usize,
+    /// Model variant the request originally demanded.
+    pub demanded_model: usize,
+}
+
+/// Per-worker earliest-deadline-first queues: jobs a deadline-aware
+/// run parks between dispatch and service start. Deterministic order
+/// by `(deadline.to_bits(), seq)` — `to_bits` preserves ordering for
+/// the non-negative deadlines the source emits (`INFINITY` sorts
+/// last), and the global insertion sequence breaks deadline ties
+/// FIFO, the same discipline as [`super::events::EventQueue`].
+#[derive(Debug, Default)]
+pub struct EdfQueues {
+    queues: Vec<BTreeMap<(u64, u64), EdfJob>>,
+    seq: u64,
+}
+
+impl EdfQueues {
+    pub fn new(workers: usize) -> Self {
+        Self { queues: (0..workers).map(|_| BTreeMap::new()).collect(), seq: 0 }
+    }
+
+    /// Park `job` on `worker`'s queue, ordered by its deadline.
+    pub fn push(&mut self, worker: usize, job: EdfJob) {
+        debug_assert!(
+            job.req.deadline >= 0.0,
+            "to_bits ordering needs non-negative deadlines"
+        );
+        let key = (job.req.deadline.to_bits(), self.seq);
+        self.seq += 1;
+        self.queues[worker].insert(key, job);
+    }
+
+    /// Take the earliest-deadline job queued on `worker`.
+    pub fn pop(&mut self, worker: usize) -> Option<EdfJob> {
+        let key = *self.queues[worker].keys().next()?;
+        self.queues[worker].remove(&key)
+    }
+
+    pub fn len(&self, worker: usize) -> usize {
+        self.queues[worker].len()
+    }
+
+    pub fn total(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queues.iter().all(|q| q.is_empty())
+    }
+
+    /// Priority-aware admission: find and remove the queued job most
+    /// deserving of eviction — strictly lower priority than
+    /// `priority`, preferring the lowest priority, then the *latest*
+    /// deadline, then the latest arrival (highest seq). Returns the
+    /// victim and its worker, or `None` when nothing queued is
+    /// strictly below `priority`. The scan is a deterministic
+    /// worker-order walk over ordered maps.
+    pub fn evict_below(&mut self, priority: u8) -> Option<(usize, EdfJob)> {
+        let mut victim: Option<(usize, (u64, u64), u8)> = None;
+        for (w, q) in self.queues.iter().enumerate() {
+            for (&key, job) in q.iter() {
+                let p = qos::class(job.req.qos).priority;
+                if p >= priority {
+                    continue;
+                }
+                let better = match victim {
+                    None => true,
+                    Some((_, vkey, vp)) => {
+                        // lower priority first; then later deadline
+                        // (larger bits); then later arrival (larger seq)
+                        p < vp
+                            || (p == vp
+                                && (key.0 > vkey.0
+                                    || (key.0 == vkey.0 && key.1 > vkey.1)))
+                    }
+                };
+                if better {
+                    victim = Some((w, key, p));
+                }
+            }
+        }
+        let (w, key, _) = victim?;
+        let job = self.queues[w].remove(&key).expect("victim key present");
+        Some((w, job))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -561,6 +733,8 @@ mod tests {
             z,
             model: RESD3M,
             origin: 0,
+            qos: 0,
+            deadline: f64::INFINITY,
             submitted_at: 0.0,
         }
     }
@@ -792,7 +966,7 @@ mod tests {
         // renormalised over feasible workers before the categorical
         // draw — the 16 GB device can never receive SD3-medium.
         let p = placement(&[16.0, 48.0, 48.0], &[0.0, 1.0, 0.0]);
-        let lad = LadPolicy::new(None, 3, None, 9).unwrap();
+        let lad = LadPolicy::new(None, 3, None, 9, false).unwrap();
         assert_eq!(lad.backend_name(), "LAD-TS (native LADN)");
         let mut r = Router::new(Policy::LadTs(Box::new(lad)), 3);
         let mut hit = [0usize; 3];
@@ -809,12 +983,26 @@ mod tests {
     #[test]
     fn lad_native_fallback_is_seed_deterministic() {
         let run = |seed: u64| -> Vec<usize> {
-            let lad = LadPolicy::new(None, 4, None, seed).unwrap();
+            let lad = LadPolicy::new(None, 4, None, seed, false).unwrap();
             let mut r = Router::new(Policy::LadTs(Box::new(lad)), 4);
             (0..24).map(|i| r.dispatch(&req(i, 5), None).unwrap()).collect()
         };
         assert_eq!(run(3), run(3));
         assert_ne!(run(3), run(4), "different seeds should diverge");
+    }
+
+    #[test]
+    fn lad_qos_features_change_the_native_state_dim_only_when_asked() {
+        // qos=false must build the exact pre-QoS layout (the parity
+        // guarantee); qos=true widens the native state vector and so
+        // changes routing, deterministically per seed.
+        let run = |qos: bool| -> Vec<usize> {
+            let lad = LadPolicy::new(None, 3, None, 9, qos).unwrap();
+            let mut r = Router::new(Policy::LadTs(Box::new(lad)), 3);
+            (0..24).map(|i| r.dispatch(&req(i, 5), None).unwrap()).collect()
+        };
+        assert_eq!(run(false), run(false));
+        assert_eq!(run(true), run(true), "qos layout must be deterministic");
     }
 
     #[test]
@@ -851,5 +1039,100 @@ mod tests {
                 "conservation broke"
             );
         });
+    }
+
+    fn req_d(id: u64, qos: usize, deadline: f64) -> Request {
+        Request { qos, deadline, ..req(id, 5) }
+    }
+
+    fn job(id: u64, qos: usize, deadline: f64) -> EdfJob {
+        EdfJob {
+            req: req_d(id, qos, deadline),
+            up: 0.0,
+            gen: 5.0,
+            down: 0.0,
+            load_delay: 0.0,
+            ready_at: 0.0,
+            demanded_z: 5,
+            demanded_model: 0,
+        }
+    }
+
+    #[test]
+    fn edf_ll_works_with_and_without_subsystems() {
+        // Bare fleet: behaves like least-loaded (no transfer / cold
+        // terms), so the deadline ordering can be isolated engine-side.
+        let mut r = Router::new(Policy::EdfLl, 2);
+        assert!(r.is_edf());
+        assert_eq!(r.dispatch(&req(0, 10), None).unwrap(), 0);
+        assert_eq!(r.dispatch(&req(1, 2), None).unwrap(), 1);
+        assert_eq!(r.dispatch(&req(2, 2), None).unwrap(), 1);
+        // With a topology it prefers the origin-local worker on ties,
+        // exactly like net-ll.
+        use crate::coordinator::network::NetOptions;
+        let net = NetOptions::profile_only("wan", 2).build(2).unwrap();
+        let mut r = Router::new(Policy::EdfLl, 2);
+        assert_eq!(
+            r.dispatch_with(&req_o(0, 5, 1), None, Some(&net)).unwrap(),
+            1
+        );
+        // With placement it folds the cold-load penalty in, like
+        // cache-ll.
+        let p = placement(&[20.0, 20.0], &[0.5, 0.0, 0.5]);
+        let warm_re = if p.is_warm(0, RESD3M) { 0 } else { 1 };
+        let mut r = Router::new(Policy::EdfLl, 2);
+        assert_eq!(
+            r.dispatch(&req_m(0, 5, RESD3M), Some(&p)).unwrap(),
+            warm_re
+        );
+        // non-EDF routers report is_edf() == false
+        assert!(!Router::new(Policy::LeastLoaded, 2).is_edf());
+    }
+
+    #[test]
+    fn edf_queue_orders_by_deadline_then_fifo() {
+        let mut q = EdfQueues::new(2);
+        q.push(0, job(0, 2, 50.0));
+        q.push(0, job(1, 2, 25.0));
+        q.push(0, job(2, 2, 25.0)); // deadline tie: FIFO after id 1
+        q.push(0, job(3, 0, f64::INFINITY)); // sorts last
+        q.push(1, job(4, 2, 10.0)); // other worker: independent queue
+        assert_eq!(q.len(0), 4);
+        assert_eq!(q.total(), 5);
+        let order: Vec<u64> =
+            std::iter::from_fn(|| q.pop(0)).map(|j| j.req.id).collect();
+        assert_eq!(order, vec![1, 2, 0, 3]);
+        assert_eq!(q.pop(1).unwrap().req.id, 4);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn edf_eviction_takes_the_least_deserving_job() {
+        // victim order: lowest priority, then latest deadline, then
+        // latest arrival — and never a job at or above the admitting
+        // priority.
+        let mut q = EdfQueues::new(2);
+        q.push(0, job(0, qos::PREMIUM, 20.0)); // priority 2
+        q.push(0, job(1, qos::STANDARD, 60.0)); // priority 1
+        q.push(1, job(2, qos::BACKGROUND, 100.0)); // priority 0
+        q.push(1, job(3, qos::BACKGROUND, 180.0)); // priority 0, latest
+        // premium (2) admission: evict the background job with the
+        // latest deadline
+        let (w, victim) = q.evict_below(2).unwrap();
+        assert_eq!((w, victim.req.id), (1, 3));
+        let (_, victim) = q.evict_below(2).unwrap();
+        assert_eq!(victim.req.id, 2);
+        // next victim is the standard job
+        let (_, victim) = q.evict_below(2).unwrap();
+        assert_eq!(victim.req.id, 1);
+        // nothing queued is strictly below premium now
+        assert!(q.evict_below(2).is_none());
+        assert_eq!(q.total(), 1);
+        // equal-priority deadline+seq tie-break: latest seq loses
+        let mut q = EdfQueues::new(1);
+        q.push(0, job(10, qos::BACKGROUND, 50.0));
+        q.push(0, job(11, qos::BACKGROUND, 50.0));
+        let (_, victim) = q.evict_below(1).unwrap();
+        assert_eq!(victim.req.id, 11);
     }
 }

@@ -52,6 +52,21 @@
 //! Table V batch numbers are unchanged, while heterogeneous-z runs
 //! shift their down legs by sub-millisecond amounts relative to
 //! pre-network builds.
+//!
+//! The QoS subsystem ([`super::qos`]) rides the same engines: with
+//! `--qos-mix` set, every request carries a class (deadline budget,
+//! priority tier, willingness to degrade) drawn from its own seeded
+//! stream, `ServeMetrics` keeps per-class latency/deadline-miss books,
+//! and the `edf-ll` scheduler adds earliest-deadline-first reordering
+//! (per-worker [`EdfQueues`] between dispatch and service start),
+//! SLO-aware degradation (serve a cheaper z, or reroute to the turbo
+//! model tier, when no worker can make the deadline at full quality),
+//! and priority-aware admission under `--queue-cap` (a premium arrival
+//! may bump a parked lower-priority job instead of being dropped).
+//! With `--qos-mix` unset the run is bit-identical to the QoS-free
+//! engine: zero class-stream draws, no reordering, empty class books —
+//! pinned by `rust/tests/serve_qos.rs` and documented in
+//! `docs/qos.md`.
 
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::channel;
@@ -70,7 +85,8 @@ use super::message::{Request, Response};
 use super::metrics::ServeMetrics;
 use super::network::{NetOptions, Network};
 use super::placement::{self, Catalog, ModelDist, Placement};
-use super::router::{LadPolicy, Policy, Router};
+use super::qos::{self, QosMix};
+use super::router::{EdfJob, EdfQueues, LadPolicy, Policy, Router};
 use super::source::RequestSource;
 use super::worker::spawn_worker;
 
@@ -84,7 +100,7 @@ pub struct ServeOptions {
     pub seed: u64,
     pub artifacts_dir: String,
     /// "lad-ts" | "least-loaded" | "round-robin" | "random" |
-    /// "cache-first" | "cache-ll" | "net-ll".
+    /// "cache-first" | "cache-ll" | "net-ll" | "edf-ll".
     pub scheduler: String,
     /// Generation-quality demand z per request (when `z_dist` is None).
     pub z_steps: usize,
@@ -111,6 +127,11 @@ pub struct ServeOptions {
     /// `None` keeps the pre-network engine bit-identical (the implicit
     /// single-site LAN).
     pub network: Option<NetOptions>,
+    /// QoS class mix (`--qos-mix`): per-request deadline/priority
+    /// classes drawn from their own seeded stream. `None` keeps the
+    /// QoS-free engine bit-identical (zero class-stream draws, no
+    /// per-class books, no reordering).
+    pub qos_mix: Option<QosMix>,
 }
 
 impl Default for ServeOptions {
@@ -130,6 +151,7 @@ impl Default for ServeOptions {
             replace_every: 0.0,
             queue_cap: None,
             network: None,
+            qos_mix: None,
         }
     }
 }
@@ -152,6 +174,11 @@ impl DEdgeAi {
     /// Whether the inter-edge network subsystem is active for this run.
     fn network_enabled(&self) -> bool {
         self.opts.network.is_some()
+    }
+
+    /// Whether the QoS subsystem is active for this run.
+    fn qos_enabled(&self) -> bool {
+        self.opts.qos_mix.is_some()
     }
 
     fn make_policy(&self, rt: Option<&XlaRuntime>) -> Result<Policy> {
@@ -188,11 +215,21 @@ impl DEdgeAi {
                 }
                 Policy::NetLl
             }
+            "edf-ll" | "edf" => {
+                if !self.qos_enabled() {
+                    anyhow::bail!(
+                        "edf-ll policy needs QoS classes with deadlines — \
+                         set --qos-mix"
+                    );
+                }
+                Policy::EdfLl
+            }
             "lad-ts" | "lad" => Policy::LadTs(Box::new(LadPolicy::new(
                 rt,
                 self.opts.workers,
                 None,
                 self.opts.seed,
+                self.qos_enabled(),
             )?)),
             other => anyhow::bail!("unknown scheduler '{other}'"),
         })
@@ -295,19 +332,21 @@ impl DEdgeAi {
     }
 
     /// Lazy deterministic request trace: captions, demands, origin
-    /// sites, and submission times are pure functions of (opts, seed),
-    /// emitted one request at a time. The caption, arrival, quality,
-    /// model, and origin-site streams are independent seeded RNGs, so
-    /// the stream is bit-identical to the eager trace the engine used
-    /// to materialise (and the batch trace with fixed z remains
-    /// bit-identical to the pre-open-loop one; a single-site run draws
-    /// no site randomness at all).
+    /// sites, QoS classes, and submission times are pure functions of
+    /// (opts, seed), emitted one request at a time. The caption,
+    /// arrival, quality, model, origin-site, and QoS-class streams are
+    /// independent seeded RNGs, so the stream is bit-identical to the
+    /// eager trace the engine used to materialise (and the batch trace
+    /// with fixed z remains bit-identical to the pre-open-loop one; a
+    /// single-site run draws no site randomness, and a run without a
+    /// class mix draws no QoS randomness at all).
     fn source(&self) -> RequestSource {
         RequestSource::new(
             self.opts.seed,
             &self.opts.arrivals,
             self.z_dist(),
             self.model_dist(),
+            self.opts.qos_mix.clone(),
             self.opts.network.as_ref().map(|n| n.sites).unwrap_or(1),
             self.opts.requests,
         )
@@ -343,6 +382,161 @@ impl DEdgeAi {
         (up, gen, down)
     }
 
+    /// Cheapest plausible time-in-system for `req` right now: over
+    /// every worker that can hold its model, the transfer round trip
+    /// plus the cold-load penalty plus the queued backlog (pending
+    /// effective steps at full Jetson speed) plus the generation
+    /// itself. An optimistic bound — it ignores jitter and future
+    /// contention — which is exactly what a deadline check wants: a
+    /// request it flags as infeasible truly cannot make its deadline
+    /// at this demand. Pure arithmetic, zero RNG draws.
+    fn best_case_seconds(
+        req: &Request,
+        router: &Router,
+        placement: Option<&Placement>,
+        network: Option<&Network>,
+    ) -> f64 {
+        let pending = router.pending();
+        let mult = match placement {
+            Some(p) => p.step_mult(req.model),
+            None => 1.0,
+        };
+        let mut best = f64::INFINITY;
+        for (w, &backlog) in pending.iter().enumerate() {
+            let cold = match placement {
+                Some(p) => p.load_penalty_s(w, req.model),
+                None => 0.0,
+            };
+            if !cold.is_finite() {
+                continue; // this worker can never hold the model
+            }
+            let rtt = match network {
+                Some(net) => {
+                    net.up_seconds(req, w) + net.down_seconds(req, w)
+                }
+                None => {
+                    clock::lan_seconds(Network::up_bits(req))
+                        + clock::lan_seconds(Network::down_bits(req))
+                }
+            };
+            let cost = rtt
+                + cold
+                + backlog * clock::JETSON_STEP_S
+                + clock::jetson_image_seconds_mult(req.z, mult);
+            if cost < best {
+                best = cost;
+            }
+        }
+        best
+    }
+
+    /// SLO-aware degradation (the `edf-ll` dispatch stage): when no
+    /// worker can plausibly serve the full demand inside the request's
+    /// deadline slack, cheapen it — first the quality (z drops to
+    /// [`qos::DEGRADED_Z`]), then the model tier (reroute to the turbo
+    /// variant when a placement run has a worker that can hold it).
+    /// Mutates `req` in place; the caller keeps the demanded values
+    /// for the response's degradation ledger. Pure arithmetic over
+    /// router/placement/network state — zero RNG draws, so the
+    /// decision leaves every seeded stream untouched.
+    fn degrade_for_deadline(
+        req: &mut Request,
+        router: &Router,
+        placement: Option<&Placement>,
+        network: Option<&Network>,
+    ) {
+        if !qos::class(req.qos).degradable {
+            return;
+        }
+        let slack = req.deadline - req.submitted_at;
+        if Self::best_case_seconds(req, router, placement, network) <= slack {
+            return;
+        }
+        if req.z > qos::DEGRADED_Z {
+            req.z = qos::DEGRADED_Z;
+            if Self::best_case_seconds(req, router, placement, network)
+                <= slack
+            {
+                return;
+            }
+        }
+        if let Some(p) = placement {
+            if req.model != placement::RESD3_TURBO
+                && (0..router.pending().len()).any(|w| {
+                    p.load_penalty_s(w, placement::RESD3_TURBO).is_finite()
+                })
+            {
+                req.model = placement::RESD3_TURBO;
+            }
+        }
+    }
+
+    /// Start the earliest-deadline parked job on `worker` if the
+    /// worker has no start scheduled: fix the start on its timeline
+    /// and book the completion (plus cold-load and image-return)
+    /// events. Shared verbatim by the streaming and eager engines so
+    /// the event push order — part of the bitwise parity contract —
+    /// is one piece of code.
+    fn edf_start_next(
+        worker: usize,
+        edf_q: &mut EdfQueues,
+        busy: &mut [bool],
+        free_at: &mut [f64],
+        queue: &mut EventQueue,
+        network: Option<&Network>,
+    ) {
+        if busy[worker] {
+            return;
+        }
+        let job = match edf_q.pop(worker) {
+            Some(j) => j,
+            None => return,
+        };
+        let start = free_at[worker].max(job.ready_at) + job.load_delay;
+        if job.load_delay > 0.0 {
+            queue.push(
+                start,
+                Event::ModelLoaded {
+                    worker,
+                    model: job.req.model,
+                    delay: job.load_delay,
+                },
+            );
+        }
+        let done = start + job.gen + job.down;
+        free_at[worker] = done;
+        busy[worker] = true;
+        queue.push(
+            done,
+            Event::Completion(Response {
+                id: job.req.id,
+                worker,
+                z: job.req.z,
+                model: job.req.model,
+                latency: done - job.req.submitted_at,
+                queue_wait: start - job.req.submitted_at - job.up,
+                gen_time: job.gen,
+                trans_time: job.up + job.down,
+                checksum: 0.0,
+                qos: job.req.qos,
+                deadline: job.req.deadline,
+                demanded_z: job.demanded_z,
+                demanded_model: job.demanded_model,
+            }),
+        );
+        if let Some(net) = network {
+            queue.push(
+                done,
+                Event::TransferDone {
+                    from: net.site(worker),
+                    to: job.req.origin,
+                    bits: Network::down_bits(&job.req),
+                    secs: job.down,
+                },
+            );
+        }
+    }
+
     /// Virtual-time batch run (the Table V protocol: all requests
     /// submitted at t=0, makespan measured on the Jetson-calibrated
     /// clock). Deterministic, no threads. Placement and admission
@@ -352,11 +546,12 @@ impl DEdgeAi {
         if self.placement_enabled()
             || self.opts.queue_cap.is_some()
             || self.network_enabled()
+            || self.qos_enabled()
         {
             bail!(
-                "placement-aware serving, admission control, and inter-edge \
-                 topologies run on the event engine; run_batch is the legacy \
-                 Table V closed loop"
+                "placement-aware serving, admission control, inter-edge \
+                 topologies, and QoS classes run on the event engine; \
+                 run_batch is the legacy Table V closed loop"
             );
         }
         let mut router = self.make_router()?;
@@ -385,6 +580,11 @@ impl DEdgeAi {
                 gen_time: gen,
                 trans_time: up + down,
                 checksum: 0.0,
+                qos: req.qos,
+                deadline: req.deadline,
+                // the batch loop predates QoS and never degrades
+                demanded_z: req.z,
+                demanded_model: req.model,
             };
             metrics.record(&resp, done);
         }
@@ -430,6 +630,16 @@ impl DEdgeAi {
         if placement.is_some() && self.opts.replace_every > 0.0 {
             queue.push(self.opts.replace_every, Event::Replace);
         }
+        // QoS: arm the per-class books, and under edf-ll park
+        // dispatched jobs in per-worker deadline queues (busy[w] =
+        // the worker already has a start scheduled). All three stay
+        // inert without --qos-mix — the bit-parity fast path.
+        if self.qos_enabled() {
+            metrics.set_qos_active();
+        }
+        let edf = router.is_edf();
+        let mut edf_q = EdfQueues::new(self.opts.workers);
+        let mut busy = vec![false; self.opts.workers];
         let mut in_flight = 0usize;
         loop {
             // Pending arrival vs queue head; the arrival wins ties
@@ -451,12 +661,50 @@ impl DEdgeAi {
                 }
                 let admitted = match self.opts.queue_cap {
                     Some(cap) if in_flight >= cap => {
+                        // Priority-aware admission (edf-ll): a full
+                        // system bumps a parked job of strictly lower
+                        // priority rather than dropping the arrival.
+                        // The victim's pending charge is refunded; its
+                        // already-booked upload leg and cache load are
+                        // not unwound — those transfers physically
+                        // happened before the bump.
+                        let bumped = edf
+                            && match edf_q
+                                .evict_below(qos::class(req.qos).priority)
+                            {
+                                Some((vw, victim)) => {
+                                    let vmult = match placement.as_ref() {
+                                        Some(p) => {
+                                            p.step_mult(victim.req.model)
+                                        }
+                                        None => 1.0,
+                                    };
+                                    router.complete_steps(
+                                        vw,
+                                        victim.req.z as f64 * vmult,
+                                    );
+                                    in_flight -= 1;
+                                    true
+                                }
+                                None => false,
+                            };
                         metrics.record_drop();
-                        false
+                        bumped
                     }
                     _ => true,
                 };
                 if admitted {
+                    let demanded_z = req.z;
+                    let demanded_model = req.model;
+                    let mut req = req;
+                    if edf {
+                        Self::degrade_for_deadline(
+                            &mut req,
+                            &router,
+                            placement.as_ref(),
+                            network.as_ref(),
+                        );
+                    }
                     let w = router.dispatch_with(
                         &req,
                         placement.as_ref(),
@@ -480,58 +728,105 @@ impl DEdgeAi {
                         network.as_ref(),
                         w,
                     );
-                    let start = free_at[w].max(now + up) + load_delay;
-                    if load_delay > 0.0 {
-                        queue.push(
-                            start,
-                            Event::ModelLoaded {
-                                worker: w,
-                                model: req.model,
-                                delay: load_delay,
+                    if edf {
+                        // Deadline-aware path: the job parks in the
+                        // worker's EDF queue; its start is fixed when
+                        // the worker frees up. The upload leg is
+                        // booked now (it happens regardless); the
+                        // return leg when the start is fixed.
+                        in_flight += 1;
+                        if let Some(net) = network.as_ref() {
+                            queue.push(
+                                now + up,
+                                Event::TransferDone {
+                                    from: req.origin,
+                                    to: net.site(w),
+                                    bits: Network::up_bits(&req),
+                                    secs: up,
+                                },
+                            );
+                        }
+                        edf_q.push(
+                            w,
+                            EdfJob {
+                                ready_at: now + up,
+                                req,
+                                up,
+                                gen,
+                                down,
+                                load_delay,
+                                demanded_z,
+                                demanded_model,
                             },
                         );
-                    }
-                    let done = start + gen + down;
-                    free_at[w] = done;
-                    in_flight += 1;
-                    queue.push(
-                        done,
-                        Event::Completion(Response {
-                            id: req.id,
-                            worker: w,
-                            z: req.z,
-                            model: req.model,
-                            latency: done - now,
-                            queue_wait: start - now - up,
-                            gen_time: gen,
-                            trans_time: up + down,
-                            checksum: 0.0,
-                        }),
-                    );
-                    // Transfer legs bracket compute: the upload ends
-                    // before generation can start, the image return
-                    // lands with the completion. Both are booked into
-                    // the per-link metrics at their own virtual times.
-                    if let Some(net) = network.as_ref() {
-                        let (o, site) = (req.origin, net.site(w));
-                        queue.push(
-                            now + up,
-                            Event::TransferDone {
-                                from: o,
-                                to: site,
-                                bits: Network::up_bits(&req),
-                                secs: up,
-                            },
+                        Self::edf_start_next(
+                            w,
+                            &mut edf_q,
+                            &mut busy,
+                            &mut free_at,
+                            &mut queue,
+                            network.as_ref(),
                         );
+                    } else {
+                        let start = free_at[w].max(now + up) + load_delay;
+                        if load_delay > 0.0 {
+                            queue.push(
+                                start,
+                                Event::ModelLoaded {
+                                    worker: w,
+                                    model: req.model,
+                                    delay: load_delay,
+                                },
+                            );
+                        }
+                        let done = start + gen + down;
+                        free_at[w] = done;
+                        in_flight += 1;
                         queue.push(
                             done,
-                            Event::TransferDone {
-                                from: site,
-                                to: o,
-                                bits: Network::down_bits(&req),
-                                secs: down,
-                            },
+                            Event::Completion(Response {
+                                id: req.id,
+                                worker: w,
+                                z: req.z,
+                                model: req.model,
+                                latency: done - now,
+                                queue_wait: start - now - up,
+                                gen_time: gen,
+                                trans_time: up + down,
+                                checksum: 0.0,
+                                qos: req.qos,
+                                deadline: req.deadline,
+                                // the FIFO path never degrades
+                                demanded_z: req.z,
+                                demanded_model: req.model,
+                            }),
                         );
+                        // Transfer legs bracket compute: the upload
+                        // ends before generation can start, the image
+                        // return lands with the completion. Both are
+                        // booked into the per-link metrics at their
+                        // own virtual times.
+                        if let Some(net) = network.as_ref() {
+                            let (o, site) = (req.origin, net.site(w));
+                            queue.push(
+                                now + up,
+                                Event::TransferDone {
+                                    from: o,
+                                    to: site,
+                                    bits: Network::up_bits(&req),
+                                    secs: up,
+                                },
+                            );
+                            queue.push(
+                                done,
+                                Event::TransferDone {
+                                    from: site,
+                                    to: o,
+                                    bits: Network::down_bits(&req),
+                                    secs: down,
+                                },
+                            );
+                        }
                     }
                 }
             } else {
@@ -551,6 +846,19 @@ impl DEdgeAi {
                         router.complete_steps(resp.worker, resp.z as f64 * mult);
                         in_flight -= 1;
                         metrics.record(&resp, now);
+                        if edf {
+                            // the worker freed up: start its next
+                            // earliest-deadline parked job
+                            busy[resp.worker] = false;
+                            Self::edf_start_next(
+                                resp.worker,
+                                &mut edf_q,
+                                &mut busy,
+                                &mut free_at,
+                                &mut queue,
+                                network.as_ref(),
+                            );
+                        }
                     }
                     Event::ModelLoaded { worker, model, delay } => {
                         log::debug!(
@@ -601,6 +909,10 @@ impl DEdgeAi {
             0.0,
             "event engine drained but pending load remains"
         );
+        debug_assert!(
+            edf_q.is_empty(),
+            "event engine drained but EDF jobs remain parked"
+        );
         let mut audit = source.audit();
         audit.note("gen-jitter", rng.draws());
         metrics.set_rng_audit(audit);
@@ -631,6 +943,14 @@ impl DEdgeAi {
         if placement.is_some() && self.opts.replace_every > 0.0 {
             queue.push(self.opts.replace_every, Event::Replace);
         }
+        // same QoS arming as the streaming engine — the parity suite
+        // covers QoS configs too
+        if self.qos_enabled() {
+            metrics.set_qos_active();
+        }
+        let edf = router.is_edf();
+        let mut edf_q = EdfQueues::new(self.opts.workers);
+        let mut busy = vec![false; self.opts.workers];
         let mut in_flight = 0usize;
         while let Some((now, event)) = queue.pop() {
             match event {
@@ -639,11 +959,48 @@ impl DEdgeAi {
                     if let Some(p) = placement.as_mut() {
                         p.note_demand(req.model);
                     }
-                    if let Some(cap) = self.opts.queue_cap {
-                        if in_flight >= cap {
+                    let admitted = match self.opts.queue_cap {
+                        Some(cap) if in_flight >= cap => {
+                            // same priority-aware bump as the
+                            // streaming engine (see run_events)
+                            let bumped = edf
+                                && match edf_q
+                                    .evict_below(qos::class(req.qos).priority)
+                                {
+                                    Some((vw, victim)) => {
+                                        let vmult = match placement.as_ref() {
+                                            Some(p) => {
+                                                p.step_mult(victim.req.model)
+                                            }
+                                            None => 1.0,
+                                        };
+                                        router.complete_steps(
+                                            vw,
+                                            victim.req.z as f64 * vmult,
+                                        );
+                                        in_flight -= 1;
+                                        true
+                                    }
+                                    None => false,
+                                };
                             metrics.record_drop();
-                            continue;
+                            bumped
                         }
+                        _ => true,
+                    };
+                    if !admitted {
+                        continue;
+                    }
+                    let demanded_z = req.z;
+                    let demanded_model = req.model;
+                    let mut req = req;
+                    if edf {
+                        Self::degrade_for_deadline(
+                            &mut req,
+                            &router,
+                            placement.as_ref(),
+                            network.as_ref(),
+                        );
                     }
                     let w = router.dispatch_with(
                         &req,
@@ -668,56 +1025,99 @@ impl DEdgeAi {
                         network.as_ref(),
                         w,
                     );
-                    let start = free_at[w].max(now + up) + load_delay;
-                    if load_delay > 0.0 {
-                        queue.push(
-                            start,
-                            Event::ModelLoaded {
-                                worker: w,
-                                model: req.model,
-                                delay: load_delay,
+                    if edf {
+                        // same park-then-start path as the streaming
+                        // engine (see run_events) — push order included
+                        in_flight += 1;
+                        if let Some(net) = network.as_ref() {
+                            queue.push(
+                                now + up,
+                                Event::TransferDone {
+                                    from: req.origin,
+                                    to: net.site(w),
+                                    bits: Network::up_bits(&req),
+                                    secs: up,
+                                },
+                            );
+                        }
+                        edf_q.push(
+                            w,
+                            EdfJob {
+                                ready_at: now + up,
+                                req,
+                                up,
+                                gen,
+                                down,
+                                load_delay,
+                                demanded_z,
+                                demanded_model,
                             },
                         );
-                    }
-                    let done = start + gen + down;
-                    free_at[w] = done;
-                    in_flight += 1;
-                    queue.push(
-                        done,
-                        Event::Completion(Response {
-                            id: req.id,
-                            worker: w,
-                            z: req.z,
-                            model: req.model,
-                            latency: done - now,
-                            queue_wait: start - now - up,
-                            gen_time: gen,
-                            trans_time: up + down,
-                            checksum: 0.0,
-                        }),
-                    );
-                    // same leg bookkeeping (and push order) as the
-                    // streaming engine — parity is bitwise
-                    if let Some(net) = network.as_ref() {
-                        let (o, site) = (req.origin, net.site(w));
-                        queue.push(
-                            now + up,
-                            Event::TransferDone {
-                                from: o,
-                                to: site,
-                                bits: Network::up_bits(&req),
-                                secs: up,
-                            },
+                        Self::edf_start_next(
+                            w,
+                            &mut edf_q,
+                            &mut busy,
+                            &mut free_at,
+                            &mut queue,
+                            network.as_ref(),
                         );
+                    } else {
+                        let start = free_at[w].max(now + up) + load_delay;
+                        if load_delay > 0.0 {
+                            queue.push(
+                                start,
+                                Event::ModelLoaded {
+                                    worker: w,
+                                    model: req.model,
+                                    delay: load_delay,
+                                },
+                            );
+                        }
+                        let done = start + gen + down;
+                        free_at[w] = done;
+                        in_flight += 1;
                         queue.push(
                             done,
-                            Event::TransferDone {
-                                from: site,
-                                to: o,
-                                bits: Network::down_bits(&req),
-                                secs: down,
-                            },
+                            Event::Completion(Response {
+                                id: req.id,
+                                worker: w,
+                                z: req.z,
+                                model: req.model,
+                                latency: done - now,
+                                queue_wait: start - now - up,
+                                gen_time: gen,
+                                trans_time: up + down,
+                                checksum: 0.0,
+                                qos: req.qos,
+                                deadline: req.deadline,
+                                // the FIFO path never degrades
+                                demanded_z: req.z,
+                                demanded_model: req.model,
+                            }),
                         );
+                        // same leg bookkeeping (and push order) as the
+                        // streaming engine — parity is bitwise
+                        if let Some(net) = network.as_ref() {
+                            let (o, site) = (req.origin, net.site(w));
+                            queue.push(
+                                now + up,
+                                Event::TransferDone {
+                                    from: o,
+                                    to: site,
+                                    bits: Network::up_bits(&req),
+                                    secs: up,
+                                },
+                            );
+                            queue.push(
+                                done,
+                                Event::TransferDone {
+                                    from: site,
+                                    to: o,
+                                    bits: Network::down_bits(&req),
+                                    secs: down,
+                                },
+                            );
+                        }
                     }
                 }
                 Event::Completion(resp) => {
@@ -728,6 +1128,17 @@ impl DEdgeAi {
                     router.complete_steps(resp.worker, resp.z as f64 * mult);
                     in_flight -= 1;
                     metrics.record(&resp, now);
+                    if edf {
+                        busy[resp.worker] = false;
+                        Self::edf_start_next(
+                            resp.worker,
+                            &mut edf_q,
+                            &mut busy,
+                            &mut free_at,
+                            &mut queue,
+                            network.as_ref(),
+                        );
+                    }
                 }
                 Event::ModelLoaded { worker, delay, .. } => {
                     metrics.record_cold_load_on(worker, delay);
@@ -766,6 +1177,10 @@ impl DEdgeAi {
             0.0,
             "event engine drained but pending load remains"
         );
+        debug_assert!(
+            edf_q.is_empty(),
+            "event engine drained but EDF jobs remain parked"
+        );
         // same ledger the streaming engine records — audit parity is
         // part of the bitwise-parity contract
         let mut audit = source.audit();
@@ -782,6 +1197,7 @@ impl DEdgeAi {
             || self.placement_enabled()
             || self.opts.queue_cap.is_some()
             || self.network_enabled()
+            || self.qos_enabled()
     }
 
     /// Virtual-clock entry point: the plain batch protocol keeps its
@@ -810,11 +1226,12 @@ impl DEdgeAi {
         if self.placement_enabled()
             || self.opts.queue_cap.is_some()
             || self.network_enabled()
+            || self.qos_enabled()
         {
             bail!(
-                "placement, admission control, and inter-edge topologies are \
-                 virtual-clock features (the real-time path runs one \
-                 resident genmodel per worker on a real LAN); drop \
+                "placement, admission control, inter-edge topologies, and \
+                 QoS classes are virtual-clock features (the real-time path \
+                 runs one resident genmodel per worker on a real LAN); drop \
                  --real-time"
             );
         }
@@ -916,6 +1333,17 @@ pub fn serve_and_report(opts: &ServeOptions) -> Result<()> {
             if net.bw_matrix.is_some() { ", bw-matrix override" } else { "" }
         );
     }
+    if let Some(mix) = &opts.qos_mix {
+        println!(
+            "qos: classes ~ {}{}",
+            mix.label(),
+            if opts.scheduler.starts_with("edf") {
+                ", EDF reordering + deadline degradation"
+            } else {
+                ", FIFO (classes recorded, never reordered)"
+            }
+        );
+    }
     if let Some(rate) = opts.arrivals.rate() {
         let mean_z = sys.z_dist().mean();
         let mult = if placement_on {
@@ -975,6 +1403,17 @@ pub fn serve_and_report(opts: &ServeOptions) -> Result<()> {
             metrics.in_flight_peak().to_string(),
         ]);
     }
+    if metrics.qos_active() {
+        t.row(vec![
+            "deadline miss rate".into(),
+            fnum(metrics.deadline_miss_rate(), 3),
+        ]);
+        let (degraded, rerouted) = metrics.degradations();
+        t.row(vec![
+            "degraded / rerouted".into(),
+            format!("{degraded} / {rerouted}"),
+        ]);
+    }
     if placement_on {
         t.row(vec![
             "cache hit rate".into(),
@@ -1017,6 +1456,31 @@ pub fn serve_and_report(opts: &ServeOptions) -> Result<()> {
             ]);
         }
         println!("{}", lt.render());
+    }
+    if metrics.qos_active() && !metrics.class_stats().is_empty() {
+        let mut ct = Table::new(&[
+            "class",
+            "count",
+            "p50 (s)",
+            "p99 (s)",
+            "miss rate",
+            "degraded",
+            "rerouted",
+        ])
+        .left_first()
+        .title("per-class QoS");
+        for (&id, st) in metrics.class_stats() {
+            ct.row(vec![
+                qos::class(id).name.to_string(),
+                st.count.to_string(),
+                fnum(st.p50(), 2),
+                fnum(st.p99(), 2),
+                fnum(st.miss_rate(), 3),
+                st.degraded.to_string(),
+                st.rerouted.to_string(),
+            ]);
+        }
+        println!("{}", ct.render());
     }
     Ok(())
 }
@@ -1301,5 +1765,72 @@ mod tests {
             heavy > light * 1.5,
             "light={light} heavy={heavy}: queueing delay did not grow"
         );
+    }
+
+    #[test]
+    fn edf_ll_requires_a_qos_mix() {
+        let opts = ServeOptions {
+            requests: 5,
+            scheduler: "edf-ll".into(),
+            arrivals: ArrivalProcess::Poisson { rate: 0.2 },
+            ..ServeOptions::default()
+        };
+        let err = DEdgeAi::new(opts).run_virtual().unwrap_err();
+        assert!(err.to_string().contains("qos-mix"), "{err}");
+    }
+
+    #[test]
+    fn single_class_qos_run_matches_plain_engine_bitwise() {
+        // In-module smoke of rust/tests/serve_qos.rs: a Fixed
+        // best-effort mix draws no class randomness, sets no finite
+        // deadlines, and degrades nothing — the schedule must be
+        // bit-identical to the QoS-free engine (the class books are
+        // the only addition).
+        let base = ServeOptions {
+            requests: 60,
+            arrivals: ArrivalProcess::Poisson { rate: 0.25 },
+            z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+            ..ServeOptions::default()
+        };
+        let plain = DEdgeAi::new(base.clone()).run_virtual().unwrap();
+        let classed = DEdgeAi::new(ServeOptions {
+            qos_mix: Some(QosMix::Fixed(qos::BEST_EFFORT)),
+            ..base
+        })
+        .run_virtual()
+        .unwrap();
+        assert_eq!(plain.count(), classed.count());
+        assert_eq!(plain.per_worker(), classed.per_worker());
+        assert_eq!(plain.makespan().to_bits(), classed.makespan().to_bits());
+        assert_eq!(
+            plain.p99_latency().to_bits(),
+            classed.p99_latency().to_bits()
+        );
+        assert_eq!(classed.rng_audit().draws("qos"), Some(0));
+        assert!(classed.qos_active());
+        assert!(!plain.qos_active());
+    }
+
+    #[test]
+    fn edf_run_serves_everything_and_degrades_under_pressure() {
+        // deadline-tight mix on a wan topology just past saturation:
+        // every request is served (no cap), the class books cover the
+        // full population, and the degradation stage fires.
+        let opts = ServeOptions {
+            requests: 150,
+            scheduler: "edf-ll".into(),
+            arrivals: ArrivalProcess::Poisson { rate: 0.48 },
+            z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+            qos_mix: Some(QosMix::parse("deadline-tight").unwrap()),
+            network: Some(NetOptions::profile_only("wan", 5)),
+            ..ServeOptions::default()
+        };
+        let m = DEdgeAi::new(opts).run_virtual().unwrap();
+        assert_eq!(m.count(), 150);
+        let classed: u64 = m.class_stats().values().map(|s| s.count).sum();
+        assert_eq!(classed, 150);
+        let (degraded, _rerouted) = m.degradations();
+        assert!(degraded > 0, "no degradations at rho > 1");
+        assert!(m.rng_audit().draws("qos") == Some(150));
     }
 }

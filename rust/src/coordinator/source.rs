@@ -4,10 +4,10 @@
 //! front — one heap `String` per prompt, every arrival pushed into the
 //! event heap at construction — making memory and startup cost
 //! O(total requests). [`RequestSource`] replaces that: it owns the
-//! five independent RNG streams (arrival clock, caption, quality
-//! demand z, model demand, origin site) and synthesises the *next*
-//! request on demand, so the engine holds O(in-flight) state no matter
-//! how many requests a run offers.
+//! six independent RNG streams (arrival clock, caption, quality
+//! demand z, model demand, origin site, QoS class) and synthesises the
+//! *next* request on demand, so the engine holds O(in-flight) state no
+//! matter how many requests a run offers.
 //!
 //! Bit-parity: each stream is a separate seeded [`Rng`], so drawing
 //! (time_i, caption_i, z_i, model_i, origin_i) lazily per request
@@ -16,9 +16,10 @@
 //! therefore reproduces the old `make_requests()` trace exactly, and
 //! the parity suite pins it. The origin-site stream draws nothing for
 //! a single-site run — the pre-network default stays bit-identical,
-//! the same guarantee `ZDist::Fixed` gives the quality stream. (Only
-//! the *engine state* is O(in-flight); metrics still record
-//! per-completion measures.)
+//! the same guarantee `ZDist::Fixed` gives the quality stream and the
+//! absent/fixed `QosMix` gives the class stream. (Only the *engine
+//! state* is O(in-flight); metrics still record per-completion
+//! measures.)
 
 use crate::util::rng::{Rng, RngAudit};
 
@@ -26,6 +27,7 @@ use super::arrivals::{ArrivalGen, ArrivalProcess, ZDist};
 use super::corpus::Corpus;
 use super::message::Request;
 use super::placement::ModelDist;
+use super::qos::{self, QosMix};
 
 /// Stream-seed salts: one per independent stream, unchanged from the
 /// eager trace builder so traces stay bit-identical across the
@@ -34,6 +36,7 @@ const ARRIVAL_SALT: u64 = 0xA881_07A1;
 const Z_SALT: u64 = 0x57E9_D157;
 const MODEL_SALT: u64 = 0x3A9D_11AD;
 const SITE_SALT: u64 = 0x517E_0B17;
+const QOS_SALT: u64 = 0x0905_C1A5;
 
 /// Lazy, allocation-free generator of the deterministic request trace:
 /// a pure function of (arrivals, z-dist, model-dist, n, seed), emitted
@@ -45,9 +48,13 @@ pub struct RequestSource {
     z_rng: Rng,
     m_rng: Rng,
     site_rng: Rng,
+    qos_rng: Rng,
     gen: ArrivalGen,
     zd: ZDist,
     md: ModelDist,
+    /// QoS class assignment; `None` (and `Some(Fixed)`) draw no qos
+    /// RNG — the pre-QoS bit-parity default.
+    qm: Option<QosMix>,
     /// Edge sites requests originate from (uniform); 1 = the
     /// pre-network single-site default, which draws no site RNG.
     sites: usize,
@@ -61,6 +68,7 @@ impl RequestSource {
         arrivals: &ArrivalProcess,
         zd: ZDist,
         md: ModelDist,
+        qm: Option<QosMix>,
         sites: usize,
         n: usize,
     ) -> Self {
@@ -70,9 +78,11 @@ impl RequestSource {
             z_rng: Rng::new(seed ^ Z_SALT),
             m_rng: Rng::new(seed ^ MODEL_SALT),
             site_rng: Rng::new(seed ^ SITE_SALT),
+            qos_rng: Rng::new(seed ^ QOS_SALT),
             gen: arrivals.stream(),
             zd,
             md,
+            qm,
             sites: sites.max(1),
             next_id: 0,
             remaining: n,
@@ -84,10 +94,12 @@ impl RequestSource {
         self.remaining
     }
 
-    /// Per-stream draw counts for the five named streams this source
+    /// Per-stream draw counts for the six named streams this source
     /// owns, in trace order. Equal audits across two runs of the same
     /// configuration certify no cross-stream contamination (a fixed-z
-    /// run must report `z: 0`, a single-site run `origin: 0`).
+    /// run must report `z: 0`, a single-site run `origin: 0`, and a
+    /// run without a real QoS mix `qos: 0` — with a mix, `qos` must
+    /// equal the requests emitted, exactly one draw each).
     pub fn audit(&self) -> RngAudit {
         let mut audit = RngAudit::new();
         audit.note("arrival", self.arr_rng.draws());
@@ -95,6 +107,7 @@ impl RequestSource {
         audit.note("z", self.z_rng.draws());
         audit.note("model", self.m_rng.draws());
         audit.note("origin", self.site_rng.draws());
+        audit.note("qos", self.qos_rng.draws());
         audit
     }
 }
@@ -109,9 +122,16 @@ impl Iterator for RequestSource {
         self.remaining -= 1;
         let id = self.next_id;
         self.next_id += 1;
+        let submitted_at = self.gen.next_time(&mut self.arr_rng);
+        // no mix (and a Fixed mix) consume no qos randomness — the
+        // pre-QoS bit-parity guarantee, same shape as origin below
+        let qos_id = match &self.qm {
+            Some(mix) => mix.sample(&mut self.qos_rng),
+            None => qos::BEST_EFFORT,
+        };
         Some(Request {
             id,
-            submitted_at: self.gen.next_time(&mut self.arr_rng),
+            submitted_at,
             prompt: self.corpus.descriptor(),
             z: self.zd.sample(&mut self.z_rng),
             model: self.md.sample(&mut self.m_rng),
@@ -122,6 +142,10 @@ impl Iterator for RequestSource {
             } else {
                 0
             },
+            qos: qos_id,
+            // absolute deadline; INFINITY + t stays INFINITY, so the
+            // best-effort default never constrains anything
+            deadline: submitted_at + qos::class(qos_id).deadline_s,
         })
     }
 
@@ -142,6 +166,7 @@ mod tests {
             &ArrivalProcess::Poisson { rate: 0.3 },
             ZDist::Uniform { lo: 5, hi: 15 },
             ModelDist::Fixed(0),
+            None,
             1,
             n,
         )
@@ -187,6 +212,7 @@ mod tests {
             &ArrivalProcess::Batch,
             ZDist::Fixed(15),
             ModelDist::Fixed(0),
+            None,
             1,
             50,
         );
@@ -194,6 +220,8 @@ mod tests {
             assert_eq!(r.z, 15);
             assert_eq!(r.model, 0);
             assert_eq!(r.origin, 0);
+            assert_eq!(r.qos, qos::BEST_EFFORT);
+            assert!(r.deadline.is_infinite());
             assert_eq!(r.submitted_at, 0.0);
         }
     }
@@ -210,6 +238,7 @@ mod tests {
                 &ArrivalProcess::Poisson { rate: 0.3 },
                 ZDist::Uniform { lo: 5, hi: 15 },
                 ModelDist::Fixed(0),
+                None,
                 4,
                 n,
             )
@@ -234,6 +263,76 @@ mod tests {
             sited.iter().map(|r| r.origin).collect::<Vec<_>>(),
             "origin stream must be seed-deterministic"
         );
+    }
+
+    #[test]
+    fn qos_mix_leaves_the_other_streams_untouched() {
+        // Same discipline as origins: the qos stream is its own seeded
+        // RNG, so turning a mix on must not perturb any other draw,
+        // and the audit must show exactly one qos draw per request
+        // (none without a mix).
+        let mixed = |n: usize| {
+            RequestSource::new(
+                42,
+                &ArrivalProcess::Poisson { rate: 0.3 },
+                ZDist::Uniform { lo: 5, hi: 15 },
+                ModelDist::Fixed(0),
+                Some(QosMix::parse("tiered").unwrap()),
+                1,
+                n,
+            )
+        };
+        let mut plain_src = src(200);
+        let plain: Vec<Request> = plain_src.by_ref().collect();
+        let mut mixed_src = mixed(200);
+        let classed: Vec<Request> = mixed_src.by_ref().collect();
+        let mut seen = [false; 4];
+        for (a, b) in plain.iter().zip(&classed) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.submitted_at.to_bits(), b.submitted_at.to_bits());
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.z, b.z);
+            assert_eq!(a.model, b.model);
+            assert_eq!(a.qos, qos::BEST_EFFORT);
+            assert!(a.deadline.is_infinite());
+            assert!(b.qos < qos::class_count());
+            assert_eq!(
+                b.deadline.to_bits(),
+                (b.submitted_at + qos::class(b.qos).deadline_s).to_bits(),
+                "deadline must be submission + class budget"
+            );
+            seen[b.qos] = true;
+        }
+        assert!(
+            seen[qos::PREMIUM] && seen[qos::STANDARD] && seen[qos::BACKGROUND],
+            "all mixed classes should occur"
+        );
+        assert_eq!(plain_src.audit().draws("qos"), Some(0));
+        assert_eq!(
+            mixed_src.audit().draws("qos"),
+            Some(200),
+            "exactly one qos draw per request"
+        );
+        // a Fixed mix is indistinguishable from the class it names and
+        // draws nothing
+        let mut fixed_src = RequestSource::new(
+            42,
+            &ArrivalProcess::Poisson { rate: 0.3 },
+            ZDist::Uniform { lo: 5, hi: 15 },
+            ModelDist::Fixed(0),
+            Some(QosMix::Fixed(qos::PREMIUM)),
+            1,
+            50,
+        );
+        for r in fixed_src.by_ref() {
+            assert_eq!(r.qos, qos::PREMIUM);
+            assert_eq!(
+                r.deadline.to_bits(),
+                (r.submitted_at + qos::class(qos::PREMIUM).deadline_s)
+                    .to_bits()
+            );
+        }
+        assert_eq!(fixed_src.audit().draws("qos"), Some(0));
     }
 
     #[test]

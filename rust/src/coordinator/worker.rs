@@ -86,6 +86,11 @@ pub fn spawn_worker(
                     // in-process channels: no modeled transfer legs
                     trans_time: 0.0,
                     checksum,
+                    qos: req.qos,
+                    deadline: req.deadline,
+                    // the real-time path never degrades
+                    demanded_z: req.z,
+                    demanded_model: req.model,
                 };
                 if resp_tx.send(resp).is_err() {
                     break; // collector gone
@@ -124,6 +129,8 @@ mod tests {
                 z: 3,
                 model: 0,
                 origin: 0,
+                qos: 0,
+                deadline: f64::INFINITY,
                 submitted_at: epoch.elapsed().as_secs_f64(),
             })
             .unwrap();

@@ -26,7 +26,9 @@ use dedgeai::agents::{make_scheduler, Method};
 use dedgeai::config::{ActorLoss, AgentConfig, Backend, EnvConfig, ExpConfig};
 use dedgeai::coordinator;
 use dedgeai::coordinator::placement;
-use dedgeai::coordinator::{ArrivalProcess, Catalog, ModelDist, NetOptions, ZDist};
+use dedgeai::coordinator::{
+    ArrivalProcess, Catalog, ModelDist, NetOptions, QosMix, ZDist,
+};
 use dedgeai::runtime::XlaRuntime;
 use dedgeai::sim::{experiments, output, runner};
 use dedgeai::util::cli::Args;
@@ -38,12 +40,13 @@ dedgeai — latent action diffusion scheduling for AIGC edge services
 USAGE:
   dedgeai train --method lad-ts [--episodes 60] [--seed 42]
   dedgeai exp <fig5|fig6a|fig6b|fig7a|fig7b|fig8a|fig8b|table5|mem|ablation|
-               serve-sweep|placement-sweep|topology-sweep|all>
+               serve-sweep|placement-sweep|topology-sweep|qos-sweep|all>
   dedgeai serve [--workers 5] [--requests 100] [--real-time]
                 [--arrivals poisson --rate 0.3] [--z-dist uniform:5,15]
                 [--model-dist mix:resd3-m=0.7,sd3-medium=0.3]
                 [--worker-vram 24,24,24,24,48] [--queue-cap 50]
                 [--topology wan --sites 5 --site-of 0,1,2,3,4]
+                [--qos-mix deadline-tight --method edf-ll]
   dedgeai bench [--bench-requests 1000000] [--bench-out BENCH_serve.json]
   dedgeai lint [--lint-root DIR]
   dedgeai verify-determinism [any serve option]
@@ -119,6 +122,15 @@ OPTIONS (network / topology-sweep):
                      e.g. '1000,200;150,1000' (RTTs keep the profile)
   --topology-profiles P  topology-sweep profiles, comma-separated,
                      e.g. uniform,lan,wan,degraded:0
+
+OPTIONS (qos / qos-sweep):
+  --qos-mix M        QoS class mix: tiered | deadline-tight | NAME |
+                     fixed:NAME | uniform:A,B | mix:NAME=W,...
+                     (classes: best-effort, premium, standard,
+                     background); enables per-request deadlines,
+                     per-class books, and the edf-ll scheduler
+  --qos-mixes M      qos-sweep class mixes, ';'-separated --qos-mix
+                     specs (the specs themselves contain commas)
 
 OPTIONS (lint / verify-determinism):
   --lint-root DIR    lint this directory instead of auto-discovering
@@ -241,6 +253,23 @@ fn exp_config(args: &Args) -> Result<ExpConfig> {
         args.usize_or("serve-requests", cfg.topology.requests)?;
     cfg.topology.arrivals = args.str_or("arrivals", &cfg.topology.arrivals);
     cfg.topology.z_dist = args.str_or("z-dist", &cfg.topology.z_dist);
+    // qos-sweep grid overrides (rates/schedulers/sites/arrivals/z-dist
+    // shared with the other serving sweeps; mixes are ';'-separated
+    // because --qos-mix specs contain commas)
+    if let Some(rates) = args.list_f64("rates")? {
+        cfg.qos.rates = rates;
+    }
+    if let Some(s) = args.get("schedulers") {
+        cfg.qos.schedulers =
+            s.split(',').map(|x| x.trim().to_string()).collect();
+    }
+    if let Some(m) = args.get("qos-mixes") {
+        cfg.qos.mixes = m.split(';').map(|x| x.trim().to_string()).collect();
+    }
+    cfg.qos.sites = args.usize_or("sites", cfg.qos.sites)?;
+    cfg.qos.requests = args.usize_or("serve-requests", cfg.qos.requests)?;
+    cfg.qos.arrivals = args.str_or("arrivals", &cfg.qos.arrivals);
+    cfg.qos.z_dist = args.str_or("z-dist", &cfg.qos.z_dist);
     Ok(cfg)
 }
 
@@ -355,6 +384,12 @@ fn serve_options(args: &Args) -> Result<coordinator::ServeOptions> {
         0 => None,
         cap => Some(cap),
     };
+    // qos: --qos-mix enables the class/deadline subsystem (and is
+    // required by the edf-ll scheduler)
+    let qos_mix = match args.get("qos-mix") {
+        Some(spec) => Some(QosMix::parse(spec)?),
+        None => None,
+    };
     // network: any of --topology/--sites/--site-of/--bw-matrix enables
     // the inter-edge subsystem (profile defaults to lan, one site per
     // worker like the five-Jetson testbed)
@@ -387,6 +422,7 @@ fn serve_options(args: &Args) -> Result<coordinator::ServeOptions> {
         replace_every: args.f64_or("replace-every", 0.0)?,
         queue_cap,
         network,
+        qos_mix,
     };
     Ok(opts)
 }

@@ -28,6 +28,7 @@ use crate::coordinator::arrivals::{ArrivalProcess, ZDist};
 use crate::coordinator::clock;
 use crate::coordinator::network::NetOptions;
 use crate::coordinator::placement::{Catalog, ModelDist};
+use crate::coordinator::qos::QosMix;
 use crate::coordinator::service::{DEdgeAi, ServeOptions};
 use crate::util::json::Json;
 use crate::util::table::{fnum, Table};
@@ -145,6 +146,20 @@ pub fn scenarios(budget: usize, seed: u64) -> Vec<Scenario> {
                 ),
                 worker_vram: Some(vec![24.0, 24.0, 24.0, 24.0, 48.0]),
                 replace_every: 600.0,
+                network: Some(NetOptions::profile_only("wan", 5)),
+                ..base(budget / 5)
+            },
+        },
+        Scenario {
+            name: "qos-pressure",
+            what: "deadline-tight mix at 1.1x saturation on WAN: EDF \
+                   queues + degradation + per-class books on the hot path",
+            opts: ServeOptions {
+                arrivals: ArrivalProcess::Poisson { rate: 1.1 * cap },
+                scheduler: "edf-ll".into(),
+                qos_mix: Some(
+                    QosMix::parse("deadline-tight").expect("static spec parses"),
+                ),
                 network: Some(NetOptions::profile_only("wan", 5)),
                 ..base(budget / 5)
             },
@@ -290,7 +305,7 @@ mod tests {
     #[test]
     fn scenario_set_covers_the_acceptance_matrix() {
         let set = scenarios(1_000_000, 42);
-        assert!(set.len() >= 5);
+        assert!(set.len() >= 6);
         let names: Vec<&str> = set.iter().map(|s| s.name).collect();
         for want in [
             "batch",
@@ -298,6 +313,7 @@ mod tests {
             "placement-churn",
             "saturation-capped",
             "topology-churn",
+            "qos-pressure",
         ] {
             assert!(names.contains(&want), "missing scenario '{want}'");
         }
@@ -317,7 +333,10 @@ mod tests {
         // scenario (placement feasibility, caps, replace ticks) and
         // produce sane measurements.
         let ms = run_scenarios(scenarios(400, 42), 1).unwrap();
-        assert_eq!(ms.len(), 5);
+        assert_eq!(ms.len(), 6);
+        // the deadline-tight scenario must exercise the degradation path
+        let qp = ms.iter().find(|m| m.name == "qos-pressure").unwrap();
+        assert!(qp.summary.degraded > 0, "no degradations at 1.1x load");
         for m in &ms {
             assert!(m.requests >= 1, "{}", m.name);
             assert!(m.wall_s >= 0.0);

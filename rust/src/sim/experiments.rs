@@ -41,6 +41,7 @@ use crate::coordinator::models::{reduction_pct, ModelStack};
 use crate::coordinator::network::{NetOptions, Topology};
 use crate::coordinator::placement::{parse_vram_spec, Catalog, ModelDist};
 use crate::coordinator::platforms::PLATFORMS;
+use crate::coordinator::qos::{self, QosMix};
 use crate::coordinator::service::{DEdgeAi, ServeOptions};
 use crate::coordinator::ServeMetrics;
 use crate::runtime::XlaRuntime;
@@ -193,6 +194,14 @@ pub struct ServeSummary {
     pub queue_peak: usize,
     /// High-water mark of admitted-but-incomplete requests.
     pub in_flight_peak: usize,
+    /// QoS accounting (all zero when the subsystem is off): deadline
+    /// misses across classes, the premium class's served/missed
+    /// counts, and the degradation ledger.
+    pub deadline_misses: u64,
+    pub premium_count: u64,
+    pub premium_misses: u64,
+    pub degraded: u64,
+    pub rerouted: u64,
 }
 
 impl ServeSummary {
@@ -216,6 +225,19 @@ impl ServeSummary {
             dropped: m.dropped(),
             queue_peak: m.queue_peak(),
             in_flight_peak: m.in_flight_peak(),
+            deadline_misses: m.class_stats().values().map(|c| c.misses).sum(),
+            premium_count: m
+                .class_stats()
+                .get(&qos::PREMIUM)
+                .map(|c| c.count)
+                .unwrap_or(0),
+            premium_misses: m
+                .class_stats()
+                .get(&qos::PREMIUM)
+                .map(|c| c.misses)
+                .unwrap_or(0),
+            degraded: m.degradations().0,
+            rerouted: m.degradations().1,
         }
     }
 
@@ -285,11 +307,12 @@ pub fn run_experiment(
         "serve-sweep" => serve_sweep(&ctx),
         "placement-sweep" => placement_sweep(&ctx),
         "topology-sweep" => topology_sweep(&ctx),
+        "qos-sweep" => qos_sweep(&ctx),
         "all" => {
             for id in [
                 "fig5", "fig6a", "fig6b", "fig7a", "fig7b", "fig8a", "fig8b",
                 "table5", "mem", "ablation", "serve-sweep", "placement-sweep",
-                "topology-sweep",
+                "topology-sweep", "qos-sweep",
             ] {
                 println!("\n================ {id} ================");
                 run_experiment(id, env, agent, exp)?;
@@ -299,7 +322,7 @@ pub fn run_experiment(
         other => bail!(
             "unknown experiment '{other}' (fig5|fig6a|fig6b|fig7a|fig7b|\
              fig8a|fig8b|table5|mem|ablation|serve-sweep|placement-sweep|\
-             topology-sweep|all)"
+             topology-sweep|qos-sweep|all)"
         ),
     }
 }
@@ -1254,4 +1277,150 @@ fn topology_sweep(ctx: &Ctx) -> Result<()> {
         &csv_rows,
     )?;
     output::write_json(&ctx.exp.out_dir, "topology_sweep", &result)
+}
+
+/// (arrival rate × dispatch policy × QoS class mix) grid of
+/// deadline-aware open-loop runs on a wan topology, fanned over the
+/// executor with the usual `--jobs` bit-parity guarantee. Each cell
+/// reports latency measures plus the per-class SLO view — overall and
+/// premium-class deadline-miss rates and the degradation ledger — so
+/// the table shows directly what EDF + degradation buys over
+/// deadline-blind FIFO dispatch as load crosses saturation.
+fn qos_sweep(ctx: &Ctx) -> Result<()> {
+    let qc = &ctx.exp.qos;
+    if qc.schedulers.is_empty() || qc.rates.is_empty() || qc.mixes.is_empty() {
+        bail!("qos-sweep: empty grid (need rates, schedulers, mixes)");
+    }
+    if qc.arrivals == "batch" {
+        bail!(
+            "qos-sweep is an open-loop rate sweep; '--arrivals batch' has \
+             no rate dimension"
+        );
+    }
+    // validate every mix upfront (fail fast, before spawning work)
+    let mut mixes = Vec::new();
+    for spec in &qc.mixes {
+        mixes.push(QosMix::parse(spec)?);
+    }
+    let z_dist = ZDist::parse(&qc.z_dist)?;
+    // one worker per site on the wan profile — the regime where
+    // deadline slack is actually scarce
+    let workers = qc.sites;
+
+    let mut units = Vec::new();
+    let mut cells: Vec<(String, f64, String)> = Vec::new();
+    for (spec, mix) in qc.mixes.iter().zip(&mixes) {
+        for &rate in &qc.rates {
+            for sched in &qc.schedulers {
+                units.push(ServeOptions {
+                    workers,
+                    requests: qc.requests,
+                    real_time: false,
+                    seed: ctx.exp.seed,
+                    artifacts_dir: ctx.exp.artifacts_dir.clone(),
+                    scheduler: sched.clone(),
+                    z_steps: clock::DEFAULT_Z,
+                    arrivals: ArrivalProcess::parse(&qc.arrivals, rate)?,
+                    z_dist: Some(z_dist.clone()),
+                    network: Some(NetOptions::profile_only("wan", qc.sites)),
+                    qos_mix: Some(mix.clone()),
+                    ..ServeOptions::default()
+                });
+                cells.push((spec.clone(), rate, sched.clone()));
+            }
+        }
+    }
+    println!(
+        "qos-sweep — open-loop {} arrivals, {} requests/cell, z ~ {}, wan \
+         over {} site(s) ({} cells: {} mix(es) x {} rate(s) x {} \
+         policy(ies), --jobs {})",
+        qc.arrivals,
+        qc.requests,
+        qc.z_dist,
+        qc.sites,
+        units.len(),
+        qc.mixes.len(),
+        qc.rates.len(),
+        qc.schedulers.len(),
+        ctx.exp.jobs
+    );
+    let t0 = std::time::Instant::now();
+    let summaries = run_serve_units(units, ctx.exp.jobs)?;
+    println!("  simulated in {:.1}s", t0.elapsed().as_secs_f64());
+
+    let mut table = Table::new(&[
+        "mix", "rate (req/s)", "rho", "policy", "p50 (s)", "p99 (s)",
+        "miss rate", "premium miss", "degraded", "rerouted",
+    ])
+    .left_first()
+    .title("qos-sweep — deadline-aware serving measures");
+    let mut result = Json::obj();
+    let mut csv_rows = Vec::new();
+    for ((mix, rate, sched), s) in cells.iter().zip(&summaries) {
+        let rho = rate / clock::fleet_capacity_rps(workers, z_dist.mean());
+        let miss_rate = if s.served > 0 {
+            s.deadline_misses as f64 / s.served as f64
+        } else {
+            0.0
+        };
+        let premium_miss = if s.premium_count > 0 {
+            s.premium_misses as f64 / s.premium_count as f64
+        } else {
+            0.0
+        };
+        table.row(vec![
+            mix.clone(),
+            fnum(*rate, 3),
+            fnum(rho, 2),
+            sched.clone(),
+            fnum(s.p50, 2),
+            fnum(s.p99, 2),
+            fnum(miss_rate, 3),
+            fnum(premium_miss, 3),
+            s.degraded.to_string(),
+            s.rerouted.to_string(),
+        ]);
+        let mix_idx = qc.mixes.iter().position(|x| x == mix).unwrap();
+        let sched_idx = qc.schedulers.iter().position(|x| x == sched).unwrap();
+        csv_rows.push(vec![
+            mix_idx as f64,
+            *rate,
+            rho,
+            sched_idx as f64,
+            s.p50,
+            s.p95,
+            s.p99,
+            miss_rate,
+            premium_miss,
+            s.degraded as f64,
+            s.rerouted as f64,
+        ]);
+        result.set(
+            &format!("{mix}_r{rate}_{sched}"),
+            Json::from_pairs(vec![
+                ("served", Json::num(s.served as f64)),
+                ("rho", Json::num(rho)),
+                ("p50", Json::num(s.p50)),
+                ("p95", Json::num(s.p95)),
+                ("p99", Json::num(s.p99)),
+                ("mean_tis", Json::num(s.mean_tis)),
+                ("miss_rate", Json::num(miss_rate)),
+                ("premium_count", Json::num(s.premium_count as f64)),
+                ("premium_miss_rate", Json::num(premium_miss)),
+                ("degraded", Json::num(s.degraded as f64)),
+                ("rerouted", Json::num(s.rerouted as f64)),
+            ]),
+        );
+    }
+    println!("{}", table.render());
+    output::write_csv(
+        &ctx.exp.out_dir,
+        "qos_sweep",
+        &[
+            "mix_idx", "rate", "rho", "sched_idx", "p50", "p95", "p99",
+            "miss_rate", "premium_miss_rate", "degraded", "rerouted",
+        ],
+        &csv_rows,
+    )?;
+    output::write_json(&ctx.exp.out_dir, "qos_sweep", &result)
 }

@@ -11,6 +11,7 @@ use dedgeai::analysis::{compare, double_run};
 use dedgeai::coordinator::arrivals::{ArrivalProcess, ZDist};
 use dedgeai::coordinator::network::NetOptions;
 use dedgeai::coordinator::placement::{Catalog, ModelDist};
+use dedgeai::coordinator::qos::QosMix;
 use dedgeai::coordinator::service::{DEdgeAi, ServeOptions};
 
 #[test]
@@ -26,31 +27,37 @@ fn double_runs_are_bitwise_identical_across_the_grid() {
         Some(NetOptions::profile_only("uniform", 4)),
         Some(NetOptions::profile_only("wan", 3)),
     ];
+    let qos_axis: [Option<&str>; 2] = [None, Some("tiered")];
     for arrivals in &arrival_axis {
         for z_dist in &z_axis {
             for policy in policy_axis {
                 for network in &topology_axis {
-                    let opts = ServeOptions {
-                        requests: 30,
-                        scheduler: policy.into(),
-                        arrivals: arrivals.clone(),
-                        z_dist: Some(z_dist.clone()),
-                        network: network.clone(),
-                        ..ServeOptions::default()
-                    };
-                    let label = format!(
-                        "{policy} {arrivals:?} {z_dist:?} net={:?}",
-                        network.as_ref().map(|n| n.profile.as_str())
-                    );
-                    let a = DEdgeAi::new(opts.clone()).run_events().unwrap();
-                    let b = DEdgeAi::new(opts).run_events().unwrap();
-                    let rep = compare(&a, &b);
-                    assert!(
-                        rep.passed(),
-                        "{label} diverged:\n{}",
-                        rep.mismatches.join("\n")
-                    );
-                    assert_eq!(rep.served, 30, "{label}");
+                    for qos in qos_axis {
+                        let opts = ServeOptions {
+                            requests: 30,
+                            scheduler: policy.into(),
+                            arrivals: arrivals.clone(),
+                            z_dist: Some(z_dist.clone()),
+                            network: network.clone(),
+                            qos_mix: qos
+                                .map(|m| QosMix::parse(m).unwrap()),
+                            ..ServeOptions::default()
+                        };
+                        let label = format!(
+                            "{policy} {arrivals:?} {z_dist:?} net={:?} qos={qos:?}",
+                            network.as_ref().map(|n| n.profile.as_str())
+                        );
+                        let a =
+                            DEdgeAi::new(opts.clone()).run_events().unwrap();
+                        let b = DEdgeAi::new(opts).run_events().unwrap();
+                        let rep = compare(&a, &b);
+                        assert!(
+                            rep.passed(),
+                            "{label} diverged:\n{}",
+                            rep.mismatches.join("\n")
+                        );
+                        assert_eq!(rep.served, 30, "{label}");
+                    }
                 }
             }
         }
@@ -75,6 +82,7 @@ fn stream_ledger_reflects_the_configuration() {
     assert_eq!(audit.draws("z"), Some(0), "fixed z draws nothing");
     assert_eq!(audit.draws("model"), Some(0), "fixed model draws nothing");
     assert_eq!(audit.draws("origin"), Some(0), "single site draws nothing");
+    assert_eq!(audit.draws("qos"), Some(0), "no mix draws no classes");
     assert_eq!(audit.draws("caption"), Some(3 * 40), "3 draws per caption");
     assert!(audit.draws("gen-jitter").unwrap() > 0);
 
@@ -84,6 +92,7 @@ fn stream_ledger_reflects_the_configuration() {
         arrivals: ArrivalProcess::Poisson { rate: 0.3 },
         z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
         network: Some(NetOptions::profile_only("wan", 4)),
+        qos_mix: Some(QosMix::parse("tiered").unwrap()),
         ..ServeOptions::default()
     };
     let m = DEdgeAi::new(open).run_events().unwrap();
@@ -91,6 +100,7 @@ fn stream_ledger_reflects_the_configuration() {
     assert!(audit.draws("arrival").unwrap() >= 40);
     assert!(audit.draws("z").unwrap() >= 40);
     assert!(audit.draws("origin").unwrap() >= 40);
+    assert_eq!(audit.draws("qos"), Some(40), "one draw per request");
     assert_eq!(audit.draws("caption"), Some(3 * 40));
 }
 
@@ -145,7 +155,8 @@ fn network_and_placement_config_passes_double_run() {
     assert!(rep.makespan > 0.0);
     // every named stream is present in the ledger, and the active axes
     // actually drew from theirs
-    for stream in ["arrival", "caption", "z", "model", "origin", "gen-jitter"]
+    for stream in
+        ["arrival", "caption", "z", "model", "origin", "qos", "gen-jitter"]
     {
         assert!(
             rep.audit.draws(stream).is_some(),
@@ -155,5 +166,27 @@ fn network_and_placement_config_passes_double_run() {
     assert!(rep.audit.draws("arrival").unwrap() > 0);
     assert!(rep.audit.draws("model").unwrap() > 0);
     assert!(rep.audit.draws("origin").unwrap() > 0);
+    assert_eq!(rep.audit.draws("qos"), Some(0), "qos off, stream silent");
     assert!(rep.audit.total() > 0);
+}
+
+/// ISSUE 7 acceptance: the full QoS configuration — weighted mix, EDF
+/// reordering, deadline degradation, admission cap, WAN topology —
+/// double-runs bitwise identical, with the sixth stream charged
+/// exactly one draw per request.
+#[test]
+fn qos_config_passes_double_run() {
+    let opts = ServeOptions {
+        requests: 80,
+        scheduler: "edf-ll".into(),
+        arrivals: ArrivalProcess::Poisson { rate: 0.3 },
+        z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+        network: Some(NetOptions::profile_only("wan", 4)),
+        qos_mix: Some(QosMix::parse("deadline-tight").unwrap()),
+        queue_cap: Some(20),
+        ..ServeOptions::default()
+    };
+    let rep = double_run(&opts).unwrap();
+    assert!(rep.passed(), "mismatches:\n{}", rep.mismatches.join("\n"));
+    assert_eq!(rep.audit.draws("qos"), Some(80), "one draw per request");
 }

@@ -1,0 +1,304 @@
+//! QoS guard suite: the class-aware serving stack must (a) reproduce
+//! the pre-QoS engine ladder *bitwise* when the mix is absent or
+//! single-class (`QosMix::Fixed` draws zero RNG and best-effort has no
+//! deadline, so nothing can move), (b) keep the streaming and eager
+//! engines bit-identical with classes, EDF reordering, and degradation
+//! all armed, (c) account for the sixth seeded stream exactly — one
+//! `qos` base draw per request with a real mix, zero without — and
+//! (d) actually help: on the `wan` profile at ρ≈1.1 the EDF +
+//! degradation scheduler (`edf-ll`) strictly beats FIFO least-loaded
+//! on premium-class deadline misses across five seeds. No AOT
+//! artifacts required.
+
+use dedgeai::coordinator::arrivals::{ArrivalProcess, ZDist};
+use dedgeai::coordinator::network::NetOptions;
+use dedgeai::coordinator::placement::{self, ModelDist};
+use dedgeai::coordinator::qos::{self, QosMix};
+use dedgeai::coordinator::service::{DEdgeAi, ServeOptions};
+use dedgeai::coordinator::{clock, ServeMetrics};
+use dedgeai::util::prop;
+
+/// Bitwise equality over every pre-QoS measure (queue peaks are
+/// excluded for the eager comparison — the eager reference queues all
+/// arrivals up front by construction).
+fn assert_bit_identical(a: &ServeMetrics, b: &ServeMetrics, label: &str) {
+    assert_eq!(a.count(), b.count(), "{label}: count");
+    assert_eq!(a.per_worker(), b.per_worker(), "{label}: per_worker");
+    assert_eq!(a.dropped(), b.dropped(), "{label}: dropped");
+    assert_eq!(
+        a.makespan().to_bits(),
+        b.makespan().to_bits(),
+        "{label}: makespan {} vs {}",
+        a.makespan(),
+        b.makespan()
+    );
+    assert_eq!(
+        a.median_latency().to_bits(),
+        b.median_latency().to_bits(),
+        "{label}: p50"
+    );
+    assert_eq!(
+        a.p99_latency().to_bits(),
+        b.p99_latency().to_bits(),
+        "{label}: p99"
+    );
+    assert_eq!(
+        a.mean_latency().to_bits(),
+        b.mean_latency().to_bits(),
+        "{label}: mean TIS"
+    );
+    assert_eq!(
+        a.mean_queue_wait().to_bits(),
+        b.mean_queue_wait().to_bits(),
+        "{label}: queue wait"
+    );
+    assert_eq!(
+        a.mean_trans_time().to_bits(),
+        b.mean_trans_time().to_bits(),
+        "{label}: mean transmission"
+    );
+    assert_eq!(a.cache_hits(), b.cache_hits(), "{label}: cache hits");
+    assert_eq!(a.evictions(), b.evictions(), "{label}: evictions");
+    assert_eq!(
+        a.cold_load_s().to_bits(),
+        b.cold_load_s().to_bits(),
+        "{label}: cold load"
+    );
+    assert_eq!(
+        a.link_stats().keys().collect::<Vec<_>>(),
+        b.link_stats().keys().collect::<Vec<_>>(),
+        "{label}: link set"
+    );
+}
+
+fn random_arrivals(g: &mut prop::Gen) -> ArrivalProcess {
+    match g.usize(0, 2) {
+        0 => ArrivalProcess::Batch,
+        1 => ArrivalProcess::Poisson { rate: g.f64(0.05, 0.5) },
+        _ => ArrivalProcess::Bursty {
+            rate: g.f64(0.1, 0.4),
+            burst: g.f64(2.0, 6.0),
+            dwell: g.f64(10.0, 60.0),
+        },
+    }
+}
+
+#[test]
+fn single_class_mix_is_bit_identical_to_plain_engine() {
+    // Property over (arrival x z-dist x policy x placement x cap x
+    // network x seed): arming the QoS plumbing with a `Fixed`
+    // best-effort class — zero RNG draws, infinite deadline — must
+    // reproduce the PR 6 engine bit for bit on BOTH the streaming and
+    // the eager engines. This is the ladder rung that pins "--qos-mix
+    // unset changes nothing".
+    prop::check("fixed best-effort == plain", 40, |g| {
+        let arrivals = random_arrivals(g);
+        let z_dist = match g.usize(0, 1) {
+            0 => ZDist::Fixed(g.usize(5, 20)),
+            _ => ZDist::Uniform { lo: 5, hi: 15 },
+        };
+        let policy = *g.choose(&["least-loaded", "round-robin", "cache-ll"]);
+        let with_placement = policy.starts_with("cache");
+        let workers = g.usize(2, 6);
+        let (model_dist, worker_vram) = if with_placement {
+            let mut vram = vec![24.0; workers];
+            vram[workers - 1] = 48.0;
+            (
+                Some(ModelDist::Mix {
+                    ids: vec![placement::RESD3M, placement::RESD3_TURBO],
+                    weights: vec![0.5, 0.5],
+                }),
+                Some(vram),
+            )
+        } else {
+            (None, None)
+        };
+        let base = ServeOptions {
+            workers,
+            requests: g.size(5, 100),
+            seed: g.usize(0, 10_000) as u64,
+            scheduler: policy.into(),
+            arrivals,
+            z_dist: Some(z_dist),
+            model_dist,
+            worker_vram,
+            queue_cap: match g.usize(0, 2) {
+                0 => Some(g.usize(3, 30)),
+                _ => None,
+            },
+            network: match g.usize(0, 2) {
+                0 => Some(NetOptions::profile_only("wan", g.usize(2, 5))),
+                _ => None,
+            },
+            ..ServeOptions::default()
+        };
+        let plain = DEdgeAi::new(base.clone()).run_events().unwrap();
+        let classed = DEdgeAi::new(ServeOptions {
+            qos_mix: Some(QosMix::Fixed(qos::BEST_EFFORT)),
+            ..base
+        });
+        let streamed = classed.run_events().unwrap();
+        let eager = classed.run_events_eager().unwrap();
+        assert_bit_identical(&streamed, &plain, "streamed vs plain");
+        assert_bit_identical(&eager, &plain, "eager vs plain");
+        // The per-stream audits must agree draw for draw, and the
+        // sixth stream must be silent.
+        for stream in ["arrival", "caption", "z", "model", "origin", "qos"] {
+            assert_eq!(
+                streamed.rng_audit().draws(stream),
+                plain.rng_audit().draws(stream),
+                "stream {stream}"
+            );
+        }
+        assert_eq!(streamed.rng_audit().draws("qos"), Some(0));
+        // Fixed-class runs still keep per-class books — the summary
+        // table works — but the plain run never arms them.
+        assert!(streamed.qos_active());
+        assert!(!plain.qos_active());
+    });
+}
+
+#[test]
+fn streaming_equals_eager_with_qos_armed() {
+    // The PR 4 parity contract extended across the QoS axis: real
+    // mixes x EDF reordering x degradation x priority admission x
+    // network, streaming == eager bitwise, including the class books.
+    prop::check("qos streaming == eager", 40, |g| {
+        let mix = *g.choose(&["tiered", "deadline-tight", "uniform:premium,background"]);
+        let policy = *g.choose(&["least-loaded", "edf-ll", "cache-ll"]);
+        let with_placement = policy.starts_with("cache") || g.usize(0, 1) == 0;
+        let workers = g.usize(2, 6);
+        let (model_dist, worker_vram) = if with_placement {
+            let mut vram = vec![24.0; workers];
+            vram[workers - 1] = 48.0;
+            (
+                Some(ModelDist::Mix {
+                    ids: vec![placement::RESD3M, placement::RESD3_TURBO],
+                    weights: vec![0.5, 0.5],
+                }),
+                Some(vram),
+            )
+        } else {
+            (None, None)
+        };
+        let sys = DEdgeAi::new(ServeOptions {
+            workers,
+            requests: g.size(10, 120),
+            seed: g.usize(0, 10_000) as u64,
+            scheduler: policy.into(),
+            arrivals: random_arrivals(g),
+            z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+            model_dist,
+            worker_vram,
+            qos_mix: Some(QosMix::parse(mix).unwrap()),
+            queue_cap: match g.usize(0, 2) {
+                0 => Some(g.usize(3, 30)),
+                _ => None,
+            },
+            network: match g.usize(0, 2) {
+                0 => Some(NetOptions::profile_only("wan", g.usize(2, 5))),
+                _ => None,
+            },
+            ..ServeOptions::default()
+        });
+        let streamed = sys.run_events().unwrap();
+        let eager = sys.run_events_eager().unwrap();
+        let label = format!("{policy} mix={mix}");
+        assert_bit_identical(&streamed, &eager, &label);
+        // The class books are part of the parity contract too.
+        let (sc, ec) = (streamed.class_stats(), eager.class_stats());
+        assert_eq!(
+            sc.keys().collect::<Vec<_>>(),
+            ec.keys().collect::<Vec<_>>(),
+            "{label}: class set"
+        );
+        for (id, s) in sc {
+            let e = &ec[id];
+            assert_eq!(s.count, e.count, "{label}: class {id} count");
+            assert_eq!(s.misses, e.misses, "{label}: class {id} misses");
+            assert_eq!(s.degraded, e.degraded, "{label}: class {id} degraded");
+            assert_eq!(s.rerouted, e.rerouted, "{label}: class {id} rerouted");
+        }
+    });
+}
+
+#[test]
+fn qos_stream_draws_exactly_once_per_request_with_a_mix() {
+    // The determinism-audit pin: a weighted mix charges exactly one
+    // base draw per *offered* request to the dedicated sixth stream;
+    // a fixed class (and the unset default) charges zero.
+    let base = ServeOptions {
+        requests: 300,
+        arrivals: ArrivalProcess::Poisson { rate: 0.3 },
+        z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+        ..ServeOptions::default()
+    };
+    let mixed = DEdgeAi::new(ServeOptions {
+        qos_mix: Some(QosMix::parse("tiered").unwrap()),
+        ..base.clone()
+    })
+    .run_events()
+    .unwrap();
+    assert_eq!(mixed.rng_audit().draws("qos"), Some(300));
+    let fixed = DEdgeAi::new(ServeOptions {
+        qos_mix: Some(QosMix::Fixed(qos::PREMIUM)),
+        ..base.clone()
+    })
+    .run_events()
+    .unwrap();
+    assert_eq!(fixed.rng_audit().draws("qos"), Some(0));
+    let unset = DEdgeAi::new(base).run_events().unwrap();
+    assert_eq!(unset.rng_audit().draws("qos"), Some(0));
+    // A fixed premium class puts every completion in the premium book.
+    assert_eq!(
+        fixed.class_stats().get(&qos::PREMIUM).map(|c| c.count),
+        Some(fixed.count() as u64)
+    );
+}
+
+#[test]
+fn edf_and_degradation_beat_fifo_on_premium_misses() {
+    // The acceptance criterion: on `wan` at ρ≈1.1 with the
+    // deadline-tight mix, EDF reordering + SLO-aware degradation
+    // (`edf-ll`) strictly lowers the premium-class deadline-miss count
+    // vs FIFO least-loaded, summed across five seeds. Degradation must
+    // actually fire — the win has to come from the mechanism under
+    // test, not noise.
+    let workers = 5;
+    let rate = 1.1 * clock::fleet_capacity_rps(workers, 10.0);
+    let run = |scheduler: &str, seed: u64| -> ServeMetrics {
+        DEdgeAi::new(ServeOptions {
+            workers,
+            requests: 1500,
+            seed,
+            scheduler: scheduler.into(),
+            arrivals: ArrivalProcess::Poisson { rate },
+            z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+            qos_mix: Some(QosMix::parse("deadline-tight").unwrap()),
+            network: Some(NetOptions::profile_only("wan", workers)),
+            ..ServeOptions::default()
+        })
+        .run_events()
+        .unwrap()
+    };
+    let premium_misses = |m: &ServeMetrics| -> u64 {
+        m.class_stats().get(&qos::PREMIUM).map_or(0, |c| c.misses)
+    };
+    let (mut edf_misses, mut fifo_misses, mut degraded) = (0u64, 0u64, 0u64);
+    for seed in [42u64, 1337, 9001, 271_828, 31_337] {
+        let edf = run("edf-ll", seed);
+        let fifo = run("least-loaded", seed);
+        assert_eq!(edf.count(), fifo.count(), "seed {seed}: served count");
+        edf_misses += premium_misses(&edf);
+        fifo_misses += premium_misses(&fifo);
+        let (d, r) = edf.degradations();
+        degraded += d + r;
+        let (fd, fr) = fifo.degradations();
+        assert_eq!((fd, fr), (0, 0), "seed {seed}: FIFO must never degrade");
+    }
+    assert!(degraded > 0, "degradation never fired at rho 1.1");
+    assert!(
+        edf_misses < fifo_misses,
+        "EDF+degradation premium misses {edf_misses} not below FIFO {fifo_misses}"
+    );
+}
