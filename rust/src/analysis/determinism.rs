@@ -1,7 +1,9 @@
 //! The dynamic complement to `simlint`: run one serve configuration
 //! twice and assert the two runs are *bitwise* identical — summary
-//! metrics, per-link traffic books, and the per-stream RNG draw
-//! counts ([`crate::util::rng::RngAudit`]).
+//! metrics, per-link traffic books, the per-stream RNG draw
+//! counts ([`crate::util::rng::RngAudit`]), and (since the
+//! observability layer landed) the FNV-1a hash of the full
+//! virtual-time trace.
 //!
 //! The static rules catch the known ways determinism breaks at the
 //! source level; this harness catches the unknown ones at runtime,
@@ -26,6 +28,10 @@ pub struct DeterminismReport {
     pub audit: RngAudit,
     pub served: usize,
     pub makespan: f64,
+    /// FNV-1a hash of the first run's JSONL trace, when both runs
+    /// carried a tracer (equal to the second's when the report
+    /// passes). `None` when tracing was off.
+    pub trace_hash: Option<u64>,
 }
 
 impl DeterminismReport {
@@ -149,17 +155,43 @@ pub fn compare(a: &ServeMetrics, b: &ServeMetrics) -> DeterminismReport {
             b.rng_audit().entries()
         ));
     }
+    // trace hashes: compared only when *both* runs carried a tracer,
+    // so trace-on vs trace-off metric comparisons (the zero-cost
+    // claim) still flow through this function unchanged
+    let trace_hash = match (a.trace(), b.trace()) {
+        (Some(ta), Some(tb)) => {
+            let (ha, hb) = (ta.hash(), tb.hash());
+            if ha != hb {
+                mm.push(format!("trace hash: {ha:016x} vs {hb:016x}"));
+            }
+            if ta.records().len() != tb.records().len() {
+                mm.push(format!(
+                    "trace records: {} vs {}",
+                    ta.records().len(),
+                    tb.records().len()
+                ));
+            }
+            Some(ha)
+        }
+        _ => None,
+    };
     DeterminismReport {
         mismatches: mm,
         audit: a.rng_audit().clone(),
         served: a.count(),
         makespan: a.makespan(),
+        trace_hash,
     }
 }
 
 /// Run `opts` twice on fresh engines and compare bitwise. Virtual
 /// clock only: a real-time run measures the wall clock, which is the
 /// one thing this harness exists to keep off simulated paths.
+///
+/// The tracer is armed on both runs (regardless of `opts.trace`), so
+/// the comparison also certifies the observability layer: the report
+/// carries the shared trace hash and any hash divergence is a
+/// mismatch like any other.
 pub fn double_run(opts: &ServeOptions) -> Result<DeterminismReport> {
     if opts.real_time {
         bail!(
@@ -167,8 +199,10 @@ pub fn double_run(opts: &ServeOptions) -> Result<DeterminismReport> {
              drop --real-time"
         );
     }
+    let mut opts = opts.clone();
+    opts.trace = true;
     let a = DEdgeAi::new(opts.clone()).run_virtual()?;
-    let b = DEdgeAi::new(opts.clone()).run_virtual()?;
+    let b = DEdgeAi::new(opts).run_virtual()?;
     Ok(compare(&a, &b))
 }
 
@@ -189,6 +223,18 @@ mod tests {
         assert_eq!(rep.served, 40);
         assert!(rep.audit.draws("arrival").unwrap() > 0);
         assert!(rep.audit.draws("gen-jitter").unwrap() > 0);
+        // double_run arms the tracer, so the report carries the hash
+        assert!(rep.trace_hash.is_some());
+    }
+
+    #[test]
+    fn trace_hash_absent_without_tracers() {
+        let opts = ServeOptions::default();
+        let a = DEdgeAi::new(opts.clone()).run_virtual().unwrap();
+        let b = DEdgeAi::new(opts).run_virtual().unwrap();
+        let rep = compare(&a, &b);
+        assert!(rep.passed(), "{:?}", rep.mismatches);
+        assert!(rep.trace_hash.is_none());
     }
 
     #[test]

@@ -9,7 +9,11 @@
 //!
 //! - `wall-clock`: `Instant::now` / `SystemTime` only inside the
 //!   wall-clock allowlist (bench timers, the logger, the real-time
-//!   PJRT path, experiment wallclock reports).
+//!   PJRT path, experiment wallclock reports). The observability
+//!   layer (`coordinator/trace.rs`, `events.rs`, `metrics.rs`) is
+//!   *pinned*: wall-clock reads there are findings even under a
+//!   pragma, because a single wall timestamp would poison every
+//!   trace record's determinism contract.
 //! - `unseeded-rng`: no `rand::` / `thread_rng` / OS entropy anywhere
 //!   but `util/rng.rs` — all randomness flows through named seeded
 //!   streams.
@@ -55,6 +59,16 @@ const WALL_CLOCK_ALLOW: [&str; 5] = [
     "coordinator/worker.rs",
     "sim/experiments.rs",
     "runtime/",
+];
+
+/// Files *pinned* to virtual time: the observability layer and the
+/// ledgers it feeds. A wall-clock read here would silently poison
+/// every trace timestamp, so the rule is absolute — not even a
+/// pragma can waive it (the pragma itself becomes a finding).
+const WALL_CLOCK_PIN: [&str; 3] = [
+    "coordinator/trace.rs",
+    "coordinator/events.rs",
+    "coordinator/metrics.rs",
 ];
 
 /// Simulated paths where unordered-collection iteration would break
@@ -213,8 +227,26 @@ pub fn lint_source(rel: &str, content: &str) -> Vec<Finding> {
     let mut findings = Vec::new();
     let mut file_allows: Vec<String> = Vec::new();
     let mut line_allows: Vec<Vec<String>> = vec![Vec::new(); lines.len()];
+    let wall_clock_pinned = path_allowed(rel, &WALL_CLOCK_PIN);
     for (i, l) in lines.iter().enumerate() {
         let pragmas = parse_pragmas(&l.comment);
+        if wall_clock_pinned
+            && pragmas
+                .line
+                .iter()
+                .chain(pragmas.file.iter())
+                .any(|r| r == "wall-clock")
+        {
+            findings.push(Finding::new(
+                "pragma",
+                rel,
+                i + 1,
+                "wall-clock cannot be pragma-allowed here — this file \
+                 is pinned to virtual time (trace timestamps and \
+                 metric ledgers must never read the wall clock)"
+                    .to_string(),
+            ));
+        }
         for u in pragmas.unknown {
             findings.push(Finding::new(
                 "pragma",
@@ -251,7 +283,8 @@ pub fn lint_source(rel: &str, content: &str) -> Vec<Finding> {
         file_allows.iter().any(|r| r == rule)
             || line_allows[i].iter().any(|r| r == rule)
     };
-    let wall_clock_on = !path_allowed(rel, &WALL_CLOCK_ALLOW);
+    let wall_clock_on =
+        wall_clock_pinned || !path_allowed(rel, &WALL_CLOCK_ALLOW);
     let unseeded_on = rel != "util/rng.rs";
     let unordered_on = path_allowed(rel, &UNORDERED_SCOPE);
     let float_fold_on = path_allowed(rel, &FLOAT_FOLD_SCOPE);
@@ -259,7 +292,7 @@ pub fn lint_source(rel: &str, content: &str) -> Vec<Finding> {
         if l.code.trim().is_empty() {
             continue;
         }
-        if wall_clock_on && !allowed("wall-clock", i) {
+        if wall_clock_on && (wall_clock_pinned || !allowed("wall-clock", i)) {
             for pat in ["Instant::now", "SystemTime"] {
                 if has_pattern(&l.code, pat) {
                     findings.push(Finding::new(
@@ -449,6 +482,29 @@ mod tests {
                       unsafe impl Send for X {}\n\
                       unsafe impl Sync for X {}\n";
         assert!(lint_source("util/x.rs", shared).is_empty());
+    }
+
+    #[test]
+    fn pinned_files_reject_wall_clock_even_with_pragma() {
+        let clock = "fn f() { let t = std::time::Instant::now(); }\n";
+        // a plain read in a pinned file is a finding like anywhere else
+        let f = lint_source("coordinator/trace.rs", clock);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "wall-clock");
+        // a pragma does NOT waive it — and is itself a second finding
+        let pragma = "// simlint: allow(wall-clock) — nope\n\
+                      let t = std::time::Instant::now();\n";
+        let f = lint_source("coordinator/events.rs", pragma);
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f.iter().any(|x| x.rule == "pragma"));
+        assert!(f.iter().any(|x| x.rule == "wall-clock"));
+        // the same pragma outside the pin keeps working
+        assert!(lint_source("coordinator/router.rs", pragma).is_empty());
+        // file-level waivers are rejected in pinned files too
+        let waiver = "// simlint: allow-file(wall-clock)\nfn f() {}\n";
+        let f = lint_source("coordinator/metrics.rs", waiver);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "pragma");
     }
 
     #[test]

@@ -11,6 +11,7 @@ use crate::util::rng::RngAudit;
 use crate::util::stats::{percentile_sorted, Welford};
 
 use super::message::Response;
+use super::trace::TraceLog;
 
 /// Aggregate traffic on one directed site-to-site link.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -118,6 +119,9 @@ pub struct ServeMetrics {
     /// engines at drain time (empty on the real-time path). The
     /// `verify-determinism` harness compares it bitwise across runs.
     rng_audit: RngAudit,
+    /// The sealed observability recording (`--trace-out`/`--window`
+    /// runs only; `None` keeps the trace-free surface untouched).
+    trace: Option<TraceLog>,
 }
 
 impl ServeMetrics {
@@ -145,6 +149,7 @@ impl ServeMetrics {
             queue_peak: 0,
             in_flight_peak: 0,
             rng_audit: RngAudit::new(),
+            trace: None,
         }
     }
 
@@ -499,6 +504,16 @@ impl ServeMetrics {
     /// record them, e.g. the real-time path).
     pub fn rng_audit(&self) -> &RngAudit {
         &self.rng_audit
+    }
+
+    /// Attach the sealed observability recording at drain time.
+    pub fn set_trace(&mut self, trace: TraceLog) {
+        self.trace = Some(trace);
+    }
+
+    /// The observability recording, when the run was traced.
+    pub fn trace(&self) -> Option<&TraceLog> {
+        self.trace.as_ref()
     }
 }
 

@@ -38,6 +38,10 @@
 //!   (`--qos-mix`), driving earliest-deadline-first dispatch,
 //!   priority-aware admission, and deadline-pressed quality
 //!   degradation (serve z=15 as z=8 or swap to the distilled turbo);
+//! - [`trace`]: deterministic observability — per-request virtual-time
+//!   spans and discrete events behind `--trace-out`, windowed
+//!   time-series (`--window`), byte-identical across double runs and
+//!   both engines (see `docs/observability.md`);
 //! - [`corpus`]: the synthetic caption corpus standing in for
 //!   Flickr8k (hot paths carry a `Copy` [`corpus::PromptDesc`]; text
 //!   is rehydrated only on the real-time PJRT path);
@@ -65,6 +69,7 @@ pub mod qos;
 pub mod router;
 pub mod service;
 pub mod source;
+pub mod trace;
 pub mod worker;
 
 pub use arrivals::{ArrivalProcess, ZDist};
@@ -77,3 +82,4 @@ pub use network::{NetOptions, Network, Topology};
 pub use placement::{Catalog, ModelDist, Placement};
 pub use qos::{QosClass, QosMix};
 pub use service::{serve_and_report, DEdgeAi, ServeOptions};
+pub use trace::{TraceFormat, TraceLog, Tracer};

@@ -75,6 +75,7 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::runtime::XlaRuntime;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::table::{fnum, Table};
 
@@ -88,6 +89,7 @@ use super::placement::{self, Catalog, ModelDist, Placement};
 use super::qos::{self, QosMix};
 use super::router::{EdfJob, EdfQueues, LadPolicy, Policy, Router};
 use super::source::RequestSource;
+use super::trace::{TraceFormat, Tracer};
 use super::worker::spawn_worker;
 
 /// Options for a serving run.
@@ -132,6 +134,24 @@ pub struct ServeOptions {
     /// QoS-free engine bit-identical (zero class-stream draws, no
     /// per-class books, no reordering).
     pub qos_mix: Option<QosMix>,
+    /// Arm the deterministic observability layer: per-request spans
+    /// and discrete events recorded on the virtual clock into a
+    /// [`TraceLog`] on `ServeMetrics`. `false` keeps the engines
+    /// bit-identical to the trace-free build — no hook even allocates.
+    pub trace: bool,
+    /// Write the finished trace here (`--trace-out`); setting this
+    /// arms `trace`.
+    pub trace_out: Option<String>,
+    /// On-disk format for `trace_out` (`--trace-format`).
+    pub trace_format: TraceFormat,
+    /// Windowed time-series width in virtual seconds (`--window`);
+    /// `serve` prints the per-window table. Setting this arms `trace`.
+    pub window: Option<f64>,
+    /// Write the windowed series as CSV here (`--window-csv`).
+    pub window_csv: Option<String>,
+    /// Write a machine-readable summary of the full `ServeMetrics`
+    /// here (`serve --report-json`).
+    pub report_json: Option<String>,
 }
 
 impl Default for ServeOptions {
@@ -152,6 +172,12 @@ impl Default for ServeOptions {
             queue_cap: None,
             network: None,
             qos_mix: None,
+            trace: false,
+            trace_out: None,
+            trace_format: TraceFormat::Jsonl,
+            window: None,
+            window_csv: None,
+            report_json: None,
         }
     }
 }
@@ -179,6 +205,18 @@ impl DEdgeAi {
     /// Whether the QoS subsystem is active for this run.
     fn qos_enabled(&self) -> bool {
         self.opts.qos_mix.is_some()
+    }
+
+    /// Build the observability recorder when tracing is armed. `None`
+    /// keeps the engines on the trace-free fast path — no hook
+    /// allocates, no branch beyond an `Option` test, and the run is
+    /// bit-identical to the pre-trace build.
+    fn make_tracer(&self, network: Option<&Network>) -> Option<Tracer> {
+        if self.opts.trace {
+            Some(Tracer::new(self.opts.workers, network))
+        } else {
+            None
+        }
     }
 
     fn make_policy(&self, rt: Option<&XlaRuntime>) -> Result<Policy> {
@@ -484,6 +522,7 @@ impl DEdgeAi {
         free_at: &mut [f64],
         queue: &mut EventQueue,
         network: Option<&Network>,
+        tracer: Option<&mut Tracer>,
     ) {
         if busy[worker] {
             return;
@@ -493,6 +532,9 @@ impl DEdgeAi {
             None => return,
         };
         let start = free_at[worker].max(job.ready_at) + job.load_delay;
+        if let Some(t) = tracer {
+            t.start(job.req.id, start);
+        }
         if job.load_delay > 0.0 {
             queue.push(
                 start,
@@ -559,6 +601,7 @@ impl DEdgeAi {
         // event clock per worker: time the worker becomes free
         let mut free_at = vec![0.0f64; self.opts.workers];
         let mut rng = Rng::new(self.opts.seed ^ 0xC0FFEE);
+        let mut tracer = self.make_tracer(None);
         let mut source = self.source();
         for req in &mut source {
             let w = router.dispatch(&req, None)?;
@@ -567,6 +610,12 @@ impl DEdgeAi {
             let start = free_at[w].max(req.submitted_at + up);
             let done = start + gen + down;
             free_at[w] = done;
+            if let Some(t) = tracer.as_mut() {
+                // the batch loop admits everything and never degrades
+                t.admit(&req, req.z, req.model, req.submitted_at);
+                t.dispatch(&req, w, up, gen, down, 0.0);
+                t.start(req.id, start);
+            }
             // No router.complete() here: all requests are submitted at
             // t=0 (the Table V batch protocol), so none completes
             // before dispatch finishes — pending loads must accumulate.
@@ -587,6 +636,12 @@ impl DEdgeAi {
                 demanded_model: req.model,
             };
             metrics.record(&resp, done);
+            if let Some(t) = tracer.as_mut() {
+                t.complete(&resp, done);
+            }
+        }
+        if let Some(t) = tracer {
+            metrics.set_trace(t.finish());
         }
         let mut audit = source.audit();
         audit.note("gen-jitter", rng.draws());
@@ -627,6 +682,7 @@ impl DEdgeAi {
         let mut queue = EventQueue::new();
         let mut source = self.source();
         let mut next_arrival = source.next();
+        let mut tracer = self.make_tracer(network.as_ref());
         if placement.is_some() && self.opts.replace_every > 0.0 {
             queue.push(self.opts.replace_every, Event::Replace);
         }
@@ -684,6 +740,9 @@ impl DEdgeAi {
                                         victim.req.z as f64 * vmult,
                                     );
                                     in_flight -= 1;
+                                    if let Some(t) = tracer.as_mut() {
+                                        t.evict(now, vw, &victim, &req);
+                                    }
                                     true
                                 }
                                 None => false,
@@ -693,6 +752,11 @@ impl DEdgeAi {
                     }
                     _ => true,
                 };
+                if !admitted {
+                    if let Some(t) = tracer.as_mut() {
+                        t.drop_req(now, &req);
+                    }
+                }
                 if admitted {
                     let demanded_z = req.z;
                     let demanded_model = req.model;
@@ -704,6 +768,9 @@ impl DEdgeAi {
                             placement.as_ref(),
                             network.as_ref(),
                         );
+                    }
+                    if let Some(t) = tracer.as_mut() {
+                        t.admit(&req, demanded_z, demanded_model, now);
                     }
                     let w = router.dispatch_with(
                         &req,
@@ -728,6 +795,9 @@ impl DEdgeAi {
                         network.as_ref(),
                         w,
                     );
+                    if let Some(t) = tracer.as_mut() {
+                        t.dispatch(&req, w, up, gen, down, load_delay);
+                    }
                     if edf {
                         // Deadline-aware path: the job parks in the
                         // worker's EDF queue; its start is fixed when
@@ -766,9 +836,13 @@ impl DEdgeAi {
                             &mut free_at,
                             &mut queue,
                             network.as_ref(),
+                            tracer.as_mut(),
                         );
                     } else {
                         let start = free_at[w].max(now + up) + load_delay;
+                        if let Some(t) = tracer.as_mut() {
+                            t.start(req.id, start);
+                        }
                         if load_delay > 0.0 {
                             queue.push(
                                 start,
@@ -846,6 +920,9 @@ impl DEdgeAi {
                         router.complete_steps(resp.worker, resp.z as f64 * mult);
                         in_flight -= 1;
                         metrics.record(&resp, now);
+                        if let Some(t) = tracer.as_mut() {
+                            t.complete(&resp, now);
+                        }
                         if edf {
                             // the worker freed up: start its next
                             // earliest-deadline parked job
@@ -857,6 +934,7 @@ impl DEdgeAi {
                                 &mut free_at,
                                 &mut queue,
                                 network.as_ref(),
+                                tracer.as_mut(),
                             );
                         }
                     }
@@ -880,6 +958,15 @@ impl DEdgeAi {
                                 let t0 = free_at[load.worker].max(now);
                                 free_at[load.worker] = t0 + load.delay_s;
                                 metrics.record_evictions(load.evictions);
+                                if let Some(t) = tracer.as_mut() {
+                                    t.replace(
+                                        now,
+                                        load.worker,
+                                        load.model,
+                                        load.delay_s,
+                                        load.evictions,
+                                    );
+                                }
                                 queue.push(
                                     t0 + load.delay_s,
                                     Event::ModelLoaded {
@@ -913,6 +1000,9 @@ impl DEdgeAi {
             edf_q.is_empty(),
             "event engine drained but EDF jobs remain parked"
         );
+        if let Some(t) = tracer {
+            metrics.set_trace(t.finish());
+        }
         let mut audit = source.audit();
         audit.note("gen-jitter", rng.draws());
         metrics.set_rng_audit(audit);
@@ -935,6 +1025,7 @@ impl DEdgeAi {
         let mut rng = Rng::new(self.opts.seed ^ 0xC0FFEE);
         let mut queue = EventQueue::new();
         let mut arrivals_left = 0usize;
+        let mut tracer = self.make_tracer(network.as_ref());
         let mut source = self.source();
         for req in &mut source {
             queue.push(req.submitted_at, Event::Arrival(req));
@@ -979,6 +1070,9 @@ impl DEdgeAi {
                                             victim.req.z as f64 * vmult,
                                         );
                                         in_flight -= 1;
+                                        if let Some(t) = tracer.as_mut() {
+                                            t.evict(now, vw, &victim, &req);
+                                        }
                                         true
                                     }
                                     None => false,
@@ -989,6 +1083,9 @@ impl DEdgeAi {
                         _ => true,
                     };
                     if !admitted {
+                        if let Some(t) = tracer.as_mut() {
+                            t.drop_req(now, &req);
+                        }
                         continue;
                     }
                     let demanded_z = req.z;
@@ -1001,6 +1098,9 @@ impl DEdgeAi {
                             placement.as_ref(),
                             network.as_ref(),
                         );
+                    }
+                    if let Some(t) = tracer.as_mut() {
+                        t.admit(&req, demanded_z, demanded_model, now);
                     }
                     let w = router.dispatch_with(
                         &req,
@@ -1025,6 +1125,9 @@ impl DEdgeAi {
                         network.as_ref(),
                         w,
                     );
+                    if let Some(t) = tracer.as_mut() {
+                        t.dispatch(&req, w, up, gen, down, load_delay);
+                    }
                     if edf {
                         // same park-then-start path as the streaming
                         // engine (see run_events) — push order included
@@ -1060,9 +1163,13 @@ impl DEdgeAi {
                             &mut free_at,
                             &mut queue,
                             network.as_ref(),
+                            tracer.as_mut(),
                         );
                     } else {
                         let start = free_at[w].max(now + up) + load_delay;
+                        if let Some(t) = tracer.as_mut() {
+                            t.start(req.id, start);
+                        }
                         if load_delay > 0.0 {
                             queue.push(
                                 start,
@@ -1128,6 +1235,9 @@ impl DEdgeAi {
                     router.complete_steps(resp.worker, resp.z as f64 * mult);
                     in_flight -= 1;
                     metrics.record(&resp, now);
+                    if let Some(t) = tracer.as_mut() {
+                        t.complete(&resp, now);
+                    }
                     if edf {
                         busy[resp.worker] = false;
                         Self::edf_start_next(
@@ -1137,6 +1247,7 @@ impl DEdgeAi {
                             &mut free_at,
                             &mut queue,
                             network.as_ref(),
+                            tracer.as_mut(),
                         );
                     }
                 }
@@ -1152,6 +1263,15 @@ impl DEdgeAi {
                             let t0 = free_at[load.worker].max(now);
                             free_at[load.worker] = t0 + load.delay_s;
                             metrics.record_evictions(load.evictions);
+                            if let Some(t) = tracer.as_mut() {
+                                t.replace(
+                                    now,
+                                    load.worker,
+                                    load.model,
+                                    load.delay_s,
+                                    load.evictions,
+                                );
+                            }
                             queue.push(
                                 t0 + load.delay_s,
                                 Event::ModelLoaded {
@@ -1181,6 +1301,9 @@ impl DEdgeAi {
             edf_q.is_empty(),
             "event engine drained but EDF jobs remain parked"
         );
+        if let Some(t) = tracer {
+            metrics.set_trace(t.finish());
+        }
         // same ledger the streaming engine records — audit parity is
         // part of the bitwise-parity contract
         let mut audit = source.audit();
@@ -1288,6 +1411,23 @@ impl DEdgeAi {
 
 /// CLI entry: run and print the serving report.
 pub fn serve_and_report(opts: &ServeOptions) -> Result<()> {
+    let mut opts = opts.clone();
+    // Any observability sink arms the recorder; a bare `trace: true`
+    // (no sink) is honoured too for programmatic callers.
+    if opts.trace_out.is_some()
+        || opts.window.is_some()
+        || opts.window_csv.is_some()
+    {
+        opts.trace = true;
+    }
+    if opts.trace && opts.real_time {
+        bail!(
+            "tracing and windowed telemetry are virtual-clock features \
+             (spans are derived from the virtual timeline); drop \
+             --real-time"
+        );
+    }
+    let opts = &opts;
     let sys = DEdgeAi::new(opts.clone());
     // simlint: allow(wall-clock) — CLI wallclock report, not sim time
     let t0 = Instant::now();
@@ -1482,7 +1622,207 @@ pub fn serve_and_report(opts: &ServeOptions) -> Result<()> {
         }
         println!("{}", ct.render());
     }
+    if let Some(width) = opts.window {
+        if let Some(trace) = metrics.trace() {
+            let series = trace.windows(width);
+            if !series.is_empty() {
+                let mut wt = Table::new(&[
+                    "window",
+                    "t0 (s)",
+                    "t1 (s)",
+                    "served",
+                    "req/s",
+                    "mean util",
+                    "queue depth",
+                    "drops",
+                    "miss rate",
+                ])
+                .left_first()
+                .title("windowed time-series");
+                for (i, w) in series.windows.iter().enumerate() {
+                    let miss_rate = if w.served > 0 {
+                        w.missed() as f64 / w.served as f64
+                    } else {
+                        0.0
+                    };
+                    wt.row(vec![
+                        i.to_string(),
+                        fnum(w.t0, 1),
+                        fnum(w.t1, 1),
+                        w.served.to_string(),
+                        fnum(w.served as f64 / width, 3),
+                        fnum(w.mean_util(), 3),
+                        fnum(w.queue_depth, 2),
+                        w.drops.to_string(),
+                        fnum(miss_rate, 3),
+                    ]);
+                }
+                println!("{}", wt.render());
+            }
+            if let Some(path) = &opts.window_csv {
+                std::fs::write(path, series.render_csv())
+                    .with_context(|| format!("writing window CSV to {path}"))?;
+                println!(
+                    "window CSV: {path} ({} windows)",
+                    series.windows.len()
+                );
+            }
+        }
+    }
+    if let Some(path) = &opts.trace_out {
+        match metrics.trace() {
+            Some(trace) => {
+                trace.write(Path::new(path), opts.trace_format)?;
+                println!(
+                    "trace: {path} ({} records, {} format, hash {:016x})",
+                    trace.records().len(),
+                    opts.trace_format.label(),
+                    trace.hash()
+                );
+            }
+            None => log::warn!("--trace-out set but no trace was recorded"),
+        }
+    }
+    if let Some(path) = &opts.report_json {
+        let report = build_report(opts, &metrics, wall);
+        report.write_file(Path::new(path))?;
+        println!("report JSON: {path}");
+    }
     Ok(())
+}
+
+/// The `serve --report-json` document: the full `ServeMetrics` surface
+/// as sorted-key JSON (schema `dedgeai-serve-report-v1`). Everything
+/// in it derives from the virtual run (plus the one wallclock field,
+/// clearly labelled) so double runs produce identical documents.
+fn build_report(opts: &ServeOptions, metrics: &ServeMetrics, wall: f64) -> Json {
+    let mut doc = Json::from_pairs(vec![
+        ("schema", Json::str("dedgeai-serve-report-v1")),
+        (
+            "config",
+            Json::from_pairs(vec![
+                ("workers", Json::num(opts.workers as f64)),
+                ("requests", Json::num(opts.requests as f64)),
+                ("seed", Json::num(opts.seed as f64)),
+                ("scheduler", Json::str(opts.scheduler.clone())),
+                ("arrivals", Json::str(opts.arrivals.name())),
+                (
+                    "qos_mix",
+                    match &opts.qos_mix {
+                        Some(m) => Json::str(m.label()),
+                        None => Json::Null,
+                    },
+                ),
+                (
+                    "topology",
+                    match &opts.network {
+                        Some(n) => Json::str(n.profile.clone()),
+                        None => Json::Null,
+                    },
+                ),
+            ]),
+        ),
+        ("served", Json::num(metrics.count() as f64)),
+        ("dropped", Json::num(metrics.dropped() as f64)),
+        ("makespan_s", Json::num(metrics.makespan())),
+        ("mean_tis_s", Json::num(metrics.mean_latency())),
+        ("p50_s", Json::num(metrics.median_latency())),
+        ("p95_s", Json::num(metrics.p95_latency())),
+        ("p99_s", Json::num(metrics.p99_latency())),
+        ("mean_queue_wait_s", Json::num(metrics.mean_queue_wait())),
+        ("mean_gen_time_s", Json::num(metrics.mean_gen_time())),
+        ("mean_trans_time_s", Json::num(metrics.mean_trans_time())),
+        ("throughput_img_per_s", Json::num(metrics.throughput())),
+        ("mean_utilization", Json::num(metrics.mean_utilization())),
+        ("imbalance", Json::num(metrics.imbalance())),
+        ("queue_peak", Json::num(metrics.queue_peak() as f64)),
+        ("in_flight_peak", Json::num(metrics.in_flight_peak() as f64)),
+        ("cache_hits", Json::num(metrics.cache_hits() as f64)),
+        ("cache_misses", Json::num(metrics.cache_misses() as f64)),
+        ("model_evictions", Json::num(metrics.evictions() as f64)),
+        ("cold_load_s", Json::num(metrics.cold_load_s())),
+        ("wallclock_s", Json::num(wall)),
+        (
+            "per_worker",
+            Json::Arr(
+                metrics
+                    .per_worker()
+                    .iter()
+                    .map(|&n| Json::num(n as f64))
+                    .collect(),
+            ),
+        ),
+        ("utilization", Json::arr_f64(&metrics.utilization())),
+    ]);
+    if metrics.qos_active() {
+        let (degraded, rerouted) = metrics.degradations();
+        doc.set(
+            "deadline_miss_rate",
+            Json::num(metrics.deadline_miss_rate()),
+        );
+        doc.set("degraded", Json::num(degraded as f64));
+        doc.set("rerouted", Json::num(rerouted as f64));
+        let mut classes = Json::obj();
+        for (&id, st) in metrics.class_stats() {
+            classes.set(
+                qos::class(id).name,
+                Json::from_pairs(vec![
+                    ("count", Json::num(st.count as f64)),
+                    ("misses", Json::num(st.misses as f64)),
+                    ("degraded", Json::num(st.degraded as f64)),
+                    ("rerouted", Json::num(st.rerouted as f64)),
+                    ("p50_s", Json::num(st.p50())),
+                    ("p99_s", Json::num(st.p99())),
+                ]),
+            );
+        }
+        doc.set("classes", classes);
+    }
+    if !metrics.link_stats().is_empty() {
+        let mut links = Json::obj();
+        for (&(from, to), st) in metrics.link_stats() {
+            links.set(
+                &format!("{from}->{to}"),
+                Json::from_pairs(vec![
+                    ("transfers", Json::num(st.transfers as f64)),
+                    ("bits", Json::num(st.bits)),
+                    ("secs", Json::num(st.secs)),
+                ]),
+            );
+        }
+        doc.set("links", links);
+    }
+    let mut audit = Json::obj();
+    for &(name, draws) in metrics.rng_audit().entries() {
+        audit.set(name, Json::num(draws as f64));
+    }
+    doc.set("rng_draws", audit);
+    if let Some(trace) = metrics.trace() {
+        doc.set("trace_hash", Json::str(format!("{:016x}", trace.hash())));
+        doc.set(
+            "trace_records",
+            Json::num(trace.records().len() as f64),
+        );
+        if let Some(width) = opts.window {
+            let series = trace.windows(width);
+            let mut windows: Vec<Json> = Vec::new();
+            for w in &series.windows {
+                windows.push(Json::from_pairs(vec![
+                    ("t0", Json::num(w.t0)),
+                    ("t1", Json::num(w.t1)),
+                    ("served", Json::num(w.served as f64)),
+                    ("drops", Json::num(w.drops as f64)),
+                    ("missed", Json::num(w.missed() as f64)),
+                    ("mean_util", Json::num(w.mean_util())),
+                    ("queue_depth", Json::num(w.queue_depth)),
+                    ("bits", Json::num(w.total_bits())),
+                ]));
+            }
+            doc.set("window_s", Json::num(width));
+            doc.set("windows", Json::Arr(windows));
+        }
+    }
+    doc
 }
 
 #[cfg(test)]

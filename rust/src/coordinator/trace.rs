@@ -1,0 +1,971 @@
+//! Deterministic observability for the serving engine.
+//!
+//! When `ServeOptions::trace` is armed, both engines (streaming
+//! `run_events` and the frozen eager reference) drive a `Tracer`
+//! through a small set of hooks at the exact logical points where the
+//! simulation already makes its decisions: QoS admission, dispatch,
+//! service start, completion, drop, priority eviction, and the
+//! re-placement tick. The tracer turns those hooks into per-request
+//! **spans** in virtual time —
+//!
+//! ```text
+//! upload → queue → cold → gen → return
+//! ```
+//!
+//! — plus discrete **events** (drop / evict / degrade / replace /
+//! deadline-miss), all serialized as order-preserving JSON records.
+//! Because every timestamp comes from the virtual clock and every
+//! record is emitted at a point whose order is already pinned by the
+//! determinism ladder, a trace is a pure function of the seed: double
+//! runs are byte-identical and the streaming and eager engines emit
+//! the same bytes (`rust/tests/serve_trace.rs`).
+//!
+//! The finished `TraceLog` renders in two formats — JSONL (one record
+//! per line, the canonical bytes the FNV-1a trace hash covers) and
+//! Chrome trace-event JSON (loadable in Perfetto: pid 1 carries one
+//! track per worker, pid 2 one track per network link) — and folds
+//! into windowed time-series (`TraceLog::windows`) for the `--window`
+//! table and CSV emitter. See `docs/observability.md`.
+//!
+//! Span telescoping invariant: for every completed request the five
+//! span durations sum to its recorded time-in-system *exactly* (the
+//! interval endpoints telescope), which `serve_trace.rs` checks
+//! against `ServeMetrics::decomposition_error()` tolerance.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::message::{Request, Response};
+use super::network::Network;
+use super::qos;
+use super::router::EdfJob;
+use crate::util::json::Json;
+
+/// Trace schema identifier stamped into the leading meta record.
+pub const TRACE_SCHEMA: &str = "dedgeai-trace-v1";
+
+/// On-disk trace format selected by `--trace-format`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TraceFormat {
+    /// One JSON record per line — the canonical hashed byte stream.
+    #[default]
+    Jsonl,
+    /// Chrome trace-event JSON (`{"traceEvents": [...]}`), loadable
+    /// in Perfetto / `chrome://tracing`.
+    Chrome,
+}
+
+impl TraceFormat {
+    pub fn parse(spec: &str) -> Result<TraceFormat> {
+        match spec {
+            "jsonl" => Ok(TraceFormat::Jsonl),
+            "chrome" => Ok(TraceFormat::Chrome),
+            other => {
+                bail!("unknown trace format '{other}' (expected jsonl|chrome)")
+            }
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            TraceFormat::Jsonl => "jsonl",
+            TraceFormat::Chrome => "chrome",
+        }
+    }
+}
+
+/// Per-request state held between the admission hook and completion.
+struct Pending {
+    origin: usize,
+    qos: usize,
+    deadline: f64,
+    submitted_at: f64,
+    demanded_z: usize,
+    demanded_model: usize,
+    worker: usize,
+    up: f64,
+    gen: f64,
+    down: f64,
+    load_delay: f64,
+    up_bits: f64,
+    down_bits: f64,
+    /// Virtual service-start time (generation begin, cold load already
+    /// absorbed). NaN until the start hook fires.
+    start: f64,
+}
+
+/// The live recorder the engines drive. Built once per run by
+/// `DEdgeAi::make_tracer` when tracing is armed; consumed into a
+/// `TraceLog` at drain time. All state is ordered (`BTreeMap`) and all
+/// timestamps are virtual — the tracer draws zero RNG and never reads
+/// the wall clock.
+pub struct Tracer {
+    workers: usize,
+    nsites: usize,
+    site_of: Vec<usize>,
+    has_network: bool,
+    pending: BTreeMap<u64, Pending>,
+    records: Vec<Json>,
+}
+
+impl Tracer {
+    pub fn new(workers: usize, network: Option<&Network>) -> Tracer {
+        let nsites = network.map_or(1, |n| n.sites());
+        let site_of: Vec<usize> =
+            (0..workers).map(|w| network.map_or(0, |n| n.site(w))).collect();
+        let site_json: Vec<f64> = site_of.iter().map(|&s| s as f64).collect();
+        let meta = Json::from_pairs(vec![
+            ("type", Json::str("meta")),
+            ("schema", Json::str(TRACE_SCHEMA)),
+            ("workers", Json::num(workers as f64)),
+            ("sites", Json::num(nsites as f64)),
+            ("site_of", Json::arr_f64(&site_json)),
+        ]);
+        Tracer {
+            workers,
+            nsites,
+            site_of,
+            has_network: network.is_some(),
+            pending: BTreeMap::new(),
+            records: vec![meta],
+        }
+    }
+
+    /// QoS admission passed at `now`. `demanded_z` / `demanded_model`
+    /// are the pre-degradation demand; if the admitted request was
+    /// mutated (step reduction / model reroute) a `degrade` event is
+    /// emitted here.
+    pub fn admit(
+        &mut self,
+        req: &Request,
+        demanded_z: usize,
+        demanded_model: usize,
+        now: f64,
+    ) {
+        self.pending.insert(
+            req.id,
+            Pending {
+                origin: req.origin,
+                qos: req.qos,
+                deadline: req.deadline,
+                submitted_at: req.submitted_at,
+                demanded_z,
+                demanded_model,
+                worker: 0,
+                up: 0.0,
+                gen: 0.0,
+                down: 0.0,
+                load_delay: 0.0,
+                up_bits: 0.0,
+                down_bits: 0.0,
+                start: f64::NAN,
+            },
+        );
+        if req.z != demanded_z || req.model != demanded_model {
+            self.records.push(Json::from_pairs(vec![
+                ("type", Json::str("event")),
+                ("kind", Json::str("degrade")),
+                ("t", Json::num(now)),
+                ("id", Json::num(req.id as f64)),
+                ("qos", Json::num(req.qos as f64)),
+                ("z", Json::num(req.z as f64)),
+                ("demanded_z", Json::num(demanded_z as f64)),
+                ("model", Json::num(req.model as f64)),
+                ("demanded_model", Json::num(demanded_model as f64)),
+            ]));
+        }
+    }
+
+    /// The router chose `worker`; the charged leg durations are known.
+    pub fn dispatch(
+        &mut self,
+        req: &Request,
+        worker: usize,
+        up: f64,
+        gen: f64,
+        down: f64,
+        load_delay: f64,
+    ) {
+        if let Some(p) = self.pending.get_mut(&req.id) {
+            p.worker = worker;
+            p.up = up;
+            p.gen = gen;
+            p.down = down;
+            p.load_delay = load_delay;
+            if self.has_network {
+                p.up_bits = Network::up_bits(req);
+                p.down_bits = Network::down_bits(req);
+            }
+        }
+    }
+
+    /// Generation begins at virtual time `start` (cold load, if any,
+    /// occupies `[start - load_delay, start]`).
+    pub fn start(&mut self, id: u64, start: f64) {
+        if let Some(p) = self.pending.get_mut(&id) {
+            p.start = start;
+        }
+    }
+
+    /// The request completed at `now`: emit its spans, the summary
+    /// `req` record, and a `deadline-miss` event when applicable.
+    pub fn complete(&mut self, resp: &Response, now: f64) {
+        let Some(p) = self.pending.remove(&resp.id) else {
+            return;
+        };
+        let id = resp.id;
+        let t0 = p.submitted_at;
+        let site = self.site_of.get(p.worker).copied().unwrap_or(0);
+        let start = if p.start.is_nan() {
+            t0 + p.up + p.load_delay
+        } else {
+            p.start
+        };
+        if self.has_network {
+            self.span_link("upload", id, (p.origin, site), p.up_bits, t0, t0 + p.up);
+        }
+        self.span_worker("queue", id, p.worker, t0 + p.up, start - p.load_delay);
+        if p.load_delay > 0.0 {
+            self.span_worker("cold", id, p.worker, start - p.load_delay, start);
+        }
+        self.span_worker("gen", id, p.worker, start, start + p.gen);
+        if self.has_network {
+            self.span_link("return", id, (site, p.origin), p.down_bits, start + p.gen, now);
+        }
+        let missed = p.deadline.is_finite() && now > p.deadline;
+        self.records.push(Json::from_pairs(vec![
+            ("type", Json::str("req")),
+            ("id", Json::num(id as f64)),
+            ("worker", Json::num(p.worker as f64)),
+            ("origin", Json::num(p.origin as f64)),
+            ("qos", Json::num(p.qos as f64)),
+            ("class", Json::str(qos::class(p.qos).name)),
+            ("z", Json::num(resp.z as f64)),
+            ("model", Json::num(resp.model as f64)),
+            ("demanded_z", Json::num(p.demanded_z as f64)),
+            ("demanded_model", Json::num(p.demanded_model as f64)),
+            ("t0", Json::num(t0)),
+            ("t1", Json::num(now)),
+            ("latency", Json::num(resp.latency)),
+            ("deadline", Json::num(p.deadline)),
+            ("missed", Json::num(if missed { 1.0 } else { 0.0 })),
+        ]));
+        if missed {
+            self.records.push(Json::from_pairs(vec![
+                ("type", Json::str("event")),
+                ("kind", Json::str("deadline-miss")),
+                ("t", Json::num(now)),
+                ("id", Json::num(id as f64)),
+                ("worker", Json::num(p.worker as f64)),
+                ("qos", Json::num(p.qos as f64)),
+                ("over_s", Json::num(now - p.deadline)),
+            ]));
+        }
+    }
+
+    /// Admission drop (queue cap full, no eviction possible).
+    pub fn drop_req(&mut self, now: f64, req: &Request) {
+        self.pending.remove(&req.id);
+        self.records.push(Json::from_pairs(vec![
+            ("type", Json::str("event")),
+            ("kind", Json::str("drop")),
+            ("t", Json::num(now)),
+            ("id", Json::num(req.id as f64)),
+            ("qos", Json::num(req.qos as f64)),
+            ("origin", Json::num(req.origin as f64)),
+        ]));
+    }
+
+    /// A parked EDF job was evicted from `worker` to admit `arrival`.
+    pub fn evict(
+        &mut self,
+        now: f64,
+        worker: usize,
+        victim: &EdfJob,
+        arrival: &Request,
+    ) {
+        self.pending.remove(&victim.req.id);
+        self.records.push(Json::from_pairs(vec![
+            ("type", Json::str("event")),
+            ("kind", Json::str("evict")),
+            ("t", Json::num(now)),
+            ("id", Json::num(victim.req.id as f64)),
+            ("worker", Json::num(worker as f64)),
+            ("qos", Json::num(victim.req.qos as f64)),
+            ("z", Json::num(victim.req.z as f64)),
+            ("demanded_z", Json::num(victim.demanded_z as f64)),
+            ("model", Json::num(victim.req.model as f64)),
+            ("demanded_model", Json::num(victim.demanded_model as f64)),
+            ("by", Json::num(arrival.id as f64)),
+            ("by_qos", Json::num(arrival.qos as f64)),
+        ]));
+    }
+
+    /// Slow-timescale re-placement loaded `model` onto `worker`.
+    pub fn replace(
+        &mut self,
+        now: f64,
+        worker: usize,
+        model: usize,
+        delay_s: f64,
+        evictions: usize,
+    ) {
+        self.records.push(Json::from_pairs(vec![
+            ("type", Json::str("event")),
+            ("kind", Json::str("replace")),
+            ("t", Json::num(now)),
+            ("worker", Json::num(worker as f64)),
+            ("model", Json::num(model as f64)),
+            ("load_s", Json::num(delay_s)),
+            ("cache_evictions", Json::num(evictions as f64)),
+        ]));
+    }
+
+    /// Seal the recording.
+    pub fn finish(self) -> TraceLog {
+        TraceLog {
+            workers: self.workers,
+            nsites: self.nsites,
+            site_of: self.site_of,
+            records: self.records,
+        }
+    }
+
+    fn span_worker(&mut self, phase: &str, id: u64, worker: usize, t0: f64, t1: f64) {
+        self.records.push(Json::from_pairs(vec![
+            ("type", Json::str("span")),
+            ("phase", Json::str(phase)),
+            ("id", Json::num(id as f64)),
+            ("worker", Json::num(worker as f64)),
+            ("t0", Json::num(t0)),
+            ("t1", Json::num(t1)),
+        ]));
+    }
+
+    fn span_link(
+        &mut self,
+        phase: &str,
+        id: u64,
+        link: (usize, usize),
+        bits: f64,
+        t0: f64,
+        t1: f64,
+    ) {
+        self.records.push(Json::from_pairs(vec![
+            ("type", Json::str("span")),
+            ("phase", Json::str(phase)),
+            ("id", Json::num(id as f64)),
+            ("from", Json::num(link.0 as f64)),
+            ("to", Json::num(link.1 as f64)),
+            ("bits", Json::num(bits)),
+            ("t0", Json::num(t0)),
+            ("t1", Json::num(t1)),
+        ]));
+    }
+}
+
+/// A sealed trace: the ordered record list plus the worker/site map
+/// needed to render tracks. Carried on `ServeMetrics` when tracing is
+/// armed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceLog {
+    workers: usize,
+    nsites: usize,
+    site_of: Vec<usize>,
+    records: Vec<Json>,
+}
+
+fn jf(r: &Json, k: &str) -> f64 {
+    r.get(k).and_then(|v| v.as_f64().ok()).unwrap_or(0.0)
+}
+
+fn js<'a>(r: &'a Json, k: &str) -> &'a str {
+    r.get(k).and_then(|v| v.as_str().ok()).unwrap_or("")
+}
+
+/// FNV-1a 64-bit over `bytes` — the trace-hash primitive. Stable,
+/// dependency-free, and fast enough for multi-megabyte traces.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl TraceLog {
+    pub fn records(&self) -> &[Json] {
+        &self.records
+    }
+
+    /// Count records of a given `type` field value.
+    pub fn count_type(&self, rtype: &str) -> usize {
+        self.records.iter().filter(|r| js(r, "type") == rtype).count()
+    }
+
+    /// Count discrete events of a given kind (`drop`, `evict`, ...).
+    pub fn count_events(&self, kind: &str) -> usize {
+        self.records
+            .iter()
+            .filter(|r| js(r, "type") == "event" && js(r, "kind") == kind)
+            .count()
+    }
+
+    /// Count spans of a given phase (`upload`, `queue`, `cold`, `gen`,
+    /// `return`).
+    pub fn count_spans(&self, phase: &str) -> usize {
+        self.records
+            .iter()
+            .filter(|r| js(r, "type") == "span" && js(r, "phase") == phase)
+            .count()
+    }
+
+    /// The canonical byte stream: one compact JSON record per line.
+    pub fn render_jsonl(&self) -> String {
+        let mut out = String::new();
+        for r in &self.records {
+            out.push_str(&r.render());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// FNV-1a 64 over the JSONL bytes — the `verify-determinism`
+    /// trace-hash column.
+    pub fn hash(&self) -> u64 {
+        fnv1a(self.render_jsonl().as_bytes())
+    }
+
+    /// Chrome trace-event JSON: pid 1 holds one thread per worker
+    /// (queue/cold/gen spans), pid 2 one thread per observed network
+    /// link (upload/return spans); discrete events become instants.
+    /// Timestamps are virtual seconds scaled to microseconds.
+    pub fn render_chrome(&self) -> String {
+        let mut events: Vec<Json> = Vec::new();
+        events.push(meta_process(1, "workers"));
+        for (w, &site) in self.site_of.iter().enumerate() {
+            events.push(meta_thread(1, w, &format!("worker {w} @ site {site}")));
+        }
+        let mut links: BTreeSet<(usize, usize)> = BTreeSet::new();
+        for r in &self.records {
+            if js(r, "type") == "span" {
+                let ph = js(r, "phase");
+                if ph == "upload" || ph == "return" {
+                    links.insert((jf(r, "from") as usize, jf(r, "to") as usize));
+                }
+            }
+        }
+        if !links.is_empty() {
+            events.push(meta_process(2, "links"));
+            for &(f, t) in &links {
+                let tid = f * self.nsites + t;
+                events.push(meta_thread(2, tid, &format!("link s{f} to s{t}")));
+            }
+        }
+        for r in &self.records {
+            match js(r, "type") {
+                "span" => {
+                    let ph = js(r, "phase");
+                    let (pid, tid) = if ph == "upload" || ph == "return" {
+                        let f = jf(r, "from") as usize;
+                        let t = jf(r, "to") as usize;
+                        (2, f * self.nsites + t)
+                    } else {
+                        (1, jf(r, "worker") as usize)
+                    };
+                    let t0 = jf(r, "t0");
+                    let t1 = jf(r, "t1");
+                    events.push(Json::from_pairs(vec![
+                        ("ph", Json::str("X")),
+                        ("pid", Json::num(pid as f64)),
+                        ("tid", Json::num(tid as f64)),
+                        ("ts", Json::num(t0 * 1e6)),
+                        ("dur", Json::num((t1 - t0) * 1e6)),
+                        ("name", Json::str(ph)),
+                        ("cat", Json::str("span")),
+                        (
+                            "args",
+                            Json::from_pairs(vec![("id", Json::num(jf(r, "id")))]),
+                        ),
+                    ]));
+                }
+                "event" => {
+                    let has_worker = r.get("worker").is_some();
+                    let tid = if has_worker { jf(r, "worker") } else { 0.0 };
+                    let scope = if has_worker { "t" } else { "g" };
+                    events.push(Json::from_pairs(vec![
+                        ("ph", Json::str("i")),
+                        ("pid", Json::num(1.0)),
+                        ("tid", Json::num(tid)),
+                        ("ts", Json::num(jf(r, "t") * 1e6)),
+                        ("s", Json::str(scope)),
+                        ("name", Json::str(js(r, "kind"))),
+                        ("cat", Json::str("event")),
+                        (
+                            "args",
+                            Json::from_pairs(vec![("id", Json::num(jf(r, "id")))]),
+                        ),
+                    ]));
+                }
+                _ => {}
+            }
+        }
+        Json::from_pairs(vec![("traceEvents", Json::Arr(events))]).render()
+    }
+
+    /// Write the trace to `path` in the requested format.
+    pub fn write(&self, path: &Path, format: TraceFormat) -> Result<()> {
+        let text = match format {
+            TraceFormat::Jsonl => self.render_jsonl(),
+            TraceFormat::Chrome => {
+                let mut s = self.render_chrome();
+                s.push('\n');
+                s
+            }
+        };
+        std::fs::write(path, text)
+            .with_context(|| format!("writing trace to {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Fold the trace into fixed-width windows anchored at t=0.
+    /// Spans contribute their overlap with each window (so utilization
+    /// and queue depth are exact time averages); `req` records bin by
+    /// completion time, drop/evict events by event time; transfer bits
+    /// spread proportionally to leg overlap (a zero-duration leg bins
+    /// wholly at its start).
+    pub fn windows(&self, width: f64) -> WindowSeries {
+        let nclasses = qos::class_count();
+        let mut series = WindowSeries {
+            width,
+            workers: self.workers,
+            windows: Vec::new(),
+        };
+        if !width.is_finite() || width <= 0.0 {
+            return series;
+        }
+        let mut horizon = 0.0f64;
+        for r in &self.records {
+            let t = match js(r, "type") {
+                "span" | "req" => jf(r, "t1"),
+                "event" => jf(r, "t"),
+                _ => 0.0,
+            };
+            if t > horizon {
+                horizon = t;
+            }
+        }
+        if horizon <= 0.0 {
+            return series;
+        }
+        let nwin = (horizon / width).ceil().max(1.0) as usize;
+        for i in 0..nwin {
+            series.windows.push(WindowStat {
+                t0: i as f64 * width,
+                t1: (i + 1) as f64 * width,
+                served: 0,
+                drops: 0,
+                class_served: vec![0; nclasses],
+                class_missed: vec![0; nclasses],
+                util: vec![0.0; self.workers],
+                queue_depth: 0.0,
+                link_bits: BTreeMap::new(),
+            });
+        }
+        let idx = |t: f64| -> usize { ((t / width) as usize).min(nwin - 1) };
+        for r in &self.records {
+            match js(r, "type") {
+                "req" => {
+                    let w = &mut series.windows[idx(jf(r, "t1"))];
+                    let class = (jf(r, "qos") as usize).min(nclasses - 1);
+                    w.served += 1;
+                    w.class_served[class] += 1;
+                    if jf(r, "missed") > 0.0 {
+                        w.class_missed[class] += 1;
+                    }
+                }
+                "event" => {
+                    let kind = js(r, "kind");
+                    if kind == "drop" || kind == "evict" {
+                        series.windows[idx(jf(r, "t"))].drops += 1;
+                    }
+                }
+                "span" => {
+                    let ph = js(r, "phase");
+                    let lo = jf(r, "t0");
+                    let hi = jf(r, "t1");
+                    let dur = hi - lo;
+                    let is_link = ph == "upload" || ph == "return";
+                    if dur <= 0.0 {
+                        if is_link {
+                            let key = (jf(r, "from") as usize, jf(r, "to") as usize);
+                            let w = &mut series.windows[idx(lo)];
+                            *w.link_bits.entry(key).or_insert(0.0) += jf(r, "bits");
+                        }
+                        continue;
+                    }
+                    for wi in idx(lo)..=idx(hi) {
+                        let w = &mut series.windows[wi];
+                        let ov = hi.min(w.t1) - lo.max(w.t0);
+                        if ov <= 0.0 {
+                            continue;
+                        }
+                        match ph {
+                            "gen" | "cold" => {
+                                let worker = (jf(r, "worker") as usize)
+                                    .min(self.workers.saturating_sub(1));
+                                w.util[worker] += ov;
+                            }
+                            "queue" => w.queue_depth += ov,
+                            "upload" | "return" => {
+                                let key =
+                                    (jf(r, "from") as usize, jf(r, "to") as usize);
+                                *w.link_bits.entry(key).or_insert(0.0) +=
+                                    jf(r, "bits") * ov / dur;
+                            }
+                            _ => {}
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        for w in &mut series.windows {
+            for u in &mut w.util {
+                *u /= width;
+            }
+            w.queue_depth /= width;
+        }
+        series
+    }
+}
+
+/// One window of the folded time-series.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WindowStat {
+    pub t0: f64,
+    pub t1: f64,
+    /// Completions whose finish time fell in this window.
+    pub served: usize,
+    /// Admission drops + priority evictions in this window.
+    pub drops: usize,
+    pub class_served: Vec<usize>,
+    pub class_missed: Vec<usize>,
+    /// Per-worker busy fraction (gen + cold overlap / width).
+    pub util: Vec<f64>,
+    /// Time-averaged parked-queue depth over the window.
+    pub queue_depth: f64,
+    /// Bits in flight per (from, to) link, overlap-weighted.
+    pub link_bits: BTreeMap<(usize, usize), f64>,
+}
+
+impl WindowStat {
+    pub fn mean_util(&self) -> f64 {
+        if self.util.is_empty() {
+            return 0.0;
+        }
+        let mut s = 0.0;
+        for &u in &self.util {
+            s += u;
+        }
+        s / self.util.len() as f64
+    }
+
+    pub fn missed(&self) -> usize {
+        let mut n = 0;
+        for &m in &self.class_missed {
+            n += m;
+        }
+        n
+    }
+
+    pub fn total_bits(&self) -> f64 {
+        let mut s = 0.0;
+        for b in self.link_bits.values() {
+            s += *b;
+        }
+        s
+    }
+}
+
+/// The full windowed series: `serve` prints it as a table and
+/// `--window-csv` writes `render_csv()` for downstream experiment
+/// tooling.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WindowSeries {
+    pub width: f64,
+    pub workers: usize,
+    pub windows: Vec<WindowStat>,
+}
+
+impl WindowSeries {
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+
+    /// CSV with one row per window. Columns: window bounds, served,
+    /// throughput, drops, queue depth, per-worker utilization,
+    /// per-class served/missed, and per-link bits (union of links
+    /// observed in any window, sorted).
+    pub fn render_csv(&self) -> String {
+        let mut links: BTreeSet<(usize, usize)> = BTreeSet::new();
+        for w in &self.windows {
+            for &k in w.link_bits.keys() {
+                links.insert(k);
+            }
+        }
+        let mut out = String::new();
+        out.push_str("window,t0,t1,served,req_per_s,drops,queue_depth");
+        for w in 0..self.workers {
+            out.push_str(&format!(",util_w{w}"));
+        }
+        for c in 0..qos::class_count() {
+            let name = qos::class(c).name;
+            out.push_str(&format!(",{name}_served,{name}_missed"));
+        }
+        for &(f, t) in &links {
+            out.push_str(&format!(",bits_s{f}_s{t}"));
+        }
+        out.push('\n');
+        for (i, w) in self.windows.iter().enumerate() {
+            let rate = if self.width > 0.0 {
+                w.served as f64 / self.width
+            } else {
+                0.0
+            };
+            out.push_str(&format!(
+                "{i},{:.3},{:.3},{},{:.6},{},{:.6}",
+                w.t0, w.t1, w.served, rate, w.drops, w.queue_depth
+            ));
+            for u in &w.util {
+                out.push_str(&format!(",{u:.6}"));
+            }
+            for c in 0..w.class_served.len() {
+                out.push_str(&format!(
+                    ",{},{}",
+                    w.class_served[c], w.class_missed[c]
+                ));
+            }
+            for &k in &links {
+                let bits = w.link_bits.get(&k).copied().unwrap_or(0.0);
+                out.push_str(&format!(",{bits:.3}"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+fn meta_process(pid: usize, name: &str) -> Json {
+    Json::from_pairs(vec![
+        ("ph", Json::str("M")),
+        ("pid", Json::num(pid as f64)),
+        ("name", Json::str("process_name")),
+        ("args", Json::from_pairs(vec![("name", Json::str(name))])),
+    ])
+}
+
+fn meta_thread(pid: usize, tid: usize, name: &str) -> Json {
+    Json::from_pairs(vec![
+        ("ph", Json::str("M")),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(tid as f64)),
+        ("name", Json::str("thread_name")),
+        ("args", Json::from_pairs(vec![("name", Json::str(name))])),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::corpus::PromptDesc;
+
+    fn req(id: u64, t: f64) -> Request {
+        Request {
+            id,
+            prompt: PromptDesc::default(),
+            z: 8,
+            model: 0,
+            origin: 0,
+            qos: 0,
+            deadline: f64::INFINITY,
+            submitted_at: t,
+        }
+    }
+
+    fn resp(r: &Request, worker: usize, latency: f64, gen: f64) -> Response {
+        Response {
+            id: r.id,
+            worker,
+            z: r.z,
+            model: r.model,
+            latency,
+            queue_wait: latency - gen,
+            gen_time: gen,
+            trans_time: 0.0,
+            checksum: 0.0,
+            qos: r.qos,
+            deadline: r.deadline,
+            demanded_z: r.z,
+            demanded_model: r.model,
+        }
+    }
+
+    /// Drive one request through the hook sequence by hand.
+    fn one_request_trace() -> TraceLog {
+        let mut t = Tracer::new(2, None);
+        let r = req(7, 1.0);
+        t.admit(&r, r.z, r.model, 1.0);
+        t.dispatch(&r, 1, 0.0, 4.0, 0.0, 0.5);
+        // queue [1.0, 2.5], cold [2.5, 3.0], gen [3.0, 7.0]
+        t.start(r.id, 3.0);
+        t.complete(&resp(&r, 1, 6.0, 4.0), 7.0);
+        t.finish()
+    }
+
+    #[test]
+    fn fnv1a_known_vectors() {
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn trace_format_parses() {
+        assert_eq!(TraceFormat::parse("jsonl").unwrap(), TraceFormat::Jsonl);
+        assert_eq!(TraceFormat::parse("chrome").unwrap(), TraceFormat::Chrome);
+        assert!(TraceFormat::parse("protobuf").is_err());
+        assert_eq!(TraceFormat::default().label(), "jsonl");
+    }
+
+    #[test]
+    fn spans_telescope_to_latency() {
+        let log = one_request_trace();
+        assert_eq!(log.count_type("meta"), 1);
+        assert_eq!(log.count_type("req"), 1);
+        // no network -> no upload/return spans
+        assert_eq!(log.count_spans("upload"), 0);
+        assert_eq!(log.count_spans("return"), 0);
+        assert_eq!(log.count_spans("queue"), 1);
+        assert_eq!(log.count_spans("cold"), 1);
+        assert_eq!(log.count_spans("gen"), 1);
+        let mut sum = 0.0;
+        for r in log.records() {
+            if js(r, "type") == "span" {
+                sum += jf(r, "t1") - jf(r, "t0");
+            }
+        }
+        assert!((sum - 6.0).abs() < 1e-12, "span sum {sum} != latency 6");
+    }
+
+    #[test]
+    fn jsonl_is_deterministic_and_hash_matches() {
+        let a = one_request_trace();
+        let b = one_request_trace();
+        assert_eq!(a.render_jsonl(), b.render_jsonl());
+        assert_eq!(a.hash(), b.hash());
+        assert_eq!(a.hash(), fnv1a(a.render_jsonl().as_bytes()));
+        // every line is valid standalone JSON
+        for line in a.render_jsonl().lines() {
+            Json::parse(line).expect("jsonl line parses");
+        }
+    }
+
+    #[test]
+    fn chrome_render_is_valid_json_with_tracks() {
+        let log = one_request_trace();
+        let doc = Json::parse(&log.render_chrome()).expect("chrome parses");
+        let events = doc.req("traceEvents").unwrap().as_arr().unwrap();
+        // 1 process meta + 2 worker threads + 3 X spans
+        let mut x = 0;
+        let mut m = 0;
+        for e in events {
+            match js(e, "ph") {
+                "X" => x += 1,
+                "M" => m += 1,
+                _ => {}
+            }
+        }
+        assert_eq!(x, 3);
+        assert_eq!(m, 3);
+    }
+
+    #[test]
+    fn drop_and_evict_events_are_counted() {
+        let mut t = Tracer::new(1, None);
+        let a = req(1, 0.0);
+        t.admit(&a, a.z, a.model, 0.0);
+        let b = req(2, 0.5);
+        t.drop_req(0.5, &b);
+        let victim = EdfJob {
+            ready_at: 0.0,
+            req: a,
+            up: 0.0,
+            gen: 1.0,
+            down: 0.0,
+            load_delay: 0.0,
+            demanded_z: a.z,
+            demanded_model: a.model,
+        };
+        let c = req(3, 0.6);
+        t.evict(0.6, 0, &victim, &c);
+        let log = t.finish();
+        assert_eq!(log.count_events("drop"), 1);
+        assert_eq!(log.count_events("evict"), 1);
+        // the evicted request never completes: no spans, no req record
+        assert_eq!(log.count_type("req"), 0);
+        assert_eq!(log.count_type("span"), 0);
+    }
+
+    #[test]
+    fn degrade_event_fires_on_mutated_admission() {
+        let mut t = Tracer::new(1, None);
+        let mut r = req(1, 0.0);
+        r.z = 8;
+        t.admit(&r, 15, r.model, 0.0); // demanded 15, served 8
+        let log = t.finish();
+        assert_eq!(log.count_events("degrade"), 1);
+    }
+
+    #[test]
+    fn windows_bin_spans_and_completions() {
+        let log = one_request_trace();
+        // horizon 7.0, width 2.0 -> 4 windows
+        let series = log.windows(2.0);
+        assert_eq!(series.windows.len(), 4);
+        // completion at t=7.0 lands in the last window
+        assert_eq!(series.windows[3].served, 1);
+        let mut total_served = 0;
+        for w in &series.windows {
+            total_served += w.served;
+        }
+        assert_eq!(total_served, 1);
+        // gen [3,7] on worker 1: window [2,4] holds 1s -> util 0.5,
+        // windows [4,6] full -> 1.0 (plus cold [2.5,3.0] in [2,4])
+        assert!((series.windows[2].util[1] - 1.0).abs() < 1e-12);
+        let w1 = &series.windows[1];
+        assert!((w1.util[1] - (1.0 + 0.5) / 2.0).abs() < 1e-12);
+        // worker 0 never busy
+        for w in &series.windows {
+            assert_eq!(w.util[0], 0.0);
+        }
+        // queue span [1.0, 2.5]: 1s in window 0, 0.5s in window 1
+        assert!((series.windows[0].queue_depth - 0.5).abs() < 1e-12);
+        assert!((w1.queue_depth - 0.25).abs() < 1e-12);
+        // CSV renders one line per window + header
+        let csv = series.render_csv();
+        assert_eq!(csv.lines().count(), 5);
+        assert!(csv.starts_with("window,t0,t1,served"));
+    }
+
+    #[test]
+    fn windows_zero_width_or_empty_trace_are_empty() {
+        let log = one_request_trace();
+        assert!(log.windows(0.0).is_empty());
+        assert!(log.windows(-1.0).is_empty());
+        let empty = Tracer::new(1, None).finish();
+        assert!(empty.windows(10.0).is_empty());
+    }
+}

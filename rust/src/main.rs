@@ -47,6 +47,9 @@ USAGE:
                 [--worker-vram 24,24,24,24,48] [--queue-cap 50]
                 [--topology wan --sites 5 --site-of 0,1,2,3,4]
                 [--qos-mix deadline-tight --method edf-ll]
+                [--trace-out trace.jsonl --trace-format jsonl|chrome]
+                [--window 10 --window-csv windows.csv]
+                [--report-json report.json]
   dedgeai bench [--bench-requests 1000000] [--bench-out BENCH_serve.json]
   dedgeai lint [--lint-root DIR]
   dedgeai verify-determinism [any serve option]
@@ -131,6 +134,27 @@ OPTIONS (qos / qos-sweep):
                      per-class books, and the edf-ll scheduler
   --qos-mixes M      qos-sweep class mixes, ';'-separated --qos-mix
                      specs (the specs themselves contain commas)
+
+OPTIONS (observability):
+  --trace-out FILE   write a deterministic per-request trace: spans
+                     (upload/queue/cold-load/generate/return) and
+                     events (drop/evict/degrade/replace/deadline-miss)
+                     stamped in virtual time; byte-identical across
+                     double runs and engines (docs/observability.md)
+  --trace-format F   jsonl (default) | chrome — chrome emits Chrome
+                     trace-event JSON loadable in Perfetto/about:tracing
+                     with one track per worker and per link
+  --window S         windowed time-series: per-window throughput,
+                     per-worker utilization, queue depth, per-class
+                     deadline-miss rate, per-link bits in flight,
+                     printed as a table after the serve summary
+  --window-csv FILE  also write the windowed series as CSV
+                     (requires --window)
+  --report-json FILE machine-readable serve summary (full ServeMetrics
+                     plus trace hash and windows when enabled)
+  All observability sinks are virtual-clock features: they arm the
+  tracer, reject --real-time, and leave bitwise behaviour of the
+  engine unchanged when unset.
 
 OPTIONS (lint / verify-determinism):
   --lint-root DIR    lint this directory instead of auto-discovering
@@ -390,6 +414,20 @@ fn serve_options(args: &Args) -> Result<coordinator::ServeOptions> {
         Some(spec) => Some(QosMix::parse(spec)?),
         None => None,
     };
+    // observability: any sink flag arms the tracer inside
+    // serve_and_report; the `trace` bool itself stays false here so
+    // verify-determinism can arm it explicitly on both runs
+    let trace_format =
+        coordinator::TraceFormat::parse(&args.str_or("trace-format", "jsonl"))?;
+    let window = match args.f64_or("window", 0.0)? {
+        w if w > 0.0 => Some(w),
+        w if w < 0.0 => bail!("--window must be a positive number of seconds"),
+        _ => None,
+    };
+    let window_csv = args.get("window-csv").map(String::from);
+    if window_csv.is_some() && window.is_none() {
+        bail!("--window-csv requires --window <s>");
+    }
     // network: any of --topology/--sites/--site-of/--bw-matrix enables
     // the inter-edge subsystem (profile defaults to lan, one site per
     // worker like the five-Jetson testbed)
@@ -423,6 +461,12 @@ fn serve_options(args: &Args) -> Result<coordinator::ServeOptions> {
         queue_cap,
         network,
         qos_mix,
+        trace: false,
+        trace_out: args.get("trace-out").map(String::from),
+        trace_format,
+        window,
+        window_csv,
+        report_json: args.get("report-json").map(String::from),
     };
     Ok(opts)
 }
@@ -521,6 +565,9 @@ fn cmd_verify_determinism(args: &Args) -> Result<()> {
         t.row(vec![stream.to_string(), draws.to_string()]);
     }
     println!("{}", t.render());
+    if let Some(hash) = report.trace_hash {
+        println!("trace hash: {hash:016x} (fnv1a over the JSONL trace)");
+    }
     if report.passed() {
         println!(
             "verify-determinism: PASS — two fresh runs bitwise identical \

@@ -7,7 +7,10 @@
 //! experiment grids use, and reports *simulated requests
 //! per wallclock second* — the engine's hot-path throughput — plus
 //! wallclock, peak RSS, and the streaming engine's event-queue
-//! high-water mark (the O(in-flight) certificate).
+//! high-water mark (the O(in-flight) certificate). Each scenario is
+//! also re-run with the tracer armed, so the trajectory records the
+//! observability layer's measured overhead (and every bench run
+//! re-proves that tracing leaves the simulation bitwise unchanged).
 //!
 //! Output goes to `BENCH_serve.json`: the recorded baseline every
 //! later perf PR must not regress. Regenerate on a quiet machine with
@@ -50,8 +53,11 @@ pub struct Measurement {
     pub what: &'static str,
     /// Requests offered (served + dropped).
     pub requests: usize,
-    /// Wallclock seconds for the whole simulated run.
+    /// Wallclock seconds for the whole simulated run (tracing off).
     pub wall_s: f64,
+    /// Wallclock seconds for the same run with the tracer armed — the
+    /// measured (not asserted) cost of the observability layer.
+    pub trace_wall_s: f64,
     pub summary: ServeSummary,
 }
 
@@ -61,6 +67,26 @@ impl Measurement {
     pub fn sim_req_per_s(&self) -> f64 {
         if self.wall_s > 0.0 {
             self.requests as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Trace-on simulated traffic rate.
+    pub fn trace_sim_req_per_s(&self) -> f64 {
+        if self.trace_wall_s > 0.0 {
+            self.requests as f64 / self.trace_wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Relative wallclock overhead of tracing, in percent (positive =
+    /// tracing was slower). Meaningless on sub-millisecond smoke runs;
+    /// read it off quiet-machine release builds only.
+    pub fn trace_overhead_pct(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            (self.trace_wall_s - self.wall_s) / self.wall_s * 100.0
         } else {
             0.0
         }
@@ -205,13 +231,30 @@ pub fn run_scenarios(set: Vec<Scenario>, jobs: usize) -> Result<Vec<Measurement>
             move || -> Result<Measurement> {
                 let requests = sc.opts.requests;
                 let t0 = Instant::now();
-                let metrics = DEdgeAi::new(sc.opts).run_virtual()?;
+                let metrics = DEdgeAi::new(sc.opts.clone()).run_virtual()?;
                 let wall_s = t0.elapsed().as_secs_f64();
+                // second run with the tracer armed: measures the
+                // trace overhead and certifies that tracing leaves
+                // every metric bitwise unchanged (the zero-cost-when-
+                // off claim, checked per scenario on every bench run)
+                let traced_opts = ServeOptions { trace: true, ..sc.opts };
+                let t1 = Instant::now();
+                let traced = DEdgeAi::new(traced_opts).run_virtual()?;
+                let trace_wall_s = t1.elapsed().as_secs_f64();
+                let parity = crate::analysis::compare(&metrics, &traced);
+                if !parity.passed() {
+                    anyhow::bail!(
+                        "{}: tracing changed the simulation — {:?}",
+                        sc.name,
+                        parity.mismatches
+                    );
+                }
                 Ok(Measurement {
                     name: sc.name,
                     what: sc.what,
                     requests,
                     wall_s,
+                    trace_wall_s,
                     summary: ServeSummary::from_metrics(&metrics),
                 })
             }
@@ -236,6 +279,7 @@ pub fn run_bench(budget: usize, jobs: usize, seed: u64, out_path: &str) -> Resul
         "requests",
         "wallclock (s)",
         "sim req/s",
+        "trace ovh %",
         "served",
         "dropped",
         "p99 (s)",
@@ -251,6 +295,7 @@ pub fn run_bench(budget: usize, jobs: usize, seed: u64, out_path: &str) -> Resul
             m.requests.to_string(),
             fnum(m.wall_s, 3),
             fnum(m.sim_req_per_s(), 0),
+            fnum(m.trace_overhead_pct(), 1),
             s.served.to_string(),
             s.dropped.to_string(),
             fnum(s.p99, 2),
@@ -263,6 +308,9 @@ pub fn run_bench(budget: usize, jobs: usize, seed: u64, out_path: &str) -> Resul
                 ("requests", Json::num(m.requests as f64)),
                 ("wallclock_s", Json::num(m.wall_s)),
                 ("sim_req_per_s", Json::num(m.sim_req_per_s())),
+                ("trace_wallclock_s", Json::num(m.trace_wall_s)),
+                ("trace_sim_req_per_s", Json::num(m.trace_sim_req_per_s())),
+                ("trace_overhead_pct", Json::num(m.trace_overhead_pct())),
                 ("served", Json::num(s.served as f64)),
                 ("dropped", Json::num(s.dropped as f64)),
                 ("makespan_s", Json::num(s.makespan)),
@@ -340,6 +388,10 @@ mod tests {
         for m in &ms {
             assert!(m.requests >= 1, "{}", m.name);
             assert!(m.wall_s >= 0.0);
+            // the traced leg ran (its bitwise-parity check lives in
+            // run_scenarios — reaching here means it passed)
+            assert!(m.trace_wall_s >= 0.0);
+            assert!(m.trace_overhead_pct().is_finite());
             assert_eq!(
                 m.summary.served + m.summary.dropped as usize,
                 m.requests,

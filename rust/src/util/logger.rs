@@ -1,14 +1,29 @@
 //! Tiny `log` facade backend (env_logger is not in the offline crate
 //! set). Level comes from `DEDGEAI_LOG` (error|warn|info|debug|trace),
 //! default `info`. Timestamps are relative to process start.
+//!
+//! `DEDGEAI_LOG_FORMAT=json` switches every line to a one-object
+//! JSON record — `{"t":…,"level":…,"target":…,"msg":…}` — so engine
+//! WARN/INFO output is machine-parseable alongside `--trace-out`
+//! traces (the `t` here is *wallclock* seconds since process start;
+//! trace records carry virtual time).
 
 use std::sync::OnceLock;
 use std::time::Instant;
 
 use log::{Level, LevelFilter, Metadata, Record};
 
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Format {
+    Text,
+    JsonLines,
+}
+
 struct Logger {
     start: Instant,
+    format: Format,
 }
 
 impl log::Log for Logger {
@@ -28,6 +43,16 @@ impl log::Log for Logger {
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
         };
+        if self.format == Format::JsonLines {
+            let line = Json::from_pairs(vec![
+                ("t", Json::num(t)),
+                ("level", Json::str(lvl.trim_end())),
+                ("target", Json::str(record.target())),
+                ("msg", Json::str(record.args().to_string())),
+            ]);
+            eprintln!("{}", line.render());
+            return;
+        }
         eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
     }
 
@@ -38,7 +63,13 @@ static LOGGER: OnceLock<Logger> = OnceLock::new();
 
 /// Install the logger (idempotent).
 pub fn init() {
-    let logger = LOGGER.get_or_init(|| Logger { start: Instant::now() });
+    let logger = LOGGER.get_or_init(|| {
+        let format = match std::env::var("DEDGEAI_LOG_FORMAT").as_deref() {
+            Ok("json") => Format::JsonLines,
+            _ => Format::Text,
+        };
+        Logger { start: Instant::now(), format }
+    });
     let level = match std::env::var("DEDGEAI_LOG").as_deref() {
         Ok("error") => LevelFilter::Error,
         Ok("warn") => LevelFilter::Warn,
@@ -54,10 +85,41 @@ pub fn init() {
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
-        super::init();
-        super::init();
+        init();
+        init();
         log::info!("logger smoke");
+    }
+
+    #[test]
+    fn json_lines_are_valid_json() {
+        // the same Json shape the JSON branch prints; re-parse to
+        // prove the line is machine-readable, quoting included
+        let line = Json::from_pairs(vec![
+            ("t", Json::num(0.125)),
+            ("level", Json::str("WARN")),
+            ("target", Json::str("dedgeai::test")),
+            ("msg", Json::str("hello \"quoted\" world")),
+        ]);
+        let parsed = Json::parse(&line.render()).unwrap();
+        assert_eq!(parsed.req("level").unwrap().as_str().unwrap(), "WARN");
+        assert_eq!(
+            parsed.req("msg").unwrap().as_str().unwrap(),
+            "hello \"quoted\" world"
+        );
+        // and the log::Log impl accepts a record on the JSON path
+        // (init() reads the env once per process, so the test builds
+        // its own Logger to hit the branch deterministically)
+        let logger = Logger { start: Instant::now(), format: Format::JsonLines };
+        logger.log(
+            &log::Record::builder()
+                .level(Level::Warn)
+                .target("dedgeai::test")
+                .args(format_args!("logger json smoke"))
+                .build(),
+        );
     }
 }

@@ -1,0 +1,7 @@
+//! Fixture: positive — a wall-clock read inside the pinned trace
+//! module. Every trace timestamp must come from the virtual clock.
+
+fn stamp() -> f64 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}

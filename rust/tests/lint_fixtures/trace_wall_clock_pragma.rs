@@ -1,0 +1,10 @@
+//! Fixture: a wall-clock pragma that is legal on ordinary simulated
+//! paths but rejected inside the pinned observability modules —
+//! there the pragma itself becomes a finding and the read still
+//! fires.
+
+fn stamp() -> f64 {
+    // simlint: allow(wall-clock) — waived on unpinned paths only
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}

@@ -89,6 +89,36 @@ fn float_fold_fixtures() {
     assert_clean("float_fold_pragma.rs");
 }
 
+/// ISSUE 8: the observability modules are *pinned* to virtual time —
+/// a `std::time` read inside `coordinator/trace.rs` is a finding, and
+/// unlike ordinary simulated paths a pragma cannot waive it there.
+#[test]
+fn trace_module_is_pinned_to_virtual_time() {
+    let bad = fixture("trace_wall_clock_bad.rs");
+    let f = lint_source("coordinator/trace.rs", &bad);
+    assert_all(&f, "wall-clock", 1, "trace_wall_clock_bad.rs");
+    assert_eq!(f[0].line, 5);
+
+    let pragma = fixture("trace_wall_clock_pragma.rs");
+    // on an unpinned simulated path the pragma waives the read...
+    let f = lint_source("coordinator/router.rs", &pragma);
+    assert!(
+        f.is_empty(),
+        "pragma should hold outside the pin:\n{}",
+        render(&f)
+    );
+    // ...but under the pinned trace module both the read AND the
+    // pragma are findings, on every pinned file
+    for pin in
+        ["coordinator/trace.rs", "coordinator/events.rs", "coordinator/metrics.rs"]
+    {
+        let f = lint_source(pin, &pragma);
+        assert_eq!(f.len(), 2, "{pin}:\n{}", render(&f));
+        assert!(f.iter().any(|x| x.rule == "wall-clock"), "{pin}");
+        assert!(f.iter().any(|x| x.rule == "pragma"), "{pin}");
+    }
+}
+
 #[test]
 fn unknown_pragma_rule_is_flagged() {
     let f = lint_fixture("pragma_unknown.rs");

@@ -1,0 +1,395 @@
+//! Observability guard suite (ISSUE 8): the tracer must be (a)
+//! bitwise invisible — arming it changes no metric across the
+//! (arrival × policy × topology × qos) grid, (b) deterministic —
+//! double runs produce byte-identical traces and the streaming /
+//! eager engines agree byte for byte, (c) accountable — per-request
+//! span durations sum to the recorded time-in-system and discrete
+//! events reconcile exactly with the `ServeMetrics` ledgers, and
+//! (d) loadable — both on-disk formats are valid JSON(L). No AOT
+//! artifacts required.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use dedgeai::analysis;
+use dedgeai::coordinator::arrivals::{ArrivalProcess, ZDist};
+use dedgeai::coordinator::network::NetOptions;
+use dedgeai::coordinator::placement::{self, ModelDist};
+use dedgeai::coordinator::qos::QosMix;
+use dedgeai::coordinator::service::{DEdgeAi, ServeOptions};
+use dedgeai::coordinator::{clock, serve_and_report, TraceFormat, TraceLog};
+use dedgeai::util::json::Json;
+use dedgeai::util::prop;
+
+fn jf(r: &Json, k: &str) -> f64 {
+    r.get(k).and_then(|v| v.as_f64().ok()).unwrap_or(f64::NAN)
+}
+
+fn js<'a>(r: &'a Json, k: &str) -> &'a str {
+    r.get(k).and_then(|v| v.as_str().ok()).unwrap_or("")
+}
+
+fn tmp(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_TARGET_TMPDIR")).join(name)
+}
+
+fn random_arrivals(g: &mut prop::Gen) -> ArrivalProcess {
+    match g.usize(0, 2) {
+        0 => ArrivalProcess::Batch,
+        1 => ArrivalProcess::Poisson { rate: g.f64(0.05, 0.5) },
+        _ => ArrivalProcess::Bursty {
+            rate: g.f64(0.1, 0.4),
+            burst: g.f64(2.0, 6.0),
+            dwell: g.f64(10.0, 60.0),
+        },
+    }
+}
+
+/// One cell of the (arrival × policy × topology × qos) grid, with
+/// placement and admission caps thrown in — the same axes the parity
+/// suites cover, so "tracing changes nothing" is proven on the full
+/// serving surface.
+fn grid_options(g: &mut prop::Gen) -> ServeOptions {
+    let workers = g.usize(2, 6);
+    let qos_mix = match g.usize(0, 2) {
+        0 => None,
+        1 => Some(QosMix::parse("tiered").unwrap()),
+        _ => Some(QosMix::parse("deadline-tight").unwrap()),
+    };
+    let network = match g.usize(0, 2) {
+        0 => None,
+        1 => Some(NetOptions::profile_only("wan", g.usize(2, 5))),
+        _ => Some(NetOptions::profile_only("lan", workers)),
+    };
+    let with_placement = g.usize(0, 1) == 0;
+    let (model_dist, worker_vram) = if with_placement {
+        let mut vram = vec![24.0; workers];
+        vram[workers - 1] = 48.0;
+        (
+            Some(ModelDist::Mix {
+                ids: vec![placement::RESD3M, placement::RESD3_TURBO],
+                weights: vec![0.5, 0.5],
+            }),
+            Some(vram),
+        )
+    } else {
+        (None, None)
+    };
+    let policy = if qos_mix.is_some() && g.usize(0, 1) == 0 {
+        "edf-ll"
+    } else if network.is_some() && g.usize(0, 1) == 0 {
+        "net-ll"
+    } else if with_placement && g.usize(0, 1) == 0 {
+        "cache-ll"
+    } else {
+        *g.choose(&["least-loaded", "round-robin"])
+    };
+    ServeOptions {
+        workers,
+        requests: g.size(10, 120),
+        seed: g.usize(0, 10_000) as u64,
+        scheduler: policy.into(),
+        arrivals: random_arrivals(g),
+        z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+        model_dist,
+        worker_vram,
+        qos_mix,
+        queue_cap: match g.usize(0, 2) {
+            0 => Some(g.usize(3, 30)),
+            _ => None,
+        },
+        network,
+        ..ServeOptions::default()
+    }
+}
+
+fn armed(opts: &ServeOptions) -> ServeOptions {
+    ServeOptions { trace: true, ..opts.clone() }
+}
+
+#[test]
+fn tracing_is_bitwise_invisible_across_the_grid() {
+    // The acceptance pin: with the tracer off nothing changed vs the
+    // PR 7 engine (the untouched parity suites prove that), and with
+    // it *on* every metric — latencies, ledgers, RNG draw counts —
+    // is still bitwise identical. Uses the same comparator as
+    // `verify-determinism`.
+    prop::check("trace off == trace on", 30, |g| {
+        let base = grid_options(g);
+        let plain = DEdgeAi::new(base.clone()).run_events().unwrap();
+        let traced = DEdgeAi::new(armed(&base)).run_events().unwrap();
+        let rep = analysis::compare(&plain, &traced);
+        assert!(rep.passed(), "tracing changed metrics: {:?}", rep.mismatches);
+        assert!(plain.trace().is_none());
+        assert!(traced.trace().is_some());
+        // hash is only reported when BOTH sides carry a trace
+        assert!(rep.trace_hash.is_none());
+    });
+}
+
+#[test]
+fn double_runs_produce_byte_identical_traces() {
+    prop::check("double-run trace bytes", 20, |g| {
+        let opts = armed(&grid_options(g));
+        let a = DEdgeAi::new(opts.clone()).run_events().unwrap();
+        let b = DEdgeAi::new(opts).run_events().unwrap();
+        let (ta, tb) = (a.trace().unwrap(), b.trace().unwrap());
+        assert_eq!(ta.render_jsonl(), tb.render_jsonl(), "jsonl bytes");
+        assert_eq!(ta.render_chrome(), tb.render_chrome(), "chrome bytes");
+        assert_eq!(ta.hash(), tb.hash(), "trace hash");
+        // and the double-run harness reports the shared hash
+        let rep = analysis::compare(&a, &b);
+        assert!(rep.passed(), "{:?}", rep.mismatches);
+        assert_eq!(rep.trace_hash, Some(ta.hash()));
+    });
+}
+
+#[test]
+fn streaming_and_eager_traces_are_byte_identical() {
+    // The PR 4 engine-parity contract extended to the trace channel:
+    // the streaming and eager engines must emit the *same records in
+    // the same order*, not just agree on aggregates.
+    prop::check("streaming trace == eager trace", 25, |g| {
+        let sys = DEdgeAi::new(armed(&grid_options(g)));
+        let streamed = sys.run_events().unwrap();
+        let eager = sys.run_events_eager().unwrap();
+        assert_eq!(
+            streamed.trace().unwrap().render_jsonl(),
+            eager.trace().unwrap().render_jsonl(),
+            "engines disagree on the trace"
+        );
+    });
+}
+
+#[test]
+fn span_durations_sum_to_time_in_system() {
+    // Span accounting: for every completed request the emitted spans
+    // (upload → queue → cold → generate → return) telescope over
+    // [t0, t1], so their durations must sum to the recorded latency
+    // within float-accumulation tolerance (the same decomposition
+    // `decomposition_error()` certifies for the metric ledgers).
+    let workers = 5;
+    let metrics = DEdgeAi::new(ServeOptions {
+        workers,
+        requests: 300,
+        scheduler: "edf-ll".into(),
+        arrivals: ArrivalProcess::Poisson {
+            rate: clock::fleet_capacity_rps(workers, 10.0),
+        },
+        z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+        model_dist: Some(ModelDist::Mix {
+            ids: vec![placement::RESD3M, placement::RESD3_TURBO],
+            weights: vec![0.5, 0.5],
+        }),
+        worker_vram: Some(vec![24.0, 24.0, 24.0, 24.0, 48.0]),
+        qos_mix: Some(QosMix::parse("deadline-tight").unwrap()),
+        network: Some(NetOptions::profile_only("wan", workers)),
+        trace: true,
+        ..ServeOptions::default()
+    })
+    .run_events()
+    .unwrap();
+    let trace = metrics.trace().unwrap();
+    let mut span_sum: BTreeMap<u64, f64> = BTreeMap::new();
+    for r in trace.records() {
+        if js(r, "type") == "span" {
+            *span_sum.entry(jf(r, "id") as u64).or_insert(0.0) +=
+                jf(r, "t1") - jf(r, "t0");
+        }
+    }
+    let tol = 1e-6_f64.max(10.0 * metrics.decomposition_error());
+    let mut checked = 0usize;
+    for r in trace.records() {
+        if js(r, "type") != "req" {
+            continue;
+        }
+        let id = jf(r, "id") as u64;
+        let latency = jf(r, "latency");
+        let sum = span_sum.get(&id).copied().unwrap_or(f64::NAN);
+        let err = (sum - latency).abs();
+        assert!(
+            err <= tol * latency.max(1.0),
+            "request {id}: spans sum to {sum} but latency is {latency}"
+        );
+        checked += 1;
+    }
+    assert_eq!(checked, metrics.count(), "one req record per completion");
+    // the WAN run exercises every span phase
+    for phase in ["upload", "queue", "gen", "return"] {
+        assert!(trace.count_spans(phase) > 0, "no '{phase}' spans");
+    }
+    assert!(trace.count_spans("cold") > 0, "no cold loads under churn");
+}
+
+#[test]
+fn events_reconcile_with_the_metric_ledgers() {
+    // Saturated, capped, deadline-tight: drops, priority evictions,
+    // degradations, and deadline misses all fire, and each event
+    // stream must agree with its `ServeMetrics` counter *exactly*.
+    let workers = 5;
+    let rate = 2.0 * clock::fleet_capacity_rps(workers, 10.0);
+    let base = ServeOptions {
+        workers,
+        requests: 1200,
+        scheduler: "edf-ll".into(),
+        arrivals: ArrivalProcess::Poisson { rate },
+        z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+        qos_mix: Some(QosMix::parse("deadline-tight").unwrap()),
+        network: Some(NetOptions::profile_only("wan", workers)),
+        trace: true,
+        ..ServeOptions::default()
+    };
+    let capped = DEdgeAi::new(ServeOptions {
+        queue_cap: Some(15),
+        ..base.clone()
+    })
+    .run_events()
+    .unwrap();
+    let trace = capped.trace().unwrap();
+    // every record_drop() is either an arrival drop or a bumped victim
+    let (drops, evicts) =
+        (trace.count_events("drop"), trace.count_events("evict"));
+    assert_eq!(
+        drops + evicts,
+        capped.dropped() as usize,
+        "drop+evict events vs the drop ledger"
+    );
+    assert!(capped.dropped() > 0, "no admission pressure at 2x load");
+    assert!(evicts > 0, "priority eviction never fired at 2x load");
+    // deadline-miss events mirror the per-class miss books
+    let misses: u64 = capped.class_stats().values().map(|c| c.misses).sum();
+    assert_eq!(trace.count_events("deadline-miss"), misses as usize);
+    assert_eq!(trace.count_type("req"), capped.count());
+
+    // uncapped run: nothing admitted is lost, so degrade events split
+    // by axis must match the completion-side degradation ledger
+    let uncapped = DEdgeAi::new(base).run_events().unwrap();
+    let trace = uncapped.trace().unwrap();
+    let (mut z_degrades, mut reroutes) = (0u64, 0u64);
+    for r in trace.records() {
+        if js(r, "type") == "event" && js(r, "kind") == "degrade" {
+            if jf(r, "z") < jf(r, "demanded_z") {
+                z_degrades += 1;
+            }
+            if jf(r, "model") != jf(r, "demanded_model") {
+                reroutes += 1;
+            }
+        }
+    }
+    let (degraded, rerouted) = uncapped.degradations();
+    assert!(degraded + rerouted > 0, "degradation never fired at 2x load");
+    assert_eq!(z_degrades, degraded, "z-degrade events vs ledger");
+    assert_eq!(reroutes, rerouted, "reroute events vs ledger");
+}
+
+#[test]
+fn windowed_series_accounts_for_every_completion() {
+    let metrics = DEdgeAi::new(ServeOptions {
+        requests: 200,
+        arrivals: ArrivalProcess::Poisson { rate: 0.3 },
+        z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+        qos_mix: Some(QosMix::parse("tiered").unwrap()),
+        trace: true,
+        ..ServeOptions::default()
+    })
+    .run_events()
+    .unwrap();
+    let trace: &TraceLog = metrics.trace().unwrap();
+    let width = (metrics.makespan() / 8.0).max(1.0);
+    let series = trace.windows(width);
+    assert!(!series.is_empty());
+    assert!(series.windows.len() >= 2, "want multiple windows");
+    let mut served = 0usize;
+    let mut missed = 0usize;
+    for w in &series.windows {
+        served += w.served;
+        missed += w.missed();
+    }
+    assert_eq!(served, metrics.count(), "every completion binned");
+    let ledger: u64 = metrics.class_stats().values().map(|c| c.misses).sum();
+    assert_eq!(missed as u64, ledger, "per-window misses vs the class books");
+    // CSV: one header plus one line per window, fixed column count
+    let csv = series.render_csv();
+    let lines: Vec<&str> = csv.lines().collect();
+    assert_eq!(lines.len(), series.windows.len() + 1);
+    let cols = lines[0].split(',').count();
+    for l in &lines {
+        assert_eq!(l.split(',').count(), cols, "ragged CSV row: {l}");
+    }
+}
+
+#[test]
+fn trace_files_and_report_are_valid_on_disk() {
+    // The `serve` CLI path end to end: sink flags arm the tracer,
+    // files land where pointed, and both formats plus the JSON report
+    // re-parse. (CI runs the same check via a real `serve` smoke.)
+    let jsonl = tmp("serve_trace.jsonl");
+    let chrome = tmp("serve_trace_chrome.json");
+    let report = tmp("serve_trace_report.json");
+    let csv = tmp("serve_trace_windows.csv");
+    let base = ServeOptions {
+        requests: 120,
+        arrivals: ArrivalProcess::Poisson { rate: 0.3 },
+        z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+        qos_mix: Some(QosMix::parse("deadline-tight").unwrap()),
+        network: Some(NetOptions::profile_only("wan", 5)),
+        scheduler: "edf-ll".into(),
+        ..ServeOptions::default()
+    };
+    serve_and_report(&ServeOptions {
+        trace_out: Some(jsonl.to_string_lossy().into_owned()),
+        window: Some(60.0),
+        window_csv: Some(csv.to_string_lossy().into_owned()),
+        report_json: Some(report.to_string_lossy().into_owned()),
+        ..base.clone()
+    })
+    .unwrap();
+    serve_and_report(&ServeOptions {
+        trace_out: Some(chrome.to_string_lossy().into_owned()),
+        trace_format: TraceFormat::Chrome,
+        ..base.clone()
+    })
+    .unwrap();
+
+    // JSONL: every line is one valid object with a known record type
+    let text = std::fs::read_to_string(&jsonl).unwrap();
+    assert!(!text.is_empty());
+    for line in text.lines() {
+        let r = Json::parse(line).unwrap();
+        assert!(
+            ["meta", "span", "event", "req"].contains(&js(&r, "type")),
+            "unknown record type in {line}"
+        );
+    }
+
+    // Chrome: one object, traceEvents array, every element phased
+    let doc = Json::read_file(&chrome).unwrap();
+    let events = doc.req("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    for e in events {
+        assert!(["M", "X", "i"].contains(&js(e, "ph")), "bad phase in {e:?}");
+    }
+    // one metadata track name per worker (pid 1) at minimum
+    let tracks = events
+        .iter()
+        .filter(|e| js(e, "ph") == "M" && js(e, "name") == "thread_name")
+        .count();
+    assert!(tracks >= 5, "expected per-worker tracks, got {tracks}");
+
+    // report: schema header, trace hash echoing the file, windows
+    let rep = Json::read_file(&report).unwrap();
+    assert_eq!(
+        rep.req("schema").unwrap().as_str().unwrap(),
+        "dedgeai-serve-report-v1"
+    );
+    let hash = rep.req("trace_hash").unwrap().as_str().unwrap();
+    assert_eq!(hash.len(), 16, "hash renders as 16 hex chars: {hash}");
+    assert_eq!(
+        u64::from_str_radix(hash, 16).unwrap(),
+        dedgeai::coordinator::trace::fnv1a(text.as_bytes()),
+        "report hash vs the bytes on disk"
+    );
+    assert!(rep.req("windows").unwrap().as_arr().unwrap().len() >= 2);
+    let csv_text = std::fs::read_to_string(&csv).unwrap();
+    assert!(csv_text.starts_with("window,t0,t1,served,req_per_s"));
+}
