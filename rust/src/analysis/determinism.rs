@@ -148,6 +148,21 @@ pub fn compare(a: &ServeMetrics, b: &ServeMetrics) -> DeterminismReport {
             }
         }
     }
+    // fault ledger: armed state, every counter, and per-worker
+    // downtime bitwise (FaultLedger derives PartialEq over all of it)
+    if a.faults_active() != b.faults_active() {
+        mm.push(format!(
+            "faults armed: {} vs {}",
+            a.faults_active(),
+            b.faults_active()
+        ));
+    } else if a.faults() != b.faults() {
+        mm.push(format!(
+            "fault ledger: {:?} vs {:?}",
+            a.faults(),
+            b.faults()
+        ));
+    }
     if a.rng_audit() != b.rng_audit() {
         mm.push(format!(
             "per-stream RNG draws: {:?} vs {:?}",
@@ -235,6 +250,25 @@ mod tests {
         let rep = compare(&a, &b);
         assert!(rep.passed(), "{:?}", rep.mismatches);
         assert!(rep.trace_hash.is_none());
+    }
+
+    #[test]
+    fn faulted_double_run_passes_and_audits_the_fault_stream() {
+        let opts = ServeOptions {
+            requests: 60,
+            arrivals: ArrivalProcess::Poisson { rate: 0.3 },
+            faults: Some("site-down:1@40-120".into()),
+            mtbf: Some(500.0),
+            mttr: Some(30.0),
+            ..Default::default()
+        };
+        let rep = double_run(&opts).unwrap();
+        assert!(rep.passed(), "{:?}", rep.mismatches);
+        assert!(
+            rep.audit.draws("fault").unwrap() > 0,
+            "stochastic mode must draw from the fault stream"
+        );
+        assert!(rep.trace_hash.is_some());
     }
 
     #[test]

@@ -65,10 +65,11 @@ const WALL_CLOCK_ALLOW: [&str; 5] = [
 /// ledgers it feeds. A wall-clock read here would silently poison
 /// every trace timestamp, so the rule is absolute — not even a
 /// pragma can waive it (the pragma itself becomes a finding).
-const WALL_CLOCK_PIN: [&str; 3] = [
+const WALL_CLOCK_PIN: [&str; 4] = [
     "coordinator/trace.rs",
     "coordinator/events.rs",
     "coordinator/metrics.rs",
+    "coordinator/faults.rs",
 ];
 
 /// Simulated paths where unordered-collection iteration would break

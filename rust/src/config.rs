@@ -564,6 +564,81 @@ impl QosSweepConfig {
     }
 }
 
+/// `exp failover-sweep` grid: fault-injected open-loop serving
+/// measured over (arrival rate × dispatch policy × fault plan) on a
+/// wan topology with Zipf-skewed origins, fanned over the parallel
+/// executor. The sweep contrasts how policies absorb a site outage:
+/// served/dropped/retry-exhausted conservation, availability, and
+/// premium-deadline damage.
+#[derive(Clone, Debug)]
+pub struct FailoverSweepConfig {
+    /// Arrival rates in requests/second (`--rates`).
+    pub rates: Vec<f64>,
+    /// Dispatch policies (`--schedulers`): deadline-blind
+    /// `least-loaded` vs transmission-aware `net-ll` vs deadline-aware
+    /// `edf-ll`.
+    pub schedulers: Vec<String>,
+    /// Fault plans (`--fault-plans`, '|'-separated `--faults` specs —
+    /// the specs themselves contain ';'). An empty string is the
+    /// no-fault baseline cell.
+    pub fault_plans: Vec<String>,
+    /// Edge sites (`--sites`); one worker per site, wan profile.
+    pub sites: usize,
+    /// Requests simulated per grid cell (`--serve-requests`).
+    pub requests: usize,
+    /// Arrival-process kind (`--arrivals`): poisson|bursty|diurnal.
+    pub arrivals: String,
+    /// Quality-demand spec (`--z-dist`).
+    pub z_dist: String,
+    /// Re-dispatch attempts per killed job (`--max-retries`).
+    pub max_retries: u32,
+}
+
+impl Default for FailoverSweepConfig {
+    fn default() -> Self {
+        Self {
+            // rho ~ 0.5 / 0.9 at 5 workers: an outage at moderate
+            // load is absorbable, near saturation it must shed
+            rates: vec![0.2, 0.36],
+            schedulers: vec![
+                "least-loaded".into(),
+                "net-ll".into(),
+                "edf-ll".into(),
+            ],
+            fault_plans: vec![
+                // no-fault baseline
+                String::new(),
+                // one mid-run outage at the Zipf-hot site
+                "site-down:0@200-400".into(),
+                // rolling outages plus a degraded backhaul
+                "site-down:0@150-300;site-down:2@250-450;\
+                 link-degrade:1>3@100-500:x8"
+                    .into(),
+            ],
+            sites: 5,
+            requests: 600,
+            arrivals: "poisson".into(),
+            z_dist: "uniform:5,15".into(),
+            max_retries: 3,
+        }
+    }
+}
+
+impl FailoverSweepConfig {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("rates", Json::arr_f64(&self.rates)),
+            ("schedulers", Json::str(self.schedulers.join(","))),
+            ("fault_plans", Json::str(self.fault_plans.join("|"))),
+            ("sites", Json::num(self.sites as f64)),
+            ("requests", Json::num(self.requests as f64)),
+            ("arrivals", Json::str(self.arrivals.clone())),
+            ("z_dist", Json::str(self.z_dist.clone())),
+            ("max_retries", Json::num(self.max_retries as f64)),
+        ])
+    }
+}
+
 /// Experiment-harness settings.
 #[derive(Clone, Debug)]
 pub struct ExpConfig {
@@ -590,6 +665,8 @@ pub struct ExpConfig {
     pub topology: TopologySweepConfig,
     /// Deadline-aware serving sweep grid (`exp qos-sweep`).
     pub qos: QosSweepConfig,
+    /// Fault-injected serving sweep grid (`exp failover-sweep`).
+    pub failover: FailoverSweepConfig,
 }
 
 impl Default for ExpConfig {
@@ -605,6 +682,7 @@ impl Default for ExpConfig {
             placement: PlacementSweepConfig::default(),
             topology: TopologySweepConfig::default(),
             qos: QosSweepConfig::default(),
+            failover: FailoverSweepConfig::default(),
         }
     }
 }
@@ -622,6 +700,7 @@ impl ExpConfig {
             ("placement", self.placement.to_json()),
             ("topology", self.topology.to_json()),
             ("qos", self.qos.to_json()),
+            ("failover", self.failover.to_json()),
         ])
     }
 }
@@ -757,6 +836,24 @@ mod tests {
         assert!(q.sites >= 2 && q.requests > 0);
         assert_eq!(q.arrivals, "poisson");
         assert!(q.to_json().get("mixes").is_some());
+    }
+
+    #[test]
+    fn failover_sweep_defaults_form_a_grid() {
+        let f = FailoverSweepConfig::default();
+        assert!(f.rates.len() >= 2);
+        assert!(f.schedulers.iter().any(|s| s == "edf-ll"));
+        assert!(f.schedulers.iter().any(|s| s == "net-ll"));
+        assert!(f.fault_plans.len() >= 3, "need >=3 fault plans");
+        assert!(
+            f.fault_plans.iter().any(|p| p.is_empty()),
+            "the no-fault baseline cell anchors the comparison"
+        );
+        assert!(f.fault_plans.iter().any(|p| p.contains("site-down")));
+        assert!(f.fault_plans.iter().any(|p| p.contains("link-degrade")));
+        assert!(f.sites >= 2 && f.requests > 0 && f.max_retries > 0);
+        assert_eq!(f.arrivals, "poisson");
+        assert!(f.to_json().get("fault_plans").is_some());
     }
 
     #[test]

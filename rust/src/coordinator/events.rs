@@ -14,12 +14,19 @@ use std::collections::BinaryHeap;
 use super::message::{Request, Response};
 
 /// One serving event on the virtual clock.
+///
+/// `Completion` and `TransferDone` carry a dispatch *epoch*: when
+/// fault injection kills a running job its already-pushed events stay
+/// in the heap, the request's epoch is bumped, and the stale events
+/// are recognised and skipped at pop time. Faults-off every epoch is
+/// 0, so the pre-fault engines are reproduced bitwise.
 #[derive(Clone, Debug)]
 pub enum Event {
     /// A request enters the system and must be dispatched.
     Arrival(Request),
-    /// A worker finished a job; its pending load drains.
-    Completion(Response),
+    /// A worker finished a job; its pending load drains. The second
+    /// field is the dispatch epoch (see the enum doc).
+    Completion(Response, u32),
     /// A cold model load finished on `worker`. The delay was already
     /// charged into the worker's timeline at dispatch; this event
     /// books the cold-load time into the metrics at the virtual
@@ -30,10 +37,39 @@ pub enum Event {
     /// dispatch (upload brackets the front of compute, the image
     /// return the back); this event books the traffic into the
     /// per-link metrics at the virtual timestamp the leg completes.
-    /// Only the network subsystem emits these.
-    TransferDone { from: usize, to: usize, bits: f64, secs: f64 },
+    /// Only the network subsystem emits these. `req`/`epoch` identify
+    /// the dispatch leg so faults can void legs of killed jobs.
+    TransferDone {
+        from: usize,
+        to: usize,
+        bits: f64,
+        secs: f64,
+        req: u64,
+        epoch: u32,
+    },
     /// Slow-timescale re-placement epoch tick (`--replace-every`).
     Replace,
+    /// Fault injection: every worker at `site` goes down — running and
+    /// parked work there is killed and rerouted (`coordinator/faults`).
+    SiteDown { site: usize },
+    /// Fault injection: `site` recovers (its caches restart cold).
+    SiteUp { site: usize },
+    /// Fault injection: transfers on link `from → to` take `factor`×
+    /// their nominal bandwidth time until the matching restore.
+    LinkDegrade { from: usize, to: usize, factor: f64 },
+    /// Fault injection: link `from → to` returns to nominal bandwidth.
+    LinkRestore { from: usize, to: usize },
+    /// Re-dispatch attempt `attempt` (1-based) for a request whose
+    /// previous dispatch was killed by a site failure, scheduled after
+    /// a deterministic exponential backoff. `demanded_z`/
+    /// `demanded_model` preserve the original demand for the response
+    /// ledger across the retry.
+    Retry {
+        req: Request,
+        demanded_z: usize,
+        demanded_model: usize,
+        attempt: u32,
+    },
 }
 
 struct Entry {
@@ -130,10 +166,15 @@ mod tests {
     fn id_of(ev: &Event) -> u64 {
         match ev {
             Event::Arrival(r) => r.id,
-            Event::Completion(r) => r.id,
+            Event::Completion(r, _) => r.id,
+            Event::Retry { req, .. } => req.id,
             Event::ModelLoaded { .. }
             | Event::TransferDone { .. }
-            | Event::Replace => u64::MAX,
+            | Event::Replace
+            | Event::SiteDown { .. }
+            | Event::SiteUp { .. }
+            | Event::LinkDegrade { .. }
+            | Event::LinkRestore { .. } => u64::MAX,
         }
     }
 

@@ -1,0 +1,468 @@
+//! Deterministic fault injection for the serving engines: scripted
+//! site-outage and link-degradation windows plus an optional seeded
+//! stochastic failure/repair process — all driven entirely by the
+//! virtual clock.
+//!
+//! Two ingredients compose:
+//!
+//! - A [`FaultPlan`] parsed from `--faults <spec>` scripts exact
+//!   windows (`site-down:2@120-180;link-degrade:0>1@200-400:x8`). Its
+//!   edge events are materialised up front via
+//!   [`FaultRuntime::initial_events`] and pushed into the event heap
+//!   in plan order, so both engines (streaming and eager) see the
+//!   identical sequence numbers.
+//! - An optional stochastic mode (`--mtbf`/`--mttr`) drives a
+//!   per-site fail/repair renewal process off the seventh seeded
+//!   stream (`FAULT_SALT`). The stream exists only when armed: with
+//!   `--mtbf` unset [`FaultRuntime::draws`] is 0 by construction, and
+//!   the `fault` row never appears in the RNG audit at all unless
+//!   faults are configured — the faults-off ≡ PR 8 bitwise guarantee.
+//!
+//! The runtime tracks per-site down *depth* (overlapping scripted
+//! windows and stochastic chains nest), answers the down-mask queries
+//! the dispatch paths use to exclude dead workers, and owns the
+//! deterministic retry backoff schedule. No wall-clock reads: this
+//! module is `WALL_CLOCK_PIN`ned by simlint alongside
+//! events/metrics/trace.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::Rng;
+
+use super::events::Event;
+
+/// Stream salt for the seeded stochastic failure process (the seventh
+/// audited stream, after arrival/caption/z/model/origin/qos).
+pub const FAULT_SALT: u64 = 0xFA17_0BAD;
+
+/// First-retry backoff; attempt `k` waits `BASE * 2^(k-1)` virtual
+/// seconds, so the schedule is deterministic and draws no randomness.
+pub const RETRY_BACKOFF_BASE_S: f64 = 0.5;
+
+/// Virtual-time backoff before retry attempt `attempt` (1-based).
+pub fn retry_backoff_s(attempt: u32) -> f64 {
+    assert!(attempt >= 1, "retry attempts are 1-based");
+    RETRY_BACKOFF_BASE_S * f64::powi(2.0, attempt as i32 - 1)
+}
+
+/// One scripted fault window on the virtual clock. Intervals are
+/// half-open `[start, end)`: the fault arms exactly at `start` and
+/// clears exactly at `end`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultWindow {
+    /// Every worker pinned to `site` is unavailable over the window;
+    /// running and parked work there is killed and re-dispatched.
+    SiteDown { site: usize, start: f64, end: f64 },
+    /// Transfers on the directed link `from → to` take `factor`× their
+    /// nominal bandwidth time over the window.
+    LinkDegrade {
+        from: usize,
+        to: usize,
+        start: f64,
+        end: f64,
+        factor: f64,
+    },
+}
+
+impl FaultWindow {
+    fn start(&self) -> f64 {
+        match *self {
+            FaultWindow::SiteDown { start, .. }
+            | FaultWindow::LinkDegrade { start, .. } => start,
+        }
+    }
+}
+
+/// A parsed `--faults` script: zero or more windows, kept in spec
+/// order (which fixes event insertion order, hence tie-breaking).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    windows: Vec<FaultWindow>,
+}
+
+fn parse_time(s: &str, clause: &str) -> Result<f64> {
+    let t: f64 = s
+        .trim()
+        .parse()
+        .with_context(|| format!("bad time {s:?} in fault clause {clause:?}"))?;
+    if !t.is_finite() || t < 0.0 {
+        bail!("fault window times must be finite and >= 0 in {clause:?}");
+    }
+    Ok(t)
+}
+
+fn parse_window(s: &str, clause: &str) -> Result<(f64, f64)> {
+    let (a, b) = s.split_once('-').with_context(|| {
+        format!("expected <start>-<end> window in fault clause {clause:?}")
+    })?;
+    let (start, end) = (parse_time(a, clause)?, parse_time(b, clause)?);
+    if end <= start {
+        bail!("fault window must have end > start in {clause:?}");
+    }
+    Ok((start, end))
+}
+
+fn parse_index(s: &str, what: &str, clause: &str) -> Result<usize> {
+    s.trim()
+        .parse()
+        .with_context(|| format!("bad {what} index {s:?} in fault clause {clause:?}"))
+}
+
+impl FaultPlan {
+    /// Parse a `;`-separated fault script. Grammar:
+    ///
+    /// ```text
+    /// spec   := clause (';' clause)*
+    /// clause := 'site-down:' site '@' start '-' end
+    ///         | 'link-degrade:' from '>' to '@' start '-' end ':x' factor
+    /// ```
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut windows = Vec::new();
+        for clause in spec.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                bail!("empty clause in fault spec {spec:?}");
+            }
+            let (kind, rest) = clause.split_once(':').with_context(|| {
+                format!("expected <kind>:<args> in fault clause {clause:?}")
+            })?;
+            match kind.trim() {
+                "site-down" => {
+                    let (site, win) = rest.split_once('@').with_context(|| {
+                        format!("expected <site>@<window> in fault clause {clause:?}")
+                    })?;
+                    let site = parse_index(site, "site", clause)?;
+                    let (start, end) = parse_window(win, clause)?;
+                    windows.push(FaultWindow::SiteDown { site, start, end });
+                }
+                "link-degrade" => {
+                    let (pair, tail) = rest.split_once('@').with_context(|| {
+                        format!("expected <from>><to>@... in fault clause {clause:?}")
+                    })?;
+                    let (from, to) = pair.split_once('>').with_context(|| {
+                        format!("expected <from>><to> in fault clause {clause:?}")
+                    })?;
+                    let from = parse_index(from, "from-site", clause)?;
+                    let to = parse_index(to, "to-site", clause)?;
+                    let (win, factor) = tail.split_once(":x").with_context(|| {
+                        format!("expected <window>:x<factor> in fault clause {clause:?}")
+                    })?;
+                    let (start, end) = parse_window(win, clause)?;
+                    let factor: f64 = factor.trim().parse().with_context(|| {
+                        format!("bad factor {factor:?} in fault clause {clause:?}")
+                    })?;
+                    if !factor.is_finite() || factor < 1.0 {
+                        bail!("link-degrade factor must be finite and >= 1 in {clause:?}");
+                    }
+                    windows.push(FaultWindow::LinkDegrade { from, to, start, end, factor });
+                }
+                other => bail!(
+                    "unknown fault kind {other:?} in clause {clause:?} \
+                     (expected site-down or link-degrade)"
+                ),
+            }
+        }
+        Ok(Self { windows })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+
+    pub fn windows(&self) -> &[FaultWindow] {
+        &self.windows
+    }
+
+    /// Check every site index against the fleet the engine actually
+    /// built (with no network subsystem each worker is its own site).
+    pub fn validate(&self, sites: usize) -> Result<()> {
+        for w in &self.windows {
+            let (site_refs, clause): (Vec<usize>, &str) = match *w {
+                FaultWindow::SiteDown { site, .. } => (vec![site], "site-down"),
+                FaultWindow::LinkDegrade { from, to, .. } => {
+                    (vec![from, to], "link-degrade")
+                }
+            };
+            for s in site_refs {
+                if s >= sites {
+                    bail!(
+                        "{clause} fault names site {s} but the run has only \
+                         {sites} site(s)"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-site fault state machine shared by both serving engines. The
+/// engines own the event heap; this runtime owns which sites are down,
+/// the stochastic renewal chains, and the RNG stream — so streaming
+/// and eager consume bit-identical draw sequences.
+#[derive(Clone, Debug)]
+pub struct FaultRuntime {
+    /// Nesting depth of down windows per site (scripted windows may
+    /// overlap each other and the stochastic chain).
+    down_depth: Vec<u32>,
+    /// Seeded stream for the stochastic process; `None` (scripted-only
+    /// or faults-off) guarantees zero draws.
+    rng: Option<Rng>,
+    mtbf: f64,
+    mttr: f64,
+    /// Next pending stochastic transition per site: `(time, is_down)`.
+    /// Used to tell a popped stochastic edge apart from a scripted one
+    /// at the same site (exact virtual-time match).
+    next_stoch: Vec<Option<(f64, bool)>>,
+}
+
+fn exp_sample(rng: &mut Rng, mean: f64) -> f64 {
+    // Inverse-CDF with u in (0, 1]: two base draws per sample.
+    -mean * (1.0 - rng.f64()).ln()
+}
+
+impl FaultRuntime {
+    /// `stochastic` arms the MTBF/MTTR renewal process (means in
+    /// virtual seconds, both > 0); `None` keeps the RNG stream
+    /// entirely unseeded and undrawn.
+    pub fn new(sites: usize, seed: u64, stochastic: Option<(f64, f64)>) -> Result<Self> {
+        let (rng, mtbf, mttr) = match stochastic {
+            Some((mtbf, mttr)) => {
+                if !(mtbf > 0.0 && mtbf.is_finite() && mttr > 0.0 && mttr.is_finite()) {
+                    bail!("--mtbf/--mttr must be finite and > 0 (got {mtbf}, {mttr})");
+                }
+                (Some(Rng::new(seed ^ FAULT_SALT)), mtbf, mttr)
+            }
+            None => (None, 0.0, 0.0),
+        };
+        Ok(Self {
+            down_depth: vec![0; sites],
+            rng,
+            mtbf,
+            mttr,
+            next_stoch: vec![None; sites],
+        })
+    }
+
+    pub fn sites(&self) -> usize {
+        self.down_depth.len()
+    }
+
+    /// Base draws consumed by the stochastic stream (0 when unarmed —
+    /// the zero-draw guarantee the RNG audit certifies).
+    pub fn draws(&self) -> u64 {
+        self.rng.as_ref().map_or(0, Rng::draws)
+    }
+
+    pub fn is_down(&self, site: usize) -> bool {
+        self.down_depth[site] > 0
+    }
+
+    pub fn any_down(&self) -> bool {
+        self.down_depth.iter().any(|&d| d > 0)
+    }
+
+    /// All fault events known at t=0, in deterministic order: scripted
+    /// window edges in plan order (down edge before up edge per
+    /// window), then the first stochastic failure per site in site
+    /// order. Both engines push these immediately after the initial
+    /// `Replace` tick so sequence numbers line up exactly.
+    pub fn initial_events(&mut self, plan: &FaultPlan) -> Vec<(f64, Event)> {
+        let mut out = Vec::new();
+        for w in plan.windows() {
+            match *w {
+                FaultWindow::SiteDown { site, start, end } => {
+                    out.push((start, Event::SiteDown { site }));
+                    out.push((end, Event::SiteUp { site }));
+                }
+                FaultWindow::LinkDegrade { from, to, start, end, factor } => {
+                    out.push((start, Event::LinkDegrade { from, to, factor }));
+                    out.push((end, Event::LinkRestore { from, to }));
+                }
+            }
+        }
+        if let Some(rng) = self.rng.as_mut() {
+            for site in 0..self.next_stoch.len() {
+                let t = exp_sample(rng, self.mtbf);
+                self.next_stoch[site] = Some((t, true));
+                out.push((t, Event::SiteDown { site }));
+            }
+        }
+        out
+    }
+
+    /// Handle a popped `SiteDown`. Returns `(became_down, followup)`:
+    /// `became_down` is true when the site transitioned up → down
+    /// (depth 0 → 1), and `followup` is the repair event to push when
+    /// this edge belongs to the stochastic chain.
+    pub fn note_site_down(
+        &mut self,
+        site: usize,
+        now: f64,
+    ) -> (bool, Option<(f64, Event)>) {
+        self.down_depth[site] += 1;
+        let became_down = self.down_depth[site] == 1;
+        let mut followup = None;
+        if self.next_stoch[site] == Some((now, true)) {
+            let rng = self.rng.as_mut().expect("stochastic edge without rng");
+            let up_at = now + exp_sample(rng, self.mttr);
+            self.next_stoch[site] = Some((up_at, false));
+            followup = Some((up_at, Event::SiteUp { site }));
+        }
+        (became_down, followup)
+    }
+
+    /// Handle a popped `SiteUp`. Returns `(became_up, followup)`:
+    /// `became_up` is true when the site transitioned down → up (depth
+    /// 1 → 0), and `followup` is the next stochastic failure — armed
+    /// only while `work_remains`, so a drained run terminates instead
+    /// of failing forever.
+    pub fn note_site_up(
+        &mut self,
+        site: usize,
+        now: f64,
+        work_remains: bool,
+    ) -> (bool, Option<(f64, Event)>) {
+        self.down_depth[site] = self.down_depth[site].saturating_sub(1);
+        let became_up = self.down_depth[site] == 0;
+        let mut followup = None;
+        if self.next_stoch[site] == Some((now, false)) {
+            if work_remains {
+                let rng = self.rng.as_mut().expect("stochastic edge without rng");
+                let down_at = now + exp_sample(rng, self.mtbf);
+                self.next_stoch[site] = Some((down_at, true));
+                followup = Some((down_at, Event::SiteDown { site }));
+            } else {
+                self.next_stoch[site] = None;
+            }
+        }
+        (became_up, followup)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_issue_example_spec() {
+        let plan =
+            FaultPlan::parse("site-down:2@120-180;link-degrade:0>1@200-400:x8").unwrap();
+        assert_eq!(
+            plan.windows(),
+            &[
+                FaultWindow::SiteDown { site: 2, start: 120.0, end: 180.0 },
+                FaultWindow::LinkDegrade {
+                    from: 0,
+                    to: 1,
+                    start: 200.0,
+                    end: 400.0,
+                    factor: 8.0
+                },
+            ]
+        );
+        assert!(plan.validate(3).is_ok());
+        assert!(plan.validate(2).is_err(), "site 2 needs 3 sites");
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "",
+            ";",
+            "site-down",
+            "site-down:2",
+            "site-down:x@1-2",
+            "site-down:2@180-120",      // end <= start
+            "site-down:2@120-120",      // zero-width
+            "site-down:2@-5-120",       // negative start
+            "link-degrade:0>1@200-400", // missing factor
+            "link-degrade:0>1@200-400:x0.5", // factor < 1
+            "link-degrade:01@200-400:x2",    // missing '>'
+            "node-down:2@120-180",      // unknown kind
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn scripted_only_runtime_draws_nothing() {
+        let plan = FaultPlan::parse("site-down:0@10-20").unwrap();
+        let mut rt = FaultRuntime::new(2, 42, None).unwrap();
+        let evs = rt.initial_events(&plan);
+        assert_eq!(evs.len(), 2);
+        assert_eq!(rt.draws(), 0);
+        let (down, follow) = rt.note_site_down(0, 10.0);
+        assert!(down && follow.is_none());
+        assert!(rt.is_down(0) && !rt.is_down(1) && rt.any_down());
+        let (up, follow) = rt.note_site_up(0, 20.0, true);
+        assert!(up && follow.is_none());
+        assert!(!rt.any_down());
+        assert_eq!(rt.draws(), 0, "scripted faults must not touch the rng");
+    }
+
+    #[test]
+    fn overlapping_windows_nest_by_depth() {
+        let mut rt = FaultRuntime::new(1, 0, None).unwrap();
+        let (d1, _) = rt.note_site_down(0, 5.0);
+        let (d2, _) = rt.note_site_down(0, 6.0);
+        assert!(d1 && !d2, "only the first edge transitions");
+        let (u1, _) = rt.note_site_up(0, 7.0, true);
+        assert!(!u1 && rt.is_down(0), "still inside the outer window");
+        let (u2, _) = rt.note_site_up(0, 8.0, true);
+        assert!(u2 && !rt.is_down(0));
+    }
+
+    #[test]
+    fn stochastic_chain_is_seed_deterministic_and_terminates() {
+        let run = |seed: u64| -> (Vec<u64>, u64) {
+            let mut rt = FaultRuntime::new(2, seed, Some((100.0, 10.0))).unwrap();
+            let evs = rt.initial_events(&FaultPlan::default());
+            assert_eq!(evs.len(), 2, "one first failure per site");
+            let mut times: Vec<u64> = Vec::new();
+            // walk site 0's chain: down -> up -> down -> up (drained)
+            let mut t = match evs[0] {
+                (t, Event::SiteDown { site: 0 }) => t,
+                ref other => panic!("unexpected first event {other:?}"),
+            };
+            times.push(t.to_bits());
+            let (_, follow) = rt.note_site_down(0, t);
+            let (up_t, _) = follow.expect("stochastic down schedules repair");
+            times.push(up_t.to_bits());
+            let (_, follow) = rt.note_site_up(0, up_t, true);
+            let (down_t, _) = follow.expect("work remains -> re-armed");
+            times.push(down_t.to_bits());
+            t = down_t;
+            let (_, follow) = rt.note_site_down(0, t);
+            let (up_t, _) = follow.unwrap();
+            let (_, follow) = rt.note_site_up(0, up_t, false);
+            assert!(follow.is_none(), "no work left -> chain must stop");
+            (times, rt.draws())
+        };
+        let (a, draws_a) = run(42);
+        let (b, draws_b) = run(42);
+        assert_eq!(a, b, "same seed must give bit-identical fault times");
+        assert_eq!(draws_a, draws_b);
+        assert!(draws_a > 0);
+        let (c, _) = run(43);
+        assert_ne!(a, c, "different seeds must diverge");
+    }
+
+    #[test]
+    fn mtbf_mttr_must_be_positive_and_finite() {
+        for bad in [(0.0, 1.0), (1.0, 0.0), (-1.0, 1.0), (f64::NAN, 1.0)] {
+            assert!(FaultRuntime::new(1, 0, Some(bad)).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn retry_backoff_doubles_per_attempt() {
+        let b1 = retry_backoff_s(1);
+        let b2 = retry_backoff_s(2);
+        let b3 = retry_backoff_s(3);
+        assert_eq!(b1, RETRY_BACKOFF_BASE_S);
+        assert_eq!(b2, 2.0 * b1);
+        assert_eq!(b3, 2.0 * b2);
+        assert!(b1 < b2 && b2 < b3, "backoff must grow monotonically");
+    }
+}

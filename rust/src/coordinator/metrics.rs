@@ -71,6 +71,40 @@ impl ClassStat {
     }
 }
 
+/// Fault-injection ledger (fault runs only): what the failure plan
+/// cost and how the serving path absorbed it. The conservation
+/// invariant the fault suite asserts reads from here:
+/// `served + dropped + exhausted_retries == arrivals`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultLedger {
+    /// Running or parked jobs killed by a site failure.
+    pub kills: u64,
+    /// Re-dispatch attempts actually made for killed jobs.
+    pub retries: u64,
+    /// Killed-at-least-once requests that were eventually served
+    /// (lost-then-recovered work).
+    pub recovered: u64,
+    /// Killed requests abandoned after the retry budget ran out.
+    pub exhausted_retries: u64,
+    /// `SiteDown` edges that took a site from up to down.
+    pub site_down_events: u64,
+    /// `SiteUp` edges that brought a site back.
+    pub site_up_events: u64,
+    /// Link degrade/restore edges applied to the network overlay.
+    pub link_events: u64,
+    /// Virtual seconds each worker spent down.
+    pub downtime_s: Vec<f64>,
+    /// Virtual time of the last site recovery (`None`: no recovery
+    /// happened — an `Option` so bitwise compares never meet a NaN).
+    pub last_recovery_t: Option<f64>,
+}
+
+impl FaultLedger {
+    fn new(workers: usize) -> Self {
+        Self { downtime_s: vec![0.0; workers], ..Self::default() }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct ServeMetrics {
     latencies: Vec<f64>,
@@ -96,6 +130,12 @@ pub struct ServeMetrics {
     classes: BTreeMap<usize, ClassStat>,
     /// Whether this run carries QoS semantics (a `--qos-mix` was set).
     qos_active: bool,
+    /// Fault-injection ledger (populated only when a fault run arms it
+    /// via [`set_faults_active`](Self::set_faults_active); all-zero
+    /// otherwise so the pre-fault metrics surface is untouched).
+    faults: FaultLedger,
+    /// Whether this run carries fault-injection semantics.
+    faults_active: bool,
     per_worker: Vec<u64>,
     /// Seconds each worker spent generating (for utilization).
     busy: Vec<f64>,
@@ -137,6 +177,8 @@ impl ServeMetrics {
             links: BTreeMap::new(),
             classes: BTreeMap::new(),
             qos_active: false,
+            faults: FaultLedger::new(workers),
+            faults_active: false,
             per_worker: vec![0; workers],
             busy: vec![0.0; workers],
             first_submit: f64::INFINITY,
@@ -259,6 +301,125 @@ impl ServeMetrics {
             rerouted += cs.rerouted;
         }
         (degraded, rerouted)
+    }
+
+    /// Arm the fault ledger: fault-injection runs call this once
+    /// before serving. Left unarmed, every `record_fault_*` call is a
+    /// no-op so faults-off metrics stay structurally identical to the
+    /// pre-fault engine.
+    pub fn set_faults_active(&mut self) {
+        self.faults_active = true;
+    }
+
+    /// Whether the fault ledger is armed.
+    pub fn faults_active(&self) -> bool {
+        self.faults_active
+    }
+
+    /// The fault-injection ledger (all-zero unless a fault run armed
+    /// it).
+    pub fn faults(&self) -> &FaultLedger {
+        &self.faults
+    }
+
+    /// Book one killed job (running or parked on a failed site).
+    pub fn record_kill(&mut self) {
+        if self.faults_active {
+            self.faults.kills += 1;
+        }
+    }
+
+    /// Book one re-dispatch attempt for a killed request.
+    pub fn record_retry(&mut self) {
+        if self.faults_active {
+            self.faults.retries += 1;
+        }
+    }
+
+    /// Book one killed-then-served request (recovered work).
+    pub fn record_recovered(&mut self) {
+        if self.faults_active {
+            self.faults.recovered += 1;
+        }
+    }
+
+    /// Book one request abandoned after its retry budget ran out.
+    pub fn record_retry_exhausted(&mut self) {
+        if self.faults_active {
+            self.faults.exhausted_retries += 1;
+        }
+    }
+
+    /// Book one up→down site edge.
+    pub fn record_site_down(&mut self) {
+        if self.faults_active {
+            self.faults.site_down_events += 1;
+        }
+    }
+
+    /// Book one down→up site edge at virtual time `t` (also the
+    /// reference point for [`drain_after_recovery_s`]
+    /// (Self::drain_after_recovery_s)).
+    pub fn record_site_up(&mut self, t: f64) {
+        if self.faults_active {
+            self.faults.site_up_events += 1;
+            self.faults.last_recovery_t = Some(t);
+        }
+    }
+
+    /// Book one link degrade or restore edge.
+    pub fn record_link_event(&mut self) {
+        if self.faults_active {
+            self.faults.link_events += 1;
+        }
+    }
+
+    /// Book `secs` of downtime against `worker` (called at the
+    /// worker's recovery, or at drain for a site still down).
+    pub fn record_downtime(&mut self, worker: usize, secs: f64) {
+        if self.faults_active {
+            if let Some(d) = self.faults.downtime_s.get_mut(worker) {
+                *d += secs;
+            }
+        }
+    }
+
+    /// Per-worker availability over the makespan: `1 − downtime /
+    /// makespan`, clamped to `[0, 1]`; a fleet with no makespan (or an
+    /// unarmed ledger) reads fully available.
+    pub fn availability(&self) -> Vec<f64> {
+        let m = self.makespan();
+        self.faults
+            .downtime_s
+            .iter()
+            .map(|&d| {
+                if m > 0.0 {
+                    (1.0 - d / m).clamp(0.0, 1.0)
+                } else {
+                    1.0
+                }
+            })
+            .collect()
+    }
+
+    /// Mean per-worker availability (1.0 when faults never armed).
+    pub fn mean_availability(&self) -> f64 {
+        let a = self.availability();
+        if a.is_empty() {
+            1.0
+        } else {
+            crate::util::stats::mean(&a)
+        }
+    }
+
+    /// Virtual seconds between the last site recovery and the last
+    /// completion — how long the backlog took to drain after the
+    /// final failure cleared. Zero when no recovery happened.
+    pub fn drain_after_recovery_s(&self) -> f64 {
+        match self.faults.last_recovery_t {
+            Some(t) => (self.last_complete - t).max(0.0),
+            None => 0.0,
+        }
     }
 
     /// Record one dispatch's model-cache outcome: a warm hit or a cold
@@ -759,6 +920,58 @@ mod tests {
         assert_eq!(standard.rerouted, 1);
         assert!((m.deadline_miss_rate() - 1.0 / 3.0).abs() < 1e-12);
         assert_eq!(m.degradations(), (1, 1));
+    }
+
+    #[test]
+    fn fault_ledger_stays_zero_until_armed_then_books_everything() {
+        // unarmed: every fault hook is a no-op (the faults-off
+        // structural-parity guarantee)
+        let mut m = ServeMetrics::new(2);
+        assert!(!m.faults_active());
+        m.record_kill();
+        m.record_retry();
+        m.record_recovered();
+        m.record_retry_exhausted();
+        m.record_site_down();
+        m.record_site_up(5.0);
+        m.record_link_event();
+        m.record_downtime(0, 3.0);
+        assert_eq!(m.faults(), &FaultLedger::new(2));
+        assert_eq!(m.availability(), vec![1.0, 1.0]);
+        assert_eq!(m.drain_after_recovery_s(), 0.0);
+        // armed: the ledger books each hook
+        let mut m = ServeMetrics::new(2);
+        m.set_faults_active();
+        m.record_site_down();
+        m.record_kill();
+        m.record_kill();
+        m.record_retry();
+        m.record_retry_exhausted();
+        m.record_site_up(6.0);
+        m.record_recovered();
+        m.record_link_event();
+        m.record_downtime(1, 5.0);
+        m.record_downtime(99, 1.0); // out of range: ignored, not a panic
+        let f = m.faults();
+        assert_eq!(
+            (f.kills, f.retries, f.recovered, f.exhausted_retries),
+            (2, 1, 1, 1)
+        );
+        assert_eq!(
+            (f.site_down_events, f.site_up_events, f.link_events),
+            (1, 1, 1)
+        );
+        assert_eq!(f.downtime_s, vec![0.0, 5.0]);
+        assert_eq!(f.last_recovery_t, Some(6.0));
+        // availability over a 10 s makespan: worker 1 was down half
+        m.record(&resp(0, 0, 2.0), 2.0); // submitted at 0
+        m.record(&resp(1, 0, 2.0), 10.0); // submitted at 8
+        let a = m.availability();
+        assert!((a[0] - 1.0).abs() < 1e-12);
+        assert!((a[1] - 0.5).abs() < 1e-12, "a={a:?}");
+        assert!((m.mean_availability() - 0.75).abs() < 1e-12);
+        // last completion at t=10, last recovery at t=6
+        assert!((m.drain_after_recovery_s() - 4.0).abs() < 1e-12);
     }
 
     #[test]

@@ -38,6 +38,10 @@
 //!   (`--qos-mix`), driving earliest-deadline-first dispatch,
 //!   priority-aware admission, and deadline-pressed quality
 //!   degradation (serve z=15 as z=8 or swap to the distilled turbo);
+//! - [`faults`]: deterministic fault injection — scripted/stochastic
+//!   site failures and link degradation on the virtual clock, with
+//!   kill/retry/re-dispatch semantics on the serving path (see
+//!   `docs/faults.md`);
 //! - [`trace`]: deterministic observability — per-request virtual-time
 //!   spans and discrete events behind `--trace-out`, windowed
 //!   time-series (`--window`), byte-identical across double runs and
@@ -59,6 +63,7 @@ pub mod arrivals;
 pub mod clock;
 pub mod corpus;
 pub mod events;
+pub mod faults;
 pub mod message;
 pub mod metrics;
 pub mod models;
@@ -75,8 +80,9 @@ pub mod worker;
 pub use arrivals::{ArrivalProcess, ZDist};
 pub use corpus::PromptDesc;
 pub use events::{Event, EventQueue};
+pub use faults::{FaultPlan, FaultRuntime};
 pub use message::{Request, Response};
-pub use source::RequestSource;
+pub use source::{OriginDist, RequestSource};
 pub use metrics::ServeMetrics;
 pub use network::{NetOptions, Network, Topology};
 pub use placement::{Catalog, ModelDist, Placement};

@@ -286,6 +286,12 @@ pub struct Network {
     topo: Topology,
     /// `site_of[w]` = the edge site worker `w` is pinned to.
     site_of: Vec<usize>,
+    /// Fault-injection slowdown per directed site pair (row-major,
+    /// 1.0 = nominal). Only `Event::LinkDegrade`/`LinkRestore` touch
+    /// it; while every entry is 1.0 the transfer arithmetic takes the
+    /// literal pre-fault code path, keeping faults-off runs bitwise
+    /// identical.
+    degrade: Vec<f64>,
 }
 
 impl Network {
@@ -300,7 +306,8 @@ impl Network {
                 topo.sites()
             );
         }
-        Ok(Self { topo, site_of })
+        let degrade = vec![1.0; topo.sites() * topo.sites()];
+        Ok(Self { topo, site_of, degrade })
     }
 
     pub fn sites(&self) -> usize {
@@ -326,16 +333,43 @@ impl Network {
         clock::image_bits(req.z)
     }
 
+    /// One transfer leg under the current degradation overlay. A
+    /// degraded link stretches the *bandwidth* term by the factor
+    /// (propagation delay is unaffected); a nominal link evaluates the
+    /// exact pre-fault expression so the bits match PR 5.
+    fn leg_seconds(&self, from: usize, to: usize, bits: f64) -> f64 {
+        let f = self.degrade[from * self.topo.sites() + to];
+        if f == 1.0 {
+            self.topo.transfer_seconds(from, to, bits)
+        } else {
+            self.topo.rtt_s(from, to) + bits * f / self.topo.bw_bps(from, to)
+        }
+    }
+
+    /// Arm a fault-injection slowdown on directed link (from, to).
+    /// Overlapping windows on the same link are last-edge-wins.
+    pub fn set_degrade(&mut self, from: usize, to: usize, factor: f64) {
+        self.degrade[from * self.topo.sites() + to] = factor;
+    }
+
+    /// Restore directed link (from, to) to nominal bandwidth.
+    pub fn clear_degrade(&mut self, from: usize, to: usize) {
+        self.degrade[from * self.topo.sites() + to] = 1.0;
+    }
+
+    /// Current slowdown factor on directed link (from, to).
+    pub fn degrade_factor(&self, from: usize, to: usize) -> f64 {
+        self.degrade[from * self.topo.sites() + to]
+    }
+
     /// Prompt-upload time: origin site → worker `w`'s site.
     pub fn up_seconds(&self, req: &Request, w: usize) -> f64 {
-        self.topo
-            .transfer_seconds(req.origin, self.site_of[w], Self::up_bits(req))
+        self.leg_seconds(req.origin, self.site_of[w], Self::up_bits(req))
     }
 
     /// Image-return time: worker `w`'s site → origin site.
     pub fn down_seconds(&self, req: &Request, w: usize) -> f64 {
-        self.topo
-            .transfer_seconds(self.site_of[w], req.origin, Self::down_bits(req))
+        self.leg_seconds(self.site_of[w], req.origin, Self::down_bits(req))
     }
 
     /// Expected transfer cost of serving `req` on worker `w` (upload +
@@ -450,6 +484,27 @@ mod tests {
         assert!(opts.build(5).is_err(), "length mismatch");
         opts.site_of = Some(vec![0, 1, 1, 0, 7]);
         assert!(opts.build(5).is_err(), "site out of range");
+    }
+
+    #[test]
+    fn degrade_overlay_stretches_only_the_bandwidth_term() {
+        let mut net = NetOptions::profile_only("wan", 3).build(3).unwrap();
+        let r = req(1, 15);
+        let nominal = net.up_seconds(&r, 2); // site 1 -> site 2 upload
+        net.set_degrade(1, 2, 8.0);
+        assert_eq!(net.degrade_factor(1, 2), 8.0);
+        let degraded = net.up_seconds(&r, 2);
+        let expect = WAN_RTT_S + Network::up_bits(&r) * 8.0 / WAN_BW_BPS;
+        assert_eq!(degraded.to_bits(), expect.to_bits());
+        assert!(degraded > nominal);
+        // the reverse direction and other links are untouched
+        assert_eq!(net.down_seconds(&r, 2).to_bits(), {
+            let back = NetOptions::profile_only("wan", 3).build(3).unwrap();
+            back.down_seconds(&r, 2).to_bits()
+        });
+        // restore is bitwise: the nominal path is the literal old code
+        net.clear_degrade(1, 2);
+        assert_eq!(net.up_seconds(&r, 2).to_bits(), nominal.to_bits());
     }
 
     #[test]

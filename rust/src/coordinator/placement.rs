@@ -609,6 +609,17 @@ impl Placement {
         }
     }
 
+    /// Fault injection: drop every resident model on worker `w` (a
+    /// site failure wipes VRAM, so recovery restarts cold). Pins are
+    /// kept — they are the slow timescale's *target*, which a crash
+    /// does not change — so the next dispatch or re-placement epoch
+    /// reloads them at full cold-load cost.
+    pub fn flush_worker(&mut self, w: usize) {
+        if let Some(cache) = self.caches.get_mut(w) {
+            cache.loaded.clear();
+        }
+    }
+
     /// Slow-timescale re-placement: recompute pin sets from the demand
     /// observed since the last epoch (falling back to the prior before
     /// any observation), load newly pinned variants (evicting LRU
@@ -828,6 +839,20 @@ mod tests {
         // with no fresh observations the next epoch falls back to the
         // prior, whose pin (resd3-m) is still resident — nothing loads
         assert!(p.rebalance().is_empty());
+    }
+
+    #[test]
+    fn flush_worker_clears_residents_but_keeps_pins() {
+        let mut p = placement(&[64.0], &[1.0, 0.0, 0.0]);
+        p.prewarm();
+        assert!(p.is_warm(0, RESD3M));
+        p.flush_worker(0);
+        assert!(!p.is_warm(0, RESD3M), "crash must wipe VRAM");
+        assert_eq!(p.pinned(0), &[RESD3M], "the slow-timescale target stays");
+        // recovery restarts cold: the next ensure pays the full load
+        let charge = p.ensure(0, RESD3M).unwrap();
+        assert!(charge.delay_s > 0.0);
+        p.flush_worker(99); // out-of-range is a no-op, not a panic
     }
 
     #[test]

@@ -277,13 +277,19 @@ impl LadPolicy {
     /// The π the actor emits is feasibility-masked (and renormalised)
     /// before the categorical draw, so an infeasible worker can never
     /// be picked.
+    /// `down` is the fault-injection availability mask (`true` = the
+    /// worker's site is down); `None` — the faults-off default — keeps
+    /// every code path and draw bit-identical to the pre-fault policy.
+    /// Returns `Ok(None)` only under an active mask with no feasible
+    /// worker left (the engine then drops the request gracefully).
     fn pick(
         &mut self,
         req: &Request,
         pending_steps: &[f64],
         placement: Option<&Placement>,
         network: Option<&Network>,
-    ) -> Result<usize> {
+        down: Option<&[bool]>,
+    ) -> Result<Option<usize>> {
         let s_dim =
             self.workers + 2 + if self.qos_features { 2 } else { 0 };
         let mut s = Mat::zeros(1, s_dim);
@@ -321,18 +327,23 @@ impl LadPolicy {
         let (x0, pi) = self.forward(x, &s)?;
         self.mem.update(0, slot, x0.row(0));
         let probs = pi.row(0);
-        match placement {
-            // no placement: every worker is feasible — draw from π
-            // untouched (bit-identical to the pre-mask policy)
-            None => Ok(self.rng.categorical(probs)),
-            Some(pl) => {
-                // mask infeasible workers *before* the draw (the PR 3
-                // follow-up: an infeasible worker could be sampled),
-                // renormalising π over the feasible fleet
+        match (placement, down) {
+            // no placement, no down-mask: every worker is feasible —
+            // draw from π untouched (bit-identical to the pre-mask,
+            // pre-fault policy)
+            (None, None) => Ok(Some(self.rng.categorical(probs))),
+            (pl, _) => {
+                // mask infeasible (VRAM) and down (fault) workers
+                // *before* the draw, renormalising π over whoever is
+                // left — the same discipline as the PR 3 VRAM mask
+                let ok = |w: usize| {
+                    pl.map_or(true, |p| p.fits(w, req.model))
+                        && down.map_or(true, |d| !d[w])
+                };
                 let mut masked: Vec<f32> = probs
                     .iter()
                     .enumerate()
-                    .map(|(w, &v)| if pl.fits(w, req.model) { v } else { 0.0 })
+                    .map(|(w, &v)| if ok(w) { v } else { 0.0 })
                     .collect();
                 let total: f32 = masked.iter().sum();
                 if total > 0.0 {
@@ -341,17 +352,20 @@ impl LadPolicy {
                     }
                 } else {
                     // degenerate π: uniform over the feasible fleet
-                    let feas: Vec<usize> = (0..self.workers)
-                        .filter(|&w| pl.fits(w, req.model))
-                        .collect();
+                    let feas: Vec<usize> =
+                        (0..self.workers).filter(|&w| ok(w)).collect();
                     if feas.is_empty() {
+                        if down.is_some() {
+                            // every candidate is down: degrade to a drop
+                            return Ok(None);
+                        }
                         bail!("no worker can hold model {}", req.model);
                     }
                     for &w in &feas {
                         masked[w] = 1.0 / feas.len() as f32;
                     }
                 }
-                Ok(self.rng.categorical(&masked))
+                Ok(Some(self.rng.categorical(&masked)))
             }
         }
     }
@@ -409,12 +423,36 @@ impl Router {
 
     /// Full dispatch: placement feasibility/cache state plus the
     /// inter-edge [`Network`] the transmission-aware policies read.
+    /// No fault mask — errors when no worker is feasible, exactly like
+    /// the pre-fault router.
     pub fn dispatch_with(
         &mut self,
         req: &Request,
         placement: Option<&Placement>,
         network: Option<&Network>,
     ) -> Result<usize> {
+        match self.dispatch_masked(req, placement, network, None)? {
+            Some(w) => Ok(w),
+            None => unreachable!(
+                "dispatch_masked returns None only under a down-mask"
+            ),
+        }
+    }
+
+    /// Dispatch under a fault-injection availability mask: `down[w]`
+    /// excludes worker `w` from every policy (including the lad-ts
+    /// categorical, masked before the draw). `down == None` is the
+    /// faults-off path, bit-identical to [`dispatch_with`]
+    /// (Self::dispatch_with). Returns `Ok(None)` — rather than an
+    /// error — when an active mask leaves no feasible worker: the
+    /// engine degrades gracefully to a drop.
+    pub fn dispatch_masked(
+        &mut self,
+        req: &Request,
+        placement: Option<&Placement>,
+        network: Option<&Network>,
+        down: Option<&[bool]>,
+    ) -> Result<Option<usize>> {
         // A placement run masks feasibility per request, so the static
         // argmin index can never answer its dispatches — drop it on
         // first sight rather than paying two O(log n) updates per
@@ -425,11 +463,14 @@ impl Router {
         }
         let n = self.pending_steps.len();
         let pending = &self.pending_steps;
-        let feasible = |w: usize| match placement {
-            Some(p) => p.fits(w, req.model),
-            None => true,
+        let feasible = |w: usize| {
+            let fits = match placement {
+                Some(p) => p.fits(w, req.model),
+                None => true,
+            };
+            fits && down.map_or(true, |d| !d[w])
         };
-        let w = match &mut self.policy {
+        let picked: Option<usize> = match &mut self.policy {
             Policy::RoundRobin => {
                 let mut pick = None;
                 for k in 0..n {
@@ -439,43 +480,42 @@ impl Router {
                         break;
                     }
                 }
-                let w = pick.with_context(|| {
-                    format!("no worker can hold model {}", req.model)
-                })?;
-                self.rr_next = (w + 1) % n;
-                w
+                if let Some(w) = pick {
+                    self.rr_next = (w + 1) % n;
+                }
+                pick
             }
-            Policy::LeastLoaded => match (placement, &self.load_index) {
+            Policy::LeastLoaded => match (placement, down, &self.load_index) {
                 // no feasibility mask -> the indexed argmin answers in
                 // O(1), bit-identical to the linear scan it replaced
-                (None, Some(tree)) => tree.argmin().with_context(|| {
-                    format!("no worker can hold model {}", req.model)
-                })?,
-                // masked (placement) dispatch keeps the linear walk:
-                // the mask is per-request, so no static index applies
-                _ => argmin(n, feasible, |w| pending[w]).with_context(|| {
-                    format!("no worker can hold model {}", req.model)
-                })?,
+                (None, None, Some(tree)) => tree.argmin(),
+                // masked (placement or fault) dispatch keeps the linear
+                // walk: the mask is per-request, so no static index
+                // applies
+                _ => argmin(n, feasible, |w| pending[w]),
             },
             Policy::Random(rng) => {
                 // Count-then-kth single draw: one `range_usize` over
                 // the same candidate count the old collect-a-Vec pick
                 // used, so the pick sequence is bit-identical — with
                 // zero allocation on the dispatch hot path.
-                let count = match placement {
-                    None => n,
-                    Some(_) => (0..n).filter(|&w| feasible(w)).count(),
+                let count = match (placement, down) {
+                    (None, None) => n,
+                    _ => (0..n).filter(|&w| feasible(w)).count(),
                 };
                 if count == 0 {
-                    bail!("no worker can hold model {}", req.model);
-                }
-                let k = rng.range_usize(0, count - 1);
-                match placement {
-                    None => k,
-                    Some(_) => (0..n)
-                        .filter(|&w| feasible(w))
-                        .nth(k)
-                        .expect("k-th feasible worker exists by count"),
+                    None
+                } else {
+                    let k = rng.range_usize(0, count - 1);
+                    match (placement, down) {
+                        (None, None) => Some(k),
+                        _ => Some(
+                            (0..n)
+                                .filter(|&w| feasible(w))
+                                .nth(k)
+                                .expect("k-th feasible worker exists by count"),
+                        ),
+                    }
                 }
             }
             Policy::CacheFirst => {
@@ -489,9 +529,6 @@ impl Router {
                     |w| pending[w],
                 )
                 .or_else(|| argmin(n, feasible, |w| pending[w]))
-                .with_context(|| {
-                    format!("no worker can hold model {}", req.model)
-                })?
             }
             Policy::CacheLl => {
                 let p = placement.context(
@@ -504,9 +541,6 @@ impl Router {
                     pending[w]
                         + p.load_penalty_s(w, req.model) / clock::JETSON_STEP_S
                 })
-                .with_context(|| {
-                    format!("no worker can hold model {}", req.model)
-                })?
             }
             Policy::NetLl => {
                 let net = network.context(
@@ -526,9 +560,6 @@ impl Router {
                         + (net.round_trip_s(req, w) + cold)
                             / clock::JETSON_STEP_S
                 })
-                .with_context(|| {
-                    format!("no worker can hold model {}", req.model)
-                })?
             }
             Policy::EdfLl => {
                 // Placement reuses the net-ll cost estimate, but both
@@ -546,11 +577,18 @@ impl Router {
                     };
                     pending[w] + (rtt + cold) / clock::JETSON_STEP_S
                 })
-                .with_context(|| {
-                    format!("no worker can hold model {}", req.model)
-                })?
             }
-            Policy::LadTs(lad) => lad.pick(req, pending, placement, network)?,
+            Policy::LadTs(lad) => {
+                lad.pick(req, pending, placement, network, down)?
+            }
+        };
+        let Some(w) = picked else {
+            if down.is_some() {
+                // an active fault mask left no feasible worker: the
+                // engine records a drop instead of aborting the run
+                return Ok(None);
+            }
+            bail!("no worker can hold model {}", req.model);
         };
         if w >= self.pending_steps.len() {
             bail!("policy picked invalid worker {w}");
@@ -668,6 +706,14 @@ impl EdfQueues {
     pub fn pop(&mut self, worker: usize) -> Option<EdfJob> {
         let key = *self.queues[worker].keys().next()?;
         self.queues[worker].remove(&key)
+    }
+
+    /// Take *every* job parked on `worker`, in deadline-then-FIFO
+    /// order — the fault path reroutes a downed worker's backlog
+    /// through the policy in exactly the order EDF would have served
+    /// it.
+    pub fn drain_worker(&mut self, worker: usize) -> Vec<EdfJob> {
+        std::mem::take(&mut self.queues[worker]).into_values().collect()
     }
 
     pub fn len(&self, worker: usize) -> usize {
@@ -1134,5 +1180,144 @@ mod tests {
         q.push(0, job(11, qos::BACKGROUND, 50.0));
         let (_, victim) = q.evict_below(1).unwrap();
         assert_eq!(victim.req.id, 11);
+    }
+
+    #[test]
+    fn down_mask_excludes_workers_across_policies() {
+        // Every policy must route around the masked worker; the
+        // fault path depends on this holding uniformly.
+        let down = vec![false, true, false];
+        let policies = || -> Vec<Policy> {
+            vec![
+                Policy::RoundRobin,
+                Policy::LeastLoaded,
+                Policy::Random(Rng::new(7)),
+                Policy::EdfLl,
+                Policy::LadTs(Box::new(
+                    LadPolicy::new(None, 3, None, 11, false).unwrap(),
+                )),
+            ]
+        };
+        for policy in policies() {
+            let name = policy.name();
+            let mut r = Router::new(policy, 3);
+            for id in 0..12u64 {
+                let w = r
+                    .dispatch_masked(&req(id, 5), None, None, Some(&down))
+                    .unwrap()
+                    .expect("two workers stay feasible");
+                assert_ne!(w, 1, "{name} picked a down worker");
+            }
+            assert_eq!(r.dispatched()[1], 0, "{name} charged a down worker");
+        }
+        // the placement-backed policies honour the mask too
+        let p = placement(&[20.0, 20.0, 20.0], &[0.5, 0.0, 0.5]);
+        for policy in [Policy::CacheFirst, Policy::CacheLl] {
+            let name = policy.name();
+            let mut r = Router::new(policy, 3);
+            for id in 0..6u64 {
+                let w = r
+                    .dispatch_masked(
+                        &req_m(id, 5, RESD3M),
+                        Some(&p),
+                        None,
+                        Some(&down),
+                    )
+                    .unwrap()
+                    .expect("two workers stay feasible");
+                assert_ne!(w, 1, "{name} picked a down worker");
+            }
+        }
+        use crate::coordinator::network::NetOptions;
+        let net = NetOptions::profile_only("wan", 3).build(3).unwrap();
+        let mut r = Router::new(Policy::NetLl, 3);
+        // origin-local worker 1 is down: net-ll must pay the transfer
+        // to reach a live worker rather than pick the dead local one
+        let w = r
+            .dispatch_masked(&req_o(0, 5, 1), None, Some(&net), Some(&down))
+            .unwrap()
+            .unwrap();
+        assert_ne!(w, 1);
+    }
+
+    #[test]
+    fn all_workers_down_degrades_to_none_not_error() {
+        let down = vec![true, true];
+        for policy in [
+            Policy::RoundRobin,
+            Policy::LeastLoaded,
+            Policy::Random(Rng::new(3)),
+            Policy::EdfLl,
+        ] {
+            let mut r = Router::new(policy, 2);
+            let got =
+                r.dispatch_masked(&req(0, 5), None, None, Some(&down)).unwrap();
+            assert_eq!(got, None, "all-down mask must yield None, not Err");
+            assert_eq!(r.pending(), &[0.0, 0.0], "no load charged on None");
+        }
+        // lad-ts: the categorical is masked before the draw, so an
+        // all-down fleet yields None instead of sampling a dead worker
+        let lad = LadPolicy::new(None, 2, None, 5, false).unwrap();
+        let mut r = Router::new(Policy::LadTs(Box::new(lad)), 2);
+        let got =
+            r.dispatch_masked(&req(0, 5), None, None, Some(&down)).unwrap();
+        assert_eq!(got, None);
+        // but an *empty feasible set without a mask* stays an error —
+        // that is a configuration bug, not a fault to absorb
+        let p = placement(&[4.0, 4.0], &[0.0, 1.0, 0.0]);
+        let mut r = Router::new(Policy::RoundRobin, 2);
+        assert!(r
+            .dispatch_masked(&req_m(0, 5, RESD3_TURBO), Some(&p), None, None)
+            .is_err());
+    }
+
+    #[test]
+    fn masked_dispatch_with_no_mask_matches_dispatch_with_bitwise() {
+        // down=None must reproduce the pre-fault dispatch sequence
+        // exactly — including the RNG-draw count of the random and
+        // lad-ts policies.
+        let mk = || -> Vec<Policy> {
+            vec![
+                Policy::RoundRobin,
+                Policy::LeastLoaded,
+                Policy::Random(Rng::new(42)),
+                Policy::CacheLl,
+                Policy::LadTs(Box::new(
+                    LadPolicy::new(None, 3, None, 13, false).unwrap(),
+                )),
+            ]
+        };
+        let p = placement(&[20.0, 20.0, 20.0], &[0.4, 0.2, 0.4]);
+        for (a, b) in mk().into_iter().zip(mk()) {
+            let needs_placement = matches!(a, Policy::CacheLl);
+            let pl = if needs_placement { Some(&p) } else { None };
+            let mut ra = Router::new(a, 3);
+            let mut rb = Router::new(b, 3);
+            for id in 0..24u64 {
+                let want = ra.dispatch_with(&req(id, 5), pl, None).unwrap();
+                let got = rb
+                    .dispatch_masked(&req(id, 5), pl, None, None)
+                    .unwrap()
+                    .unwrap();
+                assert_eq!(got, want, "{} diverged", ra.policy_name());
+            }
+            assert_eq!(ra.pending(), rb.pending());
+            assert_eq!(ra.dispatched(), rb.dispatched());
+        }
+    }
+
+    #[test]
+    fn drain_worker_empties_in_deadline_order() {
+        let mut q = EdfQueues::new(2);
+        q.push(0, job(0, 2, 50.0));
+        q.push(0, job(1, 2, 25.0));
+        q.push(0, job(2, 2, 25.0)); // deadline tie: FIFO after id 1
+        q.push(1, job(3, 2, 10.0));
+        let drained: Vec<u64> =
+            q.drain_worker(0).into_iter().map(|j| j.req.id).collect();
+        assert_eq!(drained, vec![1, 2, 0]);
+        assert_eq!(q.len(0), 0);
+        assert_eq!(q.total(), 1, "other workers' queues untouched");
+        assert!(q.drain_worker(0).is_empty());
     }
 }

@@ -68,6 +68,7 @@
 //! pinned by `rust/tests/serve_qos.rs` and documented in
 //! `docs/qos.md`.
 
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::channel;
 use std::time::Instant;
@@ -82,13 +83,14 @@ use crate::util::table::{fnum, Table};
 use super::arrivals::{ArrivalProcess, ZDist};
 use super::clock;
 use super::events::{Event, EventQueue};
+use super::faults::{self, FaultPlan, FaultRuntime, FaultWindow};
 use super::message::{Request, Response};
 use super::metrics::ServeMetrics;
 use super::network::{NetOptions, Network};
 use super::placement::{self, Catalog, ModelDist, Placement};
 use super::qos::{self, QosMix};
 use super::router::{EdfJob, EdfQueues, LadPolicy, Policy, Router};
-use super::source::RequestSource;
+use super::source::{OriginDist, RequestSource};
 use super::trace::{TraceFormat, Tracer};
 use super::worker::spawn_worker;
 
@@ -152,6 +154,26 @@ pub struct ServeOptions {
     /// Write a machine-readable summary of the full `ServeMetrics`
     /// here (`serve --report-json`).
     pub report_json: Option<String>,
+    /// Scripted fault plan (`--faults`): `site-down:<site>@<t0>-<t1>`
+    /// and `link-degrade:<from>><to>@<t0>-<t1>:x<factor>` windows
+    /// joined by `;`. `None` (with `mtbf`/`mttr` unset) keeps the
+    /// fault-free engines bit-identical — no fault stream exists, no
+    /// event fires, no ledger row appears.
+    pub faults: Option<String>,
+    /// Stochastic failures: mean virtual seconds between site failures
+    /// (exponential, seeded `fault` stream). Must be set together with
+    /// `mttr`.
+    pub mtbf: Option<f64>,
+    /// Stochastic repairs: mean virtual seconds to repair a failed
+    /// site (exponential, same seeded stream).
+    pub mttr: Option<f64>,
+    /// Re-dispatch budget for jobs killed by a site failure
+    /// (`--max-retries`); a job that exhausts it is counted in the
+    /// fault ledger, not served.
+    pub max_retries: u32,
+    /// Request-origin site distribution (`--origin-dist`); `None` is
+    /// the uniform default (and draws nothing extra).
+    pub origin_dist: Option<OriginDist>,
 }
 
 impl Default for ServeOptions {
@@ -178,8 +200,24 @@ impl Default for ServeOptions {
             window: None,
             window_csv: None,
             report_json: None,
+            faults: None,
+            mtbf: None,
+            mttr: None,
+            max_retries: 3,
+            origin_dist: None,
         }
     }
+}
+
+/// One dispatched-but-incomplete job registered against its worker so
+/// a site failure can kill it, refund its pending charge, and push a
+/// retry. Only populated while faults are armed — the fault-free
+/// engines never touch the registry.
+#[derive(Clone, Debug)]
+struct RunningJob {
+    req: Request,
+    demanded_z: usize,
+    demanded_model: usize,
 }
 
 /// The assembled DEdgeAI system.
@@ -205,6 +243,142 @@ impl DEdgeAi {
     /// Whether the QoS subsystem is active for this run.
     fn qos_enabled(&self) -> bool {
         self.opts.qos_mix.is_some()
+    }
+
+    /// Whether the fault-injection subsystem is active for this run.
+    fn faults_enabled(&self) -> bool {
+        self.opts.faults.is_some()
+            || self.opts.mtbf.is_some()
+            || self.opts.mttr.is_some()
+    }
+
+    /// Build the fault plan + runtime when faults are armed; `None`
+    /// keeps the fault-free fast path (no seventh stream, no events,
+    /// no ledger).
+    fn make_faults(
+        &self,
+        sites: usize,
+    ) -> Result<Option<(FaultPlan, FaultRuntime)>> {
+        if !self.faults_enabled() {
+            return Ok(None);
+        }
+        let plan = match &self.opts.faults {
+            Some(spec) => FaultPlan::parse(spec)?,
+            None => FaultPlan::default(),
+        };
+        plan.validate(sites)?;
+        if self.opts.network.is_none()
+            && plan
+                .windows()
+                .iter()
+                .any(|w| matches!(w, FaultWindow::LinkDegrade { .. }))
+        {
+            bail!(
+                "link-degrade faults need an inter-edge topology — set \
+                 --topology (and optionally --sites/--site-of)"
+            );
+        }
+        let stochastic = match (self.opts.mtbf, self.opts.mttr) {
+            (None, None) => None,
+            (Some(b), Some(r)) => Some((b, r)),
+            _ => bail!("--mtbf and --mttr must be set together"),
+        };
+        let rt = FaultRuntime::new(sites, self.opts.seed, stochastic)?;
+        Ok(Some((plan, rt)))
+    }
+
+    /// Availability mask for dispatch: `Some` only while at least one
+    /// site is down. `None` routes through the unmasked policy arms,
+    /// which keeps the faults-off (and all-sites-up) paths bitwise
+    /// identical to the mask-free router.
+    fn down_mask(
+        fault_rt: Option<&FaultRuntime>,
+        network: Option<&Network>,
+        workers: usize,
+    ) -> Option<Vec<bool>> {
+        let rt = fault_rt?;
+        if !rt.any_down() {
+            return None;
+        }
+        Some(
+            (0..workers)
+                .map(|w| rt.is_down(network.map_or(w, |n| n.site(w))))
+                .collect(),
+        )
+    }
+
+    /// Site failure: kill every running or parked job on the site's
+    /// workers — bump each job's dispatch epoch (voiding its queued
+    /// completion/transfer events), refund its pending-step charge,
+    /// flush the worker's model cache (recovery restarts cold), reset
+    /// the worker timeline, and push a bounded-backoff [`Event::Retry`]
+    /// per killed job. Shared verbatim by both engines so the retry
+    /// push order — part of the parity contract — is one piece of
+    /// code.
+    #[allow(clippy::too_many_arguments)]
+    fn kill_site_workers(
+        site: usize,
+        now: f64,
+        workers: usize,
+        network: Option<&Network>,
+        placement: &mut Option<Placement>,
+        router: &mut Router,
+        edf_q: &mut EdfQueues,
+        busy: &mut [bool],
+        free_at: &mut [f64],
+        queue: &mut EventQueue,
+        metrics: &mut ServeMetrics,
+        mut tracer: Option<&mut Tracer>,
+        epochs: &mut BTreeMap<u64, u32>,
+        assigned: &mut [Vec<RunningJob>],
+        ever_killed: &mut BTreeSet<u64>,
+        down_since: &mut [f64],
+        in_flight: &mut usize,
+    ) {
+        for w in 0..workers {
+            if network.map_or(w, |n| n.site(w)) != site {
+                continue;
+            }
+            down_since[w] = now;
+            // running/scheduled jobs first (dispatch order), then the
+            // worker's parked EDF backlog (deadline order)
+            let mut killed: Vec<RunningJob> = assigned[w].drain(..).collect();
+            for job in edf_q.drain_worker(w) {
+                killed.push(RunningJob {
+                    req: job.req,
+                    demanded_z: job.demanded_z,
+                    demanded_model: job.demanded_model,
+                });
+            }
+            for job in killed {
+                *epochs.entry(job.req.id).or_insert(0) += 1;
+                let mult = match placement.as_ref() {
+                    Some(p) => p.step_mult(job.req.model),
+                    None => 1.0,
+                };
+                router.complete_steps(w, job.req.z as f64 * mult);
+                *in_flight -= 1;
+                metrics.record_kill();
+                ever_killed.insert(job.req.id);
+                if let Some(t) = tracer.as_deref_mut() {
+                    t.kill(now, job.req.id, w);
+                }
+                queue.push(
+                    now + faults::retry_backoff_s(1),
+                    Event::Retry {
+                        req: job.req,
+                        demanded_z: job.demanded_z,
+                        demanded_model: job.demanded_model,
+                        attempt: 1,
+                    },
+                );
+            }
+            if let Some(p) = placement.as_mut() {
+                p.flush_worker(w);
+            }
+            free_at[w] = now;
+            busy[w] = false;
+        }
     }
 
     /// Build the observability recorder when tracing is armed. `None`
@@ -385,6 +559,7 @@ impl DEdgeAi {
             self.z_dist(),
             self.model_dist(),
             self.opts.qos_mix.clone(),
+            self.opts.origin_dist.as_ref().unwrap_or(&OriginDist::Uniform),
             self.opts.network.as_ref().map(|n| n.sites).unwrap_or(1),
             self.opts.requests,
         )
@@ -515,6 +690,7 @@ impl DEdgeAi {
     /// events. Shared verbatim by the streaming and eager engines so
     /// the event push order — part of the bitwise parity contract —
     /// is one piece of code.
+    #[allow(clippy::too_many_arguments)]
     fn edf_start_next(
         worker: usize,
         edf_q: &mut EdfQueues,
@@ -523,6 +699,8 @@ impl DEdgeAi {
         queue: &mut EventQueue,
         network: Option<&Network>,
         tracer: Option<&mut Tracer>,
+        epochs: &BTreeMap<u64, u32>,
+        assigned: Option<&mut Vec<Vec<RunningJob>>>,
     ) {
         if busy[worker] {
             return;
@@ -548,23 +726,29 @@ impl DEdgeAi {
         let done = start + job.gen + job.down;
         free_at[worker] = done;
         busy[worker] = true;
+        // the job's current dispatch epoch stamps its completion and
+        // return leg; a later kill bumps the epoch, voiding both
+        let epoch = epochs.get(&job.req.id).copied().unwrap_or(0);
         queue.push(
             done,
-            Event::Completion(Response {
-                id: job.req.id,
-                worker,
-                z: job.req.z,
-                model: job.req.model,
-                latency: done - job.req.submitted_at,
-                queue_wait: start - job.req.submitted_at - job.up,
-                gen_time: job.gen,
-                trans_time: job.up + job.down,
-                checksum: 0.0,
-                qos: job.req.qos,
-                deadline: job.req.deadline,
-                demanded_z: job.demanded_z,
-                demanded_model: job.demanded_model,
-            }),
+            Event::Completion(
+                Response {
+                    id: job.req.id,
+                    worker,
+                    z: job.req.z,
+                    model: job.req.model,
+                    latency: done - job.req.submitted_at,
+                    queue_wait: start - job.req.submitted_at - job.up,
+                    gen_time: job.gen,
+                    trans_time: job.up + job.down,
+                    checksum: 0.0,
+                    qos: job.req.qos,
+                    deadline: job.req.deadline,
+                    demanded_z: job.demanded_z,
+                    demanded_model: job.demanded_model,
+                },
+                epoch,
+            ),
         );
         if let Some(net) = network {
             queue.push(
@@ -574,8 +758,17 @@ impl DEdgeAi {
                     to: job.req.origin,
                     bits: Network::down_bits(&job.req),
                     secs: job.down,
+                    req: job.req.id,
+                    epoch,
                 },
             );
+        }
+        if let Some(assigned) = assigned {
+            assigned[worker].push(RunningJob {
+                req: job.req,
+                demanded_z: job.demanded_z,
+                demanded_model: job.demanded_model,
+            });
         }
     }
 
@@ -589,11 +782,12 @@ impl DEdgeAi {
             || self.opts.queue_cap.is_some()
             || self.network_enabled()
             || self.qos_enabled()
+            || self.faults_enabled()
         {
             bail!(
                 "placement-aware serving, admission control, inter-edge \
-                 topologies, and QoS classes run on the event engine; \
-                 run_batch is the legacy Table V closed loop"
+                 topologies, QoS classes, and fault injection run on the \
+                 event engine; run_batch is the legacy Table V closed loop"
             );
         }
         let mut router = self.make_router()?;
@@ -674,7 +868,7 @@ impl DEdgeAi {
     /// count reaches the cap, keeping pending load bounded.
     pub fn run_events(&self) -> Result<ServeMetrics> {
         let mut placement = self.make_placement()?;
-        let network = self.make_network()?;
+        let mut network = self.make_network()?;
         let mut router = self.make_router()?;
         let mut metrics = ServeMetrics::new(self.opts.workers);
         let mut free_at = vec![0.0f64; self.opts.workers];
@@ -686,6 +880,29 @@ impl DEdgeAi {
         if placement.is_some() && self.opts.replace_every > 0.0 {
             queue.push(self.opts.replace_every, Event::Replace);
         }
+        // Fault injection: scripted windows seed the event queue up
+        // front; the stochastic chain (if armed) arms one failure per
+        // site. All of it is absent without --faults/--mtbf — the
+        // fault-free bit-parity fast path.
+        let site_count =
+            network.as_ref().map_or(self.opts.workers, |n| n.sites());
+        let mut fault_rt: Option<FaultRuntime> = None;
+        if let Some((plan, mut rt)) = self.make_faults(site_count)? {
+            for (t, ev) in rt.initial_events(&plan) {
+                queue.push(t, ev);
+            }
+            fault_rt = Some(rt);
+            metrics.set_faults_active();
+        }
+        let faults_on = fault_rt.is_some();
+        // dispatch-epoch tombstones + per-worker job registry: a kill
+        // bumps the epoch (voiding queued events) and re-dispatches
+        // through Event::Retry. Empty/untouched while faults are off.
+        let mut epochs: BTreeMap<u64, u32> = BTreeMap::new();
+        let mut assigned: Vec<Vec<RunningJob>> =
+            vec![Vec::new(); self.opts.workers];
+        let mut ever_killed: BTreeSet<u64> = BTreeSet::new();
+        let mut down_since = vec![0.0f64; self.opts.workers];
         // QoS: arm the per-class books, and under edf-ll park
         // dispatched jobs in per-worker deadline queues (busy[w] =
         // the worker already has a start scheduled). All three stay
@@ -772,11 +989,30 @@ impl DEdgeAi {
                     if let Some(t) = tracer.as_mut() {
                         t.admit(&req, demanded_z, demanded_model, now);
                     }
-                    let w = router.dispatch_with(
+                    let mask = Self::down_mask(
+                        fault_rt.as_ref(),
+                        network.as_ref(),
+                        self.opts.workers,
+                    );
+                    let picked = router.dispatch_masked(
                         &req,
                         placement.as_ref(),
                         network.as_ref(),
+                        mask.as_deref(),
                     )?;
+                    let w = match picked {
+                        Some(w) => w,
+                        None => {
+                            // every feasible worker sits on a down
+                            // site: degrade gracefully to a drop
+                            metrics.record_drop();
+                            if let Some(t) = tracer.as_mut() {
+                                t.drop_req(now, &req);
+                            }
+                            metrics.note_queue_depth(queue.len(), in_flight);
+                            continue;
+                        }
+                    };
                     let mut load_delay = 0.0;
                     let mut step_mult = 1.0;
                     if let Some(p) = placement.as_mut() {
@@ -813,6 +1049,8 @@ impl DEdgeAi {
                                     to: net.site(w),
                                     bits: Network::up_bits(&req),
                                     secs: up,
+                                    req: req.id,
+                                    epoch: 0,
                                 },
                             );
                         }
@@ -837,6 +1075,8 @@ impl DEdgeAi {
                             &mut queue,
                             network.as_ref(),
                             tracer.as_mut(),
+                            &epochs,
+                            if faults_on { Some(&mut assigned) } else { None },
                         );
                     } else {
                         let start = free_at[w].max(now + up) + load_delay;
@@ -858,22 +1098,27 @@ impl DEdgeAi {
                         in_flight += 1;
                         queue.push(
                             done,
-                            Event::Completion(Response {
-                                id: req.id,
-                                worker: w,
-                                z: req.z,
-                                model: req.model,
-                                latency: done - now,
-                                queue_wait: start - now - up,
-                                gen_time: gen,
-                                trans_time: up + down,
-                                checksum: 0.0,
-                                qos: req.qos,
-                                deadline: req.deadline,
-                                // the FIFO path never degrades
-                                demanded_z: req.z,
-                                demanded_model: req.model,
-                            }),
+                            Event::Completion(
+                                Response {
+                                    id: req.id,
+                                    worker: w,
+                                    z: req.z,
+                                    model: req.model,
+                                    latency: done - now,
+                                    queue_wait: start - now - up,
+                                    gen_time: gen,
+                                    trans_time: up + down,
+                                    checksum: 0.0,
+                                    qos: req.qos,
+                                    deadline: req.deadline,
+                                    // the FIFO path never degrades
+                                    demanded_z: req.z,
+                                    demanded_model: req.model,
+                                },
+                                // a fresh arrival was never killed, so
+                                // its dispatch epoch is always 0
+                                0,
+                            ),
                         );
                         // Transfer legs bracket compute: the upload
                         // ends before generation can start, the image
@@ -889,6 +1134,8 @@ impl DEdgeAi {
                                     to: site,
                                     bits: Network::up_bits(&req),
                                     secs: up,
+                                    req: req.id,
+                                    epoch: 0,
                                 },
                             );
                             queue.push(
@@ -898,8 +1145,17 @@ impl DEdgeAi {
                                     to: o,
                                     bits: Network::down_bits(&req),
                                     secs: down,
+                                    req: req.id,
+                                    epoch: 0,
                                 },
                             );
+                        }
+                        if faults_on {
+                            assigned[w].push(RunningJob {
+                                req,
+                                demanded_z,
+                                demanded_model,
+                            });
                         }
                     }
                 }
@@ -910,7 +1166,14 @@ impl DEdgeAi {
                     Event::Arrival(_) => {
                         unreachable!("streaming engine never queues arrivals")
                     }
-                    Event::Completion(resp) => {
+                    Event::Completion(resp, epoch) => {
+                        if epochs.get(&resp.id).copied().unwrap_or(0) != epoch
+                        {
+                            // stale completion of a killed dispatch —
+                            // the retry owns the request now
+                            metrics.note_queue_depth(queue.len(), in_flight);
+                            continue;
+                        }
                         // drain exactly what dispatch charged:
                         // effective steps (z x the variant's step_mult)
                         let mult = match placement.as_ref() {
@@ -920,6 +1183,13 @@ impl DEdgeAi {
                         router.complete_steps(resp.worker, resp.z as f64 * mult);
                         in_flight -= 1;
                         metrics.record(&resp, now);
+                        if faults_on {
+                            assigned[resp.worker]
+                                .retain(|j| j.req.id != resp.id);
+                            if ever_killed.remove(&resp.id) {
+                                metrics.record_recovered();
+                            }
+                        }
                         if let Some(t) = tracer.as_mut() {
                             t.complete(&resp, now);
                         }
@@ -935,6 +1205,12 @@ impl DEdgeAi {
                                 &mut queue,
                                 network.as_ref(),
                                 tracer.as_mut(),
+                                &epochs,
+                                if faults_on {
+                                    Some(&mut assigned)
+                                } else {
+                                    None
+                                },
                             );
                         }
                     }
@@ -945,8 +1221,20 @@ impl DEdgeAi {
                         );
                         metrics.record_cold_load_on(worker, delay);
                     }
-                    Event::TransferDone { from, to, bits, secs } => {
-                        metrics.record_transfer(from, to, bits, secs);
+                    Event::TransferDone {
+                        from,
+                        to,
+                        bits,
+                        secs,
+                        req,
+                        epoch,
+                    } => {
+                        // a leg whose dispatch was killed is voided;
+                        // legs that finished before the kill already
+                        // popped and stay booked
+                        if epochs.get(&req).copied().unwrap_or(0) == epoch {
+                            metrics.record_transfer(from, to, bits, secs);
+                        }
                     }
                     Event::Replace => {
                         if let Some(p) = placement.as_mut() {
@@ -985,6 +1273,288 @@ impl DEdgeAi {
                             );
                         }
                     }
+                    Event::SiteDown { site } => {
+                        let rt = fault_rt
+                            .as_mut()
+                            .expect("SiteDown event without fault runtime");
+                        let (became_down, followup) =
+                            rt.note_site_down(site, now);
+                        if let Some((t, ev)) = followup {
+                            queue.push(t, ev);
+                        }
+                        if became_down {
+                            metrics.record_site_down();
+                            if let Some(t) = tracer.as_mut() {
+                                t.site_down(now, site);
+                            }
+                            Self::kill_site_workers(
+                                site,
+                                now,
+                                self.opts.workers,
+                                network.as_ref(),
+                                &mut placement,
+                                &mut router,
+                                &mut edf_q,
+                                &mut busy,
+                                &mut free_at,
+                                &mut queue,
+                                &mut metrics,
+                                tracer.as_mut(),
+                                &mut epochs,
+                                &mut assigned,
+                                &mut ever_killed,
+                                &mut down_since,
+                                &mut in_flight,
+                            );
+                        }
+                    }
+                    Event::SiteUp { site } => {
+                        let work_remains =
+                            next_arrival.is_some() || in_flight > 0;
+                        let rt = fault_rt
+                            .as_mut()
+                            .expect("SiteUp event without fault runtime");
+                        let (became_up, followup) =
+                            rt.note_site_up(site, now, work_remains);
+                        if let Some((t, ev)) = followup {
+                            queue.push(t, ev);
+                        }
+                        if became_up {
+                            metrics.record_site_up(now);
+                            if let Some(t) = tracer.as_mut() {
+                                t.site_up(now, site);
+                            }
+                            for w in 0..self.opts.workers {
+                                let ws = network
+                                    .as_ref()
+                                    .map_or(w, |n| n.site(w));
+                                if ws == site {
+                                    metrics.record_downtime(
+                                        w,
+                                        now - down_since[w],
+                                    );
+                                    free_at[w] = free_at[w].max(now);
+                                }
+                            }
+                        }
+                    }
+                    Event::LinkDegrade { from, to, factor } => {
+                        if let Some(net) = network.as_mut() {
+                            net.set_degrade(from, to, factor);
+                        }
+                        metrics.record_link_event();
+                        if let Some(t) = tracer.as_mut() {
+                            t.link_change(now, from, to, factor);
+                        }
+                    }
+                    Event::LinkRestore { from, to } => {
+                        if let Some(net) = network.as_mut() {
+                            net.clear_degrade(from, to);
+                        }
+                        metrics.record_link_event();
+                        if let Some(t) = tracer.as_mut() {
+                            t.link_change(now, from, to, 1.0);
+                        }
+                    }
+                    Event::Retry {
+                        req,
+                        demanded_z,
+                        demanded_model,
+                        attempt,
+                    } => {
+                        if attempt > self.opts.max_retries {
+                            // budget spent: the request leaves the
+                            // system through the fault ledger, not the
+                            // served or dropped books
+                            metrics.record_retry_exhausted();
+                            if let Some(t) = tracer.as_mut() {
+                                t.exhaust(now, req.id);
+                            }
+                            metrics.note_queue_depth(queue.len(), in_flight);
+                            continue;
+                        }
+                        let mask = Self::down_mask(
+                            fault_rt.as_ref(),
+                            network.as_ref(),
+                            self.opts.workers,
+                        );
+                        let picked = router.dispatch_masked(
+                            &req,
+                            placement.as_ref(),
+                            network.as_ref(),
+                            mask.as_deref(),
+                        )?;
+                        let w = match picked {
+                            Some(w) => w,
+                            None => {
+                                // nowhere to go yet: exponential
+                                // virtual-time backoff, next attempt
+                                // (the budget bounds the loop)
+                                queue.push(
+                                    now + faults::retry_backoff_s(
+                                        attempt + 1,
+                                    ),
+                                    Event::Retry {
+                                        req,
+                                        demanded_z,
+                                        demanded_model,
+                                        attempt: attempt + 1,
+                                    },
+                                );
+                                metrics.note_queue_depth(
+                                    queue.len(),
+                                    in_flight,
+                                );
+                                continue;
+                            }
+                        };
+                        metrics.record_retry();
+                        if let Some(t) = tracer.as_mut() {
+                            t.retry(now, req.id, attempt);
+                        }
+                        // the retry leg re-charges everything the
+                        // first dispatch paid: cold load (the dead
+                        // site's cache flushed), upload, generation
+                        // (fresh jitter draw), image return
+                        let mut load_delay = 0.0;
+                        let mut step_mult = 1.0;
+                        if let Some(p) = placement.as_mut() {
+                            step_mult = p.step_mult(req.model);
+                            let charge = p.ensure(w, req.model)?;
+                            metrics.record_cache(
+                                charge.delay_s == 0.0,
+                                charge.evictions,
+                            );
+                            load_delay = charge.delay_s;
+                        }
+                        let (up, gen, down) = Self::service_times(
+                            &req,
+                            &mut rng,
+                            step_mult,
+                            network.as_ref(),
+                            w,
+                        );
+                        if let Some(t) = tracer.as_mut() {
+                            t.dispatch(&req, w, up, gen, down, load_delay);
+                        }
+                        let epoch =
+                            epochs.get(&req.id).copied().unwrap_or(0);
+                        if edf {
+                            in_flight += 1;
+                            if let Some(net) = network.as_ref() {
+                                queue.push(
+                                    now + up,
+                                    Event::TransferDone {
+                                        from: req.origin,
+                                        to: net.site(w),
+                                        bits: Network::up_bits(&req),
+                                        secs: up,
+                                        req: req.id,
+                                        epoch,
+                                    },
+                                );
+                            }
+                            edf_q.push(
+                                w,
+                                EdfJob {
+                                    ready_at: now + up,
+                                    req,
+                                    up,
+                                    gen,
+                                    down,
+                                    load_delay,
+                                    demanded_z,
+                                    demanded_model,
+                                },
+                            );
+                            Self::edf_start_next(
+                                w,
+                                &mut edf_q,
+                                &mut busy,
+                                &mut free_at,
+                                &mut queue,
+                                network.as_ref(),
+                                tracer.as_mut(),
+                                &epochs,
+                                Some(&mut assigned),
+                            );
+                        } else {
+                            let start =
+                                free_at[w].max(now + up) + load_delay;
+                            if let Some(t) = tracer.as_mut() {
+                                t.start(req.id, start);
+                            }
+                            if load_delay > 0.0 {
+                                queue.push(
+                                    start,
+                                    Event::ModelLoaded {
+                                        worker: w,
+                                        model: req.model,
+                                        delay: load_delay,
+                                    },
+                                );
+                            }
+                            let done = start + gen + down;
+                            free_at[w] = done;
+                            in_flight += 1;
+                            queue.push(
+                                done,
+                                Event::Completion(
+                                    Response {
+                                        id: req.id,
+                                        worker: w,
+                                        z: req.z,
+                                        model: req.model,
+                                        // latency spans the original
+                                        // submission: the killed leg
+                                        // and the backoff both count
+                                        latency: done - req.submitted_at,
+                                        queue_wait: start
+                                            - req.submitted_at
+                                            - up,
+                                        gen_time: gen,
+                                        trans_time: up + down,
+                                        checksum: 0.0,
+                                        qos: req.qos,
+                                        deadline: req.deadline,
+                                        demanded_z,
+                                        demanded_model,
+                                    },
+                                    epoch,
+                                ),
+                            );
+                            if let Some(net) = network.as_ref() {
+                                let (o, site) = (req.origin, net.site(w));
+                                queue.push(
+                                    now + up,
+                                    Event::TransferDone {
+                                        from: o,
+                                        to: site,
+                                        bits: Network::up_bits(&req),
+                                        secs: up,
+                                        req: req.id,
+                                        epoch,
+                                    },
+                                );
+                                queue.push(
+                                    done,
+                                    Event::TransferDone {
+                                        from: site,
+                                        to: o,
+                                        bits: Network::down_bits(&req),
+                                        secs: down,
+                                        req: req.id,
+                                        epoch,
+                                    },
+                                );
+                            }
+                            assigned[w].push(RunningJob {
+                                req,
+                                demanded_z,
+                                demanded_model,
+                            });
+                        }
+                    }
                 }
             }
             metrics.note_queue_depth(queue.len(), in_flight);
@@ -1000,11 +1570,28 @@ impl DEdgeAi {
             edf_q.is_empty(),
             "event engine drained but EDF jobs remain parked"
         );
+        // Request conservation under faults: every arrival leaves
+        // through exactly one of the three books.
+        debug_assert!(
+            !faults_on
+                || metrics.count() as u64
+                    + metrics.dropped()
+                    + metrics.faults().exhausted_retries
+                    == self.opts.requests as u64,
+            "fault conservation broke: served + dropped + exhausted != \
+             arrivals"
+        );
         if let Some(t) = tracer {
             metrics.set_trace(t.finish());
         }
         let mut audit = source.audit();
         audit.note("gen-jitter", rng.draws());
+        if let Some(rt) = fault_rt.as_ref() {
+            // armed runs always carry the row (zero draws when the
+            // plan is purely scripted); unarmed runs must not — the
+            // audit ledger is part of the bitwise parity contract
+            audit.note("fault", rt.draws());
+        }
         metrics.set_rng_audit(audit);
         Ok(metrics)
     }
@@ -1018,7 +1605,7 @@ impl DEdgeAi {
     #[doc(hidden)]
     pub fn run_events_eager(&self) -> Result<ServeMetrics> {
         let mut placement = self.make_placement()?;
-        let network = self.make_network()?;
+        let mut network = self.make_network()?;
         let mut router = self.make_router()?;
         let mut metrics = ServeMetrics::new(self.opts.workers);
         let mut free_at = vec![0.0f64; self.opts.workers];
@@ -1034,6 +1621,25 @@ impl DEdgeAi {
         if placement.is_some() && self.opts.replace_every > 0.0 {
             queue.push(self.opts.replace_every, Event::Replace);
         }
+        // same fault arming as the streaming engine — the relative
+        // Replace-before-fault push order is part of the parity
+        // contract (arrivals win ties in both engines regardless)
+        let site_count =
+            network.as_ref().map_or(self.opts.workers, |n| n.sites());
+        let mut fault_rt: Option<FaultRuntime> = None;
+        if let Some((plan, mut rt)) = self.make_faults(site_count)? {
+            for (t, ev) in rt.initial_events(&plan) {
+                queue.push(t, ev);
+            }
+            fault_rt = Some(rt);
+            metrics.set_faults_active();
+        }
+        let faults_on = fault_rt.is_some();
+        let mut epochs: BTreeMap<u64, u32> = BTreeMap::new();
+        let mut assigned: Vec<Vec<RunningJob>> =
+            vec![Vec::new(); self.opts.workers];
+        let mut ever_killed: BTreeSet<u64> = BTreeSet::new();
+        let mut down_since = vec![0.0f64; self.opts.workers];
         // same QoS arming as the streaming engine — the parity suite
         // covers QoS configs too
         if self.qos_enabled() {
@@ -1102,11 +1708,29 @@ impl DEdgeAi {
                     if let Some(t) = tracer.as_mut() {
                         t.admit(&req, demanded_z, demanded_model, now);
                     }
-                    let w = router.dispatch_with(
+                    let mask = Self::down_mask(
+                        fault_rt.as_ref(),
+                        network.as_ref(),
+                        self.opts.workers,
+                    );
+                    let picked = router.dispatch_masked(
                         &req,
                         placement.as_ref(),
                         network.as_ref(),
+                        mask.as_deref(),
                     )?;
+                    let w = match picked {
+                        Some(w) => w,
+                        None => {
+                            // same graceful drop as the streaming
+                            // engine: every feasible worker is down
+                            metrics.record_drop();
+                            if let Some(t) = tracer.as_mut() {
+                                t.drop_req(now, &req);
+                            }
+                            continue;
+                        }
+                    };
                     let mut load_delay = 0.0;
                     let mut step_mult = 1.0;
                     if let Some(p) = placement.as_mut() {
@@ -1140,6 +1764,8 @@ impl DEdgeAi {
                                     to: net.site(w),
                                     bits: Network::up_bits(&req),
                                     secs: up,
+                                    req: req.id,
+                                    epoch: 0,
                                 },
                             );
                         }
@@ -1164,6 +1790,8 @@ impl DEdgeAi {
                             &mut queue,
                             network.as_ref(),
                             tracer.as_mut(),
+                            &epochs,
+                            if faults_on { Some(&mut assigned) } else { None },
                         );
                     } else {
                         let start = free_at[w].max(now + up) + load_delay;
@@ -1185,22 +1813,26 @@ impl DEdgeAi {
                         in_flight += 1;
                         queue.push(
                             done,
-                            Event::Completion(Response {
-                                id: req.id,
-                                worker: w,
-                                z: req.z,
-                                model: req.model,
-                                latency: done - now,
-                                queue_wait: start - now - up,
-                                gen_time: gen,
-                                trans_time: up + down,
-                                checksum: 0.0,
-                                qos: req.qos,
-                                deadline: req.deadline,
-                                // the FIFO path never degrades
-                                demanded_z: req.z,
-                                demanded_model: req.model,
-                            }),
+                            Event::Completion(
+                                Response {
+                                    id: req.id,
+                                    worker: w,
+                                    z: req.z,
+                                    model: req.model,
+                                    latency: done - now,
+                                    queue_wait: start - now - up,
+                                    gen_time: gen,
+                                    trans_time: up + down,
+                                    checksum: 0.0,
+                                    qos: req.qos,
+                                    deadline: req.deadline,
+                                    // the FIFO path never degrades
+                                    demanded_z: req.z,
+                                    demanded_model: req.model,
+                                },
+                                // fresh arrivals were never killed
+                                0,
+                            ),
                         );
                         // same leg bookkeeping (and push order) as the
                         // streaming engine — parity is bitwise
@@ -1213,6 +1845,8 @@ impl DEdgeAi {
                                     to: site,
                                     bits: Network::up_bits(&req),
                                     secs: up,
+                                    req: req.id,
+                                    epoch: 0,
                                 },
                             );
                             queue.push(
@@ -1222,12 +1856,25 @@ impl DEdgeAi {
                                     to: o,
                                     bits: Network::down_bits(&req),
                                     secs: down,
+                                    req: req.id,
+                                    epoch: 0,
                                 },
                             );
                         }
+                        if faults_on {
+                            assigned[w].push(RunningJob {
+                                req,
+                                demanded_z,
+                                demanded_model,
+                            });
+                        }
                     }
                 }
-                Event::Completion(resp) => {
+                Event::Completion(resp, epoch) => {
+                    if epochs.get(&resp.id).copied().unwrap_or(0) != epoch {
+                        // stale completion of a killed dispatch
+                        continue;
+                    }
                     let mult = match placement.as_ref() {
                         Some(p) => p.step_mult(resp.model),
                         None => 1.0,
@@ -1235,6 +1882,12 @@ impl DEdgeAi {
                     router.complete_steps(resp.worker, resp.z as f64 * mult);
                     in_flight -= 1;
                     metrics.record(&resp, now);
+                    if faults_on {
+                        assigned[resp.worker].retain(|j| j.req.id != resp.id);
+                        if ever_killed.remove(&resp.id) {
+                            metrics.record_recovered();
+                        }
+                    }
                     if let Some(t) = tracer.as_mut() {
                         t.complete(&resp, now);
                     }
@@ -1248,14 +1901,25 @@ impl DEdgeAi {
                             &mut queue,
                             network.as_ref(),
                             tracer.as_mut(),
+                            &epochs,
+                            if faults_on { Some(&mut assigned) } else { None },
                         );
                     }
                 }
                 Event::ModelLoaded { worker, delay, .. } => {
                     metrics.record_cold_load_on(worker, delay);
                 }
-                Event::TransferDone { from, to, bits, secs } => {
-                    metrics.record_transfer(from, to, bits, secs);
+                Event::TransferDone {
+                    from,
+                    to,
+                    bits,
+                    secs,
+                    req,
+                    epoch,
+                } => {
+                    if epochs.get(&req).copied().unwrap_or(0) == epoch {
+                        metrics.record_transfer(from, to, bits, secs);
+                    }
                 }
                 Event::Replace => {
                     if let Some(p) = placement.as_mut() {
@@ -1289,6 +1953,265 @@ impl DEdgeAi {
                         );
                     }
                 }
+                Event::SiteDown { site } => {
+                    let rt = fault_rt
+                        .as_mut()
+                        .expect("SiteDown event without fault runtime");
+                    let (became_down, followup) = rt.note_site_down(site, now);
+                    if let Some((t, ev)) = followup {
+                        queue.push(t, ev);
+                    }
+                    if became_down {
+                        metrics.record_site_down();
+                        if let Some(t) = tracer.as_mut() {
+                            t.site_down(now, site);
+                        }
+                        Self::kill_site_workers(
+                            site,
+                            now,
+                            self.opts.workers,
+                            network.as_ref(),
+                            &mut placement,
+                            &mut router,
+                            &mut edf_q,
+                            &mut busy,
+                            &mut free_at,
+                            &mut queue,
+                            &mut metrics,
+                            tracer.as_mut(),
+                            &mut epochs,
+                            &mut assigned,
+                            &mut ever_killed,
+                            &mut down_since,
+                            &mut in_flight,
+                        );
+                    }
+                }
+                Event::SiteUp { site } => {
+                    let work_remains = arrivals_left > 0 || in_flight > 0;
+                    let rt = fault_rt
+                        .as_mut()
+                        .expect("SiteUp event without fault runtime");
+                    let (became_up, followup) =
+                        rt.note_site_up(site, now, work_remains);
+                    if let Some((t, ev)) = followup {
+                        queue.push(t, ev);
+                    }
+                    if became_up {
+                        metrics.record_site_up(now);
+                        if let Some(t) = tracer.as_mut() {
+                            t.site_up(now, site);
+                        }
+                        for w in 0..self.opts.workers {
+                            let ws =
+                                network.as_ref().map_or(w, |n| n.site(w));
+                            if ws == site {
+                                metrics.record_downtime(
+                                    w,
+                                    now - down_since[w],
+                                );
+                                free_at[w] = free_at[w].max(now);
+                            }
+                        }
+                    }
+                }
+                Event::LinkDegrade { from, to, factor } => {
+                    if let Some(net) = network.as_mut() {
+                        net.set_degrade(from, to, factor);
+                    }
+                    metrics.record_link_event();
+                    if let Some(t) = tracer.as_mut() {
+                        t.link_change(now, from, to, factor);
+                    }
+                }
+                Event::LinkRestore { from, to } => {
+                    if let Some(net) = network.as_mut() {
+                        net.clear_degrade(from, to);
+                    }
+                    metrics.record_link_event();
+                    if let Some(t) = tracer.as_mut() {
+                        t.link_change(now, from, to, 1.0);
+                    }
+                }
+                Event::Retry {
+                    req,
+                    demanded_z,
+                    demanded_model,
+                    attempt,
+                } => {
+                    if attempt > self.opts.max_retries {
+                        metrics.record_retry_exhausted();
+                        if let Some(t) = tracer.as_mut() {
+                            t.exhaust(now, req.id);
+                        }
+                        continue;
+                    }
+                    let mask = Self::down_mask(
+                        fault_rt.as_ref(),
+                        network.as_ref(),
+                        self.opts.workers,
+                    );
+                    let picked = router.dispatch_masked(
+                        &req,
+                        placement.as_ref(),
+                        network.as_ref(),
+                        mask.as_deref(),
+                    )?;
+                    let w = match picked {
+                        Some(w) => w,
+                        None => {
+                            queue.push(
+                                now + faults::retry_backoff_s(attempt + 1),
+                                Event::Retry {
+                                    req,
+                                    demanded_z,
+                                    demanded_model,
+                                    attempt: attempt + 1,
+                                },
+                            );
+                            continue;
+                        }
+                    };
+                    metrics.record_retry();
+                    if let Some(t) = tracer.as_mut() {
+                        t.retry(now, req.id, attempt);
+                    }
+                    // same re-charged retry leg as the streaming
+                    // engine (see run_events)
+                    let mut load_delay = 0.0;
+                    let mut step_mult = 1.0;
+                    if let Some(p) = placement.as_mut() {
+                        step_mult = p.step_mult(req.model);
+                        let charge = p.ensure(w, req.model)?;
+                        metrics.record_cache(
+                            charge.delay_s == 0.0,
+                            charge.evictions,
+                        );
+                        load_delay = charge.delay_s;
+                    }
+                    let (up, gen, down) = Self::service_times(
+                        &req,
+                        &mut rng,
+                        step_mult,
+                        network.as_ref(),
+                        w,
+                    );
+                    if let Some(t) = tracer.as_mut() {
+                        t.dispatch(&req, w, up, gen, down, load_delay);
+                    }
+                    let epoch = epochs.get(&req.id).copied().unwrap_or(0);
+                    if edf {
+                        in_flight += 1;
+                        if let Some(net) = network.as_ref() {
+                            queue.push(
+                                now + up,
+                                Event::TransferDone {
+                                    from: req.origin,
+                                    to: net.site(w),
+                                    bits: Network::up_bits(&req),
+                                    secs: up,
+                                    req: req.id,
+                                    epoch,
+                                },
+                            );
+                        }
+                        edf_q.push(
+                            w,
+                            EdfJob {
+                                ready_at: now + up,
+                                req,
+                                up,
+                                gen,
+                                down,
+                                load_delay,
+                                demanded_z,
+                                demanded_model,
+                            },
+                        );
+                        Self::edf_start_next(
+                            w,
+                            &mut edf_q,
+                            &mut busy,
+                            &mut free_at,
+                            &mut queue,
+                            network.as_ref(),
+                            tracer.as_mut(),
+                            &epochs,
+                            Some(&mut assigned),
+                        );
+                    } else {
+                        let start = free_at[w].max(now + up) + load_delay;
+                        if let Some(t) = tracer.as_mut() {
+                            t.start(req.id, start);
+                        }
+                        if load_delay > 0.0 {
+                            queue.push(
+                                start,
+                                Event::ModelLoaded {
+                                    worker: w,
+                                    model: req.model,
+                                    delay: load_delay,
+                                },
+                            );
+                        }
+                        let done = start + gen + down;
+                        free_at[w] = done;
+                        in_flight += 1;
+                        queue.push(
+                            done,
+                            Event::Completion(
+                                Response {
+                                    id: req.id,
+                                    worker: w,
+                                    z: req.z,
+                                    model: req.model,
+                                    latency: done - req.submitted_at,
+                                    queue_wait: start
+                                        - req.submitted_at
+                                        - up,
+                                    gen_time: gen,
+                                    trans_time: up + down,
+                                    checksum: 0.0,
+                                    qos: req.qos,
+                                    deadline: req.deadline,
+                                    demanded_z,
+                                    demanded_model,
+                                },
+                                epoch,
+                            ),
+                        );
+                        if let Some(net) = network.as_ref() {
+                            let (o, site) = (req.origin, net.site(w));
+                            queue.push(
+                                now + up,
+                                Event::TransferDone {
+                                    from: o,
+                                    to: site,
+                                    bits: Network::up_bits(&req),
+                                    secs: up,
+                                    req: req.id,
+                                    epoch,
+                                },
+                            );
+                            queue.push(
+                                done,
+                                Event::TransferDone {
+                                    from: site,
+                                    to: o,
+                                    bits: Network::down_bits(&req),
+                                    secs: down,
+                                    req: req.id,
+                                    epoch,
+                                },
+                            );
+                        }
+                        assigned[w].push(RunningJob {
+                            req,
+                            demanded_z,
+                            demanded_model,
+                        });
+                    }
+                }
             }
             metrics.note_queue_depth(queue.len(), in_flight);
         }
@@ -1301,6 +2224,15 @@ impl DEdgeAi {
             edf_q.is_empty(),
             "event engine drained but EDF jobs remain parked"
         );
+        debug_assert!(
+            !faults_on
+                || metrics.count() as u64
+                    + metrics.dropped()
+                    + metrics.faults().exhausted_retries
+                    == self.opts.requests as u64,
+            "fault conservation broke: served + dropped + exhausted != \
+             arrivals"
+        );
         if let Some(t) = tracer {
             metrics.set_trace(t.finish());
         }
@@ -1308,6 +2240,9 @@ impl DEdgeAi {
         // part of the bitwise-parity contract
         let mut audit = source.audit();
         audit.note("gen-jitter", rng.draws());
+        if let Some(rt) = fault_rt.as_ref() {
+            audit.note("fault", rt.draws());
+        }
         metrics.set_rng_audit(audit);
         Ok(metrics)
     }
@@ -1321,6 +2256,7 @@ impl DEdgeAi {
             || self.opts.queue_cap.is_some()
             || self.network_enabled()
             || self.qos_enabled()
+            || self.faults_enabled()
     }
 
     /// Virtual-clock entry point: the plain batch protocol keeps its
@@ -1350,12 +2286,13 @@ impl DEdgeAi {
             || self.opts.queue_cap.is_some()
             || self.network_enabled()
             || self.qos_enabled()
+            || self.faults_enabled()
         {
             bail!(
-                "placement, admission control, inter-edge topologies, and \
-                 QoS classes are virtual-clock features (the real-time path \
-                 runs one resident genmodel per worker on a real LAN); drop \
-                 --real-time"
+                "placement, admission control, inter-edge topologies, QoS \
+                 classes, and fault injection are virtual-clock features \
+                 (the real-time path runs one resident genmodel per worker \
+                 on a real LAN); drop --real-time"
             );
         }
         let artifacts = PathBuf::from(&self.opts.artifacts_dir);
@@ -1484,6 +2421,18 @@ pub fn serve_and_report(opts: &ServeOptions) -> Result<()> {
             }
         );
     }
+    if opts.faults.is_some() || opts.mtbf.is_some() || opts.mttr.is_some() {
+        println!(
+            "faults: {}{}, max retries {}",
+            opts.faults.as_deref().unwrap_or("(nothing scripted)"),
+            match (opts.mtbf, opts.mttr) {
+                (Some(b), Some(r)) =>
+                    format!(", stochastic mtbf {b:.0}s / mttr {r:.0}s"),
+                _ => String::new(),
+            },
+            opts.max_retries
+        );
+    }
     if let Some(rate) = opts.arrivals.rate() {
         let mean_z = sys.z_dist().mean();
         let mult = if placement_on {
@@ -1508,7 +2457,7 @@ pub fn serve_and_report(opts: &ServeOptions) -> Result<()> {
     t.row(vec!["median latency (s)".into(), fnum(metrics.median_latency(), 2)]);
     t.row(vec!["p95 latency (s)".into(), fnum(metrics.p95_latency(), 2)]);
     t.row(vec!["p99 latency (s)".into(), fnum(metrics.p99_latency(), 2)]);
-    if opts.queue_cap.is_some() {
+    if opts.queue_cap.is_some() || metrics.faults_active() {
         t.row(vec!["dropped".into(), metrics.dropped().to_string()]);
         t.row(vec!["drop rate".into(), fnum(metrics.drop_rate(), 3)]);
     }
@@ -1564,6 +2513,31 @@ pub fn serve_and_report(opts: &ServeOptions) -> Result<()> {
             fnum(metrics.cold_load_s(), 1),
         ]);
         t.row(vec!["model evictions".into(), metrics.evictions().to_string()]);
+    }
+    if metrics.faults_active() {
+        let f = metrics.faults();
+        t.row(vec![
+            "site down / up events".into(),
+            format!("{} / {}", f.site_down_events, f.site_up_events),
+        ]);
+        t.row(vec![
+            "killed / retried / recovered".into(),
+            format!("{} / {} / {}", f.kills, f.retries, f.recovered),
+        ]);
+        t.row(vec![
+            "retry-exhausted".into(),
+            f.exhausted_retries.to_string(),
+        ]);
+        if f.link_events > 0 {
+            t.row(vec![
+                "link fault events".into(),
+                f.link_events.to_string(),
+            ]);
+        }
+        t.row(vec![
+            "mean availability".into(),
+            fnum(metrics.mean_availability(), 3),
+        ]);
     }
     t.row(vec!["wallclock (s)".into(), fnum(wall, 2)]);
     println!("{}", t.render());
@@ -1777,6 +2751,30 @@ fn build_report(opts: &ServeOptions, metrics: &ServeMetrics, wall: f64) -> Json 
             );
         }
         doc.set("classes", classes);
+    }
+    if metrics.faults_active() {
+        let f = metrics.faults();
+        doc.set(
+            "faults",
+            Json::from_pairs(vec![
+                ("kills", Json::num(f.kills as f64)),
+                ("retries", Json::num(f.retries as f64)),
+                ("recovered", Json::num(f.recovered as f64)),
+                (
+                    "exhausted_retries",
+                    Json::num(f.exhausted_retries as f64),
+                ),
+                ("site_down_events", Json::num(f.site_down_events as f64)),
+                ("site_up_events", Json::num(f.site_up_events as f64)),
+                ("link_events", Json::num(f.link_events as f64)),
+                ("downtime_s", Json::arr_f64(&f.downtime_s)),
+                ("availability", Json::arr_f64(&metrics.availability())),
+                (
+                    "mean_availability",
+                    Json::num(metrics.mean_availability()),
+                ),
+            ]),
+        );
     }
     if !metrics.link_stats().is_empty() {
         let mut links = Json::obj();
@@ -2172,5 +3170,120 @@ mod tests {
         let (degraded, _rerouted) = m.degradations();
         assert!(degraded > 0, "no degradations at rho > 1");
         assert!(m.rng_audit().draws("qos") == Some(150));
+    }
+
+    #[test]
+    fn armed_but_idle_fault_plan_changes_nothing_but_the_ledger() {
+        // A scripted window that opens long after the run drains kills
+        // nothing: the schedule is bit-identical to the fault-free
+        // run; the only deltas are the (all-zero-draw) `fault` audit
+        // row and the armed ledger.
+        let base = ServeOptions {
+            requests: 60,
+            arrivals: ArrivalProcess::Poisson { rate: 0.25 },
+            z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+            ..ServeOptions::default()
+        };
+        let plain = DEdgeAi::new(base.clone()).run_virtual().unwrap();
+        let armed = DEdgeAi::new(ServeOptions {
+            faults: Some("site-down:2@1e7-1.1e7".into()),
+            ..base
+        })
+        .run_virtual()
+        .unwrap();
+        assert_eq!(plain.count(), armed.count());
+        assert_eq!(plain.per_worker(), armed.per_worker());
+        assert_eq!(plain.makespan().to_bits(), armed.makespan().to_bits());
+        assert_eq!(
+            plain.p99_latency().to_bits(),
+            armed.p99_latency().to_bits()
+        );
+        assert_eq!(plain.rng_audit().draws("fault"), None);
+        assert_eq!(armed.rng_audit().draws("fault"), Some(0));
+        assert!(armed.faults_active());
+        assert!(!plain.faults_active());
+        // the window opened and closed after the drain, killing nothing
+        let f = armed.faults();
+        assert_eq!(f.kills, 0);
+        assert_eq!(f.site_down_events, 1);
+        assert_eq!(f.site_up_events, 1);
+    }
+
+    #[test]
+    fn site_failure_kills_retries_and_conserves_requests() {
+        // Worker 2 (its own implicit site — no topology) dies mid-run:
+        // its in-flight jobs are killed, re-dispatched elsewhere, and
+        // every arrival leaves through exactly one book. Batch
+        // arrivals make the kill certain by construction: 100 queued
+        // jobs keep every worker busy far past the window's open.
+        let opts = ServeOptions {
+            requests: 100,
+            arrivals: ArrivalProcess::Batch,
+            z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+            faults: Some("site-down:2@60-200".into()),
+            ..ServeOptions::default()
+        };
+        let m = DEdgeAi::new(opts).run_virtual().unwrap();
+        let f = m.faults();
+        assert!(f.kills > 0, "nothing was running on worker 2 at t=60?");
+        assert_eq!(f.recovered + f.exhausted_retries, f.kills);
+        assert_eq!(
+            m.count() as u64 + m.dropped() + f.exhausted_retries,
+            100,
+            "conservation: served {} dropped {} exhausted {}",
+            m.count(),
+            m.dropped(),
+            f.exhausted_retries
+        );
+        // with four healthy workers, retries land somewhere
+        assert!(f.retries >= f.recovered);
+        assert!(f.downtime_s[2] > 0.0);
+        let avail = m.availability();
+        assert!(avail[2] < 1.0, "worker 2 availability {:?}", avail);
+        assert!(m.mean_availability() < 1.0);
+    }
+
+    #[test]
+    fn faulted_streaming_matches_eager_reference_bitwise() {
+        let opts = ServeOptions {
+            requests: 120,
+            arrivals: ArrivalProcess::Poisson { rate: 0.3 },
+            z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+            faults: Some("site-down:1@50-150;site-down:3@120-260".into()),
+            ..ServeOptions::default()
+        };
+        let sys = DEdgeAi::new(opts);
+        let s = sys.run_events().unwrap();
+        let e = sys.run_events_eager().unwrap();
+        assert_eq!(s.count(), e.count());
+        assert_eq!(s.per_worker(), e.per_worker());
+        assert_eq!(s.dropped(), e.dropped());
+        assert_eq!(s.makespan().to_bits(), e.makespan().to_bits());
+        assert_eq!(s.p99_latency().to_bits(), e.p99_latency().to_bits());
+        assert_eq!(s.faults(), e.faults());
+    }
+
+    #[test]
+    fn link_degrade_without_topology_is_rejected() {
+        let opts = ServeOptions {
+            requests: 5,
+            arrivals: ArrivalProcess::Poisson { rate: 0.2 },
+            faults: Some("link-degrade:0>1@10-20:x4".into()),
+            ..ServeOptions::default()
+        };
+        let err = DEdgeAi::new(opts).run_virtual().unwrap_err();
+        assert!(err.to_string().contains("topology"), "{err}");
+    }
+
+    #[test]
+    fn mtbf_without_mttr_is_rejected() {
+        let opts = ServeOptions {
+            requests: 5,
+            arrivals: ArrivalProcess::Poisson { rate: 0.2 },
+            mtbf: Some(300.0),
+            ..ServeOptions::default()
+        };
+        let err = DEdgeAi::new(opts).run_virtual().unwrap_err();
+        assert!(err.to_string().contains("together"), "{err}");
     }
 }

@@ -21,6 +21,8 @@
 //! state* is O(in-flight); metrics still record per-completion
 //! measures.)
 
+use anyhow::{bail, Context, Result};
+
 use crate::util::rng::{Rng, RngAudit};
 
 use super::arrivals::{ArrivalGen, ArrivalProcess, ZDist};
@@ -37,6 +39,79 @@ const Z_SALT: u64 = 0x57E9_D157;
 const MODEL_SALT: u64 = 0x3A9D_11AD;
 const SITE_SALT: u64 = 0x517E_0B17;
 const QOS_SALT: u64 = 0x0905_C1A5;
+
+/// How multi-site runs spread request origins over the edge sites
+/// (`--origin-dist`). Single-site runs draw no origin randomness under
+/// either variant.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OriginDist {
+    /// Every site equally likely: one `range_usize` draw per request —
+    /// the pre-fault default, bit-identical to the PR 8 origin stream.
+    Uniform,
+    /// Zipf(s) hot spots: site `k` carries weight `1/(k+1)^s`, so low-
+    /// index sites become hot. One uniform `f64` draw per request
+    /// against a precomputed CDF (two base draws — a different origin-
+    /// stream consumption than `Uniform`, which is fine: the stream is
+    /// isolated, so the other five streams stay untouched).
+    Zipf(f64),
+}
+
+impl OriginDist {
+    /// Parse an `--origin-dist` spec: `uniform` or `zipf:<s>` with a
+    /// positive finite exponent (`zipf:0` *is* uniform weighting, but
+    /// drawn via the CDF path; spell `uniform` for the zero-draw
+    /// default).
+    pub fn parse(spec: &str) -> Result<OriginDist> {
+        if spec == "uniform" {
+            return Ok(OriginDist::Uniform);
+        }
+        let Some(s) = spec.strip_prefix("zipf:") else {
+            bail!(
+                "unknown origin distribution '{spec}' \
+                 (expected uniform|zipf:<s>)"
+            );
+        };
+        let s: f64 = s
+            .trim()
+            .parse()
+            .with_context(|| format!("--origin-dist zipf: bad exponent '{s}'"))?;
+        if !s.is_finite() || s <= 0.0 {
+            bail!("--origin-dist zipf exponent must be positive, got {s}");
+        }
+        Ok(OriginDist::Zipf(s))
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            OriginDist::Uniform => "uniform".to_string(),
+            OriginDist::Zipf(s) => format!("zipf:{s}"),
+        }
+    }
+
+    /// The normalised CDF over `sites` origin weights (`None` for the
+    /// draw-free uniform path).
+    fn cdf(&self, sites: usize) -> Option<Vec<f64>> {
+        let OriginDist::Zipf(s) = *self else {
+            return None;
+        };
+        if sites <= 1 {
+            return None;
+        }
+        let weights: Vec<f64> =
+            (0..sites).map(|k| 1.0 / ((k + 1) as f64).powf(s)).collect();
+        let total: f64 = weights.iter().sum();
+        let mut acc = 0.0;
+        Some(
+            weights
+                .iter()
+                .map(|w| {
+                    acc += w / total;
+                    acc
+                })
+                .collect(),
+        )
+    }
+}
 
 /// Lazy, allocation-free generator of the deterministic request trace:
 /// a pure function of (arrivals, z-dist, model-dist, n, seed), emitted
@@ -55,23 +130,28 @@ pub struct RequestSource {
     /// QoS class assignment; `None` (and `Some(Fixed)`) draw no qos
     /// RNG — the pre-QoS bit-parity default.
     qm: Option<QosMix>,
-    /// Edge sites requests originate from (uniform); 1 = the
-    /// pre-network single-site default, which draws no site RNG.
+    /// Edge sites requests originate from; 1 = the pre-network
+    /// single-site default, which draws no site RNG.
     sites: usize,
+    /// Zipf origin CDF (`None`: the zero-extra-draws uniform default).
+    zipf_cdf: Option<Vec<f64>>,
     next_id: u64,
     remaining: usize,
 }
 
 impl RequestSource {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         seed: u64,
         arrivals: &ArrivalProcess,
         zd: ZDist,
         md: ModelDist,
         qm: Option<QosMix>,
+        od: &OriginDist,
         sites: usize,
         n: usize,
     ) -> Self {
+        let sites = sites.max(1);
         Self {
             corpus: Corpus::new(seed),
             arr_rng: Rng::new(seed ^ ARRIVAL_SALT),
@@ -83,7 +163,8 @@ impl RequestSource {
             zd,
             md,
             qm,
-            sites: sites.max(1),
+            zipf_cdf: od.cdf(sites),
+            sites,
             next_id: 0,
             remaining: n,
         }
@@ -136,11 +217,19 @@ impl Iterator for RequestSource {
             z: self.zd.sample(&mut self.z_rng),
             model: self.md.sample(&mut self.m_rng),
             // single-site runs consume no site randomness (the
-            // pre-network bit-parity guarantee)
-            origin: if self.sites > 1 {
-                self.site_rng.range_usize(0, self.sites - 1)
-            } else {
-                0
+            // pre-network bit-parity guarantee); a Zipf origin dist
+            // draws one CDF uniform instead of the range draw
+            origin: match &self.zipf_cdf {
+                Some(cdf) => {
+                    let u = self.site_rng.f64();
+                    cdf.iter()
+                        .position(|&c| u < c)
+                        .unwrap_or(self.sites - 1)
+                }
+                None if self.sites > 1 => {
+                    self.site_rng.range_usize(0, self.sites - 1)
+                }
+                None => 0,
             },
             qos: qos_id,
             // absolute deadline; INFINITY + t stays INFINITY, so the
@@ -167,6 +256,7 @@ mod tests {
             ZDist::Uniform { lo: 5, hi: 15 },
             ModelDist::Fixed(0),
             None,
+            &OriginDist::Uniform,
             1,
             n,
         )
@@ -213,6 +303,7 @@ mod tests {
             ZDist::Fixed(15),
             ModelDist::Fixed(0),
             None,
+            &OriginDist::Uniform,
             1,
             50,
         );
@@ -239,6 +330,7 @@ mod tests {
                 ZDist::Uniform { lo: 5, hi: 15 },
                 ModelDist::Fixed(0),
                 None,
+                &OriginDist::Uniform,
                 4,
                 n,
             )
@@ -266,6 +358,79 @@ mod tests {
     }
 
     #[test]
+    fn origin_dist_parses_and_rejects_bad_specs() {
+        assert_eq!(OriginDist::parse("uniform").unwrap(), OriginDist::Uniform);
+        assert_eq!(
+            OriginDist::parse("zipf:1.1").unwrap(),
+            OriginDist::Zipf(1.1)
+        );
+        assert_eq!(OriginDist::Zipf(1.1).label(), "zipf:1.1");
+        assert_eq!(OriginDist::Uniform.label(), "uniform");
+        for bad in ["zipf", "zipf:", "zipf:x", "zipf:0", "zipf:-1", "pareto"] {
+            assert!(OriginDist::parse(bad).is_err(), "{bad} should fail");
+        }
+    }
+
+    #[test]
+    fn zipf_origins_skew_hot_and_leave_other_streams_untouched() {
+        let zipf = |n: usize| {
+            RequestSource::new(
+                42,
+                &ArrivalProcess::Poisson { rate: 0.3 },
+                ZDist::Uniform { lo: 5, hi: 15 },
+                ModelDist::Fixed(0),
+                None,
+                &OriginDist::Zipf(1.2),
+                4,
+                n,
+            )
+        };
+        // the origin stream is isolated: arrival/caption/z/model draws
+        // are bit-identical to the single-site trace
+        let plain: Vec<Request> = src(400).collect();
+        let hot: Vec<Request> = zipf(400).collect();
+        let mut counts = [0usize; 4];
+        for (a, b) in plain.iter().zip(&hot) {
+            assert_eq!(a.submitted_at.to_bits(), b.submitted_at.to_bits());
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.z, b.z);
+            assert_eq!(a.model, b.model);
+            assert!(b.origin < 4);
+            counts[b.origin] += 1;
+        }
+        // Zipf(1.2) over 4 sites: site 0 carries ~46% of the mass and
+        // the ranks are monotone-decreasing in expectation
+        assert!(
+            counts[0] > counts[3],
+            "site 0 should be hot: counts={counts:?}"
+        );
+        assert!(
+            counts[0] as f64 > 0.3 * 400.0,
+            "hot site under-loaded: counts={counts:?}"
+        );
+        // seed-deterministic
+        let again: Vec<usize> = zipf(400).map(|r| r.origin).collect();
+        assert_eq!(again, hot.iter().map(|r| r.origin).collect::<Vec<_>>());
+        // exactly one f64 draw (two base draws) per request
+        let mut s = zipf(10);
+        s.by_ref().for_each(drop);
+        assert_eq!(s.audit().draws("origin"), Some(20));
+        // single-site zipf draws nothing at all
+        let mut one = RequestSource::new(
+            42,
+            &ArrivalProcess::Batch,
+            ZDist::Fixed(15),
+            ModelDist::Fixed(0),
+            None,
+            &OriginDist::Zipf(1.2),
+            1,
+            10,
+        );
+        one.by_ref().for_each(drop);
+        assert_eq!(one.audit().draws("origin"), Some(0));
+    }
+
+    #[test]
     fn qos_mix_leaves_the_other_streams_untouched() {
         // Same discipline as origins: the qos stream is its own seeded
         // RNG, so turning a mix on must not perturb any other draw,
@@ -278,6 +443,7 @@ mod tests {
                 ZDist::Uniform { lo: 5, hi: 15 },
                 ModelDist::Fixed(0),
                 Some(QosMix::parse("tiered").unwrap()),
+                &OriginDist::Uniform,
                 1,
                 n,
             )
@@ -321,6 +487,7 @@ mod tests {
             ZDist::Uniform { lo: 5, hi: 15 },
             ModelDist::Fixed(0),
             Some(QosMix::Fixed(qos::PREMIUM)),
+            &OriginDist::Uniform,
             1,
             50,
         );

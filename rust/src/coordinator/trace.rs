@@ -323,6 +323,87 @@ impl Tracer {
         ]));
     }
 
+    /// Fault injection: every worker at `site` went down.
+    pub fn site_down(&mut self, now: f64, site: usize) {
+        self.records.push(Json::from_pairs(vec![
+            ("type", Json::str("event")),
+            ("kind", Json::str("site-down")),
+            ("t", Json::num(now)),
+            ("site", Json::num(site as f64)),
+        ]));
+    }
+
+    /// Fault injection: `site` recovered (cold).
+    pub fn site_up(&mut self, now: f64, site: usize) {
+        self.records.push(Json::from_pairs(vec![
+            ("type", Json::str("event")),
+            ("kind", Json::str("site-up")),
+            ("t", Json::num(now)),
+            ("site", Json::num(site as f64)),
+        ]));
+    }
+
+    /// Fault injection: link `from → to` degraded by `factor`, or
+    /// restored (`factor == 1`).
+    pub fn link_change(&mut self, now: f64, from: usize, to: usize, factor: f64) {
+        let kind =
+            if factor == 1.0 { "link-restore" } else { "link-degrade" };
+        self.records.push(Json::from_pairs(vec![
+            ("type", Json::str("event")),
+            ("kind", Json::str(kind)),
+            ("t", Json::num(now)),
+            ("from", Json::num(from as f64)),
+            ("to", Json::num(to as f64)),
+            ("factor", Json::num(factor)),
+        ]));
+    }
+
+    /// A running or parked job was killed by a site failure. The
+    /// request stays pending — a retry may still serve it — but its
+    /// dispatch-time fields are reset so the eventual completion's
+    /// spans describe the *serving* dispatch, not the killed one.
+    pub fn kill(&mut self, now: f64, id: u64, worker: usize) {
+        if let Some(p) = self.pending.get_mut(&id) {
+            p.worker = 0;
+            p.up = 0.0;
+            p.gen = 0.0;
+            p.down = 0.0;
+            p.load_delay = 0.0;
+            p.up_bits = 0.0;
+            p.down_bits = 0.0;
+            p.start = f64::NAN;
+        }
+        self.records.push(Json::from_pairs(vec![
+            ("type", Json::str("event")),
+            ("kind", Json::str("kill")),
+            ("t", Json::num(now)),
+            ("id", Json::num(id as f64)),
+            ("worker", Json::num(worker as f64)),
+        ]));
+    }
+
+    /// Re-dispatch attempt `attempt` for a killed request fired.
+    pub fn retry(&mut self, now: f64, id: u64, attempt: u32) {
+        self.records.push(Json::from_pairs(vec![
+            ("type", Json::str("event")),
+            ("kind", Json::str("retry")),
+            ("t", Json::num(now)),
+            ("id", Json::num(id as f64)),
+            ("attempt", Json::num(attempt as f64)),
+        ]));
+    }
+
+    /// A killed request ran out of retry budget and was abandoned.
+    pub fn exhaust(&mut self, now: f64, id: u64) {
+        self.pending.remove(&id);
+        self.records.push(Json::from_pairs(vec![
+            ("type", Json::str("event")),
+            ("kind", Json::str("retry-exhausted")),
+            ("t", Json::num(now)),
+            ("id", Json::num(id as f64)),
+        ]));
+    }
+
     /// Seal the recording.
     pub fn finish(self) -> TraceLog {
         TraceLog {
@@ -589,7 +670,10 @@ impl TraceLog {
                 }
                 "event" => {
                     let kind = js(r, "kind");
-                    if kind == "drop" || kind == "evict" {
+                    if kind == "drop"
+                        || kind == "evict"
+                        || kind == "retry-exhausted"
+                    {
                         series.windows[idx(jf(r, "t"))].drops += 1;
                     }
                 }
@@ -927,6 +1011,57 @@ mod tests {
         t.admit(&r, 15, r.model, 0.0); // demanded 15, served 8
         let log = t.finish();
         assert_eq!(log.count_events("degrade"), 1);
+    }
+
+    #[test]
+    fn fault_hooks_emit_events_and_reset_killed_dispatch_state() {
+        let mut t = Tracer::new(2, None);
+        t.site_down(10.0, 0);
+        t.link_change(10.0, 0, 1, 8.0);
+        // request dispatched to worker 1 then killed there at t=12
+        let r = req(4, 9.0);
+        t.admit(&r, r.z, r.model, 9.0);
+        t.dispatch(&r, 1, 0.0, 4.0, 0.0, 0.5);
+        t.start(r.id, 10.0);
+        t.kill(12.0, r.id, 1);
+        t.retry(12.5, r.id, 1);
+        // the retry serves on worker 0; spans must describe *this*
+        // dispatch (gen on worker 0), not the killed one
+        t.dispatch(&r, 0, 0.0, 4.0, 0.0, 0.0);
+        t.start(r.id, 13.0);
+        t.complete(&resp(&r, 0, 8.0, 4.0), 17.0);
+        // a second request exhausts its budget
+        let e = req(5, 9.5);
+        t.admit(&e, e.z, e.model, 9.5);
+        t.kill(12.0, e.id, 1);
+        t.retry(12.5, e.id, 1);
+        t.exhaust(14.0, e.id);
+        t.site_up(15.0, 0);
+        t.link_change(15.0, 0, 1, 1.0);
+        let log = t.finish();
+        for kind in [
+            "site-down",
+            "site-up",
+            "link-degrade",
+            "link-restore",
+            "retry-exhausted",
+        ] {
+            assert_eq!(log.count_events(kind), 1, "{kind}");
+        }
+        assert_eq!(log.count_events("kill"), 2);
+        assert_eq!(log.count_events("retry"), 2);
+        // the exhausted request left no req record; the recovered one
+        // completed with its gen span on the retry worker
+        assert_eq!(log.count_type("req"), 1);
+        for rec in log.records() {
+            if js(rec, "type") == "span" && js(rec, "phase") == "gen" {
+                assert_eq!(jf(rec, "worker"), 0.0, "span from killed leg");
+            }
+        }
+        // an exhausted loss bins as a drop in the windowed series
+        let series = log.windows(20.0);
+        assert_eq!(series.windows[0].drops, 1);
+        assert_eq!(series.windows[0].served, 1);
     }
 
     #[test]

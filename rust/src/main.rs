@@ -40,13 +40,17 @@ dedgeai — latent action diffusion scheduling for AIGC edge services
 USAGE:
   dedgeai train --method lad-ts [--episodes 60] [--seed 42]
   dedgeai exp <fig5|fig6a|fig6b|fig7a|fig7b|fig8a|fig8b|table5|mem|ablation|
-               serve-sweep|placement-sweep|topology-sweep|qos-sweep|all>
+               serve-sweep|placement-sweep|topology-sweep|qos-sweep|
+               failover-sweep|all>
   dedgeai serve [--workers 5] [--requests 100] [--real-time]
                 [--arrivals poisson --rate 0.3] [--z-dist uniform:5,15]
+                [--origin-dist zipf:1.1]
                 [--model-dist mix:resd3-m=0.7,sd3-medium=0.3]
                 [--worker-vram 24,24,24,24,48] [--queue-cap 50]
                 [--topology wan --sites 5 --site-of 0,1,2,3,4]
                 [--qos-mix deadline-tight --method edf-ll]
+                [--faults 'site-down:2@120-180' --max-retries 3]
+                [--mtbf 3600 --mttr 120]
                 [--trace-out trace.jsonl --trace-format jsonl|chrome]
                 [--window 10 --window-csv windows.csv]
                 [--report-json report.json]
@@ -125,6 +129,29 @@ OPTIONS (network / topology-sweep):
                      e.g. '1000,200;150,1000' (RTTs keep the profile)
   --topology-profiles P  topology-sweep profiles, comma-separated,
                      e.g. uniform,lan,wan,degraded:0
+
+OPTIONS (faults / failover-sweep):
+  --faults SPEC      deterministic fault plan, ';'-separated windows in
+                     virtual seconds: site-down:<site>@<start>-<end> |
+                     link-degrade:<from>><to>@<start>-<end>:x<factor>
+                     (link faults need --topology); arms the fault
+                     subsystem: killed jobs are re-dispatched with
+                     bounded retries, down sites are masked out of
+                     dispatch, and the ledger proves conservation
+                     (served + dropped + retry-exhausted == arrivals)
+  --mtbf S           stochastic mode: mean virtual seconds between
+                     site failures (exponential, seeded 'fault'
+                     stream; requires --mttr)
+  --mttr S           stochastic mode: mean virtual seconds to repair
+                     (requires --mtbf)
+  --max-retries N    re-dispatch attempts per killed job before it is
+                     counted retry-exhausted (default 3; exponential
+                     virtual-time backoff from 0.5s)
+  --origin-dist D    request origin-site distribution: uniform |
+                     zipf:<s>  (default uniform; zipf skews arrivals
+                     toward low-numbered sites, stressing failover)
+  --fault-plans P    failover-sweep fault plans, '|'-separated --faults
+                     specs (the specs themselves contain ';')
 
 OPTIONS (qos / qos-sweep):
   --qos-mix M        QoS class mix: tiered | deadline-tight | NAME |
@@ -294,6 +321,27 @@ fn exp_config(args: &Args) -> Result<ExpConfig> {
     cfg.qos.requests = args.usize_or("serve-requests", cfg.qos.requests)?;
     cfg.qos.arrivals = args.str_or("arrivals", &cfg.qos.arrivals);
     cfg.qos.z_dist = args.str_or("z-dist", &cfg.qos.z_dist);
+    // failover-sweep grid overrides (rates/schedulers/sites/arrivals/
+    // z-dist shared with the other serving sweeps; fault plans are
+    // '|'-separated because --faults specs contain ';')
+    if let Some(rates) = args.list_f64("rates")? {
+        cfg.failover.rates = rates;
+    }
+    if let Some(s) = args.get("schedulers") {
+        cfg.failover.schedulers =
+            s.split(',').map(|x| x.trim().to_string()).collect();
+    }
+    if let Some(p) = args.get("fault-plans") {
+        cfg.failover.fault_plans =
+            p.split('|').map(|x| x.trim().to_string()).collect();
+    }
+    cfg.failover.sites = args.usize_or("sites", cfg.failover.sites)?;
+    cfg.failover.requests =
+        args.usize_or("serve-requests", cfg.failover.requests)?;
+    cfg.failover.arrivals = args.str_or("arrivals", &cfg.failover.arrivals);
+    cfg.failover.z_dist = args.str_or("z-dist", &cfg.failover.z_dist);
+    cfg.failover.max_retries =
+        args.usize_or("max-retries", cfg.failover.max_retries as usize)? as u32;
     Ok(cfg)
 }
 
@@ -414,6 +462,24 @@ fn serve_options(args: &Args) -> Result<coordinator::ServeOptions> {
         Some(spec) => Some(QosMix::parse(spec)?),
         None => None,
     };
+    // faults: --faults (scripted plan) and/or --mtbf/--mttr
+    // (stochastic) arm the fault subsystem; --origin-dist skews which
+    // site requests arrive at (independent of faults, but the pair is
+    // how the failover scenarios stress a hot site)
+    let faults = args.get("faults").map(String::from);
+    let mtbf = match args.get("mtbf") {
+        Some(_) => Some(args.f64_or("mtbf", 0.0)?),
+        None => None,
+    };
+    let mttr = match args.get("mttr") {
+        Some(_) => Some(args.f64_or("mttr", 0.0)?),
+        None => None,
+    };
+    let max_retries = args.usize_or("max-retries", 3)? as u32;
+    let origin_dist = match args.get("origin-dist") {
+        Some(spec) => Some(coordinator::OriginDist::parse(spec)?),
+        None => None,
+    };
     // observability: any sink flag arms the tracer inside
     // serve_and_report; the `trace` bool itself stays false here so
     // verify-determinism can arm it explicitly on both runs
@@ -461,6 +527,11 @@ fn serve_options(args: &Args) -> Result<coordinator::ServeOptions> {
         queue_cap,
         network,
         qos_mix,
+        faults,
+        mtbf,
+        mttr,
+        max_retries,
+        origin_dist,
         trace: false,
         trace_out: args.get("trace-out").map(String::from),
         trace_format,
@@ -565,6 +636,15 @@ fn cmd_verify_determinism(args: &Args) -> Result<()> {
         t.row(vec![stream.to_string(), draws.to_string()]);
     }
     println!("{}", t.render());
+    if let Some(draws) = report.audit.draws("fault") {
+        // the fault stream is audited only when faults are armed; a
+        // zero-draw row is the correct reading for scripted-only
+        // plans (virtual-time windows consume no randomness)
+        println!(
+            "fault stream armed: {draws} draw(s){}",
+            if draws == 0 { " (scripted plan — zero is expected)" } else { "" }
+        );
+    }
     if let Some(hash) = report.trace_hash {
         println!("trace hash: {hash:016x} (fnv1a over the JSONL trace)");
     }

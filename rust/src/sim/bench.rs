@@ -33,6 +33,7 @@ use crate::coordinator::network::NetOptions;
 use crate::coordinator::placement::{Catalog, ModelDist};
 use crate::coordinator::qos::QosMix;
 use crate::coordinator::service::{DEdgeAi, ServeOptions};
+use crate::coordinator::source::OriginDist;
 use crate::util::json::Json;
 use crate::util::table::{fnum, Table};
 
@@ -187,6 +188,32 @@ pub fn scenarios(budget: usize, seed: u64) -> Vec<Scenario> {
                     QosMix::parse("deadline-tight").expect("static spec parses"),
                 ),
                 network: Some(NetOptions::profile_only("wan", 5)),
+                ..base(budget / 5)
+            },
+        },
+        Scenario {
+            name: "flash-crowd-failover",
+            what: "zipf-hot origins + mid-run outage of the hot site \
+                   under bursty load: kill/retry/re-dispatch, masked \
+                   dispatch, and the fault ledger on the hot path",
+            opts: ServeOptions {
+                arrivals: ArrivalProcess::parse("bursty", 0.9 * cap)
+                    .expect("static spec parses"),
+                scheduler: "net-ll".into(),
+                origin_dist: Some(
+                    OriginDist::parse("zipf:1.1").expect("static spec parses"),
+                ),
+                qos_mix: Some(
+                    QosMix::parse("tiered").expect("static spec parses"),
+                ),
+                network: Some(NetOptions::profile_only("wan", 5)),
+                // one scripted outage of the Zipf-hot site early enough
+                // that even the CI smoke budget crosses it, plus a
+                // seeded stochastic background so long runs keep
+                // exercising the kill/retry path end to end
+                faults: Some("site-down:0@30-120".into()),
+                mtbf: Some(3600.0),
+                mttr: Some(120.0),
                 ..base(budget / 5)
             },
         },
@@ -353,7 +380,7 @@ mod tests {
     #[test]
     fn scenario_set_covers_the_acceptance_matrix() {
         let set = scenarios(1_000_000, 42);
-        assert!(set.len() >= 6);
+        assert!(set.len() >= 7);
         let names: Vec<&str> = set.iter().map(|s| s.name).collect();
         for want in [
             "batch",
@@ -362,6 +389,7 @@ mod tests {
             "saturation-capped",
             "topology-churn",
             "qos-pressure",
+            "flash-crowd-failover",
         ] {
             assert!(names.contains(&want), "missing scenario '{want}'");
         }
@@ -381,7 +409,7 @@ mod tests {
         // scenario (placement feasibility, caps, replace ticks) and
         // produce sane measurements.
         let ms = run_scenarios(scenarios(400, 42), 1).unwrap();
-        assert_eq!(ms.len(), 6);
+        assert_eq!(ms.len(), 7);
         // the deadline-tight scenario must exercise the degradation path
         let qp = ms.iter().find(|m| m.name == "qos-pressure").unwrap();
         assert!(qp.summary.degraded > 0, "no degradations at 1.1x load");
@@ -392,13 +420,24 @@ mod tests {
             // run_scenarios — reaching here means it passed)
             assert!(m.trace_wall_s >= 0.0);
             assert!(m.trace_overhead_pct().is_finite());
+            // conservation under faults: every offered request is
+            // served, dropped, or abandoned after its retry budget
+            // (the last two are zero for the fault-free scenarios)
             assert_eq!(
-                m.summary.served + m.summary.dropped as usize,
+                m.summary.served
+                    + m.summary.dropped as usize
+                    + m.summary.exhausted_retries as usize,
                 m.requests,
-                "{}: served+dropped != offered",
+                "{}: served+dropped+exhausted != offered",
                 m.name
             );
         }
+        // the failover scenario must cross its scripted outage window
+        let fc = ms.iter().find(|m| m.name == "flash-crowd-failover").unwrap();
+        assert!(
+            fc.summary.mean_availability < 1.0,
+            "the hot site's outage recorded no downtime"
+        );
         // the capped scenario must exercise the drop path at 2x load
         // (budget 400 -> cap clamps to 10)
         let sat = ms.iter().find(|m| m.name == "saturation-capped").unwrap();

@@ -37,12 +37,14 @@ use crate::agents::{make_scheduler, Method};
 use crate::config::{AgentConfig, EnvConfig, ExpConfig};
 use crate::coordinator::arrivals::{ArrivalProcess, ZDist};
 use crate::coordinator::clock;
+use crate::coordinator::faults::FaultPlan;
 use crate::coordinator::models::{reduction_pct, ModelStack};
 use crate::coordinator::network::{NetOptions, Topology};
 use crate::coordinator::placement::{parse_vram_spec, Catalog, ModelDist};
 use crate::coordinator::platforms::PLATFORMS;
 use crate::coordinator::qos::{self, QosMix};
 use crate::coordinator::service::{DEdgeAi, ServeOptions};
+use crate::coordinator::source::OriginDist;
 use crate::coordinator::ServeMetrics;
 use crate::runtime::XlaRuntime;
 use crate::util::json::Json;
@@ -202,6 +204,16 @@ pub struct ServeSummary {
     pub premium_misses: u64,
     pub degraded: u64,
     pub rerouted: u64,
+    /// Fault accounting (all zero when fault injection is off): jobs
+    /// killed by site failures, successful re-dispatches, and killed
+    /// jobs abandoned after the retry budget. Conservation under
+    /// faults: `served + dropped + exhausted_retries == arrivals`.
+    pub kills: u64,
+    pub retries: u64,
+    pub exhausted_retries: u64,
+    /// Fleet mean availability over the makespan (1.0 when no
+    /// downtime was recorded).
+    pub mean_availability: f64,
 }
 
 impl ServeSummary {
@@ -238,6 +250,10 @@ impl ServeSummary {
                 .unwrap_or(0),
             degraded: m.degradations().0,
             rerouted: m.degradations().1,
+            kills: m.faults().kills,
+            retries: m.faults().retries,
+            exhausted_retries: m.faults().exhausted_retries,
+            mean_availability: m.mean_availability(),
         }
     }
 
@@ -308,11 +324,12 @@ pub fn run_experiment(
         "placement-sweep" => placement_sweep(&ctx),
         "topology-sweep" => topology_sweep(&ctx),
         "qos-sweep" => qos_sweep(&ctx),
+        "failover-sweep" => failover_sweep(&ctx),
         "all" => {
             for id in [
                 "fig5", "fig6a", "fig6b", "fig7a", "fig7b", "fig8a", "fig8b",
                 "table5", "mem", "ablation", "serve-sweep", "placement-sweep",
-                "topology-sweep", "qos-sweep",
+                "topology-sweep", "qos-sweep", "failover-sweep",
             ] {
                 println!("\n================ {id} ================");
                 run_experiment(id, env, agent, exp)?;
@@ -322,7 +339,7 @@ pub fn run_experiment(
         other => bail!(
             "unknown experiment '{other}' (fig5|fig6a|fig6b|fig7a|fig7b|\
              fig8a|fig8b|table5|mem|ablation|serve-sweep|placement-sweep|\
-             topology-sweep|qos-sweep|all)"
+             topology-sweep|qos-sweep|failover-sweep|all)"
         ),
     }
 }
@@ -1036,6 +1053,7 @@ fn placement_sweep(ctx: &Ctx) -> Result<()> {
                         replace_every: pc.replace_every,
                         queue_cap,
                         network: None,
+                        ..ServeOptions::default()
                     });
                     cells.push((pi, mi, rate, sched.clone(), workers, mult));
                 }
@@ -1423,4 +1441,180 @@ fn qos_sweep(ctx: &Ctx) -> Result<()> {
         &csv_rows,
     )?;
     output::write_json(&ctx.exp.out_dir, "qos_sweep", &result)
+}
+
+// ---------------------------------------------------------------------------
+// failover-sweep — fault-injected open-loop serving.
+// ---------------------------------------------------------------------------
+
+fn failover_sweep(ctx: &Ctx) -> Result<()> {
+    let fc = &ctx.exp.failover;
+    if fc.schedulers.is_empty() || fc.rates.is_empty() || fc.fault_plans.is_empty()
+    {
+        bail!("failover-sweep: empty grid (need rates, schedulers, fault plans)");
+    }
+    if fc.arrivals == "batch" {
+        bail!(
+            "failover-sweep is an open-loop rate sweep; '--arrivals batch' \
+             has no rate dimension"
+        );
+    }
+    // validate every plan upfront (fail fast, before spawning work);
+    // the empty spec is the no-fault baseline cell
+    for spec in &fc.fault_plans {
+        if !spec.is_empty() {
+            FaultPlan::parse(spec)?.validate(fc.sites)?;
+        }
+    }
+    let z_dist = ZDist::parse(&fc.z_dist)?;
+    // one worker per site on the wan profile, Zipf-skewed origins so
+    // one site is hot — failing it is the worst-case outage; tiered
+    // QoS keeps the edf-ll policy and the premium column meaningful
+    let workers = fc.sites;
+    let qos_mix = QosMix::parse("tiered")?;
+    let origin = OriginDist::parse("zipf:1.1")?;
+
+    let mut units = Vec::new();
+    let mut cells: Vec<(usize, f64, String)> = Vec::new();
+    for (fi, spec) in fc.fault_plans.iter().enumerate() {
+        for &rate in &fc.rates {
+            for sched in &fc.schedulers {
+                units.push(ServeOptions {
+                    workers,
+                    requests: fc.requests,
+                    real_time: false,
+                    seed: ctx.exp.seed,
+                    artifacts_dir: ctx.exp.artifacts_dir.clone(),
+                    scheduler: sched.clone(),
+                    z_steps: clock::DEFAULT_Z,
+                    arrivals: ArrivalProcess::parse(&fc.arrivals, rate)?,
+                    z_dist: Some(z_dist.clone()),
+                    network: Some(NetOptions::profile_only("wan", fc.sites)),
+                    qos_mix: Some(qos_mix.clone()),
+                    faults: if spec.is_empty() {
+                        None
+                    } else {
+                        Some(spec.clone())
+                    },
+                    max_retries: fc.max_retries,
+                    origin_dist: Some(origin.clone()),
+                    ..ServeOptions::default()
+                });
+                cells.push((fi, rate, sched.clone()));
+            }
+        }
+    }
+    println!(
+        "failover-sweep — open-loop {} arrivals, {} requests/cell, z ~ {}, \
+         wan over {} site(s), zipf:1.1 origins, max {} retries ({} cells: \
+         {} plan(s) x {} rate(s) x {} policy(ies), --jobs {})",
+        fc.arrivals,
+        fc.requests,
+        fc.z_dist,
+        fc.sites,
+        fc.max_retries,
+        units.len(),
+        fc.fault_plans.len(),
+        fc.rates.len(),
+        fc.schedulers.len(),
+        ctx.exp.jobs
+    );
+    for (fi, spec) in fc.fault_plans.iter().enumerate() {
+        println!(
+            "  plan {fi}: {}",
+            if spec.is_empty() { "(no faults)" } else { spec }
+        );
+    }
+    let t0 = std::time::Instant::now();
+    let summaries = run_serve_units(units, ctx.exp.jobs)?;
+    println!("  simulated in {:.1}s", t0.elapsed().as_secs_f64());
+
+    let mut table = Table::new(&[
+        "plan", "rate (req/s)", "rho", "policy", "p99 (s)", "premium miss",
+        "kills", "retried", "exhausted", "drop", "avail",
+    ])
+    .left_first()
+    .title("failover-sweep — fault-injected serving measures");
+    let mut result = Json::obj();
+    let mut csv_rows = Vec::new();
+    for ((fi, rate, sched), s) in cells.iter().zip(&summaries) {
+        let rho = rate / clock::fleet_capacity_rps(workers, z_dist.mean());
+        let premium_miss = if s.premium_count > 0 {
+            s.premium_misses as f64 / s.premium_count as f64
+        } else {
+            0.0
+        };
+        // the ledger's conservation law, re-checked at the sweep
+        // level: nothing a fault kills may vanish from the books
+        let accounted =
+            s.served as u64 + s.dropped + s.exhausted_retries;
+        if accounted != fc.requests as u64 {
+            bail!(
+                "failover-sweep: conservation violated in plan {fi} \
+                 (rate {rate}, {sched}): served {} + dropped {} + \
+                 exhausted {} != {} arrivals",
+                s.served,
+                s.dropped,
+                s.exhausted_retries,
+                fc.requests
+            );
+        }
+        table.row(vec![
+            fi.to_string(),
+            fnum(*rate, 3),
+            fnum(rho, 2),
+            sched.clone(),
+            fnum(s.p99, 2),
+            fnum(premium_miss, 3),
+            s.kills.to_string(),
+            s.retries.to_string(),
+            s.exhausted_retries.to_string(),
+            s.dropped.to_string(),
+            fnum(s.mean_availability, 3),
+        ]);
+        let sched_idx = fc.schedulers.iter().position(|x| x == sched).unwrap();
+        csv_rows.push(vec![
+            *fi as f64,
+            *rate,
+            rho,
+            sched_idx as f64,
+            s.p50,
+            s.p95,
+            s.p99,
+            premium_miss,
+            s.kills as f64,
+            s.retries as f64,
+            s.exhausted_retries as f64,
+            s.dropped as f64,
+            s.mean_availability,
+        ]);
+        result.set(
+            &format!("plan{fi}_r{rate}_{sched}"),
+            Json::from_pairs(vec![
+                ("served", Json::num(s.served as f64)),
+                ("rho", Json::num(rho)),
+                ("p50", Json::num(s.p50)),
+                ("p95", Json::num(s.p95)),
+                ("p99", Json::num(s.p99)),
+                ("premium_miss_rate", Json::num(premium_miss)),
+                ("kills", Json::num(s.kills as f64)),
+                ("retries", Json::num(s.retries as f64)),
+                ("exhausted_retries", Json::num(s.exhausted_retries as f64)),
+                ("dropped", Json::num(s.dropped as f64)),
+                ("mean_availability", Json::num(s.mean_availability)),
+            ]),
+        );
+    }
+    println!("{}", table.render());
+    output::write_csv(
+        &ctx.exp.out_dir,
+        "failover_sweep",
+        &[
+            "plan_idx", "rate", "rho", "sched_idx", "p50", "p95", "p99",
+            "premium_miss_rate", "kills", "retries", "exhausted", "dropped",
+            "mean_availability",
+        ],
+        &csv_rows,
+    )?;
+    output::write_json(&ctx.exp.out_dir, "failover_sweep", &result)
 }

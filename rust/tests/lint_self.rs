@@ -108,10 +108,15 @@ fn trace_module_is_pinned_to_virtual_time() {
         render(&f)
     );
     // ...but under the pinned trace module both the read AND the
-    // pragma are findings, on every pinned file
-    for pin in
-        ["coordinator/trace.rs", "coordinator/events.rs", "coordinator/metrics.rs"]
-    {
+    // pragma are findings, on every pinned file (faults.rs joined the
+    // pin in ISSUE 9: a wall-clock read there would poison every
+    // fault window and retry backoff)
+    for pin in [
+        "coordinator/trace.rs",
+        "coordinator/events.rs",
+        "coordinator/metrics.rs",
+        "coordinator/faults.rs",
+    ] {
         let f = lint_source(pin, &pragma);
         assert_eq!(f.len(), 2, "{pin}:\n{}", render(&f));
         assert!(f.iter().any(|x| x.rule == "wall-clock"), "{pin}");

@@ -1,0 +1,430 @@
+//! Fault-injection guard suite (ISSUE 9): the faulted serving stack
+//! must (a) reproduce the fault-free engine *bitwise* when the fault
+//! options are unset — and when they are armed but every scripted
+//! window opens after the run drains — (b) keep the streaming and
+//! eager engines bit-identical with kills, retries, masked dispatch,
+//! and link degradation all firing, (c) conserve requests exactly
+//! (`served + dropped + retry-exhausted == arrivals`) on every faulted
+//! configuration, (d) drain the backlog after a full outage and
+//! degrade to retry-exhaustion when the budget runs out, and (e) skew
+//! origins per `--origin-dist zipf` with the documented draw counts on
+//! the isolated `origin` stream. No AOT artifacts required.
+
+use dedgeai::coordinator::arrivals::{ArrivalProcess, ZDist};
+use dedgeai::coordinator::faults;
+use dedgeai::coordinator::network::NetOptions;
+use dedgeai::coordinator::placement::{self, ModelDist};
+use dedgeai::coordinator::qos::QosMix;
+use dedgeai::coordinator::service::{DEdgeAi, ServeOptions};
+use dedgeai::coordinator::source::{OriginDist, RequestSource};
+use dedgeai::coordinator::ServeMetrics;
+use dedgeai::util::prop;
+
+/// Bitwise equality over the core serving measures. Queue peaks are
+/// excluded: an armed-but-idle run keeps two future fault events in
+/// the event heap (shifting `queue.len()`), and the eager reference
+/// queues all arrivals up front — neither changes the schedule.
+fn assert_bit_identical(a: &ServeMetrics, b: &ServeMetrics, label: &str) {
+    assert_eq!(a.count(), b.count(), "{label}: count");
+    assert_eq!(a.per_worker(), b.per_worker(), "{label}: per_worker");
+    assert_eq!(a.dropped(), b.dropped(), "{label}: dropped");
+    assert_eq!(
+        a.makespan().to_bits(),
+        b.makespan().to_bits(),
+        "{label}: makespan {} vs {}",
+        a.makespan(),
+        b.makespan()
+    );
+    assert_eq!(
+        a.median_latency().to_bits(),
+        b.median_latency().to_bits(),
+        "{label}: p50"
+    );
+    assert_eq!(
+        a.p99_latency().to_bits(),
+        b.p99_latency().to_bits(),
+        "{label}: p99"
+    );
+    assert_eq!(
+        a.mean_latency().to_bits(),
+        b.mean_latency().to_bits(),
+        "{label}: mean TIS"
+    );
+    assert_eq!(
+        a.mean_queue_wait().to_bits(),
+        b.mean_queue_wait().to_bits(),
+        "{label}: queue wait"
+    );
+    assert_eq!(
+        a.mean_trans_time().to_bits(),
+        b.mean_trans_time().to_bits(),
+        "{label}: mean transmission"
+    );
+    assert_eq!(a.cache_hits(), b.cache_hits(), "{label}: cache hits");
+    assert_eq!(a.cache_misses(), b.cache_misses(), "{label}: cache misses");
+    assert_eq!(a.evictions(), b.evictions(), "{label}: evictions");
+    assert_eq!(
+        a.cold_load_s().to_bits(),
+        b.cold_load_s().to_bits(),
+        "{label}: cold load"
+    );
+    assert_eq!(
+        a.link_stats().keys().collect::<Vec<_>>(),
+        b.link_stats().keys().collect::<Vec<_>>(),
+        "{label}: link set"
+    );
+}
+
+fn random_arrivals(g: &mut prop::Gen) -> ArrivalProcess {
+    match g.usize(0, 2) {
+        0 => ArrivalProcess::Batch,
+        1 => ArrivalProcess::Poisson { rate: g.f64(0.05, 0.5) },
+        _ => ArrivalProcess::Bursty {
+            rate: g.f64(0.1, 0.4),
+            burst: g.f64(2.0, 6.0),
+            dwell: g.f64(10.0, 60.0),
+        },
+    }
+}
+
+/// A random pre-fault serving configuration spanning the PR 8 feature
+/// grid: arrival process, z demand, policy, placement, admission cap,
+/// topology, QoS, seed.
+fn random_base(g: &mut prop::Gen) -> ServeOptions {
+    let policy = *g.choose(&["least-loaded", "round-robin", "cache-ll"]);
+    let workers = g.usize(2, 6);
+    let (model_dist, worker_vram) = if policy.starts_with("cache") {
+        let mut vram = vec![24.0; workers];
+        vram[workers - 1] = 48.0;
+        (
+            Some(ModelDist::Mix {
+                ids: vec![placement::RESD3M, placement::RESD3_TURBO],
+                weights: vec![0.5, 0.5],
+            }),
+            Some(vram),
+        )
+    } else {
+        (None, None)
+    };
+    ServeOptions {
+        workers,
+        requests: g.size(5, 80),
+        seed: g.usize(0, 10_000) as u64,
+        scheduler: policy.into(),
+        arrivals: random_arrivals(g),
+        z_dist: Some(match g.usize(0, 1) {
+            0 => ZDist::Fixed(g.usize(5, 20)),
+            _ => ZDist::Uniform { lo: 5, hi: 15 },
+        }),
+        model_dist,
+        worker_vram,
+        queue_cap: match g.usize(0, 2) {
+            0 => Some(g.usize(3, 30)),
+            _ => None,
+        },
+        network: match g.usize(0, 2) {
+            0 => Some(NetOptions::profile_only("wan", g.usize(2, 5))),
+            _ => None,
+        },
+        qos_mix: match g.usize(0, 2) {
+            0 => Some(QosMix::parse("tiered").unwrap()),
+            _ => None,
+        },
+        ..ServeOptions::default()
+    }
+}
+
+#[test]
+fn armed_but_idle_faults_match_the_plain_engine_bitwise() {
+    // Property over the PR 8 grid: arming the fault subsystem with a
+    // window that opens long after the run drains must reproduce the
+    // fault-free engine bit for bit on BOTH engines — the ladder rung
+    // that pins "--faults unset (or idle) changes nothing".
+    prop::check("idle faults == plain", 30, |g| {
+        let base = random_base(g);
+        let plain = DEdgeAi::new(base.clone()).run_events().unwrap();
+        let armed = DEdgeAi::new(ServeOptions {
+            faults: Some("site-down:0@9e8-9.1e8".into()),
+            ..base
+        });
+        let streamed = armed.run_events().unwrap();
+        let eager = armed.run_events_eager().unwrap();
+        assert_bit_identical(&streamed, &plain, "armed-idle vs plain");
+        assert_bit_identical(&eager, &plain, "armed-idle eager vs plain");
+        // every shared stream agrees draw for draw; the seventh stream
+        // exists only on the armed run and stays silent (scripted
+        // windows consume no randomness)
+        for stream in
+            ["arrival", "caption", "z", "model", "origin", "qos", "gen-jitter"]
+        {
+            assert_eq!(
+                streamed.rng_audit().draws(stream),
+                plain.rng_audit().draws(stream),
+                "stream {stream}"
+            );
+        }
+        assert_eq!(plain.rng_audit().draws("fault"), None);
+        assert_eq!(streamed.rng_audit().draws("fault"), Some(0));
+        assert!(streamed.faults_active());
+        assert!(!plain.faults_active());
+        assert_eq!(streamed.faults().kills, 0);
+    });
+}
+
+#[test]
+fn streaming_equals_eager_with_faults_firing() {
+    // The PR 4 parity contract extended across the fault axis: scripted
+    // outages (and sometimes a stochastic failure process and a link
+    // fault) kill, retry, and mask mid-run — streaming == eager
+    // bitwise, including the whole fault ledger.
+    prop::check("faulted streaming == eager", 30, |g| {
+        let mut base = random_base(g);
+        if g.usize(0, 2) == 0 {
+            // cover the EDF backlog-reroute path too: parked deadline
+            // jobs on a dying site must re-enter dispatch identically
+            // in both engines
+            base.scheduler = "edf-ll".into();
+            base.qos_mix = Some(QosMix::parse("tiered").unwrap());
+        }
+        // a window guaranteed to overlap the active period, on a
+        // random valid site
+        let sites = base
+            .network
+            .as_ref()
+            .map(|n| n.sites)
+            .unwrap_or(base.workers);
+        let victim = g.usize(0, sites - 1);
+        let start = g.f64(1.0, 40.0);
+        let end = start + g.f64(5.0, 120.0);
+        let mut plan = format!("site-down:{victim}@{start}-{end}");
+        if base.network.is_some() && sites >= 2 && g.usize(0, 1) == 0 {
+            plan.push_str(&format!(
+                ";link-degrade:0>1@{}-{}:x{}",
+                start,
+                end,
+                g.usize(2, 8)
+            ));
+        }
+        base.faults = Some(plan.clone());
+        base.max_retries = g.usize(0, 4) as u32;
+        if g.usize(0, 2) == 0 {
+            base.mtbf = Some(g.f64(200.0, 800.0));
+            base.mttr = Some(g.f64(10.0, 60.0));
+        }
+        let sys = DEdgeAi::new(base);
+        let s = sys.run_events().unwrap();
+        let e = sys.run_events_eager().unwrap();
+        let label = format!("plan {plan}");
+        assert_bit_identical(&s, &e, &label);
+        assert_eq!(s.faults(), e.faults(), "{label}: fault ledger");
+        assert_eq!(
+            s.rng_audit().draws("fault"),
+            e.rng_audit().draws("fault"),
+            "{label}: fault stream"
+        );
+        // per-worker downtime is bitwise too (part of the ledger, but
+        // assert it separately for a readable failure)
+        for (w, (ds, de)) in s
+            .faults()
+            .downtime_s
+            .iter()
+            .zip(&e.faults().downtime_s)
+            .enumerate()
+        {
+            assert_eq!(ds.to_bits(), de.to_bits(), "{label}: downtime[{w}]");
+        }
+    });
+}
+
+#[test]
+fn conservation_holds_on_every_faulted_configuration() {
+    // The ledger's conservation law, as a property: no matter how the
+    // outage windows land, every arrival leaves through exactly one of
+    // the three books.
+    prop::check("served + dropped + exhausted == arrivals", 40, |g| {
+        let mut base = random_base(g);
+        let sites = base
+            .network
+            .as_ref()
+            .map(|n| n.sites)
+            .unwrap_or(base.workers);
+        let mut plan = String::new();
+        for _ in 0..g.usize(1, 3) {
+            let victim = g.usize(0, sites - 1);
+            let start = g.f64(0.0, 80.0);
+            let end = start + g.f64(1.0, 150.0);
+            if !plan.is_empty() {
+                plan.push(';');
+            }
+            plan.push_str(&format!("site-down:{victim}@{start}-{end}"));
+        }
+        base.faults = Some(plan);
+        base.max_retries = g.usize(0, 3) as u32;
+        let requests = base.requests as u64;
+        let m = DEdgeAi::new(base).run_events().unwrap();
+        let f = m.faults();
+        assert_eq!(
+            m.count() as u64 + m.dropped() + f.exhausted_retries,
+            requests,
+            "served {} dropped {} exhausted {} != {requests}",
+            m.count(),
+            m.dropped(),
+            f.exhausted_retries
+        );
+        // kills resolve: every killed job is eventually served or
+        // exhausted (never silently lost), and a job killed twice
+        // recovers at most once
+        assert!(f.recovered + f.exhausted_retries >= f.kills.min(1));
+        assert!(f.recovered <= f.kills);
+    });
+}
+
+#[test]
+fn recovery_drains_the_backlog_after_a_full_outage() {
+    // Deterministic by construction: 30 batch jobs (each tens of
+    // virtual seconds long) are all in the system when BOTH implicit
+    // sites die at t=1. Every job is killed, the masked retries park
+    // in exponential backoff while nothing is feasible, and once the
+    // sites return at t=2 the entire backlog re-dispatches and drains.
+    let m = DEdgeAi::new(ServeOptions {
+        workers: 2,
+        requests: 30,
+        scheduler: "least-loaded".into(),
+        arrivals: ArrivalProcess::Batch,
+        z_dist: Some(ZDist::Fixed(15)),
+        faults: Some("site-down:0@1-2;site-down:1@1-2".into()),
+        max_retries: 10,
+        ..ServeOptions::default()
+    })
+    .run_events()
+    .unwrap();
+    let f = m.faults();
+    assert_eq!(f.kills, 30, "every queued job dies with its site");
+    assert_eq!(m.count(), 30, "the backlog must fully drain");
+    assert_eq!(f.recovered, 30);
+    assert_eq!(f.retries, 30, "one successful re-dispatch per job");
+    assert_eq!(f.exhausted_retries, 0);
+    assert_eq!(m.dropped(), 0);
+    assert_eq!(f.site_down_events, 2);
+    assert_eq!(f.site_up_events, 2);
+    assert!(m.makespan() > 2.0, "work resumed after the window");
+    assert!(f.downtime_s.iter().all(|&d| d > 0.0));
+    assert!(m.mean_availability() < 1.0);
+}
+
+#[test]
+fn retry_budget_exhausts_gracefully_when_nothing_is_feasible() {
+    // Same full outage, but a zero retry budget and a window that
+    // outlives every backoff: all 30 killed jobs leave through the
+    // exhausted book, and the conservation law still balances.
+    let m = DEdgeAi::new(ServeOptions {
+        workers: 2,
+        requests: 30,
+        scheduler: "least-loaded".into(),
+        arrivals: ArrivalProcess::Batch,
+        z_dist: Some(ZDist::Fixed(15)),
+        faults: Some("site-down:0@1-30;site-down:1@1-30".into()),
+        max_retries: 0,
+        ..ServeOptions::default()
+    })
+    .run_events()
+    .unwrap();
+    let f = m.faults();
+    assert_eq!(f.kills, 30);
+    assert_eq!(f.exhausted_retries, 30);
+    assert_eq!(f.retries, 0, "no re-dispatch ever succeeded");
+    assert_eq!(f.recovered, 0);
+    assert_eq!(m.count(), 0);
+    assert_eq!(m.dropped(), 0);
+    assert_eq!(
+        m.count() as u64 + m.dropped() + f.exhausted_retries,
+        30,
+        "conservation"
+    );
+}
+
+#[test]
+fn retry_backoff_doubles_from_half_a_second() {
+    assert_eq!(faults::retry_backoff_s(1), 0.5);
+    assert_eq!(faults::retry_backoff_s(2), 1.0);
+    assert_eq!(faults::retry_backoff_s(3), 2.0);
+    for attempt in 1..12 {
+        assert!(
+            faults::retry_backoff_s(attempt + 1)
+                > faults::retry_backoff_s(attempt),
+            "backoff not monotone at attempt {attempt}"
+        );
+    }
+}
+
+#[test]
+fn zipf_origins_skew_toward_low_sites() {
+    // Satellite: `--origin-dist zipf:<s>` concentrates arrivals on
+    // low-numbered sites; uniform stays flat. Counted straight off the
+    // deterministic request source.
+    let n = 2000;
+    let counts = |od: &OriginDist| -> Vec<usize> {
+        let mut counts = vec![0usize; 5];
+        for req in RequestSource::new(
+            42,
+            &ArrivalProcess::Poisson { rate: 0.3 },
+            ZDist::Fixed(10),
+            ModelDist::Fixed(placement::RESD3M),
+            None,
+            od,
+            5,
+            n,
+        ) {
+            counts[req.origin] += 1;
+        }
+        counts
+    };
+    let zipf = counts(&OriginDist::parse("zipf:1.2").unwrap());
+    let uniform = counts(&OriginDist::Uniform);
+    assert_eq!(zipf.iter().sum::<usize>(), n);
+    assert_eq!(uniform.iter().sum::<usize>(), n);
+    // zipf:1.2 over 5 sites puts ~49% of mass on site 0
+    assert!(
+        zipf[0] > 3 * zipf[4],
+        "head not hot under zipf: {zipf:?}"
+    );
+    assert!(
+        zipf[0] as f64 > 1.5 * (n as f64 / 5.0),
+        "zipf head below 1.5x the uniform share: {zipf:?}"
+    );
+    // uniform: no site takes more than 30% of 2000 draws
+    assert!(
+        uniform.iter().all(|&c| c < n * 3 / 10),
+        "uniform skewed: {uniform:?}"
+    );
+}
+
+#[test]
+fn origin_stream_draw_counts_follow_the_distribution() {
+    // The audit pin for the origin stream: uniform multi-site charges
+    // one `range_usize` draw per request, zipf charges one `f64` (two
+    // base draws) — and the stream stays isolated either way.
+    let base = ServeOptions {
+        requests: 100,
+        arrivals: ArrivalProcess::Poisson { rate: 0.3 },
+        network: Some(NetOptions::profile_only("lan", 4)),
+        ..ServeOptions::default()
+    };
+    let uniform = DEdgeAi::new(base.clone()).run_events().unwrap();
+    assert_eq!(uniform.rng_audit().draws("origin"), Some(100));
+    let zipf = DEdgeAi::new(ServeOptions {
+        origin_dist: Some(OriginDist::parse("zipf:1.1").unwrap()),
+        ..base
+    })
+    .run_events()
+    .unwrap();
+    assert_eq!(zipf.rng_audit().draws("origin"), Some(200));
+    // the origin skew must not leak into any sibling stream
+    for stream in ["arrival", "caption", "z", "model", "qos", "gen-jitter"] {
+        assert_eq!(
+            uniform.rng_audit().draws(stream),
+            zipf.rng_audit().draws(stream),
+            "stream {stream} drifted with the origin dist"
+        );
+    }
+}
