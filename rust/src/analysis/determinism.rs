@@ -2,8 +2,8 @@
 //! twice and assert the two runs are *bitwise* identical — summary
 //! metrics, per-link traffic books, the per-stream RNG draw
 //! counts ([`crate::util::rng::RngAudit`]), and (since the
-//! observability layer landed) the FNV-1a hash of the full
-//! virtual-time trace.
+//! observability layers landed) the FNV-1a hashes of the full
+//! virtual-time trace and of the per-dispatch decision log.
 //!
 //! The static rules catch the known ways determinism breaks at the
 //! source level; this harness catches the unknown ones at runtime,
@@ -32,6 +32,10 @@ pub struct DeterminismReport {
     /// carried a tracer (equal to the second's when the report
     /// passes). `None` when tracing was off.
     pub trace_hash: Option<u64>,
+    /// FNV-1a hash of the first run's JSONL decision log, when both
+    /// runs carried one (equal to the second's when the report
+    /// passes). `None` when decision capture was off.
+    pub decision_hash: Option<u64>,
 }
 
 impl DeterminismReport {
@@ -190,12 +194,47 @@ pub fn compare(a: &ServeMetrics, b: &ServeMetrics) -> DeterminismReport {
         }
         _ => None,
     };
+    // decision logs: same contract — compared only when both runs
+    // carried one, bitwise over the full JSONL (the hash) plus the
+    // conservation counters, so a join/abandon drift is named even
+    // when the record streams happen to collide
+    let decision_hash = match (a.decisions(), b.decisions()) {
+        (Some(da), Some(db)) => {
+            let (ha, hb) = (da.hash(), db.hash());
+            if ha != hb {
+                mm.push(format!("decision hash: {ha:016x} vs {hb:016x}"));
+            }
+            if da.records().len() != db.records().len() {
+                mm.push(format!(
+                    "decision records: {} vs {}",
+                    da.records().len(),
+                    db.records().len()
+                ));
+            }
+            if (da.emitted(), da.joined(), da.abandoned())
+                != (db.emitted(), db.joined(), db.abandoned())
+            {
+                mm.push(format!(
+                    "decision books: {}/{}/{} vs {}/{}/{}",
+                    da.emitted(),
+                    da.joined(),
+                    da.abandoned(),
+                    db.emitted(),
+                    db.joined(),
+                    db.abandoned()
+                ));
+            }
+            Some(ha)
+        }
+        _ => None,
+    };
     DeterminismReport {
         mismatches: mm,
         audit: a.rng_audit().clone(),
         served: a.count(),
         makespan: a.makespan(),
         trace_hash,
+        decision_hash,
     }
 }
 
@@ -203,10 +242,11 @@ pub fn compare(a: &ServeMetrics, b: &ServeMetrics) -> DeterminismReport {
 /// clock only: a real-time run measures the wall clock, which is the
 /// one thing this harness exists to keep off simulated paths.
 ///
-/// The tracer is armed on both runs (regardless of `opts.trace`), so
-/// the comparison also certifies the observability layer: the report
-/// carries the shared trace hash and any hash divergence is a
-/// mismatch like any other.
+/// The tracer and decision log are armed on both runs (regardless of
+/// `opts.trace` / `opts.decisions`), so the comparison also certifies
+/// the observability layers: the report carries the shared trace and
+/// decision hashes and any hash divergence is a mismatch like any
+/// other.
 pub fn double_run(opts: &ServeOptions) -> Result<DeterminismReport> {
     if opts.real_time {
         bail!(
@@ -216,6 +256,7 @@ pub fn double_run(opts: &ServeOptions) -> Result<DeterminismReport> {
     }
     let mut opts = opts.clone();
     opts.trace = true;
+    opts.decisions = true;
     let a = DEdgeAi::new(opts.clone()).run_virtual()?;
     let b = DEdgeAi::new(opts).run_virtual()?;
     Ok(compare(&a, &b))
@@ -238,8 +279,10 @@ mod tests {
         assert_eq!(rep.served, 40);
         assert!(rep.audit.draws("arrival").unwrap() > 0);
         assert!(rep.audit.draws("gen-jitter").unwrap() > 0);
-        // double_run arms the tracer, so the report carries the hash
+        // double_run arms the tracer and the decision log, so the
+        // report carries both hashes
         assert!(rep.trace_hash.is_some());
+        assert!(rep.decision_hash.is_some());
     }
 
     #[test]
@@ -250,6 +293,7 @@ mod tests {
         let rep = compare(&a, &b);
         assert!(rep.passed(), "{:?}", rep.mismatches);
         assert!(rep.trace_hash.is_none());
+        assert!(rep.decision_hash.is_none());
     }
 
     #[test]
@@ -269,6 +313,7 @@ mod tests {
             "stochastic mode must draw from the fault stream"
         );
         assert!(rep.trace_hash.is_some());
+        assert!(rep.decision_hash.is_some());
     }
 
     #[test]

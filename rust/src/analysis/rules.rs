@@ -63,13 +63,15 @@ const WALL_CLOCK_ALLOW: [&str; 5] = [
 
 /// Files *pinned* to virtual time: the observability layer and the
 /// ledgers it feeds. A wall-clock read here would silently poison
-/// every trace timestamp, so the rule is absolute — not even a
-/// pragma can waive it (the pragma itself becomes a finding).
-const WALL_CLOCK_PIN: [&str; 4] = [
+/// every trace timestamp and decision record, so the rule is
+/// absolute — not even a pragma can waive it (the pragma itself
+/// becomes a finding).
+const WALL_CLOCK_PIN: [&str; 5] = [
     "coordinator/trace.rs",
     "coordinator/events.rs",
     "coordinator/metrics.rs",
     "coordinator/faults.rs",
+    "coordinator/decisions.rs",
 ];
 
 /// Simulated paths where unordered-collection iteration would break

@@ -639,6 +639,74 @@ impl FailoverSweepConfig {
     }
 }
 
+/// `exp decision-audit` grid: decision-armed open-loop serving
+/// measured over (arrival rate × dispatch policy × seed) on a wan
+/// topology, ranking policies by mean hindsight regret (how far each
+/// dispatch landed from the retrospectively best worker) and
+/// reporting per-class regret plus latency-prediction calibration.
+/// The grid is the replay-buffer substrate for the learn-to-serve
+/// roadmap item: every cell's decision log is a `dedgeai-decisions-v1`
+/// stream.
+#[derive(Clone, Debug)]
+pub struct DecisionAuditConfig {
+    /// Arrival rates in requests/second (`--rates`). Defaults put
+    /// ρ ≈ {0.7, 0.9, 1.1} at 5 workers with z ~ U[5,15].
+    pub rates: Vec<f64>,
+    /// Dispatch policies ranked (`--schedulers`).
+    pub schedulers: Vec<String>,
+    /// Edge sites (`--sites`); one worker per site, wan profile.
+    pub sites: usize,
+    /// Requests simulated per grid cell (`--serve-requests`).
+    pub requests: usize,
+    /// Independent seeds averaged per cell (`--replications`).
+    pub seeds: usize,
+    /// Arrival-process kind (`--arrivals`).
+    pub arrivals: String,
+    /// Quality-demand spec (`--z-dist`).
+    pub z_dist: String,
+    /// QoS class mix (`--qos-mix`) — drives the per-class regret
+    /// columns; empty disables the class split.
+    pub qos_mix: String,
+}
+
+impl Default for DecisionAuditConfig {
+    fn default() -> Self {
+        Self {
+            // z ~ U[5,15] → mean service 11.53 s/request; 5 workers
+            // serve ~0.4337 req/s, so these rates sit at ρ ≈ 0.7 /
+            // 0.9 / 1.1 — absorbable, near-critical, overloaded
+            rates: vec![0.28, 0.36, 0.44],
+            schedulers: vec![
+                "lad-ts".into(),
+                "net-ll".into(),
+                "edf-ll".into(),
+                "least-loaded".into(),
+            ],
+            sites: 5,
+            requests: 400,
+            seeds: 5,
+            arrivals: "poisson".into(),
+            z_dist: "uniform:5,15".into(),
+            qos_mix: "tiered".into(),
+        }
+    }
+}
+
+impl DecisionAuditConfig {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("rates", Json::arr_f64(&self.rates)),
+            ("schedulers", Json::str(self.schedulers.join(","))),
+            ("sites", Json::num(self.sites as f64)),
+            ("requests", Json::num(self.requests as f64)),
+            ("seeds", Json::num(self.seeds as f64)),
+            ("arrivals", Json::str(self.arrivals.clone())),
+            ("z_dist", Json::str(self.z_dist.clone())),
+            ("qos_mix", Json::str(self.qos_mix.clone())),
+        ])
+    }
+}
+
 /// Experiment-harness settings.
 #[derive(Clone, Debug)]
 pub struct ExpConfig {
@@ -667,6 +735,8 @@ pub struct ExpConfig {
     pub qos: QosSweepConfig,
     /// Fault-injected serving sweep grid (`exp failover-sweep`).
     pub failover: FailoverSweepConfig,
+    /// Decision-regret audit grid (`exp decision-audit`).
+    pub decision: DecisionAuditConfig,
 }
 
 impl Default for ExpConfig {
@@ -683,6 +753,7 @@ impl Default for ExpConfig {
             topology: TopologySweepConfig::default(),
             qos: QosSweepConfig::default(),
             failover: FailoverSweepConfig::default(),
+            decision: DecisionAuditConfig::default(),
         }
     }
 }
@@ -701,6 +772,7 @@ impl ExpConfig {
             ("topology", self.topology.to_json()),
             ("qos", self.qos.to_json()),
             ("failover", self.failover.to_json()),
+            ("decision", self.decision.to_json()),
         ])
     }
 }
@@ -854,6 +926,21 @@ mod tests {
         assert!(f.sites >= 2 && f.requests > 0 && f.max_retries > 0);
         assert_eq!(f.arrivals, "poisson");
         assert!(f.to_json().get("fault_plans").is_some());
+    }
+
+    #[test]
+    fn decision_audit_defaults_form_a_grid() {
+        let d = DecisionAuditConfig::default();
+        assert_eq!(d.rates.len(), 3, "rho in {{0.7, 0.9, 1.1}}");
+        assert!(d.rates.iter().any(|&r| r > 0.4), "need a rate past rho=1");
+        assert!(d.schedulers.iter().any(|s| s == "lad-ts"));
+        assert!(d.schedulers.iter().any(|s| s == "net-ll"));
+        assert!(d.schedulers.iter().any(|s| s == "least-loaded"));
+        assert!(d.seeds >= 5, "the regret ranking averages >=5 seeds");
+        assert!(d.sites >= 2 && d.requests > 0);
+        assert_eq!(d.arrivals, "poisson");
+        assert!(!d.qos_mix.is_empty(), "per-class regret needs a mix");
+        assert!(d.to_json().get("qos_mix").is_some());
     }
 
     #[test]

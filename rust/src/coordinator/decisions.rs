@@ -1,0 +1,776 @@
+//! Decision-level observability for the serving engine.
+//!
+//! The PR 8 trace layer records *outcomes* — spans and events after the
+//! router has spoken. This module records the *decisions themselves*:
+//! when `ServeOptions::decisions` is armed, every
+//! `Router::dispatch_with` / `dispatch_masked` call captures the full
+//! per-worker candidate table it chose from — each candidate's policy
+//! score decomposed into pending / transfer / cold-load terms where
+//! the policy computes them, lad-ts's post-mask π probabilities, and a
+//! mask reason (`vram`, `site-down`) per excluded worker — and the
+//! engines emit it as a `decision` record at the dispatch timestamp.
+//!
+//! On completion the record is joined with the realized delay to
+//! produce two audits:
+//!
+//! - **calibration**: predicted-vs-realized delay error per run
+//!   (mean signed error, |error| p50/p99) — is the policy's internal
+//!   delay estimate even honest?
+//! - **hindsight regret**: the decision's candidate table replayed
+//!   against realized costs. The chosen worker's hindsight cost is its
+//!   realized time-in-system; every other feasible candidate is
+//!   scored as its decision-time backlog + transfer + cold-load base
+//!   plus the realized generation time (step multipliers are
+//!   per-model, so the generation leg transplants across workers).
+//!   Regret = chosen cost − min over the table, which is ≥ 0 by
+//!   construction and 0 exactly when the pick was hindsight-optimal.
+//!
+//! A job killed by a site failure or priority-evicted under
+//! `--queue-cap` *abandons* its pending record (`abandon` record with
+//! the reason); a retry that re-dispatches the same request emits a
+//! fresh decision. The conservation law
+//! `emitted == joined + abandoned + in-flight-at-drain` is part of the
+//! test contract (`rust/tests/serve_decisions.rs`).
+//!
+//! Determinism: the recorder draws zero RNG (sampling is modular on
+//! the request id: `--decision-sample N` keeps ids divisible by N),
+//! never reads the wall clock (simlint pins this file), and every
+//! record is emitted at a point whose order the parity ladder already
+//! pins — so the JSONL is a pure function of the seed, byte-identical
+//! across double runs and both engines, and `verify-determinism`
+//! compares its FNV-1a hash. See `docs/observability.md`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::message::{Request, Response};
+use super::qos;
+use super::trace::fnv1a;
+use crate::util::json::Json;
+use crate::util::stats::percentile_sorted;
+
+/// Decision schema identifier stamped into the leading meta record.
+pub const DECISION_SCHEMA: &str = "dedgeai-decisions-v1";
+
+/// Mask reason: the worker's VRAM budget cannot hold the model.
+pub const REASON_VRAM: &str = "vram";
+/// Mask reason: the worker's site is down (fault injection). Also the
+/// abandon reason when a site failure kills a dispatched job.
+pub const REASON_SITE_DOWN: &str = "site-down";
+/// Abandon reason: the parked job was priority-evicted at admission.
+pub const REASON_QUEUE_CAP: &str = "queue-cap";
+
+/// One candidate row captured inside the router at dispatch time,
+/// *before* the chosen worker's pending charge lands. All terms are
+/// pure reads of router / placement / network state — zero RNG draws.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Candidate {
+    pub worker: usize,
+    /// Passed the feasibility mask (VRAM fit and site up).
+    pub feasible: bool,
+    /// Why the worker was excluded ([`REASON_VRAM`] /
+    /// [`REASON_SITE_DOWN`]); `None` when feasible.
+    pub reason: Option<&'static str>,
+    /// Pending effective denoise-steps at decision time.
+    pub pending_steps: f64,
+    /// The backlog in seconds (`pending_steps * JETSON_STEP_S`).
+    pub pending_s: f64,
+    /// Origin-site transfer round trip, seconds (0 without a network).
+    pub transfer_s: f64,
+    /// Cold-load penalty, seconds; infinite when the worker can never
+    /// hold the model (reported via `reason` instead of the table).
+    pub cold_s: f64,
+    /// The policy's scalar score in denoise-step units — present only
+    /// for the score-minimising policies (least-loaded, cache-ll,
+    /// net-ll, edf-ll), whose chosen worker attains the table minimum.
+    pub score: Option<f64>,
+    /// lad-ts's post-mask categorical probability for this worker.
+    pub pi: Option<f64>,
+}
+
+/// The per-dispatch capture [`super::router::Router`] hands back to
+/// the engine through `take_capture` when a decision log armed it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DecisionCapture {
+    /// Index the policy picked.
+    pub chosen: usize,
+    /// Decision-time delay estimate for the chosen worker, seconds:
+    /// backlog + transfer + cold load + expected generation (no
+    /// jitter) — the calibration book's prediction.
+    pub predicted_s: f64,
+    /// One row per worker, in worker order.
+    pub candidates: Vec<Candidate>,
+}
+
+/// Joined decision state held between dispatch and completion.
+struct PendingDecision {
+    chosen: usize,
+    qos: usize,
+    predicted_s: f64,
+    /// Decision-time hindsight base (backlog + transfer + cold) per
+    /// feasible candidate, in worker order.
+    bases: Vec<(usize, f64)>,
+}
+
+/// One joined (decision, outcome) pair — the regret/calibration unit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Outcome {
+    /// Virtual completion time.
+    pub t: f64,
+    /// QoS class index of the request.
+    pub qos: usize,
+    /// Signed calibration error, seconds: predicted − realized.
+    pub error_s: f64,
+    /// Hindsight regret, seconds (≥ 0 by construction).
+    pub regret_s: f64,
+    /// Whether the chosen worker was the hindsight argmin.
+    pub optimal: bool,
+}
+
+/// The live decision recorder the engines drive. Built once per run by
+/// `DEdgeAi::make_decision_log` when armed; sealed into a
+/// [`DecisionBook`] at drain time. All state is ordered (`BTreeMap`)
+/// and all timestamps are virtual.
+pub struct DecisionLog {
+    sample: u64,
+    records: Vec<Json>,
+    pending: BTreeMap<u64, PendingDecision>,
+    emitted: u64,
+    abandoned: u64,
+    outcomes: Vec<Outcome>,
+}
+
+impl DecisionLog {
+    pub fn new(policy: &str, workers: usize, sample: u64) -> DecisionLog {
+        let sample = sample.max(1);
+        let meta = Json::from_pairs(vec![
+            ("type", Json::str("meta")),
+            ("schema", Json::str(DECISION_SCHEMA)),
+            ("policy", Json::str(policy)),
+            ("workers", Json::num(workers as f64)),
+            ("sample", Json::num(sample as f64)),
+        ]);
+        DecisionLog {
+            sample,
+            records: vec![meta],
+            pending: BTreeMap::new(),
+            emitted: 0,
+            abandoned: 0,
+            outcomes: Vec::new(),
+        }
+    }
+
+    /// Deterministic modular sampling: record this request? (`1/N`
+    /// keeps ids divisible by N; the default N=1 records everything.
+    /// No RNG — the sampled set is a pure function of the id.)
+    pub fn wants(&self, id: u64) -> bool {
+        id % self.sample == 0
+    }
+
+    /// The router chose `cap.chosen` for `req` at virtual time `now`:
+    /// emit the decision record and park the joinable state.
+    pub fn decision(&mut self, now: f64, req: &Request, cap: &DecisionCapture) {
+        let mut table = Vec::with_capacity(cap.candidates.len());
+        let mut bases = Vec::with_capacity(cap.candidates.len());
+        for c in &cap.candidates {
+            let mut row = vec![
+                ("worker", Json::num(c.worker as f64)),
+                ("feasible", Json::num(if c.feasible { 1.0 } else { 0.0 })),
+            ];
+            if let Some(reason) = c.reason {
+                row.push(("reason", Json::str(reason)));
+            }
+            row.push(("pending_steps", Json::num(c.pending_steps)));
+            row.push(("pending_s", Json::num(c.pending_s)));
+            row.push(("transfer_s", Json::num(c.transfer_s)));
+            if c.cold_s.is_finite() {
+                row.push(("cold_s", Json::num(c.cold_s)));
+            }
+            if let Some(score) = c.score {
+                row.push(("score", Json::num(score)));
+            }
+            if let Some(pi) = c.pi {
+                row.push(("pi", Json::num(pi)));
+            }
+            table.push(Json::from_pairs(row));
+            if c.feasible {
+                bases.push((c.worker, c.pending_s + c.transfer_s + c.cold_s));
+            }
+        }
+        let mut rec = vec![
+            ("type", Json::str("decision")),
+            ("t", Json::num(now)),
+            ("id", Json::num(req.id as f64)),
+            ("qos", Json::num(req.qos as f64)),
+            ("class", Json::str(qos::class(req.qos).name)),
+            ("z", Json::num(req.z as f64)),
+            ("model", Json::num(req.model as f64)),
+            ("origin", Json::num(req.origin as f64)),
+            ("chosen", Json::num(cap.chosen as f64)),
+            ("predicted_s", Json::num(cap.predicted_s)),
+        ];
+        if req.deadline.is_finite() {
+            rec.push(("slack_s", Json::num(req.deadline - now)));
+        }
+        rec.push(("table", Json::Arr(table)));
+        self.records.push(Json::from_pairs(rec));
+        self.emitted += 1;
+        self.pending.insert(
+            req.id,
+            PendingDecision {
+                chosen: cap.chosen,
+                qos: req.qos,
+                predicted_s: cap.predicted_s,
+                bases,
+            },
+        );
+    }
+
+    /// The request completed: join the pending decision with the
+    /// realized delay, book the calibration error and the hindsight
+    /// regret, and emit the `outcome` record. A completion whose id
+    /// was never recorded (unsampled, or re-dispatched after an
+    /// abandon that the sample skipped) is ignored.
+    pub fn outcome(&mut self, resp: &Response, now: f64) {
+        let Some(p) = self.pending.remove(&resp.id) else {
+            return;
+        };
+        // Hindsight replay: the chosen worker realized resp.latency;
+        // every other feasible candidate is costed as its
+        // decision-time base plus the realized generation time.
+        // Including the chosen worker's realized cost in the min makes
+        // regret ≥ 0 structurally, with equality exactly when the pick
+        // was hindsight-optimal.
+        let mut best = resp.latency;
+        let mut hindsight = p.chosen;
+        for &(w, base) in &p.bases {
+            if w == p.chosen {
+                continue;
+            }
+            let h = base + resp.gen_time;
+            if h < best {
+                best = h;
+                hindsight = w;
+            }
+        }
+        let regret = resp.latency - best;
+        let error = p.predicted_s - resp.latency;
+        self.records.push(Json::from_pairs(vec![
+            ("type", Json::str("outcome")),
+            ("t", Json::num(now)),
+            ("id", Json::num(resp.id as f64)),
+            ("qos", Json::num(p.qos as f64)),
+            ("worker", Json::num(p.chosen as f64)),
+            ("predicted_s", Json::num(p.predicted_s)),
+            ("realized_s", Json::num(resp.latency)),
+            ("error_s", Json::num(error)),
+            ("hindsight", Json::num(hindsight as f64)),
+            ("regret_s", Json::num(regret)),
+        ]));
+        self.outcomes.push(Outcome {
+            t: now,
+            qos: p.qos,
+            error_s: error,
+            regret_s: regret,
+            optimal: hindsight == p.chosen,
+        });
+    }
+
+    /// The dispatched job left the system before completing: a site
+    /// failure killed it ([`REASON_SITE_DOWN`]) or a priority eviction
+    /// bumped it ([`REASON_QUEUE_CAP`]). The pending record is
+    /// abandoned; a retry that re-dispatches the request emits a fresh
+    /// decision. No-op when the id carries no pending record.
+    pub fn abandon(&mut self, now: f64, id: u64, reason: &str) {
+        if self.pending.remove(&id).is_none() {
+            return;
+        }
+        self.abandoned += 1;
+        self.records.push(Json::from_pairs(vec![
+            ("type", Json::str("abandon")),
+            ("t", Json::num(now)),
+            ("id", Json::num(id as f64)),
+            ("reason", Json::str(reason)),
+        ]));
+    }
+
+    /// Seal the recording.
+    pub fn finish(self) -> DecisionBook {
+        DecisionBook {
+            emitted: self.emitted,
+            joined: self.outcomes.len() as u64,
+            abandoned: self.abandoned,
+            in_flight_at_drain: self.pending.len() as u64,
+            records: self.records,
+            outcomes: self.outcomes,
+        }
+    }
+}
+
+/// Per-run calibration book: predicted-vs-realized delay error.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CalibrationStat {
+    pub n: usize,
+    /// Mean signed error, seconds (positive = over-prediction).
+    pub mean_err_s: f64,
+    pub abs_p50_s: f64,
+    pub abs_p99_s: f64,
+}
+
+/// Per-run (or per-class) hindsight-regret book.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RegretStat {
+    pub n: usize,
+    pub mean_s: f64,
+    pub p99_s: f64,
+    /// Fraction of joined decisions that were hindsight-optimal.
+    pub optimal_frac: f64,
+}
+
+/// One window of the joined-outcome time-series (anchored at t=0,
+/// binned by completion time — the same discipline as
+/// [`super::trace::WindowSeries`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DecisionWindow {
+    pub t0: f64,
+    pub t1: f64,
+    pub joined: usize,
+    pub mean_regret_s: f64,
+    pub mean_abs_err_s: f64,
+}
+
+/// A sealed decision recording: the ordered record list, the
+/// conservation counters, and the joined outcomes the regret and
+/// calibration books fold. Carried on `ServeMetrics` when armed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DecisionBook {
+    records: Vec<Json>,
+    emitted: u64,
+    joined: u64,
+    abandoned: u64,
+    in_flight_at_drain: u64,
+    outcomes: Vec<Outcome>,
+}
+
+impl DecisionBook {
+    pub fn records(&self) -> &[Json] {
+        &self.records
+    }
+
+    /// Count records of a given `type` field value.
+    pub fn count_type(&self, rtype: &str) -> usize {
+        self.records
+            .iter()
+            .filter(|r| {
+                r.get("type").and_then(|v| v.as_str().ok()).unwrap_or("")
+                    == rtype
+            })
+            .count()
+    }
+
+    /// Decision records emitted (sampled dispatches that picked a
+    /// worker).
+    pub fn emitted(&self) -> u64 {
+        self.emitted
+    }
+
+    /// Decisions joined with a completion.
+    pub fn joined(&self) -> u64 {
+        self.joined
+    }
+
+    /// Decisions abandoned by a kill or a priority eviction.
+    pub fn abandoned(&self) -> u64 {
+        self.abandoned
+    }
+
+    /// Decisions still pending when the engine drained (e.g. retries
+    /// that exhausted their budget after the kill abandoned them are
+    /// *not* here — an exhausted record was already abandoned).
+    pub fn in_flight_at_drain(&self) -> u64 {
+        self.in_flight_at_drain
+    }
+
+    /// The record conservation law the test suite pins.
+    pub fn conservation_holds(&self) -> bool {
+        self.emitted == self.joined + self.abandoned + self.in_flight_at_drain
+    }
+
+    /// The joined (decision, outcome) pairs in completion order.
+    pub fn outcomes(&self) -> &[Outcome] {
+        &self.outcomes
+    }
+
+    /// The canonical byte stream: one compact JSON record per line
+    /// (the bytes [`hash`](Self::hash) covers and `--decisions-out`
+    /// writes).
+    pub fn render_jsonl(&self) -> String {
+        let mut out = String::new();
+        for r in &self.records {
+            out.push_str(&r.render());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// FNV-1a 64 over the JSONL bytes — the `verify-determinism`
+    /// decision-hash column.
+    pub fn hash(&self) -> u64 {
+        fnv1a(self.render_jsonl().as_bytes())
+    }
+
+    /// Write the JSONL stream to `path`.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.render_jsonl()).with_context(|| {
+            format!("writing decision log to {}", path.display())
+        })?;
+        Ok(())
+    }
+
+    /// Predicted-vs-realized calibration over every joined decision.
+    pub fn calibration(&self) -> CalibrationStat {
+        let n = self.outcomes.len();
+        if n == 0 {
+            return CalibrationStat {
+                n: 0,
+                mean_err_s: 0.0,
+                abs_p50_s: 0.0,
+                abs_p99_s: 0.0,
+            };
+        }
+        let mut sum = 0.0;
+        let mut abs: Vec<f64> = Vec::with_capacity(n);
+        for o in &self.outcomes {
+            sum += o.error_s;
+            abs.push(o.error_s.abs());
+        }
+        abs.sort_unstable_by(f64::total_cmp);
+        CalibrationStat {
+            n,
+            mean_err_s: sum / n as f64,
+            abs_p50_s: percentile_sorted(&abs, 50.0),
+            abs_p99_s: percentile_sorted(&abs, 99.0),
+        }
+    }
+
+    fn regret_over(&self, class: Option<usize>) -> RegretStat {
+        let mut vals: Vec<f64> = Vec::new();
+        let mut optimal = 0usize;
+        for o in &self.outcomes {
+            if let Some(c) = class {
+                if o.qos != c {
+                    continue;
+                }
+            }
+            vals.push(o.regret_s);
+            if o.optimal {
+                optimal += 1;
+            }
+        }
+        let n = vals.len();
+        if n == 0 {
+            return RegretStat {
+                n: 0,
+                mean_s: 0.0,
+                p99_s: 0.0,
+                optimal_frac: 0.0,
+            };
+        }
+        let mut sum = 0.0;
+        for &v in &vals {
+            sum += v;
+        }
+        vals.sort_unstable_by(f64::total_cmp);
+        RegretStat {
+            n,
+            mean_s: sum / n as f64,
+            p99_s: percentile_sorted(&vals, 99.0),
+            optimal_frac: optimal as f64 / n as f64,
+        }
+    }
+
+    /// Hindsight regret over every joined decision.
+    pub fn regret(&self) -> RegretStat {
+        self.regret_over(None)
+    }
+
+    /// Hindsight regret restricted to one QoS class.
+    pub fn class_regret(&self, class: usize) -> RegretStat {
+        self.regret_over(Some(class))
+    }
+
+    /// Fold the joined outcomes into fixed-width windows anchored at
+    /// t=0 (binned by completion time).
+    pub fn windows(&self, width: f64) -> Vec<DecisionWindow> {
+        if !width.is_finite() || width <= 0.0 || self.outcomes.is_empty() {
+            return Vec::new();
+        }
+        let mut horizon = 0.0f64;
+        for o in &self.outcomes {
+            if o.t > horizon {
+                horizon = o.t;
+            }
+        }
+        if horizon <= 0.0 {
+            return Vec::new();
+        }
+        let nwin = (horizon / width).ceil().max(1.0) as usize;
+        let mut wins: Vec<DecisionWindow> = (0..nwin)
+            .map(|i| DecisionWindow {
+                t0: i as f64 * width,
+                t1: (i + 1) as f64 * width,
+                joined: 0,
+                mean_regret_s: 0.0,
+                mean_abs_err_s: 0.0,
+            })
+            .collect();
+        for o in &self.outcomes {
+            let w = &mut wins[((o.t / width) as usize).min(nwin - 1)];
+            w.joined += 1;
+            w.mean_regret_s += o.regret_s;
+            w.mean_abs_err_s += o.error_s.abs();
+        }
+        for w in &mut wins {
+            if w.joined > 0 {
+                w.mean_regret_s /= w.joined as f64;
+                w.mean_abs_err_s /= w.joined as f64;
+            }
+        }
+        wins
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::corpus::PromptDesc;
+
+    fn req(id: u64, t: f64) -> Request {
+        Request {
+            id,
+            prompt: PromptDesc::default(),
+            z: 10,
+            model: 0,
+            origin: 0,
+            qos: 0,
+            deadline: f64::INFINITY,
+            submitted_at: t,
+        }
+    }
+
+    fn resp(id: u64, worker: usize, latency: f64, gen: f64) -> Response {
+        Response {
+            id,
+            worker,
+            z: 10,
+            model: 0,
+            latency,
+            queue_wait: latency - gen,
+            gen_time: gen,
+            trans_time: 0.0,
+            checksum: 0.0,
+            qos: 0,
+            deadline: f64::INFINITY,
+            demanded_z: 10,
+            demanded_model: 0,
+        }
+    }
+
+    fn cand(worker: usize, pending_s: f64) -> Candidate {
+        Candidate {
+            worker,
+            feasible: true,
+            reason: None,
+            pending_steps: pending_s / 1.153,
+            pending_s,
+            transfer_s: 0.0,
+            cold_s: 0.0,
+            score: Some(pending_s),
+            pi: None,
+        }
+    }
+
+    fn cap(chosen: usize, predicted_s: f64, rows: Vec<Candidate>) -> DecisionCapture {
+        DecisionCapture { chosen, predicted_s, candidates: rows }
+    }
+
+    #[test]
+    fn join_produces_regret_and_calibration() {
+        let mut log = DecisionLog::new("least-loaded", 2, 1);
+        // chose worker 0 (backlog 10 s); worker 1 idle — the
+        // hindsight argmin once the realized gen (4 s) transplants
+        log.decision(
+            0.0,
+            &req(0, 0.0),
+            &cap(0, 14.0, vec![cand(0, 10.0), cand(1, 0.0)]),
+        );
+        log.outcome(&resp(0, 0, 15.0, 4.0), 15.0);
+        let book = log.finish();
+        assert!(book.conservation_holds());
+        assert_eq!((book.emitted(), book.joined()), (1, 1));
+        let o = book.outcomes()[0];
+        // hindsight best = 0 + 4 (worker 1); regret = 15 - 4 = 11
+        assert!((o.regret_s - 11.0).abs() < 1e-12, "{}", o.regret_s);
+        assert!(!o.optimal);
+        // calibration error = 14 - 15 = -1
+        assert!((o.error_s + 1.0).abs() < 1e-12);
+        let cal = book.calibration();
+        assert_eq!(cal.n, 1);
+        assert!((cal.mean_err_s + 1.0).abs() < 1e-12);
+        assert!((cal.abs_p50_s - 1.0).abs() < 1e-12);
+        let r = book.regret();
+        assert!((r.mean_s - 11.0).abs() < 1e-12);
+        assert_eq!(r.optimal_frac, 0.0);
+    }
+
+    #[test]
+    fn optimal_pick_has_zero_regret() {
+        let mut log = DecisionLog::new("net-ll", 2, 1);
+        // chose the idle worker; the loaded one can't beat it
+        log.decision(
+            0.0,
+            &req(1, 0.0),
+            &cap(1, 4.0, vec![cand(0, 50.0), cand(1, 0.0)]),
+        );
+        log.outcome(&resp(1, 1, 4.5, 4.0), 4.5);
+        let book = log.finish();
+        let o = book.outcomes()[0];
+        assert_eq!(o.regret_s, 0.0);
+        assert!(o.optimal);
+        assert_eq!(book.regret().optimal_frac, 1.0);
+    }
+
+    #[test]
+    fn abandon_then_fresh_decision_conserves() {
+        let mut log = DecisionLog::new("least-loaded", 2, 1);
+        log.decision(0.0, &req(3, 0.0), &cap(0, 5.0, vec![cand(0, 0.0)]));
+        log.abandon(2.0, 3, REASON_SITE_DOWN);
+        // double-abandon is a no-op
+        log.abandon(2.5, 3, REASON_SITE_DOWN);
+        // the retry re-dispatches: fresh record, joined normally
+        log.decision(3.0, &req(3, 0.0), &cap(1, 5.0, vec![cand(1, 0.0)]));
+        log.outcome(&resp(3, 1, 9.0, 4.0), 9.0);
+        // one record never completes: in flight at drain
+        log.decision(4.0, &req(4, 4.0), &cap(0, 5.0, vec![cand(0, 0.0)]));
+        let book = log.finish();
+        assert_eq!(book.emitted(), 3);
+        assert_eq!(book.joined(), 1);
+        assert_eq!(book.abandoned(), 1);
+        assert_eq!(book.in_flight_at_drain(), 1);
+        assert!(book.conservation_holds());
+        assert_eq!(book.count_type("abandon"), 1);
+        assert_eq!(book.count_type("decision"), 3);
+        assert_eq!(book.count_type("outcome"), 1);
+        assert_eq!(book.count_type("meta"), 1);
+    }
+
+    #[test]
+    fn sampling_is_modular_and_deterministic() {
+        let log = DecisionLog::new("least-loaded", 2, 4);
+        for id in 0..32u64 {
+            assert_eq!(log.wants(id), id % 4 == 0);
+        }
+        // sample 0 is clamped to 1 (record everything)
+        let log = DecisionLog::new("least-loaded", 2, 0);
+        assert!(log.wants(17));
+    }
+
+    #[test]
+    fn jsonl_is_deterministic_and_hash_matches() {
+        let build = || {
+            let mut log = DecisionLog::new("least-loaded", 2, 1);
+            log.decision(
+                0.0,
+                &req(0, 0.0),
+                &cap(0, 14.0, vec![cand(0, 10.0), cand(1, 0.0)]),
+            );
+            log.outcome(&resp(0, 0, 15.0, 4.0), 15.0);
+            log.finish()
+        };
+        let a = build();
+        let b = build();
+        assert_eq!(a.render_jsonl(), b.render_jsonl());
+        assert_eq!(a.hash(), b.hash());
+        assert_eq!(a.hash(), fnv1a(a.render_jsonl().as_bytes()));
+        for line in a.render_jsonl().lines() {
+            let rec = Json::parse(line).expect("jsonl line parses");
+            assert!(rec.get("type").is_some());
+        }
+        // the meta record carries the schema tag
+        let meta = Json::parse(a.render_jsonl().lines().next().unwrap()).unwrap();
+        assert_eq!(meta.req("schema").unwrap().as_str().unwrap(), DECISION_SCHEMA);
+    }
+
+    #[test]
+    fn infeasible_rows_carry_reasons_not_scores() {
+        let mut log = DecisionLog::new("least-loaded", 2, 1);
+        let masked = Candidate {
+            worker: 1,
+            feasible: false,
+            reason: Some(REASON_VRAM),
+            pending_steps: 0.0,
+            pending_s: 0.0,
+            transfer_s: 0.0,
+            cold_s: f64::INFINITY,
+            score: None,
+            pi: None,
+        };
+        log.decision(
+            0.0,
+            &req(0, 0.0),
+            &cap(0, 5.0, vec![cand(0, 0.0), masked]),
+        );
+        let book = log.finish();
+        let rec = &book.records()[1];
+        let table = rec.req("table").unwrap().as_arr().unwrap();
+        assert_eq!(table.len(), 2);
+        assert!(table[0].get("reason").is_none());
+        assert_eq!(
+            table[1].req("reason").unwrap().as_str().unwrap(),
+            REASON_VRAM
+        );
+        // the infinite cold term is omitted, not rendered as null
+        assert!(table[1].get("cold_s").is_none());
+        assert!(table[1].get("score").is_none());
+    }
+
+    #[test]
+    fn windows_bin_outcomes_by_completion_time() {
+        let mut log = DecisionLog::new("least-loaded", 1, 1);
+        for (id, t) in [(0u64, 5.0f64), (1, 15.0), (2, 17.0)] {
+            log.decision(t - 4.0, &req(id, t - 4.0), &cap(0, 4.0, vec![cand(0, 0.0)]));
+            log.outcome(&resp(id, 0, 4.0, 4.0), t);
+        }
+        let book = log.finish();
+        let wins = book.windows(10.0);
+        assert_eq!(wins.len(), 2);
+        assert_eq!(wins[0].joined, 1);
+        assert_eq!(wins[1].joined, 2);
+        assert!(book.windows(0.0).is_empty());
+        assert!(book.windows(-1.0).is_empty());
+    }
+
+    #[test]
+    fn class_regret_partitions_by_qos() {
+        let mut log = DecisionLog::new("edf-ll", 2, 1);
+        let mut r0 = req(0, 0.0);
+        r0.qos = 0;
+        let mut r1 = req(1, 0.0);
+        r1.qos = 1;
+        log.decision(0.0, &r0, &cap(0, 4.0, vec![cand(0, 0.0), cand(1, 50.0)]));
+        log.decision(0.0, &r1, &cap(0, 4.0, vec![cand(0, 0.0), cand(1, 50.0)]));
+        let mut resp0 = resp(0, 0, 4.0, 4.0);
+        resp0.qos = 0;
+        let mut resp1 = resp(1, 0, 4.0, 4.0);
+        resp1.qos = 1;
+        log.outcome(&resp0, 4.0);
+        log.outcome(&resp1, 4.0);
+        let book = log.finish();
+        assert_eq!(book.class_regret(0).n, 1);
+        assert_eq!(book.class_regret(1).n, 1);
+        assert_eq!(book.class_regret(2).n, 0);
+        assert_eq!(book.regret().n, 2);
+    }
+}

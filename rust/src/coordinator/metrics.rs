@@ -10,6 +10,7 @@ use std::collections::BTreeMap;
 use crate::util::rng::RngAudit;
 use crate::util::stats::{percentile_sorted, Welford};
 
+use super::decisions::DecisionBook;
 use super::message::Response;
 use super::trace::TraceLog;
 
@@ -162,6 +163,9 @@ pub struct ServeMetrics {
     /// The sealed observability recording (`--trace-out`/`--window`
     /// runs only; `None` keeps the trace-free surface untouched).
     trace: Option<TraceLog>,
+    /// The sealed decision recording (`--decisions-out` runs only;
+    /// `None` keeps the decisions-free surface untouched).
+    decisions: Option<DecisionBook>,
 }
 
 impl ServeMetrics {
@@ -192,6 +196,7 @@ impl ServeMetrics {
             in_flight_peak: 0,
             rng_audit: RngAudit::new(),
             trace: None,
+            decisions: None,
         }
     }
 
@@ -675,6 +680,16 @@ impl ServeMetrics {
     /// The observability recording, when the run was traced.
     pub fn trace(&self) -> Option<&TraceLog> {
         self.trace.as_ref()
+    }
+
+    /// Attach the sealed decision recording at drain time.
+    pub fn set_decisions(&mut self, book: DecisionBook) {
+        self.decisions = Some(book);
+    }
+
+    /// The decision recording, when the run was decision-armed.
+    pub fn decisions(&self) -> Option<&DecisionBook> {
+        self.decisions.as_ref()
     }
 }
 

@@ -46,6 +46,11 @@
 //!   spans and discrete events behind `--trace-out`, windowed
 //!   time-series (`--window`), byte-identical across double runs and
 //!   both engines (see `docs/observability.md`);
+//! - [`decisions`]: decision-level observability — per-dispatch
+//!   candidate score tables behind `--decisions-out`, joined with
+//!   realized delays into calibration and hindsight-regret books
+//!   (the learn-to-serve replay substrate; see
+//!   `docs/observability.md`);
 //! - [`corpus`]: the synthetic caption corpus standing in for
 //!   Flickr8k (hot paths carry a `Copy` [`corpus::PromptDesc`]; text
 //!   is rehydrated only on the real-time PJRT path);
@@ -62,6 +67,7 @@
 pub mod arrivals;
 pub mod clock;
 pub mod corpus;
+pub mod decisions;
 pub mod events;
 pub mod faults;
 pub mod message;
@@ -79,6 +85,7 @@ pub mod worker;
 
 pub use arrivals::{ArrivalProcess, ZDist};
 pub use corpus::PromptDesc;
+pub use decisions::{DecisionBook, DecisionLog};
 pub use events::{Event, EventQueue};
 pub use faults::{FaultPlan, FaultRuntime};
 pub use message::{Request, Response};

@@ -60,6 +60,7 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 use super::clock;
+use super::decisions::{self, Candidate, DecisionCapture};
 use super::message::Request;
 use super::network::Network;
 use super::placement::Placement;
@@ -157,6 +158,13 @@ pub struct LadPolicy {
     /// keeps the base layout. Off by default — the qos-off layout and
     /// draw counts are bit-identical to the pre-QoS policy.
     qos_features: bool,
+    /// Decision-observability arm for the *next* pick: when set, the
+    /// post-mask π used for the categorical draw is copied into
+    /// `last_pi` (a pure copy — zero extra RNG draws, so armed and
+    /// unarmed picks stay bit-identical).
+    capture: bool,
+    /// The post-mask π of the last captured pick, in worker order.
+    last_pi: Vec<f32>,
 }
 
 impl LadPolicy {
@@ -228,6 +236,8 @@ impl LadPolicy {
             workers,
             norm_steps: 15.0,
             qos_features,
+            capture: false,
+            last_pi: Vec::new(),
         })
     }
 
@@ -331,7 +341,13 @@ impl LadPolicy {
             // no placement, no down-mask: every worker is feasible —
             // draw from π untouched (bit-identical to the pre-mask,
             // pre-fault policy)
-            (None, None) => Ok(Some(self.rng.categorical(probs))),
+            (None, None) => {
+                if self.capture {
+                    self.last_pi.clear();
+                    self.last_pi.extend_from_slice(probs);
+                }
+                Ok(Some(self.rng.categorical(probs)))
+            }
             (pl, _) => {
                 // mask infeasible (VRAM) and down (fault) workers
                 // *before* the draw, renormalising π over whoever is
@@ -365,6 +381,10 @@ impl LadPolicy {
                         masked[w] = 1.0 / feas.len() as f32;
                     }
                 }
+                if self.capture {
+                    self.last_pi.clear();
+                    self.last_pi.extend_from_slice(&masked);
+                }
                 Ok(Some(self.rng.categorical(&masked)))
             }
         }
@@ -383,6 +403,14 @@ pub struct Router {
     load_index: Option<ArgminTree>,
     dispatched: Vec<u64>,
     rr_next: usize,
+    /// Decision-observability arm: set by [`arm_capture`]
+    /// (Self::arm_capture) for exactly one dispatch, consumed (reset)
+    /// at the top of [`dispatch_masked`](Self::dispatch_masked)
+    /// whatever its outcome.
+    capture_armed: bool,
+    /// The candidate table of the last armed dispatch that picked a
+    /// worker, until [`take_capture`](Self::take_capture) claims it.
+    capture: Option<DecisionCapture>,
 }
 
 impl Router {
@@ -395,6 +423,8 @@ impl Router {
             load_index,
             dispatched: vec![0; workers],
             rr_next: 0,
+            capture_armed: false,
+            capture: None,
         }
     }
 
@@ -442,10 +472,10 @@ impl Router {
     /// Dispatch under a fault-injection availability mask: `down[w]`
     /// excludes worker `w` from every policy (including the lad-ts
     /// categorical, masked before the draw). `down == None` is the
-    /// faults-off path, bit-identical to [`dispatch_with`]
-    /// (Self::dispatch_with). Returns `Ok(None)` — rather than an
-    /// error — when an active mask leaves no feasible worker: the
-    /// engine degrades gracefully to a drop.
+    /// faults-off path, bit-identical to
+    /// [`dispatch_with`](Self::dispatch_with). Returns `Ok(None)` —
+    /// rather than an error — when an active mask leaves no feasible
+    /// worker: the engine degrades gracefully to a drop.
     pub fn dispatch_masked(
         &mut self,
         req: &Request,
@@ -453,6 +483,11 @@ impl Router {
         network: Option<&Network>,
         down: Option<&[bool]>,
     ) -> Result<Option<usize>> {
+        // Decision observability: the arm covers exactly this dispatch
+        // — taken (and so reset) up front so a drop or an error never
+        // leaks the arm into a later request's dispatch.
+        let cap_on = std::mem::take(&mut self.capture_armed);
+        self.capture = None;
         // A placement run masks feasibility per request, so the static
         // argmin index can never answer its dispatches — drop it on
         // first sight rather than paying two O(log n) updates per
@@ -579,6 +614,7 @@ impl Router {
                 })
             }
             Policy::LadTs(lad) => {
+                lad.capture = cap_on;
                 lad.pick(req, pending, placement, network, down)?
             }
         };
@@ -592,6 +628,13 @@ impl Router {
         };
         if w >= self.pending_steps.len() {
             bail!("policy picked invalid worker {w}");
+        }
+        // Decision observability: the candidate table snapshots the
+        // *pre-charge* pending state (what the policy actually scored)
+        // — pure reads, zero RNG draws, built only when armed.
+        if cap_on {
+            self.capture =
+                Some(self.build_capture(req, placement, network, down, w));
         }
         // Charge pending load in *effective* step units: a distilled
         // tier's steps run faster, so z is scaled by the variant's
@@ -645,6 +688,101 @@ impl Router {
 
     pub fn dispatched(&self) -> &[u64] {
         &self.dispatched
+    }
+
+    /// Arm decision capture for the *next* dispatch only (the engines
+    /// arm per sampled request). The arm is consumed at the top of
+    /// [`dispatch_masked`](Self::dispatch_masked) whatever its
+    /// outcome, so an unclaimed arm can never bleed into a later
+    /// request. Capturing is pure observation: zero RNG draws, zero
+    /// writes to routing state — armed and unarmed dispatch sequences
+    /// are bit-identical.
+    pub fn arm_capture(&mut self) {
+        self.capture_armed = true;
+    }
+
+    /// Claim the candidate table of the last armed dispatch that
+    /// picked a worker (`None` after a drop / unarmed dispatch).
+    pub fn take_capture(&mut self) -> Option<DecisionCapture> {
+        self.capture.take()
+    }
+
+    /// Snapshot the candidate table for a decision that just picked
+    /// `chosen` — pre-charge pending state, the feasibility mask with
+    /// per-worker exclusion reasons, the world-state delay terms
+    /// (backlog / transfer / cold-load, seconds), the policy's scalar
+    /// score where it computes one, and lad-ts's post-mask π.
+    ///
+    /// The delay terms are *world state*, not policy state: a
+    /// transfer-blind policy (least-loaded on a WAN) still gets true
+    /// transfer costs in its table — that asymmetry is exactly what
+    /// the hindsight-regret book measures.
+    fn build_capture(
+        &self,
+        req: &Request,
+        placement: Option<&Placement>,
+        network: Option<&Network>,
+        down: Option<&[bool]>,
+        chosen: usize,
+    ) -> DecisionCapture {
+        let n = self.pending_steps.len();
+        let pi = match &self.policy {
+            Policy::LadTs(lad) if lad.last_pi.len() == n => {
+                Some(&lad.last_pi)
+            }
+            _ => None,
+        };
+        let mut candidates = Vec::with_capacity(n);
+        for w in 0..n {
+            let fits = placement.map_or(true, |p| p.fits(w, req.model));
+            let up = down.map_or(true, |d| !d[w]);
+            let reason = if !fits {
+                Some(decisions::REASON_VRAM)
+            } else if !up {
+                Some(decisions::REASON_SITE_DOWN)
+            } else {
+                None
+            };
+            let feasible = fits && up;
+            let pending_steps = self.pending_steps[w];
+            let transfer_s =
+                network.map_or(0.0, |net| net.round_trip_s(req, w));
+            let cold_s =
+                placement.map_or(0.0, |p| p.load_penalty_s(w, req.model));
+            let score = if feasible {
+                match &self.policy {
+                    Policy::LeastLoaded => Some(pending_steps),
+                    Policy::CacheLl => Some(
+                        pending_steps + cold_s / clock::JETSON_STEP_S,
+                    ),
+                    Policy::NetLl | Policy::EdfLl => Some(
+                        pending_steps
+                            + (transfer_s + cold_s) / clock::JETSON_STEP_S,
+                    ),
+                    _ => None,
+                }
+            } else {
+                None
+            };
+            candidates.push(Candidate {
+                worker: w,
+                feasible,
+                reason,
+                pending_steps,
+                pending_s: pending_steps * clock::JETSON_STEP_S,
+                transfer_s,
+                cold_s,
+                score,
+                pi: pi.map(|v| v[w] as f64),
+            });
+        }
+        let mult = placement.map_or(1.0, |p| p.step_mult(req.model));
+        let c = &candidates[chosen];
+        let predicted_s = c.pending_s
+            + c.transfer_s
+            + c.cold_s
+            + clock::jetson_image_seconds_mult(req.z, mult);
+        DecisionCapture { chosen, predicted_s, candidates }
     }
 }
 
@@ -1085,6 +1223,166 @@ mod tests {
                 "conservation broke"
             );
         });
+    }
+
+    #[test]
+    fn capture_is_single_shot_and_snapshots_pre_charge_state() {
+        let mut r = Router::new(Policy::LeastLoaded, 2);
+        r.dispatch(&req(0, 10), None).unwrap(); // worker 0: 10 steps
+        r.arm_capture();
+        let w = r.dispatch(&req(1, 5), None).unwrap();
+        assert_eq!(w, 1);
+        let cap = r.take_capture().expect("armed dispatch must capture");
+        assert_eq!(cap.chosen, 1);
+        assert_eq!(cap.candidates.len(), 2);
+        // pre-charge snapshot: worker 1's own z is not yet charged
+        assert_eq!(cap.candidates[0].pending_steps, 10.0);
+        assert_eq!(cap.candidates[1].pending_steps, 0.0);
+        assert_eq!(
+            cap.candidates[1].pending_s,
+            0.0 * clock::JETSON_STEP_S
+        );
+        assert_eq!(cap.candidates[0].score, Some(10.0));
+        assert_eq!(cap.candidates[1].score, Some(0.0));
+        assert!(cap.candidates.iter().all(|c| c.feasible));
+        assert!(cap.candidates.iter().all(|c| c.reason.is_none()));
+        // no network, no placement: transfer/cold are zero; predicted
+        // is the pure generation estimate
+        assert_eq!(cap.candidates[1].transfer_s, 0.0);
+        assert_eq!(cap.candidates[1].cold_s, 0.0);
+        assert!(
+            (cap.predicted_s - clock::jetson_image_seconds(5)).abs() < 1e-12
+        );
+        // single-shot: the capture is claimed, and the next dispatch
+        // is unarmed
+        assert!(r.take_capture().is_none());
+        r.dispatch(&req(2, 5), None).unwrap();
+        assert!(r.take_capture().is_none());
+    }
+
+    #[test]
+    fn capture_scores_match_the_policy_and_the_pick_attains_the_min() {
+        use crate::coordinator::network::NetOptions;
+        let net = NetOptions::profile_only("wan", 2).build(2).unwrap();
+        let mut r = Router::new(Policy::NetLl, 2);
+        for i in 0..24u64 {
+            r.arm_capture();
+            let w = r
+                .dispatch_with(&req_o(i, 5, (i % 2) as usize), None, Some(&net))
+                .unwrap();
+            let cap = r.take_capture().unwrap();
+            assert_eq!(cap.chosen, w);
+            let chosen_score = cap.candidates[w].score.unwrap();
+            for c in &cap.candidates {
+                let s = c.score.expect("net-ll scores every feasible row");
+                assert!(
+                    chosen_score <= s,
+                    "dispatch {i}: chosen {w} score {chosen_score} > \
+                     worker {} score {s}",
+                    c.worker
+                );
+                // the score decomposition must reassemble the scalar
+                let rebuilt = c.pending_steps
+                    + (c.transfer_s + c.cold_s) / clock::JETSON_STEP_S;
+                assert!((s - rebuilt).abs() < 1e-9);
+            }
+            // remote worker carries the WAN round trip, local does not
+            let origin = (i % 2) as usize;
+            assert!(
+                cap.candidates[1 - origin].transfer_s
+                    > cap.candidates[origin].transfer_s
+            );
+        }
+    }
+
+    #[test]
+    fn capture_rows_carry_mask_reasons() {
+        // VRAM exclusion: the 16 GB device can never hold SD3-medium
+        let p = placement(&[16.0, 48.0, 48.0], &[0.3, 0.3, 0.4]);
+        let mut r = Router::new(Policy::CacheLl, 3);
+        r.arm_capture();
+        r.dispatch(&req_m(0, 5, SD3_MEDIUM), Some(&p)).unwrap();
+        let cap = r.take_capture().unwrap();
+        assert!(!cap.candidates[0].feasible);
+        assert_eq!(cap.candidates[0].reason, Some(decisions::REASON_VRAM));
+        assert_eq!(cap.candidates[0].score, None);
+        assert!(cap.candidates[0].cold_s.is_infinite());
+        assert!(cap.candidates[1].feasible);
+        assert!(cap.candidates[1].reason.is_none());
+        // fault exclusion: a down-mask marks the site, not the VRAM
+        let mut r = Router::new(Policy::LeastLoaded, 2);
+        r.arm_capture();
+        let w = r
+            .dispatch_masked(&req(1, 5), None, None, Some(&[true, false]))
+            .unwrap()
+            .unwrap();
+        assert_eq!(w, 1);
+        let cap = r.take_capture().unwrap();
+        assert_eq!(
+            cap.candidates[0].reason,
+            Some(decisions::REASON_SITE_DOWN)
+        );
+        assert!(!cap.candidates[0].feasible);
+        assert_eq!(cap.candidates[0].score, None);
+        assert_eq!(cap.candidates[1].reason, None);
+    }
+
+    #[test]
+    fn capture_never_perturbs_draw_sequences() {
+        // Random policy: arming every dispatch must reproduce the
+        // unarmed pick sequence draw for draw (capture is pure
+        // observation).
+        let run = |armed: bool| -> Vec<usize> {
+            let mut r = Router::new(Policy::Random(Rng::new(7)), 4);
+            (0..48)
+                .map(|i| {
+                    if armed {
+                        r.arm_capture();
+                    }
+                    let w = r.dispatch(&req(i, 5), None).unwrap();
+                    if armed {
+                        assert!(r.take_capture().is_some());
+                    }
+                    w
+                })
+                .collect()
+        };
+        assert_eq!(run(true), run(false));
+        // and the lad-ts categorical path (native backend)
+        let run_lad = |armed: bool| -> Vec<usize> {
+            let lad = LadPolicy::new(None, 3, None, 9, false).unwrap();
+            let mut r = Router::new(Policy::LadTs(Box::new(lad)), 3);
+            (0..24)
+                .map(|i| {
+                    if armed {
+                        r.arm_capture();
+                    }
+                    r.dispatch(&req(i, 5), None).unwrap()
+                })
+                .collect()
+        };
+        assert_eq!(run_lad(true), run_lad(false));
+    }
+
+    #[test]
+    fn lad_capture_records_post_mask_pi() {
+        let p = placement(&[16.0, 48.0, 48.0], &[0.0, 1.0, 0.0]);
+        let lad = LadPolicy::new(None, 3, None, 9, false).unwrap();
+        let mut r = Router::new(Policy::LadTs(Box::new(lad)), 3);
+        r.arm_capture();
+        let w = r.dispatch(&req_m(0, 5, SD3_MEDIUM), Some(&p)).unwrap();
+        let cap = r.take_capture().unwrap();
+        assert_eq!(cap.chosen, w);
+        // π is post-mask: the infeasible worker's mass is exactly zero
+        // and the rest renormalises to 1
+        assert_eq!(cap.candidates[0].pi, Some(0.0));
+        let mut total = 0.0;
+        for c in &cap.candidates {
+            total += c.pi.expect("lad-ts rows all carry π");
+        }
+        assert!((total - 1.0).abs() < 1e-5, "π sums to {total}");
+        // scalar scores are a score-policy concept — absent here
+        assert!(cap.candidates.iter().all(|c| c.score.is_none()));
     }
 
     fn req_d(id: u64, qos: usize, deadline: f64) -> Request {

@@ -82,6 +82,7 @@ use crate::util::table::{fnum, Table};
 
 use super::arrivals::{ArrivalProcess, ZDist};
 use super::clock;
+use super::decisions::{self, DecisionLog};
 use super::events::{Event, EventQueue};
 use super::faults::{self, FaultPlan, FaultRuntime, FaultWindow};
 use super::message::{Request, Response};
@@ -174,6 +175,19 @@ pub struct ServeOptions {
     /// Request-origin site distribution (`--origin-dist`); `None` is
     /// the uniform default (and draws nothing extra).
     pub origin_dist: Option<OriginDist>,
+    /// Arm decision-level observability: per-dispatch candidate score
+    /// tables joined with realized delays into a
+    /// [`DecisionBook`](super::decisions::DecisionBook) on
+    /// `ServeMetrics`. `false` keeps the engines bit-identical to the
+    /// decisions-free build — no capture, no record, no allocation.
+    pub decisions: bool,
+    /// Write the decision JSONL (`dedgeai-decisions-v1`) here
+    /// (`--decisions-out`); setting this arms `decisions`.
+    pub decisions_out: Option<String>,
+    /// Deterministic modular sampling for decision records
+    /// (`--decision-sample N` records ids divisible by N; 1 = every
+    /// request, the default). No RNG is involved.
+    pub decision_sample: u64,
 }
 
 impl Default for ServeOptions {
@@ -205,6 +219,9 @@ impl Default for ServeOptions {
             mttr: None,
             max_retries: 3,
             origin_dist: None,
+            decisions: false,
+            decisions_out: None,
+            decision_sample: 1,
         }
     }
 }
@@ -329,6 +346,7 @@ impl DEdgeAi {
         queue: &mut EventQueue,
         metrics: &mut ServeMetrics,
         mut tracer: Option<&mut Tracer>,
+        mut dlog: Option<&mut DecisionLog>,
         epochs: &mut BTreeMap<u64, u32>,
         assigned: &mut [Vec<RunningJob>],
         ever_killed: &mut BTreeSet<u64>,
@@ -363,6 +381,11 @@ impl DEdgeAi {
                 if let Some(t) = tracer.as_deref_mut() {
                     t.kill(now, job.req.id, w);
                 }
+                if let Some(d) = dlog.as_deref_mut() {
+                    // the pending decision record dies with the job; a
+                    // successful retry emits a fresh one
+                    d.abandon(now, job.req.id, decisions::REASON_SITE_DOWN);
+                }
                 queue.push(
                     now + faults::retry_backoff_s(1),
                     Event::Retry {
@@ -388,6 +411,23 @@ impl DEdgeAi {
     fn make_tracer(&self, network: Option<&Network>) -> Option<Tracer> {
         if self.opts.trace {
             Some(Tracer::new(self.opts.workers, network))
+        } else {
+            None
+        }
+    }
+
+    /// Build the decision recorder when decision observability is
+    /// armed (`--decisions-out` arms it implicitly). `None` keeps the
+    /// engines on the decisions-free fast path — the router is never
+    /// armed, no capture is built, and the run is bit-identical to the
+    /// pre-decisions build.
+    fn make_decision_log(&self) -> Option<DecisionLog> {
+        if self.opts.decisions || self.opts.decisions_out.is_some() {
+            Some(DecisionLog::new(
+                &self.opts.scheduler,
+                self.opts.workers,
+                self.opts.decision_sample,
+            ))
         } else {
             None
         }
@@ -796,9 +836,20 @@ impl DEdgeAi {
         let mut free_at = vec![0.0f64; self.opts.workers];
         let mut rng = Rng::new(self.opts.seed ^ 0xC0FFEE);
         let mut tracer = self.make_tracer(None);
+        let mut dlog = self.make_decision_log();
         let mut source = self.source();
         for req in &mut source {
+            if let Some(d) = dlog.as_ref() {
+                if d.wants(req.id) {
+                    router.arm_capture();
+                }
+            }
             let w = router.dispatch(&req, None)?;
+            if let Some(d) = dlog.as_mut() {
+                if let Some(cap) = router.take_capture() {
+                    d.decision(req.submitted_at, &req, &cap);
+                }
+            }
             let (up, gen, down) =
                 Self::service_times(&req, &mut rng, 1.0, None, w);
             let start = free_at[w].max(req.submitted_at + up);
@@ -833,9 +884,15 @@ impl DEdgeAi {
             if let Some(t) = tracer.as_mut() {
                 t.complete(&resp, done);
             }
+            if let Some(d) = dlog.as_mut() {
+                d.outcome(&resp, done);
+            }
         }
         if let Some(t) = tracer {
             metrics.set_trace(t.finish());
+        }
+        if let Some(d) = dlog {
+            metrics.set_decisions(d.finish());
         }
         let mut audit = source.audit();
         audit.note("gen-jitter", rng.draws());
@@ -877,6 +934,7 @@ impl DEdgeAi {
         let mut source = self.source();
         let mut next_arrival = source.next();
         let mut tracer = self.make_tracer(network.as_ref());
+        let mut dlog = self.make_decision_log();
         if placement.is_some() && self.opts.replace_every > 0.0 {
             queue.push(self.opts.replace_every, Event::Replace);
         }
@@ -960,6 +1018,13 @@ impl DEdgeAi {
                                     if let Some(t) = tracer.as_mut() {
                                         t.evict(now, vw, &victim, &req);
                                     }
+                                    if let Some(d) = dlog.as_mut() {
+                                        d.abandon(
+                                            now,
+                                            victim.req.id,
+                                            decisions::REASON_QUEUE_CAP,
+                                        );
+                                    }
                                     true
                                 }
                                 None => false,
@@ -994,6 +1059,11 @@ impl DEdgeAi {
                         network.as_ref(),
                         self.opts.workers,
                     );
+                    if let Some(d) = dlog.as_ref() {
+                        if d.wants(req.id) {
+                            router.arm_capture();
+                        }
+                    }
                     let picked = router.dispatch_masked(
                         &req,
                         placement.as_ref(),
@@ -1013,6 +1083,11 @@ impl DEdgeAi {
                             continue;
                         }
                     };
+                    if let Some(d) = dlog.as_mut() {
+                        if let Some(cap) = router.take_capture() {
+                            d.decision(now, &req, &cap);
+                        }
+                    }
                     let mut load_delay = 0.0;
                     let mut step_mult = 1.0;
                     if let Some(p) = placement.as_mut() {
@@ -1193,6 +1268,9 @@ impl DEdgeAi {
                         if let Some(t) = tracer.as_mut() {
                             t.complete(&resp, now);
                         }
+                        if let Some(d) = dlog.as_mut() {
+                            d.outcome(&resp, now);
+                        }
                         if edf {
                             // the worker freed up: start its next
                             // earliest-deadline parked job
@@ -1300,6 +1378,7 @@ impl DEdgeAi {
                                 &mut queue,
                                 &mut metrics,
                                 tracer.as_mut(),
+                                dlog.as_mut(),
                                 &mut epochs,
                                 &mut assigned,
                                 &mut ever_killed,
@@ -1378,6 +1457,11 @@ impl DEdgeAi {
                             network.as_ref(),
                             self.opts.workers,
                         );
+                        if let Some(d) = dlog.as_ref() {
+                            if d.wants(req.id) {
+                                router.arm_capture();
+                            }
+                        }
                         let picked = router.dispatch_masked(
                             &req,
                             placement.as_ref(),
@@ -1408,6 +1492,13 @@ impl DEdgeAi {
                                 continue;
                             }
                         };
+                        if let Some(d) = dlog.as_mut() {
+                            // the kill abandoned the first record; the
+                            // re-dispatch gets a fresh one
+                            if let Some(cap) = router.take_capture() {
+                                d.decision(now, &req, &cap);
+                            }
+                        }
                         metrics.record_retry();
                         if let Some(t) = tracer.as_mut() {
                             t.retry(now, req.id, attempt);
@@ -1584,6 +1675,9 @@ impl DEdgeAi {
         if let Some(t) = tracer {
             metrics.set_trace(t.finish());
         }
+        if let Some(d) = dlog {
+            metrics.set_decisions(d.finish());
+        }
         let mut audit = source.audit();
         audit.note("gen-jitter", rng.draws());
         if let Some(rt) = fault_rt.as_ref() {
@@ -1613,6 +1707,7 @@ impl DEdgeAi {
         let mut queue = EventQueue::new();
         let mut arrivals_left = 0usize;
         let mut tracer = self.make_tracer(network.as_ref());
+        let mut dlog = self.make_decision_log();
         let mut source = self.source();
         for req in &mut source {
             queue.push(req.submitted_at, Event::Arrival(req));
@@ -1679,6 +1774,13 @@ impl DEdgeAi {
                                         if let Some(t) = tracer.as_mut() {
                                             t.evict(now, vw, &victim, &req);
                                         }
+                                        if let Some(d) = dlog.as_mut() {
+                                            d.abandon(
+                                                now,
+                                                victim.req.id,
+                                                decisions::REASON_QUEUE_CAP,
+                                            );
+                                        }
                                         true
                                     }
                                     None => false,
@@ -1713,6 +1815,11 @@ impl DEdgeAi {
                         network.as_ref(),
                         self.opts.workers,
                     );
+                    if let Some(d) = dlog.as_ref() {
+                        if d.wants(req.id) {
+                            router.arm_capture();
+                        }
+                    }
                     let picked = router.dispatch_masked(
                         &req,
                         placement.as_ref(),
@@ -1731,6 +1838,11 @@ impl DEdgeAi {
                             continue;
                         }
                     };
+                    if let Some(d) = dlog.as_mut() {
+                        if let Some(cap) = router.take_capture() {
+                            d.decision(now, &req, &cap);
+                        }
+                    }
                     let mut load_delay = 0.0;
                     let mut step_mult = 1.0;
                     if let Some(p) = placement.as_mut() {
@@ -1891,6 +2003,9 @@ impl DEdgeAi {
                     if let Some(t) = tracer.as_mut() {
                         t.complete(&resp, now);
                     }
+                    if let Some(d) = dlog.as_mut() {
+                        d.outcome(&resp, now);
+                    }
                     if edf {
                         busy[resp.worker] = false;
                         Self::edf_start_next(
@@ -1979,6 +2094,7 @@ impl DEdgeAi {
                             &mut queue,
                             &mut metrics,
                             tracer.as_mut(),
+                            dlog.as_mut(),
                             &mut epochs,
                             &mut assigned,
                             &mut ever_killed,
@@ -2051,6 +2167,11 @@ impl DEdgeAi {
                         network.as_ref(),
                         self.opts.workers,
                     );
+                    if let Some(d) = dlog.as_ref() {
+                        if d.wants(req.id) {
+                            router.arm_capture();
+                        }
+                    }
                     let picked = router.dispatch_masked(
                         &req,
                         placement.as_ref(),
@@ -2072,6 +2193,13 @@ impl DEdgeAi {
                             continue;
                         }
                     };
+                    if let Some(d) = dlog.as_mut() {
+                        // the kill abandoned the first record; the
+                        // re-dispatch gets a fresh one
+                        if let Some(cap) = router.take_capture() {
+                            d.decision(now, &req, &cap);
+                        }
+                    }
                     metrics.record_retry();
                     if let Some(t) = tracer.as_mut() {
                         t.retry(now, req.id, attempt);
@@ -2236,6 +2364,9 @@ impl DEdgeAi {
         if let Some(t) = tracer {
             metrics.set_trace(t.finish());
         }
+        if let Some(d) = dlog {
+            metrics.set_decisions(d.finish());
+        }
         // same ledger the streaming engine records — audit parity is
         // part of the bitwise-parity contract
         let mut audit = source.audit();
@@ -2357,11 +2488,21 @@ pub fn serve_and_report(opts: &ServeOptions) -> Result<()> {
     {
         opts.trace = true;
     }
+    if opts.decisions_out.is_some() {
+        opts.decisions = true;
+    }
     if opts.trace && opts.real_time {
         bail!(
             "tracing and windowed telemetry are virtual-clock features \
              (spans are derived from the virtual timeline); drop \
              --real-time"
+        );
+    }
+    if opts.decisions && opts.real_time {
+        bail!(
+            "decision observability is a virtual-clock feature (the \
+             candidate tables and hindsight replay are derived from the \
+             virtual timeline); drop --real-time"
         );
     }
     let opts = &opts;
@@ -2539,6 +2680,34 @@ pub fn serve_and_report(opts: &ServeOptions) -> Result<()> {
             fnum(metrics.mean_availability(), 3),
         ]);
     }
+    if let Some(book) = metrics.decisions() {
+        t.row(vec![
+            "decisions emitted / joined".into(),
+            format!("{} / {}", book.emitted(), book.joined()),
+        ]);
+        if book.abandoned() > 0 || book.in_flight_at_drain() > 0 {
+            t.row(vec![
+                "decisions abandoned / in-flight".into(),
+                format!("{} / {}", book.abandoned(), book.in_flight_at_drain()),
+            ]);
+        }
+        let r = book.regret();
+        t.row(vec!["mean hindsight regret (s)".into(), fnum(r.mean_s, 3)]);
+        t.row(vec!["p99 hindsight regret (s)".into(), fnum(r.p99_s, 3)]);
+        t.row(vec![
+            "hindsight-optimal picks".into(),
+            fnum(r.optimal_frac, 3),
+        ]);
+        let c = book.calibration();
+        t.row(vec![
+            "calibration mean error (s)".into(),
+            fnum(c.mean_err_s, 3),
+        ]);
+        t.row(vec![
+            "calibration |err| p50 / p99 (s)".into(),
+            format!("{} / {}", fnum(c.abs_p50_s, 3), fnum(c.abs_p99_s, 3)),
+        ]);
+    }
     t.row(vec!["wallclock (s)".into(), fnum(wall, 2)]);
     println!("{}", t.render());
     println!(
@@ -2596,6 +2765,35 @@ pub fn serve_and_report(opts: &ServeOptions) -> Result<()> {
         }
         println!("{}", ct.render());
     }
+    if let Some(book) = metrics.decisions() {
+        let mut any = false;
+        let mut rt = Table::new(&[
+            "class",
+            "joined",
+            "mean regret (s)",
+            "p99 regret (s)",
+            "optimal",
+        ])
+        .left_first()
+        .title("per-class hindsight regret");
+        for id in 0..qos::class_count() {
+            let r = book.class_regret(id);
+            if r.n == 0 {
+                continue;
+            }
+            any = true;
+            rt.row(vec![
+                qos::class(id).name.to_string(),
+                r.n.to_string(),
+                fnum(r.mean_s, 3),
+                fnum(r.p99_s, 3),
+                fnum(r.optimal_frac, 3),
+            ]);
+        }
+        if metrics.qos_active() && any {
+            println!("{}", rt.render());
+        }
+    }
     if let Some(width) = opts.window {
         if let Some(trace) = metrics.trace() {
             let series = trace.windows(width);
@@ -2642,6 +2840,32 @@ pub fn serve_and_report(opts: &ServeOptions) -> Result<()> {
                 );
             }
         }
+        if let Some(book) = metrics.decisions() {
+            let wins = book.windows(width);
+            if !wins.is_empty() {
+                let mut dt = Table::new(&[
+                    "window",
+                    "t0 (s)",
+                    "t1 (s)",
+                    "joined",
+                    "mean regret (s)",
+                    "mean |err| (s)",
+                ])
+                .left_first()
+                .title("windowed hindsight regret");
+                for (i, w) in wins.iter().enumerate() {
+                    dt.row(vec![
+                        i.to_string(),
+                        fnum(w.t0, 1),
+                        fnum(w.t1, 1),
+                        w.joined.to_string(),
+                        fnum(w.mean_regret_s, 3),
+                        fnum(w.mean_abs_err_s, 3),
+                    ]);
+                }
+                println!("{}", dt.render());
+            }
+        }
     }
     if let Some(path) = &opts.trace_out {
         match metrics.trace() {
@@ -2655,6 +2879,21 @@ pub fn serve_and_report(opts: &ServeOptions) -> Result<()> {
                 );
             }
             None => log::warn!("--trace-out set but no trace was recorded"),
+        }
+    }
+    if let Some(path) = &opts.decisions_out {
+        match metrics.decisions() {
+            Some(book) => {
+                book.write(Path::new(path))?;
+                println!(
+                    "decisions: {path} ({} records, hash {:016x})",
+                    book.records().len(),
+                    book.hash()
+                );
+            }
+            None => {
+                log::warn!("--decisions-out set but no decisions recorded")
+            }
         }
     }
     if let Some(path) = &opts.report_json {
@@ -2818,6 +3057,67 @@ fn build_report(opts: &ServeOptions, metrics: &ServeMetrics, wall: f64) -> Json 
             }
             doc.set("window_s", Json::num(width));
             doc.set("windows", Json::Arr(windows));
+        }
+    }
+    if let Some(book) = metrics.decisions() {
+        doc.set(
+            "decision_hash",
+            Json::str(format!("{:016x}", book.hash())),
+        );
+        doc.set(
+            "decision_records",
+            Json::num(book.records().len() as f64),
+        );
+        let reg = book.regret();
+        let cal = book.calibration();
+        doc.set(
+            "decisions",
+            Json::from_pairs(vec![
+                ("emitted", Json::num(book.emitted() as f64)),
+                ("joined", Json::num(book.joined() as f64)),
+                ("abandoned", Json::num(book.abandoned() as f64)),
+                (
+                    "in_flight_at_drain",
+                    Json::num(book.in_flight_at_drain() as f64),
+                ),
+                (
+                    "regret",
+                    Json::from_pairs(vec![
+                        ("n", Json::num(reg.n as f64)),
+                        ("mean_s", Json::num(reg.mean_s)),
+                        ("p99_s", Json::num(reg.p99_s)),
+                        ("optimal_frac", Json::num(reg.optimal_frac)),
+                    ]),
+                ),
+                (
+                    "calibration",
+                    Json::from_pairs(vec![
+                        ("n", Json::num(cal.n as f64)),
+                        ("mean_err_s", Json::num(cal.mean_err_s)),
+                        ("abs_p50_s", Json::num(cal.abs_p50_s)),
+                        ("abs_p99_s", Json::num(cal.abs_p99_s)),
+                    ]),
+                ),
+            ]),
+        );
+        if metrics.qos_active() {
+            let mut classes = Json::obj();
+            for id in 0..qos::class_count() {
+                let r = book.class_regret(id);
+                if r.n == 0 {
+                    continue;
+                }
+                classes.set(
+                    qos::class(id).name,
+                    Json::from_pairs(vec![
+                        ("n", Json::num(r.n as f64)),
+                        ("mean_s", Json::num(r.mean_s)),
+                        ("p99_s", Json::num(r.p99_s)),
+                        ("optimal_frac", Json::num(r.optimal_frac)),
+                    ]),
+                );
+            }
+            doc.set("class_regret", classes);
         }
     }
     doc

@@ -41,7 +41,7 @@ USAGE:
   dedgeai train --method lad-ts [--episodes 60] [--seed 42]
   dedgeai exp <fig5|fig6a|fig6b|fig7a|fig7b|fig8a|fig8b|table5|mem|ablation|
                serve-sweep|placement-sweep|topology-sweep|qos-sweep|
-               failover-sweep|all>
+               failover-sweep|decision-audit|all>
   dedgeai serve [--workers 5] [--requests 100] [--real-time]
                 [--arrivals poisson --rate 0.3] [--z-dist uniform:5,15]
                 [--origin-dist zipf:1.1]
@@ -52,6 +52,7 @@ USAGE:
                 [--faults 'site-down:2@120-180' --max-retries 3]
                 [--mtbf 3600 --mttr 120]
                 [--trace-out trace.jsonl --trace-format jsonl|chrome]
+                [--decisions-out decisions.jsonl --decision-sample 10]
                 [--window 10 --window-csv windows.csv]
                 [--report-json report.json]
   dedgeai bench [--bench-requests 1000000] [--bench-out BENCH_serve.json]
@@ -177,11 +178,21 @@ OPTIONS (observability):
                      printed as a table after the serve summary
   --window-csv FILE  also write the windowed series as CSV
                      (requires --window)
+  --decisions-out FILE  write the per-dispatch decision log: one JSONL
+                     record per routed request carrying the full
+                     per-worker candidate table (score terms, mask
+                     reasons, lad-ts π), joined on completion into
+                     calibration and hindsight-regret books
+                     (schema dedgeai-decisions-v1)
+  --decision-sample N  keep every Nth decision by request id
+                     (deterministic modular sampling, no RNG;
+                     default 1 = every request)
   --report-json FILE machine-readable serve summary (full ServeMetrics
-                     plus trace hash and windows when enabled)
+                     plus trace/decision hashes and windows when
+                     enabled)
   All observability sinks are virtual-clock features: they arm the
-  tracer, reject --real-time, and leave bitwise behaviour of the
-  engine unchanged when unset.
+  tracer (or decision log), reject --real-time, and leave bitwise
+  behaviour of the engine unchanged when unset.
 
 OPTIONS (lint / verify-determinism):
   --lint-root DIR    lint this directory instead of auto-discovering
@@ -342,6 +353,23 @@ fn exp_config(args: &Args) -> Result<ExpConfig> {
     cfg.failover.z_dist = args.str_or("z-dist", &cfg.failover.z_dist);
     cfg.failover.max_retries =
         args.usize_or("max-retries", cfg.failover.max_retries as usize)? as u32;
+    // decision-audit grid overrides (rates/schedulers/sites/arrivals/
+    // z-dist/qos-mix shared with the other serving sweeps; seeds rides
+    // --replications)
+    if let Some(rates) = args.list_f64("rates")? {
+        cfg.decision.rates = rates;
+    }
+    if let Some(s) = args.get("schedulers") {
+        cfg.decision.schedulers =
+            s.split(',').map(|x| x.trim().to_string()).collect();
+    }
+    cfg.decision.sites = args.usize_or("sites", cfg.decision.sites)?;
+    cfg.decision.requests =
+        args.usize_or("serve-requests", cfg.decision.requests)?;
+    cfg.decision.seeds = args.usize_or("replications", cfg.decision.seeds)?;
+    cfg.decision.arrivals = args.str_or("arrivals", &cfg.decision.arrivals);
+    cfg.decision.z_dist = args.str_or("z-dist", &cfg.decision.z_dist);
+    cfg.decision.qos_mix = args.str_or("qos-mix", &cfg.decision.qos_mix);
     Ok(cfg)
 }
 
@@ -535,6 +563,9 @@ fn serve_options(args: &Args) -> Result<coordinator::ServeOptions> {
         trace: false,
         trace_out: args.get("trace-out").map(String::from),
         trace_format,
+        decisions: false,
+        decisions_out: args.get("decisions-out").map(String::from),
+        decision_sample: args.u64_or("decision-sample", 1)?,
         window,
         window_csv,
         report_json: args.get("report-json").map(String::from),
@@ -647,6 +678,11 @@ fn cmd_verify_determinism(args: &Args) -> Result<()> {
     }
     if let Some(hash) = report.trace_hash {
         println!("trace hash: {hash:016x} (fnv1a over the JSONL trace)");
+    }
+    if let Some(hash) = report.decision_hash {
+        println!(
+            "decision hash: {hash:016x} (fnv1a over the JSONL decision log)"
+        );
     }
     if report.passed() {
         println!(

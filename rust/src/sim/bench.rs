@@ -8,9 +8,10 @@
 //! per wallclock second* — the engine's hot-path throughput — plus
 //! wallclock, peak RSS, and the streaming engine's event-queue
 //! high-water mark (the O(in-flight) certificate). Each scenario is
-//! also re-run with the tracer armed, so the trajectory records the
-//! observability layer's measured overhead (and every bench run
-//! re-proves that tracing leaves the simulation bitwise unchanged).
+//! also re-run with the tracer armed, and again with the decision log
+//! armed, so the trajectory records both observability layers'
+//! measured overheads (and every bench run re-proves that each leaves
+//! the simulation bitwise unchanged).
 //!
 //! Output goes to `BENCH_serve.json`: the recorded baseline every
 //! later perf PR must not regress. Regenerate on a quiet machine with
@@ -59,6 +60,10 @@ pub struct Measurement {
     /// Wallclock seconds for the same run with the tracer armed — the
     /// measured (not asserted) cost of the observability layer.
     pub trace_wall_s: f64,
+    /// Wallclock seconds for the same run with the decision log armed
+    /// — the measured cost of per-dispatch candidate-table capture
+    /// plus the completion join.
+    pub decisions_wall_s: f64,
     pub summary: ServeSummary,
 }
 
@@ -88,6 +93,25 @@ impl Measurement {
     pub fn trace_overhead_pct(&self) -> f64 {
         if self.wall_s > 0.0 {
             (self.trace_wall_s - self.wall_s) / self.wall_s * 100.0
+        } else {
+            0.0
+        }
+    }
+
+    /// Decision-log-on simulated traffic rate.
+    pub fn decisions_sim_req_per_s(&self) -> f64 {
+        if self.decisions_wall_s > 0.0 {
+            self.requests as f64 / self.decisions_wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Relative wallclock overhead of decision capture, in percent —
+    /// same caveats as [`Self::trace_overhead_pct`].
+    pub fn decisions_overhead_pct(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            (self.decisions_wall_s - self.wall_s) / self.wall_s * 100.0
         } else {
             0.0
         }
@@ -264,7 +288,8 @@ pub fn run_scenarios(set: Vec<Scenario>, jobs: usize) -> Result<Vec<Measurement>
                 // trace overhead and certifies that tracing leaves
                 // every metric bitwise unchanged (the zero-cost-when-
                 // off claim, checked per scenario on every bench run)
-                let traced_opts = ServeOptions { trace: true, ..sc.opts };
+                let traced_opts =
+                    ServeOptions { trace: true, ..sc.opts.clone() };
                 let t1 = Instant::now();
                 let traced = DEdgeAi::new(traced_opts).run_virtual()?;
                 let trace_wall_s = t1.elapsed().as_secs_f64();
@@ -276,12 +301,30 @@ pub fn run_scenarios(set: Vec<Scenario>, jobs: usize) -> Result<Vec<Measurement>
                         parity.mismatches
                     );
                 }
+                // third run with the decision log armed: measures the
+                // candidate-table capture + completion-join overhead
+                // and certifies the same bitwise-invisibility claim
+                // for the decision layer
+                let decided_opts =
+                    ServeOptions { decisions: true, ..sc.opts };
+                let t2 = Instant::now();
+                let decided = DEdgeAi::new(decided_opts).run_virtual()?;
+                let decisions_wall_s = t2.elapsed().as_secs_f64();
+                let parity = crate::analysis::compare(&metrics, &decided);
+                if !parity.passed() {
+                    anyhow::bail!(
+                        "{}: decision capture changed the simulation — {:?}",
+                        sc.name,
+                        parity.mismatches
+                    );
+                }
                 Ok(Measurement {
                     name: sc.name,
                     what: sc.what,
                     requests,
                     wall_s,
                     trace_wall_s,
+                    decisions_wall_s,
                     summary: ServeSummary::from_metrics(&metrics),
                 })
             }
@@ -307,6 +350,7 @@ pub fn run_bench(budget: usize, jobs: usize, seed: u64, out_path: &str) -> Resul
         "wallclock (s)",
         "sim req/s",
         "trace ovh %",
+        "decisions ovh %",
         "served",
         "dropped",
         "p99 (s)",
@@ -323,6 +367,7 @@ pub fn run_bench(budget: usize, jobs: usize, seed: u64, out_path: &str) -> Resul
             fnum(m.wall_s, 3),
             fnum(m.sim_req_per_s(), 0),
             fnum(m.trace_overhead_pct(), 1),
+            fnum(m.decisions_overhead_pct(), 1),
             s.served.to_string(),
             s.dropped.to_string(),
             fnum(s.p99, 2),
@@ -338,6 +383,15 @@ pub fn run_bench(budget: usize, jobs: usize, seed: u64, out_path: &str) -> Resul
                 ("trace_wallclock_s", Json::num(m.trace_wall_s)),
                 ("trace_sim_req_per_s", Json::num(m.trace_sim_req_per_s())),
                 ("trace_overhead_pct", Json::num(m.trace_overhead_pct())),
+                ("decisions_wallclock_s", Json::num(m.decisions_wall_s)),
+                (
+                    "decisions_sim_req_per_s",
+                    Json::num(m.decisions_sim_req_per_s()),
+                ),
+                (
+                    "decisions_overhead_pct",
+                    Json::num(m.decisions_overhead_pct()),
+                ),
                 ("served", Json::num(s.served as f64)),
                 ("dropped", Json::num(s.dropped as f64)),
                 ("makespan_s", Json::num(s.makespan)),
@@ -416,10 +470,13 @@ mod tests {
         for m in &ms {
             assert!(m.requests >= 1, "{}", m.name);
             assert!(m.wall_s >= 0.0);
-            // the traced leg ran (its bitwise-parity check lives in
-            // run_scenarios — reaching here means it passed)
+            // the traced and decision-armed legs ran (their bitwise-
+            // parity checks live in run_scenarios — reaching here
+            // means both passed)
             assert!(m.trace_wall_s >= 0.0);
             assert!(m.trace_overhead_pct().is_finite());
+            assert!(m.decisions_wall_s >= 0.0);
+            assert!(m.decisions_overhead_pct().is_finite());
             // conservation under faults: every offered request is
             // served, dropped, or abandoned after its retry budget
             // (the last two are zero for the fault-free scenarios)

@@ -37,6 +37,7 @@ use crate::agents::{make_scheduler, Method};
 use crate::config::{AgentConfig, EnvConfig, ExpConfig};
 use crate::coordinator::arrivals::{ArrivalProcess, ZDist};
 use crate::coordinator::clock;
+use crate::coordinator::decisions::{CalibrationStat, RegretStat};
 use crate::coordinator::faults::FaultPlan;
 use crate::coordinator::models::{reduction_pct, ModelStack};
 use crate::coordinator::network::{NetOptions, Topology};
@@ -325,11 +326,13 @@ pub fn run_experiment(
         "topology-sweep" => topology_sweep(&ctx),
         "qos-sweep" => qos_sweep(&ctx),
         "failover-sweep" => failover_sweep(&ctx),
+        "decision-audit" => decision_audit(&ctx),
         "all" => {
             for id in [
                 "fig5", "fig6a", "fig6b", "fig7a", "fig7b", "fig8a", "fig8b",
                 "table5", "mem", "ablation", "serve-sweep", "placement-sweep",
                 "topology-sweep", "qos-sweep", "failover-sweep",
+                "decision-audit",
             ] {
                 println!("\n================ {id} ================");
                 run_experiment(id, env, agent, exp)?;
@@ -339,7 +342,7 @@ pub fn run_experiment(
         other => bail!(
             "unknown experiment '{other}' (fig5|fig6a|fig6b|fig7a|fig7b|\
              fig8a|fig8b|table5|mem|ablation|serve-sweep|placement-sweep|\
-             topology-sweep|qos-sweep|failover-sweep|all)"
+             topology-sweep|qos-sweep|failover-sweep|decision-audit|all)"
         ),
     }
 }
@@ -1617,4 +1620,337 @@ fn failover_sweep(ctx: &Ctx) -> Result<()> {
         &csv_rows,
     )?;
     output::write_json(&ctx.exp.out_dir, "failover_sweep", &result)
+}
+
+// ---------------------------------------------------------------------------
+// decision-audit — hindsight-regret ranking of dispatch policies.
+// ---------------------------------------------------------------------------
+
+/// One decision-armed grid cell's books, reduced inside the work unit
+/// from the run's `DecisionBook` (the [`ServeSummary`] scalars carry
+/// no regret fields, so this sweep uses its own unit closure).
+#[derive(Clone, Debug)]
+struct AuditCell {
+    emitted: u64,
+    joined: u64,
+    abandoned: u64,
+    in_flight: u64,
+    conserved: bool,
+    regret: RegretStat,
+    calibration: CalibrationStat,
+    /// Per-QoS-class regret, indexed by class id.
+    class: Vec<RegretStat>,
+}
+
+/// Joined-count-weighted mean over per-seed (weight, value) pairs;
+/// 0.0 on an empty book. Manual accumulation — sim-derived floats
+/// stay out of iterator folds (simlint float-fold discipline).
+fn weighted_mean(pairs: &[(f64, f64)]) -> f64 {
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for &(w, v) in pairs {
+        num += w * v;
+        den += w;
+    }
+    if den > 0.0 {
+        num / den
+    } else {
+        0.0
+    }
+}
+
+fn decision_audit(ctx: &Ctx) -> Result<()> {
+    let dc = &ctx.exp.decision;
+    if dc.schedulers.is_empty() || dc.rates.is_empty() || dc.seeds == 0 {
+        bail!("decision-audit: empty grid (need rates, schedulers, seeds)");
+    }
+    if dc.arrivals == "batch" {
+        bail!(
+            "decision-audit is an open-loop rate sweep; '--arrivals batch' \
+             has no rate dimension"
+        );
+    }
+    let z_dist = ZDist::parse(&dc.z_dist)?;
+    let qos_mix = if dc.qos_mix.is_empty() {
+        None
+    } else {
+        Some(QosMix::parse(&dc.qos_mix)?)
+    };
+    // one worker per site on the wan profile: the inter-site transfer
+    // asymmetry is exactly what separates transmission-aware policies
+    // from load-only ones in hindsight
+    let workers = dc.sites;
+    let mut units = Vec::new();
+    let mut cells: Vec<(f64, String, u64)> = Vec::new();
+    for &rate in &dc.rates {
+        for sched in &dc.schedulers {
+            for s in 0..dc.seeds {
+                let seed = ctx.exp.seed + s as u64;
+                units.push(ServeOptions {
+                    workers,
+                    requests: dc.requests,
+                    real_time: false,
+                    seed,
+                    artifacts_dir: ctx.exp.artifacts_dir.clone(),
+                    scheduler: sched.clone(),
+                    z_steps: clock::DEFAULT_Z,
+                    arrivals: ArrivalProcess::parse(&dc.arrivals, rate)?,
+                    z_dist: Some(z_dist.clone()),
+                    network: Some(NetOptions::profile_only("wan", dc.sites)),
+                    qos_mix: qos_mix.clone(),
+                    decisions: true,
+                    ..ServeOptions::default()
+                });
+                cells.push((rate, sched.clone(), seed));
+            }
+        }
+    }
+    println!(
+        "decision-audit — open-loop {} arrivals, {} requests/cell, z ~ {}, \
+         wan over {} site(s), qos {} ({} cells: {} rate(s) x {} policy(ies) \
+         x {} seed(s), --jobs {})",
+        dc.arrivals,
+        dc.requests,
+        dc.z_dist,
+        dc.sites,
+        if dc.qos_mix.is_empty() { "off" } else { &dc.qos_mix },
+        units.len(),
+        dc.rates.len(),
+        dc.schedulers.len(),
+        dc.seeds,
+        ctx.exp.jobs
+    );
+    let t0 = std::time::Instant::now();
+    let closures: Vec<_> = units
+        .into_iter()
+        .map(|opts| {
+            move || -> Result<AuditCell> {
+                let metrics = DEdgeAi::new(opts).run_virtual()?;
+                let book = metrics.decisions().context(
+                    "decision-audit: decisions were armed but the run \
+                     produced no decision book",
+                )?;
+                let mut class = Vec::new();
+                for id in 0..qos::class_count() {
+                    class.push(book.class_regret(id));
+                }
+                Ok(AuditCell {
+                    emitted: book.emitted(),
+                    joined: book.joined(),
+                    abandoned: book.abandoned(),
+                    in_flight: book.in_flight_at_drain(),
+                    conserved: book.conservation_holds(),
+                    regret: book.regret(),
+                    calibration: book.calibration(),
+                    class,
+                })
+            }
+        })
+        .collect();
+    let results: Vec<AuditCell> = parallel::run_indexed(ctx.exp.jobs, closures)?;
+    println!("  simulated in {:.1}s", t0.elapsed().as_secs_f64());
+
+    // the decision ledger's conservation law, re-checked at the sweep
+    // level: every emitted record must be joined, abandoned, or still
+    // in flight at drain — nothing vanishes from the books
+    for ((rate, sched, seed), c) in cells.iter().zip(&results) {
+        if !c.conserved {
+            bail!(
+                "decision-audit: ledger conservation violated at rate \
+                 {rate}, {sched}, seed {seed}: emitted {} != joined {} + \
+                 abandoned {} + in-flight {}",
+                c.emitted,
+                c.joined,
+                c.abandoned,
+                c.in_flight
+            );
+        }
+    }
+
+    let mut table = Table::new(&[
+        "rate (req/s)", "rho", "policy", "joined", "mean regret (s)",
+        "p99 regret (s)", "optimal", "cal err (s)", "|err| p50 (s)",
+        "|err| p99 (s)",
+    ])
+    .title("decision-audit — seed-averaged hindsight regret and calibration");
+    let mut result = Json::obj();
+    let mut csv_rows = Vec::new();
+    // per-seed CSV rows first (the replay-grade record), then the
+    // seed-averaged table/JSON cells
+    for ((rate, sched, seed), c) in cells.iter().zip(&results) {
+        let rho = rate / clock::fleet_capacity_rps(workers, z_dist.mean());
+        let sched_idx = dc.schedulers.iter().position(|x| x == sched).unwrap();
+        csv_rows.push(vec![
+            *rate,
+            rho,
+            sched_idx as f64,
+            *seed as f64,
+            c.emitted as f64,
+            c.joined as f64,
+            c.abandoned as f64,
+            c.regret.mean_s,
+            c.regret.p99_s,
+            c.regret.optimal_frac,
+            c.calibration.mean_err_s,
+            c.calibration.abs_p50_s,
+            c.calibration.abs_p99_s,
+        ]);
+    }
+    // cells are rate-major, then scheduler, then seed: consecutive
+    // chunks of `dc.seeds` cells share one (rate, scheduler) pair
+    let mut class_rows: Vec<(f64, String, usize, u64, f64, f64, f64)> =
+        Vec::new();
+    // (policy -> joined-weighted (w, regret) / (w, optimal) pairs
+    // across the whole grid, for the final ranking)
+    let mut rank_regret: Vec<Vec<(f64, f64)>> =
+        vec![Vec::new(); dc.schedulers.len()];
+    let mut rank_optimal: Vec<Vec<(f64, f64)>> =
+        vec![Vec::new(); dc.schedulers.len()];
+    for (chunk_i, chunk) in results.chunks(dc.seeds).enumerate() {
+        let (rate, sched, _) = &cells[chunk_i * dc.seeds];
+        let rho = rate / clock::fleet_capacity_rps(workers, z_dist.mean());
+        let sched_idx = dc.schedulers.iter().position(|x| x == sched).unwrap();
+        let mut joined = 0u64;
+        let mut reg_pairs = Vec::new();
+        let mut p99_pairs = Vec::new();
+        let mut opt_pairs = Vec::new();
+        let mut err_pairs = Vec::new();
+        let mut p50_pairs = Vec::new();
+        let mut ep99_pairs = Vec::new();
+        for c in chunk {
+            joined += c.joined;
+            let w = c.regret.n as f64;
+            reg_pairs.push((w, c.regret.mean_s));
+            p99_pairs.push((w, c.regret.p99_s));
+            opt_pairs.push((w, c.regret.optimal_frac));
+            let cw = c.calibration.n as f64;
+            err_pairs.push((cw, c.calibration.mean_err_s));
+            p50_pairs.push((cw, c.calibration.abs_p50_s));
+            ep99_pairs.push((cw, c.calibration.abs_p99_s));
+            rank_regret[sched_idx].push((w, c.regret.mean_s));
+            rank_optimal[sched_idx].push((w, c.regret.optimal_frac));
+        }
+        let mean_regret = weighted_mean(&reg_pairs);
+        let p99_regret = weighted_mean(&p99_pairs);
+        let optimal = weighted_mean(&opt_pairs);
+        let cal_err = weighted_mean(&err_pairs);
+        let cal_p50 = weighted_mean(&p50_pairs);
+        let cal_p99 = weighted_mean(&ep99_pairs);
+        table.row(vec![
+            fnum(*rate, 3),
+            fnum(rho, 2),
+            sched.clone(),
+            joined.to_string(),
+            fnum(mean_regret, 3),
+            fnum(p99_regret, 2),
+            fnum(optimal, 3),
+            fnum(cal_err, 3),
+            fnum(cal_p50, 3),
+            fnum(cal_p99, 2),
+        ]);
+        // per-class regret rows (only classes that joined anything)
+        for id in 0..qos::class_count() {
+            let mut n = 0u64;
+            let mut creg = Vec::new();
+            let mut cp99 = Vec::new();
+            let mut copt = Vec::new();
+            for c in chunk {
+                let r = &c.class[id];
+                n += r.n as u64;
+                creg.push((r.n as f64, r.mean_s));
+                cp99.push((r.n as f64, r.p99_s));
+                copt.push((r.n as f64, r.optimal_frac));
+            }
+            if n > 0 {
+                class_rows.push((
+                    *rate,
+                    sched.clone(),
+                    id,
+                    n,
+                    weighted_mean(&creg),
+                    weighted_mean(&cp99),
+                    weighted_mean(&copt),
+                ));
+            }
+        }
+        result.set(
+            &format!("r{rate}_{sched}"),
+            Json::from_pairs(vec![
+                ("rho", Json::num(rho)),
+                ("joined", Json::num(joined as f64)),
+                ("mean_regret_s", Json::num(mean_regret)),
+                ("p99_regret_s", Json::num(p99_regret)),
+                ("optimal_frac", Json::num(optimal)),
+                ("cal_mean_err_s", Json::num(cal_err)),
+                ("cal_abs_p50_s", Json::num(cal_p50)),
+                ("cal_abs_p99_s", Json::num(cal_p99)),
+            ]),
+        );
+    }
+    println!("{}", table.render());
+
+    if !class_rows.is_empty() {
+        let mut ct = Table::new(&[
+            "rate (req/s)", "policy", "class", "joined", "mean regret (s)",
+            "p99 regret (s)", "optimal",
+        ])
+        .title("decision-audit — per-class hindsight regret");
+        for (rate, sched, id, n, mean_s, p99_s, opt) in &class_rows {
+            ct.row(vec![
+                fnum(*rate, 3),
+                sched.clone(),
+                qos::class(*id).name.to_string(),
+                n.to_string(),
+                fnum(*mean_s, 3),
+                fnum(*p99_s, 2),
+                fnum(*opt, 3),
+            ]);
+        }
+        println!("{}", ct.render());
+    }
+
+    // grid-wide ranking: joined-weighted mean regret per policy,
+    // ascending — the policy whose dispatches land closest to the
+    // hindsight argmin wins
+    let mut ranking: Vec<(usize, f64, f64)> = Vec::new();
+    for (idx, pairs) in rank_regret.iter().enumerate() {
+        ranking.push((
+            idx,
+            weighted_mean(pairs),
+            weighted_mean(&rank_optimal[idx]),
+        ));
+    }
+    ranking.sort_by(|a, b| a.1.total_cmp(&b.1));
+    let mut rt = Table::new(&[
+        "rank", "policy", "mean regret (s)", "optimal",
+    ])
+    .title("decision-audit — policy ranking (grid-wide, seed-averaged)");
+    let mut rank_json = Vec::new();
+    for (pos, (idx, mean_s, opt)) in ranking.iter().enumerate() {
+        rt.row(vec![
+            (pos + 1).to_string(),
+            dc.schedulers[*idx].clone(),
+            fnum(*mean_s, 3),
+            fnum(*opt, 3),
+        ]);
+        rank_json.push(Json::from_pairs(vec![
+            ("policy", Json::str(dc.schedulers[*idx].clone())),
+            ("mean_regret_s", Json::num(*mean_s)),
+            ("optimal_frac", Json::num(*opt)),
+        ]));
+    }
+    println!("{}", rt.render());
+    result.set("ranking", Json::Arr(rank_json));
+
+    output::write_csv(
+        &ctx.exp.out_dir,
+        "decision_audit",
+        &[
+            "rate", "rho", "sched_idx", "seed", "emitted", "joined",
+            "abandoned", "mean_regret", "p99_regret", "optimal_frac",
+            "cal_mean_err", "cal_abs_p50", "cal_abs_p99",
+        ],
+        &csv_rows,
+    )?;
+    output::write_json(&ctx.exp.out_dir, "decision_audit", &result)
 }

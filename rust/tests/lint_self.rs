@@ -109,13 +109,15 @@ fn trace_module_is_pinned_to_virtual_time() {
     );
     // ...but under the pinned trace module both the read AND the
     // pragma are findings, on every pinned file (faults.rs joined the
-    // pin in ISSUE 9: a wall-clock read there would poison every
-    // fault window and retry backoff)
+    // pin in ISSUE 9 — a wall-clock read there would poison every
+    // fault window and retry backoff — and decisions.rs in ISSUE 10:
+    // one would poison every decision timestamp and hindsight join)
     for pin in [
         "coordinator/trace.rs",
         "coordinator/events.rs",
         "coordinator/metrics.rs",
         "coordinator/faults.rs",
+        "coordinator/decisions.rs",
     ] {
         let f = lint_source(pin, &pragma);
         assert_eq!(f.len(), 2, "{pin}:\n{}", render(&f));

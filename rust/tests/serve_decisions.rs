@@ -1,0 +1,474 @@
+//! Decision-observability guard suite (ISSUE 10): the decision log
+//! must be (a) bitwise invisible — arming it changes no metric across
+//! the (arrival × policy × topology × qos × faults) grid on both
+//! engines, (b) deterministic — double runs produce byte-identical
+//! logs on disk and in hash, (c) faithful — for deterministic
+//! score-minimizing policies the chosen worker's recorded score
+//! attains the table minimum, hindsight regret is structurally
+//! non-negative and zero exactly when the pick was hindsight-optimal,
+//! and every emitted record is joined, abandoned, or in flight at
+//! drain (conservation), and (d) useful — on the wan topology the
+//! transfer-aware `net-ll` policy earns strictly lower mean regret
+//! than transfer-blind `least-loaded` near saturation. No AOT
+//! artifacts required.
+
+use std::path::{Path, PathBuf};
+
+use dedgeai::analysis;
+use dedgeai::coordinator::arrivals::{ArrivalProcess, ZDist};
+use dedgeai::coordinator::network::NetOptions;
+use dedgeai::coordinator::placement::{self, ModelDist};
+use dedgeai::coordinator::qos::QosMix;
+use dedgeai::coordinator::service::{DEdgeAi, ServeOptions};
+use dedgeai::coordinator::{clock, serve_and_report, trace};
+use dedgeai::util::json::Json;
+use dedgeai::util::prop;
+
+fn jf(r: &Json, k: &str) -> f64 {
+    r.get(k).and_then(|v| v.as_f64().ok()).unwrap_or(f64::NAN)
+}
+
+fn js<'a>(r: &'a Json, k: &str) -> &'a str {
+    r.get(k).and_then(|v| v.as_str().ok()).unwrap_or("")
+}
+
+fn tmp(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_TARGET_TMPDIR")).join(name)
+}
+
+fn random_arrivals(g: &mut prop::Gen) -> ArrivalProcess {
+    match g.usize(0, 2) {
+        0 => ArrivalProcess::Batch,
+        1 => ArrivalProcess::Poisson { rate: g.f64(0.05, 0.5) },
+        _ => ArrivalProcess::Bursty {
+            rate: g.f64(0.1, 0.4),
+            burst: g.f64(2.0, 6.0),
+            dwell: g.f64(10.0, 60.0),
+        },
+    }
+}
+
+/// One cell of the (arrival × policy × topology × qos × faults) grid —
+/// the PR 8 trace grid plus the PR 9 fault axis, so "decision capture
+/// changes nothing" is proven across the full serving surface
+/// including the kill/retry/re-dispatch path.
+fn grid_options(g: &mut prop::Gen) -> ServeOptions {
+    let workers = g.usize(2, 6);
+    let qos_mix = match g.usize(0, 2) {
+        0 => None,
+        1 => Some(QosMix::parse("tiered").unwrap()),
+        _ => Some(QosMix::parse("deadline-tight").unwrap()),
+    };
+    let network = match g.usize(0, 2) {
+        0 => None,
+        1 => Some(NetOptions::profile_only("wan", g.usize(2, 5))),
+        _ => Some(NetOptions::profile_only("lan", workers)),
+    };
+    let with_placement = g.usize(0, 1) == 0;
+    let (model_dist, worker_vram) = if with_placement {
+        let mut vram = vec![24.0; workers];
+        vram[workers - 1] = 48.0;
+        (
+            Some(ModelDist::Mix {
+                ids: vec![placement::RESD3M, placement::RESD3_TURBO],
+                weights: vec![0.5, 0.5],
+            }),
+            Some(vram),
+        )
+    } else {
+        (None, None)
+    };
+    let policy = if qos_mix.is_some() && g.usize(0, 1) == 0 {
+        "edf-ll"
+    } else if network.is_some() && g.usize(0, 1) == 0 {
+        "net-ll"
+    } else if with_placement && g.usize(0, 1) == 0 {
+        "cache-ll"
+    } else {
+        *g.choose(&["least-loaded", "round-robin"])
+    };
+    // the faults axis: ~1/3 of cells kill a site mid-run so abandoned
+    // decisions and retry re-dispatches are part of the proven surface
+    let sites = network.as_ref().map(|n| n.sites).unwrap_or(workers);
+    let faults = match g.usize(0, 2) {
+        0 => {
+            let victim = g.usize(0, sites - 1);
+            let start = g.f64(1.0, 40.0);
+            let end = start + g.f64(5.0, 120.0);
+            Some(format!("site-down:{victim}@{start}-{end}"))
+        }
+        _ => None,
+    };
+    ServeOptions {
+        workers,
+        requests: g.size(10, 120),
+        seed: g.usize(0, 10_000) as u64,
+        scheduler: policy.into(),
+        arrivals: random_arrivals(g),
+        z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+        model_dist,
+        worker_vram,
+        qos_mix,
+        queue_cap: match g.usize(0, 2) {
+            0 => Some(g.usize(3, 30)),
+            _ => None,
+        },
+        network,
+        faults,
+        max_retries: g.usize(0, 4) as u32,
+        ..ServeOptions::default()
+    }
+}
+
+fn armed(opts: &ServeOptions) -> ServeOptions {
+    ServeOptions { decisions: true, ..opts.clone() }
+}
+
+#[test]
+fn decision_capture_is_bitwise_invisible_across_the_grid() {
+    // The acceptance pin: with `--decisions-out` unset nothing changed
+    // vs the PR 9 engine (the untouched parity suites prove that), and
+    // with capture *on* every metric — latencies, ledgers, RNG draw
+    // counts — is still bitwise identical on BOTH engines. Uses the
+    // same comparator as `verify-determinism`.
+    prop::check("decisions off == decisions on", 30, |g| {
+        let base = grid_options(g);
+        let plain = DEdgeAi::new(base.clone()).run_events().unwrap();
+        let decided = DEdgeAi::new(armed(&base)).run_events().unwrap();
+        let rep = analysis::compare(&plain, &decided);
+        assert!(
+            rep.passed(),
+            "decision capture changed metrics: {:?}",
+            rep.mismatches
+        );
+        assert!(plain.decisions().is_none());
+        assert!(decided.decisions().is_some());
+        // hash is only reported when BOTH sides carry a book
+        assert!(rep.decision_hash.is_none());
+
+        let plain_e = DEdgeAi::new(base.clone()).run_events_eager().unwrap();
+        let decided_e = DEdgeAi::new(armed(&base)).run_events_eager().unwrap();
+        let rep = analysis::compare(&plain_e, &decided_e);
+        assert!(
+            rep.passed(),
+            "eager: decision capture changed metrics: {:?}",
+            rep.mismatches
+        );
+    });
+}
+
+#[test]
+fn double_runs_produce_byte_identical_decision_logs() {
+    prop::check("double-run decision bytes", 20, |g| {
+        let opts = armed(&grid_options(g));
+        let a = DEdgeAi::new(opts.clone()).run_events().unwrap();
+        let b = DEdgeAi::new(opts).run_events().unwrap();
+        let (da, db) = (a.decisions().unwrap(), b.decisions().unwrap());
+        assert_eq!(da.render_jsonl(), db.render_jsonl(), "jsonl bytes");
+        assert_eq!(da.hash(), db.hash(), "decision hash");
+        // and the double-run harness reports the shared hash
+        let rep = analysis::compare(&a, &b);
+        assert!(rep.passed(), "{:?}", rep.mismatches);
+        assert_eq!(rep.decision_hash, Some(da.hash()));
+    });
+    // ... and the bytes on *disk* agree too (the file path is part of
+    // the determinism contract, not just the in-memory rendering)
+    let opts = ServeOptions {
+        requests: 80,
+        arrivals: ArrivalProcess::Poisson { rate: 0.3 },
+        z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+        network: Some(NetOptions::profile_only("wan", 5)),
+        scheduler: "net-ll".into(),
+        decisions: true,
+        ..ServeOptions::default()
+    };
+    let (pa, pb) = (tmp("decisions_a.jsonl"), tmp("decisions_b.jsonl"));
+    DEdgeAi::new(opts.clone())
+        .run_events()
+        .unwrap()
+        .decisions()
+        .unwrap()
+        .write(&pa)
+        .unwrap();
+    DEdgeAi::new(opts)
+        .run_events()
+        .unwrap()
+        .decisions()
+        .unwrap()
+        .write(&pb)
+        .unwrap();
+    let (ba, bb) = (std::fs::read(&pa).unwrap(), std::fs::read(&pb).unwrap());
+    assert!(!ba.is_empty());
+    assert_eq!(ba, bb, "double-run decision files differ on disk");
+}
+
+#[test]
+fn streaming_and_eager_decision_logs_are_byte_identical() {
+    // The PR 4 engine-parity contract extended to the decision
+    // channel: both engines must emit the same records in the same
+    // order, not just agree on aggregates.
+    prop::check("streaming decisions == eager decisions", 25, |g| {
+        let sys = DEdgeAi::new(armed(&grid_options(g)));
+        let streamed = sys.run_events().unwrap();
+        let eager = sys.run_events_eager().unwrap();
+        assert_eq!(
+            streamed.decisions().unwrap().render_jsonl(),
+            eager.decisions().unwrap().render_jsonl(),
+            "engines disagree on the decision log"
+        );
+    });
+}
+
+#[test]
+fn chosen_score_attains_the_table_minimum() {
+    // For the deterministic score-minimizing policies the captured
+    // table must be *faithful*: the chosen row's score is the minimum
+    // over feasible rows (ties go to the lowest index, which argmin
+    // scanning already guarantees). cache-first is excluded — its
+    // two-stage warm-preference dispatch has no scalar score.
+    for sched in ["least-loaded", "cache-ll", "net-ll", "edf-ll"] {
+        let opts = ServeOptions {
+            workers: 5,
+            requests: 150,
+            arrivals: ArrivalProcess::Poisson { rate: 0.35 },
+            z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+            scheduler: sched.into(),
+            network: Some(NetOptions::profile_only("wan", 5)),
+            model_dist: Some(ModelDist::Mix {
+                ids: vec![placement::RESD3M, placement::RESD3_TURBO],
+                weights: vec![0.5, 0.5],
+            }),
+            worker_vram: Some(vec![24.0, 24.0, 24.0, 24.0, 48.0]),
+            qos_mix: if sched == "edf-ll" {
+                Some(QosMix::parse("tiered").unwrap())
+            } else {
+                None
+            },
+            decisions: true,
+            ..ServeOptions::default()
+        };
+        let metrics = DEdgeAi::new(opts).run_events().unwrap();
+        let book = metrics.decisions().unwrap();
+        let mut checked = 0usize;
+        for r in book.records() {
+            if js(r, "type") != "decision" {
+                continue;
+            }
+            let chosen = jf(r, "chosen") as usize;
+            let table = r.req("table").unwrap().as_arr().unwrap();
+            let mut chosen_score = f64::NAN;
+            let mut min_score = f64::INFINITY;
+            for row in table {
+                if jf(row, "feasible") != 1.0 {
+                    // masked rows must carry a reason, never a score
+                    assert!(!js(row, "reason").is_empty(), "{sched}: {row:?}");
+                    assert!(row.get("score").is_none(), "{sched}: {row:?}");
+                    continue;
+                }
+                let score = jf(row, "score");
+                assert!(score.is_finite(), "{sched}: feasible row sans score");
+                if (jf(row, "worker") as usize) == chosen {
+                    chosen_score = score;
+                }
+                if score < min_score {
+                    min_score = score;
+                }
+            }
+            assert!(
+                chosen_score <= min_score + 1e-9,
+                "{sched}: chosen row scores {chosen_score}, table min \
+                 {min_score}"
+            );
+            checked += 1;
+        }
+        assert!(checked > 0, "{sched}: no decision records captured");
+    }
+}
+
+#[test]
+fn regret_is_nonnegative_and_zero_iff_optimal() {
+    // Hindsight regret is structural: the chosen worker's realized
+    // latency participates in the argmin, so regret >= 0 exactly (no
+    // epsilon), and regret == 0 exactly when no alternative was
+    // strictly better in hindsight — i.e. the pick was optimal.
+    prop::check("regret >= 0, == 0 iff optimal", 15, |g| {
+        let opts = armed(&grid_options(g));
+        let metrics = DEdgeAi::new(opts).run_events().unwrap();
+        let book = metrics.decisions().unwrap();
+        for o in book.outcomes() {
+            assert!(o.regret_s >= 0.0, "negative regret: {o:?}");
+            assert_eq!(
+                o.optimal,
+                o.regret_s == 0.0,
+                "optimal flag disagrees with regret: {o:?}"
+            );
+        }
+    });
+}
+
+#[test]
+fn completion_join_conserves_every_emitted_record() {
+    // The decision ledger's conservation law across the full grid,
+    // faults included: every emitted decision is joined with an
+    // outcome, abandoned (site kill past its retry budget, or queue
+    // eviction), or still in flight when the run drains — and the
+    // record stream agrees with the counters exactly.
+    prop::check("emitted == joined + abandoned + in-flight", 30, |g| {
+        let opts = armed(&grid_options(g));
+        let metrics = DEdgeAi::new(opts).run_events().unwrap();
+        let book = metrics.decisions().unwrap();
+        assert!(
+            book.conservation_holds(),
+            "emitted {} != joined {} + abandoned {} + in-flight {}",
+            book.emitted(),
+            book.joined(),
+            book.abandoned(),
+            book.in_flight_at_drain()
+        );
+        assert_eq!(book.count_type("decision") as u64, book.emitted());
+        assert_eq!(book.count_type("outcome") as u64, book.joined());
+        assert_eq!(book.count_type("abandon") as u64, book.abandoned());
+        assert_eq!(book.count_type("meta"), 1);
+        assert_eq!(book.outcomes().len() as u64, book.joined());
+    });
+}
+
+#[test]
+fn net_ll_beats_least_loaded_on_wan_regret_near_saturation() {
+    // The audit's reason to exist: on a wan topology the transfer-
+    // blind least-loaded policy keeps shipping work across slow links
+    // that hindsight says should have stayed local, while net-ll folds
+    // the transfer cost into its score. At rho ~ 0.9, averaged over 5
+    // seeds (joined-weighted), net-ll's mean hindsight regret must be
+    // strictly lower.
+    let workers = 5;
+    let rate = 0.9 * clock::fleet_capacity_rps(workers, 10.0);
+    let mean_regret = |sched: &str| -> f64 {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for seed in 42..47u64 {
+            let metrics = DEdgeAi::new(ServeOptions {
+                workers,
+                requests: 300,
+                seed,
+                scheduler: sched.into(),
+                arrivals: ArrivalProcess::Poisson { rate },
+                z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+                network: Some(NetOptions::profile_only("wan", workers)),
+                decisions: true,
+                ..ServeOptions::default()
+            })
+            .run_events()
+            .unwrap();
+            let r = metrics.decisions().unwrap().regret();
+            num += r.mean_s * r.n as f64;
+            den += r.n as f64;
+        }
+        assert!(den > 0.0, "{sched}: no joined decisions");
+        num / den
+    };
+    let net_ll = mean_regret("net-ll");
+    let least_loaded = mean_regret("least-loaded");
+    assert!(
+        net_ll < least_loaded,
+        "net-ll mean regret {net_ll:.3}s should beat least-loaded \
+         {least_loaded:.3}s on wan at rho~0.9"
+    );
+}
+
+#[test]
+fn sampling_thins_the_log_without_perturbing_the_run() {
+    // --decision-sample 1/N keeps exactly the id % N == 0 dispatches,
+    // draws no randomness, and leaves the simulation bitwise intact.
+    let base = ServeOptions {
+        requests: 120,
+        arrivals: ArrivalProcess::Poisson { rate: 0.3 },
+        z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+        network: Some(NetOptions::profile_only("wan", 5)),
+        scheduler: "net-ll".into(),
+        decisions: true,
+        ..ServeOptions::default()
+    };
+    let full = DEdgeAi::new(base.clone()).run_events().unwrap();
+    let sampled = DEdgeAi::new(ServeOptions {
+        decision_sample: 10,
+        ..base
+    })
+    .run_events()
+    .unwrap();
+    let rep = analysis::compare(&full, &sampled);
+    // everything but the decision channel is bitwise identical — the
+    // only allowed divergence between the two reports is the hash
+    for m in &rep.mismatches {
+        assert!(m.starts_with("decision"), "sampling perturbed: {m}");
+    }
+    let (bf, bs) = (full.decisions().unwrap(), sampled.decisions().unwrap());
+    assert!(bs.emitted() > 0, "sampled log is empty");
+    assert!(bs.emitted() < bf.emitted(), "sampling did not thin the log");
+    for r in bs.records() {
+        if js(r, "type") == "decision" {
+            assert_eq!(jf(r, "id") as u64 % 10, 0, "non-sampled id: {r:?}");
+        }
+    }
+}
+
+#[test]
+fn decision_files_and_report_are_valid_on_disk() {
+    // The `serve` CLI path end to end: --decisions-out arms the log,
+    // the JSONL lands where pointed and re-parses line by line, and
+    // the JSON report echoes the file's hash plus the regret and
+    // calibration books.
+    let jsonl = tmp("serve_decisions.jsonl");
+    let report = tmp("serve_decisions_report.json");
+    serve_and_report(&ServeOptions {
+        requests: 120,
+        arrivals: ArrivalProcess::Poisson { rate: 0.3 },
+        z_dist: Some(ZDist::Uniform { lo: 5, hi: 15 }),
+        qos_mix: Some(QosMix::parse("tiered").unwrap()),
+        network: Some(NetOptions::profile_only("wan", 5)),
+        scheduler: "edf-ll".into(),
+        decisions_out: Some(jsonl.to_string_lossy().into_owned()),
+        report_json: Some(report.to_string_lossy().into_owned()),
+        window: Some(60.0),
+        ..ServeOptions::default()
+    })
+    .unwrap();
+
+    // JSONL: a meta header first, then only known record types
+    let text = std::fs::read_to_string(&jsonl).unwrap();
+    assert!(!text.is_empty());
+    let first = Json::parse(text.lines().next().unwrap()).unwrap();
+    assert_eq!(js(&first, "type"), "meta");
+    assert_eq!(js(&first, "schema"), "dedgeai-decisions-v1");
+    for line in text.lines() {
+        let r = Json::parse(line).unwrap();
+        assert!(
+            ["meta", "decision", "outcome", "abandon"]
+                .contains(&js(&r, "type")),
+            "unknown record type in {line}"
+        );
+    }
+
+    // report: decision hash echoes the bytes on disk, books present
+    let rep = Json::read_file(&report).unwrap();
+    assert_eq!(
+        rep.req("schema").unwrap().as_str().unwrap(),
+        "dedgeai-serve-report-v1"
+    );
+    let hash = rep.req("decision_hash").unwrap().as_str().unwrap();
+    assert_eq!(hash.len(), 16, "hash renders as 16 hex chars: {hash}");
+    assert_eq!(
+        u64::from_str_radix(hash, 16).unwrap(),
+        trace::fnv1a(text.as_bytes()),
+        "report hash vs the bytes on disk"
+    );
+    let books = rep.req("decisions").unwrap();
+    assert!(jf(books, "joined") > 0.0);
+    let regret = books.req("regret").unwrap();
+    assert!(jf(regret, "mean_s") >= 0.0);
+    assert!(jf(regret, "optimal_frac") > 0.0);
+    let cal = books.req("calibration").unwrap();
+    assert!(jf(cal, "abs_p99_s") >= jf(cal, "abs_p50_s"));
+    // the tiered mix makes per-class regret reportable
+    assert!(rep.req("class_regret").is_ok());
+}
